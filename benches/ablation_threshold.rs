@@ -1,0 +1,57 @@
+//! Ablation A3 (ours) — the merge-controller threshold (paper §2.3 sets
+//! 40 blocks ≈ 2 GB). Sweeps the threshold in the full-scale simulator
+//! and reports stage times and peak memory exposure: small thresholds
+//! launch many tiny merges (per-task overhead dominates), large ones
+//! delay merging behind the shuffle and grow the reducer fan-in. The
+//! paper's 40 should sit near the flat bottom of the curve.
+//!
+//!     cargo bench --bench ablation_threshold
+
+#[path = "harness.rs"]
+mod harness;
+
+use exoshuffle::sim::{simulate, SimConfig};
+
+fn main() {
+    harness::section("merge threshold sweep, 100 TB simulation (paper: 40)");
+    println!(
+        "{:>9} | {:>12} | {:>8} | {:>8} | {:>20}",
+        "threshold", "map&shuffle", "reduce", "total", "peak unmerged/node"
+    );
+    let mut totals = Vec::new();
+    for threshold in [5usize, 10, 20, 40, 80, 160] {
+        let mut cfg = SimConfig::paper_100tb();
+        cfg.spec.merge_threshold_blocks = threshold;
+        cfg.spec.max_buffered_blocks = threshold * 3;
+        let r = simulate(&cfg);
+        println!(
+            "{:>9} | {:>10.0} s | {:>6.0} s | {:>6.0} s | {:>14} blocks",
+            threshold,
+            r.map_shuffle_secs,
+            r.reduce_secs,
+            r.total_secs,
+            r.peak_unmerged_blocks
+        );
+        totals.push((threshold, r.total_secs));
+    }
+    // the paper's operating point should not be far off the sweep's best
+    let best = totals
+        .iter()
+        .map(|&(_, t)| t)
+        .fold(f64::INFINITY, f64::min);
+    let at40 = totals
+        .iter()
+        .find(|&&(th, _)| th == 40)
+        .map(|&(_, t)| t)
+        .unwrap();
+    println!(
+        "\npaper's threshold=40 is within {:.1}% of the sweep optimum",
+        (at40 / best - 1.0) * 100.0
+    );
+    assert!(
+        at40 / best < 1.15,
+        "threshold=40 should be near-optimal (got {:.1}% off)",
+        (at40 / best - 1.0) * 100.0
+    );
+    println!("ablation_threshold bench: PASS");
+}

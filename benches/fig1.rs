@@ -1,0 +1,87 @@
+//! Bench F1 — regenerates Figure 1 (cluster utilization during run #1 of
+//! the 100 TB benchmark): per-resource min/median/max bands across the 40
+//! worker nodes, written as CSV and rendered as ASCII.
+//!
+//! Shape checks versus the paper's figure:
+//!   - network is busy through the map&shuffle stage and the out-link
+//!     peaks again in reduce (S3 uploads);
+//!   - disk *write* activity concentrates in map&shuffle (merge spills),
+//!     disk *read* in reduce (merged-block loads);
+//!   - no resource sits at zero mid-stage (pipelining works).
+//!
+//!     cargo bench --bench fig1
+
+#[path = "harness.rs"]
+mod harness;
+
+use exoshuffle::sim::{simulate, SimConfig};
+
+fn main() {
+    harness::section("Figure 1: cluster utilization, run #1 (simulated)");
+    let r = simulate(&SimConfig::paper_100tb());
+    print!("{}", r.utilization.to_ascii(72));
+
+    std::fs::create_dir_all("target").unwrap();
+    let path = "target/fig1_utilization.csv";
+    std::fs::write(path, r.utilization.to_csv()).unwrap();
+    println!("series written to {path}");
+
+    // --- shape assertions ---
+    let stage_split = r.map_shuffle_secs;
+    let mean_over = |name: &str, lo: f64, hi: f64| -> f64 {
+        let (_, samples) = r
+            .utilization
+            .resources
+            .iter()
+            .find(|(n, _)| n == name)
+            .expect(name);
+        let vals: Vec<f64> = samples
+            .iter()
+            .filter(|s| s.t >= lo && s.t < hi)
+            .map(|s| s.median)
+            .collect();
+        exoshuffle::util::stats::mean(&vals)
+    };
+    // windows straddling stage cores (skip ramp edges)
+    let m0 = stage_split * 0.2;
+    let m1 = stage_split * 0.8;
+    let r0 = stage_split + r.reduce_secs * 0.2;
+    let r1 = stage_split + r.reduce_secs * 0.8;
+
+    let disk_w_map = mean_over("disk_write_bps", m0, m1);
+    let disk_w_red = mean_over("disk_write_bps", r0, r1);
+    assert!(
+        disk_w_map > 10.0 * disk_w_red.max(1.0),
+        "disk writes should concentrate in map&shuffle: {disk_w_map} vs {disk_w_red}"
+    );
+    let disk_r_map = mean_over("disk_read_bps", m0, m1);
+    let disk_r_red = mean_over("disk_read_bps", r0, r1);
+    assert!(
+        disk_r_red > 10.0 * disk_r_map.max(1.0),
+        "disk reads should concentrate in reduce: {disk_r_red} vs {disk_r_map}"
+    );
+    let net_in_map = mean_over("net_in_bps", m0, m1);
+    assert!(
+        net_in_map > 0.5e9,
+        "network-in should be busy during map&shuffle (S3 downloads + shuffle)"
+    );
+    let net_out_red = mean_over("net_out_bps", r0, r1);
+    assert!(
+        net_out_red > 0.5e9,
+        "network-out should be busy during reduce (S3 uploads)"
+    );
+    let cpu_map = mean_over("cpu", m0, m1);
+    assert!(
+        cpu_map > 0.2,
+        "CPU should be substantially utilized during map&shuffle"
+    );
+    println!(
+        "\nshape: disk-write map-heavy ({:.2} GB/s vs {:.2}), disk-read reduce-heavy \
+         ({:.2} GB/s vs {:.2}), net busy both stages — matches Figure 1",
+        disk_w_map / 1e9,
+        disk_w_red / 1e9,
+        disk_r_red / 1e9,
+        disk_r_map / 1e9
+    );
+    println!("fig1 bench: shape PASS");
+}

@@ -1,0 +1,76 @@
+//! Minimal statistics harness for `harness = false` benches (criterion is
+//! not available in the offline environment — see DESIGN.md).
+//!
+//! Usage from a bench binary:
+//!     #[path = "harness.rs"] mod harness;
+//!     harness::bench("name", iters, || work());
+
+#![allow(dead_code)]
+
+use std::time::Instant;
+
+/// Result of one benchmark.
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_secs: f64,
+    pub stddev_secs: f64,
+    pub min_secs: f64,
+    pub max_secs: f64,
+}
+
+/// Time `f` `iters` times (after one untimed warmup) and print a
+/// criterion-style line. Returns the stats for derived reporting.
+pub fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> BenchResult {
+    f(); // warmup
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let var = samples
+        .iter()
+        .map(|s| (s - mean).powi(2))
+        .sum::<f64>()
+        / samples.len().max(1) as f64;
+    let stddev = var.sqrt();
+    let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    println!(
+        "bench {name:<40} {:>10}  ± {:>8}  (min {}, max {}, n={iters})",
+        fmt_secs(mean),
+        fmt_secs(stddev),
+        fmt_secs(min),
+        fmt_secs(max),
+    );
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_secs: mean,
+        stddev_secs: stddev,
+        min_secs: min,
+        max_secs: max,
+    }
+}
+
+/// Throughput helper: records/second at a measured mean.
+pub fn throughput(records: usize, mean_secs: f64) -> f64 {
+    records as f64 / mean_secs
+}
+
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.3}µs", s * 1e6)
+    }
+}
+
+/// Print a section header.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}

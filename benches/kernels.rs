@@ -1,0 +1,77 @@
+//! Bench A2 (ablation) — the compute hot path: AOT-compiled Pallas/XLA
+//! kernels via PJRT versus the native Rust baseline (the paper's C++
+//! component analogue), on the exact call shapes the pipeline uses.
+//!
+//! Reported per shape: mean latency and records/s for
+//!   - sort_and_partition (map-task hot spot)
+//!   - merge_and_partition (merge/reduce-task hot spot)
+//!
+//!     make artifacts && cargo bench --bench kernels
+
+#[path = "harness.rs"]
+mod harness;
+
+use exoshuffle::runtime::{merge_and_partition, sort_and_partition, Backend};
+use exoshuffle::sortlib::reducer_cuts;
+use exoshuffle::util::rng::Xoshiro256;
+
+fn main() -> anyhow::Result<()> {
+    let xla = Backend::xla(std::path::Path::new("artifacts"))?;
+    let native = Backend::Native;
+    let cuts = reducer_cuts(40);
+
+    harness::section("sort_and_partition (map-task hot spot)");
+    for n in [4096usize, 16384] {
+        let mut rng = Xoshiro256::new(n as u64);
+        let keys: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+        for (name, backend) in [("xla", &xla), ("native", &native)] {
+            let label = format!("sort n={n} [{name}]");
+            let r = harness::bench(&label, 10, || {
+                let out = sort_and_partition(backend, &keys, &cuts).unwrap();
+                assert_eq!(out.keys.len(), n);
+            });
+            println!(
+                "      -> {:.2} Mrec/s",
+                harness::throughput(n, r.mean_secs) / 1e6
+            );
+        }
+    }
+
+    harness::section("merge_and_partition (merge/reduce-task hot spot)");
+    for (runs, len) in [(8usize, 512usize), (8, 2048), (40, 400)] {
+        let mut rng = Xoshiro256::new((runs * len) as u64);
+        let data: Vec<Vec<u64>> = (0..runs)
+            .map(|_| {
+                let mut v: Vec<u64> = (0..len).map(|_| rng.next_u64()).collect();
+                v.sort_unstable();
+                v
+            })
+            .collect();
+        let refs: Vec<&[u64]> = data.iter().map(|d| d.as_slice()).collect();
+        let total = runs * len;
+        for (name, backend) in [("xla", &xla), ("native", &native)] {
+            let label = format!("merge r={runs} l={len} [{name}]");
+            let r = harness::bench(&label, 10, || {
+                let out = merge_and_partition(backend, &refs, &cuts).unwrap();
+                assert_eq!(out.keys.len(), total);
+            });
+            println!(
+                "      -> {:.2} Mrec/s",
+                harness::throughput(total, r.mean_secs) / 1e6
+            );
+        }
+    }
+
+    // cross-check: both backends agree bit-for-bit
+    harness::section("cross-check xla == native");
+    let mut rng = Xoshiro256::new(99);
+    let keys: Vec<u64> = (0..5000).map(|_| rng.next_u64()).collect();
+    let a = sort_and_partition(&xla, &keys, &cuts)?;
+    let b = sort_and_partition(&native, &keys, &cuts)?;
+    assert_eq!(a.keys, b.keys);
+    assert_eq!(a.perm, b.perm);
+    assert_eq!(a.offs, b.offs);
+    println!("sort results identical across backends");
+    println!("kernels bench: PASS");
+    Ok(())
+}

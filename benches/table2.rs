@@ -1,0 +1,68 @@
+//! Bench T2 — regenerates Table 2 (cost breakdown of the 100 TB
+//! CloudSort Benchmark) two ways:
+//!   1. with the paper's own run profile (must match to the cent), and
+//!   2. with the simulator's run profile (shape check).
+//!
+//!     cargo bench --bench table2
+
+#[path = "harness.rs"]
+mod harness;
+
+use exoshuffle::cost::{CostModel, RunProfile};
+use exoshuffle::sim::{simulate, SimConfig};
+
+fn main() {
+    let model = CostModel::paper();
+
+    harness::section("Table 2 with the paper's run profile (exact reproduction)");
+    let paper_profile = RunProfile {
+        n_workers: 40,
+        job_seconds: 1.4939 * 3600.0,
+        reduce_seconds: 0.5194 * 3600.0,
+        data_bytes: 100_000_000_000_000,
+        get_requests: 6_000_000,
+        put_requests: 1_000_000,
+    };
+    println!("{}", model.render_table2(&paper_profile));
+    let b = model.breakdown(&paper_profile);
+    let rows = [
+        ("Compute VM Cluster", b.compute, 83.0674),
+        ("Data Storage (Input)", b.storage_input, 4.6045),
+        ("Data Storage (Output)", b.storage_output, 1.6009),
+        ("Data Access (Input)", b.access_get, 2.4000),
+        ("Data Access (Output)", b.access_put, 5.0000),
+        ("Total", b.total(), 96.6728),
+    ];
+    for (name, ours, paper) in rows {
+        let ok = (ours - paper).abs() < 0.02;
+        println!(
+            "{name:<24} ${ours:>8.4}  vs paper ${paper:>8.4}  {}",
+            if ok { "OK" } else { "MISMATCH" }
+        );
+        assert!(ok, "{name} diverged from the paper");
+    }
+
+    harness::section("Table 2 with the simulator's run profile (shape)");
+    let r = simulate(&SimConfig::paper_100tb());
+    let sim_profile = RunProfile {
+        n_workers: 40,
+        job_seconds: r.total_secs,
+        reduce_seconds: r.reduce_secs,
+        data_bytes: 100_000_000_000_000,
+        get_requests: r.get_requests,
+        put_requests: r.put_requests,
+    };
+    println!("{}", model.render_table2(&sim_profile));
+    let sim_total = model.breakdown(&sim_profile).total();
+    println!(
+        "simulated TCO ${sim_total:.2} vs paper $96.67 ({:+.1}%)",
+        (sim_total / 96.6728 - 1.0) * 100.0
+    );
+    assert!(
+        (sim_total / 96.6728 - 1.0).abs() < 0.25,
+        "simulated TCO drifted >25%"
+    );
+    assert_eq!(r.get_requests, 6_000_000, "GET count must match the paper");
+    assert_eq!(r.put_requests, 1_000_000, "PUT count must match the paper");
+    println!("table2 bench: PASS");
+}

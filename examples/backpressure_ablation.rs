@@ -1,0 +1,70 @@
+//! Ablation A1 (DESIGN.md): merge-controller backpressure on vs off.
+//!
+//! The paper (§2.3) synchronizes map, shuffle and merge progress by
+//! holding off map-block acknowledgements when merge parallelism is
+//! saturated and the controller buffer is full. Backpressure matters in
+//! the regime where merges are the bottleneck: without it, map tasks
+//! race ahead and shuffled-but-unmerged blocks pile up in worker memory
+//! without bound; with it, the pile is capped at the buffer limit — at
+//! no throughput cost, since the job is merge-bound either way.
+//!
+//! Demonstrated at two levels: the full-scale simulator with merges
+//! slowed 4× (schedule + memory-exposure effects at 100 TB), and a real
+//! scaled run with a single merge slot (observable spill pressure).
+
+use exoshuffle::coordinator::{run_cloudsort, JobSpec};
+use exoshuffle::runtime::Backend;
+use exoshuffle::sim::{simulate, SimConfig};
+use exoshuffle::util::human_bytes;
+
+fn main() -> anyhow::Result<()> {
+    println!("=== ablation A1: merge backpressure ===\n");
+
+    // --- full-scale sim, merge-bound regime ---
+    println!("-- 100 TB simulation, merges slowed 4x (merge-bound regime) --");
+    for backpressure in [true, false] {
+        let mut cfg = SimConfig::paper_100tb();
+        cfg.spec.backpressure = backpressure;
+        cfg.rates.merge_cpu_bps /= 4.0;
+        let r = simulate(&cfg);
+        // 2 GB per 40-block batch => bytes of unmerged exposure
+        let block_bytes = cfg.spec.total_bytes
+            / cfg.spec.n_input_partitions as u64
+            / cfg.spec.n_workers() as u64;
+        println!(
+            "backpressure={:<5}: total {:>5.0}s | peak unmerged blocks/node {:>6} \
+             (≈ {} of worker RAM)",
+            backpressure,
+            r.total_secs,
+            r.peak_unmerged_blocks,
+            human_bytes(r.peak_unmerged_blocks as u64 * block_bytes),
+        );
+    }
+
+    // --- real scaled run: same effect, observable spills ---
+    println!("\n-- scaled real run (64 MiB, 2 workers, store capped at 4 MiB/node) --");
+    for backpressure in [true, false] {
+        let mut spec = JobSpec::scaled(64 << 20, 2);
+        spec.backpressure = backpressure;
+        spec.max_buffered_blocks = spec.merge_threshold_blocks;
+        spec.store_capacity_per_node = 4 << 20;
+        let report = run_cloudsort(&spec, Backend::Native)?;
+        println!(
+            "backpressure={:<5}: total {:>5.2}s | peak unmerged blocks/node {:>3} | \
+             spills {:>3} ({:>10}) | validation {}",
+            backpressure,
+            report.total_secs,
+            report.peak_unmerged_blocks,
+            report.store.spills,
+            human_bytes(report.store.spill_bytes),
+            if report.validation.valid { "PASS" } else { "FAIL" },
+        );
+        assert!(report.validation.valid);
+    }
+    println!(
+        "\nWith backpressure, unmerged blocks are bounded by the controller \
+         buffer; without it they grow with the map/merge rate gap — the \
+         paper's design keeps map, shuffle and merge in sync (§2.3)."
+    );
+    Ok(())
+}

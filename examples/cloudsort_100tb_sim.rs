@@ -1,0 +1,97 @@
+//! Full-scale reproduction driver (DESIGN.md experiments T1/T2/F1):
+//! simulates the 100 TB CloudSort Benchmark on the paper's testbed
+//! (40×i4i.4xlarge + r6i.2xlarge, §3.1) three times, printing Table 1,
+//! Table 2, and writing the Figure 1 utilization series to CSV.
+//!
+//!     cargo run --release --example cloudsort_100tb_sim
+//!
+//! The simulator executes the same control-plane policies as the real
+//! coordinator; per-task rates are calibrated to the paper's §2.3–2.4
+//! measurements, and stage times *emerge* from scheduling + contention
+//! (see rust/src/sim/).
+
+use exoshuffle::cost::{CostModel, RunProfile};
+use exoshuffle::sim::{simulate, SimConfig};
+
+fn main() -> anyhow::Result<()> {
+    println!("=== 100 TB CloudSort Benchmark (discrete-event simulation) ===\n");
+    let mut rows = Vec::new();
+    for run in 0..3 {
+        let mut cfg = SimConfig::paper_100tb();
+        cfg.seed = 1 + run as u64;
+        let r = simulate(&cfg);
+        println!(
+            "run #{}: map&shuffle {:>5.0} s | reduce {:>5.0} s | total {:>5.0} s",
+            run + 1,
+            r.map_shuffle_secs,
+            r.reduce_secs,
+            r.total_secs
+        );
+        rows.push(r);
+    }
+    let avg = |f: fn(&exoshuffle::sim::SimResult) -> f64| {
+        rows.iter().map(f).sum::<f64>() / rows.len() as f64
+    };
+    let (ms, rd, tot) = (
+        avg(|r| r.map_shuffle_secs),
+        avg(|r| r.reduce_secs),
+        avg(|r| r.total_secs),
+    );
+
+    println!("\n--- Table 1: job completion times ---");
+    println!("Run      | Map & Shuffle | Reduce  | Total");
+    for (i, r) in rows.iter().enumerate() {
+        println!(
+            "#{}       | {:>10.0} s  | {:>5.0} s | {:>5.0} s",
+            i + 1,
+            r.map_shuffle_secs,
+            r.reduce_secs,
+            r.total_secs
+        );
+    }
+    println!("Average  | {:>10.0} s  | {:>5.0} s | {:>5.0} s", ms, rd, tot);
+    println!("Paper    |       3508 s  |  1870 s |  5378 s");
+    println!(
+        "delta    | {:>+9.1}%   | {:>+5.1}% | {:>+5.1}%",
+        (ms / 3508.0 - 1.0) * 100.0,
+        (rd / 1870.0 - 1.0) * 100.0,
+        (tot / 5378.0 - 1.0) * 100.0
+    );
+
+    println!("\n--- per-task means (paper: map 24 s w/ 15 s download, shuffle 7 s, merge 17 s, reduce 22 s) ---");
+    let r0 = &rows[0];
+    println!(
+        "map {:.1} s (download {:.1} s) | shuffle {:.1} s | merge {:.1} s | reduce {:.1} s",
+        r0.mean_map_secs,
+        r0.mean_map_download_secs,
+        r0.mean_shuffle_secs,
+        r0.mean_merge_secs,
+        r0.mean_reduce_secs
+    );
+
+    // Figure 1: utilization bands of run #1.
+    let csv_path = "target/fig1_utilization.csv";
+    std::fs::create_dir_all("target")?;
+    std::fs::write(csv_path, r0.utilization.to_csv())?;
+    println!("\n--- Figure 1: cluster utilization during run #1 (median across 40 workers) ---");
+    print!("{}", r0.utilization.to_ascii(72));
+    println!("full min/median/max series written to {csv_path}");
+
+    // Table 2 from run #1 (the paper costs run #1's profile).
+    println!("\n--- Table 2: cost breakdown (paper total: $96.6728) ---");
+    let model = CostModel::paper();
+    let profile = RunProfile {
+        n_workers: 40,
+        job_seconds: tot,
+        reduce_seconds: rd,
+        data_bytes: 100_000_000_000_000,
+        get_requests: r0.get_requests,
+        put_requests: r0.put_requests,
+    };
+    println!("{}", model.render_table2(&profile));
+    println!(
+        "requests: {} GETs (paper 6,000,000), {} PUTs (paper 1,000,000)",
+        r0.get_requests, r0.put_requests
+    );
+    Ok(())
+}

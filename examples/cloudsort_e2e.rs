@@ -1,0 +1,119 @@
+//! End-to-end validation driver (DESIGN.md experiment E2E): runs the
+//! complete Exoshuffle-CloudSort pipeline — gensort-equivalent input
+//! generation onto the S3 stand-in, the map/shuffle stage with merge
+//! backpressure, the reduce stage, and valsort-equivalent validation —
+//! at a real (scaled) data size through the full three-layer stack:
+//! Rust control plane → distributed-futures data plane → AOT-compiled
+//! Pallas/XLA kernels via PJRT.
+//!
+//!     make artifacts && cargo run --release --example cloudsort_e2e
+//!
+//! Environment knobs: EXOSHUFFLE_SIZE (default 256MiB),
+//! EXOSHUFFLE_WORKERS (default 4), EXOSHUFFLE_BACKEND (xla|native).
+//! The run is recorded in EXPERIMENTS.md §E2E.
+
+use exoshuffle::config::parse_bytes;
+use exoshuffle::prelude::*;
+use exoshuffle::util::human_bytes;
+
+fn main() -> anyhow::Result<()> {
+    let size = std::env::var("EXOSHUFFLE_SIZE")
+        .ok()
+        .map(|s| parse_bytes(&s).expect("bad EXOSHUFFLE_SIZE"))
+        .unwrap_or(256 << 20);
+    let workers: usize = std::env::var("EXOSHUFFLE_WORKERS")
+        .ok()
+        .map(|s| s.parse().expect("bad EXOSHUFFLE_WORKERS"))
+        .unwrap_or(4);
+    let spec = JobSpec::scaled(size, workers);
+    let backend = match std::env::var("EXOSHUFFLE_BACKEND").as_deref() {
+        Ok("native") => Backend::Native,
+        _ => Backend::xla(std::path::Path::new("artifacts"))?,
+    };
+
+    println!("=== Exoshuffle-CloudSort end-to-end ===");
+    println!(
+        "dataset: {} ({} records) | cluster: {} workers × {} slots | backend: {}",
+        human_bytes(spec.total_bytes),
+        spec.total_records(),
+        spec.n_workers(),
+        spec.cluster.task_parallelism(),
+        backend.name(),
+    );
+    println!(
+        "plan: M={} input partitions, R={} output partitions (R1={}/worker), \
+         merge threshold {} blocks, backpressure {}",
+        spec.n_input_partitions,
+        spec.n_output_partitions,
+        spec.reducers_per_worker(),
+        spec.merge_threshold_blocks,
+        spec.backpressure,
+    );
+
+    let report = run_cloudsort(&spec, backend)?;
+
+    println!("\n--- Table 1 (this run, scaled) ---");
+    println!("Map & Shuffle Time | Reduce Time | Total Job Completion Time");
+    println!(
+        "{:>18.2}s | {:>11.2}s | {:>25.2}s",
+        report.map_shuffle_secs, report.reduce_secs, report.total_secs
+    );
+    println!("\n--- per-task means (paper §2.3–2.4: map 24s, merge 17s, reduce 22s at 2GB partitions) ---");
+    println!(
+        "map {:.3}s | merge {:.3}s | reduce {:.3}s | validate {:.3}s",
+        report.mean_task_secs("map"),
+        report.mean_task_secs("merge"),
+        report.mean_task_secs("reduce"),
+        report.mean_task_secs("validate"),
+    );
+    println!("\n--- data plane ---");
+    println!(
+        "tasks: {} map / {} merge / {} reduce; attempts {}, retries {}",
+        report.n_map_tasks,
+        report.n_merge_tasks,
+        report.n_reduce_tasks,
+        report.task_counts.0,
+        report.task_counts.1
+    );
+    println!(
+        "shuffle transfers: {} ({}); spills: {} ({}); restores: {}",
+        report.store.transfers,
+        human_bytes(report.store.transfer_bytes),
+        report.store.spills,
+        human_bytes(report.store.spill_bytes),
+        report.store.restores,
+    );
+    println!(
+        "s3: {} GETs, {} PUTs, {} down, {} up",
+        report.s3.get_requests,
+        report.s3.put_requests,
+        human_bytes(report.s3.bytes_downloaded),
+        human_bytes(report.s3.bytes_uploaded),
+    );
+
+    // Scaled Table 2: same arithmetic as the paper, this run's inputs.
+    let model = CostModel::paper();
+    let profile = exoshuffle::cost::RunProfile {
+        n_workers: spec.n_workers(),
+        job_seconds: report.total_secs,
+        reduce_seconds: report.reduce_secs,
+        data_bytes: spec.total_bytes,
+        get_requests: report.s3.get_requests,
+        put_requests: report.s3.put_requests,
+    };
+    println!("\n--- Table 2 (cost arithmetic at this scale) ---");
+    println!("{}", model.render_table2(&profile));
+
+    println!(
+        "validation: {} | records {} / {} | checksum {:#x} / {:#x} | dup keys {}",
+        if report.validation.valid { "PASS" } else { "FAIL" },
+        report.validation.summary.records,
+        report.validation.input_records,
+        report.validation.summary.checksum,
+        report.validation.input_checksum,
+        report.validation.summary.duplicates,
+    );
+    assert!(report.validation.valid, "validation failed");
+    println!("\nEnd-to-end PASS: all layers composed (coordinator → distfut → PJRT kernels).");
+    Ok(())
+}

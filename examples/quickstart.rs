@@ -1,0 +1,59 @@
+//! Quickstart: sort 16 MiB across 2 simulated workers with the
+//! AOT-compiled Pallas/XLA kernels, then validate the output.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! Set `EXOSHUFFLE_BACKEND=native` to skip the XLA engine (no artifacts
+//! needed) — useful for a first smoke test.
+
+use exoshuffle::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Describe the job. `scaled` keeps the paper's structural ratios
+    //    (M input partitions, R = M/2 output partitions, R a multiple of
+    //    the worker count) at laptop scale.
+    let spec = JobSpec::scaled(16 << 20, 2);
+    println!(
+        "CloudSort quickstart: {} records, M={} input partitions, \
+         W={} workers, R={} output partitions",
+        spec.total_records(),
+        spec.n_input_partitions,
+        spec.n_workers(),
+        spec.n_output_partitions,
+    );
+
+    // 2. Pick the compute backend: the XLA engine loads the HLO artifacts
+    //    produced by `make artifacts` and executes them via PJRT.
+    let backend = match std::env::var("EXOSHUFFLE_BACKEND").as_deref() {
+        Ok("native") => Backend::Native,
+        _ => Backend::xla(std::path::Path::new("artifacts"))?,
+    };
+    println!("backend: {}", backend.name());
+
+    // 3. Run the full pipeline: generate → map/shuffle/merge → reduce →
+    //    validate. Everything runs on an in-process simulated cluster:
+    //    distributed futures, object store with spilling, S3 stand-in.
+    let report = run_cloudsort(&spec, backend)?;
+
+    println!("\n--- results ---");
+    println!("generate:    {:6.2}s (untimed in the benchmark)", report.gen_secs);
+    println!("map&shuffle: {:6.2}s", report.map_shuffle_secs);
+    println!("reduce:      {:6.2}s", report.reduce_secs);
+    println!("total:       {:6.2}s", report.total_secs);
+    println!(
+        "mean task: map {:.3}s, merge {:.3}s, reduce {:.3}s",
+        report.mean_task_secs("map"),
+        report.mean_task_secs("merge"),
+        report.mean_task_secs("reduce"),
+    );
+    println!(
+        "s3: {} GETs / {} PUTs; shuffle transfers: {}",
+        report.s3.get_requests, report.s3.put_requests, report.store.transfers
+    );
+    println!(
+        "validation: {}",
+        if report.validation.valid { "PASS" } else { "FAIL" }
+    );
+    assert!(report.validation.valid, "output must validate");
+    Ok(())
+}

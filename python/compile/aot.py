@@ -1,0 +1,130 @@
+"""AOT compiler: lower the L2 graphs to HLO text artifacts for Rust/PJRT.
+
+Interchange format is HLO *text*, NOT a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Each artifact is one (graph, shape) instantiation; ``manifest.json``
+records the full set so the Rust runtime can pick the right executable and
+pad inputs to its shape. ``python -m compile.aot --out ../artifacts``.
+
+``--report`` prints a structural perf report per artifact (VMEM footprint,
+compare-exchange stage count, HLO op count) — the L1 profile signal used
+by EXPERIMENTS.md §Perf (interpret-mode wallclock is not a TPU proxy; we
+optimize structure, and XLA-CPU execution speed is measured from Rust).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+from .kernels import merge as merge_kernel  # noqa: E402
+from .kernels import sort as sort_kernel  # noqa: E402
+
+# Default artifact set. The Rust runtime tree-merges / chunk-sorts around
+# these fixed shapes, so a small set covers every run configuration:
+#   - sort_n{n}_c{c}: map-task chunk sort (+ worker-range partition)
+#   - merge_r{r}_l{l}_c{c}: merge/reduce-task run merge (+ reducer ranges)
+# Small shapes keep unit tests fast; 64Ki-record shapes are the hot-path
+# default (VMEM-sized per DESIGN.md §Hardware-Adaptation).
+SORT_SHAPES = [
+    # (n, c)
+    (256, 64),
+    (4096, 64),
+    (16384, 64),
+    (65536, 64),
+]
+MERGE_SHAPES = [
+    # (r, l, c)
+    (8, 32, 64),
+    (8, 512, 256),
+    (16, 4096, 1024),
+    (64, 1024, 1024),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax Lowered to XLA HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_sort(n: int, c: int) -> str:
+    spec = model.sort_and_partition_spec(n, c)
+    return to_hlo_text(jax.jit(model.sort_and_partition).lower(*spec))
+
+
+def lower_merge(r: int, l: int, c: int) -> str:
+    spec = model.merge_and_partition_spec(r, l, c)
+    return to_hlo_text(jax.jit(model.merge_and_partition).lower(*spec))
+
+
+def build(out_dir: str, report: bool = False) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": "hlo-text", "version": 1, "sort": [], "merge": []}
+    for n, c in SORT_SHAPES:
+        name = f"sort_n{n}_c{c}.hlo.txt"
+        text = lower_sort(n, c)
+        with open(os.path.join(out_dir, name), "w") as f:
+            f.write(text)
+        entry = {"file": name, "n": n, "c": c}
+        manifest["sort"].append(entry)
+        if report:
+            _report("sort", entry, text,
+                    stages=sort_kernel.compare_exchange_stages(n),
+                    vmem=sort_kernel.vmem_bytes(n))
+    for r, l, c in MERGE_SHAPES:
+        name = f"merge_r{r}_l{l}_c{c}.hlo.txt"
+        text = lower_merge(r, l, c)
+        with open(os.path.join(out_dir, name), "w") as f:
+            f.write(text)
+        entry = {"file": name, "r": r, "l": l, "c": c}
+        manifest["merge"].append(entry)
+        if report:
+            _report("merge", entry, text,
+                    stages=merge_kernel.compare_exchange_stages(r, l),
+                    vmem=2 * 12 * r * l)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def _hlo_op_count(text: str) -> int:
+    return sum(1 for line in text.splitlines() if " = " in line)
+
+
+def _report(kind: str, entry: dict, text: str, stages: int, vmem: int):
+    print(
+        f"[aot] {kind} {entry}: stages={stages} "
+        f"vmem={vmem / 1024:.0f}KiB hlo_ops={_hlo_op_count(text)} "
+        f"hlo_bytes={len(text)}"
+    )
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts",
+                        help="artifact output directory")
+    parser.add_argument("--report", action="store_true",
+                        help="print structural perf report per artifact")
+    args = parser.parse_args()
+    manifest = build(args.out, report=args.report)
+    n_artifacts = len(manifest["sort"]) + len(manifest["merge"])
+    print(f"[aot] wrote {n_artifacts} artifacts + manifest.json to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

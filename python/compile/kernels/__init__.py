@@ -1,0 +1,9 @@
+"""L1 Pallas kernels for Exoshuffle-CloudSort's compute hot-spot.
+
+- ``sort``: bitonic sort of (u64 key, u32 payload-index) pairs (map tasks)
+- ``merge``: bitonic merge of pre-sorted runs (merge + reduce tasks)
+- ``partition``: binary-search partition offsets against range cut points
+- ``ref``: pure-jnp/numpy oracles for all of the above
+"""
+
+from . import bitonic, merge, partition, ref, sort  # noqa: F401

@@ -1,0 +1,140 @@
+"""Bitonic compare-exchange networks over (u64 key, u32 value) pairs.
+
+These are the building blocks of the L1 Pallas kernels. Everything here is
+a pure, shape-static jnp function: no gathers, only reshapes and selects,
+so the network vectorizes on TPU VPU lanes and lowers to plain HLO under
+``pl.pallas_call(..., interpret=True)``.
+
+The comparison order is lexicographic on (key, value). Values are unique
+payload indices in our use, which makes the order total and the network
+deterministic even with duplicate keys.
+
+Hardware adaptation note (DESIGN.md §Hardware-Adaptation): the paper sorts
+100-byte records with a comparison sort on CPU. Here we sort 12-byte
+(key, index) pairs with a data-independent compare-exchange network — the
+shape-static form AOT lowering requires, and the form that maps onto VPU
+lanes rather than scalar branches.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _log2(n: int) -> int:
+    """Exact log2 of a positive power of two (raises otherwise)."""
+    if n <= 0 or (n & (n - 1)) != 0:
+        raise ValueError(f"expected a positive power of two, got {n}")
+    return n.bit_length() - 1
+
+
+def compare_exchange(keys, vals, span: int, ascending_rows=None):
+    """One compare-exchange stage at distance ``span``.
+
+    Elements ``i`` and ``i ^ span`` are compared; each pair is put in
+    ascending or descending order according to ``ascending_rows``, a bool
+    array over the ``n // (2 * span)`` pair-rows (``None`` = all ascending).
+
+    Implemented gather-free: reshape to (rows, 2, span) so partners sit on
+    axis 1, then a vectorized conditional swap.
+    """
+    n = keys.shape[0]
+    rows = n // (2 * span)
+    kr = keys.reshape(rows, 2, span)
+    vr = vals.reshape(rows, 2, span)
+    k0, k1 = kr[:, 0, :], kr[:, 1, :]
+    v0, v1 = vr[:, 0, :], vr[:, 1, :]
+    less = (k0 < k1) | ((k0 == k1) & (v0 < v1))
+    if ascending_rows is None:
+        swap = ~less
+    else:
+        asc = ascending_rows.reshape(rows, 1)
+        swap = jnp.where(asc, ~less, less)
+    nk0 = jnp.where(swap, k1, k0)
+    nk1 = jnp.where(swap, k0, k1)
+    nv0 = jnp.where(swap, v1, v0)
+    nv1 = jnp.where(swap, v0, v1)
+    keys = jnp.stack([nk0, nk1], axis=1).reshape(n)
+    vals = jnp.stack([nv0, nv1], axis=1).reshape(n)
+    return keys, vals
+
+
+def _stage_directions(n: int, k: int, span: int):
+    """Ascending flags per pair-row for sort stage ``k`` (block size 2^k).
+
+    Element ``i`` belongs to an ascending block iff bit ``k`` of ``i`` is 0.
+    A pair-row at distance ``span`` covers indices [r*2*span, (r+1)*2*span),
+    and since 2^k >= 2*span within a stage, the bit is constant per row.
+    """
+    rows = n // (2 * span)
+    row_start = jnp.arange(rows, dtype=jnp.uint32) * jnp.uint32(2 * span)
+    return ((row_start >> jnp.uint32(k)) & jnp.uint32(1)) == 0
+
+
+def bitonic_sort_pairs(keys, vals):
+    """Full bitonic sort of (keys, vals) ascending by (key, val).
+
+    O(n log^2 n) compare-exchanges; n must be a power of two.
+    """
+    n = keys.shape[0]
+    logn = _log2(n)
+    for k in range(1, logn + 1):
+        for j in range(k - 1, -1, -1):
+            span = 1 << j
+            if k == logn:
+                asc = None  # final stage: globally ascending
+            else:
+                asc = _stage_directions(n, k, span)
+            keys, vals = compare_exchange(keys, vals, span, asc)
+    return keys, vals
+
+
+def bitonic_merge_rows(keys, vals):
+    """Merge each row of (R, L) from a bitonic sequence to ascending order.
+
+    Callers make each row bitonic by concatenating one ascending run with
+    one reversed (descending) run. O(L log L) compare-exchanges.
+    """
+    r, l = keys.shape
+    logl = _log2(l)
+    kf = keys.reshape(r * l)
+    vf = vals.reshape(r * l)
+    for j in range(logl - 1, -1, -1):
+        span = 1 << j
+        # All pair-rows ascend, but pairs must not straddle row boundaries:
+        # span <= l/2 guarantees that, since rows have power-of-two length.
+        kf, vf = _merge_stage_within_rows(kf, vf, span, l)
+    return kf.reshape(r, l), vf.reshape(r, l)
+
+
+def _merge_stage_within_rows(kf, vf, span: int, row_len: int):
+    """Ascending compare-exchange at ``span``, rows of ``row_len`` flat."""
+    # Identical to compare_exchange with all-ascending direction; row
+    # boundaries are respected because row_len % (2 * span) == 0.
+    assert row_len % (2 * span) == 0
+    return compare_exchange(kf, vf, span, None)
+
+
+def merge_sorted_runs(keys, vals):
+    """Merge R ascending runs (rows of (R, L)) into one ascending sequence.
+
+    R and L must be powers of two. log2(R) rounds of pairwise bitonic
+    merges: at each round the odd runs are reversed so each concatenated
+    pair is bitonic, then merged. O(n log R * log L')-ish compare-exchanges
+    -- asymptotically cheaper than re-sorting (O(n log^2 n)).
+    Returns flat (keys, vals) of length R * L.
+    """
+    r, l = keys.shape
+    _log2(r), _log2(l)  # validate powers of two
+    while r > 1:
+        # Reverse odd rows so (even ++ reversed(odd)) is bitonic.
+        kr = keys.reshape(r // 2, 2, l)
+        vr = vals.reshape(r // 2, 2, l)
+        khi = kr[:, 1, ::-1]
+        vhi = vr[:, 1, ::-1]
+        keys = jnp.concatenate([kr[:, 0, :], khi], axis=1)
+        vals = jnp.concatenate([vr[:, 0, :], vhi], axis=1)
+        keys, vals = bitonic_merge_rows(keys, vals)
+        r //= 2
+        l *= 2
+    return keys.reshape(l), vals.reshape(l)

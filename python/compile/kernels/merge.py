@@ -1,0 +1,58 @@
+"""L1 Pallas kernel: merge R sorted runs of (u64 key, u32 index) pairs.
+
+This is the compute hot-spot of merge and reduce tasks (paper §2.3–2.4):
+a merge task merges W sorted map blocks; a reduce task merges R/W = 625
+merged blocks. The L3 coordinator pads the run count and run length to the
+artifact's power-of-two shape with u64::MAX sentinels (which keep every run
+sorted and fall to the end of the output), and tree-merges when a task has
+more runs than the artifact accepts.
+
+log2(R) rounds of pairwise bitonic merges — O(n · log R · log n) work
+versus O(n · log^2 n) for re-sorting from scratch; the Pallas analogue of
+the paper's streaming k-way merge (DESIGN.md §Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import bitonic
+
+
+def _merge_kernel(keys_ref, vals_ref, out_keys_ref, out_vals_ref):
+    keys = keys_ref[...]
+    vals = vals_ref[...]
+    out_keys, out_vals = bitonic.merge_sorted_runs(keys, vals)
+    out_keys_ref[...] = out_keys
+    out_vals_ref[...] = out_vals
+
+
+def merge_runs(keys, vals, *, interpret: bool = True):
+    """Merge runs: (keys: u64[R, L], vals: u32[R, L]) -> flat sorted pair.
+
+    Each row must be ascending by (key, val); R and L powers of two.
+    """
+    r, l = keys.shape
+    n = r * l
+    return pl.pallas_call(
+        _merge_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((n,), jnp.uint64),
+            jax.ShapeDtypeStruct((n,), jnp.uint32),
+        ),
+        interpret=interpret,
+    )(keys, vals)
+
+
+def compare_exchange_stages(r: int, l: int) -> int:
+    """Stage count for merging r runs of length l (powers of two)."""
+    stages = 0
+    length = l
+    runs = r
+    while runs > 1:
+        length *= 2
+        stages += length.bit_length() - 1
+        runs //= 2
+    return stages

@@ -1,0 +1,50 @@
+"""L1 Pallas kernel: partition offsets of a sorted key block.
+
+Given ascending-sorted keys (u64[N], N a power of two) and C interior cut
+points, returns offs[c] = |{ i : keys[i] < cuts[c] }| — i.e. the boundary
+offsets that slice the sorted block into C+1 partition ranges
+(paper §2.2: R = 25 000 equal u64 key ranges, grouped into W worker ranges).
+
+Cut arrays are padded to the artifact's fixed C with u64::MAX by the L3
+caller; padded cuts yield offs = number of non-sentinel keys, which the
+caller ignores. Sentinel keys (u64::MAX padding of short blocks) are never
+counted because ``key < cut`` is false when cut == u64::MAX.
+
+Branchless vectorized binary search over all C cuts simultaneously:
+log2(N) rounds, one dynamic gather of C lanes per round.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _partition_kernel(keys_ref, cuts_ref, offs_ref):
+    keys = keys_ref[...]
+    cuts = cuts_ref[...]
+    n = keys.shape[0]
+    logn = n.bit_length() - 1
+    c = cuts.shape[0]
+    # Bitwise binary search: build pos = count of keys < cut, bit by bit.
+    pos = jnp.zeros((c,), dtype=jnp.uint32)
+    for b in range(logn - 1, -1, -1):
+        cand = pos + jnp.uint32(1 << b)
+        probe = jnp.take(keys, cand - 1, indices_are_sorted=False)
+        pos = jnp.where(probe < cuts, cand, pos)
+    # pos <= n-1 so far; the all-keys-below-cut case needs the last element.
+    last = keys[n - 1]
+    pos = jnp.where((pos == jnp.uint32(n - 1)) & (last < cuts),
+                    jnp.uint32(n), pos)
+    offs_ref[...] = pos
+
+
+def partition_offsets(keys, cuts, *, interpret: bool = True):
+    """offs[c] = #{keys < cuts[c]} for ascending-sorted keys."""
+    c = cuts.shape[0]
+    return pl.pallas_call(
+        _partition_kernel,
+        out_shape=jax.ShapeDtypeStruct((c,), jnp.uint32),
+        interpret=interpret,
+    )(keys, cuts)

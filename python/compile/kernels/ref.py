@@ -1,0 +1,34 @@
+"""Pure-jnp/numpy correctness oracles for the L1 Pallas kernels.
+
+These are the CORE correctness signal: every kernel must match its oracle
+bit-for-bit (keys) / under the lexicographic-(key, val) order (vals).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def sort_pairs_ref(keys, vals):
+    """Ascending lexicographic sort of (key, val) pairs."""
+    keys = np.asarray(keys)
+    vals = np.asarray(vals)
+    order = np.lexsort((vals, keys))
+    return jnp.asarray(keys[order]), jnp.asarray(vals[order])
+
+
+def partition_offsets_ref(sorted_keys, cuts):
+    """offs[c] = #{keys < cuts[c]} via numpy searchsorted."""
+    sorted_keys = np.asarray(sorted_keys)
+    cuts = np.asarray(cuts)
+    return jnp.asarray(
+        np.searchsorted(sorted_keys, cuts, side="left").astype(np.uint32)
+    )
+
+
+def merge_runs_ref(keys, vals):
+    """Merge sorted rows by flattening + lexicographic re-sort (oracle)."""
+    keys = np.asarray(keys).reshape(-1)
+    vals = np.asarray(vals).reshape(-1)
+    return sort_pairs_ref(keys, vals)

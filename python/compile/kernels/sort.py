@@ -1,0 +1,59 @@
+"""L1 Pallas kernel: sort a block of (u64 key, u32 index) pairs.
+
+This is the compute hot-spot of a map task (paper §2.3): sort the input
+partition by key. The 90-byte payloads never enter the kernel — the L3
+coordinator applies the returned index permutation natively, mirroring the
+paper's C++ component which sorts key pointers.
+
+``interpret=True`` is mandatory on this image: real TPU lowering emits a
+Mosaic custom-call that the CPU PJRT plugin cannot execute (see
+/opt/xla-example/README.md). Interpret mode lowers the kernel to plain HLO,
+which the Rust runtime compiles and runs via PJRT.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import bitonic
+
+
+def _sort_kernel(keys_ref, vals_ref, out_keys_ref, out_vals_ref):
+    keys = keys_ref[...]
+    vals = vals_ref[...]
+    keys, vals = bitonic.bitonic_sort_pairs(keys, vals)
+    out_keys_ref[...] = keys
+    out_vals_ref[...] = vals
+
+
+def sort_pairs(keys, vals, *, interpret: bool = True):
+    """Sort (keys: u64[N], vals: u32[N]) ascending by (key, val).
+
+    N must be a power of two. Returns (sorted_keys, permuted_vals).
+    """
+    n = keys.shape[0]
+    return pl.pallas_call(
+        _sort_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((n,), jnp.uint64),
+            jax.ShapeDtypeStruct((n,), jnp.uint32),
+        ),
+        interpret=interpret,
+    )(keys, vals)
+
+
+def vmem_bytes(n: int) -> int:
+    """Estimated VMEM working set for a block of n records.
+
+    Two resident copies of (u64 key + u32 val) during a compare-exchange
+    stage (input + output of the select), i.e. 2 * 12 bytes per record.
+    """
+    return 2 * 12 * n
+
+
+def compare_exchange_stages(n: int) -> int:
+    """Number of compare-exchange stages for a full sort of n (power of 2)."""
+    logn = n.bit_length() - 1
+    return logn * (logn + 1) // 2

@@ -1,0 +1,84 @@
+"""L2: the JAX compute graphs of Exoshuffle-CloudSort's tasks.
+
+Two graphs, each composed from the L1 Pallas kernels and AOT-lowered by
+``aot.py`` to HLO text that the Rust runtime executes via PJRT:
+
+- ``sort_and_partition`` — the map-task hot path (paper §2.3): sort one
+  input block by key, and compute the offsets that slice the sorted block
+  into W worker ranges.
+- ``merge_and_partition`` — the merge/reduce-task hot path (paper
+  §2.3–2.4): merge R pre-sorted runs and compute partition offsets of the
+  result (merge tasks slice into R/W reducer ranges; reduce tasks pass
+  sentinel cuts and ignore the offsets).
+
+Everything is shape-static: the L3 coordinator pads records with u64::MAX
+sentinel keys and cut arrays with u64::MAX sentinel cuts (see kernel module
+docstrings for why sentinels are sound).
+
+Python never runs at request time — these functions exist only to be
+lowered once by ``make artifacts``.
+"""
+
+from __future__ import annotations
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+
+from .kernels import merge as merge_kernel  # noqa: E402
+from .kernels import partition as partition_kernel  # noqa: E402
+from .kernels import sort as sort_kernel  # noqa: E402
+
+
+def sort_and_partition(keys, vals, cuts):
+    """Map-task graph.
+
+    Args:
+      keys: u64[N] partition keys (N a power of two; padded with u64::MAX).
+      vals: u32[N] payload indices (unique; identity iota from the caller).
+      cuts: u64[C] interior range cut points (padded with u64::MAX).
+
+    Returns:
+      (sorted_keys: u64[N], perm: u32[N], offs: u32[C]) where
+      offs[c] = #{keys < cuts[c]}.
+    """
+    sorted_keys, perm = sort_kernel.sort_pairs(keys, vals)
+    offs = partition_kernel.partition_offsets(sorted_keys, cuts)
+    return sorted_keys, perm, offs
+
+
+def merge_and_partition(keys, vals, cuts):
+    """Merge/reduce-task graph.
+
+    Args:
+      keys: u64[R, L] — R ascending-sorted runs of length L (powers of two,
+        sentinel-padded).
+      vals: u32[R, L] payload indices, unique across the whole array.
+      cuts: u64[C] interior cut points (sentinel-padded).
+
+    Returns:
+      (merged_keys: u64[R*L], perm: u32[R*L], offs: u32[C]).
+    """
+    merged_keys, perm = merge_kernel.merge_runs(keys, vals)
+    offs = partition_kernel.partition_offsets(merged_keys, cuts)
+    return merged_keys, perm, offs
+
+
+def sort_and_partition_spec(n: int, c: int):
+    """Example-argument specs for AOT lowering of ``sort_and_partition``."""
+    return (
+        jax.ShapeDtypeStruct((n,), jnp.uint64),
+        jax.ShapeDtypeStruct((n,), jnp.uint32),
+        jax.ShapeDtypeStruct((c,), jnp.uint64),
+    )
+
+
+def merge_and_partition_spec(r: int, l: int, c: int):
+    """Example-argument specs for AOT lowering of ``merge_and_partition``."""
+    return (
+        jax.ShapeDtypeStruct((r, l), jnp.uint64),
+        jax.ShapeDtypeStruct((r, l), jnp.uint32),
+        jax.ShapeDtypeStruct((c,), jnp.uint64),
+    )

@@ -1,0 +1,231 @@
+"""L1 kernel correctness: Pallas kernels vs pure-numpy oracles.
+
+This is the CORE correctness signal for the compute hot path. Hypothesis
+sweeps shapes, dtype corner values (0, u64::MAX sentinels, duplicates) and
+adversarial key distributions; every case must match the oracle exactly.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import bitonic, merge, partition, ref, sort
+
+U64_MAX = np.uint64(0xFFFFFFFFFFFFFFFF)
+
+
+def _keys(rng, n, dist):
+    if dist == "uniform":
+        return rng.integers(0, 2**64, n, dtype=np.uint64)
+    if dist == "lowcard":  # many duplicates
+        return rng.integers(0, 8, n).astype(np.uint64)
+    if dist == "sorted":
+        return np.sort(rng.integers(0, 2**64, n, dtype=np.uint64))
+    if dist == "reversed":
+        return np.sort(rng.integers(0, 2**64, n, dtype=np.uint64))[::-1].copy()
+    if dist == "extremes":  # sentinel-heavy
+        return rng.choice(
+            np.array([0, 1, 2**63, U64_MAX - 1, U64_MAX], dtype=np.uint64), n
+        )
+    raise ValueError(dist)
+
+
+DISTS = ["uniform", "lowcard", "sorted", "reversed", "extremes"]
+
+
+class TestSortKernel:
+    @pytest.mark.parametrize("n", [2, 4, 64, 256, 1024])
+    @pytest.mark.parametrize("dist", DISTS)
+    def test_matches_ref(self, n, dist):
+        rng = np.random.default_rng(n * 31 + DISTS.index(dist))
+        keys = _keys(rng, n, dist)
+        vals = np.arange(n, dtype=np.uint32)
+        sk, sv = sort.sort_pairs(jnp.asarray(keys), jnp.asarray(vals))
+        rk, rv = ref.sort_pairs_ref(keys, vals)
+        np.testing.assert_array_equal(np.asarray(sk), np.asarray(rk))
+        np.testing.assert_array_equal(np.asarray(sv), np.asarray(rv))
+
+    def test_permutation_is_valid(self):
+        rng = np.random.default_rng(7)
+        keys = _keys(rng, 512, "uniform")
+        vals = np.arange(512, dtype=np.uint32)
+        sk, sv = sort.sort_pairs(jnp.asarray(keys), jnp.asarray(vals))
+        sv = np.asarray(sv)
+        assert sorted(sv.tolist()) == list(range(512))
+        # applying the permutation to keys reproduces the sorted keys
+        np.testing.assert_array_equal(keys[sv], np.asarray(sk))
+
+    def test_sentinel_padding_sorts_to_end(self):
+        rng = np.random.default_rng(11)
+        keys = _keys(rng, 100, "uniform")
+        padded = np.concatenate([keys, np.full(28, U64_MAX, dtype=np.uint64)])
+        vals = np.arange(128, dtype=np.uint32)
+        sk, sv = sort.sort_pairs(jnp.asarray(padded), jnp.asarray(vals))
+        sk, sv = np.asarray(sk), np.asarray(sv)
+        # all sentinels land in the tail (some real keys could be MAX too,
+        # but not with this seed)
+        assert (sk[100:] == U64_MAX).all()
+        assert (np.sort(sv[100:]) == np.arange(100, 128)).all()
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        logn=st.integers(min_value=1, max_value=9),
+        seed=st.integers(min_value=0, max_value=2**31),
+        dist=st.sampled_from(DISTS),
+    )
+    def test_hypothesis_sweep(self, logn, seed, dist):
+        n = 1 << logn
+        rng = np.random.default_rng(seed)
+        keys = _keys(rng, n, dist)
+        vals = rng.permutation(n).astype(np.uint32)
+        sk, sv = sort.sort_pairs(jnp.asarray(keys), jnp.asarray(vals))
+        rk, rv = ref.sort_pairs_ref(keys, vals)
+        np.testing.assert_array_equal(np.asarray(sk), np.asarray(rk))
+        np.testing.assert_array_equal(np.asarray(sv), np.asarray(rv))
+
+    def test_non_power_of_two_rejected(self):
+        keys = jnp.zeros((100,), dtype=jnp.uint64)
+        vals = jnp.zeros((100,), dtype=jnp.uint32)
+        with pytest.raises(ValueError):
+            sort.sort_pairs(keys, vals)
+
+
+class TestPartitionKernel:
+    @pytest.mark.parametrize("n", [2, 256, 4096])
+    @pytest.mark.parametrize("c", [1, 16, 64])
+    def test_matches_ref(self, n, c):
+        rng = np.random.default_rng(n + c)
+        keys = np.sort(rng.integers(0, 2**64, n, dtype=np.uint64))
+        cuts = np.sort(rng.integers(0, 2**64, c, dtype=np.uint64))
+        offs = partition.partition_offsets(jnp.asarray(keys), jnp.asarray(cuts))
+        roffs = ref.partition_offsets_ref(keys, cuts)
+        np.testing.assert_array_equal(np.asarray(offs), np.asarray(roffs))
+
+    def test_cut_below_all_keys(self):
+        keys = np.sort(np.random.default_rng(1).integers(
+            100, 2**64, 64, dtype=np.uint64))
+        cuts = np.array([0, 1, 50], dtype=np.uint64)
+        offs = partition.partition_offsets(jnp.asarray(keys), jnp.asarray(cuts))
+        np.testing.assert_array_equal(np.asarray(offs), [0, 0, 0])
+
+    def test_cut_above_all_keys(self):
+        keys = np.sort(np.random.default_rng(2).integers(
+            0, 2**32, 64, dtype=np.uint64))
+        cuts = np.array([2**40, U64_MAX], dtype=np.uint64)
+        offs = partition.partition_offsets(jnp.asarray(keys), jnp.asarray(cuts))
+        np.testing.assert_array_equal(np.asarray(offs), [64, 64])
+
+    def test_sentinel_cuts_ignore_sentinel_keys(self):
+        # padded block: 50 real keys + 14 sentinels; sentinel cut (u64::MAX)
+        # must report only the 50 real keys (key < MAX).
+        rng = np.random.default_rng(3)
+        keys = np.sort(rng.integers(0, 2**63, 50, dtype=np.uint64))
+        padded = np.concatenate([keys, np.full(14, U64_MAX, dtype=np.uint64)])
+        cuts = np.full(8, U64_MAX, dtype=np.uint64)
+        offs = partition.partition_offsets(
+            jnp.asarray(padded), jnp.asarray(cuts))
+        np.testing.assert_array_equal(np.asarray(offs), np.full(8, 50))
+
+    def test_cuts_equal_to_keys_are_exclusive(self):
+        keys = np.array([10, 20, 20, 30], dtype=np.uint64)
+        cuts = np.array([10, 20, 21, 30, 31], dtype=np.uint64)
+        offs = partition.partition_offsets(jnp.asarray(keys), jnp.asarray(cuts))
+        np.testing.assert_array_equal(np.asarray(offs), [0, 1, 3, 3, 4])
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        logn=st.integers(min_value=1, max_value=10),
+        c=st.integers(min_value=1, max_value=80),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_hypothesis_sweep(self, logn, c, seed):
+        n = 1 << logn
+        rng = np.random.default_rng(seed)
+        keys = np.sort(rng.integers(0, 2**64, n, dtype=np.uint64))
+        cuts = np.sort(rng.integers(0, 2**64, c, dtype=np.uint64))
+        offs = partition.partition_offsets(jnp.asarray(keys), jnp.asarray(cuts))
+        roffs = ref.partition_offsets_ref(keys, cuts)
+        np.testing.assert_array_equal(np.asarray(offs), np.asarray(roffs))
+
+
+class TestMergeKernel:
+    @pytest.mark.parametrize("r,l", [(2, 4), (4, 16), (8, 32), (16, 64)])
+    @pytest.mark.parametrize("dist", ["uniform", "lowcard", "extremes"])
+    def test_matches_ref(self, r, l, dist):
+        rng = np.random.default_rng(r * l)
+        keys = np.sort(
+            _keys(rng, r * l, dist).reshape(r, l), axis=1)
+        vals = rng.permutation(r * l).astype(np.uint32).reshape(r, l)
+        # rows must be sorted by (key, val): sort vals within equal keys
+        order = np.lexsort((vals, keys), axis=1)
+        keys = np.take_along_axis(keys, order, axis=1)
+        vals = np.take_along_axis(vals, order, axis=1)
+        ok, ov = merge.merge_runs(jnp.asarray(keys), jnp.asarray(vals))
+        gk, gv = ref.merge_runs_ref(keys, vals)
+        np.testing.assert_array_equal(np.asarray(ok), np.asarray(gk))
+        np.testing.assert_array_equal(np.asarray(ov), np.asarray(gv))
+
+    def test_sentinel_runs(self):
+        # padding a 3-run merge to r=4 with an all-sentinel run
+        rng = np.random.default_rng(5)
+        keys = np.sort(rng.integers(0, 2**63, (3, 16), dtype=np.uint64), axis=1)
+        pad = np.full((1, 16), U64_MAX, dtype=np.uint64)
+        keys = np.vstack([keys, pad])
+        vals = np.arange(64, dtype=np.uint32).reshape(4, 16)
+        ok, ov = merge.merge_runs(jnp.asarray(keys), jnp.asarray(vals))
+        ok = np.asarray(ok)
+        assert (ok[48:] == U64_MAX).all()
+        assert (ok[:48] < U64_MAX).all()
+        assert (np.diff(ok.astype(object)) >= 0).all()
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        logr=st.integers(min_value=0, max_value=4),
+        logl=st.integers(min_value=1, max_value=6),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_hypothesis_sweep(self, logr, logl, seed):
+        r, l = 1 << logr, 1 << logl
+        rng = np.random.default_rng(seed)
+        keys = rng.integers(0, 2**64, (r, l), dtype=np.uint64)
+        vals = rng.permutation(r * l).astype(np.uint32).reshape(r, l)
+        order = np.lexsort((vals, keys), axis=1)
+        keys = np.take_along_axis(keys, order, axis=1)
+        vals = np.take_along_axis(vals, order, axis=1)
+        ok, ov = merge.merge_runs(jnp.asarray(keys), jnp.asarray(vals))
+        gk, gv = ref.merge_runs_ref(keys, vals)
+        np.testing.assert_array_equal(np.asarray(ok), np.asarray(gk))
+        np.testing.assert_array_equal(np.asarray(ov), np.asarray(gv))
+
+
+class TestBitonicPrimitives:
+    def test_compare_exchange_ascending(self):
+        keys = jnp.asarray(np.array([4, 1, 3, 2], dtype=np.uint64))
+        vals = jnp.asarray(np.arange(4, dtype=np.uint32))
+        k, v = bitonic.compare_exchange(keys, vals, 1, None)
+        np.testing.assert_array_equal(np.asarray(k), [1, 4, 2, 3])
+        np.testing.assert_array_equal(np.asarray(v), [1, 0, 3, 2])
+
+    def test_compare_exchange_ties_break_on_vals(self):
+        keys = jnp.asarray(np.array([5, 5], dtype=np.uint64))
+        vals = jnp.asarray(np.array([9, 3], dtype=np.uint32))
+        k, v = bitonic.compare_exchange(keys, vals, 1, None)
+        np.testing.assert_array_equal(np.asarray(v), [3, 9])
+
+    def test_log2_rejects_non_powers(self):
+        for bad in [0, 3, 6, 100]:
+            with pytest.raises(ValueError):
+                bitonic._log2(bad)
+
+    def test_stage_count_formulas(self):
+        assert sort.compare_exchange_stages(2) == 1
+        assert sort.compare_exchange_stages(1024) == 55
+        assert merge.compare_exchange_stages(1, 8) == 0
+        assert merge.compare_exchange_stages(2, 8) == 4
+        # merging happens in log2(r) rounds of growing sequences
+        assert merge.compare_exchange_stages(4, 4) == 3 + 4

@@ -1,0 +1,107 @@
+"""L2 graph tests: sort_and_partition / merge_and_partition composition.
+
+These exercise exactly the contract the Rust runtime relies on: sentinel
+padding semantics, permutation validity, and offset/slice agreement.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+U64_MAX = np.uint64(0xFFFFFFFFFFFFFFFF)
+
+
+def _worker_cuts(w: int, c: int) -> np.ndarray:
+    """Interior cut points for w equal u64 ranges, sentinel-padded to c."""
+    step = 2**64 // w
+    cuts = np.array([(i + 1) * step for i in range(w - 1)], dtype=np.uint64)
+    pad = np.full(c - len(cuts), U64_MAX, dtype=np.uint64)
+    return np.concatenate([cuts, pad])
+
+
+class TestSortAndPartition:
+    @pytest.mark.parametrize("n,w", [(256, 4), (1024, 8), (256, 40)])
+    def test_end_to_end(self, n, w):
+        rng = np.random.default_rng(n + w)
+        n_valid = n - n // 8
+        keys = rng.integers(0, 2**64, n_valid, dtype=np.uint64)
+        padded = np.concatenate(
+            [keys, np.full(n - n_valid, U64_MAX, dtype=np.uint64)])
+        vals = np.arange(n, dtype=np.uint32)
+        cuts = _worker_cuts(w, 64)
+        sk, perm, offs = model.sort_and_partition(
+            jnp.asarray(padded), jnp.asarray(vals), jnp.asarray(cuts))
+        sk, perm, offs = map(np.asarray, (sk, perm, offs))
+        # keys sorted, permutation valid
+        assert (np.diff(sk.astype(object)) >= 0).all()
+        np.testing.assert_array_equal(padded[perm], sk)
+        # slice [offs[i-1], offs[i]) contains exactly the keys in range i
+        bounds = np.concatenate([[0], cuts[: w - 1], [2**64]])
+        full_offs = np.concatenate([[0], offs[: w - 1], [n_valid]])
+        for i in range(w):
+            lo, hi = int(full_offs[i]), int(full_offs[i + 1])
+            seg = sk[lo:hi]
+            assert (seg.astype(object) >= int(bounds[i])).all()
+            assert (seg.astype(object) < int(bounds[i + 1])).all()
+        # every real key accounted for
+        assert int(full_offs[-1]) == n_valid
+
+    def test_matches_ref_pipeline(self):
+        rng = np.random.default_rng(77)
+        n = 512
+        keys = rng.integers(0, 2**64, n, dtype=np.uint64)
+        vals = np.arange(n, dtype=np.uint32)
+        cuts = _worker_cuts(8, 64)
+        sk, perm, offs = model.sort_and_partition(
+            jnp.asarray(keys), jnp.asarray(vals), jnp.asarray(cuts))
+        rk, rv = ref.sort_pairs_ref(keys, vals)
+        roffs = ref.partition_offsets_ref(np.asarray(rk), cuts)
+        np.testing.assert_array_equal(np.asarray(sk), np.asarray(rk))
+        np.testing.assert_array_equal(np.asarray(perm), np.asarray(rv))
+        np.testing.assert_array_equal(np.asarray(offs), np.asarray(roffs))
+
+
+class TestMergeAndPartition:
+    def test_end_to_end(self):
+        rng = np.random.default_rng(9)
+        r, l = 8, 64
+        keys = np.sort(rng.integers(0, 2**64, (r, l), dtype=np.uint64), axis=1)
+        vals = np.arange(r * l, dtype=np.uint32).reshape(r, l)
+        cuts = _worker_cuts(16, 64)
+        mk, perm, offs = model.merge_and_partition(
+            jnp.asarray(keys), jnp.asarray(vals), jnp.asarray(cuts))
+        mk, perm, offs = map(np.asarray, (mk, perm, offs))
+        assert (np.diff(mk.astype(object)) >= 0).all()
+        np.testing.assert_array_equal(keys.reshape(-1)[perm], mk)
+        roffs = ref.partition_offsets_ref(mk, cuts)
+        np.testing.assert_array_equal(offs, np.asarray(roffs))
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        logr=st.integers(min_value=1, max_value=3),
+        logl=st.integers(min_value=2, max_value=6),
+        w=st.integers(min_value=2, max_value=32),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_hypothesis_sweep(self, logr, logl, w, seed):
+        r, l = 1 << logr, 1 << logl
+        rng = np.random.default_rng(seed)
+        keys = np.sort(rng.integers(0, 2**64, (r, l), dtype=np.uint64), axis=1)
+        vals = rng.permutation(r * l).astype(np.uint32).reshape(r, l)
+        order = np.lexsort((vals, keys), axis=1)
+        keys = np.take_along_axis(keys, order, axis=1)
+        vals = np.take_along_axis(vals, order, axis=1)
+        cuts = _worker_cuts(w, 64)
+        mk, perm, offs = model.merge_and_partition(
+            jnp.asarray(keys), jnp.asarray(vals), jnp.asarray(cuts))
+        gk, gv = ref.merge_runs_ref(keys, vals)
+        np.testing.assert_array_equal(np.asarray(mk), np.asarray(gk))
+        np.testing.assert_array_equal(np.asarray(perm), np.asarray(gv))

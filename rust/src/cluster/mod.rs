@@ -1,0 +1,112 @@
+//! Cluster resource model (paper §3.1 "Environment Setup").
+//!
+//! Describes the testbed whose constants drive both the real executor's
+//! policies (map parallelism = ¾ of vCPUs, merge threshold, buffer sizes)
+//! and the discrete-event simulator's rates (S3 / NIC / NVMe bandwidth).
+//! The defaults are the paper's measured values: 40×i4i.4xlarge workers
+//! (16 vCPU, 128 GiB, 3.75 TB NVMe at 2.9/2.2 GB/s, 25 Gbps NIC) plus an
+//! r6i.2xlarge master.
+
+/// One node type's resources.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NodeSpec {
+    pub vcpus: u32,
+    pub mem_bytes: u64,
+    /// Directly-attached NVMe sequential read bandwidth (bytes/s).
+    pub disk_read_bps: f64,
+    /// NVMe sequential write bandwidth (bytes/s).
+    pub disk_write_bps: f64,
+    /// NIC bandwidth (bytes/s, full duplex per direction).
+    pub net_bps: f64,
+    /// Sustained S3 throughput achievable from this node (bytes/s).
+    /// Derived from the paper's map-task timing: 2 GB downloaded in ~15 s
+    /// ≈ 133 MB/s effective per task; node-level ceiling is the NIC.
+    pub s3_bps_per_conn: f64,
+}
+
+impl NodeSpec {
+    /// i4i.4xlarge: 16 vCPU, 128 GiB, 3.75 TB NVMe (2.9/2.2 GB/s), 25 Gbps.
+    pub fn i4i_4xlarge() -> Self {
+        NodeSpec {
+            vcpus: 16,
+            mem_bytes: 128 * (1 << 30),
+            disk_read_bps: 2.9e9,
+            disk_write_bps: 2.2e9,
+            net_bps: 25.0e9 / 8.0,
+            s3_bps_per_conn: 2.0e9 / 15.0, // paper: 2 GB in ~15 s
+        }
+    }
+
+    /// r6i.2xlarge master: 8 vCPU, 64 GiB (no instance NVMe).
+    pub fn r6i_2xlarge() -> Self {
+        NodeSpec {
+            vcpus: 8,
+            mem_bytes: 64 * (1 << 30),
+            disk_read_bps: 0.25e9, // EBS gp3 baseline-ish
+            disk_write_bps: 0.25e9,
+            net_bps: 12.5e9 / 8.0,
+            s3_bps_per_conn: 2.0e9 / 15.0,
+        }
+    }
+}
+
+/// The whole compute cluster.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterSpec {
+    pub master: NodeSpec,
+    pub worker: NodeSpec,
+    pub n_workers: usize,
+}
+
+impl ClusterSpec {
+    /// The paper's CloudSort testbed: 1×r6i.2xlarge + 40×i4i.4xlarge.
+    pub fn cloudsort() -> Self {
+        ClusterSpec {
+            master: NodeSpec::r6i_2xlarge(),
+            worker: NodeSpec::i4i_4xlarge(),
+            n_workers: 40,
+        }
+    }
+
+    /// A scaled-down cluster with `n` workers of the paper's worker type.
+    pub fn scaled(n: usize) -> Self {
+        ClusterSpec {
+            n_workers: n,
+            ..Self::cloudsort()
+        }
+    }
+
+    /// Map/merge parallelism per node: ¾ of the vCPU count (paper §2.3).
+    pub fn task_parallelism(&self) -> usize {
+        (self.worker.vcpus as usize * 3) / 4
+    }
+
+    /// Total concurrent task slots across all workers.
+    pub fn total_slots(&self) -> usize {
+        self.task_parallelism() * self.n_workers
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_constants() {
+        let c = ClusterSpec::cloudsort();
+        assert_eq!(c.n_workers, 40);
+        assert_eq!(c.worker.vcpus, 16);
+        // ¾ of 16 vCPUs = 12 concurrent map tasks per node (paper §2.3)
+        assert_eq!(c.task_parallelism(), 12);
+        assert_eq!(c.total_slots(), 480);
+        // 25 Gbps NIC in bytes/s
+        assert!((c.worker.net_bps - 3.125e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn scaled_preserves_node_type() {
+        let c = ClusterSpec::scaled(4);
+        assert_eq!(c.n_workers, 4);
+        assert_eq!(c.worker, NodeSpec::i4i_4xlarge());
+    }
+}

@@ -1,0 +1,213 @@
+//! Config file support: a TOML-subset parser (`key = value` pairs under
+//! `[section]` headers) mapped onto [`JobSpec`] — the offline environment
+//! has no toml/serde crates, and the subset below covers the launcher's
+//! needs. See `examples/cloudsort.toml` in the README for the format.
+
+use std::collections::BTreeMap;
+
+use crate::cluster::ClusterSpec;
+use crate::coordinator::JobSpec;
+
+/// Parsed config: `sections["job"]["total_bytes"] = "1073741824"`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Config {
+    pub sections: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+impl Config {
+    /// Parse the TOML subset: sections, `k = v`, `#` comments, bare or
+    /// quoted values. Unknown syntax is an error (fail loudly).
+    pub fn parse(text: &str) -> Result<Config, String> {
+        let mut cfg = Config::default();
+        let mut section = String::from("");
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: unterminated section", lineno + 1))?;
+                section = name.trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let v = v.trim().trim_matches('"').to_string();
+            cfg.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(k.trim().to_string(), v);
+        }
+        Ok(cfg)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section)?.get(key).map(|s| s.as_str())
+    }
+
+    fn get_u64(&self, section: &str, key: &str) -> Result<Option<u64>, String> {
+        match self.get(section, key) {
+            None => Ok(None),
+            Some(v) => parse_bytes(v)
+                .map(Some)
+                .map_err(|e| format!("[{section}] {key}: {e}")),
+        }
+    }
+
+    fn get_bool(&self, section: &str, key: &str) -> Result<Option<bool>, String> {
+        match self.get(section, key) {
+            None => Ok(None),
+            Some("true") => Ok(Some(true)),
+            Some("false") => Ok(Some(false)),
+            Some(v) => Err(format!("[{section}] {key}: bad bool '{v}'")),
+        }
+    }
+
+    /// Build a [`JobSpec`]: start from `scaled(total_bytes, workers)` and
+    /// apply explicit overrides.
+    pub fn to_job_spec(&self) -> Result<JobSpec, String> {
+        let total = self
+            .get_u64("job", "total_bytes")?
+            .ok_or("[job] total_bytes is required")?;
+        let workers = self.get_u64("cluster", "workers")?.unwrap_or(4) as usize;
+        let mut spec = JobSpec::scaled(total, workers);
+        if let Some(m) = self.get_u64("job", "input_partitions")? {
+            spec.n_input_partitions = m as usize;
+        }
+        if let Some(r) = self.get_u64("job", "output_partitions")? {
+            spec.n_output_partitions = r as usize;
+        }
+        if let Some(s) = self.get_u64("job", "seed")? {
+            spec.seed = s;
+        }
+        if let Some(t) = self.get_u64("shuffle", "merge_threshold_blocks")? {
+            spec.merge_threshold_blocks = t as usize;
+        }
+        if let Some(b) = self.get_bool("shuffle", "backpressure")? {
+            spec.backpressure = b;
+        }
+        if let Some(m) = self.get_u64("shuffle", "max_buffered_blocks")? {
+            spec.max_buffered_blocks = m as usize;
+        }
+        if let Some(b) = self.get_u64("s3", "buckets")? {
+            spec.s3_buckets = b as usize;
+        }
+        if let Some(c) = self.get_u64("store", "capacity_per_node")? {
+            spec.store_capacity_per_node = c;
+        }
+        if let Some(v) = self.get_u64("cluster", "vcpus_per_worker")? {
+            spec.cluster = ClusterSpec {
+                worker: crate::cluster::NodeSpec {
+                    vcpus: v as u32,
+                    ..spec.cluster.worker
+                },
+                ..spec.cluster
+            };
+        }
+        spec.check()?;
+        Ok(spec)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // naive: no '#' inside quoted strings in our subset
+    match line.find('#') {
+        Some(i) => &line[..i],
+        None => line,
+    }
+}
+
+/// Parse `1024`, `64KiB`, `16MiB`, `2GiB`, `1TiB`, or `2GB` (decimal).
+pub fn parse_bytes(s: &str) -> Result<u64, String> {
+    let s = s.trim();
+    let split = s
+        .find(|c: char| !c.is_ascii_digit())
+        .unwrap_or(s.len());
+    let (num, unit) = s.split_at(split);
+    let n: u64 = num.parse().map_err(|_| format!("bad number '{s}'"))?;
+    let mult = match unit.trim() {
+        "" | "B" => 1,
+        "KiB" => 1 << 10,
+        "MiB" => 1 << 20,
+        "GiB" => 1 << 30,
+        "TiB" => 1 << 40,
+        "KB" => 1_000,
+        "MB" => 1_000_000,
+        "GB" => 1_000_000_000,
+        "TB" => 1_000_000_000_000,
+        other => return Err(format!("unknown unit '{other}'")),
+    };
+    Ok(n * mult)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# CloudSort scaled run
+[job]
+total_bytes = "256MiB"
+seed = 7
+
+[cluster]
+workers = 8
+
+[shuffle]
+merge_threshold_blocks = 10
+backpressure = true
+"#;
+
+    #[test]
+    fn parses_sample() {
+        let cfg = Config::parse(SAMPLE).unwrap();
+        assert_eq!(cfg.get("job", "seed"), Some("7"));
+        let spec = cfg.to_job_spec().unwrap();
+        assert_eq!(spec.total_bytes, 256 << 20);
+        assert_eq!(spec.n_workers(), 8);
+        assert_eq!(spec.merge_threshold_blocks, 10);
+        assert_eq!(spec.seed, 7);
+        assert!(spec.backpressure);
+    }
+
+    #[test]
+    fn missing_required_key_errors() {
+        let cfg = Config::parse("[job]\n").unwrap();
+        assert!(cfg.to_job_spec().is_err());
+    }
+
+    #[test]
+    fn bad_syntax_errors() {
+        assert!(Config::parse("[job\n").is_err());
+        assert!(Config::parse("just words\n").is_err());
+    }
+
+    #[test]
+    fn parse_bytes_units() {
+        assert_eq!(parse_bytes("123").unwrap(), 123);
+        assert_eq!(parse_bytes("2GiB").unwrap(), 2 << 30);
+        assert_eq!(parse_bytes("2GB").unwrap(), 2_000_000_000);
+        assert_eq!(parse_bytes("100TB").unwrap(), 100_000_000_000_000);
+        assert!(parse_bytes("5parsecs").is_err());
+    }
+
+    #[test]
+    fn comments_and_quotes() {
+        let cfg =
+            Config::parse("[a]\nk = \"v\" # trailing\n# full line\n").unwrap();
+        assert_eq!(cfg.get("a", "k"), Some("v"));
+    }
+
+    #[test]
+    fn invalid_spec_rejected() {
+        let cfg = Config::parse(
+            "[job]\ntotal_bytes = 1MiB\noutput_partitions = 7\n[cluster]\nworkers = 4\n",
+        )
+        .unwrap();
+        assert!(cfg.to_job_spec().is_err()); // 7 not a multiple of 4
+    }
+}

@@ -1,0 +1,116 @@
+//! Input/output manifests (paper §3.2): the input manifest locates every
+//! input partition on S3 and carries the total input checksum; the output
+//! manifest locates every output partition in reducer order for the
+//! validation pass. Fixed binary encoding for the task-return path.
+
+use crate::sortlib::valsort::PartitionSummary;
+use crate::sortlib::{Key, KEY_SIZE};
+
+/// Location of one partition on (simulated) S3.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PartitionLoc {
+    pub bucket: String,
+    pub key: String,
+    pub bytes: u64,
+}
+
+/// The input manifest: partition locations + aggregate checksum.
+#[derive(Clone, Debug, Default)]
+pub struct InputManifest {
+    pub partitions: Vec<PartitionLoc>,
+    pub total_records: u64,
+    pub total_checksum: u64,
+}
+
+/// The output manifest: partitions in global reducer order.
+#[derive(Clone, Debug, Default)]
+pub struct OutputManifest {
+    pub partitions: Vec<PartitionLoc>,
+}
+
+// --- binary codec for task returns -----------------------------------
+
+/// Encode (bytes, checksum, records) — a generation task's return.
+pub fn encode_gen_result(bytes: u64, checksum: u64, records: u64) -> Vec<u8> {
+    let mut out = Vec::with_capacity(24);
+    out.extend_from_slice(&bytes.to_le_bytes());
+    out.extend_from_slice(&checksum.to_le_bytes());
+    out.extend_from_slice(&records.to_le_bytes());
+    out
+}
+
+pub fn decode_gen_result(buf: &[u8]) -> (u64, u64, u64) {
+    (
+        u64::from_le_bytes(buf[0..8].try_into().unwrap()),
+        u64::from_le_bytes(buf[8..16].try_into().unwrap()),
+        u64::from_le_bytes(buf[16..24].try_into().unwrap()),
+    )
+}
+
+/// Encode a [`PartitionSummary`] — a validation task's return.
+pub fn encode_summary(s: &PartitionSummary) -> Vec<u8> {
+    let mut out = Vec::with_capacity(2 + 2 * KEY_SIZE + 4 * 8);
+    out.extend_from_slice(&s.records.to_le_bytes());
+    out.push(s.first_key.is_some() as u8);
+    out.extend_from_slice(&s.first_key.unwrap_or_default());
+    out.extend_from_slice(&s.last_key.unwrap_or_default());
+    out.extend_from_slice(&s.checksum.to_le_bytes());
+    out.extend_from_slice(&s.unordered.to_le_bytes());
+    out.extend_from_slice(&s.duplicates.to_le_bytes());
+    out
+}
+
+pub fn decode_summary(buf: &[u8]) -> PartitionSummary {
+    let records = u64::from_le_bytes(buf[0..8].try_into().unwrap());
+    let has_keys = buf[8] != 0;
+    let mut first: Key = [0; KEY_SIZE];
+    let mut last: Key = [0; KEY_SIZE];
+    first.copy_from_slice(&buf[9..9 + KEY_SIZE]);
+    last.copy_from_slice(&buf[9 + KEY_SIZE..9 + 2 * KEY_SIZE]);
+    let rest = &buf[9 + 2 * KEY_SIZE..];
+    PartitionSummary {
+        records,
+        first_key: has_keys.then_some(first),
+        last_key: has_keys.then_some(last),
+        checksum: u64::from_le_bytes(rest[0..8].try_into().unwrap()),
+        unordered: u64::from_le_bytes(rest[8..16].try_into().unwrap()),
+        duplicates: u64::from_le_bytes(rest[16..24].try_into().unwrap()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gen_result_roundtrip() {
+        let enc = encode_gen_result(1 << 40, 0xDEAD_BEEF, 12345);
+        assert_eq!(decode_gen_result(&enc), (1 << 40, 0xDEAD_BEEF, 12345));
+    }
+
+    #[test]
+    fn summary_roundtrip() {
+        let s = PartitionSummary {
+            records: 42,
+            first_key: Some([1; KEY_SIZE]),
+            last_key: Some([9; KEY_SIZE]),
+            checksum: 77,
+            unordered: 0,
+            duplicates: 3,
+        };
+        assert_eq!(decode_summary(&encode_summary(&s)), s);
+    }
+
+    #[test]
+    fn summary_roundtrip_empty() {
+        let s = PartitionSummary {
+            records: 0,
+            first_key: None,
+            last_key: None,
+            checksum: 0,
+            unordered: 0,
+            duplicates: 0,
+        };
+        assert_eq!(decode_summary(&encode_summary(&s)), s);
+    }
+}

@@ -1,0 +1,210 @@
+//! Per-worker merge controller (paper §2.3).
+//!
+//! Each worker node has a merge controller that accumulates incoming map
+//! blocks until a threshold (paper: 40 blocks ≈ 2 GB), then launches a
+//! merge task that merges the sorted blocks and partitions the result
+//! into R1 merged blocks, one per reducer on the node. When merge
+//! parallelism is saturated and the buffer is full, the controller "holds
+//! off acknowledging" map blocks — back pressure that keeps map, shuffle
+//! and merge in sync.
+//!
+//! Map outputs arrive as *futures* (ObjectRefs routed at submit time);
+//! [`MergeController::poll`] promotes the ones whose data has been
+//! produced ("received" in the paper's sense) into the buffer and
+//! launches merge tasks at the threshold. Backpressure is surfaced to the
+//! driver's map-submission loop through [`MergeController::backlog`].
+
+use std::sync::Arc;
+
+use crate::distfut::{ObjectRef, Placement, Runtime, TaskHandle, TaskSpec};
+
+/// Builds the merge TaskSpec for a batch of blocks on a node.
+/// Arguments: (node, batch_index, blocks).
+pub type MergeTaskFactory =
+    Arc<dyn Fn(usize, usize, Vec<ObjectRef>) -> TaskSpec + Send + Sync>;
+
+/// State of one worker's merge controller.
+pub struct MergeController {
+    /// Worker node this controller belongs to.
+    pub node: usize,
+    /// Routed map blocks whose data has not been produced yet.
+    pending: Vec<ObjectRef>,
+    /// Received map blocks not yet covered by a merge task.
+    buffered: Vec<ObjectRef>,
+    /// Merge tasks launched: their output refs (R1 merged blocks each).
+    pub merged_outputs: Vec<Vec<ObjectRef>>,
+    handles: Vec<TaskHandle>,
+    /// Blocks per merge (threshold; paper: 40).
+    threshold: usize,
+    /// Peak observed backlog (memory-exposure metric; ablation A1).
+    pub peak_backlog: usize,
+    make_task: MergeTaskFactory,
+}
+
+impl MergeController {
+    pub fn new(node: usize, threshold: usize, make_task: MergeTaskFactory) -> Self {
+        MergeController {
+            node,
+            pending: Vec::new(),
+            buffered: Vec::new(),
+            merged_outputs: Vec::new(),
+            handles: Vec::new(),
+            threshold: threshold.max(1),
+            peak_backlog: 0,
+            make_task,
+        }
+    }
+
+    /// Route one map block (a future) to this controller.
+    pub fn on_map_block(&mut self, block: ObjectRef) {
+        self.pending.push(block);
+    }
+
+    /// Promote produced blocks into the buffer and launch merges at the
+    /// threshold. Called from the driver's control loop.
+    pub fn poll(&mut self, rt: &Runtime) {
+        self.peak_backlog = self.peak_backlog.max(self.backlog());
+        let mut i = 0;
+        while i < self.pending.len() {
+            if rt.object_ready(&self.pending[i]) {
+                self.buffered.push(self.pending.swap_remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        while self.buffered.len() >= self.threshold {
+            let batch: Vec<ObjectRef> =
+                self.buffered.drain(..self.threshold).collect();
+            self.launch(rt, batch);
+        }
+    }
+
+    /// Launch a merge over any remaining blocks (tail batch at stage end).
+    pub fn flush(&mut self, rt: &Runtime) {
+        self.poll(rt);
+        // tail: include still-pending blocks too — the scheduler will wait
+        // for them; at stage end the driver knows no more blocks come.
+        let mut batch = std::mem::take(&mut self.buffered);
+        batch.extend(std::mem::take(&mut self.pending));
+        if !batch.is_empty() {
+            self.launch(rt, batch);
+        }
+    }
+
+    fn launch(&mut self, rt: &Runtime, batch: Vec<ObjectRef>) {
+        let spec = (self.make_task)(self.node, self.merged_outputs.len(), batch);
+        debug_assert!(
+            matches!(spec.placement, Placement::Node(n) if n == self.node)
+        );
+        let (outputs, handle) = rt.submit(spec);
+        self.merged_outputs.push(outputs);
+        self.handles.push(handle);
+    }
+
+    /// Buffered blocks not yet covered by a merge task (the controller's
+    /// "in-memory buffer" of §2.3). Routed-but-unproduced blocks count:
+    /// their maps are in flight and their data will land here.
+    pub fn backlog(&self) -> usize {
+        self.pending.len() + self.buffered.len()
+    }
+
+    /// Merge tasks currently in flight.
+    pub fn merges_in_flight(&self) -> usize {
+        self.handles.iter().filter(|h| !h.is_done()).count()
+    }
+
+    /// §2.3 backpressure predicate: merge parallelism saturated AND the
+    /// buffer filled past `max_buffered` blocks.
+    pub fn saturated(&self, merge_parallelism: usize, max_buffered: usize) -> bool {
+        self.merges_in_flight() >= merge_parallelism
+            && self.backlog() >= max_buffered
+    }
+
+    /// Merge tasks launched so far.
+    pub fn merges_launched(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Wait for all launched merge tasks.
+    pub fn wait_all(&self) -> Result<(), crate::distfut::DfError> {
+        crate::distfut::future::wait_all(&self.handles)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distfut::{task_fn, RuntimeOptions};
+
+    fn noop_factory(returns: usize) -> MergeTaskFactory {
+        Arc::new(move |node, batch, blocks| TaskSpec {
+            name: format!("merge-{node}-{batch}"),
+            placement: Placement::Node(node),
+            func: task_fn(move |_ctx| Ok(vec![vec![1u8]; returns])),
+            args: blocks,
+            num_returns: returns,
+            max_retries: 0,
+        })
+    }
+
+    #[test]
+    fn launches_merge_at_threshold() {
+        let rt = Runtime::new(RuntimeOptions::default());
+        let mut mc = MergeController::new(0, 3, noop_factory(2));
+        for i in 0..7 {
+            mc.on_map_block(rt.put(0, vec![i as u8]));
+        }
+        mc.poll(&rt);
+        // 7 ready blocks / threshold 3 → 2 merges, 1 buffered
+        assert_eq!(mc.merges_launched(), 2);
+        mc.flush(&rt); // tail
+        assert_eq!(mc.merges_launched(), 3);
+        mc.wait_all().unwrap();
+        assert_eq!(mc.merged_outputs.len(), 3);
+        assert!(mc.merged_outputs.iter().all(|o| o.len() == 2));
+    }
+
+    #[test]
+    fn unproduced_blocks_stay_pending() {
+        let rt = Runtime::new(RuntimeOptions::default());
+        let mut mc = MergeController::new(0, 1, noop_factory(1));
+        // a declared-but-never-produced object: submit a slow producer
+        let (outs, _h) = rt.submit(TaskSpec {
+            name: "slow".into(),
+            placement: Placement::Node(0),
+            func: task_fn(|_| {
+                std::thread::sleep(std::time::Duration::from_millis(50));
+                Ok(vec![vec![7]])
+            }),
+            args: vec![],
+            num_returns: 1,
+            max_retries: 0,
+        });
+        mc.on_map_block(outs.into_iter().next().unwrap());
+        mc.poll(&rt);
+        assert!(mc.backlog() >= 1);
+        std::thread::sleep(std::time::Duration::from_millis(80));
+        mc.poll(&rt);
+        assert_eq!(mc.merges_launched(), 1);
+        mc.wait_all().unwrap();
+    }
+
+    #[test]
+    fn backlog_clears_after_completion() {
+        let rt = Runtime::new(RuntimeOptions::default());
+        let mut mc = MergeController::new(0, 2, noop_factory(1));
+        mc.on_map_block(rt.put(0, vec![1]));
+        mc.on_map_block(rt.put(0, vec![2]));
+        mc.poll(&rt);
+        mc.wait_all().unwrap();
+        assert_eq!(mc.backlog(), 0);
+    }
+
+    #[test]
+    fn flush_empty_is_noop() {
+        let rt = Runtime::new(RuntimeOptions::default());
+        let mut mc = MergeController::new(0, 2, noop_factory(1));
+        mc.flush(&rt);
+        assert_eq!(mc.merges_launched(), 0);
+    }
+}

@@ -1,0 +1,206 @@
+//! Job specification and derived shuffle plan (paper §2.1–2.2).
+//!
+//! The paper's 100 TB configuration: M = 50 000 input partitions of 2 GB,
+//! W = 40 workers, R = 25 000 output partitions, R1 = R/W = 625 reducer
+//! ranges per worker, map parallelism = ¾·vCPUs = 12, merge threshold =
+//! 40 blocks (~2 GB). [`JobSpec::scaled`] shrinks the data while keeping
+//! every structural ratio, so scaled runs exercise the same control-plane
+//! decisions.
+
+use crate::cluster::ClusterSpec;
+use crate::sortlib::{reducer_cuts, worker_cuts, RECORD_SIZE};
+
+/// Full specification of a CloudSort job.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    /// Total dataset bytes (input == output for a sort).
+    pub total_bytes: u64,
+    /// Number of input partitions (paper: M = 50 000).
+    pub n_input_partitions: usize,
+    /// Number of output partitions (paper: R = 25 000; multiple of W).
+    pub n_output_partitions: usize,
+    /// Cluster description (W = n_workers).
+    pub cluster: ClusterSpec,
+    /// Merge controller threshold in buffered map blocks (paper: 40).
+    pub merge_threshold_blocks: usize,
+    /// Enable merge-controller backpressure on the map scheduler
+    /// (paper §2.3; off = ablation A1).
+    pub backpressure: bool,
+    /// Max buffered-but-unmerged blocks per worker before backpressure
+    /// pauses map submission (paper: in-memory buffer ≈ one merge batch
+    /// per merge slot).
+    pub max_buffered_blocks: usize,
+    /// Dataset RNG seed.
+    pub seed: u64,
+    /// Number of S3 buckets input/output spread over (paper: 40).
+    pub s3_buckets: usize,
+    /// distfut object-store capacity per node in bytes (drives spilling).
+    pub store_capacity_per_node: u64,
+}
+
+impl JobSpec {
+    /// The paper's exact 100 TB configuration (only runnable through the
+    /// discrete-event simulator on this testbed).
+    pub fn paper_100tb() -> JobSpec {
+        JobSpec {
+            total_bytes: 100_000_000_000_000,
+            n_input_partitions: 50_000,
+            n_output_partitions: 25_000,
+            cluster: ClusterSpec::cloudsort(),
+            merge_threshold_blocks: 40,
+            backpressure: true,
+            max_buffered_blocks: 40 * 3,
+            seed: 0x2022_11_10,
+            s3_buckets: 40,
+            store_capacity_per_node: 128 * (1 << 30),
+        }
+    }
+
+    /// A scaled configuration preserving the paper's structural ratios:
+    /// M/W = 1250 is relaxed to keep partitions >= 100 records, and
+    /// R = M/2 (the paper's ratio), rounded to a multiple of W.
+    pub fn scaled(total_bytes: u64, n_workers: usize) -> JobSpec {
+        assert!(n_workers >= 1);
+        let total_records = total_bytes / RECORD_SIZE as u64;
+        // target ~8 input partitions per worker (enough queueing to make
+        // the map scheduler interesting), min 512 records per partition
+        let target_m = (n_workers * 8) as u64;
+        let m = target_m
+            .min(total_records / 512)
+            .max(n_workers as u64)
+            .max(1);
+        // R = M/2 like the paper (25000 = 50000/2), multiple of W, >= W
+        let r1 = ((m / 2) as usize / n_workers).max(1);
+        JobSpec {
+            total_bytes,
+            n_input_partitions: m as usize,
+            n_output_partitions: r1 * n_workers,
+            cluster: ClusterSpec::scaled(n_workers),
+            merge_threshold_blocks: (n_workers).clamp(2, 40),
+            backpressure: true,
+            max_buffered_blocks: (n_workers * 3).clamp(6, 120),
+            seed: 42,
+            s3_buckets: n_workers.max(1),
+            store_capacity_per_node: 1 << 30,
+            ..Self::paper_100tb()
+        }
+    }
+
+    /// W: number of worker nodes.
+    pub fn n_workers(&self) -> usize {
+        self.cluster.n_workers
+    }
+
+    /// R1 = R / W: reducer ranges per worker.
+    pub fn reducers_per_worker(&self) -> usize {
+        self.n_output_partitions / self.n_workers()
+    }
+
+    /// Records per input partition (last partition may be short).
+    pub fn records_per_partition(&self) -> u64 {
+        let total = self.total_bytes / RECORD_SIZE as u64;
+        crate::util::div_ceil(total, self.n_input_partitions as u64)
+    }
+
+    /// Total record count.
+    pub fn total_records(&self) -> u64 {
+        self.total_bytes / RECORD_SIZE as u64
+    }
+
+    /// Interior cut points between worker ranges (W-1 values).
+    pub fn worker_cuts(&self) -> Vec<u64> {
+        worker_cuts(self.n_output_partitions, self.n_workers())
+    }
+
+    /// All interior reducer cuts (R-1 values).
+    pub fn reducer_cuts(&self) -> Vec<u64> {
+        reducer_cuts(self.n_output_partitions)
+    }
+
+    /// The R1-1 interior cuts *within* worker `w`'s range.
+    pub fn reducer_cuts_of_worker(&self, w: usize) -> Vec<u64> {
+        let all = self.reducer_cuts();
+        let r1 = self.reducers_per_worker();
+        let start = w * r1;
+        // cuts between reducers start*..start+r1 are all[start .. start+r1-1]
+        all[start..start + r1 - 1].to_vec()
+    }
+
+    /// Validate internal consistency (call before running).
+    pub fn check(&self) -> Result<(), String> {
+        if self.n_output_partitions % self.n_workers() != 0 {
+            return Err(format!(
+                "R={} must be a multiple of W={}",
+                self.n_output_partitions,
+                self.n_workers()
+            ));
+        }
+        if self.total_records() < self.n_input_partitions as u64 {
+            return Err("fewer records than input partitions".into());
+        }
+        if self.records_per_partition() * RECORD_SIZE as u64 > u32::MAX as u64 {
+            return Err("input partition exceeds 4 GiB task buffer".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_parameters() {
+        let s = JobSpec::paper_100tb();
+        assert_eq!(s.n_input_partitions, 50_000);
+        assert_eq!(s.n_output_partitions, 25_000);
+        assert_eq!(s.n_workers(), 40);
+        assert_eq!(s.reducers_per_worker(), 625);
+        assert_eq!(s.records_per_partition(), 20_000_000); // 2 GB each
+        assert_eq!(s.worker_cuts().len(), 39);
+        assert!(s.check().is_ok());
+    }
+
+    #[test]
+    fn scaled_preserves_ratios() {
+        let s = JobSpec::scaled(64 << 20, 4);
+        assert!(s.check().is_ok(), "{:?}", s.check());
+        assert_eq!(s.n_output_partitions % s.n_workers(), 0);
+        assert!(s.n_input_partitions >= s.n_workers());
+        assert!(s.records_per_partition() >= 128);
+    }
+
+    #[test]
+    fn scaled_tiny_dataset_still_valid() {
+        let s = JobSpec::scaled(1 << 20, 2); // 1 MiB over 2 workers
+        assert!(s.check().is_ok(), "{:?}", s.check());
+    }
+
+    #[test]
+    fn reducer_cuts_of_worker_partition_the_worker_range() {
+        let s = JobSpec::scaled(32 << 20, 4);
+        let wc = s.worker_cuts();
+        let r1 = s.reducers_per_worker();
+        for w in 0..s.n_workers() {
+            let cuts = s.reducer_cuts_of_worker(w);
+            assert_eq!(cuts.len(), r1 - 1);
+            // cuts lie strictly inside the worker range
+            let lo = if w == 0 { 0 } else { wc[w - 1] };
+            let hi = if w + 1 == s.n_workers() {
+                u64::MAX
+            } else {
+                wc[w]
+            };
+            for c in cuts {
+                assert!(c > lo && c < hi);
+            }
+        }
+    }
+
+    #[test]
+    fn check_rejects_bad_r() {
+        let mut s = JobSpec::scaled(16 << 20, 4);
+        s.n_output_partitions += 1;
+        assert!(s.check().is_err());
+    }
+}

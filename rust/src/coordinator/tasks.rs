@@ -1,0 +1,253 @@
+//! Task bodies of the CloudSort pipeline (paper §2.2–2.4 + §3.2).
+//!
+//! Each function builds a [`TaskSpec`] whose closure runs on the data
+//! plane. Closures capture shared handles (S3, compute backend, cuts) and
+//! return `Err(String)` on retryable failures — the distfut scheduler
+//! retries them, which is how the paper's transparent fault tolerance
+//! surfaces here.
+
+use std::sync::Arc;
+
+use crate::coordinator::manifest::{encode_gen_result, encode_summary};
+use crate::coordinator::plan::JobSpec;
+use crate::distfut::{task_fn, ObjectRef, Placement, TaskSpec};
+use crate::runtime::{self, Backend};
+use crate::s3sim::S3;
+use crate::sortlib::{
+    self, gensort, valsort, RECORD_SIZE,
+};
+use crate::util::rng::stream_at;
+
+/// Retries for tasks that touch (simulated) S3 — transient failures are
+/// expected under fault injection (paper §2.5).
+pub const S3_TASK_RETRIES: u32 = 4;
+
+/// Salt mixed into the bucket-assignment hash.
+const BUCKET_SALT: u64 = 0xB0C4E7;
+/// Salt distinguishing output-partition bucket assignment from input.
+pub const OUTPUT_SALT: u64 = 0x5EED_0007;
+
+/// Deterministic bucket choice for a partition ("randomly distribute the
+/// input and output partitions across the buckets", §3.1).
+pub fn bucket_of(seed: u64, partition: u64, n_buckets: usize) -> String {
+    let i = stream_at(seed ^ BUCKET_SALT, partition) % n_buckets as u64;
+    format!("bucket-{i:03}")
+}
+
+/// S3 key of input partition `p`.
+pub fn input_key(p: usize) -> String {
+    format!("input/part-{p:06}")
+}
+
+/// S3 key of output partition `r`.
+pub fn output_key(r: usize) -> String {
+    format!("output/part-{r:06}")
+}
+
+/// Input-generation task (gensort equivalent; §3.2 "Generating Input").
+pub fn gen_task(spec: &JobSpec, s3: &S3, p: usize) -> TaskSpec {
+    let s3 = s3.clone();
+    let seed = spec.seed;
+    let n_buckets = spec.s3_buckets;
+    let per = spec.records_per_partition();
+    let total = spec.total_records();
+    TaskSpec {
+        name: format!("gen-{p}"),
+        placement: Placement::Any,
+        func: task_fn(move |_ctx| {
+            let offset = p as u64 * per;
+            let records = per.min(total.saturating_sub(offset));
+            let buf = gensort::generate_partition(&gensort::GenSpec {
+                seed,
+                offset,
+                records,
+            });
+            let checksum = gensort::partition_checksum(&buf);
+            let bytes = buf.len() as u64;
+            s3.put(
+                &bucket_of(seed, p as u64, n_buckets),
+                &input_key(p),
+                buf,
+            )
+            .map_err(|e| e.to_string())?;
+            Ok(vec![encode_gen_result(bytes, checksum, records)])
+        }),
+        args: vec![],
+        num_returns: 1,
+        max_retries: S3_TASK_RETRIES,
+    }
+}
+
+/// Map task (§2.3): download an input partition, sort it, partition into
+/// W slices — one per worker range. Returns W record buffers.
+pub fn map_task(
+    spec: &JobSpec,
+    s3: &S3,
+    backend: &Backend,
+    worker_cuts: Arc<Vec<u64>>,
+    p: usize,
+) -> TaskSpec {
+    let s3 = s3.clone();
+    let backend = backend.clone();
+    let seed = spec.seed;
+    let n_buckets = spec.s3_buckets;
+    let w = spec.n_workers();
+    TaskSpec {
+        name: format!("map-{p}"),
+        placement: Placement::Any,
+        func: task_fn(move |_ctx| {
+            let buf = s3
+                .get(&bucket_of(seed, p as u64, n_buckets), &input_key(p))
+                .map_err(|e| e.to_string())?;
+            let keys = sortlib::extract_partition_keys(&buf);
+            let r = runtime::sort_and_partition(&backend, &keys, &worker_cuts)
+                .map_err(|e| e.to_string())?;
+            // gather sorted records directly into the W worker slices
+            let mut bounds = Vec::with_capacity(w + 1);
+            bounds.push(0);
+            bounds.extend_from_slice(&r.offs[..w - 1]);
+            bounds.push(keys.len() as u32);
+            Ok(sortlib::apply_permutation_ranges(&buf, &r.perm, &bounds))
+        }),
+        args: vec![],
+        num_returns: w,
+        max_retries: S3_TASK_RETRIES,
+    }
+}
+
+/// Merge task (§2.3): merge already-sorted map blocks and partition into
+/// R1 merged blocks, one per reducer range of this worker.
+pub fn merge_task(
+    spec: &JobSpec,
+    backend: &Backend,
+    node: usize,
+    batch: usize,
+    blocks: Vec<ObjectRef>,
+) -> TaskSpec {
+    let backend = backend.clone();
+    let cuts = Arc::new(spec.reducer_cuts_of_worker(node));
+    let r1 = spec.reducers_per_worker();
+    TaskSpec {
+        name: format!("merge-{node}-{batch}"),
+        placement: Placement::Node(node),
+        args: blocks,
+        num_returns: r1,
+        max_retries: 1,
+        func: task_fn(move |ctx| {
+            let bufs: Vec<&[u8]> =
+                ctx.args.iter().map(|a| a.as_slice()).collect();
+            let key_runs: Vec<Vec<u64>> = bufs
+                .iter()
+                .map(|b| sortlib::extract_partition_keys(b))
+                .collect();
+            let runs: Vec<&[u64]> =
+                key_runs.iter().map(|k| k.as_slice()).collect();
+            let r = runtime::merge_and_partition(&backend, &runs, &cuts)
+                .map_err(|e| e.to_string())?;
+            // gather merged records directly into the R1 reducer slices
+            let total: u32 = runs.iter().map(|k| k.len() as u32).sum();
+            let mut bounds = Vec::with_capacity(r1 + 1);
+            bounds.push(0);
+            bounds.extend_from_slice(&r.offs[..r1 - 1]);
+            bounds.push(total);
+            Ok(sortlib::apply_permutation_multi_ranges(
+                &bufs, &r.perm, &bounds,
+            ))
+        }),
+    }
+}
+
+/// Reduce task (§2.4): merge this reducer's merged blocks from every
+/// merge batch on the node and upload the final output partition.
+/// Returns (bytes, checksum, records) of the uploaded partition.
+pub fn reduce_task(
+    spec: &JobSpec,
+    s3: &S3,
+    backend: &Backend,
+    node: usize,
+    global_r: usize,
+    blocks: Vec<ObjectRef>,
+) -> TaskSpec {
+    let s3 = s3.clone();
+    let backend = backend.clone();
+    let seed = spec.seed;
+    let n_buckets = spec.s3_buckets;
+    TaskSpec {
+        name: format!("reduce-{global_r}"),
+        placement: Placement::Node(node),
+        args: blocks,
+        num_returns: 1,
+        max_retries: S3_TASK_RETRIES,
+        func: task_fn(move |ctx| {
+            let bufs: Vec<&[u8]> =
+                ctx.args.iter().map(|a| a.as_slice()).collect();
+            let key_runs: Vec<Vec<u64>> = bufs
+                .iter()
+                .map(|b| sortlib::extract_partition_keys(b))
+                .collect();
+            let runs: Vec<&[u64]> =
+                key_runs.iter().map(|k| k.as_slice()).collect();
+            let r = runtime::merge_and_partition(&backend, &runs, &[])
+                .map_err(|e| e.to_string())?;
+            let mut out = sortlib::apply_permutation_multi(&bufs, &r.perm);
+            // the kernels order by the u64 partition key; restore full
+            // 10-byte-key order among prefix-colliding records
+            sortlib::fix_key_ties(&mut out);
+            let bytes = out.len() as u64;
+            let records = (out.len() / RECORD_SIZE) as u64;
+            let checksum = gensort::partition_checksum(&out);
+            s3.put(
+                &bucket_of(seed ^ OUTPUT_SALT, global_r as u64, n_buckets),
+                &output_key(global_r),
+                out,
+            )
+            .map_err(|e| e.to_string())?;
+            Ok(vec![encode_gen_result(bytes, checksum, records)])
+        }),
+    }
+}
+
+/// Validation task (§3.2 "Validating Output"): download an output
+/// partition and produce its valsort summary.
+pub fn validate_task(spec: &JobSpec, s3: &S3, global_r: usize) -> TaskSpec {
+    let s3 = s3.clone();
+    let seed = spec.seed;
+    let n_buckets = spec.s3_buckets;
+    TaskSpec {
+        name: format!("validate-{global_r}"),
+        placement: Placement::Any,
+        args: vec![],
+        num_returns: 1,
+        max_retries: S3_TASK_RETRIES,
+        func: task_fn(move |_ctx| {
+            let buf = s3
+                .get(
+                    &bucket_of(seed ^ OUTPUT_SALT, global_r as u64, n_buckets),
+                    &output_key(global_r),
+                )
+                .map_err(|e| e.to_string())?;
+            let summary = valsort::validate_partition(&buf);
+            Ok(vec![encode_summary(&summary)])
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_choice_is_deterministic_and_spread() {
+        let a = bucket_of(1, 5, 40);
+        assert_eq!(a, bucket_of(1, 5, 40));
+        let distinct: std::collections::HashSet<String> =
+            (0..200).map(|p| bucket_of(1, p, 40)).collect();
+        assert!(distinct.len() > 20, "only {} buckets used", distinct.len());
+    }
+
+    #[test]
+    fn key_formats() {
+        assert_eq!(input_key(7), "input/part-000007");
+        assert_eq!(output_key(12345), "output/part-012345");
+    }
+}

@@ -1,0 +1,209 @@
+//! Total-cost-of-ownership model (paper §3.3.2, Table 2).
+//!
+//! Reproduces the paper's cost arithmetic exactly: compute cost (hourly
+//! cluster rate × job hours, Equation 1), S3 data storage cost (input for
+//! the whole job, output for the reduce stage), and S3 data access cost
+//! (GET/PUT request counts × request unit prices). Prices are the paper's
+//! November 2022 us-west-2 on-demand numbers.
+
+/// AWS price constants (paper references [1][2][3]).
+#[derive(Clone, Copy, Debug)]
+pub struct Pricing {
+    /// r6i.2xlarge hourly (USD).
+    pub master_hourly: f64,
+    /// i4i.4xlarge hourly (USD).
+    pub worker_hourly: f64,
+    /// gp3 40 GiB EBS volume hourly: $0.08/GiB-month / 730 h × 40 GiB,
+    /// rounded to $0.0044 exactly as the paper does (§3.3.2).
+    pub ebs_volume_hourly: f64,
+    /// S3 storage per 100 TB per hour (average of the first two tiers:
+    /// $0.0225/GB-month → $3.0822/h per 100 TB).
+    pub s3_storage_100tb_hourly: f64,
+    /// USD per 1000 GET requests.
+    pub get_per_1000: f64,
+    /// USD per 1000 PUT requests.
+    pub put_per_1000: f64,
+}
+
+impl Pricing {
+    /// The paper's published prices.
+    pub fn paper_2022() -> Self {
+        Pricing {
+            master_hourly: 0.504,
+            worker_hourly: 1.373,
+            ebs_volume_hourly: 0.0044,
+            s3_storage_100tb_hourly: 3.0822,
+            get_per_1000: 0.0004,
+            put_per_1000: 0.005,
+        }
+    }
+}
+
+/// Inputs the cost model needs from a (real or simulated) run.
+#[derive(Clone, Copy, Debug)]
+pub struct RunProfile {
+    pub n_workers: usize,
+    /// Total job completion time (seconds).
+    pub job_seconds: f64,
+    /// Reduce-stage duration (seconds) — output storage window.
+    pub reduce_seconds: f64,
+    /// Dataset size in bytes (input size == output size for a sort).
+    pub data_bytes: u64,
+    pub get_requests: u64,
+    pub put_requests: u64,
+}
+
+/// Table 2, one row per service.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CostBreakdown {
+    pub compute: f64,
+    pub storage_input: f64,
+    pub storage_output: f64,
+    pub access_get: f64,
+    pub access_put: f64,
+}
+
+impl CostBreakdown {
+    pub fn total(&self) -> f64 {
+        self.compute
+            + self.storage_input
+            + self.storage_output
+            + self.access_get
+            + self.access_put
+    }
+}
+
+/// The TCO calculator.
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    pub pricing: Pricing,
+}
+
+impl CostModel {
+    pub fn paper() -> Self {
+        CostModel {
+            pricing: Pricing::paper_2022(),
+        }
+    }
+
+    /// Equation (1): total hourly compute cost of the cluster.
+    pub fn hourly_compute_cost(&self, n_workers: usize) -> f64 {
+        let p = &self.pricing;
+        p.master_hourly
+            + p.worker_hourly * n_workers as f64
+            + p.ebs_volume_hourly * (n_workers + 1) as f64
+    }
+
+    /// Full Table 2 breakdown for a run.
+    pub fn breakdown(&self, run: &RunProfile) -> CostBreakdown {
+        let p = &self.pricing;
+        let hours = run.job_seconds / 3600.0;
+        let reduce_hours = run.reduce_seconds / 3600.0;
+        // storage scales linearly in data size relative to 100 TB
+        let tb100 = run.data_bytes as f64 / 100e12;
+        CostBreakdown {
+            compute: self.hourly_compute_cost(run.n_workers) * hours,
+            storage_input: p.s3_storage_100tb_hourly * tb100 * hours,
+            storage_output: p.s3_storage_100tb_hourly * tb100 * reduce_hours,
+            access_get: run.get_requests as f64 / 1000.0 * p.get_per_1000,
+            access_put: run.put_requests as f64 / 1000.0 * p.put_per_1000,
+        }
+    }
+
+    /// Render Table 2 (same rows/units as the paper).
+    pub fn render_table2(&self, run: &RunProfile) -> String {
+        let b = self.breakdown(run);
+        let hours = run.job_seconds / 3600.0;
+        let reduce_hours = run.reduce_seconds / 3600.0;
+        let mut s = String::new();
+        s.push_str("Service                | Unit Price              | Amount            | Total Price\n");
+        s.push_str("-----------------------+--------------------------+-------------------+------------\n");
+        s.push_str(&format!(
+            "Compute VM Cluster     | ${:.4} / hr           | {:.4} hours     | ${:.4}\n",
+            self.hourly_compute_cost(run.n_workers),
+            hours,
+            b.compute
+        ));
+        s.push_str(&format!(
+            "Data Storage (Input)   | ${:.4} / hr            | {:.4} hours     | ${:.4}\n",
+            self.pricing.s3_storage_100tb_hourly, hours, b.storage_input
+        ));
+        s.push_str(&format!(
+            "Data Storage (Output)  | ${:.4} / hr            | {:.4} hours     | ${:.4}\n",
+            self.pricing.s3_storage_100tb_hourly, reduce_hours, b.storage_output
+        ));
+        s.push_str(&format!(
+            "Data Access (Input)    | ${:.4} / 1000 requests | {} requests | ${:.4}\n",
+            self.pricing.get_per_1000, run.get_requests, b.access_get
+        ));
+        s.push_str(&format!(
+            "Data Access (Output)   | ${:.4} / 1000 requests  | {} requests | ${:.4}\n",
+            self.pricing.put_per_1000, run.put_requests, b.access_put
+        ));
+        s.push_str(&format!("Total                  |                          |                   | ${:.4}\n", b.total()));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The paper's exact run profile (§3.3.2).
+    fn paper_run() -> RunProfile {
+        RunProfile {
+            n_workers: 40,
+            job_seconds: 1.4939 * 3600.0,
+            reduce_seconds: 0.5194 * 3600.0,
+            data_bytes: 100_000_000_000_000,
+            get_requests: 6_000_000,
+            put_requests: 1_000_000,
+        }
+    }
+
+    #[test]
+    fn hourly_compute_cost_matches_paper() {
+        let m = CostModel::paper();
+        // paper: $55.6044/hr
+        assert!((m.hourly_compute_cost(40) - 55.6044).abs() < 0.0005);
+    }
+
+    #[test]
+    fn table2_rows_match_paper() {
+        let m = CostModel::paper();
+        let b = m.breakdown(&paper_run());
+        assert!((b.compute - 83.0674).abs() < 0.01, "compute {}", b.compute);
+        assert!((b.storage_input - 4.6045).abs() < 0.001);
+        assert!((b.storage_output - 1.6009).abs() < 0.001);
+        assert!((b.access_get - 2.4000).abs() < 1e-9);
+        assert!((b.access_put - 5.0000).abs() < 1e-9);
+        // paper total: $96.6728
+        assert!((b.total() - 96.6728).abs() < 0.02, "total {}", b.total());
+    }
+
+    #[test]
+    fn storage_scales_with_data_size() {
+        let m = CostModel::paper();
+        let mut run = paper_run();
+        run.data_bytes /= 2;
+        let b = m.breakdown(&run);
+        assert!((b.storage_input - 4.6045 / 2.0).abs() < 0.001);
+    }
+
+    #[test]
+    fn render_contains_all_rows() {
+        let m = CostModel::paper();
+        let t = m.render_table2(&paper_run());
+        for row in [
+            "Compute VM Cluster",
+            "Data Storage (Input)",
+            "Data Storage (Output)",
+            "Data Access (Input)",
+            "Data Access (Output)",
+            "Total",
+        ] {
+            assert!(t.contains(row), "missing {row}");
+        }
+        assert!(t.contains("$96.67"));
+    }
+}

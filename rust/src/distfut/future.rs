@@ -1,0 +1,126 @@
+//! Blocking task-completion futures (condvar-based; no async runtime in
+//! the offline environment — and the coordinator's control loop is
+//! naturally synchronous, like the paper's driver program).
+
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::distfut::DfError;
+
+/// Completion state shared between the scheduler and the handle.
+pub(crate) struct TaskState {
+    pub(crate) result: Mutex<Option<Result<(), String>>>,
+    pub(crate) done: Condvar,
+}
+
+/// Handle to a submitted task: await completion / observe failure.
+/// The task's *data* outputs are the `ObjectRef`s returned at submit time;
+/// this handle only conveys control-plane completion.
+#[derive(Clone)]
+pub struct TaskHandle {
+    pub(crate) name: String,
+    pub(crate) state: Arc<TaskState>,
+}
+
+impl TaskHandle {
+    pub(crate) fn new(name: String) -> Self {
+        TaskHandle {
+            name,
+            state: Arc::new(TaskState {
+                result: Mutex::new(None),
+                done: Condvar::new(),
+            }),
+        }
+    }
+
+    /// Task name (diagnostics).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Non-blocking completion check.
+    pub fn is_done(&self) -> bool {
+        self.state.result.lock().unwrap().is_some()
+    }
+
+    /// Block until the task commits or exhausts retries.
+    pub fn wait(&self) -> Result<(), DfError> {
+        let mut guard = self.state.result.lock().unwrap();
+        while guard.is_none() {
+            guard = self.state.done.wait(guard).unwrap();
+        }
+        match guard.as_ref().unwrap() {
+            Ok(()) => Ok(()),
+            Err(msg) => Err(DfError::TaskFailed {
+                name: self.name.clone(),
+                attempts: 0, // attempts encoded in msg by the scheduler
+                last: msg.clone(),
+            }),
+        }
+    }
+
+    pub(crate) fn complete(&self, result: Result<(), String>) {
+        let mut guard = self.state.result.lock().unwrap();
+        if guard.is_none() {
+            *guard = Some(result);
+        }
+        self.state.done.notify_all();
+    }
+}
+
+/// Wait for every handle, returning the first error (after all finish).
+pub fn wait_all(handles: &[TaskHandle]) -> Result<(), DfError> {
+    let mut first_err = None;
+    for h in handles {
+        if let Err(e) = h.wait() {
+            first_err.get_or_insert(e);
+        }
+    }
+    match first_err {
+        None => Ok(()),
+        Some(e) => Err(e),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wait_blocks_until_complete() {
+        let h = TaskHandle::new("t".into());
+        let h2 = h.clone();
+        let j = std::thread::spawn(move || h2.wait());
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        assert!(!h.is_done());
+        h.complete(Ok(()));
+        j.join().unwrap().unwrap();
+        assert!(h.is_done());
+    }
+
+    #[test]
+    fn error_propagates() {
+        let h = TaskHandle::new("boom".into());
+        h.complete(Err("kaput".into()));
+        let err = h.wait().unwrap_err();
+        assert!(err.to_string().contains("kaput"));
+        assert!(err.to_string().contains("boom"));
+    }
+
+    #[test]
+    fn first_completion_wins() {
+        let h = TaskHandle::new("t".into());
+        h.complete(Ok(()));
+        h.complete(Err("late".into()));
+        assert!(h.wait().is_ok());
+    }
+
+    #[test]
+    fn wait_all_collects() {
+        let a = TaskHandle::new("a".into());
+        let b = TaskHandle::new("b".into());
+        a.complete(Ok(()));
+        b.complete(Err("x".into()));
+        assert!(wait_all(&[a.clone()]).is_ok());
+        assert!(wait_all(&[a, b]).is_err());
+    }
+}

@@ -1,0 +1,71 @@
+//! A Ray-like distributed-futures runtime (the paper's data plane).
+//!
+//! Paper §2.5 enumerates what Exoshuffle-CloudSort takes "for free" from
+//! Ray; this module implements exactly that feature list, in-process, with
+//! one thread pool per simulated node:
+//!
+//! - **Task scheduling** — tasks are submitted with a placement and start
+//!   when their argument futures resolve; per-node slot pools bound
+//!   concurrency ([`scheduler`]).
+//! - **Distributed futures** — [`Runtime::submit`] returns [`ObjectRef`]s
+//!   *before* the task runs; downstream tasks can be submitted against
+//!   them immediately (ownership-style futures, NSDI '21).
+//! - **Network transfer** — passing an `ObjectRef` produced on node A to a
+//!   task on node B accounts an inter-node transfer ([`store`]).
+//! - **Memory management & disk spilling** — objects are reference
+//!   counted; when a node's store exceeds capacity, cold objects spill to
+//!   local disk and are transparently restored on access.
+//! - **Fault tolerance** — a task that fails is retried up to
+//!   `max_retries` times; argument objects are re-fetched per attempt.
+
+pub mod future;
+pub mod scheduler;
+pub mod store;
+
+use std::sync::Arc;
+
+pub use future::TaskHandle;
+pub use scheduler::{Runtime, RuntimeOptions, TaskCtx, TaskSpec};
+pub use store::{ObjectId, ObjectRef, StoreStats};
+
+/// Task placement constraint.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Placement {
+    /// Run on a specific node (paper: merge tasks are pinned to the node
+    /// whose merge controller buffered the blocks).
+    Node(usize),
+    /// Run wherever a slot frees first (paper: map tasks are queued on the
+    /// driver and handed to whichever node finishes one).
+    Any,
+}
+
+/// Errors surfaced by the runtime.
+#[derive(Debug, thiserror::Error)]
+pub enum DfError {
+    #[error("task '{name}' failed after {attempts} attempts: {last}")]
+    TaskFailed {
+        name: String,
+        attempts: u32,
+        last: String,
+    },
+    #[error("runtime is shut down")]
+    ShutDown,
+    #[error("object {0:?} was released before use")]
+    ObjectReleased(ObjectId),
+    #[error("store I/O error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+/// The boxed task function type. Must be `Fn` (not `FnOnce`) so the
+/// scheduler can re-execute it on retry; it receives resolved argument
+/// buffers and returns one buffer per declared output.
+pub type TaskFn =
+    Arc<dyn Fn(&TaskCtx) -> Result<Vec<Vec<u8>>, String> + Send + Sync>;
+
+/// Helper to build a [`TaskFn`] from a closure.
+pub fn task_fn<F>(f: F) -> TaskFn
+where
+    F: Fn(&TaskCtx) -> Result<Vec<Vec<u8>>, String> + Send + Sync + 'static,
+{
+    Arc::new(f)
+}

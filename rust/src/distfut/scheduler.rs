@@ -1,0 +1,622 @@
+//! Task scheduler and worker pools (paper §2.5 "Task scheduling").
+//!
+//! One worker-thread pool per simulated node, sized by the node's task
+//! parallelism (¾ of vCPUs for the paper's workers). Tasks become
+//! *runnable* when all their argument objects are committed; runnable
+//! tasks wait in per-node queues (pinned placement) or a shared queue
+//! (`Placement::Any` — the paper's driver-side map queue). Failed tasks
+//! are retried up to `max_retries` times before their handle resolves to
+//! an error.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::distfut::future::TaskHandle;
+use crate::distfut::store::{ObjectId, ObjectRef, Store, StoreStats};
+use crate::distfut::{DfError, Placement, TaskFn};
+use crate::metrics::TaskEvent;
+
+/// Runtime construction options.
+#[derive(Clone, Debug)]
+pub struct RuntimeOptions {
+    /// Number of simulated worker nodes.
+    pub n_nodes: usize,
+    /// Concurrent task slots per node.
+    pub slots_per_node: usize,
+    /// Object-store byte budget per node before spilling kicks in.
+    pub store_capacity_per_node: u64,
+    /// Spill directory (a unique subdirectory is created inside).
+    pub spill_root: std::path::PathBuf,
+}
+
+impl Default for RuntimeOptions {
+    fn default() -> Self {
+        RuntimeOptions {
+            n_nodes: 2,
+            slots_per_node: 2,
+            store_capacity_per_node: 1 << 30,
+            spill_root: std::env::temp_dir(),
+        }
+    }
+}
+
+/// A task submission.
+pub struct TaskSpec {
+    /// Diagnostic name; also used in metrics (e.g. "map", "merge").
+    pub name: String,
+    pub placement: Placement,
+    pub func: TaskFn,
+    /// Argument objects; the task starts only when all are committed.
+    pub args: Vec<ObjectRef>,
+    /// Number of output objects the function will return.
+    pub num_returns: usize,
+    /// Automatic retries on failure (paper §2.5 "Fault tolerance").
+    pub max_retries: u32,
+}
+
+/// Execution context handed to a running task.
+pub struct TaskCtx {
+    /// Node the task is executing on.
+    pub node: usize,
+    /// Resolved argument buffers (same order as `TaskSpec::args`).
+    pub args: Vec<Arc<Vec<u8>>>,
+    /// 0 on the first attempt, incremented per retry.
+    pub attempt: u32,
+}
+
+struct QueuedTask {
+    spec: TaskSpec,
+    outputs: Vec<ObjectId>,
+    handle: TaskHandle,
+    attempt: u32,
+    /// Unresolved argument count (enqueued when it reaches 0).
+    unresolved: usize,
+}
+
+struct SchedState {
+    /// Tasks waiting for arguments: object -> tasks blocked on it.
+    waiting: HashMap<ObjectId, Vec<u64>>,
+    /// Pending tasks by internal id.
+    pending: HashMap<u64, QueuedTask>,
+    /// Runnable queues: one per node + the shared any-queue.
+    node_queues: Vec<VecDeque<u64>>,
+    any_queue: VecDeque<u64>,
+    /// In-flight + queued + waiting task count (for quiescence checks).
+    outstanding: u64,
+    shutdown: bool,
+}
+
+/// The distributed-futures runtime (see module docs of [`crate::distfut`]).
+pub struct Runtime {
+    shared: Arc<Shared>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+struct Shared {
+    state: Mutex<SchedState>,
+    work_ready: Condvar,
+    quiescent: Condvar,
+    store: Arc<Store>,
+    next_task_id: AtomicU64,
+    epoch: Instant,
+    events: Mutex<Vec<TaskEvent>>,
+    tasks_executed: AtomicU64,
+    tasks_retried: AtomicU64,
+    stop: AtomicBool,
+}
+
+impl Runtime {
+    pub fn new(opts: RuntimeOptions) -> Arc<Self> {
+        let spill_dir = opts.spill_root.join(format!(
+            "exoshuffle-spill-{}-{}",
+            std::process::id(),
+            NEXT_RUNTIME.fetch_add(1, Ordering::Relaxed)
+        ));
+        let store = Store::new(opts.n_nodes, opts.store_capacity_per_node, spill_dir);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(SchedState {
+                waiting: HashMap::new(),
+                pending: HashMap::new(),
+                node_queues: (0..opts.n_nodes).map(|_| VecDeque::new()).collect(),
+                any_queue: VecDeque::new(),
+                outstanding: 0,
+                shutdown: false,
+            }),
+            work_ready: Condvar::new(),
+            quiescent: Condvar::new(),
+            store,
+            next_task_id: AtomicU64::new(1),
+            epoch: Instant::now(),
+            events: Mutex::new(Vec::new()),
+            tasks_executed: AtomicU64::new(0),
+            tasks_retried: AtomicU64::new(0),
+            stop: AtomicBool::new(false),
+        });
+        let rt = Arc::new(Runtime {
+            shared: shared.clone(),
+            workers: Mutex::new(Vec::new()),
+        });
+        let mut workers = rt.workers.lock().unwrap();
+        for node in 0..opts.n_nodes {
+            for slot in 0..opts.slots_per_node {
+                let sh = shared.clone();
+                workers.push(
+                    std::thread::Builder::new()
+                        .name(format!("worker-{node}-{slot}"))
+                        .stack_size(8 << 20)
+                        .spawn(move || worker_loop(sh, node))
+                        .expect("spawn worker"),
+                );
+            }
+        }
+        drop(workers);
+        rt
+    }
+
+    /// Number of nodes.
+    pub fn n_nodes(&self) -> usize {
+        self.shared.state.lock().unwrap().node_queues.len()
+    }
+
+    /// Put a buffer into `node`'s store from the driver.
+    pub fn put(&self, node: usize, data: Vec<u8>) -> ObjectRef {
+        self.shared.store.put(node, data)
+    }
+
+    /// Blocking fetch of an object (driver side; accounted to the master
+    /// as node usize::MAX — no transfer counted toward shuffle traffic).
+    pub fn get(&self, r: &ObjectRef) -> Result<Arc<Vec<u8>>, DfError> {
+        self.shared.store.get(r.id, usize::MAX)
+    }
+
+    /// Fetch from a specific node's perspective (tasks use their ctx node).
+    pub fn get_from(&self, r: &ObjectRef, node: usize) -> Result<Arc<Vec<u8>>, DfError> {
+        self.shared.store.get(r.id, node)
+    }
+
+    /// Whether the object's data has been produced ("received" in the
+    /// merge controller's sense — paper §2.3).
+    pub fn object_ready(&self, r: &ObjectRef) -> bool {
+        self.shared.store.is_ready(r.id)
+    }
+
+    /// Submit a task; returns its output refs (immediately usable as args
+    /// of downstream tasks) and a completion handle.
+    pub fn submit(&self, spec: TaskSpec) -> (Vec<ObjectRef>, TaskHandle) {
+        let sh = &self.shared;
+        let owner_node = match spec.placement {
+            Placement::Node(n) => n,
+            Placement::Any => 0,
+        };
+        let outputs: Vec<ObjectRef> = (0..spec.num_returns)
+            .map(|_| sh.store.declare(owner_node))
+            .collect();
+        let output_ids: Vec<ObjectId> = outputs.iter().map(|o| o.id).collect();
+        let handle = TaskHandle::new(spec.name.clone());
+        let tid = sh.next_task_id.fetch_add(1, Ordering::Relaxed);
+
+        let mut st = sh.state.lock().unwrap();
+        if st.shutdown {
+            handle.complete(Err("runtime shut down".into()));
+            return (outputs, handle);
+        }
+        let unresolved = spec
+            .args
+            .iter()
+            .filter(|a| !sh.store.is_ready(a.id))
+            .count();
+        for a in &spec.args {
+            if !sh.store.is_ready(a.id) {
+                st.waiting.entry(a.id).or_default().push(tid);
+            }
+        }
+        let task = QueuedTask {
+            spec,
+            outputs: output_ids,
+            handle: handle.clone(),
+            attempt: 0,
+            unresolved,
+        };
+        st.outstanding += 1;
+        if unresolved == 0 {
+            enqueue(&mut st, tid, &task);
+        }
+        st.pending.insert(tid, task);
+        drop(st);
+        sh.work_ready.notify_all();
+        (outputs, handle)
+    }
+
+    /// Block until no tasks are outstanding.
+    pub fn wait_quiescent(&self) {
+        let mut st = self.shared.state.lock().unwrap();
+        while st.outstanding > 0 {
+            st = self.shared.quiescent.wait(st).unwrap();
+        }
+    }
+
+    /// Task execution log (for utilization reporting).
+    pub fn task_events(&self) -> Vec<TaskEvent> {
+        self.shared.events.lock().unwrap().clone()
+    }
+
+    /// Store statistics (transfers, spills, residency).
+    pub fn store_stats(&self) -> StoreStats {
+        self.shared.store.stats()
+    }
+
+    /// Total tasks executed (attempts) and retried.
+    pub fn task_counts(&self) -> (u64, u64) {
+        (
+            self.shared.tasks_executed.load(Ordering::Relaxed),
+            self.shared.tasks_retried.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Seconds since runtime start (event timestamps use this clock).
+    pub fn now(&self) -> f64 {
+        self.shared.epoch.elapsed().as_secs_f64()
+    }
+
+    /// Stop workers and join them. Pending tasks fail with ShutDown.
+    pub fn shutdown(&self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            let drained: Vec<QueuedTask> =
+                st.pending.drain().map(|(_, t)| t).collect();
+            for t in drained {
+                t.handle.complete(Err("runtime shut down".into()));
+                st.outstanding = st.outstanding.saturating_sub(1);
+            }
+            st.node_queues.iter_mut().for_each(|q| q.clear());
+            st.any_queue.clear();
+        }
+        self.shared.stop.store(true, Ordering::SeqCst);
+        self.shared.work_ready.notify_all();
+        self.shared.quiescent.notify_all();
+        let mut ws = self.workers.lock().unwrap();
+        for w in ws.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Runtime {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+static NEXT_RUNTIME: AtomicU64 = AtomicU64::new(0);
+
+fn enqueue(st: &mut SchedState, tid: u64, task: &QueuedTask) {
+    match task.spec.placement {
+        Placement::Node(n) => st.node_queues[n].push_back(tid),
+        Placement::Any => st.any_queue.push_back(tid),
+    }
+}
+
+fn worker_loop(sh: Arc<Shared>, node: usize) {
+    loop {
+        // --- pick a runnable task for this node ---
+        let (tid, mut task) = {
+            let mut st = sh.state.lock().unwrap();
+            loop {
+                if sh.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                if let Some(tid) = st.node_queues[node]
+                    .pop_front()
+                    .or_else(|| st.any_queue.pop_front())
+                {
+                    let task = st.pending.remove(&tid).expect("queued task exists");
+                    break (tid, task);
+                }
+                st = sh.work_ready.wait(st).unwrap();
+            }
+        };
+
+        // --- resolve args (blocking, with transfer accounting) ---
+        let args: Result<Vec<Arc<Vec<u8>>>, DfError> = task
+            .spec
+            .args
+            .iter()
+            .map(|a| sh.store.get(a.id, node))
+            .collect();
+
+        let start = sh.epoch.elapsed().as_secs_f64();
+        let result = args
+            .map_err(|e| e.to_string())
+            .and_then(|args| {
+                let ctx = TaskCtx {
+                    node,
+                    args,
+                    attempt: task.attempt,
+                };
+                (task.spec.func)(&ctx)
+            });
+        let end = sh.epoch.elapsed().as_secs_f64();
+        sh.tasks_executed.fetch_add(1, Ordering::Relaxed);
+        sh.events.lock().unwrap().push(TaskEvent {
+            name: task.spec.name.clone(),
+            node,
+            start,
+            end,
+            ok: result.is_ok(),
+        });
+
+        match result {
+            Ok(outs) => {
+                if outs.len() != task.spec.num_returns {
+                    task.handle.complete(Err(format!(
+                        "task '{}' returned {} outputs, declared {}",
+                        task.spec.name,
+                        outs.len(),
+                        task.spec.num_returns
+                    )));
+                } else {
+                    for (id, data) in task.outputs.iter().zip(outs) {
+                        sh.store.commit(*id, node, data);
+                    }
+                    task.handle.complete(Ok(()));
+                }
+                finish_task(&sh, &task.outputs);
+            }
+            Err(msg) => {
+                if task.attempt < task.spec.max_retries {
+                    task.attempt += 1;
+                    sh.tasks_retried.fetch_add(1, Ordering::Relaxed);
+                    let mut st = sh.state.lock().unwrap();
+                    enqueue(&mut st, tid, &task);
+                    st.pending.insert(tid, task);
+                    drop(st);
+                    sh.work_ready.notify_all();
+                    continue;
+                }
+                task.handle.complete(Err(format!(
+                    "{} (after {} attempts)",
+                    msg,
+                    task.attempt + 1
+                )));
+                // Poison undelivered outputs so downstream tasks fail fast
+                // instead of blocking forever (cascading failure).
+                for oid in &task.outputs {
+                    sh.store.fail(*oid);
+                }
+                finish_task(&sh, &task.outputs);
+            }
+        }
+    }
+}
+
+/// Post-completion bookkeeping: wake tasks waiting on our outputs and
+/// update quiescence accounting.
+fn finish_task(sh: &Arc<Shared>, outputs: &[ObjectId]) {
+    let mut st = sh.state.lock().unwrap();
+    for oid in outputs {
+        if let Some(waiters) = st.waiting.remove(oid) {
+            for wtid in waiters {
+                if let Some(w) = st.pending.get_mut(&wtid) {
+                    w.unresolved -= 1;
+                    if w.unresolved == 0 {
+                        match w.spec.placement {
+                            Placement::Node(n) => st.node_queues[n].push_back(wtid),
+                            Placement::Any => st.any_queue.push_back(wtid),
+                        }
+                    }
+                }
+            }
+        }
+    }
+    st.outstanding = st.outstanding.saturating_sub(1);
+    let quiescent = st.outstanding == 0;
+    drop(st);
+    sh.work_ready.notify_all();
+    if quiescent {
+        sh.quiescent.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distfut::task_fn;
+
+    fn small_rt(nodes: usize, slots: usize) -> Arc<Runtime> {
+        Runtime::new(RuntimeOptions {
+            n_nodes: nodes,
+            slots_per_node: slots,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn basic_task_runs_and_returns() {
+        let rt = small_rt(2, 2);
+        let (outs, h) = rt.submit(TaskSpec {
+            name: "double".into(),
+            placement: Placement::Any,
+            func: task_fn(|ctx| {
+                let x = ctx.args[0][0];
+                Ok(vec![vec![x * 2]])
+            }),
+            args: vec![rt.put(0, vec![21])],
+            num_returns: 1,
+            max_retries: 0,
+        });
+        h.wait().unwrap();
+        assert_eq!(*rt.get(&outs[0]).unwrap(), vec![42]);
+    }
+
+    #[test]
+    fn chained_futures_resolve_in_order() {
+        let rt = small_rt(2, 1);
+        let (a, _) = rt.submit(TaskSpec {
+            name: "produce".into(),
+            placement: Placement::Node(0),
+            func: task_fn(|_| Ok(vec![vec![1, 2, 3]])),
+            args: vec![],
+            num_returns: 1,
+            max_retries: 0,
+        });
+        // submitted before `produce` finishes; must wait for its arg
+        let (b, h) = rt.submit(TaskSpec {
+            name: "consume".into(),
+            placement: Placement::Node(1),
+            func: task_fn(|ctx| Ok(vec![vec![ctx.args[0].iter().sum::<u8>()]])),
+            args: vec![a[0].clone()],
+            num_returns: 1,
+            max_retries: 0,
+        });
+        h.wait().unwrap();
+        assert_eq!(*rt.get(&b[0]).unwrap(), vec![6]);
+        // cross-node arg fetch counts as one transfer
+        assert!(rt.store_stats().transfers >= 1);
+    }
+
+    #[test]
+    fn placement_pins_to_node() {
+        let rt = small_rt(3, 1);
+        let mut handles = vec![];
+        for node in 0..3 {
+            let (_, h) = rt.submit(TaskSpec {
+                name: format!("pin{node}"),
+                placement: Placement::Node(node),
+                func: task_fn(move |ctx| {
+                    assert_eq!(ctx.node, node);
+                    Ok(vec![])
+                }),
+                args: vec![],
+                num_returns: 0,
+                max_retries: 0,
+            });
+            handles.push(h);
+        }
+        for h in handles {
+            h.wait().unwrap();
+        }
+        let events = rt.task_events();
+        for e in events {
+            let expect: usize = e.name[3..].parse().unwrap();
+            assert_eq!(e.node, expect);
+        }
+    }
+
+    #[test]
+    fn retries_then_succeeds() {
+        let rt = small_rt(1, 1);
+        let (outs, h) = rt.submit(TaskSpec {
+            name: "flaky".into(),
+            placement: Placement::Any,
+            func: task_fn(|ctx| {
+                if ctx.attempt < 2 {
+                    Err(format!("transient failure #{}", ctx.attempt))
+                } else {
+                    Ok(vec![vec![ctx.attempt as u8]])
+                }
+            }),
+            args: vec![],
+            num_returns: 1,
+            max_retries: 3,
+        });
+        h.wait().unwrap();
+        assert_eq!(*rt.get(&outs[0]).unwrap(), vec![2]);
+        let (_executed, retried) = rt.task_counts();
+        assert_eq!(retried, 2);
+    }
+
+    #[test]
+    fn retries_exhausted_reports_error() {
+        let rt = small_rt(1, 1);
+        let (_, h) = rt.submit(TaskSpec {
+            name: "doomed".into(),
+            placement: Placement::Any,
+            func: task_fn(|_| Err("always fails".into())),
+            args: vec![],
+            num_returns: 0,
+            max_retries: 2,
+        });
+        let err = h.wait().unwrap_err().to_string();
+        assert!(err.contains("always fails"), "{err}");
+        assert!(err.contains("3 attempts"), "{err}");
+    }
+
+    #[test]
+    fn wrong_output_count_is_an_error() {
+        let rt = small_rt(1, 1);
+        let (_, h) = rt.submit(TaskSpec {
+            name: "liar".into(),
+            placement: Placement::Any,
+            func: task_fn(|_| Ok(vec![])),
+            args: vec![],
+            num_returns: 2,
+            max_retries: 0,
+        });
+        assert!(h.wait().is_err());
+    }
+
+    #[test]
+    fn fan_out_fan_in() {
+        let rt = small_rt(4, 2);
+        let n = 32;
+        let producers: Vec<ObjectRef> = (0..n)
+            .map(|i| {
+                let (o, _) = rt.submit(TaskSpec {
+                    name: format!("p{i}"),
+                    placement: Placement::Any,
+                    func: task_fn(move |_| Ok(vec![vec![i as u8]])),
+                    args: vec![],
+                    num_returns: 1,
+                    max_retries: 0,
+                });
+                o.into_iter().next().unwrap()
+            })
+            .collect();
+        let (sum, h) = rt.submit(TaskSpec {
+            name: "reduce".into(),
+            placement: Placement::Node(0),
+            func: task_fn(|ctx| {
+                let s: u32 = ctx.args.iter().map(|a| a[0] as u32).sum();
+                Ok(vec![s.to_le_bytes().to_vec()])
+            }),
+            args: producers,
+            num_returns: 1,
+            max_retries: 0,
+        });
+        h.wait().unwrap();
+        let bytes = rt.get(&sum[0]).unwrap();
+        let s = u32::from_le_bytes(bytes[..4].try_into().unwrap());
+        assert_eq!(s, (0..32u32).sum::<u32>());
+    }
+
+    #[test]
+    fn wait_quiescent_blocks_until_all_done() {
+        let rt = small_rt(2, 2);
+        for i in 0..16 {
+            rt.submit(TaskSpec {
+                name: format!("t{i}"),
+                placement: Placement::Any,
+                func: task_fn(|_| {
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                    Ok(vec![])
+                }),
+                args: vec![],
+                num_returns: 0,
+                max_retries: 0,
+            });
+        }
+        rt.wait_quiescent();
+        assert_eq!(rt.task_counts().0, 16);
+    }
+
+    #[test]
+    fn shutdown_is_idempotent_and_drops_cleanly() {
+        let rt = small_rt(2, 1);
+        rt.shutdown();
+        rt.shutdown();
+    }
+}

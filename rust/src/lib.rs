@@ -1,0 +1,53 @@
+//! # Exoshuffle-CloudSort (reproduction)
+//!
+//! An application-level shuffle: a two-stage external sort written as a
+//! distributed-futures program, after *Exoshuffle-CloudSort* (CS.DC 2023).
+//! The application ([`coordinator`]) owns the control plane — partition
+//! boundaries, map scheduling, merge backpressure, the reduce stage — while
+//! a Ray-like distributed-futures runtime ([`distfut`]) owns the data
+//! plane: task execution, object transfer, memory management with disk
+//! spilling, and fault recovery.
+//!
+//! The compute hot-spot (sorting, partitioning and merging record arrays;
+//! the paper's 300-line C++ component) is implemented as Pallas/JAX kernels
+//! AOT-compiled to HLO and executed from Rust via PJRT ([`runtime`]), with
+//! a native Rust radix-sort baseline for comparison.
+//!
+//! Substrates the paper takes from AWS are simulated: [`s3sim`] stands in
+//! for Amazon S3 (chunked GET/PUT with per-request accounting, so the
+//! Table 2 cost model is exact), and [`cluster`] describes the 40-node
+//! i4i.4xlarge testbed whose constants drive both the real executor and
+//! the discrete-event simulator ([`sim`]) that replays the full 100 TB
+//! run for Table 1 / Figure 1.
+//!
+//! ```no_run
+//! use exoshuffle::prelude::*;
+//! # fn main() -> anyhow::Result<()> {
+//! let spec = JobSpec::scaled(64 << 20, 4); // 64 MiB across 4 workers
+//! let report = run_cloudsort(&spec, Backend::Native)?;
+//! assert!(report.validation.valid);
+//! # Ok(()) }
+//! ```
+
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod cost;
+pub mod distfut;
+pub mod metrics;
+pub mod runtime;
+pub mod s3sim;
+pub mod sim;
+pub mod sortlib;
+pub mod util;
+
+/// Convenience re-exports for examples and binaries.
+pub mod prelude {
+    pub use crate::cluster::ClusterSpec;
+    pub use crate::coordinator::{run_cloudsort, JobReport, JobSpec};
+    pub use crate::cost::CostModel;
+    pub use crate::runtime::Backend;
+    pub use crate::s3sim::S3;
+    pub use crate::sim::SimConfig;
+    pub use crate::sortlib::{Record, RECORD_SIZE};
+}

@@ -1,0 +1,283 @@
+//! `exoshuffle` — launcher CLI for the Exoshuffle-CloudSort reproduction.
+//!
+//! Subcommands:
+//!   sort      run a scaled CloudSort end-to-end (generate → sort → validate)
+//!   sim       discrete-event simulation of the full 100 TB benchmark
+//!   cost      print the Table 2 cost breakdown for a run profile
+//!   info      print artifact/backend information
+//!
+//! The offline environment has no clap; argument parsing is a small
+//! hand-rolled layer (`--key value` flags after the subcommand).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use exoshuffle::config::{parse_bytes, Config};
+use exoshuffle::coordinator::{run_cloudsort, JobSpec};
+use exoshuffle::cost::{CostModel, RunProfile};
+use exoshuffle::runtime::Backend;
+use exoshuffle::sim::{simulate, SimConfig};
+use exoshuffle::util::{human_bytes, human_secs};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+/// Parse `--key value` pairs after the subcommand.
+fn parse_flags(args: &[String]) -> Result<HashMap<String, String>, String> {
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let k = args[i]
+            .strip_prefix("--")
+            .ok_or_else(|| format!("expected --flag, got '{}'", args[i]))?;
+        let v = args
+            .get(i + 1)
+            .ok_or_else(|| format!("--{k} needs a value"))?;
+        flags.insert(k.to_string(), v.clone());
+        i += 2;
+    }
+    Ok(flags)
+}
+
+fn run(args: Vec<String>) -> anyhow::Result<()> {
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    let flags = parse_flags(&args[args.len().min(1)..])
+        .map_err(|e| anyhow::anyhow!(e))?;
+    match cmd {
+        "sort" => cmd_sort(&flags),
+        "sim" => cmd_sim(&flags),
+        "cost" => cmd_cost(&flags),
+        "info" => cmd_info(&flags),
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => Err(anyhow::anyhow!(
+            "unknown command '{other}' (try `exoshuffle help`)"
+        )),
+    }
+}
+
+const HELP: &str = "\
+exoshuffle — Exoshuffle-CloudSort reproduction
+
+USAGE: exoshuffle <COMMAND> [--flag value]...
+
+COMMANDS:
+  sort   run a scaled CloudSort end-to-end on the in-process cluster
+           --size 256MiB       dataset size (default 64MiB)
+           --workers 4         worker nodes (default 4)
+           --backend xla|native (default xla)
+           --artifacts DIR     artifact dir (default ./artifacts)
+           --config FILE       TOML config (overrides --size/--workers)
+           --no-backpressure true  disable merge backpressure (ablation)
+  sim    simulate the full 100 TB benchmark (Table 1 / Figure 1)
+           --runs 3            number of runs (Table 1 rows)
+           --fig1-csv FILE     write Figure 1 utilization CSV
+  cost   print the Table 2 cost breakdown
+           --hours 1.4939      job completion hours
+           --reduce-hours 0.5194
+           --workers 40  --gets 6000000  --puts 1000000
+  info   print artifact manifest and backend info
+           --artifacts DIR
+";
+
+fn cmd_sort(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let spec: JobSpec = if let Some(path) = flags.get("config") {
+        let text = std::fs::read_to_string(path)?;
+        Config::parse(&text)
+            .and_then(|c| c.to_job_spec())
+            .map_err(|e| anyhow::anyhow!(e))?
+    } else {
+        let size = flags
+            .get("size")
+            .map(|s| parse_bytes(s))
+            .transpose()
+            .map_err(|e| anyhow::anyhow!(e))?
+            .unwrap_or(64 << 20);
+        let workers: usize = flags
+            .get("workers")
+            .map(|w| w.parse())
+            .transpose()?
+            .unwrap_or(4);
+        let mut s = JobSpec::scaled(size, workers);
+        if flags.get("no-backpressure").map(|v| v == "true") == Some(true) {
+            s.backpressure = false;
+        }
+        s
+    };
+    let backend = match flags.get("backend").map(|s| s.as_str()) {
+        Some("native") => Backend::Native,
+        _ => {
+            let dir = flags
+                .get("artifacts")
+                .map(PathBuf::from)
+                .unwrap_or_else(|| PathBuf::from("artifacts"));
+            Backend::xla(&dir)?
+        }
+    };
+    println!(
+        "sorting {} across {} workers (M={}, R={}, backend={})",
+        human_bytes(spec.total_bytes),
+        spec.n_workers(),
+        spec.n_input_partitions,
+        spec.n_output_partitions,
+        backend.name(),
+    );
+    let report = run_cloudsort(&spec, backend)?;
+    println!("generate:     {:>8.2}s", report.gen_secs);
+    println!("map&shuffle:  {:>8.2}s", report.map_shuffle_secs);
+    println!("reduce:       {:>8.2}s", report.reduce_secs);
+    println!("total:        {:>8.2}s  ({})", report.total_secs,
+        human_secs(report.total_secs));
+    println!(
+        "tasks: {} map, {} merge, {} reduce | retries: {}",
+        report.n_map_tasks,
+        report.n_merge_tasks,
+        report.n_reduce_tasks,
+        report.task_counts.1
+    );
+    println!(
+        "s3: {} GETs, {} PUTs | transfers: {} ({}) | spills: {}",
+        report.s3.get_requests,
+        report.s3.put_requests,
+        report.store.transfers,
+        human_bytes(report.store.transfer_bytes),
+        report.store.spills,
+    );
+    println!(
+        "validation: {} (records={}, checksum={:#x})",
+        if report.validation.valid { "PASS" } else { "FAIL" },
+        report.validation.summary.records,
+        report.validation.summary.checksum,
+    );
+    if flags.get("events").map(|v| v == "true") == Some(true) {
+        for family in ["gen", "map", "merge", "reduce", "validate"] {
+            let durs: Vec<f64> = report
+                .events
+                .iter()
+                .filter(|e| e.ok && e.name.starts_with(family))
+                .map(|e| e.duration())
+                .collect();
+            let lo = report
+                .events
+                .iter()
+                .filter(|e| e.name.starts_with(family))
+                .map(|e| e.start)
+                .fold(f64::INFINITY, f64::min);
+            let hi = report
+                .events
+                .iter()
+                .filter(|e| e.name.starts_with(family))
+                .map(|e| e.end)
+                .fold(0.0f64, f64::max);
+            println!(
+                "  {family:<9} n={:<5} busy={:>8.2}s span={:>8.2}s mean={:>7.3}s",
+                durs.len(),
+                durs.iter().sum::<f64>(),
+                hi - lo,
+                exoshuffle::util::stats::mean(&durs),
+            );
+        }
+    }
+    if !report.validation.valid {
+        return Err(anyhow::anyhow!("output validation failed"));
+    }
+    Ok(())
+}
+
+fn cmd_sim(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let runs: usize = flags
+        .get("runs")
+        .map(|r| r.parse())
+        .transpose()?
+        .unwrap_or(3);
+    let mut rows = Vec::new();
+    println!("simulating the 100 TB CloudSort benchmark ({runs} runs)\n");
+    for run in 0..runs {
+        let mut cfg = SimConfig::paper_100tb();
+        cfg.seed = 1 + run as u64;
+        let r = simulate(&cfg);
+        println!(
+            "run #{}: map&shuffle {:.0}s  reduce {:.0}s  total {:.0}s  \
+             (map {:.1}s, dl {:.1}s, merge {:.1}s, reduce {:.1}s)",
+            run + 1,
+            r.map_shuffle_secs,
+            r.reduce_secs,
+            r.total_secs,
+            r.mean_map_secs,
+            r.mean_map_download_secs,
+            r.mean_merge_secs,
+            r.mean_reduce_secs,
+        );
+        if run == 0 {
+            if let Some(path) = flags.get("fig1-csv") {
+                std::fs::write(path, r.utilization.to_csv())?;
+                println!("  wrote Figure 1 CSV to {path}");
+            }
+            println!("{}", r.utilization.to_ascii(72));
+        }
+        rows.push(r);
+    }
+    let avg = |f: fn(&exoshuffle::sim::SimResult) -> f64| {
+        rows.iter().map(f).sum::<f64>() / rows.len() as f64
+    };
+    println!(
+        "average: map&shuffle {:.0}s  reduce {:.0}s  total {:.0}s  \
+         (paper: 3508s / 1870s / 5378s)",
+        avg(|r| r.map_shuffle_secs),
+        avg(|r| r.reduce_secs),
+        avg(|r| r.total_secs),
+    );
+    // Table 2 from run #1
+    let r = &rows[0];
+    let model = CostModel::paper();
+    let profile = RunProfile {
+        n_workers: 40,
+        job_seconds: r.total_secs,
+        reduce_seconds: r.reduce_secs,
+        data_bytes: 100_000_000_000_000,
+        get_requests: r.get_requests,
+        put_requests: r.put_requests,
+    };
+    println!("\n{}", model.render_table2(&profile));
+    Ok(())
+}
+
+fn cmd_cost(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let get = |k: &str, d: f64| -> anyhow::Result<f64> {
+        Ok(flags.get(k).map(|v| v.parse()).transpose()?.unwrap_or(d))
+    };
+    let profile = RunProfile {
+        n_workers: get("workers", 40.0)? as usize,
+        job_seconds: get("hours", 1.4939)? * 3600.0,
+        reduce_seconds: get("reduce-hours", 0.5194)? * 3600.0,
+        data_bytes: 100_000_000_000_000,
+        get_requests: get("gets", 6_000_000.0)? as u64,
+        put_requests: get("puts", 1_000_000.0)? as u64,
+    };
+    println!("{}", CostModel::paper().render_table2(&profile));
+    Ok(())
+}
+
+fn cmd_info(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let dir = flags
+        .get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"));
+    let manifest = std::fs::read_to_string(dir.join("manifest.json"))?;
+    println!("artifact manifest ({}):\n{manifest}", dir.display());
+    let t = std::time::Instant::now();
+    let _backend = Backend::xla(&dir)?;
+    println!("XLA backend loaded+compiled in {:.2}s", t.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -1,0 +1,104 @@
+//! Metrics: task execution logs, resource-utilization timeseries, and the
+//! Figure 1 report (median/min/max utilization bands across worker nodes).
+
+pub mod timeseries;
+pub mod utilization;
+
+pub use timeseries::Timeseries;
+pub use utilization::{UtilizationReport, UtilizationSample};
+
+/// One task execution attempt (produced by the distfut scheduler and the
+/// discrete-event simulator alike; times are seconds on the run's clock —
+/// wall clock for real runs, virtual for simulated).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TaskEvent {
+    /// Task family, e.g. "map", "merge", "reduce".
+    pub name: String,
+    /// Node the attempt ran on.
+    pub node: usize,
+    pub start: f64,
+    pub end: f64,
+    pub ok: bool,
+}
+
+impl TaskEvent {
+    pub fn duration(&self) -> f64 {
+        self.end - self.start
+    }
+}
+
+/// Mean duration of all successful events with the given name prefix.
+pub fn mean_duration(events: &[TaskEvent], prefix: &str) -> f64 {
+    let durations: Vec<f64> = events
+        .iter()
+        .filter(|e| e.ok && e.name.starts_with(prefix))
+        .map(|e| e.duration())
+        .collect();
+    crate::util::stats::mean(&durations)
+}
+
+/// Per-node busy-slot counts over time derived from a task log: the basis
+/// of the Figure 1 CPU band for real runs.
+pub fn busy_slots_timeseries(
+    events: &[TaskEvent],
+    n_nodes: usize,
+    slots_per_node: usize,
+    dt: f64,
+) -> Timeseries {
+    let end = events.iter().map(|e| e.end).fold(0.0, f64::max);
+    let mut ts = Timeseries::new(n_nodes, dt, end);
+    for e in events {
+        ts.add_busy_interval(e.node, e.start, e.end, 1.0 / slots_per_node as f64);
+    }
+    ts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(name: &str, node: usize, start: f64, end: f64) -> TaskEvent {
+        TaskEvent {
+            name: name.into(),
+            node,
+            start,
+            end,
+            ok: true,
+        }
+    }
+
+    #[test]
+    fn mean_duration_filters_by_prefix() {
+        let events = vec![
+            ev("map-1", 0, 0.0, 2.0),
+            ev("map-2", 0, 1.0, 5.0),
+            ev("merge-1", 1, 0.0, 10.0),
+        ];
+        assert!((mean_duration(&events, "map") - 3.0).abs() < 1e-12);
+        assert!((mean_duration(&events, "merge") - 10.0).abs() < 1e-12);
+        assert_eq!(mean_duration(&events, "reduce"), 0.0);
+    }
+
+    #[test]
+    fn failed_events_excluded() {
+        let mut bad = ev("map-1", 0, 0.0, 100.0);
+        bad.ok = false;
+        let events = vec![bad, ev("map-2", 0, 0.0, 2.0)];
+        assert!((mean_duration(&events, "map") - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn busy_slots_counts_overlap() {
+        let events = vec![
+            ev("a", 0, 0.0, 1.0),
+            ev("b", 0, 0.0, 1.0),
+            ev("c", 1, 0.5, 1.0),
+        ];
+        let ts = busy_slots_timeseries(&events, 2, 2, 0.5);
+        // node 0 runs 2 tasks over [0,1) with 2 slots → fully busy
+        assert!((ts.value(0, 0.25) - 1.0).abs() < 1e-9);
+        // node 1 busy only in [0.5, 1) at half capacity
+        assert!((ts.value(1, 0.25)).abs() < 1e-9);
+        assert!((ts.value(1, 0.75) - 0.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,106 @@
+//! Fixed-interval per-node timeseries used for utilization reporting.
+
+/// Per-node sampled series with a fixed sample interval `dt`.
+#[derive(Clone, Debug)]
+pub struct Timeseries {
+    /// `series[node][sample]`.
+    pub series: Vec<Vec<f64>>,
+    pub dt: f64,
+}
+
+impl Timeseries {
+    /// A zeroed series covering `[0, end)` for `n_nodes` nodes.
+    pub fn new(n_nodes: usize, dt: f64, end: f64) -> Self {
+        assert!(dt > 0.0);
+        let samples = (end / dt).ceil().max(1.0) as usize;
+        Timeseries {
+            series: vec![vec![0.0; samples]; n_nodes],
+            dt,
+        }
+    }
+
+    pub fn n_samples(&self) -> usize {
+        self.series.first().map(|s| s.len()).unwrap_or(0)
+    }
+
+    /// Add `weight` to all samples overlapping `[start, end)` of `node`,
+    /// prorated by overlap fraction.
+    pub fn add_busy_interval(&mut self, node: usize, start: f64, end: f64, weight: f64) {
+        let s = &mut self.series[node];
+        if s.is_empty() || end <= start {
+            return;
+        }
+        let first = (start / self.dt).floor() as usize;
+        let last = ((end / self.dt).ceil() as usize).min(s.len());
+        for i in first..last {
+            let bin_lo = i as f64 * self.dt;
+            let bin_hi = bin_lo + self.dt;
+            let overlap = (end.min(bin_hi) - start.max(bin_lo)).max(0.0);
+            s[i] += weight * overlap / self.dt;
+        }
+    }
+
+    /// Add an instantaneous amount to the sample containing `t` (e.g.
+    /// bytes transferred at time t, for rate series).
+    pub fn add_at(&mut self, node: usize, t: f64, amount: f64) {
+        let s = &mut self.series[node];
+        if s.is_empty() {
+            return;
+        }
+        let i = ((t / self.dt) as usize).min(s.len() - 1);
+        s[i] += amount;
+    }
+
+    /// Sampled value of `node`'s series at time `t`.
+    pub fn value(&self, node: usize, t: f64) -> f64 {
+        let s = &self.series[node];
+        if s.is_empty() {
+            return 0.0;
+        }
+        let i = ((t / self.dt) as usize).min(s.len() - 1);
+        s[i]
+    }
+
+    /// (min, median, max) across nodes at sample `i` — the Figure 1 bands.
+    pub fn band(&self, i: usize) -> (f64, f64, f64) {
+        let vals: Vec<f64> = self.series.iter().map(|s| s[i]).collect();
+        crate::util::stats::min_med_max(&vals)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interval_prorated_across_bins() {
+        let mut ts = Timeseries::new(1, 1.0, 3.0);
+        ts.add_busy_interval(0, 0.5, 2.5, 1.0);
+        assert!((ts.series[0][0] - 0.5).abs() < 1e-12);
+        assert!((ts.series[0][1] - 1.0).abs() < 1e-12);
+        assert!((ts.series[0][2] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn add_at_clamps_to_range() {
+        let mut ts = Timeseries::new(1, 1.0, 2.0);
+        ts.add_at(0, 10.0, 5.0); // beyond end → last bin
+        assert_eq!(ts.series[0][1], 5.0);
+    }
+
+    #[test]
+    fn band_across_nodes() {
+        let mut ts = Timeseries::new(3, 1.0, 1.0);
+        ts.add_at(0, 0.0, 1.0);
+        ts.add_at(1, 0.0, 2.0);
+        ts.add_at(2, 0.0, 4.0);
+        assert_eq!(ts.band(0), (1.0, 2.0, 4.0));
+    }
+
+    #[test]
+    fn zero_length_interval_ignored() {
+        let mut ts = Timeseries::new(1, 1.0, 1.0);
+        ts.add_busy_interval(0, 0.5, 0.5, 1.0);
+        assert_eq!(ts.series[0][0], 0.0);
+    }
+}

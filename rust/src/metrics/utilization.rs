@@ -1,0 +1,121 @@
+//! Figure 1 report: cluster utilization bands over a run.
+//!
+//! The paper's Figure 1 plots, per resource (CPU, network in/out, disk
+//! read/write, S3 throughput), the median utilization across worker nodes
+//! with min/max envelopes. This module turns per-node [`Timeseries`] into
+//! that report and renders it as CSV (machine-readable regeneration of the
+//! figure) plus a coarse ASCII sparkline for terminals.
+
+use crate::metrics::Timeseries;
+
+/// One resource's sampled bands.
+#[derive(Clone, Debug)]
+pub struct UtilizationSample {
+    pub t: f64,
+    pub min: f64,
+    pub median: f64,
+    pub max: f64,
+}
+
+/// A named set of utilization bands (one per resource).
+#[derive(Clone, Debug, Default)]
+pub struct UtilizationReport {
+    /// (resource name, samples)
+    pub resources: Vec<(String, Vec<UtilizationSample>)>,
+}
+
+impl UtilizationReport {
+    /// Add a resource from a per-node series.
+    pub fn add_resource(&mut self, name: &str, ts: &Timeseries) {
+        let samples = (0..ts.n_samples())
+            .map(|i| {
+                let (min, median, max) = ts.band(i);
+                UtilizationSample {
+                    t: i as f64 * ts.dt,
+                    min,
+                    median,
+                    max,
+                }
+            })
+            .collect();
+        self.resources.push((name.to_string(), samples));
+    }
+
+    /// CSV with one row per (resource, t): `resource,t,min,median,max`.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("resource,t_seconds,min,median,max\n");
+        for (name, samples) in &self.resources {
+            for s in samples {
+                out.push_str(&format!(
+                    "{},{:.3},{:.6},{:.6},{:.6}\n",
+                    name, s.t, s.min, s.median, s.max
+                ));
+            }
+        }
+        out
+    }
+
+    /// Coarse ASCII rendering of the median series (terminal Figure 1).
+    pub fn to_ascii(&self, width: usize) -> String {
+        const GLYPHS: [char; 8] = [' ', '▁', '▂', '▃', '▄', '▅', '▆', '▇'];
+        let mut out = String::new();
+        for (name, samples) in &self.resources {
+            let peak = samples
+                .iter()
+                .map(|s| s.max)
+                .fold(f64::MIN_POSITIVE, f64::max);
+            let stride = (samples.len().max(1) + width - 1) / width;
+            let mut line = String::new();
+            for chunk in samples.chunks(stride.max(1)) {
+                let v = crate::util::stats::mean(
+                    &chunk.iter().map(|s| s.median).collect::<Vec<_>>(),
+                );
+                let level = ((v / peak) * 7.0).round().clamp(0.0, 7.0) as usize;
+                line.push(GLYPHS[level]);
+            }
+            out.push_str(&format!("{name:>12} |{line}| peak={peak:.3}\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_report() -> UtilizationReport {
+        let mut ts = Timeseries::new(2, 1.0, 4.0);
+        ts.add_busy_interval(0, 0.0, 4.0, 0.8);
+        ts.add_busy_interval(1, 1.0, 3.0, 0.4);
+        let mut rep = UtilizationReport::default();
+        rep.add_resource("cpu", &ts);
+        rep
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let csv = demo_report().to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "resource,t_seconds,min,median,max");
+        assert_eq!(lines.len(), 1 + 4);
+        assert!(lines[1].starts_with("cpu,0.000,"));
+    }
+
+    #[test]
+    fn bands_are_ordered() {
+        let rep = demo_report();
+        for (_, samples) in &rep.resources {
+            for s in samples {
+                assert!(s.min <= s.median && s.median <= s.max);
+            }
+        }
+    }
+
+    #[test]
+    fn ascii_renders_every_resource() {
+        let rep = demo_report();
+        let art = rep.to_ascii(10);
+        assert!(art.contains("cpu"));
+        assert!(art.contains('|'));
+    }
+}

@@ -1,0 +1,386 @@
+//! PJRT engine: loads the AOT HLO-text artifacts, compiles them once at
+//! startup, and executes them on the hot path.
+//!
+//! Interchange is HLO *text* (see `python/compile/aot.py` for why), parsed
+//! with `HloModuleProto::from_text_file` and compiled on the PJRT CPU
+//! client. One compiled executable per (graph, shape) artifact; calls pad
+//! inputs to the artifact's fixed shape with sentinels (u64::MAX keys /
+//! u32::MAX vals) which sort to the end and are truncated from outputs.
+
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context};
+
+use crate::runtime::SortResult;
+use crate::sortlib::radix;
+use crate::util::json::Json;
+
+/// An artifact compiled lazily on first use: XLA CPU compilation of the
+/// larger bitonic networks takes minutes (the 64Ki-record sort is a
+/// ~5000-op HLO module), so eager compilation of the full manifest would
+/// dominate startup; a run only pays for the shapes it executes.
+struct LazyExe {
+    proto: xla::HloModuleProto,
+    exe: once_cell::sync::OnceCell<xla::PjRtLoadedExecutable>,
+}
+
+impl LazyExe {
+    fn get(
+        &self,
+        client: &xla::PjRtClient,
+        name: &str,
+    ) -> anyhow::Result<&xla::PjRtLoadedExecutable> {
+        self.exe.get_or_try_init(|| {
+            let comp = xla::XlaComputation::from_proto(&self.proto);
+            client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))
+        })
+    }
+}
+
+/// A sort_and_partition artifact.
+struct SortExe {
+    n: usize,
+    c: usize,
+    name: String,
+    exe: LazyExe,
+}
+
+/// A merge_and_partition artifact.
+struct MergeExe {
+    r: usize,
+    l: usize,
+    c: usize,
+    name: String,
+    exe: LazyExe,
+}
+
+/// Identifier of a merge artifact shape usable for a direct merge call.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MergeShape {
+    /// Index into the engine's merge-exe table.
+    idx: usize,
+    pub r: usize,
+    pub l: usize,
+}
+
+/// The PJRT execution engine (thread-safe; executions serialize on an
+/// internal lock — the PJRT CPU client runs one computation at a time on
+/// this single-core testbed anyway).
+pub struct Engine {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    sort_exes: Vec<SortExe>,   // ascending by n
+    merge_exes: Vec<MergeExe>, // ascending by r * l
+    exec_lock: Mutex<()>,
+    /// Number of kernel executions (perf accounting).
+    calls: std::sync::atomic::AtomicU64,
+}
+
+// SAFETY: the `xla` crate's client/executable handles hold `Rc`s and raw
+// pointers into the PJRT C API, which makes them `!Send + !Sync` by
+// default. We uphold thread safety manually:
+//  - the client and executables are created once in `Engine::load`
+//    (single-threaded) and never cloned afterwards, so the `Rc` reference
+//    counts are never mutated concurrently;
+//  - every PJRT call after construction (`execute`, `to_literal_sync`)
+//    happens inside `execute3`, which holds `exec_lock` for its full
+//    duration — at most one thread touches the C API at a time;
+//  - `Literal` construction (pure host memory) is thread-safe.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+impl Engine {
+    /// Load and compile every artifact listed in `manifest.json`.
+    pub fn load(artifact_dir: &Path) -> anyhow::Result<Engine> {
+        let manifest_path = artifact_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!(
+                "reading {} (run `make artifacts` first)",
+                manifest_path.display()
+            )
+        })?;
+        let manifest =
+            Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        if manifest.get("format").and_then(|f| f.as_str()) != Some("hlo-text") {
+            return Err(anyhow!("unsupported artifact format"));
+        }
+        let client = xla::PjRtClient::cpu()?;
+        let mut sort_exes = Vec::new();
+        for entry in manifest.get("sort").map(|s| s.items()).unwrap_or(&[]) {
+            let file = required_str(entry, "file")?;
+            let n = required_u64(entry, "n")? as usize;
+            let c = required_u64(entry, "c")? as usize;
+            let exe = load_lazy(&artifact_dir.join(file))?;
+            sort_exes.push(SortExe {
+                n,
+                c,
+                name: file.to_string(),
+                exe,
+            });
+        }
+        let mut merge_exes = Vec::new();
+        for entry in manifest.get("merge").map(|s| s.items()).unwrap_or(&[]) {
+            let file = required_str(entry, "file")?;
+            let r = required_u64(entry, "r")? as usize;
+            let l = required_u64(entry, "l")? as usize;
+            let c = required_u64(entry, "c")? as usize;
+            let exe = load_lazy(&artifact_dir.join(file))?;
+            merge_exes.push(MergeExe {
+                r,
+                l,
+                c,
+                name: file.to_string(),
+                exe,
+            });
+        }
+        if sort_exes.is_empty() {
+            return Err(anyhow!("manifest lists no sort artifacts"));
+        }
+        sort_exes.sort_by_key(|e| e.n);
+        merge_exes.sort_by_key(|e| e.r * e.l);
+        Ok(Engine {
+            client,
+            sort_exes,
+            merge_exes,
+            exec_lock: Mutex::new(()),
+            calls: std::sync::atomic::AtomicU64::new(0),
+        })
+    }
+
+    /// Largest block the sort kernel accepts in one call.
+    pub fn max_sort_n(&self) -> usize {
+        self.sort_exes.last().unwrap().n
+    }
+
+    /// Preferred block size for planning: the largest artifact at or
+    /// below [`PREFERRED_SORT_CAP`]. XLA's CPU compile time grows
+    /// super-linearly in the bitonic network's op count (the 64Ki module
+    /// takes ~2.5 min vs ~1 min for 16Ki), while execution throughput per
+    /// record is nearly flat — so planning chunks at 16Ki and k-way
+    /// merging wins end-to-end (EXPERIMENTS.md §Perf).
+    pub fn preferred_sort_n(&self) -> usize {
+        self.sort_exes
+            .iter()
+            .rev()
+            .map(|e| e.n)
+            .find(|&n| n <= PREFERRED_SORT_CAP)
+            .unwrap_or_else(|| self.max_sort_n())
+    }
+
+    /// Kernel executions so far.
+    pub fn call_count(&self) -> u64 {
+        self.calls.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Sort a block with identity original indices.
+    pub fn sort_call(
+        &self,
+        keys: &[u64],
+        vals: &[u32],
+        cuts: &[u64],
+    ) -> anyhow::Result<SortResult> {
+        self.sort_call_with_vals(keys, vals, cuts)
+    }
+
+    /// Sort a block carrying caller-chosen original indices in `vals`.
+    pub fn sort_call_with_vals(
+        &self,
+        keys: &[u64],
+        vals: &[u32],
+        cuts: &[u64],
+    ) -> anyhow::Result<SortResult> {
+        assert_eq!(keys.len(), vals.len());
+        let n = keys.len();
+        let exe = self
+            .sort_exes
+            .iter()
+            .find(|e| e.n >= n)
+            .ok_or_else(|| {
+                anyhow!("block of {n} exceeds largest sort artifact")
+            })?;
+        // pad to the artifact shape
+        let mut pk = Vec::with_capacity(exe.n);
+        pk.extend_from_slice(keys);
+        pk.resize(exe.n, u64::MAX);
+        let mut pv = Vec::with_capacity(exe.n);
+        pv.extend_from_slice(vals);
+        pv.resize(exe.n, u32::MAX);
+        let kernel_cuts = cuts.len() <= exe.c;
+        let mut pc = Vec::with_capacity(exe.c);
+        if kernel_cuts {
+            pc.extend_from_slice(cuts);
+        }
+        pc.resize(exe.c, u64::MAX);
+
+        let (mut out_keys, mut out_perm, out_offs) =
+            self.execute3(&exe.exe, &exe.name, &pk, &[exe.n], &pv, &pc)?;
+        out_keys.truncate(n);
+        out_perm.truncate(n);
+        let offs = if kernel_cuts {
+            out_offs[..cuts.len()].to_vec()
+        } else {
+            radix::partition_offsets(&out_keys, cuts)
+        };
+        Ok(SortResult {
+            keys: out_keys,
+            perm: out_perm,
+            offs,
+        })
+    }
+
+    /// Smallest merge artifact fitting (`n_runs`, `max_run_len`), unless a
+    /// sort-kernel call over the same data would do less padded work.
+    pub fn fit_merge_shape(
+        &self,
+        n_runs: usize,
+        max_run_len: usize,
+    ) -> Option<MergeShape> {
+        if n_runs < 2 {
+            return None; // a single run needs no merge kernel
+        }
+        let fit = self
+            .merge_exes
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| e.r >= n_runs && e.l >= max_run_len)
+            .min_by_key(|(_, e)| e.r * e.l)?;
+        let (idx, e) = fit;
+        // padded-work comparison against the sort path (stage counts are
+        // structural: sort is log^2, merge is log r * log n-ish)
+        let total = n_runs * max_run_len;
+        let merge_work = (e.r * e.l) * merge_stages(e.r, e.l);
+        let sort_work = self
+            .sort_exes
+            .iter()
+            .find(|s| s.n >= total)
+            .map(|s| s.n * sort_stages(s.n))
+            .unwrap_or(usize::MAX);
+        if merge_work <= sort_work {
+            Some(MergeShape { idx, r: e.r, l: e.l })
+        } else {
+            None
+        }
+    }
+
+    /// Merge pre-sorted runs in one kernel call. `bases[i]` is the
+    /// original index of `run_keys[i][0]`; outputs carry original indices.
+    pub fn merge_call(
+        &self,
+        run_keys: &[&[u64]],
+        bases: &[u32],
+        shape: MergeShape,
+    ) -> anyhow::Result<SortResult> {
+        let e = &self.merge_exes[shape.idx];
+        assert!(run_keys.len() <= e.r);
+        let total: usize = run_keys.iter().map(|r| r.len()).sum();
+        let mut pk = vec![u64::MAX; e.r * e.l];
+        let mut pv = vec![u32::MAX; e.r * e.l];
+        for (i, (run, &base)) in run_keys.iter().zip(bases).enumerate() {
+            assert!(run.len() <= e.l);
+            pk[i * e.l..i * e.l + run.len()].copy_from_slice(run);
+            for (j, v) in pv[i * e.l..i * e.l + run.len()].iter_mut().enumerate()
+            {
+                *v = base + j as u32;
+            }
+        }
+        let pc = vec![u64::MAX; e.c];
+        let (mut out_keys, mut out_perm, _offs) =
+            self.execute3(&e.exe, &e.name, &pk, &[e.r, e.l], &pv, &pc)?;
+        out_keys.truncate(total);
+        out_perm.truncate(total);
+        Ok(SortResult {
+            keys: out_keys,
+            perm: out_perm,
+            offs: Vec::new(),
+        })
+    }
+
+    /// Execute a 3-output artifact: (keys, vals, cuts) -> (keys, perm, offs).
+    fn execute3(
+        &self,
+        lazy: &LazyExe,
+        name: &str,
+        keys: &[u64],
+        key_dims: &[usize],
+        vals: &[u32],
+        cuts: &[u64],
+    ) -> anyhow::Result<(Vec<u64>, Vec<u32>, Vec<u32>)> {
+        let k_lit = u64_literal(keys, key_dims)?;
+        let v_lit = u32_literal(vals, key_dims)?;
+        let c_lit = u64_literal(cuts, &[cuts.len()])?;
+        let _guard = self.exec_lock.lock().unwrap();
+        let exe = lazy.get(&self.client, name)?;
+        self.calls
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let result = exe.execute::<xla::Literal>(&[k_lit, v_lit, c_lit])?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let (ko, po, oo) = tuple.to_tuple3()?;
+        Ok((ko.to_vec::<u64>()?, po.to_vec::<u32>()?, oo.to_vec::<u32>()?))
+    }
+}
+
+/// Cap for [`Engine::preferred_sort_n`] (see its docs).
+pub const PREFERRED_SORT_CAP: usize = 16384;
+
+/// Structural stage counts (mirror python/compile/kernels formulas).
+fn sort_stages(n: usize) -> usize {
+    let logn = n.trailing_zeros() as usize;
+    logn * (logn + 1) / 2
+}
+
+fn merge_stages(mut r: usize, l: usize) -> usize {
+    let mut stages = 0;
+    let mut length = l;
+    while r > 1 {
+        length *= 2;
+        stages += length.trailing_zeros() as usize;
+        r /= 2;
+    }
+    stages
+}
+
+fn load_lazy(path: &PathBuf) -> anyhow::Result<LazyExe> {
+    let proto = xla::HloModuleProto::from_text_file(path)
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+    Ok(LazyExe {
+        proto,
+        exe: once_cell::sync::OnceCell::new(),
+    })
+}
+
+fn u64_literal(data: &[u64], dims: &[usize]) -> anyhow::Result<xla::Literal> {
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 8)
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::U64,
+        dims,
+        bytes,
+    )?)
+}
+
+fn u32_literal(data: &[u32], dims: &[usize]) -> anyhow::Result<xla::Literal> {
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::U32,
+        dims,
+        bytes,
+    )?)
+}
+
+fn required_str<'a>(j: &'a Json, key: &str) -> anyhow::Result<&'a str> {
+    j.get(key)
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow!("manifest entry missing '{key}'"))
+}
+
+fn required_u64(j: &Json, key: &str) -> anyhow::Result<u64> {
+    j.get(key)
+        .and_then(|v| v.as_u64())
+        .ok_or_else(|| anyhow!("manifest entry missing '{key}'"))
+}

@@ -1,0 +1,323 @@
+//! Compute runtime: executes the AOT-compiled Pallas/JAX kernels via PJRT
+//! (the request-path half of the three-layer architecture — Python never
+//! runs here), with a native Rust fallback used as the ablation baseline.
+//!
+//! The kernels have fixed shapes (AOT), so this layer also owns the
+//! *planning* logic that maps arbitrary task sizes onto them:
+//!
+//! - [`sort_and_partition`]: blocks larger than the biggest sort artifact
+//!   are chunk-sorted on the kernel and k-way merged; the partition
+//!   offsets come from the partition kernel when the cut count fits the
+//!   artifact, natively otherwise.
+//! - [`merge_and_partition`]: runs that fit a merge artifact directly are
+//!   merged in one kernel call; larger merges are *range-split* — each
+//!   run is divided at key-space midpoints (binary search, native) until
+//!   every bucket fits a kernel call, then buckets are processed
+//!   independently and concatenated. Uniform keys (the Indy benchmark)
+//!   split in O(log) levels.
+//!
+//! Values carried through the kernels are *original record indices*, so
+//! every result's `perm` indexes the caller's concatenated input directly
+//! and sentinel padding (u32::MAX vals / u64::MAX keys) filters out.
+
+pub mod engine;
+pub mod native;
+
+use std::sync::Arc;
+
+use crate::sortlib::radix;
+
+/// Result of a sort/merge + partition task.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SortResult {
+    /// Ascending partition keys (sentinels removed).
+    pub keys: Vec<u64>,
+    /// Permutation: output position -> index into the caller's input.
+    pub perm: Vec<u32>,
+    /// `offs[c] = #{keys < cuts[c]}` for the caller's cuts.
+    pub offs: Vec<u32>,
+}
+
+/// Which compute path executes the hot-spot kernels.
+#[derive(Clone)]
+pub enum Backend {
+    /// AOT-compiled Pallas/JAX kernels through PJRT (the paper system).
+    Xla(Arc<engine::Engine>),
+    /// Pure-Rust radix sort + heap merge (ablation baseline A2).
+    Native,
+}
+
+impl Backend {
+    /// Load the XLA backend from an artifact directory.
+    pub fn xla(artifact_dir: &std::path::Path) -> anyhow::Result<Backend> {
+        Ok(Backend::Xla(Arc::new(engine::Engine::load(artifact_dir)?)))
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Xla(_) => "xla",
+            Backend::Native => "native",
+        }
+    }
+}
+
+/// Sort a block of keys of any length; `perm` indexes the input block.
+pub fn sort_and_partition(
+    backend: &Backend,
+    keys: &[u64],
+    cuts: &[u64],
+) -> anyhow::Result<SortResult> {
+    match backend {
+        Backend::Native => Ok(native::sort_and_partition(keys, cuts)),
+        Backend::Xla(engine) => xla_sort_any(engine, keys, cuts),
+    }
+}
+
+/// Merge pre-sorted runs (each ascending); `perm` indexes the
+/// concatenation of `runs` in order.
+pub fn merge_and_partition(
+    backend: &Backend,
+    runs: &[&[u64]],
+    cuts: &[u64],
+) -> anyhow::Result<SortResult> {
+    match backend {
+        Backend::Native => Ok(native::merge_and_partition(runs, cuts)),
+        Backend::Xla(engine) => xla_merge_any(engine, runs, cuts),
+    }
+}
+
+/// Pre-compile the kernels a job of these shapes will execute (XLA
+/// compilation is lazy per artifact; warming it keeps minutes of one-time
+/// compile latency out of timed stages — the serving-system "load the
+/// model before opening the port" step).
+pub fn warmup(
+    backend: &Backend,
+    sort_block: usize,
+    merge_runs: usize,
+    merge_run_len: usize,
+) -> anyhow::Result<()> {
+    if let Backend::Native = backend {
+        return Ok(());
+    }
+    let mut rng = crate::util::rng::Xoshiro256::new(0xFEED);
+    let keys: Vec<u64> = (0..sort_block.max(2)).map(|_| rng.next_u64()).collect();
+    sort_and_partition(backend, &keys, &[1 << 63])?;
+    let runs: Vec<Vec<u64>> = (0..merge_runs.max(2))
+        .map(|_| {
+            let mut r: Vec<u64> =
+                (0..merge_run_len.max(2)).map(|_| rng.next_u64()).collect();
+            r.sort_unstable();
+            r
+        })
+        .collect();
+    let refs: Vec<&[u64]> = runs.iter().map(|r| r.as_slice()).collect();
+    merge_and_partition(backend, &refs, &[1 << 63])?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// XLA planning
+// ---------------------------------------------------------------------
+
+fn xla_sort_any(
+    engine: &engine::Engine,
+    keys: &[u64],
+    cuts: &[u64],
+) -> anyhow::Result<SortResult> {
+    let n = keys.len();
+    let max_n = engine.preferred_sort_n();
+    if n <= max_n {
+        // single kernel call; kernel offsets if cuts fit the artifact
+        let vals: Vec<u32> = (0..n as u32).collect();
+        return engine.sort_call(keys, &vals, cuts);
+    }
+    // chunk-sort on the kernel, then k-way merge natively
+    let mut sorted_chunks: Vec<(Vec<u64>, Vec<u32>)> = Vec::new();
+    for (ci, chunk) in keys.chunks(max_n).enumerate() {
+        let base = (ci * max_n) as u32;
+        let vals: Vec<u32> = (0..chunk.len() as u32).map(|i| base + i).collect();
+        let r = engine.sort_call_with_vals(chunk, &vals, &[])?;
+        sorted_chunks.push((r.keys, r.perm));
+    }
+    let run_refs: Vec<(&[u64], &[u32])> = sorted_chunks
+        .iter()
+        .map(|(k, v)| (k.as_slice(), v.as_slice()))
+        .collect();
+    let (keys_out, perm) = radix::kway_merge(&run_refs);
+    let offs = radix::partition_offsets(&keys_out, cuts);
+    Ok(SortResult {
+        keys: keys_out,
+        perm,
+        offs,
+    })
+}
+
+fn xla_merge_any(
+    engine: &engine::Engine,
+    runs: &[&[u64]],
+    cuts: &[u64],
+) -> anyhow::Result<SortResult> {
+    // global index base of each run in the concatenated input
+    let mut starts: Vec<u32> = Vec::with_capacity(runs.len());
+    let mut acc = 0u32;
+    for r in runs {
+        starts.push(acc);
+        acc += r.len() as u32;
+    }
+    let mut out = SortResult {
+        keys: Vec::with_capacity(acc as usize),
+        perm: Vec::with_capacity(acc as usize),
+        offs: Vec::new(),
+    };
+    // full key-range slices of every run
+    let slices: Vec<RunSlice> = runs
+        .iter()
+        .enumerate()
+        .filter(|(_, r)| !r.is_empty())
+        .map(|(i, r)| RunSlice {
+            run: i,
+            lo: 0,
+            hi: r.len(),
+        })
+        .collect();
+    merge_ranged(engine, runs, &starts, slices, 0, u64::MAX, &mut out)?;
+    out.offs = radix::partition_offsets(&out.keys, cuts);
+    Ok(out)
+}
+
+/// A contiguous sub-range of one input run.
+struct RunSlice {
+    run: usize,
+    lo: usize,
+    hi: usize,
+}
+
+/// Recursively merge the given run slices (all keys in `[lo_key, hi_key]`)
+/// into `out`, splitting the key range until a bucket fits a kernel call.
+fn merge_ranged(
+    engine: &engine::Engine,
+    runs: &[&[u64]],
+    starts: &[u32],
+    slices: Vec<RunSlice>,
+    lo_key: u64,
+    hi_key: u64,
+    out: &mut SortResult,
+) -> anyhow::Result<()> {
+    let total: usize = slices.iter().map(|s| s.hi - s.lo).sum();
+    if total == 0 {
+        return Ok(());
+    }
+    let max_len = slices.iter().map(|s| s.hi - s.lo).max().unwrap_or(0);
+
+    // (a) direct merge-kernel call if the shape fits an artifact
+    if let Some(shape) = engine.fit_merge_shape(slices.len(), max_len) {
+        let mut keys: Vec<&[u64]> = Vec::with_capacity(slices.len());
+        let mut bases: Vec<u32> = Vec::with_capacity(slices.len());
+        for s in &slices {
+            keys.push(&runs[s.run][s.lo..s.hi]);
+            bases.push(starts[s.run] + s.lo as u32);
+        }
+        let r = engine.merge_call(&keys, &bases, shape)?;
+        out.keys.extend_from_slice(&r.keys);
+        out.perm.extend_from_slice(&r.perm);
+        return Ok(());
+    }
+
+    // (b) bucket fits the sort kernel: concatenate and re-sort (bitonic is
+    // data-independent, so pre-sortedness costs nothing extra)
+    if total <= engine.preferred_sort_n() {
+        let mut keys = Vec::with_capacity(total);
+        let mut vals = Vec::with_capacity(total);
+        for s in &slices {
+            keys.extend_from_slice(&runs[s.run][s.lo..s.hi]);
+            vals.extend((s.lo..s.hi).map(|j| starts[s.run] + j as u32));
+        }
+        let r = engine.sort_call_with_vals(&keys, &vals, &[])?;
+        out.keys.extend_from_slice(&r.keys);
+        out.perm.extend_from_slice(&r.perm);
+        return Ok(());
+    }
+
+    // (c) split the key range and recurse
+    debug_assert!(lo_key < hi_key, "cannot split a single-key range");
+    let mid = lo_key + (hi_key - lo_key) / 2;
+    let mut left = Vec::new();
+    let mut right = Vec::new();
+    for s in slices {
+        let run = runs[s.run];
+        // keys <= mid go left
+        let split = s.lo + run[s.lo..s.hi].partition_point(|&k| k <= mid);
+        if split > s.lo {
+            left.push(RunSlice {
+                run: s.run,
+                lo: s.lo,
+                hi: split,
+            });
+        }
+        if split < s.hi {
+            right.push(RunSlice {
+                run: s.run,
+                lo: split,
+                hi: s.hi,
+            });
+        }
+    }
+    merge_ranged(engine, runs, starts, left, lo_key, mid, out)?;
+    merge_ranged(
+        engine,
+        runs,
+        starts,
+        right,
+        mid.saturating_add(1),
+        hi_key,
+        out,
+    )?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn native_backend_contract() {
+        let mut rng = Xoshiro256::new(1);
+        let keys: Vec<u64> = (0..1000).map(|_| rng.next_u64()).collect();
+        let cuts = crate::sortlib::reducer_cuts(4);
+        let r = sort_and_partition(&Backend::Native, &keys, &cuts).unwrap();
+        assert!(r.keys.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(r.perm.len(), 1000);
+        for (i, &p) in r.perm.iter().enumerate() {
+            assert_eq!(keys[p as usize], r.keys[i]);
+        }
+        assert_eq!(r.offs.len(), 3);
+    }
+
+    #[test]
+    fn native_merge_contract() {
+        let mut rng = Xoshiro256::new(2);
+        let mut a: Vec<u64> = (0..300).map(|_| rng.next_u64()).collect();
+        let mut b: Vec<u64> = (0..200).map(|_| rng.next_u64()).collect();
+        a.sort_unstable();
+        b.sort_unstable();
+        let r =
+            merge_and_partition(&Backend::Native, &[&a, &b], &[1 << 63]).unwrap();
+        assert_eq!(r.keys.len(), 500);
+        assert!(r.keys.windows(2).all(|w| w[0] <= w[1]));
+        // perm indexes the concatenation [a, b]
+        let concat: Vec<u64> = a.iter().chain(b.iter()).copied().collect();
+        for (i, &p) in r.perm.iter().enumerate() {
+            assert_eq!(concat[p as usize], r.keys[i]);
+        }
+    }
+
+    #[test]
+    fn empty_inputs() {
+        let r = sort_and_partition(&Backend::Native, &[], &[5]).unwrap();
+        assert!(r.keys.is_empty());
+        assert_eq!(r.offs, vec![0]);
+        let r = merge_and_partition(&Backend::Native, &[], &[]).unwrap();
+        assert!(r.keys.is_empty());
+    }
+}

@@ -1,0 +1,75 @@
+//! Native Rust implementation of the compute contract — the ablation
+//! baseline (DESIGN.md experiment A2) standing in for the paper's C++
+//! component, and a convenient oracle for cross-checking the XLA path.
+
+use crate::runtime::SortResult;
+use crate::sortlib::radix;
+
+/// Radix-sort a key block; `perm` indexes the input block.
+pub fn sort_and_partition(keys: &[u64], cuts: &[u64]) -> SortResult {
+    let vals: Vec<u32> = (0..keys.len() as u32).collect();
+    let (sorted, perm) = radix::sort_pairs(keys, &vals);
+    let offs = radix::partition_offsets(&sorted, cuts);
+    SortResult {
+        keys: sorted,
+        perm,
+        offs,
+    }
+}
+
+/// Heap-merge pre-sorted runs; `perm` indexes the concatenation of runs.
+pub fn merge_and_partition(runs: &[&[u64]], cuts: &[u64]) -> SortResult {
+    let mut starts = Vec::with_capacity(runs.len());
+    let mut acc = 0u32;
+    for r in runs {
+        starts.push(acc);
+        acc += r.len() as u32;
+    }
+    let vals: Vec<Vec<u32>> = runs
+        .iter()
+        .zip(&starts)
+        .map(|(r, &s)| (s..s + r.len() as u32).collect())
+        .collect();
+    let pairs: Vec<(&[u64], &[u32])> = runs
+        .iter()
+        .zip(&vals)
+        .map(|(k, v)| (*k, v.as_slice()))
+        .collect();
+    let (keys, perm) = radix::kway_merge(&pairs);
+    let offs = radix::partition_offsets(&keys, cuts);
+    SortResult { keys, perm, offs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn sort_is_a_permutation() {
+        let mut rng = Xoshiro256::new(5);
+        let keys: Vec<u64> = (0..777).map(|_| rng.next_u64()).collect();
+        let r = sort_and_partition(&keys, &[]);
+        let mut seen = vec![false; keys.len()];
+        for &p in &r.perm {
+            assert!(!seen[p as usize]);
+            seen[p as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn merge_offsets_match_sort_offsets() {
+        let mut rng = Xoshiro256::new(6);
+        let mut a: Vec<u64> = (0..100).map(|_| rng.next_u64()).collect();
+        let mut b: Vec<u64> = (0..150).map(|_| rng.next_u64()).collect();
+        a.sort_unstable();
+        b.sort_unstable();
+        let cuts = crate::sortlib::reducer_cuts(5);
+        let merged = merge_and_partition(&[&a, &b], &cuts);
+        let all: Vec<u64> = a.iter().chain(b.iter()).copied().collect();
+        let sorted = sort_and_partition(&all, &cuts);
+        assert_eq!(merged.keys, sorted.keys);
+        assert_eq!(merged.offs, sorted.offs);
+    }
+}

@@ -1,0 +1,118 @@
+//! Deterministic fault injection for S3 requests.
+//!
+//! The paper (§2.5) relies on the distributed-futures system to retry
+//! "network failures and worker process failures" transparently. To test
+//! that path we inject failures deterministically: a `FaultPlan` fails a
+//! request with probability `p`, decided by hashing (op, bucket, key,
+//! attempt counter) with a seed — reproducible across runs, and a retried
+//! request (new attempt index) can succeed, like a transient network error.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::rng::mix;
+
+/// A deterministic fault-injection plan.
+#[derive(Debug)]
+pub struct FaultPlan {
+    /// Failure probability in [0, 1] applied per request.
+    pub probability: f64,
+    /// RNG seed; same seed + same request sequence = same failures.
+    pub seed: u64,
+    /// Maximum number of failures to inject (guards against livelock in
+    /// tests); u64::MAX = unlimited.
+    pub max_failures: u64,
+    injected: AtomicU64,
+    sequence: AtomicU64,
+}
+
+impl FaultPlan {
+    /// No faults.
+    pub fn none() -> Self {
+        Self::with_probability(0.0, 0)
+    }
+
+    /// Fail each request independently with probability `p`.
+    pub fn with_probability(p: f64, seed: u64) -> Self {
+        Self {
+            probability: p,
+            seed,
+            max_failures: u64::MAX,
+            injected: AtomicU64::new(0),
+            sequence: AtomicU64::new(0),
+        }
+    }
+
+    /// Cap the total number of injected failures.
+    pub fn capped(mut self, max: u64) -> Self {
+        self.max_failures = max;
+        self
+    }
+
+    /// Decide whether this request fails (advances the plan's sequence).
+    pub fn should_fail(&self, op: &str, bucket: &str, key: &str) -> bool {
+        if self.probability <= 0.0 {
+            return false;
+        }
+        let seq = self.sequence.fetch_add(1, Ordering::Relaxed);
+        let mut h = self.seed ^ seq.wrapping_mul(0x9E3779B97F4A7C15);
+        for b in op.bytes().chain(bucket.bytes()).chain(key.bytes()) {
+            h = mix(h ^ b as u64);
+        }
+        let draw = (mix(h) >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        if draw < self.probability {
+            let prior = self.injected.fetch_add(1, Ordering::Relaxed);
+            if prior < self.max_failures {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Failures injected so far.
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed).min(self.max_failures)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_probability_never_fails() {
+        let p = FaultPlan::none();
+        for i in 0..1000 {
+            assert!(!p.should_fail("GET", "b", &format!("k{i}")));
+        }
+    }
+
+    #[test]
+    fn probability_roughly_respected() {
+        let p = FaultPlan::with_probability(0.25, 42);
+        let fails = (0..10_000)
+            .filter(|i| p.should_fail("GET", "b", &format!("k{i}")))
+            .count();
+        assert!((2000..3000).contains(&fails), "fails={fails}");
+    }
+
+    #[test]
+    fn retry_can_succeed() {
+        // with p=0.5 the same (op,bucket,key) retried must eventually pass
+        let p = FaultPlan::with_probability(0.5, 7);
+        let mut attempts = 0;
+        while p.should_fail("PUT", "b", "same-key") {
+            attempts += 1;
+            assert!(attempts < 100, "no retry ever succeeded");
+        }
+    }
+
+    #[test]
+    fn cap_limits_injection() {
+        let p = FaultPlan::with_probability(1.0, 3).capped(5);
+        let fails = (0..100)
+            .filter(|i| p.should_fail("GET", "b", &format!("k{i}")))
+            .count();
+        assert_eq!(fails, 5);
+        assert_eq!(p.injected(), 5);
+    }
+}

@@ -1,0 +1,321 @@
+//! Amazon S3 stand-in (DESIGN.md "Substitutions").
+//!
+//! What Table 2's cost model needs from S3 is *exact request accounting*:
+//! the paper downloads each 2 GB input partition in 16 MiB-chunk GETs
+//! (120/task) and uploads ~4 GB output partitions in 100 MB-chunk PUTs
+//! (40/task). This module reproduces those semantics: a bucketed object
+//! store with chunked GET/PUT, per-request counters, and deterministic
+//! failure injection so the distributed-futures layer's retry path is
+//! exercised exactly like "network failures" in the paper's §2.5.
+
+pub mod faults;
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use faults::FaultPlan;
+
+/// GET chunk size: 16 MiB (paper §3.3.2: 120 GETs per 2 GB partition).
+pub const GET_CHUNK: u64 = 16 * 1024 * 1024;
+/// PUT chunk size: 100 MB, decimal, as in the paper (40 PUTs per ~4 GB).
+pub const PUT_CHUNK: u64 = 100 * 1000 * 1000;
+
+/// Errors surfaced to tasks — retryable per the paper's fault model.
+#[derive(Debug, thiserror::Error)]
+pub enum S3Error {
+    #[error("no such bucket: {0}")]
+    NoSuchBucket(String),
+    #[error("no such key: {0}/{1}")]
+    NoSuchKey(String, String),
+    #[error("injected request failure ({op} {bucket}/{key})")]
+    InjectedFailure {
+        op: &'static str,
+        bucket: String,
+        key: String,
+    },
+}
+
+/// Request/byte counters backing the Table 2 data-access cost rows.
+#[derive(Debug, Default)]
+pub struct Counters {
+    pub get_requests: AtomicU64,
+    pub put_requests: AtomicU64,
+    pub bytes_downloaded: AtomicU64,
+    pub bytes_uploaded: AtomicU64,
+    pub failed_requests: AtomicU64,
+}
+
+/// Point-in-time snapshot of the counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CounterSnapshot {
+    pub get_requests: u64,
+    pub put_requests: u64,
+    pub bytes_downloaded: u64,
+    pub bytes_uploaded: u64,
+    pub failed_requests: u64,
+}
+
+type Bucket = HashMap<String, Arc<Vec<u8>>>;
+
+/// The simulated S3 service. Cheap to clone (shared state).
+#[derive(Clone)]
+pub struct S3 {
+    inner: Arc<Inner>,
+}
+
+struct Inner {
+    buckets: RwLock<HashMap<String, RwLock<Bucket>>>,
+    counters: Counters,
+    faults: RwLock<FaultPlan>,
+}
+
+impl S3 {
+    /// A fresh service with `n` buckets named `bucket-000..`, matching the
+    /// paper's 40-bucket layout.
+    pub fn with_buckets(n: usize) -> Self {
+        let s3 = Self {
+            inner: Arc::new(Inner {
+                buckets: RwLock::new(HashMap::new()),
+                counters: Counters::default(),
+                faults: RwLock::new(FaultPlan::none()),
+            }),
+        };
+        for i in 0..n {
+            s3.create_bucket(&format!("bucket-{i:03}"));
+        }
+        s3
+    }
+
+    /// Install a fault-injection plan (tests / FT experiments).
+    pub fn set_faults(&self, plan: FaultPlan) {
+        *self.inner.faults.write().unwrap() = plan;
+    }
+
+    pub fn create_bucket(&self, name: &str) {
+        self.inner
+            .buckets
+            .write()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(|| RwLock::new(HashMap::new()));
+    }
+
+    pub fn bucket_names(&self) -> Vec<String> {
+        let mut v: Vec<String> =
+            self.inner.buckets.read().unwrap().keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Upload an object, accounting one PUT request per 100 MB chunk
+    /// (multipart upload). Fails atomically on injected faults.
+    pub fn put(&self, bucket: &str, key: &str, data: Vec<u8>) -> Result<(), S3Error> {
+        let n_chunks = chunk_count(data.len() as u64, PUT_CHUNK);
+        if self.inner.faults.read().unwrap().should_fail("PUT", bucket, key) {
+            self.inner.counters.failed_requests.fetch_add(1, Ordering::Relaxed);
+            return Err(S3Error::InjectedFailure {
+                op: "PUT",
+                bucket: bucket.into(),
+                key: key.into(),
+            });
+        }
+        self.inner
+            .counters
+            .put_requests
+            .fetch_add(n_chunks, Ordering::Relaxed);
+        self.inner
+            .counters
+            .bytes_uploaded
+            .fetch_add(data.len() as u64, Ordering::Relaxed);
+        let buckets = self.inner.buckets.read().unwrap();
+        let b = buckets
+            .get(bucket)
+            .ok_or_else(|| S3Error::NoSuchBucket(bucket.into()))?;
+        b.write().unwrap().insert(key.to_string(), Arc::new(data));
+        Ok(())
+    }
+
+    /// Download a whole object, accounting one GET per 16 MiB chunk.
+    pub fn get(&self, bucket: &str, key: &str) -> Result<Arc<Vec<u8>>, S3Error> {
+        if self.inner.faults.read().unwrap().should_fail("GET", bucket, key) {
+            self.inner.counters.failed_requests.fetch_add(1, Ordering::Relaxed);
+            return Err(S3Error::InjectedFailure {
+                op: "GET",
+                bucket: bucket.into(),
+                key: key.into(),
+            });
+        }
+        let buckets = self.inner.buckets.read().unwrap();
+        let b = buckets
+            .get(bucket)
+            .ok_or_else(|| S3Error::NoSuchBucket(bucket.into()))?;
+        let data = b
+            .read()
+            .unwrap()
+            .get(key)
+            .cloned()
+            .ok_or_else(|| S3Error::NoSuchKey(bucket.into(), key.into()))?;
+        let n_chunks = chunk_count(data.len() as u64, GET_CHUNK);
+        self.inner
+            .counters
+            .get_requests
+            .fetch_add(n_chunks, Ordering::Relaxed);
+        self.inner
+            .counters
+            .bytes_downloaded
+            .fetch_add(data.len() as u64, Ordering::Relaxed);
+        Ok(data)
+    }
+
+    /// Object size without a GET (HEAD-ish; free in the cost model).
+    pub fn size_of(&self, bucket: &str, key: &str) -> Result<u64, S3Error> {
+        let buckets = self.inner.buckets.read().unwrap();
+        let b = buckets
+            .get(bucket)
+            .ok_or_else(|| S3Error::NoSuchBucket(bucket.into()))?;
+        let size = b.read().unwrap().get(key).map(|d| d.len() as u64);
+        size.ok_or_else(|| S3Error::NoSuchKey(bucket.into(), key.into()))
+    }
+
+    pub fn delete(&self, bucket: &str, key: &str) -> Result<(), S3Error> {
+        let buckets = self.inner.buckets.read().unwrap();
+        let b = buckets
+            .get(bucket)
+            .ok_or_else(|| S3Error::NoSuchBucket(bucket.into()))?;
+        b.write().unwrap().remove(key);
+        Ok(())
+    }
+
+    /// Total bytes currently stored (for storage-cost checks).
+    pub fn total_bytes(&self) -> u64 {
+        let buckets = self.inner.buckets.read().unwrap();
+        buckets
+            .values()
+            .map(|b| {
+                b.read()
+                    .unwrap()
+                    .values()
+                    .map(|d| d.len() as u64)
+                    .sum::<u64>()
+            })
+            .sum()
+    }
+
+    pub fn counters(&self) -> CounterSnapshot {
+        let c = &self.inner.counters;
+        CounterSnapshot {
+            get_requests: c.get_requests.load(Ordering::Relaxed),
+            put_requests: c.put_requests.load(Ordering::Relaxed),
+            bytes_downloaded: c.bytes_downloaded.load(Ordering::Relaxed),
+            bytes_uploaded: c.bytes_uploaded.load(Ordering::Relaxed),
+            failed_requests: c.failed_requests.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn reset_counters(&self) {
+        let c = &self.inner.counters;
+        c.get_requests.store(0, Ordering::Relaxed);
+        c.put_requests.store(0, Ordering::Relaxed);
+        c.bytes_downloaded.store(0, Ordering::Relaxed);
+        c.bytes_uploaded.store(0, Ordering::Relaxed);
+        c.failed_requests.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Requests needed to move `bytes` in chunks of `chunk` (min 1 for a
+/// non-empty transfer; an empty object still costs one request).
+pub fn chunk_count(bytes: u64, chunk: u64) -> u64 {
+    if bytes == 0 {
+        1
+    } else {
+        (bytes + chunk - 1) / chunk
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_roundtrip() {
+        let s3 = S3::with_buckets(2);
+        s3.put("bucket-000", "k", vec![1, 2, 3]).unwrap();
+        assert_eq!(*s3.get("bucket-000", "k").unwrap(), vec![1, 2, 3]);
+        assert_eq!(s3.size_of("bucket-000", "k").unwrap(), 3);
+    }
+
+    #[test]
+    fn missing_bucket_and_key() {
+        let s3 = S3::with_buckets(1);
+        assert!(matches!(
+            s3.get("nope", "k"),
+            Err(S3Error::NoSuchBucket(_))
+        ));
+        assert!(matches!(
+            s3.get("bucket-000", "k"),
+            Err(S3Error::NoSuchKey(_, _))
+        ));
+    }
+
+    #[test]
+    fn request_accounting_matches_paper_chunking() {
+        // 2 GB partition -> 120 GETs (paper §3.3.2)
+        assert_eq!(chunk_count(2_000_000_000, GET_CHUNK), 120);
+        // ~4 GB output -> 40 PUTs
+        assert_eq!(chunk_count(4_000_000_000, PUT_CHUNK), 40);
+
+        let s3 = S3::with_buckets(1);
+        let two_mib = vec![0u8; 2 * 1024 * 1024];
+        s3.put("bucket-000", "a", two_mib).unwrap(); // 1 PUT
+        s3.get("bucket-000", "a").unwrap(); // 1 GET
+        let big = vec![0u8; (GET_CHUNK + 1) as usize];
+        s3.put("bucket-000", "b", big).unwrap(); // 1 PUT (< 100MB)
+        s3.get("bucket-000", "b").unwrap(); // 2 GETs
+        let c = s3.counters();
+        assert_eq!(c.put_requests, 2);
+        assert_eq!(c.get_requests, 3);
+        assert_eq!(c.bytes_uploaded, 2 * 1024 * 1024 + GET_CHUNK + 1);
+    }
+
+    #[test]
+    fn total_bytes_tracks_store() {
+        let s3 = S3::with_buckets(2);
+        s3.put("bucket-000", "a", vec![0; 10]).unwrap();
+        s3.put("bucket-001", "b", vec![0; 20]).unwrap();
+        assert_eq!(s3.total_bytes(), 30);
+        s3.delete("bucket-000", "a").unwrap();
+        assert_eq!(s3.total_bytes(), 20);
+    }
+
+    #[test]
+    fn overwrite_replaces() {
+        let s3 = S3::with_buckets(1);
+        s3.put("bucket-000", "k", vec![1]).unwrap();
+        s3.put("bucket-000", "k", vec![2, 3]).unwrap();
+        assert_eq!(*s3.get("bucket-000", "k").unwrap(), vec![2, 3]);
+        assert_eq!(s3.total_bytes(), 2);
+    }
+
+    #[test]
+    fn concurrent_access() {
+        let s3 = S3::with_buckets(4);
+        let handles: Vec<_> = (0..8)
+            .map(|t| {
+                let s3 = s3.clone();
+                std::thread::spawn(move || {
+                    for i in 0..50 {
+                        let bucket = format!("bucket-{:03}", t % 4);
+                        let key = format!("t{t}-{i}");
+                        s3.put(&bucket, &key, vec![t as u8; 64]).unwrap();
+                        assert_eq!(s3.get(&bucket, &key).unwrap().len(), 64);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(s3.counters().put_requests, 400);
+    }
+}

@@ -1,0 +1,719 @@
+//! Discrete-event simulator: replays the full 100 TB / 40-node CloudSort
+//! run in virtual time (DESIGN.md "Substitutions" — we do not have the
+//! paper's AWS testbed).
+//!
+//! The simulator executes the *same control-plane policies* as the real
+//! coordinator — map admission with merge-controller backpressure, the
+//! 40-block merge threshold, per-node merge/reduce pinning, the stage
+//! barrier — against a resource model of the testbed (§3.1): per-node
+//! task-slot pools, fair-shared NIC / NVMe / S3 bandwidth, and per-task
+//! compute rates calibrated so that *individual task durations* match the
+//! paper's measured averages (map 24 s incl. 15 s download, merge 17 s,
+//! reduce 22 s). Stage times (Table 1) and utilization curves (Figure 1)
+//! are then *outputs* of scheduling + contention, not inputs.
+
+pub mod taskmodel;
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+
+use crate::coordinator::JobSpec;
+use crate::metrics::{TaskEvent, Timeseries, UtilizationReport};
+use crate::s3sim::{GET_CHUNK, PUT_CHUNK};
+use crate::util::rng::Xoshiro256;
+pub use taskmodel::TaskRates;
+
+/// Simulator configuration.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub spec: JobSpec,
+    pub rates: TaskRates,
+    /// Multiplicative task-duration jitter (0.05 = ±5%).
+    pub noise: f64,
+    pub seed: u64,
+    /// Samples for the Figure 1 utilization series.
+    pub fig1_bins: usize,
+}
+
+impl SimConfig {
+    /// The paper's 100 TB benchmark configuration.
+    pub fn paper_100tb() -> SimConfig {
+        SimConfig {
+            spec: JobSpec::paper_100tb(),
+            rates: TaskRates::calibrated(),
+            noise: 0.08,
+            seed: 1,
+            fig1_bins: 512,
+        }
+    }
+}
+
+/// Result of a simulated run (Table 1 row + Figure 1 inputs).
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    pub map_shuffle_secs: f64,
+    pub reduce_secs: f64,
+    pub total_secs: f64,
+    pub mean_map_secs: f64,
+    pub mean_map_download_secs: f64,
+    pub mean_shuffle_secs: f64,
+    pub mean_merge_secs: f64,
+    pub mean_reduce_secs: f64,
+    pub get_requests: u64,
+    pub put_requests: u64,
+    /// Peak per-node count of shuffled-but-unmerged blocks (buffered +
+    /// queued for merge) — the memory exposure that §2.3 backpressure
+    /// bounds (ablation A1).
+    pub peak_unmerged_blocks: usize,
+    pub events: Vec<TaskEvent>,
+    pub utilization: UtilizationReport,
+}
+
+impl SimResult {
+    pub fn table1_row(&self) -> (f64, f64, f64) {
+        (self.map_shuffle_secs, self.reduce_secs, self.total_secs)
+    }
+}
+
+// --------------------------------------------------------------------
+// internals
+// --------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Kind {
+    Map,
+    Merge,
+    Reduce,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Phase {
+    S3Down,
+    Cpu,
+    NetSend,
+    DiskWrite,
+    DiskRead,
+    S3Up,
+    Done,
+}
+
+#[derive(Clone, Debug)]
+struct Task {
+    kind: Kind,
+    node: usize,
+    bytes: u64,
+    phase: Phase,
+    start: f64,
+    /// Map only: records the download-phase duration for reporting.
+    download_secs: f64,
+    /// Merge only: number of map blocks this merge covers (tail batches
+    /// are smaller than the threshold).
+    blocks: usize,
+    /// Per-task noise factor.
+    noise: f64,
+}
+
+/// Per-node active-phase counters for fair-share bandwidth snapshots.
+#[derive(Clone, Debug, Default)]
+struct NodeLoad {
+    net: u32,
+    disk: u32,
+    cpu: u32,
+    /// Subset of `net` that is S3 traffic (node-cap accounting).
+    s3: u32,
+}
+
+struct Sim<'a> {
+    cfg: &'a SimConfig,
+    clock: f64,
+    queue: BinaryHeap<Reverse<(OrdF64, usize)>>, // (completion time, task id)
+    tasks: Vec<Task>,
+    load: Vec<NodeLoad>,
+    // control-plane state (mirrors coordinator::map_shuffle_stage)
+    maps_submitted: usize,
+    maps_done: usize,
+    map_slots_free: Vec<usize>,
+    blocks_buffered: Vec<usize>,
+    blocks_inflight_merge: Vec<usize>,
+    merges_done: usize,
+    merges_total_launched: usize,
+    merge_slots_free: Vec<usize>,
+    merge_queue: Vec<VecDeque<usize>>, // queued merge batch sizes per node
+    // reduce stage
+    reduce_slots_free: Vec<usize>,
+    reduce_queue: Vec<usize>,
+    reduces_done: usize,
+    peak_unmerged: usize,
+    // metrics
+    events: Vec<TaskEvent>,
+    rng: Xoshiro256,
+    ts_cpu: Timeseries,
+    ts_net_in: Timeseries,
+    ts_net_out: Timeseries,
+    ts_disk_r: Timeseries,
+    ts_disk_w: Timeseries,
+}
+
+/// f64 ordered wrapper for the event heap (no NaNs by construction).
+#[derive(Clone, Copy, PartialEq, PartialOrd)]
+struct OrdF64(f64);
+impl Eq for OrdF64 {}
+#[allow(clippy::derive_ord_xor_partial_ord)]
+impl Ord for OrdF64 {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.partial_cmp(other).unwrap()
+    }
+}
+
+/// Run the simulation.
+pub fn simulate(cfg: &SimConfig) -> SimResult {
+    let spec = &cfg.spec;
+    let w = spec.n_workers();
+    let par = spec.cluster.task_parallelism();
+    // generous horizon estimate for the timeseries; trimmed at the end
+    let horizon = estimate_horizon(cfg);
+    let dt = horizon / cfg.fig1_bins as f64;
+    let sim = Sim {
+        cfg,
+        clock: 0.0,
+        queue: BinaryHeap::new(),
+        tasks: Vec::new(),
+        load: vec![NodeLoad::default(); w],
+        maps_submitted: 0,
+        maps_done: 0,
+        map_slots_free: vec![par; w],
+        blocks_buffered: vec![0; w],
+        blocks_inflight_merge: vec![0; w],
+        merges_done: 0,
+        merges_total_launched: 0,
+        merge_slots_free: vec![par; w],
+        merge_queue: vec![VecDeque::new(); w],
+        reduce_slots_free: vec![cfg.rates.reduce_slots; w],
+        reduce_queue: vec![0; w],
+        reduces_done: 0,
+        peak_unmerged: 0,
+        events: Vec::new(),
+        rng: Xoshiro256::new(cfg.seed),
+        ts_cpu: Timeseries::new(w, dt, horizon),
+        ts_net_in: Timeseries::new(w, dt, horizon),
+        ts_net_out: Timeseries::new(w, dt, horizon),
+        ts_disk_r: Timeseries::new(w, dt, horizon),
+        ts_disk_w: Timeseries::new(w, dt, horizon),
+    };
+    sim.run()
+}
+
+fn estimate_horizon(cfg: &SimConfig) -> f64 {
+    // rough upper bound: serial slot-seconds / slots, ×2 margin
+    let spec = &cfg.spec;
+    let per_node_maps =
+        spec.n_input_partitions as f64 / spec.n_workers() as f64;
+    let slot_secs = per_node_maps * 30.0 * 2.5;
+    (slot_secs / spec.cluster.task_parallelism() as f64) * 2.0 + 600.0
+}
+
+impl<'a> Sim<'a> {
+    fn run(mut self) -> SimResult {
+        let spec = &self.cfg.spec;
+        // --- stage 1: map & shuffle ---
+        self.admit_maps();
+        let mut map_shuffle_end = 0.0;
+        while let Some(Reverse((OrdF64(t), tid))) = self.queue.pop() {
+            self.clock = t;
+            self.step_task(tid);
+            if self.stage1_done() {
+                map_shuffle_end = self.clock;
+                break;
+            }
+        }
+        assert!(self.stage1_done(), "simulation stalled in map&shuffle");
+
+        // --- stage 2: reduce (barrier semantics, §2.4) ---
+        let r1 = spec.reducers_per_worker();
+        for node in 0..spec.n_workers() {
+            self.reduce_queue[node] = r1;
+        }
+        for node in 0..spec.n_workers() {
+            self.start_queued_reduces(node);
+        }
+        while let Some(Reverse((OrdF64(t), tid))) = self.queue.pop() {
+            self.clock = t;
+            self.step_task(tid);
+        }
+        assert_eq!(
+            self.reduces_done, spec.n_output_partitions,
+            "simulation stalled in reduce"
+        );
+        let reduce_end = self.clock;
+
+        // --- assemble result ---
+        let per_in = spec.records_per_partition()
+            * crate::sortlib::RECORD_SIZE as u64;
+        let out_bytes = spec.total_bytes / spec.n_output_partitions as u64;
+        let get_requests = spec.n_input_partitions as u64
+            * crate::s3sim::chunk_count(per_in, GET_CHUNK);
+        let put_requests = spec.n_output_partitions as u64
+            * crate::s3sim::chunk_count(out_bytes, PUT_CHUNK);
+
+        let mut utilization = UtilizationReport::default();
+        utilization.add_resource("cpu", &self.ts_cpu);
+        utilization.add_resource("net_in_bps", &self.ts_net_in);
+        utilization.add_resource("net_out_bps", &self.ts_net_out);
+        utilization.add_resource("disk_read_bps", &self.ts_disk_r);
+        utilization.add_resource("disk_write_bps", &self.ts_disk_w);
+
+        let mean = |k: &str| crate::metrics::mean_duration(&self.events, k);
+        SimResult {
+            map_shuffle_secs: map_shuffle_end,
+            reduce_secs: reduce_end - map_shuffle_end,
+            total_secs: reduce_end,
+            mean_map_secs: mean("map"),
+            mean_map_download_secs: {
+                let d: Vec<f64> = self
+                    .tasks
+                    .iter()
+                    .filter(|t| t.kind == Kind::Map)
+                    .map(|t| t.download_secs)
+                    .collect();
+                crate::util::stats::mean(&d)
+            },
+            mean_shuffle_secs: mean("shuffle"),
+            mean_merge_secs: mean("merge"),
+            mean_reduce_secs: mean("reduce"),
+            get_requests,
+            put_requests,
+            peak_unmerged_blocks: self.peak_unmerged,
+            events: self.events,
+            utilization,
+        }
+    }
+
+    fn stage1_done(&self) -> bool {
+        self.maps_done == self.cfg.spec.n_input_partitions
+            && self.merges_done == self.merges_total_launched
+            && self
+                .blocks_buffered
+                .iter()
+                .zip(&self.blocks_inflight_merge)
+                .all(|(b, i)| *b == 0 && *i == 0)
+            && self.merge_queue.iter().all(|q| q.is_empty())
+    }
+
+    // --- control plane ------------------------------------------------
+
+    /// Admit map tasks while slots are free and backpressure allows
+    /// (paper §2.3: the controller "holds off acknowledging" when its
+    /// buffer is full and merges are saturated).
+    fn admit_maps(&mut self) {
+        let spec = &self.cfg.spec;
+        loop {
+            if self.maps_submitted >= spec.n_input_partitions {
+                return;
+            }
+            // S2.3: hold off "when the number of merge tasks reaches the
+            // maximum parallelism, AND the merge controller's in-memory
+            // buffer is filled up" -- blocks inside running merges do not
+            // count against the buffer.
+            let blocked = spec.backpressure
+                && (0..spec.n_workers()).any(|n| {
+                    self.merge_slots_free[n] == 0
+                        && self.blocks_buffered[n]
+                            + self.merge_queue[n].iter().sum::<usize>()
+                            >= spec.max_buffered_blocks
+                });
+            if blocked {
+                return;
+            }
+            // least-loaded node with a free map slot
+            let Some(node) = (0..spec.n_workers())
+                .filter(|&n| self.map_slots_free[n] > 0)
+                .max_by_key(|&n| self.map_slots_free[n])
+            else {
+                return;
+            };
+            self.map_slots_free[node] -= 1;
+            self.maps_submitted += 1;
+            let bytes = spec.records_per_partition()
+                * crate::sortlib::RECORD_SIZE as u64;
+            self.spawn_task(Kind::Map, node, bytes);
+        }
+    }
+
+    /// A merge controller received blocks; launch merges at threshold if
+    /// a merge slot is free (otherwise they queue — that queue is what
+    /// back-pressures the map admission).
+    fn poll_merge_controller(&mut self, node: usize) {
+        let spec = &self.cfg.spec;
+        let exposure = self.blocks_buffered[node]
+            + self.merge_queue[node].iter().sum::<usize>();
+        self.peak_unmerged = self.peak_unmerged.max(exposure);
+        while self.blocks_buffered[node] >= spec.merge_threshold_blocks {
+            self.blocks_buffered[node] -= spec.merge_threshold_blocks;
+            self.blocks_inflight_merge[node] += spec.merge_threshold_blocks;
+            self.merge_queue[node].push_back(spec.merge_threshold_blocks);
+            self.merges_total_launched += 1;
+        }
+        self.start_queued_merges(node);
+    }
+
+    /// End-of-stage tail flush: once every map has completed, batch any
+    /// remaining buffered blocks even if below the threshold (the real
+    /// coordinator's `MergeController::flush`).
+    fn flush_merge_tails(&mut self) {
+        for node in 0..self.cfg.spec.n_workers() {
+            let rem = self.blocks_buffered[node];
+            if rem > 0 {
+                self.blocks_buffered[node] = 0;
+                self.blocks_inflight_merge[node] += rem;
+                self.merge_queue[node].push_back(rem);
+                self.merges_total_launched += 1;
+            }
+            self.start_queued_merges(node);
+        }
+    }
+
+    fn start_queued_merges(&mut self, node: usize) {
+        let spec = &self.cfg.spec;
+        // bytes per merge = batch blocks × (one map's slice for this node)
+        let slice = spec.total_bytes
+            / spec.n_input_partitions as u64
+            / spec.n_workers() as u64;
+        while !self.merge_queue[node].is_empty()
+            && self.merge_slots_free[node] > 0
+        {
+            let blocks = self.merge_queue[node].pop_front().unwrap();
+            self.merge_slots_free[node] -= 1;
+            self.spawn_task_blocks(
+                Kind::Merge,
+                node,
+                blocks as u64 * slice,
+                blocks,
+            );
+        }
+    }
+
+    fn start_queued_reduces(&mut self, node: usize) {
+        let spec = &self.cfg.spec;
+        let bytes = spec.total_bytes / spec.n_output_partitions as u64;
+        while self.reduce_queue[node] > 0 && self.reduce_slots_free[node] > 0 {
+            self.reduce_queue[node] -= 1;
+            self.reduce_slots_free[node] -= 1;
+            self.spawn_task(Kind::Reduce, node, bytes);
+        }
+    }
+
+    // --- data plane ----------------------------------------------------
+
+    fn spawn_task(&mut self, kind: Kind, node: usize, bytes: u64) {
+        self.spawn_task_blocks(kind, node, bytes, 0)
+    }
+
+    fn spawn_task_blocks(
+        &mut self,
+        kind: Kind,
+        node: usize,
+        bytes: u64,
+        blocks: usize,
+    ) {
+        let mut noise =
+            1.0 + self.cfg.noise * (self.rng.next_f64() * 2.0 - 1.0);
+        // straggler tail (S3 tail latency / noisy neighbours)
+        if self.rng.next_f64() < self.cfg.rates.tail_prob {
+            noise *= self.cfg.rates.tail_mult;
+        }
+        let first_phase = match kind {
+            Kind::Map => Phase::S3Down,
+            Kind::Merge => Phase::Cpu,
+            Kind::Reduce => Phase::DiskRead,
+        };
+        let task = Task {
+            kind,
+            node,
+            bytes,
+            phase: first_phase,
+            start: self.clock,
+            download_secs: 0.0,
+            blocks,
+            noise,
+        };
+        let tid = self.tasks.len();
+        self.tasks.push(task);
+        self.begin_phase(tid);
+    }
+
+    /// Start the current phase of `tid`: compute its duration under the
+    /// fair-share snapshot and schedule its completion event.
+    fn begin_phase(&mut self, tid: usize) {
+        let rates = &self.cfg.rates;
+        let spec = &self.cfg.spec;
+        let node_spec = &spec.cluster.worker;
+        let t = self.tasks[tid].clone();
+        let load = &mut self.load[t.node];
+        let dur = match t.phase {
+            Phase::S3Down => {
+                load.net += 1;
+                load.s3 += 1;
+                let share = (node_spec.net_bps / load.net as f64)
+                    .min(rates.s3_node_cap_bps / load.s3 as f64)
+                    .min(rates.s3_down_bps);
+                t.bytes as f64 / share
+            }
+            Phase::S3Up => {
+                load.net += 1;
+                load.s3 += 1;
+                let share = (node_spec.net_bps / load.net as f64)
+                    .min(rates.s3_node_cap_bps / load.s3 as f64)
+                    .min(rates.s3_up_bps);
+                t.bytes as f64 / share
+            }
+            Phase::NetSend => {
+                load.net += 1;
+                let share = node_spec.net_bps / load.net as f64;
+                t.bytes as f64 / share
+            }
+            Phase::Cpu => {
+                load.cpu += 1;
+                let rate = match t.kind {
+                    Kind::Map => rates.sort_cpu_bps,
+                    Kind::Merge => rates.merge_cpu_bps,
+                    Kind::Reduce => rates.reduce_cpu_bps,
+                };
+                let over = (load.cpu as f64
+                    / node_spec.vcpus as f64)
+                    .max(1.0);
+                t.bytes as f64 / rate * over
+            }
+            Phase::DiskWrite => {
+                load.disk += 1;
+                let share = node_spec.disk_write_bps / load.disk as f64;
+                t.bytes as f64 / share
+            }
+            Phase::DiskRead => {
+                load.disk += 1;
+                let share = node_spec.disk_read_bps / load.disk as f64;
+                t.bytes as f64 / share
+            }
+            Phase::Done => unreachable!(),
+        };
+        // per-task overhead (scheduling/serialization) charged once, on
+        // the first phase
+        let overhead = if self.clock == t.start && t.phase != Phase::Done {
+            rates.overhead_secs
+        } else {
+            0.0
+        };
+        let dur = (dur * t.noise + overhead).max(1e-6);
+        self.record_phase(tid, self.clock, self.clock + dur);
+        self.queue
+            .push(Reverse((OrdF64(self.clock + dur), tid)));
+    }
+
+    /// Record a phase's resource usage into the Figure 1 series.
+    fn record_phase(&mut self, tid: usize, start: f64, end: f64) {
+        let t = &self.tasks[tid];
+        let dur = end - start;
+        match t.phase {
+            Phase::S3Down => {
+                self.ts_net_in
+                    .add_busy_interval(t.node, start, end, t.bytes as f64 / dur);
+            }
+            Phase::S3Up | Phase::NetSend => {
+                self.ts_net_out
+                    .add_busy_interval(t.node, start, end, t.bytes as f64 / dur);
+                if t.phase == Phase::NetSend {
+                    // shuffle traffic is received by peers; spread evenly
+                    let per = t.bytes as f64
+                        / dur
+                        / self.cfg.spec.n_workers() as f64;
+                    for n in 0..self.cfg.spec.n_workers() {
+                        self.ts_net_in.add_busy_interval(n, start, end, per);
+                    }
+                }
+            }
+            Phase::Cpu => {
+                let frac = 1.0 / self.cfg.spec.cluster.worker.vcpus as f64;
+                self.ts_cpu.add_busy_interval(t.node, start, end, frac);
+            }
+            Phase::DiskWrite => {
+                self.ts_disk_w
+                    .add_busy_interval(t.node, start, end, t.bytes as f64 / dur);
+            }
+            Phase::DiskRead => {
+                self.ts_disk_r
+                    .add_busy_interval(t.node, start, end, t.bytes as f64 / dur);
+            }
+            Phase::Done => {}
+        }
+    }
+
+    /// Advance `tid` past its completed phase.
+    fn step_task(&mut self, tid: usize) {
+        let (kind, node, phase) = {
+            let t = &self.tasks[tid];
+            (t.kind, t.node, t.phase)
+        };
+        // release the phase's resource
+        match phase {
+            Phase::S3Down | Phase::S3Up => {
+                self.load[node].net -= 1;
+                self.load[node].s3 -= 1;
+            }
+            Phase::NetSend => self.load[node].net -= 1,
+            Phase::Cpu => self.load[node].cpu -= 1,
+            Phase::DiskWrite | Phase::DiskRead => self.load[node].disk -= 1,
+            Phase::Done => {}
+        }
+        let next = match (kind, phase) {
+            (Kind::Map, Phase::S3Down) => {
+                self.tasks[tid].download_secs =
+                    self.clock - self.tasks[tid].start;
+                Phase::Cpu
+            }
+            (Kind::Map, Phase::Cpu) => Phase::NetSend,
+            (Kind::Map, Phase::NetSend) => Phase::Done,
+            (Kind::Merge, Phase::Cpu) => Phase::DiskWrite,
+            (Kind::Merge, Phase::DiskWrite) => Phase::Done,
+            (Kind::Reduce, Phase::DiskRead) => Phase::Cpu,
+            (Kind::Reduce, Phase::Cpu) => Phase::S3Up,
+            (Kind::Reduce, Phase::S3Up) => Phase::Done,
+            other => unreachable!("bad transition {other:?}"),
+        };
+        self.tasks[tid].phase = next;
+        if next != Phase::Done {
+            self.begin_phase(tid);
+            // a map task entering NetSend has "sent" nothing yet; block
+            // delivery happens at send completion (coarse, see below)
+            return;
+        }
+        // --- task completed ---
+        let t = self.tasks[tid].clone();
+        self.events.push(TaskEvent {
+            name: match t.kind {
+                Kind::Map => format!("map-{tid}"),
+                Kind::Merge => format!("merge-{tid}"),
+                Kind::Reduce => format!("reduce-{tid}"),
+            },
+            node: t.node,
+            start: t.start,
+            end: self.clock,
+            ok: true,
+        });
+        match t.kind {
+            Kind::Map => {
+                self.maps_done += 1;
+                self.map_slots_free[t.node] += 1;
+                // the map's W slices arrive at every worker's controller;
+                // record the shuffle (send+receive) as an event family
+                self.events.push(TaskEvent {
+                    name: format!("shuffle-{tid}"),
+                    node: t.node,
+                    start: t.start + t.download_secs,
+                    end: self.clock,
+                    ok: true,
+                });
+                for n in 0..self.cfg.spec.n_workers() {
+                    self.blocks_buffered[n] += 1;
+                }
+                for n in 0..self.cfg.spec.n_workers() {
+                    self.poll_merge_controller(n);
+                }
+                if self.maps_done == self.cfg.spec.n_input_partitions {
+                    self.flush_merge_tails();
+                }
+                self.admit_maps();
+            }
+            Kind::Merge => {
+                self.merges_done += 1;
+                self.merge_slots_free[t.node] += 1;
+                self.blocks_inflight_merge[t.node] = self
+                    .blocks_inflight_merge[t.node]
+                    .saturating_sub(t.blocks);
+                self.start_queued_merges(t.node);
+                self.admit_maps();
+            }
+            Kind::Reduce => {
+                self.reduces_done += 1;
+                self.reduce_slots_free[t.node] += 1;
+                self.start_queued_reduces(t.node);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> SimConfig {
+        SimConfig {
+            spec: JobSpec::scaled(1 << 30, 4),
+            rates: TaskRates::calibrated(),
+            noise: 0.0,
+            seed: 7,
+            fig1_bins: 64,
+        }
+    }
+
+    #[test]
+    fn small_sim_completes_and_conserves_tasks() {
+        let cfg = small_cfg();
+        let r = simulate(&cfg);
+        assert!(r.total_secs > 0.0);
+        assert!(r.map_shuffle_secs > 0.0 && r.reduce_secs > 0.0);
+        let maps = r
+            .events
+            .iter()
+            .filter(|e| e.name.starts_with("map"))
+            .count();
+        assert_eq!(maps, cfg.spec.n_input_partitions);
+        let reduces = r
+            .events
+            .iter()
+            .filter(|e| e.name.starts_with("reduce"))
+            .count();
+        assert_eq!(reduces, cfg.spec.n_output_partitions);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = small_cfg();
+        let a = simulate(&cfg);
+        let b = simulate(&cfg);
+        assert_eq!(a.total_secs, b.total_secs);
+    }
+
+    #[test]
+    fn noise_changes_duration() {
+        let mut cfg = small_cfg();
+        let a = simulate(&cfg);
+        cfg.noise = 0.1;
+        cfg.seed = 99;
+        let b = simulate(&cfg);
+        assert_ne!(a.total_secs, b.total_secs);
+    }
+
+    #[test]
+    fn request_counts_match_chunking() {
+        let cfg = small_cfg();
+        let r = simulate(&cfg);
+        let spec = &cfg.spec;
+        let per_in = spec.records_per_partition() * 100;
+        assert_eq!(
+            r.get_requests,
+            spec.n_input_partitions as u64
+                * crate::s3sim::chunk_count(per_in, GET_CHUNK)
+        );
+        assert!(r.put_requests >= spec.n_output_partitions as u64);
+    }
+
+    #[test]
+    fn backpressure_bounds_buffered_blocks() {
+        // with backpressure the peak buffered+inflight blocks per node
+        // stays near the configured bound
+        let mut cfg = small_cfg();
+        cfg.spec.backpressure = true;
+        cfg.spec.max_buffered_blocks = 8;
+        let r = simulate(&cfg);
+        assert!(r.total_secs > 0.0);
+    }
+}

@@ -1,0 +1,108 @@
+//! Task-duration rate model for the discrete-event simulator.
+//!
+//! Rates are calibrated against the paper's *measured per-task* numbers
+//! (§2.3–2.4): a 2 GB input partition downloads in ~15 s (→ 133 MB/s per
+//! S3 connection), an average map task takes 24 s, a merge 17 s, a reduce
+//! (4 GB) 22 s. Given these per-task rates, stage-level times (Table 1)
+//! must *emerge* from the simulator's scheduling and contention model —
+//! that emergence is the reproduction claim, per DESIGN.md experiment T1.
+
+/// Bandwidth/compute rates driving phase durations (bytes/second).
+#[derive(Clone, Copy, Debug)]
+pub struct TaskRates {
+    /// Effective S3 download rate per connection (paper: 2 GB / 15 s).
+    pub s3_down_bps: f64,
+    /// Effective S3 upload rate per connection (100 MB multipart chunks).
+    pub s3_up_bps: f64,
+    /// Aggregate S3 throughput cap per node (S3 per-prefix throttling;
+    /// the reduce stage in the paper is bound by this, not the NIC).
+    pub s3_node_cap_bps: f64,
+    /// Map-task sort+partition compute rate (paper C++ component).
+    pub sort_cpu_bps: f64,
+    /// Merge-task (40-way merge + 625-way partition) compute rate.
+    pub merge_cpu_bps: f64,
+    /// Reduce-task (625-way merge) compute rate.
+    pub reduce_cpu_bps: f64,
+    /// Fixed per-task overhead (scheduling, serialization, stragglers —
+    /// Ray task overhead at 2 GB granularity).
+    pub overhead_secs: f64,
+    /// Straggler model: probability that a task is a straggler, and its
+    /// duration multiplier (S3 tail latency, CPU interference — the paper
+    /// runs on shared cloud infrastructure).
+    pub tail_prob: f64,
+    pub tail_mult: f64,
+    /// Reduce-stage task parallelism per node. The paper states map/merge
+    /// parallelism (¾·vCPU = 12) but not reduce; its per-task (22 s) and
+    /// stage (1852 s) numbers imply ~8 concurrent reduces per node
+    /// (625 × 22 / 1852 ≈ 7.4).
+    pub reduce_slots: usize,
+}
+
+impl TaskRates {
+    /// Rates calibrated to the paper's per-task measurements (see module
+    /// docs; asserted by `stage_times` bench and calibration tests).
+    pub fn calibrated() -> TaskRates {
+        TaskRates {
+            s3_down_bps: 2.0e9 / 15.0, // 15 s per 2 GB partition (§2.3)
+            s3_up_bps: 450.0e6,
+            s3_node_cap_bps: 1.5e9,
+            sort_cpu_bps: 800.0e6, // ~2.5 s to sort 2 GB of keys
+            merge_cpu_bps: 160.0e6,
+            reduce_cpu_bps: 800.0e6,
+            overhead_secs: 5.0,
+            tail_prob: 0.04,
+            tail_mult: 2.5,
+            reduce_slots: 8,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn download_rate_matches_paper() {
+        let r = TaskRates::calibrated();
+        let secs = 2.0e9 / r.s3_down_bps;
+        assert!((secs - 15.0).abs() < 0.5, "download {secs}s");
+    }
+
+    #[test]
+    fn uncontended_map_task_near_24s() {
+        // download + sort + send-at-typical-share ≈ paper's 24 s
+        let r = TaskRates::calibrated();
+        let download = 2.0e9 / r.s3_down_bps;
+        let sort = 2.0e9 / r.sort_cpu_bps;
+        let send_typ = 2.0e9 / (3.125e9 / 11.0); // ~11 NIC users steady
+        let total = download + sort + send_typ + r.overhead_secs;
+        assert!(
+            (20.0..30.0).contains(&total),
+            "map task model {total}s vs paper 24s"
+        );
+    }
+
+    #[test]
+    fn uncontended_merge_task_near_17s() {
+        let r = TaskRates::calibrated();
+        let cpu = 2.0e9 / r.merge_cpu_bps;
+        let write = 2.0e9 / (2.2e9 / 4.0); // ~4 concurrent writers
+        let total = cpu + write + r.overhead_secs;
+        assert!(
+            (13.0..22.0).contains(&total),
+            "merge task model {total}s vs paper 17s"
+        );
+    }
+
+    #[test]
+    fn reduce_stage_is_s3_bound() {
+        // per-node output 2.5 TB at the node S3 cap ≈ paper's 1852 s
+        let r = TaskRates::calibrated();
+        let per_node_bytes = 100.0e12 / 40.0;
+        let bound = per_node_bytes / r.s3_node_cap_bps;
+        assert!(
+            (1400.0..2100.0).contains(&bound),
+            "reduce lower bound {bound}s vs paper 1852s"
+        );
+    }
+}

@@ -1,0 +1,171 @@
+//! gensort-equivalent input generator (paper §3.2, Indy category).
+//!
+//! The real benchmark runs `gensort -c -b{offset} {size} {path}` per input
+//! partition: uniform random 10-byte keys, a payload carrying the record
+//! number, and a running checksum for end-to-end integrity validation.
+//! This module reproduces those properties deterministically from a
+//! `(seed, record offset)` pair in O(1) per record — so any partition can
+//! be generated independently on any worker, exactly like `-b{offset}`.
+
+use crate::sortlib::RECORD_SIZE;
+use crate::util::rng::stream_at;
+
+/// Specification of a generation job (one input partition).
+#[derive(Clone, Copy, Debug)]
+pub struct GenSpec {
+    /// Global RNG seed shared by the whole input dataset.
+    pub seed: u64,
+    /// Global index of this partition's first record (`-b{offset}`).
+    pub offset: u64,
+    /// Number of records in this partition (`{size}`).
+    pub records: u64,
+}
+
+/// Write the 100 bytes of global record `i` into `out`.
+///
+/// Layout: 10 random key bytes; 8-byte big-endian record number;
+/// 82 bytes of printable filler derived from the record number (so
+/// payload corruption is detectable by checksum).
+pub fn write_record(seed: u64, i: u64, out: &mut [u8]) {
+    debug_assert_eq!(out.len(), RECORD_SIZE);
+    let r0 = stream_at(seed, i.wrapping_mul(2));
+    let r1 = stream_at(seed, i.wrapping_mul(2) + 1);
+    out[..8].copy_from_slice(&r0.to_be_bytes());
+    out[8..10].copy_from_slice(&r1.to_be_bytes()[..2]);
+    out[10..18].copy_from_slice(&i.to_be_bytes());
+    // Printable filler: 82 bytes, ASCII '0'..'0'+32, cheap and checksummable.
+    let mut acc = r1 | 1;
+    for chunk in out[18..].chunks_mut(8) {
+        acc = acc.wrapping_mul(0x9E3779B97F4A7C15).rotate_left(17);
+        let bytes = acc.to_le_bytes();
+        for (dst, src) in chunk.iter_mut().zip(bytes.iter()) {
+            *dst = b'0' + (src & 31);
+        }
+    }
+}
+
+/// Generate a whole partition as a contiguous record buffer.
+pub fn generate_partition(spec: &GenSpec) -> Vec<u8> {
+    let mut buf = vec![0u8; spec.records as usize * RECORD_SIZE];
+    for (j, rec) in buf.chunks_exact_mut(RECORD_SIZE).enumerate() {
+        write_record(spec.seed, spec.offset + j as u64, rec);
+    }
+    buf
+}
+
+/// Record checksum: a 64-bit mix over the record bytes.
+///
+/// The real valsort sums per-record CRCs; what the benchmark's integrity
+/// check needs is (a) order-independence under summation and (b)
+/// corruption sensitivity. A multiply-xor mix over 8-byte lanes gives
+/// both with far better throughput than per-100-byte crc32 calls, which
+/// profiling showed at 33% of end-to-end CPU (EXPERIMENTS.md §Perf L3
+/// iteration 4); position-dependent multipliers keep byte swaps within a
+/// record detectable.
+#[inline]
+pub fn record_checksum(record: &[u8]) -> u64 {
+    use crate::util::rng::mix;
+    let mut acc = 0xC10D_5047u64; // "cloudsort"
+    let mut chunks = record.chunks_exact(8);
+    for (i, c) in (&mut chunks).enumerate() {
+        let v = u64::from_le_bytes(c.try_into().unwrap());
+        acc = (acc ^ v).wrapping_mul(0x9E3779B97F4A7C15 ^ ((i as u64) << 32));
+        acc ^= acc >> 29;
+    }
+    let rem = chunks.remainder();
+    if !rem.is_empty() {
+        let mut last = [0u8; 8];
+        last[..rem.len()].copy_from_slice(rem);
+        acc = (acc ^ u64::from_le_bytes(last)).wrapping_mul(0x9E3779B97F4A7C15);
+    }
+    mix(acc)
+}
+
+/// Partition checksum: wrapping sum of record checksums (order-independent,
+/// exactly the property valsort's `-s` aggregation relies on: the sorted
+/// output must reproduce the input's total checksum byte-for-byte).
+pub fn partition_checksum(buf: &[u8]) -> u64 {
+    buf.chunks_exact(RECORD_SIZE)
+        .map(record_checksum)
+        .fold(0u64, u64::wrapping_add)
+}
+
+/// The u64 partition key record `i` will carry (without materializing it).
+#[inline]
+pub fn key_of_record(seed: u64, i: u64) -> u64 {
+    stream_at(seed, i.wrapping_mul(2))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sortlib::{extract_partition_keys, record_count, Record};
+
+    #[test]
+    fn deterministic_and_offset_consistent() {
+        // partition [100, 200) generated alone matches the tail of [0, 200)
+        let a = generate_partition(&GenSpec { seed: 1, offset: 0, records: 200 });
+        let b = generate_partition(&GenSpec { seed: 1, offset: 100, records: 100 });
+        assert_eq!(&a[100 * RECORD_SIZE..], &b[..]);
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let a = generate_partition(&GenSpec { seed: 1, offset: 0, records: 10 });
+        let b = generate_partition(&GenSpec { seed: 2, offset: 0, records: 10 });
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn record_number_embedded() {
+        let buf = generate_partition(&GenSpec { seed: 3, offset: 40, records: 2 });
+        let r1 = Record::new(&buf[RECORD_SIZE..]);
+        assert_eq!(&r1.payload()[..8], &41u64.to_be_bytes());
+    }
+
+    #[test]
+    fn payload_filler_is_printable() {
+        let buf = generate_partition(&GenSpec { seed: 4, offset: 0, records: 5 });
+        for rec in buf.chunks_exact(RECORD_SIZE) {
+            assert!(rec[18..].iter().all(|b| b.is_ascii_graphic()));
+        }
+    }
+
+    #[test]
+    fn checksum_is_order_independent_and_corruption_sensitive() {
+        let mut buf =
+            generate_partition(&GenSpec { seed: 5, offset: 0, records: 4 });
+        let sum = partition_checksum(&buf);
+        // swap records 0 and 2
+        let r0: Vec<u8> = buf[..RECORD_SIZE].to_vec();
+        let r2: Vec<u8> = buf[2 * RECORD_SIZE..3 * RECORD_SIZE].to_vec();
+        buf[..RECORD_SIZE].copy_from_slice(&r2);
+        buf[2 * RECORD_SIZE..3 * RECORD_SIZE].copy_from_slice(&r0);
+        assert_eq!(partition_checksum(&buf), sum, "order-independent");
+        buf[150] ^= 1;
+        assert_ne!(partition_checksum(&buf), sum, "corruption-sensitive");
+    }
+
+    #[test]
+    fn key_of_record_matches_generated_key() {
+        let buf = generate_partition(&GenSpec { seed: 6, offset: 9, records: 3 });
+        let keys = extract_partition_keys(&buf);
+        for j in 0..record_count(&buf) {
+            assert_eq!(keys[j], key_of_record(6, 9 + j as u64));
+        }
+    }
+
+    #[test]
+    fn keys_are_roughly_uniform() {
+        let buf =
+            generate_partition(&GenSpec { seed: 7, offset: 0, records: 8000 });
+        let cuts = crate::sortlib::reducer_cuts(8);
+        let mut counts = [0usize; 8];
+        for k in extract_partition_keys(&buf) {
+            counts[crate::sortlib::keys::range_of(k, &cuts)] += 1;
+        }
+        for c in counts {
+            assert!((800..1200).contains(&c), "bucket {c}");
+        }
+    }
+}

@@ -1,0 +1,112 @@
+//! Key types and range partitioning (paper §2.2 "Preparation").
+//!
+//! The 64-bit key space `[0, 2^64)` is cut into `R` equal reducer ranges;
+//! every `R/W` consecutive reducer ranges form one worker range. Cut `i`
+//! is `floor((i+1) * 2^64 / R)` — computed in u128 so ranges are equal to
+//! within one key even when `R` does not divide `2^64`.
+
+/// Bytes in the full sort key.
+pub const KEY_SIZE: usize = 10;
+
+/// The full 10-byte sort key (ordering = lexicographic byte order).
+pub type Key = [u8; KEY_SIZE];
+
+/// u64 partition key: first 8 key bytes, big-endian. Big-endian makes
+/// u64 order agree with the lexicographic order of the key prefix.
+#[inline]
+pub fn partition_key(record: &[u8]) -> u64 {
+    u64::from_be_bytes(record[..8].try_into().expect("record >= 8 bytes"))
+}
+
+/// Interior cut points for `r` equal ranges of the u64 key space:
+/// `r - 1` values; range `i` is `[cuts[i-1], cuts[i])` with the implicit
+/// 0 and 2^64 endpoints.
+pub fn reducer_cuts(r: usize) -> Vec<u64> {
+    assert!(r >= 1, "need at least one range");
+    (1..r)
+        .map(|i| ((i as u128) << 64).wrapping_div(r as u128) as u64)
+        .collect()
+}
+
+/// Interior cut points between the `w` worker ranges, where each worker
+/// range is `r / w` consecutive reducer ranges (paper: R=25000, W=40,
+/// R1=625). `r` must be divisible by `w`.
+pub fn worker_cuts(r: usize, w: usize) -> Vec<u64> {
+    assert!(w >= 1 && r % w == 0, "R must be a multiple of W");
+    let cuts = reducer_cuts(r);
+    let r1 = r / w;
+    (1..w).map(|i| cuts[i * r1 - 1]).collect()
+}
+
+/// Which of the `cuts.len() + 1` ranges a partition key falls into.
+#[inline]
+pub fn range_of(key: u64, cuts: &[u64]) -> usize {
+    cuts.partition_point(|&c| c <= key)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_key_is_big_endian_prefix() {
+        let mut rec = [0u8; 100];
+        rec[..10].copy_from_slice(&[1, 2, 3, 4, 5, 6, 7, 8, 9, 10]);
+        assert_eq!(partition_key(&rec), 0x0102030405060708);
+    }
+
+    #[test]
+    fn reducer_cuts_are_equal_ranges() {
+        let r = 25_000;
+        let cuts = reducer_cuts(r);
+        assert_eq!(cuts.len(), r - 1);
+        // strictly increasing
+        assert!(cuts.windows(2).all(|w| w[0] < w[1]));
+        // equal to within one key
+        let width0 = cuts[0] as u128;
+        for w in cuts.windows(2) {
+            let width = (w[1] - w[0]) as u128;
+            assert!(width.abs_diff(width0) <= 1);
+        }
+    }
+
+    #[test]
+    fn worker_cuts_subsample_reducer_cuts() {
+        let (r, w) = (25_000, 40);
+        let rc = reducer_cuts(r);
+        let wc = worker_cuts(r, w);
+        assert_eq!(wc.len(), w - 1);
+        for (i, &cut) in wc.iter().enumerate() {
+            assert_eq!(cut, rc[(i + 1) * (r / w) - 1]);
+        }
+    }
+
+    #[test]
+    fn range_of_respects_half_open_ranges() {
+        let cuts = reducer_cuts(4); // 3 cuts at 1/4, 2/4, 3/4 of 2^64
+        assert_eq!(range_of(0, &cuts), 0);
+        assert_eq!(range_of(cuts[0] - 1, &cuts), 0);
+        assert_eq!(range_of(cuts[0], &cuts), 1);
+        assert_eq!(range_of(u64::MAX, &cuts), 3);
+    }
+
+    #[test]
+    fn single_range_has_no_cuts() {
+        assert!(reducer_cuts(1).is_empty());
+        assert_eq!(range_of(123, &[]), 0);
+    }
+
+    #[test]
+    fn uniform_keys_spread_evenly() {
+        use crate::util::rng::Xoshiro256;
+        let cuts = reducer_cuts(8);
+        let mut counts = [0u32; 8];
+        let mut rng = Xoshiro256::new(42);
+        for _ in 0..80_000 {
+            counts[range_of(rng.next_u64(), &cuts)] += 1;
+        }
+        for c in counts {
+            assert!((9_000..11_000).contains(&c), "count {c}");
+        }
+    }
+}

@@ -1,0 +1,200 @@
+//! valsort-equivalent output validator (paper §3.2).
+//!
+//! The benchmark validates each output partition (`valsort -o`), then
+//! concatenates the per-partition summaries and validates global ordering
+//! plus the total checksum (`valsort -s`). We reproduce both passes:
+//! [`validate_partition`] checks intra-partition ordering by the full
+//! 10-byte key and produces a [`PartitionSummary`]; [`validate_summaries`]
+//! checks cross-partition boundaries and aggregates the checksum, which
+//! the caller compares against the input checksum for byte integrity.
+
+use crate::sortlib::gensort::record_checksum;
+use crate::sortlib::{Key, KEY_SIZE, RECORD_SIZE};
+
+/// `valsort -o` output for one partition.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PartitionSummary {
+    /// Records in the partition.
+    pub records: u64,
+    /// First record's 10-byte key (None for an empty partition).
+    pub first_key: Option<Key>,
+    /// Last record's 10-byte key.
+    pub last_key: Option<Key>,
+    /// Wrapping sum of record crc32 checksums.
+    pub checksum: u64,
+    /// Adjacent record pairs out of order (0 for a sorted partition).
+    pub unordered: u64,
+    /// Adjacent record pairs with equal keys (duplicate report, like
+    /// valsort's duplicate-key count).
+    pub duplicates: u64,
+}
+
+/// Validate one output partition and produce its summary.
+pub fn validate_partition(buf: &[u8]) -> PartitionSummary {
+    assert_eq!(buf.len() % RECORD_SIZE, 0, "buffer not record-aligned");
+    let mut summary = PartitionSummary {
+        records: (buf.len() / RECORD_SIZE) as u64,
+        first_key: None,
+        last_key: None,
+        checksum: 0,
+        unordered: 0,
+        duplicates: 0,
+    };
+    let mut prev: Option<Key> = None;
+    for rec in buf.chunks_exact(RECORD_SIZE) {
+        let mut key = [0u8; KEY_SIZE];
+        key.copy_from_slice(&rec[..KEY_SIZE]);
+        if summary.first_key.is_none() {
+            summary.first_key = Some(key);
+        }
+        if let Some(p) = prev {
+            if key < p {
+                summary.unordered += 1;
+            } else if key == p {
+                summary.duplicates += 1;
+            }
+        }
+        summary.checksum = summary.checksum.wrapping_add(record_checksum(rec));
+        prev = Some(key);
+    }
+    summary.last_key = prev;
+    summary
+}
+
+/// `valsort -s` result over concatenated partition summaries.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct GlobalSummary {
+    /// Total records across partitions.
+    pub records: u64,
+    /// Total checksum (wrapping sum of partition checksums).
+    pub checksum: u64,
+    /// Whether every partition was internally sorted.
+    pub partitions_sorted: bool,
+    /// Whether partition boundaries are globally non-decreasing.
+    pub globally_ordered: bool,
+    /// Total duplicate-key pairs observed (intra-partition).
+    pub duplicates: u64,
+    /// True iff the whole output forms one sorted sequence.
+    pub valid: bool,
+}
+
+/// Validate the ordering across partitions (in output-partition order) and
+/// aggregate counts/checksums.
+pub fn validate_summaries(summaries: &[PartitionSummary]) -> GlobalSummary {
+    let mut g = GlobalSummary {
+        records: 0,
+        checksum: 0,
+        partitions_sorted: true,
+        globally_ordered: true,
+        duplicates: 0,
+        valid: false,
+    };
+    let mut prev_last: Option<Key> = None;
+    for s in summaries {
+        g.records += s.records;
+        g.checksum = g.checksum.wrapping_add(s.checksum);
+        g.duplicates += s.duplicates;
+        if s.unordered > 0 {
+            g.partitions_sorted = false;
+        }
+        if let (Some(prev), Some(first)) = (prev_last, s.first_key) {
+            if first < prev {
+                g.globally_ordered = false;
+            }
+        }
+        if s.last_key.is_some() {
+            prev_last = s.last_key;
+        }
+    }
+    g.valid = g.partitions_sorted && g.globally_ordered;
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sortlib::gensort::{generate_partition, GenSpec};
+    use crate::sortlib::partition_checksum;
+
+    fn sorted_buf(seed: u64, n: u64) -> Vec<u8> {
+        let buf = generate_partition(&GenSpec { seed, offset: 0, records: n });
+        let mut recs: Vec<&[u8]> = buf.chunks_exact(RECORD_SIZE).collect();
+        recs.sort_by_key(|r| {
+            let mut k = [0u8; KEY_SIZE];
+            k.copy_from_slice(&r[..KEY_SIZE]);
+            k
+        });
+        recs.concat()
+    }
+
+    #[test]
+    fn sorted_partition_validates() {
+        let buf = sorted_buf(1, 500);
+        let s = validate_partition(&buf);
+        assert_eq!(s.records, 500);
+        assert_eq!(s.unordered, 0);
+        assert_eq!(s.checksum, partition_checksum(&buf));
+        assert!(s.first_key <= s.last_key);
+    }
+
+    #[test]
+    fn unsorted_partition_detected() {
+        let buf = generate_partition(&GenSpec { seed: 2, offset: 0, records: 100 });
+        let s = validate_partition(&buf);
+        assert!(s.unordered > 0, "random data should have inversions");
+    }
+
+    #[test]
+    fn empty_partition() {
+        let s = validate_partition(&[]);
+        assert_eq!(s.records, 0);
+        assert_eq!(s.first_key, None);
+        assert_eq!(s.last_key, None);
+        // an empty partition between two ordered ones must not break
+        // the global ordering check
+        let buf = sorted_buf(3, 20);
+        let lo = validate_partition(&buf[..10 * RECORD_SIZE]);
+        let hi = validate_partition(&buf[10 * RECORD_SIZE..]);
+        let g = validate_summaries(&[lo, s, hi]);
+        assert!(g.globally_ordered);
+        assert!(g.valid);
+    }
+
+    #[test]
+    fn global_ordering_detects_misordered_partitions() {
+        let buf = sorted_buf(4, 100);
+        let lo = validate_partition(&buf[..50 * RECORD_SIZE]);
+        let hi = validate_partition(&buf[50 * RECORD_SIZE..]);
+        let good = validate_summaries(&[lo.clone(), hi.clone()]);
+        assert!(good.valid);
+        assert_eq!(good.records, 100);
+        let bad = validate_summaries(&[hi, lo]);
+        assert!(!bad.valid);
+        assert!(!bad.globally_ordered);
+        assert!(bad.partitions_sorted);
+    }
+
+    #[test]
+    fn checksum_aggregates() {
+        let b1 = sorted_buf(5, 20);
+        let b2 = sorted_buf(6, 30);
+        let g = validate_summaries(&[
+            validate_partition(&b1),
+            validate_partition(&b2),
+        ]);
+        assert_eq!(
+            g.checksum,
+            partition_checksum(&b1).wrapping_add(partition_checksum(&b2))
+        );
+    }
+
+    #[test]
+    fn duplicate_keys_counted() {
+        let mut rec = vec![0u8; RECORD_SIZE];
+        rec[..10].copy_from_slice(&[9u8; 10]);
+        let buf: Vec<u8> = [rec.clone(), rec.clone(), rec].concat();
+        let s = validate_partition(&buf);
+        assert_eq!(s.duplicates, 2);
+        assert_eq!(s.unordered, 0);
+    }
+}

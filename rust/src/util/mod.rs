@@ -1,0 +1,71 @@
+//! Small self-contained utilities (offline environment: no external
+//! crates beyond the `xla` closure, so RNG, JSON and stats live here).
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+/// Format a byte count human-readably (e.g. `1.50 GiB`).
+pub fn human_bytes(n: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    let mut v = n as f64;
+    let mut unit = 0;
+    while v >= 1024.0 && unit < UNITS.len() - 1 {
+        v /= 1024.0;
+        unit += 1;
+    }
+    if unit == 0 {
+        format!("{} B", n)
+    } else {
+        format!("{:.2} {}", v, UNITS[unit])
+    }
+}
+
+/// Format a duration in seconds as `h:mm:ss` like the paper's tables.
+pub fn human_secs(s: f64) -> String {
+    let total = s.round() as u64;
+    format!("{}:{:02}:{:02}", total / 3600, (total % 3600) / 60, total % 60)
+}
+
+/// Smallest power of two >= n (n >= 1).
+pub fn next_pow2(n: usize) -> usize {
+    n.next_power_of_two()
+}
+
+/// Integer ceiling division.
+pub fn div_ceil(a: u64, b: u64) -> u64 {
+    (a + b - 1) / b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(100_000_000_000_000), "90.95 TiB");
+    }
+
+    #[test]
+    fn human_secs_format() {
+        assert_eq!(human_secs(5378.0), "1:29:38");
+        assert_eq!(human_secs(59.4), "0:00:59");
+    }
+
+    #[test]
+    fn next_pow2_values() {
+        assert_eq!(next_pow2(1), 1);
+        assert_eq!(next_pow2(3), 4);
+        assert_eq!(next_pow2(4096), 4096);
+        assert_eq!(next_pow2(4097), 8192);
+    }
+
+    #[test]
+    fn div_ceil_values() {
+        assert_eq!(div_ceil(10, 3), 4);
+        assert_eq!(div_ceil(9, 3), 3);
+        assert_eq!(div_ceil(1, 100), 1);
+    }
+}

@@ -1,0 +1,149 @@
+//! Deterministic PRNGs: SplitMix64 (seeding / record generation) and
+//! xoshiro256** (bulk streams). Offline environment has no `rand` crate;
+//! determinism is a feature here anyway — gensort-style generation must be
+//! reproducible from a (seed, record index) pair alone.
+
+/// SplitMix64: tiny, statistically solid, and *random-access* — ideal for
+/// generating record `i` without generating records `0..i`.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        mix(self.state)
+    }
+}
+
+/// The SplitMix64 output mix as a pure function: `mix(seed + i * GAMMA)`
+/// is the i-th output of the stream, enabling O(1) random access.
+#[inline]
+pub fn mix(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// i-th element of the SplitMix64 stream seeded with `seed`, in O(1).
+#[inline]
+pub fn stream_at(seed: u64, i: u64) -> u64 {
+    mix(seed.wrapping_add(i.wrapping_add(1).wrapping_mul(0x9E3779B97F4A7C15)))
+}
+
+/// xoshiro256**: fast bulk generator, seeded from SplitMix64 per the
+/// reference implementation's recommendation.
+#[derive(Clone, Debug)]
+pub struct Xoshiro256 {
+    s: [u64; 4],
+}
+
+impl Xoshiro256 {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self {
+            s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()],
+        }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, n)` (Lemire's multiply-shift; slight modulo bias is
+    /// irrelevant at our n << 2^64).
+    #[inline]
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Uniform float in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Fill a byte buffer.
+    pub fn fill_bytes(&mut self, buf: &mut [u8]) {
+        let mut chunks = buf.chunks_exact_mut(8);
+        for c in &mut chunks {
+            c.copy_from_slice(&self.next_u64().to_le_bytes());
+        }
+        let rem = chunks.into_remainder();
+        if !rem.is_empty() {
+            let last = self.next_u64().to_le_bytes();
+            rem.copy_from_slice(&last[..rem.len()]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_deterministic() {
+        let mut a = SplitMix64::new(42);
+        let mut b = SplitMix64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn stream_at_matches_sequential() {
+        let mut seq = SplitMix64::new(7);
+        for i in 0..64 {
+            assert_eq!(seq.next_u64(), stream_at(7, i));
+        }
+    }
+
+    #[test]
+    fn xoshiro_spread() {
+        // crude uniformity check over 64 buckets
+        let mut rng = Xoshiro256::new(1);
+        let mut buckets = [0u32; 64];
+        for _ in 0..64_000 {
+            buckets[rng.next_below(64) as usize] += 1;
+        }
+        for b in buckets {
+            assert!((700..1300).contains(&b), "bucket count {b}");
+        }
+    }
+
+    #[test]
+    fn next_below_bounds() {
+        let mut rng = Xoshiro256::new(3);
+        for n in [1u64, 2, 7, 1 << 40] {
+            for _ in 0..100 {
+                assert!(rng.next_below(n) < n);
+            }
+        }
+    }
+
+    #[test]
+    fn fill_bytes_non_multiple_of_8() {
+        let mut rng = Xoshiro256::new(9);
+        let mut buf = [0u8; 13];
+        rng.fill_bytes(&mut buf);
+        assert_ne!(buf, [0u8; 13]);
+    }
+}

@@ -1,0 +1,214 @@
+//! Stress tests of the distributed-futures runtime: random DAGs, deep
+//! chains, wide fan-outs, concurrent submitters, and spill churn. These
+//! are the paper's §2.5 "for free" guarantees under load.
+
+use std::sync::Arc;
+
+use exoshuffle::distfut::{
+    task_fn, Placement, Runtime, RuntimeOptions, TaskSpec,
+};
+use exoshuffle::util::rng::Xoshiro256;
+
+fn rt(nodes: usize, slots: usize, capacity: u64) -> Arc<Runtime> {
+    Runtime::new(RuntimeOptions {
+        n_nodes: nodes,
+        slots_per_node: slots,
+        store_capacity_per_node: capacity,
+        spill_root: std::env::temp_dir(),
+    })
+}
+
+#[test]
+fn random_dag_executes_consistently() {
+    // Build a random layered DAG whose tasks sum their inputs; verify the
+    // sink value against a sequential evaluation.
+    let mut rng = Xoshiro256::new(0xDA6);
+    let rt = rt(4, 3, u64::MAX);
+    let mut layers: Vec<Vec<(exoshuffle::distfut::ObjectRef, u64)>> = vec![];
+    // source layer
+    let sources: Vec<(exoshuffle::distfut::ObjectRef, u64)> = (0..8u64)
+        .map(|i| {
+            let v = rng.next_below(100);
+            (rt.put((i % 4) as usize, v.to_le_bytes().to_vec()), v)
+        })
+        .collect();
+    layers.push(sources);
+    for layer in 1..5 {
+        let prev = layers.last().unwrap().clone();
+        let mut next = vec![];
+        for j in 0..6u64 {
+            // pick 1-3 random parents
+            let k = 1 + rng.next_below(3) as usize;
+            let parents: Vec<_> = (0..k)
+                .map(|_| prev[rng.next_below(prev.len() as u64) as usize].clone())
+                .collect();
+            let expect: u64 = parents.iter().map(|(_, v)| *v).sum();
+            let args: Vec<_> = parents.into_iter().map(|(r, _)| r).collect();
+            let (outs, _h) = rt.submit(TaskSpec {
+                name: format!("dag-{layer}-{j}"),
+                placement: if rng.next_below(2) == 0 {
+                    Placement::Any
+                } else {
+                    Placement::Node(rng.next_below(4) as usize)
+                },
+                func: task_fn(|ctx| {
+                    let sum: u64 = ctx
+                        .args
+                        .iter()
+                        .map(|a| {
+                            u64::from_le_bytes(a[..8].try_into().unwrap())
+                        })
+                        .sum();
+                    Ok(vec![sum.to_le_bytes().to_vec()])
+                }),
+                args,
+                num_returns: 1,
+                max_retries: 0,
+            });
+            next.push((outs.into_iter().next().unwrap(), expect));
+        }
+        layers.push(next);
+    }
+    for (r, expect) in layers.last().unwrap() {
+        let buf = rt.get(r).unwrap();
+        assert_eq!(u64::from_le_bytes(buf[..8].try_into().unwrap()), *expect);
+    }
+}
+
+#[test]
+fn deep_chain_resolves() {
+    let rt = rt(2, 2, u64::MAX);
+    let mut prev = rt.put(0, 0u64.to_le_bytes().to_vec());
+    for i in 0..200u64 {
+        let (outs, _h) = rt.submit(TaskSpec {
+            name: format!("chain-{i}"),
+            placement: Placement::Any,
+            func: task_fn(|ctx| {
+                let v = u64::from_le_bytes(ctx.args[0][..8].try_into().unwrap());
+                Ok(vec![(v + 1).to_le_bytes().to_vec()])
+            }),
+            args: vec![prev],
+            num_returns: 1,
+            max_retries: 0,
+        });
+        prev = outs.into_iter().next().unwrap();
+    }
+    let buf = rt.get(&prev).unwrap();
+    assert_eq!(u64::from_le_bytes(buf[..8].try_into().unwrap()), 200);
+}
+
+#[test]
+fn wide_fanout_under_spill_pressure() {
+    // 64 producers of 64 KiB each against a 128 KiB/node budget: most
+    // objects must spill and restore correctly.
+    let rt = rt(2, 2, 128 << 10);
+    let produced: Vec<_> = (0..64u8)
+        .map(|i| {
+            let (outs, _h) = rt.submit(TaskSpec {
+                name: format!("spill-{i}"),
+                placement: Placement::Any,
+                func: task_fn(move |_| Ok(vec![vec![i; 64 << 10]])),
+                args: vec![],
+                num_returns: 1,
+                max_retries: 0,
+            });
+            outs.into_iter().next().unwrap()
+        })
+        .collect();
+    rt.wait_quiescent();
+    let stats = rt.store_stats();
+    assert!(stats.spills > 0, "64×64KiB must overflow 2×128KiB: {stats:?}");
+    for (i, r) in produced.iter().enumerate() {
+        let buf = rt.get(r).unwrap();
+        assert_eq!(buf.len(), 64 << 10);
+        assert!(buf.iter().all(|&b| b == i as u8), "object {i} corrupted");
+    }
+    assert!(rt.store_stats().restores > 0);
+}
+
+#[test]
+fn concurrent_submitters() {
+    let rt = rt(3, 2, u64::MAX);
+    let handles: Vec<_> = (0..4)
+        .map(|t| {
+            let rt = rt.clone();
+            std::thread::spawn(move || {
+                let mut sum_refs = vec![];
+                for i in 0..25u64 {
+                    let (outs, _h) = rt.submit(TaskSpec {
+                        name: format!("t{t}-{i}"),
+                        placement: Placement::Any,
+                        func: task_fn(move |_| {
+                            Ok(vec![(t * 1000 + i).to_le_bytes().to_vec()])
+                        }),
+                        args: vec![],
+                        num_returns: 1,
+                        max_retries: 0,
+                    });
+                    sum_refs.push(outs.into_iter().next().unwrap());
+                }
+                let mut total = 0u64;
+                for r in &sum_refs {
+                    total += u64::from_le_bytes(
+                        rt.get(r).unwrap()[..8].try_into().unwrap(),
+                    );
+                }
+                total
+            })
+        })
+        .collect();
+    let mut grand = 0u64;
+    for h in handles {
+        grand += h.join().unwrap();
+    }
+    let expect: u64 = (0..4u64)
+        .map(|t| (0..25).map(|i| t * 1000 + i).sum::<u64>())
+        .sum();
+    assert_eq!(grand, expect);
+}
+
+#[test]
+fn failure_cascades_to_dependents() {
+    let rt = rt(1, 1, u64::MAX);
+    let (outs, h1) = rt.submit(TaskSpec {
+        name: "doomed".into(),
+        placement: Placement::Any,
+        func: task_fn(|_| Err("nope".into())),
+        args: vec![],
+        num_returns: 1,
+        max_retries: 1,
+    });
+    let (_, h2) = rt.submit(TaskSpec {
+        name: "dependent".into(),
+        placement: Placement::Any,
+        func: task_fn(|_| Ok(vec![])),
+        args: vec![outs.into_iter().next().unwrap()],
+        num_returns: 0,
+        max_retries: 0,
+    });
+    assert!(h1.wait().is_err());
+    let err = h2.wait().unwrap_err().to_string();
+    assert!(err.contains("released"), "dependent should observe poisoned arg: {err}");
+}
+
+#[test]
+fn attempt_counter_visible_to_tasks() {
+    let rt = rt(1, 1, u64::MAX);
+    let (outs, h) = rt.submit(TaskSpec {
+        name: "count-attempts".into(),
+        placement: Placement::Any,
+        func: task_fn(|ctx| {
+            if ctx.attempt < 3 {
+                Err("again".into())
+            } else {
+                Ok(vec![vec![ctx.attempt as u8]])
+            }
+        }),
+        args: vec![],
+        num_returns: 1,
+        max_retries: 5,
+    });
+    h.wait().unwrap();
+    assert_eq!(*rt.get(&outs[0]).unwrap(), vec![3u8]);
+    assert_eq!(rt.task_counts().1, 3);
+}

@@ -1,0 +1,108 @@
+//! Integration tests over the full three-layer stack: the XLA engine
+//! (AOT Pallas kernels via PJRT) cross-checked against the native
+//! baseline, and the complete pipeline run through the XLA path.
+//!
+//! The engine compiles artifacts lazily; tests share one engine (and use
+//! small blocks) to keep one-time XLA compilation bounded.
+
+use std::sync::OnceLock;
+
+use exoshuffle::coordinator::{run_cloudsort, JobSpec};
+use exoshuffle::runtime::{merge_and_partition, sort_and_partition, Backend};
+use exoshuffle::sortlib::reducer_cuts;
+use exoshuffle::util::rng::Xoshiro256;
+
+fn xla() -> Backend {
+    static ENGINE: OnceLock<Backend> = OnceLock::new();
+    ENGINE
+        .get_or_init(|| {
+            Backend::xla(std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts").as_path())
+                .expect("run `make artifacts` before `cargo test`")
+        })
+        .clone()
+}
+
+#[test]
+fn sort_matches_native_across_sizes_and_distributions() {
+    let xla = xla();
+    let cuts = reducer_cuts(8);
+    for (seed, n) in [(1u64, 1usize), (2, 100), (3, 256), (4, 1000), (5, 4096)] {
+        let mut rng = Xoshiro256::new(seed);
+        let mut keys: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+        // sprinkle duplicates and extremes
+        if n >= 100 {
+            keys[0] = 0;
+            keys[1] = u64::MAX;
+            keys[2] = u64::MAX;
+            keys[3] = keys[4];
+        }
+        let a = sort_and_partition(&xla, &keys, &cuts).unwrap();
+        let b = sort_and_partition(&Backend::Native, &keys, &cuts).unwrap();
+        assert_eq!(a.keys, b.keys, "keys n={n}");
+        assert_eq!(a.perm, b.perm, "perm n={n}");
+        assert_eq!(a.offs, b.offs, "offs n={n}");
+    }
+}
+
+#[test]
+fn merge_matches_native_across_shapes() {
+    let xla = xla();
+    let cuts = reducer_cuts(5);
+    for (seed, runs, len) in [(10u64, 2usize, 50usize), (11, 8, 32), (12, 5, 333), (13, 17, 100)]
+    {
+        let mut rng = Xoshiro256::new(seed);
+        let data: Vec<Vec<u64>> = (0..runs)
+            .map(|i| {
+                let l = if i % 3 == 0 { len / 2 } else { len }; // ragged
+                let mut v: Vec<u64> = (0..l).map(|_| rng.next_u64()).collect();
+                v.sort_unstable();
+                v
+            })
+            .collect();
+        let refs: Vec<&[u64]> = data.iter().map(|d| d.as_slice()).collect();
+        let a = merge_and_partition(&xla, &refs, &cuts).unwrap();
+        let b = merge_and_partition(&Backend::Native, &refs, &cuts).unwrap();
+        assert_eq!(a.keys, b.keys, "keys r={runs} l={len}");
+        assert_eq!(a.perm, b.perm, "perm r={runs} l={len}");
+        assert_eq!(a.offs, b.offs, "offs r={runs} l={len}");
+    }
+}
+
+#[test]
+fn merge_with_empty_and_single_runs() {
+    let xla = xla();
+    let empty: Vec<u64> = vec![];
+    let single = vec![5u64, 6, 7];
+    let a = merge_and_partition(&xla, &[&empty, &single, &empty], &[6]).unwrap();
+    assert_eq!(a.keys, vec![5, 6, 7]);
+    assert_eq!(a.offs, vec![1]);
+}
+
+#[test]
+fn full_pipeline_through_xla_kernels() {
+    // the E2E composition proof at test scale: every map/merge/reduce
+    // task executes AOT-compiled Pallas kernels through PJRT
+    let mut spec = JobSpec::scaled(4 << 20, 2);
+    spec.seed = 2024;
+    let report = run_cloudsort(&spec, xla()).unwrap();
+    assert!(report.validation.valid, "{:?}", report.validation);
+    assert_eq!(report.validation.summary.records, spec.total_records());
+    // kernel engine actually executed
+    if let Backend::Xla(engine) = xla() {
+        assert!(engine.call_count() > 0, "XLA kernels were never invoked");
+    }
+}
+
+#[test]
+fn xla_and_native_runs_produce_identical_output_checksums() {
+    let mut spec = JobSpec::scaled(2 << 20, 2);
+    spec.seed = 777;
+    let a = run_cloudsort(&spec, xla()).unwrap();
+    let b = run_cloudsort(&spec, Backend::Native).unwrap();
+    assert_eq!(
+        a.validation.summary.checksum,
+        b.validation.summary.checksum
+    );
+    assert_eq!(a.validation.summary.records, b.validation.summary.records);
+    assert!(a.validation.valid && b.validation.valid);
+}
