@@ -1,19 +1,21 @@
 //! End-to-end validation driver (DESIGN.md experiment E2E): runs the
 //! complete Exoshuffle-CloudSort pipeline — gensort-equivalent input
-//! generation onto the S3 stand-in, the map/shuffle stage with merge
-//! backpressure, the reduce stage, and valsort-equivalent validation —
-//! at a real (scaled) data size through the full three-layer stack:
-//! Rust control plane → distributed-futures data plane → AOT-compiled
-//! Pallas/XLA kernels via PJRT.
+//! generation onto the S3 stand-in, the strategy-owned shuffle stages,
+//! and valsort-equivalent validation — at a real (scaled) data size
+//! through the full three-layer stack: Rust control plane (a
+//! `ShuffleStrategy` over the `ShuffleJob` builder) → distributed-futures
+//! data plane → AOT-compiled Pallas/XLA kernels via PJRT.
 //!
 //!     make artifacts && cargo run --release --example cloudsort_e2e
 //!
 //! Environment knobs: EXOSHUFFLE_SIZE (default 256MiB),
-//! EXOSHUFFLE_WORKERS (default 4), EXOSHUFFLE_BACKEND (xla|native).
+//! EXOSHUFFLE_WORKERS (default 4), EXOSHUFFLE_BACKEND (xla|native),
+//! EXOSHUFFLE_STRATEGY (two-stage-merge|simple).
 //! The run is recorded in EXPERIMENTS.md §E2E.
 
 use exoshuffle::config::parse_bytes;
 use exoshuffle::prelude::*;
+use exoshuffle::shuffle::strategy_by_name;
 use exoshuffle::util::human_bytes;
 
 fn main() -> anyhow::Result<()> {
@@ -26,19 +28,29 @@ fn main() -> anyhow::Result<()> {
         .map(|s| s.parse().expect("bad EXOSHUFFLE_WORKERS"))
         .unwrap_or(4);
     let spec = JobSpec::scaled(size, workers);
-    let backend = match std::env::var("EXOSHUFFLE_BACKEND").as_deref() {
-        Ok("native") => Backend::Native,
-        _ => Backend::xla(std::path::Path::new("artifacts"))?,
-    };
+    let default_backend =
+        if cfg!(feature = "pjrt") { "xla" } else { "native" };
+    let backend = Backend::from_name(
+        std::env::var("EXOSHUFFLE_BACKEND")
+            .as_deref()
+            .unwrap_or(default_backend),
+        std::path::Path::new("artifacts"),
+    )?;
+    let strategy_name = std::env::var("EXOSHUFFLE_STRATEGY")
+        .unwrap_or_else(|_| "two-stage-merge".into());
+    let strategy = strategy_by_name(&strategy_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown strategy {strategy_name}"))?;
 
     println!("=== Exoshuffle-CloudSort end-to-end ===");
     println!(
-        "dataset: {} ({} records) | cluster: {} workers × {} slots | backend: {}",
+        "dataset: {} ({} records) | cluster: {} workers × {} slots | \
+         backend: {} | strategy: {}",
         human_bytes(spec.total_bytes),
         spec.total_records(),
         spec.n_workers(),
         spec.cluster.task_parallelism(),
         backend.name(),
+        strategy.name(),
     );
     println!(
         "plan: M={} input partitions, R={} output partitions (R1={}/worker), \
@@ -50,14 +62,23 @@ fn main() -> anyhow::Result<()> {
         spec.backpressure,
     );
 
-    let report = run_cloudsort(&spec, backend)?;
+    let report = ShuffleJob::new(spec.clone())
+        .strategy_arc(strategy)
+        .backend(backend)
+        .run()?;
 
     println!("\n--- Table 1 (this run, scaled) ---");
     println!("Map & Shuffle Time | Reduce Time | Total Job Completion Time");
     println!(
         "{:>18.2}s | {:>11.2}s | {:>25.2}s",
-        report.map_shuffle_secs, report.reduce_secs, report.total_secs
+        report.map_shuffle_secs(),
+        report.reduce_secs(),
+        report.total_secs
     );
+    println!("--- per-stage ({} strategy) ---", report.strategy);
+    for stage in &report.stages {
+        println!("  {:<12} {:>8.2}s", stage.name, stage.secs);
+    }
     println!("\n--- per-task means (paper §2.3–2.4: map 24s, merge 17s, reduce 22s at 2GB partitions) ---");
     println!(
         "map {:.3}s | merge {:.3}s | reduce {:.3}s | validate {:.3}s",
@@ -96,7 +117,7 @@ fn main() -> anyhow::Result<()> {
     let profile = exoshuffle::cost::RunProfile {
         n_workers: spec.n_workers(),
         job_seconds: report.total_secs,
-        reduce_seconds: report.reduce_secs,
+        reduce_seconds: report.reduce_secs(),
         data_bytes: spec.total_bytes,
         get_requests: report.s3.get_requests,
         put_requests: report.s3.put_requests,
@@ -114,6 +135,6 @@ fn main() -> anyhow::Result<()> {
         report.validation.summary.duplicates,
     );
     assert!(report.validation.valid, "validation failed");
-    println!("\nEnd-to-end PASS: all layers composed (coordinator → distfut → PJRT kernels).");
+    println!("\nEnd-to-end PASS: all layers composed (ShuffleJob → distfut → PJRT kernels).");
     Ok(())
 }

@@ -1,12 +1,16 @@
-//! Quickstart: sort 16 MiB across 2 simulated workers with the
-//! AOT-compiled Pallas/XLA kernels, then validate the output.
+//! Quickstart: sort 16 MiB across 2 simulated workers through the
+//! `ShuffleJob` builder, then validate the output.
 //!
 //!     make artifacts && cargo run --release --example quickstart
 //!
-//! Set `EXOSHUFFLE_BACKEND=native` to skip the XLA engine (no artifacts
-//! needed) — useful for a first smoke test.
+//! Environment knobs:
+//!   EXOSHUFFLE_BACKEND=native    skip the XLA engine (no artifacts
+//!                                needed) — useful for a first smoke test
+//!   EXOSHUFFLE_STRATEGY=simple   run the single-pass baseline topology
+//!                                instead of the paper's two-stage merge
 
 use exoshuffle::prelude::*;
+use exoshuffle::shuffle::strategy_by_name;
 
 fn main() -> anyhow::Result<()> {
     // 1. Describe the job. `scaled` keeps the paper's structural ratios
@@ -24,21 +28,37 @@ fn main() -> anyhow::Result<()> {
 
     // 2. Pick the compute backend: the XLA engine loads the HLO artifacts
     //    produced by `make artifacts` and executes them via PJRT.
-    let backend = match std::env::var("EXOSHUFFLE_BACKEND").as_deref() {
-        Ok("native") => Backend::Native,
-        _ => Backend::xla(std::path::Path::new("artifacts"))?,
-    };
+    let default_backend =
+        if cfg!(feature = "pjrt") { "xla" } else { "native" };
+    let backend = Backend::from_name(
+        std::env::var("EXOSHUFFLE_BACKEND")
+            .as_deref()
+            .unwrap_or(default_backend),
+        std::path::Path::new("artifacts"),
+    )?;
     println!("backend: {}", backend.name());
 
-    // 3. Run the full pipeline: generate → map/shuffle/merge → reduce →
-    //    validate. Everything runs on an in-process simulated cluster:
+    // 3. Pick the shuffle strategy: the stage topology is a library
+    //    plug-in, not a hard-wired pipeline.
+    let strategy_name = std::env::var("EXOSHUFFLE_STRATEGY")
+        .unwrap_or_else(|_| "two-stage-merge".into());
+    let strategy = strategy_by_name(&strategy_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown strategy {strategy_name}"))?;
+    println!("strategy: {} — {}", strategy.name(), strategy.describe());
+
+    // 4. Run the full pipeline: generate → strategy-owned shuffle stages
+    //    → validate. Everything runs on an in-process simulated cluster:
     //    distributed futures, object store with spilling, S3 stand-in.
-    let report = run_cloudsort(&spec, backend)?;
+    let report = ShuffleJob::new(spec)
+        .strategy_arc(strategy)
+        .backend(backend)
+        .run()?;
 
     println!("\n--- results ---");
     println!("generate:    {:6.2}s (untimed in the benchmark)", report.gen_secs);
-    println!("map&shuffle: {:6.2}s", report.map_shuffle_secs);
-    println!("reduce:      {:6.2}s", report.reduce_secs);
+    for stage in &report.stages {
+        println!("{:<12} {:6.2}s", format!("{}:", stage.name), stage.secs);
+    }
     println!("total:       {:6.2}s", report.total_secs);
     println!(
         "mean task: map {:.3}s, merge {:.3}s, reduce {:.3}s",

@@ -1,0 +1,33 @@
+//! Input generation (paper §3.2 "Generating Input"): gensort-equivalent
+//! partitions written to the S3 stand-in before the timed sort. Shared by
+//! every shuffle strategy — generation is not part of a stage topology.
+
+use anyhow::Context;
+
+use crate::coordinator::manifest::decode_gen_result;
+use crate::coordinator::plan::JobSpec;
+use crate::coordinator::tasks;
+use crate::distfut::Runtime;
+use crate::s3sim::S3;
+
+/// Generate all input partitions onto S3; returns the aggregate
+/// (record count, checksum) — the input manifest's integrity side.
+pub fn generate_input(
+    spec: &JobSpec,
+    s3: &S3,
+    rt: &Runtime,
+) -> anyhow::Result<(u64, u64)> {
+    let results: Vec<_> = (0..spec.n_input_partitions)
+        .map(|p| rt.submit(tasks::gen_task(spec, s3, p)))
+        .collect();
+    let mut records = 0u64;
+    let mut checksum = 0u64;
+    for (outs, h) in results {
+        h.wait().context("input generation")?;
+        let buf = rt.get(&outs[0])?;
+        let (_bytes, cs, recs) = decode_gen_result(&buf);
+        records += recs;
+        checksum = checksum.wrapping_add(cs);
+    }
+    Ok((records, checksum))
+}

@@ -1,83 +1,46 @@
-//! The Exoshuffle-CloudSort control plane (the paper's contribution).
+//! The CloudSort control-plane building blocks (the paper's contribution).
 //!
 //! §2.1: "The program acts as the control plane to coordinate map and
 //! reduce tasks; the [distributed futures] system acts as the data
-//! plane." This module is that program: it computes partition boundaries
-//! (§2.2), drives the map & shuffle stage with driver-side queueing and
-//! merge-controller backpressure (§2.3), runs the reduce stage (§2.4),
-//! and the generation/validation loops around the timed sort (§3.2).
+//! plane." This module holds the pieces a control program is assembled
+//! from: the job plan and partition boundaries ([`plan`], §2.2), the task
+//! bodies ([`tasks`], §2.2–2.4), the per-worker merge controller with its
+//! backpressure predicate ([`merge_controller`], §2.3), and the untimed
+//! generation/validation loops around the sort ([`generate`],
+//! [`validate`], §3.2).
+//!
+//! The *stage topology* — which tasks run, in what order, under which
+//! admission policy — lives in [`crate::shuffle`]: strategies compose
+//! these blocks into pipelines, and [`crate::shuffle::ShuffleJob`] is the
+//! public entry point. [`run_cloudsort`] remains here as a thin
+//! compatibility wrapper over the builder with the paper's two-stage
+//! strategy.
 //!
 //! All data-plane concerns — scheduling, transfer, spilling, retries —
 //! live in [`crate::distfut`]; all compute — sort/merge/partition of
 //! record arrays — in [`crate::runtime`].
 
+pub mod generate;
 pub mod manifest;
 pub mod merge_controller;
 pub mod plan;
 pub mod tasks;
-
-use std::sync::Arc;
-use std::time::Instant;
-
-use anyhow::{anyhow, Context};
+pub mod validate;
 
 pub use plan::JobSpec;
+// Report types predate the shuffle library and are re-exported for
+// compatibility: `coordinator::JobReport` is `shuffle::JobReport`.
+pub use crate::shuffle::{JobReport, StageTiming, ValidationReport};
 
-use crate::distfut::{future, Runtime, RuntimeOptions, TaskHandle};
-use crate::metrics::TaskEvent;
 use crate::runtime::Backend;
-use crate::s3sim::{CounterSnapshot, S3};
-use crate::sortlib::valsort::{self, GlobalSummary, PartitionSummary};
-use manifest::{decode_gen_result, decode_summary};
-use merge_controller::MergeController;
-
-/// Outcome of a full CloudSort run.
-#[derive(Clone, Debug)]
-pub struct JobReport {
-    /// Input generation wall time (untimed in the benchmark, reported).
-    pub gen_secs: f64,
-    /// Map & shuffle stage (Table 1, column 1).
-    pub map_shuffle_secs: f64,
-    /// Reduce stage (Table 1, column 2).
-    pub reduce_secs: f64,
-    /// Total job completion time (Table 1, column 3).
-    pub total_secs: f64,
-    /// Output validation result (valsort -s equivalent).
-    pub validation: ValidationReport,
-    /// S3 request/byte counters *during the timed sort only*.
-    pub s3: CounterSnapshot,
-    /// Data-plane object-store stats (transfers, spills).
-    pub store: crate::distfut::StoreStats,
-    /// Task execution log (drives utilization reporting).
-    pub events: Vec<TaskEvent>,
-    /// (executed attempts, retries) from the data plane.
-    pub task_counts: (u64, u64),
-    /// Map/merge/reduce task counts launched by the control plane.
-    pub n_map_tasks: usize,
-    pub n_merge_tasks: usize,
-    pub n_reduce_tasks: usize,
-    /// Peak per-worker count of shuffled-but-unmerged blocks — the
-    /// memory exposure §2.3 backpressure bounds (ablation A1).
-    pub peak_unmerged_blocks: usize,
-}
-
-/// valsort-equivalent global validation, plus the input/output checksum
-/// comparison ("we compare the output checksum with the input checksum to
-/// verify data integrity", §3.2).
-#[derive(Clone, Debug)]
-pub struct ValidationReport {
-    pub summary: GlobalSummary,
-    pub input_records: u64,
-    pub input_checksum: u64,
-    /// True iff sorted, globally ordered, record counts equal and
-    /// checksums equal.
-    pub valid: bool,
-}
+use crate::s3sim::S3;
+use crate::shuffle::ShuffleJob;
 
 /// Run the full pipeline: generate → sort (map/shuffle + reduce) →
-/// validate. The returned report carries Table 1 and Table 2 inputs.
+/// validate, with the paper's [`crate::shuffle::TwoStageMerge`] strategy.
+/// Compatibility wrapper over [`ShuffleJob`].
 pub fn run_cloudsort(spec: &JobSpec, backend: Backend) -> anyhow::Result<JobReport> {
-    run_cloudsort_on(spec, backend, &S3::with_buckets(spec.s3_buckets))
+    ShuffleJob::new(spec.clone()).backend(backend).run()
 }
 
 /// Like [`run_cloudsort`] but against a caller-provided S3 (lets tests
@@ -87,285 +50,7 @@ pub fn run_cloudsort_on(
     backend: Backend,
     s3: &S3,
 ) -> anyhow::Result<JobReport> {
-    spec.check().map_err(|e| anyhow!(e))?;
-    let rt = Runtime::new(RuntimeOptions {
-        n_nodes: spec.n_workers(),
-        slots_per_node: spec.cluster.task_parallelism().max(1),
-        store_capacity_per_node: spec.store_capacity_per_node,
-        spill_root: std::env::temp_dir(),
-    });
-
-    // --- stage 0: input generation (§3.2), not part of the timed sort ---
-    let t0 = Instant::now();
-    let (input_records, input_checksum) = generate_input(spec, s3, &rt)?;
-    let gen_secs = t0.elapsed().as_secs_f64();
-    s3.reset_counters(); // Table 2 counts requests of the sort itself
-
-    // Pre-compile the kernel shapes this job will execute (one-time XLA
-    // compilation is startup cost, not sort time).
-    let rpp = spec.records_per_partition() as usize;
-    let slice = rpp / spec.n_workers().max(1);
-    let merges_per_node = crate::util::div_ceil(
-        spec.n_input_partitions as u64,
-        spec.merge_threshold_blocks as u64,
-    ) as usize;
-    let reduce_run = (spec.total_records() as usize
-        / spec.n_output_partitions.max(1))
-        / merges_per_node.max(1);
-    crate::runtime::warmup(
-        &backend,
-        rpp,
-        spec.merge_threshold_blocks.min(spec.n_input_partitions),
-        slice.max(2),
-    )?;
-    crate::runtime::warmup(&backend, 2, merges_per_node, reduce_run.max(2))?;
-
-    // --- stage 1: map & shuffle (§2.3) ---
-    let t1 = Instant::now();
-    let controllers = map_shuffle_stage(spec, s3, &backend, &rt)?;
-    let map_shuffle_secs = t1.elapsed().as_secs_f64();
-    let n_map_tasks = spec.n_input_partitions;
-    let n_merge_tasks: usize =
-        controllers.iter().map(|c| c.merges_launched()).sum();
-    let peak_unmerged_blocks = controllers
-        .iter()
-        .map(|c| c.peak_backlog)
-        .max()
-        .unwrap_or(0);
-
-    // --- stage 2: reduce (§2.4) ---
-    let t2 = Instant::now();
-    let n_reduce_tasks = reduce_stage(spec, s3, &backend, &rt, controllers)?;
-    let reduce_secs = t2.elapsed().as_secs_f64();
-    let total_secs = map_shuffle_secs + reduce_secs;
-    let s3_counters = s3.counters();
-
-    // --- stage 3: validation (§3.2), untimed ---
-    let validation =
-        validate_output(spec, s3, &rt, input_records, input_checksum)?;
-
-    let report = JobReport {
-        gen_secs,
-        map_shuffle_secs,
-        reduce_secs,
-        total_secs,
-        validation,
-        s3: s3_counters,
-        store: rt.store_stats(),
-        events: rt.task_events(),
-        task_counts: rt.task_counts(),
-        n_map_tasks,
-        n_merge_tasks,
-        n_reduce_tasks,
-        peak_unmerged_blocks,
-    };
-    rt.shutdown();
-    Ok(report)
-}
-
-/// Stage 0: generate all input partitions onto S3; returns the aggregate
-/// (record count, checksum) — the input manifest's integrity side.
-fn generate_input(
-    spec: &JobSpec,
-    s3: &S3,
-    rt: &Runtime,
-) -> anyhow::Result<(u64, u64)> {
-    let results: Vec<_> = (0..spec.n_input_partitions)
-        .map(|p| rt.submit(tasks::gen_task(spec, s3, p)))
-        .collect();
-    let mut records = 0u64;
-    let mut checksum = 0u64;
-    for (outs, h) in results {
-        h.wait().context("input generation")?;
-        let buf = rt.get(&outs[0])?;
-        let (_bytes, cs, recs) = decode_gen_result(&buf);
-        records += recs;
-        checksum = checksum.wrapping_add(cs);
-    }
-    Ok((records, checksum))
-}
-
-/// Stage 1: the map & shuffle loop. Submits map tasks respecting merge
-/// backpressure, routes map output futures to per-worker merge
-/// controllers, and returns the controllers once every map and merge has
-/// completed.
-fn map_shuffle_stage(
-    spec: &JobSpec,
-    s3: &S3,
-    backend: &Backend,
-    rt: &Runtime,
-) -> anyhow::Result<Vec<MergeController>> {
-    let w = spec.n_workers();
-    let worker_cuts = Arc::new(spec.worker_cuts());
-    let backend2 = backend.clone();
-    let spec2 = spec.clone();
-    let mut controllers: Vec<MergeController> = (0..w)
-        .map(|node| {
-            let backend = backend2.clone();
-            let spec = spec2.clone();
-            MergeController::new(
-                node,
-                spec2.merge_threshold_blocks,
-                Arc::new(move |node, batch, blocks| {
-                    tasks::merge_task(&spec, &backend, node, batch, blocks)
-                }),
-            )
-        })
-        .collect();
-
-    let mut map_handles: Vec<TaskHandle> =
-        Vec::with_capacity(spec.n_input_partitions);
-    let mut next_map = 0usize;
-    loop {
-        // submit maps while backpressure allows (paper: the driver queues
-        // extra tasks and feeds nodes as they free up; our Any-queue does
-        // the feeding, this loop does the admission control)
-        let backlog_limit = spec.max_buffered_blocks.max(1);
-        let merge_parallelism = spec.cluster.task_parallelism().max(1);
-        while next_map < spec.n_input_partitions {
-            let blocked = spec.backpressure
-                && controllers
-                    .iter()
-                    .any(|c| c.saturated(merge_parallelism, backlog_limit));
-            // admission is also bounded by total slots to keep the driver
-            // queue (not the runtime queue) the place where tasks wait
-            let in_flight =
-                map_handles.iter().filter(|h| !h.is_done()).count();
-            if blocked || in_flight >= spec.cluster.total_slots() * 2 {
-                break;
-            }
-            let (outs, h) = rt.submit(tasks::map_task(
-                spec,
-                s3,
-                backend,
-                worker_cuts.clone(),
-                next_map,
-            ));
-            for (node, block) in outs.into_iter().enumerate() {
-                controllers[node].on_map_block(block);
-            }
-            map_handles.push(h);
-            next_map += 1;
-        }
-        for c in controllers.iter_mut() {
-            c.poll(rt);
-        }
-        if next_map == spec.n_input_partitions
-            && map_handles.iter().all(|h| h.is_done())
-        {
-            break;
-        }
-        std::thread::sleep(std::time::Duration::from_micros(500));
-    }
-    future::wait_all(&map_handles).context("map stage")?;
-    // tail merges + barrier: "once all map and merge tasks finish" (§2.3)
-    for c in controllers.iter_mut() {
-        c.flush(rt);
-    }
-    for c in &controllers {
-        c.wait_all().context("merge stage")?;
-    }
-    Ok(controllers)
-}
-
-/// Stage 2: reduce. One task per output partition, pinned to the worker
-/// that owns the reducer range; merges that reducer's block from every
-/// merge batch and uploads the output partition.
-fn reduce_stage(
-    spec: &JobSpec,
-    s3: &S3,
-    backend: &Backend,
-    rt: &Runtime,
-    controllers: Vec<MergeController>,
-) -> anyhow::Result<usize> {
-    let r1 = spec.reducers_per_worker();
-    let mut handles = Vec::with_capacity(spec.n_output_partitions);
-    for c in &controllers {
-        for j in 0..r1 {
-            let global_r = c.node * r1 + j;
-            let blocks: Vec<_> = c
-                .merged_outputs
-                .iter()
-                .map(|batch| batch[j].clone())
-                .collect();
-            let (_outs, h) = rt.submit(tasks::reduce_task(
-                spec, s3, backend, c.node, global_r, blocks,
-            ));
-            handles.push(h);
-        }
-    }
-    drop(controllers); // release merged-block refs held by controllers
-    future::wait_all(&handles).context("reduce stage")?;
-    Ok(handles.len())
-}
-
-/// Stage 3: validation. One valsort task per output partition, then the
-/// global summary pass and the input/output checksum comparison.
-fn validate_output(
-    spec: &JobSpec,
-    s3: &S3,
-    rt: &Runtime,
-    input_records: u64,
-    input_checksum: u64,
-) -> anyhow::Result<ValidationReport> {
-    let results: Vec<_> = (0..spec.n_output_partitions)
-        .map(|r| rt.submit(tasks::validate_task(spec, s3, r)))
-        .collect();
-    let mut summaries: Vec<PartitionSummary> =
-        Vec::with_capacity(results.len());
-    for (outs, h) in results {
-        h.wait().context("validation")?;
-        let buf = rt.get(&outs[0])?;
-        summaries.push(decode_summary(&buf));
-    }
-    let summary = valsort::validate_summaries(&summaries);
-    let valid = summary.valid
-        && summary.records == input_records
-        && summary.checksum == input_checksum;
-    Ok(ValidationReport {
-        summary,
-        input_records,
-        input_checksum,
-        valid,
-    })
-}
-
-impl JobReport {
-    /// One Table 1 row: `map&shuffle | reduce | total` in seconds.
-    pub fn table1_row(&self) -> (f64, f64, f64) {
-        (self.map_shuffle_secs, self.reduce_secs, self.total_secs)
-    }
-
-    /// Mean duration of a task family (paper §2.3/2.4 reports these).
-    pub fn mean_task_secs(&self, family: &str) -> f64 {
-        crate::metrics::mean_duration(&self.events, family)
-    }
-
-    /// Figure 1-style utilization bands for a *real* run, derived from
-    /// the task log (CPU-slot occupancy per node).
-    pub fn utilization(&self, spec: &JobSpec, bins: usize) -> crate::metrics::UtilizationReport {
-        let end = self
-            .events
-            .iter()
-            .map(|e| e.end)
-            .fold(0.0f64, f64::max)
-            .max(1e-9);
-        let dt = end / bins.max(1) as f64;
-        let mut cpu = crate::metrics::Timeseries::new(spec.n_workers(), dt, end);
-        for e in &self.events {
-            if e.node < spec.n_workers() {
-                cpu.add_busy_interval(
-                    e.node,
-                    e.start,
-                    e.end,
-                    1.0 / spec.cluster.task_parallelism().max(1) as f64,
-                );
-            }
-        }
-        let mut rep = crate::metrics::UtilizationReport::default();
-        rep.add_resource("task_slots", &cpu);
-        rep
-    }
+    ShuffleJob::new(spec.clone()).backend(backend).on(s3).run()
 }
 
 #[cfg(test)]
@@ -385,6 +70,11 @@ mod tests {
         );
         assert!(report.n_merge_tasks >= 1);
         assert_eq!(report.n_reduce_tasks, spec.n_output_partitions);
+        // the wrapper runs the paper's strategy and its stage names
+        assert_eq!(report.strategy, "two-stage-merge");
+        assert_eq!(report.stages.len(), 2);
+        assert_eq!(report.stages[0].name, "map_shuffle");
+        assert_eq!(report.stages[1].name, "reduce");
         // every output partition got a PUT; every map did GETs
         assert!(report.s3.put_requests >= spec.n_output_partitions as u64);
         assert!(report.s3.get_requests >= spec.n_input_partitions as u64);

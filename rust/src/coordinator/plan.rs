@@ -82,7 +82,6 @@ impl JobSpec {
             seed: 42,
             s3_buckets: n_workers.max(1),
             store_capacity_per_node: 1 << 30,
-            ..Self::paper_100tb()
         }
     }
 

@@ -78,20 +78,24 @@ pub fn gen_task(spec: &JobSpec, s3: &S3, p: usize) -> TaskSpec {
     }
 }
 
-/// Map task (§2.3): download an input partition, sort it, partition into
-/// W slices — one per worker range. Returns W record buffers.
+/// Map task (§2.3): download an input partition, sort it, and split it at
+/// the given cut points into `cuts.len() + 1` record buffers. The
+/// strategy chooses the granularity: worker cuts (W slices routed to
+/// merge controllers, the paper's design) or the full reducer cuts
+/// (R slices consumed directly by reduce tasks, the simple-shuffle
+/// baseline).
 pub fn map_task(
     spec: &JobSpec,
     s3: &S3,
     backend: &Backend,
-    worker_cuts: Arc<Vec<u64>>,
+    cuts: Arc<Vec<u64>>,
     p: usize,
 ) -> TaskSpec {
     let s3 = s3.clone();
     let backend = backend.clone();
     let seed = spec.seed;
     let n_buckets = spec.s3_buckets;
-    let w = spec.n_workers();
+    let n_out = cuts.len() + 1;
     TaskSpec {
         name: format!("map-{p}"),
         placement: Placement::Any,
@@ -100,17 +104,17 @@ pub fn map_task(
                 .get(&bucket_of(seed, p as u64, n_buckets), &input_key(p))
                 .map_err(|e| e.to_string())?;
             let keys = sortlib::extract_partition_keys(&buf);
-            let r = runtime::sort_and_partition(&backend, &keys, &worker_cuts)
+            let r = runtime::sort_and_partition(&backend, &keys, &cuts)
                 .map_err(|e| e.to_string())?;
-            // gather sorted records directly into the W worker slices
-            let mut bounds = Vec::with_capacity(w + 1);
+            // gather sorted records directly into the output slices
+            let mut bounds = Vec::with_capacity(cuts.len() + 2);
             bounds.push(0);
-            bounds.extend_from_slice(&r.offs[..w - 1]);
+            bounds.extend_from_slice(&r.offs);
             bounds.push(keys.len() as u32);
             Ok(sortlib::apply_permutation_ranges(&buf, &r.perm, &bounds))
         }),
         args: vec![],
-        num_returns: w,
+        num_returns: n_out,
         max_retries: S3_TASK_RETRIES,
     }
 }

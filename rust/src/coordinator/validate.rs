@@ -1,0 +1,45 @@
+//! Output validation (paper §3.2 "Validating Output"): one valsort task
+//! per output partition, a global summary pass, and the input/output
+//! checksum comparison. Strategy-independent — every topology must
+//! produce the same validated output.
+
+use anyhow::Context;
+
+use crate::coordinator::manifest::decode_summary;
+use crate::coordinator::plan::JobSpec;
+use crate::coordinator::tasks;
+use crate::distfut::Runtime;
+use crate::s3sim::S3;
+use crate::shuffle::report::ValidationReport;
+use crate::sortlib::valsort::{self, PartitionSummary};
+
+/// Validate the output: per-partition valsort summaries, the global
+/// order/count check, and the checksum comparison against the input.
+pub fn validate_output(
+    spec: &JobSpec,
+    s3: &S3,
+    rt: &Runtime,
+    input_records: u64,
+    input_checksum: u64,
+) -> anyhow::Result<ValidationReport> {
+    let results: Vec<_> = (0..spec.n_output_partitions)
+        .map(|r| rt.submit(tasks::validate_task(spec, s3, r)))
+        .collect();
+    let mut summaries: Vec<PartitionSummary> =
+        Vec::with_capacity(results.len());
+    for (outs, h) in results {
+        h.wait().context("validation")?;
+        let buf = rt.get(&outs[0])?;
+        summaries.push(decode_summary(&buf));
+    }
+    let summary = valsort::validate_summaries(&summaries);
+    let valid = summary.valid
+        && summary.records == input_records
+        && summary.checksum == input_checksum;
+    Ok(ValidationReport {
+        summary,
+        input_records,
+        input_checksum,
+        valid,
+    })
+}

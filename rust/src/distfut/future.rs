@@ -67,6 +67,13 @@ impl TaskHandle {
     }
 }
 
+/// Number of handles still pending — the in-flight count shuffle
+/// strategies bound their admission loops with (driver-side queueing,
+/// paper §2.3).
+pub fn pending_count(handles: &[TaskHandle]) -> usize {
+    handles.iter().filter(|h| !h.is_done()).count()
+}
+
 /// Wait for every handle, returning the first error (after all finish).
 pub fn wait_all(handles: &[TaskHandle]) -> Result<(), DfError> {
     let mut first_err = None;
@@ -112,6 +119,19 @@ mod tests {
         h.complete(Ok(()));
         h.complete(Err("late".into()));
         assert!(h.wait().is_ok());
+    }
+
+    #[test]
+    fn pending_count_tracks_completion() {
+        let a = TaskHandle::new("a".into());
+        let b = TaskHandle::new("b".into());
+        let hs = [a.clone(), b.clone()];
+        assert_eq!(pending_count(&hs), 2);
+        a.complete(Ok(()));
+        assert_eq!(pending_count(&hs), 1);
+        b.complete(Err("x".into()));
+        assert_eq!(pending_count(&hs), 0);
+        assert_eq!(pending_count(&[]), 0);
     }
 
     #[test]

@@ -1,31 +1,45 @@
 //! # Exoshuffle-CloudSort (reproduction)
 //!
-//! An application-level shuffle: a two-stage external sort written as a
-//! distributed-futures program, after *Exoshuffle-CloudSort* (CS.DC 2023).
-//! The application ([`coordinator`]) owns the control plane — partition
-//! boundaries, map scheduling, merge backpressure, the reduce stage — while
-//! a Ray-like distributed-futures runtime ([`distfut`]) owns the data
+//! Shuffle as an *application-level library* over distributed futures,
+//! after *Exoshuffle-CloudSort* (cs.DC 2023). The public surface is the
+//! [`shuffle`] module: a [`shuffle::ShuffleJob`] builder configures a job
+//! and a pluggable [`shuffle::ShuffleStrategy`] owns the stage topology.
+//! The paper's two-stage external sort — map & shuffle with per-worker
+//! merge backpressure, then reduce — is one strategy
+//! ([`shuffle::TwoStageMerge`], the default); the single-pass MapReduce
+//! baseline is another ([`shuffle::SimpleShuffle`]); push-based and
+//! streaming variants slot in the same way.
+//!
+//! Strategies compose control-plane building blocks from [`coordinator`]
+//! — partition planning, task bodies, the merge controller — while a
+//! Ray-like distributed-futures runtime ([`distfut`]) owns the data
 //! plane: task execution, object transfer, memory management with disk
 //! spilling, and fault recovery.
 //!
 //! The compute hot-spot (sorting, partitioning and merging record arrays;
 //! the paper's 300-line C++ component) is implemented as Pallas/JAX kernels
-//! AOT-compiled to HLO and executed from Rust via PJRT ([`runtime`]), with
-//! a native Rust radix-sort baseline for comparison.
+//! AOT-compiled to HLO and executed from Rust via PJRT ([`runtime`], the
+//! `pjrt` feature), with a native Rust radix-sort baseline for comparison.
 //!
 //! Substrates the paper takes from AWS are simulated: [`s3sim`] stands in
 //! for Amazon S3 (chunked GET/PUT with per-request accounting, so the
 //! Table 2 cost model is exact), and [`cluster`] describes the 40-node
 //! i4i.4xlarge testbed whose constants drive both the real executor and
 //! the discrete-event simulator ([`sim`]) that replays the full 100 TB
-//! run for Table 1 / Figure 1.
+//! run — per strategy topology — for Table 1 / Figure 1.
 //!
 //! ```no_run
 //! use exoshuffle::prelude::*;
 //! # fn main() -> anyhow::Result<()> {
 //! let spec = JobSpec::scaled(64 << 20, 4); // 64 MiB across 4 workers
-//! let report = run_cloudsort(&spec, Backend::Native)?;
+//! let report = ShuffleJob::new(spec)
+//!     .strategy(TwoStageMerge) // or SimpleShuffle, or your own
+//!     .backend(Backend::Native)
+//!     .run()?;
 //! assert!(report.validation.valid);
+//! for stage in &report.stages {
+//!     println!("{}: {:.2}s", stage.name, stage.secs);
+//! }
 //! # Ok(()) }
 //! ```
 
@@ -37,6 +51,7 @@ pub mod distfut;
 pub mod metrics;
 pub mod runtime;
 pub mod s3sim;
+pub mod shuffle;
 pub mod sim;
 pub mod sortlib;
 pub mod util;
@@ -44,10 +59,14 @@ pub mod util;
 /// Convenience re-exports for examples and binaries.
 pub mod prelude {
     pub use crate::cluster::ClusterSpec;
-    pub use crate::coordinator::{run_cloudsort, JobReport, JobSpec};
+    pub use crate::coordinator::{run_cloudsort, JobSpec};
     pub use crate::cost::CostModel;
     pub use crate::runtime::Backend;
     pub use crate::s3sim::S3;
+    pub use crate::shuffle::{
+        JobReport, ShuffleJob, ShuffleStrategy, SimpleShuffle, StageTiming,
+        TwoStageMerge,
+    };
     pub use crate::sim::SimConfig;
     pub use crate::sortlib::{Record, RECORD_SIZE};
 }

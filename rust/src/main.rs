@@ -1,22 +1,24 @@
 //! `exoshuffle` — launcher CLI for the Exoshuffle-CloudSort reproduction.
 //!
 //! Subcommands:
-//!   sort      run a scaled CloudSort end-to-end (generate → sort → validate)
+//!   sort      run a scaled shuffle job end-to-end (generate → sort → validate)
 //!   sim       discrete-event simulation of the full 100 TB benchmark
 //!   cost      print the Table 2 cost breakdown for a run profile
 //!   info      print artifact/backend information
 //!
 //! The offline environment has no clap; argument parsing is a small
-//! hand-rolled layer (`--key value` flags after the subcommand).
+//! hand-rolled layer (`--key value` flags after the subcommand, with
+//! bare `--flag` treated as `--flag true`).
 
 use std::collections::HashMap;
 use std::path::PathBuf;
 
 use exoshuffle::config::{parse_bytes, Config};
-use exoshuffle::coordinator::{run_cloudsort, JobSpec};
+use exoshuffle::coordinator::JobSpec;
 use exoshuffle::cost::{CostModel, RunProfile};
 use exoshuffle::runtime::Backend;
-use exoshuffle::sim::{simulate, SimConfig};
+use exoshuffle::shuffle::{list_strategies, strategy_by_name, ShuffleJob};
+use exoshuffle::sim::{simulate, SimConfig, SimStrategy};
 use exoshuffle::util::{human_bytes, human_secs};
 
 fn main() {
@@ -31,7 +33,13 @@ fn main() {
     std::process::exit(code);
 }
 
-/// Parse `--key value` pairs after the subcommand.
+/// Flags that stand alone (bare `--flag` means `--flag true`); all other
+/// flags require a value.
+const BOOLEAN_FLAGS: &[&str] = &["no-backpressure", "list-strategies", "events"];
+
+/// Parse `--key value` pairs after the subcommand. A flag listed in
+/// [`BOOLEAN_FLAGS`] may appear bare; a value flag with a missing value
+/// is an error (not a silent "true").
 fn parse_flags(args: &[String]) -> Result<HashMap<String, String>, String> {
     let mut flags = HashMap::new();
     let mut i = 0;
@@ -39,14 +47,26 @@ fn parse_flags(args: &[String]) -> Result<HashMap<String, String>, String> {
         let k = args[i]
             .strip_prefix("--")
             .ok_or_else(|| format!("expected --flag, got '{}'", args[i]))?;
-        let v = args
-            .get(i + 1)
-            .ok_or_else(|| format!("--{k} needs a value"))?;
-        flags.insert(k.to_string(), v.clone());
-        i += 2;
+        let boolean = BOOLEAN_FLAGS.contains(&k);
+        match args.get(i + 1) {
+            Some(v) if !v.starts_with("--") => {
+                flags.insert(k.to_string(), v.clone());
+                i += 2;
+            }
+            _ if boolean => {
+                flags.insert(k.to_string(), "true".to_string());
+                i += 1;
+            }
+            _ => return Err(format!("--{k} needs a value")),
+        }
     }
     Ok(flags)
 }
+
+/// Default `--backend`: the XLA engine when this build carries it, the
+/// self-contained native path otherwise — so the no-flags happy path
+/// always runs.
+const DEFAULT_BACKEND: &str = if cfg!(feature = "pjrt") { "xla" } else { "native" };
 
 fn run(args: Vec<String>) -> anyhow::Result<()> {
     let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
@@ -68,20 +88,23 @@ fn run(args: Vec<String>) -> anyhow::Result<()> {
 }
 
 const HELP: &str = "\
-exoshuffle — Exoshuffle-CloudSort reproduction
+exoshuffle — Exoshuffle-CloudSort reproduction (shuffle as a library)
 
 USAGE: exoshuffle <COMMAND> [--flag value]...
 
 COMMANDS:
-  sort   run a scaled CloudSort end-to-end on the in-process cluster
+  sort   run a scaled shuffle job end-to-end on the in-process cluster
            --size 256MiB       dataset size (default 64MiB)
            --workers 4         worker nodes (default 4)
-           --backend xla|native (default xla)
+           --strategy NAME     shuffle strategy (default two-stage-merge)
+           --list-strategies   print registered strategies and exit
+           --backend xla|native (default: xla in pjrt builds, else native)
            --artifacts DIR     artifact dir (default ./artifacts)
            --config FILE       TOML config (overrides --size/--workers)
-           --no-backpressure true  disable merge backpressure (ablation)
+           --no-backpressure   disable merge backpressure (ablation)
   sim    simulate the full 100 TB benchmark (Table 1 / Figure 1)
            --runs 3            number of runs (Table 1 rows)
+           --strategy NAME     topology to replay (default two-stage-merge)
            --fig1-csv FILE     write Figure 1 utilization CSV
   cost   print the Table 2 cost breakdown
            --hours 1.4939      job completion hours
@@ -91,7 +114,33 @@ COMMANDS:
            --artifacts DIR
 ";
 
+/// Print the strategy registry (for `--list-strategies`). With
+/// `sim_only`, restrict to strategies the discrete-event simulator can
+/// replay, so `sim --list-strategies` never advertises a name that
+/// `sim --strategy` rejects.
+fn print_strategies(sim_only: bool) {
+    println!(
+        "{}",
+        if sim_only {
+            "strategies with a simulator topology:"
+        } else {
+            "registered shuffle strategies:"
+        }
+    );
+    for s in list_strategies() {
+        if sim_only && SimStrategy::from_name(s.name()).is_none() {
+            continue;
+        }
+        println!("  {:<16} stages {:?}", s.name(), s.stage_names());
+        println!("  {:<16}   {}", "", s.describe());
+    }
+}
+
 fn cmd_sort(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    if flags.contains_key("list-strategies") {
+        print_strategies(false);
+        return Ok(());
+    }
     let spec: JobSpec = if let Some(path) = flags.get("config") {
         let text = std::fs::read_to_string(path)?;
         Config::parse(&text)
@@ -115,28 +164,43 @@ fn cmd_sort(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         }
         s
     };
-    let backend = match flags.get("backend").map(|s| s.as_str()) {
-        Some("native") => Backend::Native,
-        _ => {
-            let dir = flags
-                .get("artifacts")
-                .map(PathBuf::from)
-                .unwrap_or_else(|| PathBuf::from("artifacts"));
-            Backend::xla(&dir)?
-        }
-    };
+    let artifacts = flags
+        .get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"));
+    let backend = Backend::from_name(
+        flags
+            .get("backend")
+            .map(|s| s.as_str())
+            .unwrap_or(DEFAULT_BACKEND),
+        &artifacts,
+    )?;
+    let strategy_name = flags
+        .get("strategy")
+        .map(|s| s.as_str())
+        .unwrap_or("two-stage-merge");
+    let strategy = strategy_by_name(strategy_name).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown strategy '{strategy_name}' (try --list-strategies)"
+        )
+    })?;
     println!(
-        "sorting {} across {} workers (M={}, R={}, backend={})",
+        "sorting {} across {} workers (M={}, R={}, backend={}, strategy={})",
         human_bytes(spec.total_bytes),
         spec.n_workers(),
         spec.n_input_partitions,
         spec.n_output_partitions,
         backend.name(),
+        strategy.name(),
     );
-    let report = run_cloudsort(&spec, backend)?;
+    let report = ShuffleJob::new(spec.clone())
+        .strategy_arc(strategy)
+        .backend(backend)
+        .run()?;
     println!("generate:     {:>8.2}s", report.gen_secs);
-    println!("map&shuffle:  {:>8.2}s", report.map_shuffle_secs);
-    println!("reduce:       {:>8.2}s", report.reduce_secs);
+    for stage in &report.stages {
+        println!("{:<13} {:>8.2}s", format!("{}:", stage.name), stage.secs);
+    }
     println!("total:        {:>8.2}s  ({})", report.total_secs,
         human_secs(report.total_secs));
     println!(
@@ -196,15 +260,33 @@ fn cmd_sort(flags: &HashMap<String, String>) -> anyhow::Result<()> {
 }
 
 fn cmd_sim(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    if flags.contains_key("list-strategies") {
+        print_strategies(true);
+        return Ok(());
+    }
     let runs: usize = flags
         .get("runs")
         .map(|r| r.parse())
         .transpose()?
         .unwrap_or(3);
+    let strategy_name = flags
+        .get("strategy")
+        .map(|s| s.as_str())
+        .unwrap_or("two-stage-merge");
+    let strategy = SimStrategy::from_name(strategy_name).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown strategy '{strategy_name}' (try --list-strategies)"
+        )
+    })?;
     let mut rows = Vec::new();
-    println!("simulating the 100 TB CloudSort benchmark ({runs} runs)\n");
+    println!(
+        "simulating the 100 TB CloudSort benchmark \
+         ({runs} runs, strategy={})\n",
+        strategy.name()
+    );
     for run in 0..runs {
         let mut cfg = SimConfig::paper_100tb();
+        cfg.strategy = strategy;
         cfg.seed = 1 + run as u64;
         let r = simulate(&cfg);
         println!(
@@ -233,7 +315,7 @@ fn cmd_sim(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     };
     println!(
         "average: map&shuffle {:.0}s  reduce {:.0}s  total {:.0}s  \
-         (paper: 3508s / 1870s / 5378s)",
+         (paper: 3508s / 1870s / 5378s with two-stage-merge)",
         avg(|r| r.map_shuffle_secs),
         avg(|r| r.reduce_secs),
         avg(|r| r.total_secs),

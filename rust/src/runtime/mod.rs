@@ -1,6 +1,9 @@
 //! Compute runtime: executes the AOT-compiled Pallas/JAX kernels via PJRT
 //! (the request-path half of the three-layer architecture — Python never
 //! runs here), with a native Rust fallback used as the ablation baseline.
+//! The PJRT engine needs the XLA bindings and is gated behind the `pjrt`
+//! cargo feature; the default build is self-contained on the native path
+//! and [`Backend::xla`] returns a descriptive error.
 //!
 //! The kernels have fixed shapes (AOT), so this layer also owns the
 //! *planning* logic that maps arbitrary task sizes onto them:
@@ -20,11 +23,14 @@
 //! every result's `perm` indexes the caller's concatenated input directly
 //! and sentinel padding (u32::MAX vals / u64::MAX keys) filters out.
 
+#[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod native;
 
+#[cfg(feature = "pjrt")]
 use std::sync::Arc;
 
+#[cfg(feature = "pjrt")]
 use crate::sortlib::radix;
 
 /// Result of a sort/merge + partition task.
@@ -42,6 +48,9 @@ pub struct SortResult {
 #[derive(Clone)]
 pub enum Backend {
     /// AOT-compiled Pallas/JAX kernels through PJRT (the paper system).
+    /// Requires the `pjrt` feature (the XLA bindings are not part of the
+    /// default, self-contained build).
+    #[cfg(feature = "pjrt")]
     Xla(Arc<engine::Engine>),
     /// Pure-Rust radix sort + heap merge (ablation baseline A2).
     Native,
@@ -49,12 +58,42 @@ pub enum Backend {
 
 impl Backend {
     /// Load the XLA backend from an artifact directory.
+    #[cfg(feature = "pjrt")]
     pub fn xla(artifact_dir: &std::path::Path) -> anyhow::Result<Backend> {
         Ok(Backend::Xla(Arc::new(engine::Engine::load(artifact_dir)?)))
     }
 
+    /// Stub when built without PJRT: always an error directing the caller
+    /// to the native backend or a `--features pjrt` build.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn xla(_artifact_dir: &std::path::Path) -> anyhow::Result<Backend> {
+        Err(anyhow::anyhow!(
+            "this build has no XLA backend (compiled without the `pjrt` \
+             feature); rebuild with `--features pjrt` or select the \
+             native backend"
+        ))
+    }
+
+    /// Resolve a backend by CLI/env name: "native", or "xla" with the
+    /// given artifact directory. This is what `--backend` and
+    /// `EXOSHUFFLE_BACKEND` feed into the [`crate::shuffle::ShuffleJob`]
+    /// builder.
+    pub fn from_name(
+        name: &str,
+        artifact_dir: &std::path::Path,
+    ) -> anyhow::Result<Backend> {
+        match name {
+            "native" => Ok(Backend::Native),
+            "xla" => Backend::xla(artifact_dir),
+            other => Err(anyhow::anyhow!(
+                "unknown backend '{other}' (expected 'xla' or 'native')"
+            )),
+        }
+    }
+
     pub fn name(&self) -> &'static str {
         match self {
+            #[cfg(feature = "pjrt")]
             Backend::Xla(_) => "xla",
             Backend::Native => "native",
         }
@@ -69,6 +108,7 @@ pub fn sort_and_partition(
 ) -> anyhow::Result<SortResult> {
     match backend {
         Backend::Native => Ok(native::sort_and_partition(keys, cuts)),
+        #[cfg(feature = "pjrt")]
         Backend::Xla(engine) => xla_sort_any(engine, keys, cuts),
     }
 }
@@ -82,6 +122,7 @@ pub fn merge_and_partition(
 ) -> anyhow::Result<SortResult> {
     match backend {
         Backend::Native => Ok(native::merge_and_partition(runs, cuts)),
+        #[cfg(feature = "pjrt")]
         Backend::Xla(engine) => xla_merge_any(engine, runs, cuts),
     }
 }
@@ -96,29 +137,38 @@ pub fn warmup(
     merge_runs: usize,
     merge_run_len: usize,
 ) -> anyhow::Result<()> {
-    if let Backend::Native = backend {
-        return Ok(());
+    match backend {
+        Backend::Native => {
+            let _ = (sort_block, merge_runs, merge_run_len);
+            Ok(())
+        }
+        #[cfg(feature = "pjrt")]
+        Backend::Xla(_) => {
+            let mut rng = crate::util::rng::Xoshiro256::new(0xFEED);
+            let keys: Vec<u64> =
+                (0..sort_block.max(2)).map(|_| rng.next_u64()).collect();
+            sort_and_partition(backend, &keys, &[1 << 63])?;
+            let runs: Vec<Vec<u64>> = (0..merge_runs.max(2))
+                .map(|_| {
+                    let mut r: Vec<u64> = (0..merge_run_len.max(2))
+                        .map(|_| rng.next_u64())
+                        .collect();
+                    r.sort_unstable();
+                    r
+                })
+                .collect();
+            let refs: Vec<&[u64]> = runs.iter().map(|r| r.as_slice()).collect();
+            merge_and_partition(backend, &refs, &[1 << 63])?;
+            Ok(())
+        }
     }
-    let mut rng = crate::util::rng::Xoshiro256::new(0xFEED);
-    let keys: Vec<u64> = (0..sort_block.max(2)).map(|_| rng.next_u64()).collect();
-    sort_and_partition(backend, &keys, &[1 << 63])?;
-    let runs: Vec<Vec<u64>> = (0..merge_runs.max(2))
-        .map(|_| {
-            let mut r: Vec<u64> =
-                (0..merge_run_len.max(2)).map(|_| rng.next_u64()).collect();
-            r.sort_unstable();
-            r
-        })
-        .collect();
-    let refs: Vec<&[u64]> = runs.iter().map(|r| r.as_slice()).collect();
-    merge_and_partition(backend, &refs, &[1 << 63])?;
-    Ok(())
 }
 
 // ---------------------------------------------------------------------
 // XLA planning
 // ---------------------------------------------------------------------
 
+#[cfg(feature = "pjrt")]
 fn xla_sort_any(
     engine: &engine::Engine,
     keys: &[u64],
@@ -152,6 +202,7 @@ fn xla_sort_any(
     })
 }
 
+#[cfg(feature = "pjrt")]
 fn xla_merge_any(
     engine: &engine::Engine,
     runs: &[&[u64]],
@@ -186,6 +237,7 @@ fn xla_merge_any(
 }
 
 /// A contiguous sub-range of one input run.
+#[cfg(feature = "pjrt")]
 struct RunSlice {
     run: usize,
     lo: usize,
@@ -194,6 +246,7 @@ struct RunSlice {
 
 /// Recursively merge the given run slices (all keys in `[lo_key, hi_key]`)
 /// into `out`, splitting the key range until a bucket fits a kernel call.
+#[cfg(feature = "pjrt")]
 fn merge_ranged(
     engine: &engine::Engine,
     runs: &[&[u64]],

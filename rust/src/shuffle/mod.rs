@@ -1,0 +1,308 @@
+//! Shuffle-as-a-library: the composable public API of this crate.
+//!
+//! The paper's central claim is that shuffle is an *application-level
+//! library* over distributed futures, not a hard-wired pipeline. This
+//! module is that library surface: a [`ShuffleJob`] builder configures a
+//! job (spec, compute backend, object store) and a [`ShuffleStrategy`]
+//! owns the *stage topology* — which tasks run, in what stages, under
+//! which backpressure policy. The CloudSort reproduction is just one
+//! strategy ([`TwoStageMerge`], the paper's §2.3 pre-shuffle-merge
+//! design); the Exoshuffle baseline ([`SimpleShuffle`], straight
+//! map → reduce) is another, and push-based or streaming variants slot in
+//! the same way.
+//!
+//! ```no_run
+//! use exoshuffle::prelude::*;
+//! # fn main() -> anyhow::Result<()> {
+//! let report = ShuffleJob::new(JobSpec::scaled(64 << 20, 4))
+//!     .strategy(SimpleShuffle)
+//!     .backend(Backend::Native)
+//!     .run()?;
+//! assert!(report.validation.valid);
+//! # Ok(()) }
+//! ```
+//!
+//! Everything outside the timed shuffle — input generation, valsort-style
+//! validation, report assembly — is owned by [`ShuffleJob::run`] so every
+//! strategy is measured and checked identically (§3.2).
+
+pub mod report;
+pub mod simple;
+pub mod two_stage;
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::anyhow;
+
+pub use report::{JobReport, StageTiming, ValidationReport};
+pub use simple::SimpleShuffle;
+pub use two_stage::TwoStageMerge;
+
+use crate::coordinator::plan::JobSpec;
+use crate::coordinator::{generate, validate};
+use crate::distfut::{Runtime, RuntimeOptions};
+use crate::runtime::Backend;
+use crate::s3sim::S3;
+
+/// Everything a strategy needs to drive its stages: the job plan, the
+/// object store standing in for S3, the compute backend, and the
+/// distributed-futures runtime it submits tasks to. Strategies own the
+/// control plane; `cx.rt` is the data plane (§2.1).
+pub struct ShuffleContext<'a> {
+    pub spec: &'a JobSpec,
+    pub s3: &'a S3,
+    pub backend: &'a Backend,
+    pub rt: &'a Runtime,
+}
+
+/// What a strategy hands back after its timed stages complete.
+pub struct ShuffleOutcome {
+    /// Per-stage wall times, in execution order, keyed by the names the
+    /// strategy declared in [`ShuffleStrategy::stage_names`].
+    pub stages: Vec<StageTiming>,
+    /// Tasks launched by the control plane, per family.
+    pub n_map_tasks: usize,
+    pub n_merge_tasks: usize,
+    pub n_reduce_tasks: usize,
+    /// Peak per-worker count of shuffled-but-unconsumed map blocks — the
+    /// memory exposure §2.3 backpressure bounds (ablation A1).
+    pub peak_unmerged_blocks: usize,
+}
+
+/// A shuffle stage topology. Implementations submit tasks against
+/// `cx.rt`, decide stage boundaries, and report per-stage timings; the
+/// surrounding generate/validate loops and the report are shared
+/// ([`ShuffleJob::run`]).
+pub trait ShuffleStrategy: Send + Sync {
+    /// Registry name (also what `--strategy` matches).
+    fn name(&self) -> &'static str;
+
+    /// One-line description for `--list-strategies`.
+    fn describe(&self) -> &'static str;
+
+    /// The ordered stage names this strategy will report timings for.
+    /// [`ShuffleOutcome::stages`] must use exactly these names.
+    fn stage_names(&self) -> &'static [&'static str];
+
+    /// Pre-compile the kernel shapes this strategy will execute (one-time
+    /// XLA compilation is startup cost, not sort time).
+    fn warmup(&self, spec: &JobSpec, backend: &Backend) -> anyhow::Result<()>;
+
+    /// Execute the timed shuffle stages.
+    fn run_stages(&self, cx: &ShuffleContext) -> anyhow::Result<ShuffleOutcome>;
+}
+
+/// Stage stopwatch shared by strategies: `lap(name)` closes the current
+/// stage and starts the next one.
+pub struct StageClock {
+    t: Instant,
+    stages: Vec<StageTiming>,
+}
+
+impl StageClock {
+    pub fn start() -> StageClock {
+        StageClock {
+            t: Instant::now(),
+            stages: Vec::new(),
+        }
+    }
+
+    /// Close the current stage under `name`.
+    pub fn lap(&mut self, name: &str) {
+        self.stages.push(StageTiming {
+            name: name.to_string(),
+            secs: self.t.elapsed().as_secs_f64(),
+        });
+        self.t = Instant::now();
+    }
+
+    pub fn into_stages(self) -> Vec<StageTiming> {
+        self.stages
+    }
+}
+
+/// Look up a strategy by registry name (accepts the aliases the CLI
+/// documents). `None` for unknown names.
+pub fn strategy_by_name(name: &str) -> Option<Arc<dyn ShuffleStrategy>> {
+    match name {
+        "two-stage-merge" | "two-stage" | "cloudsort" => {
+            Some(Arc::new(TwoStageMerge))
+        }
+        "simple" | "simple-shuffle" => Some(Arc::new(SimpleShuffle)),
+        _ => None,
+    }
+}
+
+/// All registered strategies, for `--list-strategies` and tests.
+pub fn list_strategies() -> Vec<Arc<dyn ShuffleStrategy>> {
+    vec![Arc::new(TwoStageMerge), Arc::new(SimpleShuffle)]
+}
+
+/// Builder for a full shuffle run: generate → shuffle (strategy-owned
+/// stages) → validate. Defaults reproduce the paper's CloudSort job:
+/// [`TwoStageMerge`] on the native backend against a fresh S3 stand-in.
+pub struct ShuffleJob {
+    spec: JobSpec,
+    strategy: Arc<dyn ShuffleStrategy>,
+    backend: Backend,
+    s3: Option<S3>,
+}
+
+impl ShuffleJob {
+    pub fn new(spec: JobSpec) -> ShuffleJob {
+        ShuffleJob {
+            spec,
+            strategy: Arc::new(TwoStageMerge),
+            backend: Backend::Native,
+            s3: None,
+        }
+    }
+
+    /// Select the stage topology (default: [`TwoStageMerge`]).
+    pub fn strategy<S: ShuffleStrategy + 'static>(mut self, s: S) -> ShuffleJob {
+        self.strategy = Arc::new(s);
+        self
+    }
+
+    /// Select the stage topology from a registry handle (what the CLI's
+    /// `--strategy` resolves through [`strategy_by_name`]).
+    pub fn strategy_arc(mut self, s: Arc<dyn ShuffleStrategy>) -> ShuffleJob {
+        self.strategy = s;
+        self
+    }
+
+    /// Select the compute backend (default: [`Backend::Native`]).
+    pub fn backend(mut self, b: Backend) -> ShuffleJob {
+        self.backend = b;
+        self
+    }
+
+    /// Run against a caller-provided S3 (lets tests inject faults or
+    /// pre-populate inputs). Default: a fresh store with
+    /// `spec.s3_buckets` buckets.
+    pub fn on(mut self, s3: &S3) -> ShuffleJob {
+        self.s3 = Some(s3.clone());
+        self
+    }
+
+    /// Run the full pipeline: generate → warmup → timed shuffle stages →
+    /// validate. The returned report carries Table 1 and Table 2 inputs.
+    pub fn run(self) -> anyhow::Result<JobReport> {
+        let spec = &self.spec;
+        spec.check().map_err(|e| anyhow!(e))?;
+        let s3 = match self.s3 {
+            Some(s3) => s3,
+            None => S3::with_buckets(spec.s3_buckets),
+        };
+        let rt = Runtime::new(RuntimeOptions {
+            n_nodes: spec.n_workers(),
+            slots_per_node: spec.cluster.task_parallelism().max(1),
+            store_capacity_per_node: spec.store_capacity_per_node,
+            spill_root: std::env::temp_dir(),
+        });
+
+        // --- input generation (§3.2), not part of the timed sort ---
+        let t0 = Instant::now();
+        let (input_records, input_checksum) =
+            generate::generate_input(spec, &s3, &rt)?;
+        let gen_secs = t0.elapsed().as_secs_f64();
+        s3.reset_counters(); // Table 2 counts requests of the sort itself
+
+        self.strategy.warmup(spec, &self.backend)?;
+
+        // --- the timed shuffle: stage topology owned by the strategy ---
+        let cx = ShuffleContext {
+            spec,
+            s3: &s3,
+            backend: &self.backend,
+            rt: &rt,
+        };
+        let outcome = self.strategy.run_stages(&cx)?;
+        // enforce the trait contract in every build: reported stage names
+        // must match the declaration exactly, in order — JobReport's
+        // Table 1 accessors key on them
+        let reported: Vec<&str> =
+            outcome.stages.iter().map(|s| s.name.as_str()).collect();
+        if reported != self.strategy.stage_names() {
+            return Err(anyhow!(
+                "strategy '{}' reported stages {:?} but declared {:?}",
+                self.strategy.name(),
+                reported,
+                self.strategy.stage_names()
+            ));
+        }
+        let total_secs = outcome.stages.iter().map(|s| s.secs).sum();
+        let s3_counters = s3.counters();
+
+        // --- validation (§3.2), untimed ---
+        let validation = validate::validate_output(
+            spec,
+            &s3,
+            &rt,
+            input_records,
+            input_checksum,
+        )?;
+
+        let report = JobReport {
+            strategy: self.strategy.name().to_string(),
+            gen_secs,
+            stages: outcome.stages,
+            total_secs,
+            validation,
+            s3: s3_counters,
+            store: rt.store_stats(),
+            events: rt.task_events(),
+            task_counts: rt.task_counts(),
+            n_map_tasks: outcome.n_map_tasks,
+            n_merge_tasks: outcome.n_merge_tasks,
+            n_reduce_tasks: outcome.n_reduce_tasks,
+            peak_unmerged_blocks: outcome.peak_unmerged_blocks,
+        };
+        rt.shutdown();
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_resolves_names_and_aliases() {
+        for name in ["two-stage-merge", "two-stage", "cloudsort"] {
+            assert_eq!(
+                strategy_by_name(name).unwrap().name(),
+                "two-stage-merge"
+            );
+        }
+        for name in ["simple", "simple-shuffle"] {
+            assert_eq!(strategy_by_name(name).unwrap().name(), "simple");
+        }
+        assert!(strategy_by_name("push-based").is_none());
+    }
+
+    #[test]
+    fn registry_lists_every_strategy_with_stages() {
+        let all = list_strategies();
+        assert!(all.len() >= 2);
+        for s in &all {
+            assert!(!s.stage_names().is_empty(), "{} declares no stages", s.name());
+            assert!(!s.describe().is_empty());
+            // names round-trip through the registry
+            assert_eq!(strategy_by_name(s.name()).unwrap().name(), s.name());
+        }
+    }
+
+    #[test]
+    fn stage_clock_orders_laps() {
+        let mut c = StageClock::start();
+        c.lap("a");
+        c.lap("b");
+        let stages = c.into_stages();
+        assert_eq!(stages.len(), 2);
+        assert_eq!(stages[0].name, "a");
+        assert_eq!(stages[1].name, "b");
+        assert!(stages.iter().all(|s| s.secs >= 0.0));
+    }
+}

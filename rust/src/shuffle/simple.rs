@@ -1,0 +1,114 @@
+//! Simple shuffle: the Exoshuffle paper's baseline topology — map tasks
+//! partition directly into R output ranges, and each reduce task merges
+//! its block from *every* map. No merge stage, no backpressure.
+//!
+//! This is the textbook MapReduce shuffle. It is correct at any scale but
+//! its reduce fan-in is M (50 000 at CloudSort scale, versus
+//! merges-per-node ≈ 32 under [`crate::shuffle::TwoStageMerge`]), and
+//! every map×reduce block stays resident until the reduce stage drains it
+//! — which is exactly the scaling wall the paper's pre-shuffle merge
+//! removes. Useful as a correctness cross-check and as the ablation
+//! baseline for the strategy API.
+
+use std::sync::Arc;
+
+use anyhow::Context;
+
+use crate::coordinator::plan::JobSpec;
+use crate::coordinator::tasks;
+use crate::distfut::{future, ObjectRef, TaskHandle};
+use crate::runtime::Backend;
+use crate::shuffle::{ShuffleContext, ShuffleOutcome, ShuffleStrategy, StageClock};
+
+/// Single-pass map → reduce topology (no merge stage).
+pub struct SimpleShuffle;
+
+impl ShuffleStrategy for SimpleShuffle {
+    fn name(&self) -> &'static str {
+        "simple"
+    }
+
+    fn describe(&self) -> &'static str {
+        "single-pass map -> reduce with R-way map partitioning and M-way \
+         reduce fan-in (Exoshuffle baseline)"
+    }
+
+    fn stage_names(&self) -> &'static [&'static str] {
+        &["map", "reduce"]
+    }
+
+    fn warmup(&self, spec: &JobSpec, backend: &Backend) -> anyhow::Result<()> {
+        let rpp = spec.records_per_partition() as usize;
+        // reduce merges M runs of ~records-per-(map × reducer) each
+        let run = (rpp / spec.n_output_partitions.max(1)).max(2);
+        crate::runtime::warmup(backend, rpp, spec.n_input_partitions, run)
+    }
+
+    fn run_stages(&self, cx: &ShuffleContext) -> anyhow::Result<ShuffleOutcome> {
+        let spec = cx.spec;
+        let r = spec.n_output_partitions;
+        let r1 = spec.reducers_per_worker();
+        let reducer_cuts = Arc::new(spec.reducer_cuts());
+        let mut clock = StageClock::start();
+
+        // --- stage 1: map. Each map sorts its partition and splits it
+        // R ways; admission is slot-bounded so the driver queue (not the
+        // runtime queue) is where tasks wait. ---
+        let mut map_outs: Vec<Vec<ObjectRef>> =
+            Vec::with_capacity(spec.n_input_partitions);
+        let mut map_handles: Vec<TaskHandle> =
+            Vec::with_capacity(spec.n_input_partitions);
+        let mut next_map = 0usize;
+        while next_map < spec.n_input_partitions {
+            if future::pending_count(&map_handles)
+                >= spec.cluster.total_slots() * 2
+            {
+                std::thread::sleep(std::time::Duration::from_micros(500));
+                continue;
+            }
+            let (outs, h) = rt_submit_map(cx, reducer_cuts.clone(), next_map);
+            map_outs.push(outs);
+            map_handles.push(h);
+            next_map += 1;
+        }
+        future::wait_all(&map_handles).context("map stage")?;
+        clock.lap("map");
+
+        // --- stage 2: reduce. Reducer r merges the r-th block of every
+        // map; pinned to the worker that owns the reducer range so output
+        // placement matches the two-stage strategy. ---
+        let mut handles = Vec::with_capacity(r);
+        for global_r in 0..r {
+            let node = global_r / r1;
+            let blocks: Vec<ObjectRef> =
+                map_outs.iter().map(|outs| outs[global_r].clone()).collect();
+            let (_outs, h) = cx.rt.submit(tasks::reduce_task(
+                spec, cx.s3, cx.backend, node, global_r, blocks,
+            ));
+            handles.push(h);
+        }
+        drop(map_outs); // reduces hold the only remaining block refs
+        future::wait_all(&handles).context("reduce stage")?;
+        clock.lap("reduce");
+
+        Ok(ShuffleOutcome {
+            stages: clock.into_stages(),
+            n_map_tasks: spec.n_input_partitions,
+            n_merge_tasks: 0,
+            n_reduce_tasks: handles.len(),
+            // without a merge stage every map's blocks stay resident
+            // until reduce: per-worker exposure is the full map count
+            // (in map-slice units) — nothing bounds it (ablation A1).
+            peak_unmerged_blocks: spec.n_input_partitions,
+        })
+    }
+}
+
+fn rt_submit_map(
+    cx: &ShuffleContext,
+    cuts: Arc<Vec<u64>>,
+    p: usize,
+) -> (Vec<ObjectRef>, TaskHandle) {
+    cx.rt
+        .submit(tasks::map_task(cx.spec, cx.s3, cx.backend, cuts, p))
+}

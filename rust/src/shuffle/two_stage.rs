@@ -1,0 +1,200 @@
+//! The paper's two-stage shuffle (§2.3–2.4): map tasks sort and split
+//! input partitions across worker ranges; per-worker merge controllers
+//! batch incoming blocks and launch pre-shuffle merge tasks under
+//! backpressure; a barrier; then one reduce task per output partition
+//! merges that reducer's block from every merge batch.
+//!
+//! This is the Exoshuffle-CloudSort design: merging ahead of the reduce
+//! stage caps the reduce fan-in at merges-per-node (instead of M), which
+//! is what makes the 100 TB / 50 000-partition run tractable.
+
+use std::sync::Arc;
+
+use anyhow::Context;
+
+use crate::coordinator::merge_controller::MergeController;
+use crate::coordinator::plan::JobSpec;
+use crate::coordinator::tasks;
+use crate::distfut::{future, Runtime, TaskHandle};
+use crate::runtime::Backend;
+use crate::s3sim::S3;
+use crate::shuffle::{ShuffleContext, ShuffleOutcome, ShuffleStrategy, StageClock};
+
+/// The paper's pre-shuffle-merge topology (default strategy).
+pub struct TwoStageMerge;
+
+impl ShuffleStrategy for TwoStageMerge {
+    fn name(&self) -> &'static str {
+        "two-stage-merge"
+    }
+
+    fn describe(&self) -> &'static str {
+        "map & shuffle with per-worker merge backpressure, then reduce \
+         (Exoshuffle-CloudSort §2.3)"
+    }
+
+    fn stage_names(&self) -> &'static [&'static str] {
+        &["map_shuffle", "reduce"]
+    }
+
+    fn warmup(&self, spec: &JobSpec, backend: &Backend) -> anyhow::Result<()> {
+        let rpp = spec.records_per_partition() as usize;
+        let slice = rpp / spec.n_workers().max(1);
+        let merges_per_node = crate::util::div_ceil(
+            spec.n_input_partitions as u64,
+            spec.merge_threshold_blocks as u64,
+        ) as usize;
+        let reduce_run = (spec.total_records() as usize
+            / spec.n_output_partitions.max(1))
+            / merges_per_node.max(1);
+        crate::runtime::warmup(
+            backend,
+            rpp,
+            spec.merge_threshold_blocks.min(spec.n_input_partitions),
+            slice.max(2),
+        )?;
+        crate::runtime::warmup(backend, 2, merges_per_node, reduce_run.max(2))
+    }
+
+    fn run_stages(&self, cx: &ShuffleContext) -> anyhow::Result<ShuffleOutcome> {
+        let spec = cx.spec;
+        let mut clock = StageClock::start();
+
+        // --- stage 1: map & shuffle (§2.3) ---
+        let controllers = map_shuffle_stage(spec, cx.s3, cx.backend, cx.rt)?;
+        clock.lap("map_shuffle");
+        let n_merge_tasks: usize =
+            controllers.iter().map(|c| c.merges_launched()).sum();
+        let peak_unmerged_blocks = controllers
+            .iter()
+            .map(|c| c.peak_backlog)
+            .max()
+            .unwrap_or(0);
+
+        // --- stage 2: reduce (§2.4) ---
+        let n_reduce_tasks =
+            reduce_stage(spec, cx.s3, cx.backend, cx.rt, controllers)?;
+        clock.lap("reduce");
+
+        Ok(ShuffleOutcome {
+            stages: clock.into_stages(),
+            n_map_tasks: spec.n_input_partitions,
+            n_merge_tasks,
+            n_reduce_tasks,
+            peak_unmerged_blocks,
+        })
+    }
+}
+
+/// Stage 1: the map & shuffle loop. Submits map tasks respecting merge
+/// backpressure, routes map output futures to per-worker merge
+/// controllers, and returns the controllers once every map and merge has
+/// completed.
+fn map_shuffle_stage(
+    spec: &JobSpec,
+    s3: &S3,
+    backend: &Backend,
+    rt: &Runtime,
+) -> anyhow::Result<Vec<MergeController>> {
+    let w = spec.n_workers();
+    let worker_cuts = Arc::new(spec.worker_cuts());
+    let backend2 = backend.clone();
+    let spec2 = spec.clone();
+    let mut controllers: Vec<MergeController> = (0..w)
+        .map(|node| {
+            let backend = backend2.clone();
+            let spec = spec2.clone();
+            MergeController::new(
+                node,
+                spec2.merge_threshold_blocks,
+                Arc::new(move |node, batch, blocks| {
+                    tasks::merge_task(&spec, &backend, node, batch, blocks)
+                }),
+            )
+        })
+        .collect();
+
+    let mut map_handles: Vec<TaskHandle> =
+        Vec::with_capacity(spec.n_input_partitions);
+    let mut next_map = 0usize;
+    loop {
+        // submit maps while backpressure allows (paper: the driver queues
+        // extra tasks and feeds nodes as they free up; our Any-queue does
+        // the feeding, this loop does the admission control)
+        let backlog_limit = spec.max_buffered_blocks.max(1);
+        let merge_parallelism = spec.cluster.task_parallelism().max(1);
+        while next_map < spec.n_input_partitions {
+            let blocked = spec.backpressure
+                && controllers
+                    .iter()
+                    .any(|c| c.saturated(merge_parallelism, backlog_limit));
+            // admission is also bounded by total slots to keep the driver
+            // queue (not the runtime queue) the place where tasks wait
+            let in_flight = future::pending_count(&map_handles);
+            if blocked || in_flight >= spec.cluster.total_slots() * 2 {
+                break;
+            }
+            let (outs, h) = rt.submit(tasks::map_task(
+                spec,
+                s3,
+                backend,
+                worker_cuts.clone(),
+                next_map,
+            ));
+            for (node, block) in outs.into_iter().enumerate() {
+                controllers[node].on_map_block(block);
+            }
+            map_handles.push(h);
+            next_map += 1;
+        }
+        for c in controllers.iter_mut() {
+            c.poll(rt);
+        }
+        if next_map == spec.n_input_partitions
+            && map_handles.iter().all(|h| h.is_done())
+        {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_micros(500));
+    }
+    future::wait_all(&map_handles).context("map stage")?;
+    // tail merges + barrier: "once all map and merge tasks finish" (§2.3)
+    for c in controllers.iter_mut() {
+        c.flush(rt);
+    }
+    for c in &controllers {
+        c.wait_all().context("merge stage")?;
+    }
+    Ok(controllers)
+}
+
+/// Stage 2: reduce. One task per output partition, pinned to the worker
+/// that owns the reducer range; merges that reducer's block from every
+/// merge batch and uploads the output partition.
+fn reduce_stage(
+    spec: &JobSpec,
+    s3: &S3,
+    backend: &Backend,
+    rt: &Runtime,
+    controllers: Vec<MergeController>,
+) -> anyhow::Result<usize> {
+    let r1 = spec.reducers_per_worker();
+    let mut handles = Vec::with_capacity(spec.n_output_partitions);
+    for c in &controllers {
+        for j in 0..r1 {
+            let global_r = c.node * r1 + j;
+            let blocks: Vec<_> = c
+                .merged_outputs
+                .iter()
+                .map(|batch| batch[j].clone())
+                .collect();
+            let (_outs, h) = rt.submit(tasks::reduce_task(
+                spec, s3, backend, c.node, global_r, blocks,
+            ));
+            handles.push(h);
+        }
+    }
+    drop(controllers); // release merged-block refs held by controllers
+    future::wait_all(&handles).context("reduce stage")?;
+    Ok(handles.len())
+}

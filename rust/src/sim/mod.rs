@@ -3,9 +3,11 @@
 //! paper's AWS testbed).
 //!
 //! The simulator executes the *same control-plane policies* as the real
-//! coordinator — map admission with merge-controller backpressure, the
-//! 40-block merge threshold, per-node merge/reduce pinning, the stage
-//! barrier — against a resource model of the testbed (§3.1): per-node
+//! shuffle strategies — map admission with merge-controller backpressure,
+//! the 40-block merge threshold, per-node merge/reduce pinning, the stage
+//! barrier — and replays the topology selected by [`SimStrategy`]
+//! (mirroring [`crate::shuffle`]'s registry) against a resource model of
+//! the testbed (§3.1): per-node
 //! task-slot pools, fair-shared NIC / NVMe / S3 bandwidth, and per-task
 //! compute rates calibrated so that *individual task durations* match the
 //! paper's measured averages (map 24 s incl. 15 s download, merge 17 s,
@@ -23,11 +25,50 @@ use crate::s3sim::{GET_CHUNK, PUT_CHUNK};
 use crate::util::rng::Xoshiro256;
 pub use taskmodel::TaskRates;
 
+/// Which shuffle topology the simulator replays — the discrete-event
+/// mirror of [`crate::shuffle::ShuffleStrategy`]. Names match the
+/// shuffle-library registry so `--strategy` selects both consistently.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimStrategy {
+    /// The paper's design: merge controllers batch map blocks into
+    /// pre-shuffle merges under backpressure, reduce fan-in is
+    /// merges-per-node (§2.3).
+    TwoStageMerge,
+    /// The Exoshuffle baseline: no merge stage; every reduce fetches one
+    /// block from each of the M maps and pays per-block request overhead
+    /// M times — the scaling wall the two-stage design removes.
+    SimpleShuffle,
+}
+
+impl SimStrategy {
+    /// Registry name (matches [`crate::shuffle::strategy_by_name`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            SimStrategy::TwoStageMerge => "two-stage-merge",
+            SimStrategy::SimpleShuffle => "simple",
+        }
+    }
+
+    /// Resolve a CLI/env name. Alias resolution is delegated to the
+    /// shuffle registry (the single name table); this only maps the
+    /// canonical names onto simulator topologies, so a library strategy
+    /// without a sim model resolves to `None` rather than drifting.
+    pub fn from_name(name: &str) -> Option<SimStrategy> {
+        match crate::shuffle::strategy_by_name(name)?.name() {
+            "two-stage-merge" => Some(SimStrategy::TwoStageMerge),
+            "simple" => Some(SimStrategy::SimpleShuffle),
+            _ => None,
+        }
+    }
+}
+
 /// Simulator configuration.
 #[derive(Clone, Debug)]
 pub struct SimConfig {
     pub spec: JobSpec,
     pub rates: TaskRates,
+    /// Stage topology to replay (default: the paper's two-stage merge).
+    pub strategy: SimStrategy,
     /// Multiplicative task-duration jitter (0.05 = ±5%).
     pub noise: f64,
     pub seed: u64,
@@ -41,6 +82,7 @@ impl SimConfig {
         SimConfig {
             spec: JobSpec::paper_100tb(),
             rates: TaskRates::calibrated(),
+            strategy: SimStrategy::TwoStageMerge,
             noise: 0.08,
             seed: 1,
             fig1_bins: 512,
@@ -229,6 +271,12 @@ impl<'a> Sim<'a> {
         assert!(self.stage1_done(), "simulation stalled in map&shuffle");
 
         // --- stage 2: reduce (barrier semantics, §2.4) ---
+        if self.cfg.strategy == SimStrategy::SimpleShuffle {
+            // the reduce stage drains the shuffled-but-unreduced blocks
+            for n in 0..spec.n_workers() {
+                self.blocks_buffered[n] = 0;
+            }
+        }
         let r1 = spec.reducers_per_worker();
         for node in 0..spec.n_workers() {
             self.reduce_queue[node] = r1;
@@ -289,14 +337,22 @@ impl<'a> Sim<'a> {
     }
 
     fn stage1_done(&self) -> bool {
-        self.maps_done == self.cfg.spec.n_input_partitions
-            && self.merges_done == self.merges_total_launched
-            && self
-                .blocks_buffered
-                .iter()
-                .zip(&self.blocks_inflight_merge)
-                .all(|(b, i)| *b == 0 && *i == 0)
-            && self.merge_queue.iter().all(|q| q.is_empty())
+        match self.cfg.strategy {
+            // no merge stage: the map barrier is the whole first stage
+            SimStrategy::SimpleShuffle => {
+                self.maps_done == self.cfg.spec.n_input_partitions
+            }
+            SimStrategy::TwoStageMerge => {
+                self.maps_done == self.cfg.spec.n_input_partitions
+                    && self.merges_done == self.merges_total_launched
+                    && self
+                        .blocks_buffered
+                        .iter()
+                        .zip(&self.blocks_inflight_merge)
+                        .all(|(b, i)| *b == 0 && *i == 0)
+                    && self.merge_queue.iter().all(|q| q.is_empty())
+            }
+        }
     }
 
     // --- control plane ------------------------------------------------
@@ -313,8 +369,10 @@ impl<'a> Sim<'a> {
             // S2.3: hold off "when the number of merge tasks reaches the
             // maximum parallelism, AND the merge controller's in-memory
             // buffer is filled up" -- blocks inside running merges do not
-            // count against the buffer.
-            let blocked = spec.backpressure
+            // count against the buffer. Simple shuffle has no merge
+            // controllers and therefore nothing to backpressure on.
+            let blocked = self.cfg.strategy == SimStrategy::TwoStageMerge
+                && spec.backpressure
                 && (0..spec.n_workers()).any(|n| {
                     self.merge_slots_free[n] == 0
                         && self.blocks_buffered[n]
@@ -395,10 +453,17 @@ impl<'a> Sim<'a> {
     fn start_queued_reduces(&mut self, node: usize) {
         let spec = &self.cfg.spec;
         let bytes = spec.total_bytes / spec.n_output_partitions as u64;
+        // reduce fan-in: one block per map under simple shuffle (each
+        // paying per-block fetch overhead); merged batches under the
+        // two-stage design (fan-in folded into the merge stage).
+        let fan_in = match self.cfg.strategy {
+            SimStrategy::SimpleShuffle => spec.n_input_partitions,
+            SimStrategy::TwoStageMerge => 0,
+        };
         while self.reduce_queue[node] > 0 && self.reduce_slots_free[node] > 0 {
             self.reduce_queue[node] -= 1;
             self.reduce_slots_free[node] -= 1;
-            self.spawn_task(Kind::Reduce, node, bytes);
+            self.spawn_task_blocks(Kind::Reduce, node, bytes, fan_in);
         }
     }
 
@@ -491,7 +556,10 @@ impl<'a> Sim<'a> {
             Phase::DiskRead => {
                 load.disk += 1;
                 let share = node_spec.disk_read_bps / load.disk as f64;
+                // per-block fetch overhead: reduces with an M-way fan-in
+                // (simple shuffle) pay a fixed request cost per block
                 t.bytes as f64 / share
+                    + t.blocks as f64 * rates.fetch_overhead_secs
             }
             Phase::Done => unreachable!(),
         };
@@ -614,11 +682,22 @@ impl<'a> Sim<'a> {
                 for n in 0..self.cfg.spec.n_workers() {
                     self.blocks_buffered[n] += 1;
                 }
-                for n in 0..self.cfg.spec.n_workers() {
-                    self.poll_merge_controller(n);
-                }
-                if self.maps_done == self.cfg.spec.n_input_partitions {
-                    self.flush_merge_tails();
+                match self.cfg.strategy {
+                    SimStrategy::TwoStageMerge => {
+                        for n in 0..self.cfg.spec.n_workers() {
+                            self.poll_merge_controller(n);
+                        }
+                        if self.maps_done == self.cfg.spec.n_input_partitions {
+                            self.flush_merge_tails();
+                        }
+                    }
+                    SimStrategy::SimpleShuffle => {
+                        // no merges: blocks just accumulate until the
+                        // reduce stage — unbounded exposure (ablation A1)
+                        self.peak_unmerged = self
+                            .peak_unmerged
+                            .max(self.blocks_buffered[t.node]);
+                    }
                 }
                 self.admit_maps();
             }
@@ -648,6 +727,7 @@ mod tests {
         SimConfig {
             spec: JobSpec::scaled(1 << 30, 4),
             rates: TaskRates::calibrated(),
+            strategy: SimStrategy::TwoStageMerge,
             noise: 0.0,
             seed: 7,
             fig1_bins: 64,
@@ -704,6 +784,63 @@ mod tests {
                 * crate::s3sim::chunk_count(per_in, GET_CHUNK)
         );
         assert!(r.put_requests >= spec.n_output_partitions as u64);
+    }
+
+    #[test]
+    fn simple_shuffle_topology_completes_without_merges() {
+        let mut cfg = small_cfg();
+        cfg.strategy = SimStrategy::SimpleShuffle;
+        let r = simulate(&cfg);
+        assert!(r.total_secs > 0.0);
+        assert_eq!(
+            r.events.iter().filter(|e| e.name.starts_with("merge")).count(),
+            0,
+            "simple shuffle must launch no merge tasks"
+        );
+        let reduces = r
+            .events
+            .iter()
+            .filter(|e| e.name.starts_with("reduce"))
+            .count();
+        assert_eq!(reduces, cfg.spec.n_output_partitions);
+        // without a merge stage the whole shuffle stays resident
+        assert_eq!(r.peak_unmerged_blocks, cfg.spec.n_input_partitions);
+    }
+
+    #[test]
+    fn two_stage_beats_simple_when_fanin_overhead_bites() {
+        // at M-way reduce fan-in the per-block fetch overhead dominates;
+        // the pre-shuffle merge exists to remove exactly this cost
+        let mut a = small_cfg();
+        a.rates.fetch_overhead_secs = 0.5;
+        let two_stage = simulate(&a);
+        let mut b = small_cfg();
+        b.rates.fetch_overhead_secs = 0.5;
+        b.strategy = SimStrategy::SimpleShuffle;
+        let simple = simulate(&b);
+        assert!(
+            simple.reduce_secs > two_stage.reduce_secs,
+            "simple {:.1}s should pay fan-in overhead vs two-stage {:.1}s",
+            simple.reduce_secs,
+            two_stage.reduce_secs
+        );
+    }
+
+    #[test]
+    fn strategy_names_round_trip() {
+        for s in [SimStrategy::TwoStageMerge, SimStrategy::SimpleShuffle] {
+            assert_eq!(SimStrategy::from_name(s.name()), Some(s));
+        }
+        // registry aliases resolve too (single name table)
+        assert_eq!(
+            SimStrategy::from_name("cloudsort"),
+            Some(SimStrategy::TwoStageMerge)
+        );
+        assert_eq!(
+            SimStrategy::from_name("simple-shuffle"),
+            Some(SimStrategy::SimpleShuffle)
+        );
+        assert_eq!(SimStrategy::from_name("nope"), None);
     }
 
     #[test]

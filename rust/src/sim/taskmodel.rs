@@ -26,6 +26,12 @@ pub struct TaskRates {
     /// Fixed per-task overhead (scheduling, serialization, stragglers —
     /// Ray task overhead at 2 GB granularity).
     pub overhead_secs: f64,
+    /// Fixed per-input-block cost of a reduce task's fetch phase
+    /// (request latency + object-resolution overhead per block). Only
+    /// material for topologies with a large reduce fan-in: the simple
+    /// shuffle's M-way fan-in pays it M times per reduce, which is the
+    /// scaling wall the paper's pre-shuffle merge removes.
+    pub fetch_overhead_secs: f64,
     /// Straggler model: probability that a task is a straggler, and its
     /// duration multiplier (S3 tail latency, CPU interference — the paper
     /// runs on shared cloud infrastructure).
@@ -50,6 +56,7 @@ impl TaskRates {
             merge_cpu_bps: 160.0e6,
             reduce_cpu_bps: 800.0e6,
             overhead_secs: 5.0,
+            fetch_overhead_secs: 0.03,
             tail_prob: 0.04,
             tail_mult: 2.5,
             reduce_slots: 8,

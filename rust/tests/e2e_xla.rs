@@ -4,6 +4,11 @@
 //!
 //! The engine compiles artifacts lazily; tests share one engine (and use
 //! small blocks) to keep one-time XLA compilation bounded.
+//!
+//! Requires the `pjrt` feature (and `make artifacts`); the default build
+//! ships only the native backend, so the whole suite is feature-gated.
+
+#![cfg(feature = "pjrt")]
 
 use std::sync::OnceLock;
 

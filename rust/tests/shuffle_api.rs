@@ -1,0 +1,153 @@
+//! Integration tests of the shuffle-library API: builder defaults,
+//! strategy registry and selection, cross-strategy output equivalence,
+//! and JobReport stage-name/timing invariants.
+
+use exoshuffle::coordinator::run_cloudsort;
+use exoshuffle::prelude::*;
+use exoshuffle::shuffle::{list_strategies, strategy_by_name};
+
+/// Builder with no overrides = the paper's two-stage strategy on the
+/// native backend against a fresh S3 — identical to `run_cloudsort`.
+#[test]
+fn builder_defaults_match_run_cloudsort() {
+    let spec = JobSpec::scaled(2 << 20, 2);
+    let a = ShuffleJob::new(spec.clone()).run().unwrap();
+    let b = run_cloudsort(&spec, Backend::Native).unwrap();
+    assert!(a.validation.valid && b.validation.valid);
+    assert_eq!(a.strategy, "two-stage-merge");
+    assert_eq!(a.strategy, b.strategy);
+    // deterministic dataset → identical sorted output both ways
+    assert_eq!(
+        a.validation.summary.checksum,
+        b.validation.summary.checksum
+    );
+    assert_eq!(a.validation.summary.records, b.validation.summary.records);
+}
+
+#[test]
+fn simple_shuffle_sorts_without_merge_stage() {
+    let spec = JobSpec::scaled(2 << 20, 2);
+    let report = ShuffleJob::new(spec.clone())
+        .strategy(SimpleShuffle)
+        .backend(Backend::Native)
+        .run()
+        .unwrap();
+    assert!(report.validation.valid, "{:?}", report.validation);
+    assert_eq!(report.strategy, "simple");
+    assert_eq!(report.n_merge_tasks, 0);
+    assert_eq!(report.n_map_tasks, spec.n_input_partitions);
+    assert_eq!(report.n_reduce_tasks, spec.n_output_partitions);
+    let stage_names: Vec<&str> =
+        report.stages.iter().map(|s| s.name.as_str()).collect();
+    assert_eq!(stage_names, ["map", "reduce"]);
+    // no merge events in the task log either
+    assert_eq!(report.mean_task_secs("merge"), 0.0);
+}
+
+/// The library claim: different stage topologies, byte-identical
+/// validated output on the same job spec.
+#[test]
+fn strategies_produce_identical_validated_output() {
+    let spec = JobSpec::scaled(4 << 20, 3);
+    let two_stage = ShuffleJob::new(spec.clone())
+        .strategy(TwoStageMerge)
+        .run()
+        .unwrap();
+    let simple = ShuffleJob::new(spec.clone())
+        .strategy(SimpleShuffle)
+        .run()
+        .unwrap();
+    assert!(two_stage.validation.valid);
+    assert!(simple.validation.valid);
+    assert_eq!(
+        two_stage.validation.summary.records,
+        simple.validation.summary.records
+    );
+    assert_eq!(
+        two_stage.validation.summary.checksum,
+        simple.validation.summary.checksum
+    );
+    assert_eq!(
+        two_stage.validation.summary.duplicates,
+        simple.validation.summary.duplicates
+    );
+}
+
+#[test]
+fn strategy_selection_by_registry_name() {
+    let spec = JobSpec::scaled(1 << 20, 2);
+    let strategy = strategy_by_name("simple").expect("registered");
+    let report = ShuffleJob::new(spec)
+        .strategy_arc(strategy)
+        .backend(Backend::Native)
+        .run()
+        .unwrap();
+    assert!(report.validation.valid);
+    assert_eq!(report.strategy, "simple");
+    assert!(strategy_by_name("no-such-strategy").is_none());
+}
+
+#[test]
+fn registry_lists_both_builtin_strategies() {
+    let names: Vec<&str> =
+        list_strategies().iter().map(|s| s.name()).collect();
+    assert!(names.contains(&"two-stage-merge"));
+    assert!(names.contains(&"simple"));
+}
+
+/// Stage timings must use the strategy-declared names, in order, sum to
+/// the total, and feed the Table 1 compatibility accessors.
+#[test]
+fn report_stage_invariants() {
+    for (run_simple, expected) in
+        [(false, vec!["map_shuffle", "reduce"]), (true, vec!["map", "reduce"])]
+    {
+        let spec = JobSpec::scaled(1 << 20, 2);
+        let job = ShuffleJob::new(spec).backend(Backend::Native);
+        let report = if run_simple {
+            job.strategy(SimpleShuffle).run().unwrap()
+        } else {
+            job.strategy(TwoStageMerge).run().unwrap()
+        };
+        let names: Vec<&str> =
+            report.stages.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names, expected);
+        assert!(report.stages.iter().all(|s| s.secs >= 0.0));
+        let sum: f64 = report.stages.iter().map(|s| s.secs).sum();
+        assert!(
+            (sum - report.total_secs).abs() < 1e-9,
+            "stages {sum} != total {}",
+            report.total_secs
+        );
+        assert!(
+            (report.map_shuffle_secs() + report.reduce_secs()
+                - report.total_secs)
+                .abs()
+                < 1e-9
+        );
+        let (ms, rd, tot) = report.table1_row();
+        assert!((ms + rd - tot).abs() < 1e-9);
+        // unknown families/stages are 0.0, never NaN (regression test)
+        assert_eq!(report.stage_secs("no-such-stage"), 0.0);
+        let unknown = report.mean_task_secs("no-such-family");
+        assert_eq!(unknown, 0.0);
+        assert!(!unknown.is_nan());
+    }
+}
+
+/// `.on(&s3)` runs against the caller's store: fault injection reaches
+/// the strategy's tasks through the builder path.
+#[test]
+fn builder_on_custom_s3_sees_faults() {
+    use exoshuffle::s3sim::faults::FaultPlan;
+    let spec = JobSpec::scaled(1 << 20, 2);
+    let s3 = S3::with_buckets(spec.s3_buckets);
+    s3.set_faults(FaultPlan::with_probability(0.1, 0xBEEF));
+    let report = ShuffleJob::new(spec)
+        .strategy(SimpleShuffle)
+        .on(&s3)
+        .run()
+        .unwrap();
+    assert!(report.validation.valid);
+    assert!(report.s3.failed_requests > 0, "faults should have fired");
+}
