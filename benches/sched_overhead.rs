@@ -1,0 +1,98 @@
+//! Bench S2 (ours) — dispatch overhead of the event-driven scheduler.
+//!
+//! Measures per-task latency of the distfut runtime on no-op tasks so
+//! future scheduler changes (queue structures, locality computation,
+//! admission control) have a baseline that isolates *scheduling* cost
+//! from compute:
+//!
+//! - fan-out: N independent `Placement::Any` no-op tasks (the shared
+//!   queue's submit→dispatch→complete path), N up to 1k
+//! - chain: N dependency-chained no-op tasks (the readiness-routing
+//!   path: each dispatch is triggered by the previous commit)
+//! - locality fan-out: N no-op tasks each consuming a resident object
+//!   (adds the locality computation to every route decision)
+//!
+//!     cargo bench --bench sched_overhead
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::sync::Arc;
+
+use exoshuffle::distfut::{
+    task_fn, Placement, Runtime, RuntimeOptions, TaskSpec,
+};
+
+fn rt() -> Arc<Runtime> {
+    Runtime::new(RuntimeOptions {
+        n_nodes: 4,
+        slots_per_node: 2,
+        ..Default::default()
+    })
+}
+
+fn noop(name: String, args: Vec<exoshuffle::distfut::ObjectRef>) -> TaskSpec {
+    TaskSpec {
+        name,
+        placement: Placement::Any,
+        func: task_fn(|_| Ok(vec![vec![0u8]])),
+        args,
+        num_returns: 1,
+        max_retries: 0,
+    }
+}
+
+fn main() {
+    harness::section("event-driven scheduler dispatch overhead");
+
+    for &n in &[100usize, 1000] {
+        let r = harness::bench(&format!("fan_out_{n}_noop_tasks"), 5, || {
+            let rt = rt();
+            for i in 0..n {
+                rt.submit(noop(format!("t{i}"), vec![]));
+            }
+            rt.wait_quiescent();
+            rt.shutdown();
+        });
+        println!(
+            "  -> {:.1}µs/task dispatch+execute+complete",
+            r.mean_secs / n as f64 * 1e6
+        );
+    }
+
+    let n = 500;
+    let r = harness::bench(&format!("chain_{n}_dependent_tasks"), 5, || {
+        let rt = rt();
+        let mut prev = rt.put(0, vec![0u8]);
+        let mut last = None;
+        for i in 0..n {
+            let (outs, h) = rt.submit(noop(format!("c{i}"), vec![prev]));
+            prev = outs.into_iter().next().unwrap();
+            last = Some(h);
+        }
+        last.unwrap().wait().unwrap();
+        rt.shutdown();
+    });
+    println!(
+        "  -> {:.1}µs/hop readiness-routed dispatch",
+        r.mean_secs / n as f64 * 1e6
+    );
+
+    let n = 1000;
+    let r = harness::bench(&format!("locality_fan_out_{n}_tasks"), 5, || {
+        let rt = rt();
+        let inputs: Vec<_> =
+            (0..n).map(|i| rt.put(i % 4, vec![0u8; 64])).collect();
+        for (i, input) in inputs.into_iter().enumerate() {
+            rt.submit(noop(format!("l{i}"), vec![input]));
+        }
+        rt.wait_quiescent();
+        rt.shutdown();
+    });
+    println!(
+        "  -> {:.1}µs/task with locality routing",
+        r.mean_secs / n as f64 * 1e6
+    );
+
+    println!("sched_overhead bench: PASS");
+}

@@ -1,4 +1,4 @@
-//! Per-worker merge controller (paper §2.3).
+//! Per-worker merge controller (paper §2.3), event-driven.
 //!
 //! Each worker node has a merge controller that accumulates incoming map
 //! blocks until a threshold (paper: 40 blocks ≈ 2 GB), then launches a
@@ -8,126 +8,196 @@
 //! off acknowledging" map blocks — back pressure that keeps map, shuffle
 //! and merge in sync.
 //!
-//! Map outputs arrive as *futures* (ObjectRefs routed at submit time);
-//! [`MergeController::poll`] promotes the ones whose data has been
-//! produced ("received" in the paper's sense) into the buffer and
-//! launches merge tasks at the threshold. Backpressure is surfaced to the
-//! driver's map-submission loop through [`MergeController::backlog`].
+//! Map outputs arrive as *futures* (ObjectRefs routed at submit time).
+//! [`MergeController::on_map_block`] registers a **runtime readiness
+//! callback** (`Runtime::on_ready`): the moment a block's data is
+//! produced — on the committing worker's thread, not a driver poll loop —
+//! the controller promotes it into the buffer and launches a merge task
+//! at the threshold. The driver only reads the backpressure predicate
+//! ([`MergeController::saturated`]) in its map-admission loop; block
+//! promotion and merge launching never involve the driver.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, Weak};
 
-use crate::distfut::{ObjectRef, Placement, Runtime, TaskHandle, TaskSpec};
+use crate::distfut::{DfError, ObjectRef, Placement, Runtime, TaskHandle, TaskSpec};
 
 /// Builds the merge TaskSpec for a batch of blocks on a node.
 /// Arguments: (node, batch_index, blocks).
 pub type MergeTaskFactory =
     Arc<dyn Fn(usize, usize, Vec<ObjectRef>) -> TaskSpec + Send + Sync>;
 
-/// State of one worker's merge controller.
-pub struct MergeController {
-    /// Worker node this controller belongs to.
-    pub node: usize,
+/// State shared between the driver and the readiness callbacks.
+#[derive(Default)]
+struct Inner {
     /// Routed map blocks whose data has not been produced yet.
     pending: Vec<ObjectRef>,
     /// Received map blocks not yet covered by a merge task.
     buffered: Vec<ObjectRef>,
     /// Merge tasks launched: their output refs (R1 merged blocks each).
-    pub merged_outputs: Vec<Vec<ObjectRef>>,
+    merged_outputs: Vec<Vec<ObjectRef>>,
     handles: Vec<TaskHandle>,
+    /// Peak observed backlog (memory-exposure metric; ablation A1).
+    peak_backlog: usize,
+    /// Stage end reached: late callbacks must not promote blocks.
+    flushed: bool,
+}
+
+impl Inner {
+    /// Blocks routed or buffered but not yet covered by a merge task.
+    fn backlog(&self) -> usize {
+        self.pending.len() + self.buffered.len()
+    }
+
+    /// Launched merge tasks that have not completed.
+    fn merges_in_flight(&self) -> usize {
+        self.handles.iter().filter(|h| !h.is_done()).count()
+    }
+
+    fn note_backlog(&mut self) {
+        self.peak_backlog = self.peak_backlog.max(self.backlog());
+    }
+}
+
+/// One worker's merge controller.
+pub struct MergeController {
+    /// Worker node this controller belongs to.
+    pub node: usize,
     /// Blocks per merge (threshold; paper: 40).
     threshold: usize,
-    /// Peak observed backlog (memory-exposure metric; ablation A1).
-    pub peak_backlog: usize,
     make_task: MergeTaskFactory,
+    /// Weak so readiness callbacks parked in the runtime's store never
+    /// keep the runtime alive (the store is owned by the runtime).
+    rt: Weak<Runtime>,
+    inner: Arc<Mutex<Inner>>,
+}
+
+/// Launch a merge over `batch`. Called with the inner lock held; the
+/// lock order inner → scheduler state is never reversed, so submitting
+/// from callbacks is safe.
+fn launch(
+    inner: &mut Inner,
+    rt: &Runtime,
+    make_task: &MergeTaskFactory,
+    node: usize,
+    batch: Vec<ObjectRef>,
+) {
+    let spec = make_task(node, inner.merged_outputs.len(), batch);
+    debug_assert!(matches!(spec.placement, Placement::Node(n) if n == node));
+    let (outputs, handle) = rt.submit(spec);
+    inner.merged_outputs.push(outputs);
+    inner.handles.push(handle);
 }
 
 impl MergeController {
-    pub fn new(node: usize, threshold: usize, make_task: MergeTaskFactory) -> Self {
+    pub fn new(
+        node: usize,
+        threshold: usize,
+        rt: &Arc<Runtime>,
+        make_task: MergeTaskFactory,
+    ) -> Self {
         MergeController {
             node,
-            pending: Vec::new(),
-            buffered: Vec::new(),
-            merged_outputs: Vec::new(),
-            handles: Vec::new(),
             threshold: threshold.max(1),
-            peak_backlog: 0,
             make_task,
+            rt: Arc::downgrade(rt),
+            inner: Arc::new(Mutex::new(Inner::default())),
         }
     }
 
-    /// Route one map block (a future) to this controller.
-    pub fn on_map_block(&mut self, block: ObjectRef) {
-        self.pending.push(block);
-    }
-
-    /// Promote produced blocks into the buffer and launch merges at the
-    /// threshold. Called from the driver's control loop.
-    pub fn poll(&mut self, rt: &Runtime) {
-        self.peak_backlog = self.peak_backlog.max(self.backlog());
-        let mut i = 0;
-        while i < self.pending.len() {
-            if rt.object_ready(&self.pending[i]) {
-                self.buffered.push(self.pending.swap_remove(i));
-            } else {
-                i += 1;
+    /// Route one map block (a future) to this controller and arm its
+    /// readiness callback. When the block's data lands, the callback —
+    /// running on the committing worker's thread (or inline if the data
+    /// already exists) — buffers it and launches merges at the threshold.
+    /// Blocks whose producing task fails terminally never fire; the stage
+    /// tail [`MergeController::flush`] hands them to the scheduler, which
+    /// cascades the failure.
+    pub fn on_map_block(&self, block: ObjectRef) {
+        let Some(rt) = self.rt.upgrade() else { return };
+        let id = block.id();
+        {
+            let mut g = self.inner.lock().unwrap();
+            debug_assert!(!g.flushed, "block routed after flush");
+            g.pending.push(block.clone());
+            g.note_backlog();
+        }
+        let inner = self.inner.clone();
+        let weak_rt = self.rt.clone();
+        let make_task = self.make_task.clone();
+        let (node, threshold) = (self.node, self.threshold);
+        rt.on_ready(&block, move || {
+            let Some(rt) = weak_rt.upgrade() else { return };
+            let mut g = inner.lock().unwrap();
+            // flushed (or shut down) controllers have drained `pending`;
+            // a late callback then finds nothing and must do nothing
+            let Some(pos) = g.pending.iter().position(|b| b.id() == id) else {
+                return;
+            };
+            let b = g.pending.swap_remove(pos);
+            g.buffered.push(b);
+            g.note_backlog();
+            while g.buffered.len() >= threshold {
+                let batch: Vec<ObjectRef> = g.buffered.drain(..threshold).collect();
+                launch(&mut g, &rt, &make_task, node, batch);
             }
-        }
-        while self.buffered.len() >= self.threshold {
-            let batch: Vec<ObjectRef> =
-                self.buffered.drain(..self.threshold).collect();
-            self.launch(rt, batch);
-        }
+        });
     }
 
-    /// Launch a merge over any remaining blocks (tail batch at stage end).
-    pub fn flush(&mut self, rt: &Runtime) {
-        self.poll(rt);
-        // tail: include still-pending blocks too — the scheduler will wait
-        // for them; at stage end the driver knows no more blocks come.
-        let mut batch = std::mem::take(&mut self.buffered);
-        batch.extend(std::mem::take(&mut self.pending));
+    /// Launch a merge over any remaining blocks (tail batch at stage
+    /// end). Still-pending blocks are included — the event-driven
+    /// scheduler holds the merge until they resolve; at stage end the
+    /// driver knows no more blocks come.
+    pub fn flush(&self) {
+        let Some(rt) = self.rt.upgrade() else { return };
+        let mut g = self.inner.lock().unwrap();
+        g.flushed = true;
+        let mut batch = std::mem::take(&mut g.buffered);
+        let mut pending = std::mem::take(&mut g.pending);
+        batch.append(&mut pending);
         if !batch.is_empty() {
-            self.launch(rt, batch);
+            launch(&mut g, &rt, &self.make_task, self.node, batch);
         }
-    }
-
-    fn launch(&mut self, rt: &Runtime, batch: Vec<ObjectRef>) {
-        let spec = (self.make_task)(self.node, self.merged_outputs.len(), batch);
-        debug_assert!(
-            matches!(spec.placement, Placement::Node(n) if n == self.node)
-        );
-        let (outputs, handle) = rt.submit(spec);
-        self.merged_outputs.push(outputs);
-        self.handles.push(handle);
     }
 
     /// Buffered blocks not yet covered by a merge task (the controller's
     /// "in-memory buffer" of §2.3). Routed-but-unproduced blocks count:
     /// their maps are in flight and their data will land here.
     pub fn backlog(&self) -> usize {
-        self.pending.len() + self.buffered.len()
+        self.inner.lock().unwrap().backlog()
     }
 
     /// Merge tasks currently in flight.
     pub fn merges_in_flight(&self) -> usize {
-        self.handles.iter().filter(|h| !h.is_done()).count()
+        self.inner.lock().unwrap().merges_in_flight()
     }
 
     /// §2.3 backpressure predicate: merge parallelism saturated AND the
     /// buffer filled past `max_buffered` blocks.
     pub fn saturated(&self, merge_parallelism: usize, max_buffered: usize) -> bool {
-        self.merges_in_flight() >= merge_parallelism
-            && self.backlog() >= max_buffered
+        let g = self.inner.lock().unwrap();
+        g.merges_in_flight() >= merge_parallelism && g.backlog() >= max_buffered
     }
 
     /// Merge tasks launched so far.
     pub fn merges_launched(&self) -> usize {
-        self.handles.len()
+        self.inner.lock().unwrap().handles.len()
     }
 
-    /// Wait for all launched merge tasks.
-    pub fn wait_all(&self) -> Result<(), crate::distfut::DfError> {
-        crate::distfut::future::wait_all(&self.handles)
+    /// Peak observed backlog (memory-exposure metric; ablation A1).
+    pub fn peak_backlog(&self) -> usize {
+        self.inner.lock().unwrap().peak_backlog
+    }
+
+    /// Output refs of every launched merge (R1 merged blocks per batch).
+    pub fn merged_outputs(&self) -> Vec<Vec<ObjectRef>> {
+        self.inner.lock().unwrap().merged_outputs.clone()
+    }
+
+    /// Wait for all launched merge tasks. Only meaningful after
+    /// [`MergeController::flush`] — no new merges can start then.
+    pub fn wait_all(&self) -> Result<(), DfError> {
+        let handles: Vec<TaskHandle> =
+            self.inner.lock().unwrap().handles.clone();
+        crate::distfut::future::wait_all(&handles)
     }
 }
 
@@ -148,28 +218,29 @@ mod tests {
     }
 
     #[test]
-    fn launches_merge_at_threshold() {
+    fn launches_merge_at_threshold_without_polling() {
         let rt = Runtime::new(RuntimeOptions::default());
-        let mut mc = MergeController::new(0, 3, noop_factory(2));
+        let mc = MergeController::new(0, 3, &rt, noop_factory(2));
         for i in 0..7 {
+            // already-produced blocks: callbacks fire inline
             mc.on_map_block(rt.put(0, vec![i as u8]));
         }
-        mc.poll(&rt);
         // 7 ready blocks / threshold 3 → 2 merges, 1 buffered
         assert_eq!(mc.merges_launched(), 2);
-        mc.flush(&rt); // tail
+        mc.flush(); // tail
         assert_eq!(mc.merges_launched(), 3);
         mc.wait_all().unwrap();
-        assert_eq!(mc.merged_outputs.len(), 3);
-        assert!(mc.merged_outputs.iter().all(|o| o.len() == 2));
+        let outs = mc.merged_outputs();
+        assert_eq!(outs.len(), 3);
+        assert!(outs.iter().all(|o| o.len() == 2));
     }
 
     #[test]
-    fn unproduced_blocks_stay_pending() {
+    fn unproduced_blocks_promote_on_commit() {
         let rt = Runtime::new(RuntimeOptions::default());
-        let mut mc = MergeController::new(0, 1, noop_factory(1));
-        // a declared-but-never-produced object: submit a slow producer
-        let (outs, _h) = rt.submit(TaskSpec {
+        let mc = MergeController::new(0, 1, &rt, noop_factory(1));
+        // a block whose data lands later: submit a slow producer
+        let (outs, h) = rt.submit(TaskSpec {
             name: "slow".into(),
             placement: Placement::Node(0),
             func: task_fn(|_| {
@@ -181,30 +252,53 @@ mod tests {
             max_retries: 0,
         });
         mc.on_map_block(outs.into_iter().next().unwrap());
-        mc.poll(&rt);
         assert!(mc.backlog() >= 1);
-        std::thread::sleep(std::time::Duration::from_millis(80));
-        mc.poll(&rt);
+        assert_eq!(mc.merges_launched(), 0, "no data yet, no merge");
+        h.wait().unwrap();
+        // the commit itself launched the merge — no poll in between
         assert_eq!(mc.merges_launched(), 1);
         mc.wait_all().unwrap();
     }
 
     #[test]
-    fn backlog_clears_after_completion() {
+    fn backlog_clears_after_promotion() {
         let rt = Runtime::new(RuntimeOptions::default());
-        let mut mc = MergeController::new(0, 2, noop_factory(1));
+        let mc = MergeController::new(0, 2, &rt, noop_factory(1));
         mc.on_map_block(rt.put(0, vec![1]));
         mc.on_map_block(rt.put(0, vec![2]));
-        mc.poll(&rt);
         mc.wait_all().unwrap();
         assert_eq!(mc.backlog(), 0);
+        assert!(mc.peak_backlog() >= 1);
     }
 
     #[test]
     fn flush_empty_is_noop() {
         let rt = Runtime::new(RuntimeOptions::default());
-        let mut mc = MergeController::new(0, 2, noop_factory(1));
-        mc.flush(&rt);
+        let mc = MergeController::new(0, 2, &rt, noop_factory(1));
+        mc.flush();
         assert_eq!(mc.merges_launched(), 0);
+    }
+
+    #[test]
+    fn flush_includes_still_pending_blocks() {
+        let rt = Runtime::new(RuntimeOptions::default());
+        let mc = MergeController::new(0, 10, &rt, noop_factory(1));
+        let (outs, _h) = rt.submit(TaskSpec {
+            name: "slow".into(),
+            placement: Placement::Node(0),
+            func: task_fn(|_| {
+                std::thread::sleep(std::time::Duration::from_millis(30));
+                Ok(vec![vec![9]])
+            }),
+            args: vec![],
+            num_returns: 1,
+            max_retries: 0,
+        });
+        mc.on_map_block(outs.into_iter().next().unwrap());
+        mc.flush(); // tail merge waits on the block via the scheduler
+        assert_eq!(mc.merges_launched(), 1);
+        mc.wait_all().unwrap();
+        // the late readiness callback found nothing to promote
+        assert_eq!(mc.backlog(), 0);
     }
 }

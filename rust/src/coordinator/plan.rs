@@ -95,6 +95,17 @@ impl JobSpec {
         self.n_output_partitions / self.n_workers()
     }
 
+    /// Merge batches each worker runs when every map block is merged in
+    /// threshold-sized batches plus a tail: ⌈M / threshold⌉. This is the
+    /// per-node merge count of the streaming topology, the reduce fan-in
+    /// of both merge-based strategies, and the warmup shape.
+    pub fn merge_batches_per_node(&self) -> usize {
+        crate::util::div_ceil(
+            self.n_input_partitions as u64,
+            self.merge_threshold_blocks.max(1) as u64,
+        ) as usize
+    }
+
     /// Records per input partition (last partition may be short).
     pub fn records_per_partition(&self) -> u64 {
         let total = self.total_bytes / RECORD_SIZE as u64;

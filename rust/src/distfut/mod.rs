@@ -4,8 +4,10 @@
 //! Ray; this module implements exactly that feature list, in-process, with
 //! one thread pool per simulated node:
 //!
-//! - **Task scheduling** — tasks are submitted with a placement and start
-//!   when their argument futures resolve; per-node slot pools bound
+//! - **Task scheduling** — dispatch is event-driven: a task is routed to
+//!   a node queue the moment its last argument resolves, using Ray-style
+//!   locality (most argument bytes win) with work-stealing fallback and
+//!   memory-aware admission control; per-node slot pools bound
 //!   concurrency ([`scheduler`]).
 //! - **Distributed futures** — [`Runtime::submit`] returns [`ObjectRef`]s
 //!   *before* the task runs; downstream tasks can be submitted against
@@ -32,10 +34,18 @@ pub use store::{ObjectId, ObjectRef, StoreStats};
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Placement {
     /// Run on a specific node (paper: merge tasks are pinned to the node
-    /// whose merge controller buffered the blocks).
+    /// whose merge controller buffered the blocks). Exempt from memory
+    /// admission control — pinned consumers drain an over-budget node.
     Node(usize),
-    /// Run wherever a slot frees first (paper: map tasks are queued on the
-    /// driver and handed to whichever node finishes one).
+    /// Soft locality: queued on the given node, but an idle node may
+    /// steal it after [`scheduler::RuntimeOptions::steal_delay`] so no
+    /// node idles while work exists.
+    Prefer(usize),
+    /// No constraint. The scheduler routes the task to the node holding
+    /// the most of its argument bytes (Ray-style locality scheduling,
+    /// stealable as with [`Placement::Prefer`]); tasks with no resident
+    /// arguments go to a shared FIFO drained by whichever node frees a
+    /// slot first (paper: the driver-side map queue).
     Any,
 }
 

@@ -1,18 +1,34 @@
-//! Task scheduler and worker pools (paper §2.5 "Task scheduling").
+//! Event-driven task scheduler and worker pools (paper §2.5 "Task
+//! scheduling" + "Memory management").
 //!
 //! One worker-thread pool per simulated node, sized by the node's task
-//! parallelism (¾ of vCPUs for the paper's workers). Tasks become
-//! *runnable* when all their argument objects are committed; runnable
-//! tasks wait in per-node queues (pinned placement) or a shared queue
-//! (`Placement::Any` — the paper's driver-side map queue). Failed tasks
-//! are retried up to `max_retries` times before their handle resolves to
-//! an error.
+//! parallelism (¾ of vCPUs for the paper's workers). Dispatch is driven
+//! by argument *readiness*: a task becomes runnable the moment its last
+//! argument object resolves, and is routed to a queue at that point —
+//! never earlier, so routing can use where the argument bytes actually
+//! landed:
+//!
+//! - [`Placement::Node`] — hard pin; only that node's workers run it and
+//!   it is exempt from admission control (pinned consumers are what
+//!   drain an over-budget node).
+//! - [`Placement::Prefer`] — soft locality: queued on the preferred node
+//!   but *stealable* by an idle node after [`RuntimeOptions::steal_delay`].
+//! - [`Placement::Any`] — Ray-style locality scheduling: routed to the
+//!   node holding the most argument bytes (stealable, as above); tasks
+//!   with no resident arguments go to a shared FIFO any node drains.
+//!
+//! Memory-aware admission control (§2.5, scheduler-level backpressure):
+//! a node whose resident store bytes exceed the admission watermark is
+//! not offered new load-balanced (`Any`/`Prefer`) work until it drains;
+//! declined dispatches are counted in `StoreStats::backpressure_stalls`.
+//! Failed tasks are retried up to `max_retries` times before their
+//! handle resolves to an error.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::distfut::future::TaskHandle;
 use crate::distfut::store::{ObjectId, ObjectRef, Store, StoreStats};
@@ -30,6 +46,17 @@ pub struct RuntimeOptions {
     pub store_capacity_per_node: u64,
     /// Spill directory (a unique subdirectory is created inside).
     pub spill_root: std::path::PathBuf,
+    /// Fraction of the store capacity above which a node stops being
+    /// offered load-balanced (`Any`/`Prefer`) tasks. Pinned tasks still
+    /// run — they are what drains the node. `1.0` (the default)
+    /// effectively disables admission control, since spilling already
+    /// keeps residency at or below capacity; values below 1.0 give the
+    /// scheduler headroom to react *before* the spill path engages.
+    pub admission_watermark: f64,
+    /// How long a locality-routed task may wait on its preferred node
+    /// before an idle node is allowed to steal it. Small values favour
+    /// utilization; larger values favour locality.
+    pub steal_delay: Duration,
 }
 
 impl Default for RuntimeOptions {
@@ -39,6 +66,8 @@ impl Default for RuntimeOptions {
             slots_per_node: 2,
             store_capacity_per_node: 1 << 30,
             spill_root: std::env::temp_dir(),
+            admission_watermark: 1.0,
+            steal_delay: Duration::from_millis(1),
         }
     }
 }
@@ -49,7 +78,7 @@ pub struct TaskSpec {
     pub name: String,
     pub placement: Placement,
     pub func: TaskFn,
-    /// Argument objects; the task starts only when all are committed.
+    /// Argument objects; the task starts only when all are resolved.
     pub args: Vec<ObjectRef>,
     /// Number of output objects the function will return.
     pub num_returns: usize,
@@ -72,7 +101,7 @@ struct QueuedTask {
     outputs: Vec<ObjectId>,
     handle: TaskHandle,
     attempt: u32,
-    /// Unresolved argument count (enqueued when it reaches 0).
+    /// Unresolved argument count (routed to a queue when it reaches 0).
     unresolved: usize,
 }
 
@@ -81,12 +110,30 @@ struct SchedState {
     waiting: HashMap<ObjectId, Vec<u64>>,
     /// Pending tasks by internal id.
     pending: HashMap<u64, QueuedTask>,
-    /// Runnable queues: one per node + the shared any-queue.
-    node_queues: Vec<VecDeque<u64>>,
-    any_queue: VecDeque<u64>,
+    /// Hard-pinned runnable tasks, one queue per node (never stolen,
+    /// exempt from admission control).
+    pinned: Vec<VecDeque<u64>>,
+    /// Locality-routed runnable tasks per node, stamped with their
+    /// enqueue time; stealable once older than `steal_delay`.
+    local: Vec<VecDeque<(u64, Instant)>>,
+    /// Runnable tasks with no locality (any node drains this FIFO).
+    shared: VecDeque<u64>,
     /// In-flight + queued + waiting task count (for quiescence checks).
     outstanding: u64,
     shutdown: bool,
+}
+
+impl SchedState {
+    fn route(&mut self, sh: &Shared, tid: u64, placement: Placement, arg_ids: &[ObjectId]) {
+        match placement {
+            Placement::Node(n) => self.pinned[n].push_back(tid),
+            Placement::Prefer(n) => self.local[n].push_back((tid, Instant::now())),
+            Placement::Any => match sh.store.locality_node(arg_ids) {
+                Some(n) => self.local[n].push_back((tid, Instant::now())),
+                None => self.shared.push_back(tid),
+            },
+        }
+    }
 }
 
 /// The distributed-futures runtime (see module docs of [`crate::distfut`]).
@@ -100,6 +147,11 @@ struct Shared {
     work_ready: Condvar,
     quiescent: Condvar,
     store: Arc<Store>,
+    /// Number of nodes, fixed at construction (lock-free reads).
+    n_nodes: usize,
+    /// Per-node resident-bytes ceiling for admission control.
+    admission_limit: u64,
+    steal_delay: Duration,
     next_task_id: AtomicU64,
     epoch: Instant,
     events: Mutex<Vec<TaskEvent>>,
@@ -116,18 +168,25 @@ impl Runtime {
             NEXT_RUNTIME.fetch_add(1, Ordering::Relaxed)
         ));
         let store = Store::new(opts.n_nodes, opts.store_capacity_per_node, spill_dir);
+        let admission_limit = (opts.store_capacity_per_node as f64
+            * opts.admission_watermark.clamp(0.0, 1.0))
+            as u64;
         let shared = Arc::new(Shared {
             state: Mutex::new(SchedState {
                 waiting: HashMap::new(),
                 pending: HashMap::new(),
-                node_queues: (0..opts.n_nodes).map(|_| VecDeque::new()).collect(),
-                any_queue: VecDeque::new(),
+                pinned: (0..opts.n_nodes).map(|_| VecDeque::new()).collect(),
+                local: (0..opts.n_nodes).map(|_| VecDeque::new()).collect(),
+                shared: VecDeque::new(),
                 outstanding: 0,
                 shutdown: false,
             }),
             work_ready: Condvar::new(),
             quiescent: Condvar::new(),
             store,
+            n_nodes: opts.n_nodes,
+            admission_limit,
+            steal_delay: opts.steal_delay.max(Duration::from_micros(100)),
             next_task_id: AtomicU64::new(1),
             epoch: Instant::now(),
             events: Mutex::new(Vec::new()),
@@ -156,9 +215,9 @@ impl Runtime {
         rt
     }
 
-    /// Number of nodes.
+    /// Number of nodes (lock-free; fixed at construction).
     pub fn n_nodes(&self) -> usize {
-        self.shared.state.lock().unwrap().node_queues.len()
+        self.shared.n_nodes
     }
 
     /// Put a buffer into `node`'s store from the driver.
@@ -183,12 +242,25 @@ impl Runtime {
         self.shared.store.is_ready(r.id)
     }
 
+    /// Run `f` once `r`'s data is available: inline if already produced,
+    /// otherwise on the committing worker's thread. The runtime's
+    /// readiness-callback surface — controllers and strategies build
+    /// event-driven pipelines on it instead of polling `object_ready`.
+    /// `f` must not block; submitting tasks and taking short locks is
+    /// fine. Callbacks of objects that fail or are released never fire.
+    pub fn on_ready<F>(&self, r: &ObjectRef, f: F)
+    where
+        F: FnOnce() + Send + 'static,
+    {
+        self.shared.store.subscribe(r.id, Box::new(f));
+    }
+
     /// Submit a task; returns its output refs (immediately usable as args
     /// of downstream tasks) and a completion handle.
     pub fn submit(&self, spec: TaskSpec) -> (Vec<ObjectRef>, TaskHandle) {
         let sh = &self.shared;
         let owner_node = match spec.placement {
-            Placement::Node(n) => n,
+            Placement::Node(n) | Placement::Prefer(n) => n,
             Placement::Any => 0,
         };
         let outputs: Vec<ObjectRef> = (0..spec.num_returns)
@@ -203,13 +275,13 @@ impl Runtime {
             handle.complete(Err("runtime shut down".into()));
             return (outputs, handle);
         }
-        let unresolved = spec
-            .args
-            .iter()
-            .filter(|a| !sh.store.is_ready(a.id))
-            .count();
+        // single resolution check per arg: a concurrent commit between
+        // two checks could otherwise leave the count and the waiting
+        // registrations disagreeing (and the task stranded)
+        let mut unresolved = 0usize;
         for a in &spec.args {
-            if !sh.store.is_ready(a.id) {
+            if !sh.store.is_resolved(a.id) {
+                unresolved += 1;
                 st.waiting.entry(a.id).or_default().push(tid);
             }
         }
@@ -222,7 +294,9 @@ impl Runtime {
         };
         st.outstanding += 1;
         if unresolved == 0 {
-            enqueue(&mut st, tid, &task);
+            let arg_ids: Vec<ObjectId> =
+                task.spec.args.iter().map(|a| a.id).collect();
+            st.route(sh, tid, task.spec.placement, &arg_ids);
         }
         st.pending.insert(tid, task);
         drop(st);
@@ -243,7 +317,7 @@ impl Runtime {
         self.shared.events.lock().unwrap().clone()
     }
 
-    /// Store statistics (transfers, spills, residency).
+    /// Store statistics (transfers, spills, residency, stalls).
     pub fn store_stats(&self) -> StoreStats {
         self.shared.store.stats()
     }
@@ -266,14 +340,14 @@ impl Runtime {
         {
             let mut st = self.shared.state.lock().unwrap();
             st.shutdown = true;
-            let drained: Vec<QueuedTask> =
-                st.pending.drain().map(|(_, t)| t).collect();
+            let drained: Vec<QueuedTask> = st.pending.drain().map(|(_, t)| t).collect();
             for t in drained {
                 t.handle.complete(Err("runtime shut down".into()));
                 st.outstanding = st.outstanding.saturating_sub(1);
             }
-            st.node_queues.iter_mut().for_each(|q| q.clear());
-            st.any_queue.clear();
+            st.pinned.iter_mut().for_each(|q| q.clear());
+            st.local.iter_mut().for_each(|q| q.clear());
+            st.shared.clear();
         }
         self.shared.stop.store(true, Ordering::SeqCst);
         self.shared.work_ready.notify_all();
@@ -293,34 +367,137 @@ impl Drop for Runtime {
 
 static NEXT_RUNTIME: AtomicU64 = AtomicU64::new(0);
 
-fn enqueue(st: &mut SchedState, tid: u64, task: &QueuedTask) {
-    match task.spec.placement {
-        Placement::Node(n) => st.node_queues[n].push_back(tid),
-        Placement::Any => st.any_queue.push_back(tid),
+/// Outcome of one dispatch attempt by an idle worker.
+enum Pick {
+    /// Run this task now.
+    Run(u64),
+    /// Nothing runnable *yet* (steal-delay or admission control); poll
+    /// again after the given wait.
+    Retry(Duration),
+    /// No work anywhere; sleep until notified.
+    Idle,
+}
+
+/// Choose the next task for `node`, in priority order: pinned work,
+/// (admission control gate), home locality queue, shared queue, then
+/// stealing the oldest eligible entry from the most backlogged peer.
+fn pick_task(sh: &Shared, st: &mut SchedState, node: usize, stalled: &mut bool) -> Pick {
+    // Pinned work always runs: draining it is what relieves the memory
+    // pressure that admission control reacts to.
+    if let Some(tid) = st.pinned[node].pop_front() {
+        *stalled = false;
+        return Pick::Run(tid);
+    }
+    // Admission control: an over-watermark node is not offered new
+    // load-balanced work (scheduler-level backpressure, paper §2.5).
+    // The gate only engages while some other node is under its
+    // watermark — if the whole cluster is over budget, declining would
+    // deadlock (nothing would run, so nothing would drain), so the gate
+    // disengages and the work runs anyway.
+    let over = sh.store.resident_on(node) > sh.admission_limit;
+    if over
+        && (0..sh.n_nodes).any(|n| sh.store.resident_on(n) <= sh.admission_limit)
+    {
+        let now = Instant::now();
+        // a stall is only recorded for work this node could actually
+        // have taken right now: its own queues, the shared queue, or a
+        // steal-eligible peer head — not peer work still inside its
+        // locality grace period
+        let declinable = !st.shared.is_empty()
+            || !st.local[node].is_empty()
+            || st.local.iter().enumerate().any(|(n, q)| {
+                n != node
+                    && q.front().is_some_and(|&(_, routed_at)| {
+                        now.duration_since(routed_at) >= sh.steal_delay
+                    })
+            });
+        if declinable && !*stalled {
+            *stalled = true;
+            sh.store
+                .counters
+                .backpressure_stalls
+                .fetch_add(1, Ordering::Relaxed);
+        }
+        // Residency drains via object releases, which do not signal the
+        // scheduler — poll at the steal cadence until under watermark.
+        let work_pending =
+            declinable || st.local.iter().any(|q| !q.is_empty());
+        return if work_pending {
+            Pick::Retry(sh.steal_delay)
+        } else {
+            Pick::Idle
+        };
+    }
+    *stalled = false;
+    if let Some((tid, _)) = st.local[node].pop_front() {
+        return Pick::Run(tid);
+    }
+    if let Some(tid) = st.shared.pop_front() {
+        return Pick::Run(tid);
+    }
+    // Work stealing: take from the longest peer queue whose head has
+    // waited out the locality grace period.
+    let now = Instant::now();
+    let mut best: Option<(usize, usize)> = None; // (queue len, node)
+    let mut future_work = false;
+    for (n, q) in st.local.iter().enumerate() {
+        if n == node {
+            continue;
+        }
+        if let Some(&(_, routed_at)) = q.front() {
+            if now.duration_since(routed_at) >= sh.steal_delay {
+                let len = q.len();
+                let better = match best {
+                    None => true,
+                    Some((best_len, _)) => len > best_len,
+                };
+                if better {
+                    best = Some((len, n));
+                }
+            } else {
+                future_work = true;
+            }
+        }
+    }
+    if let Some((_, n)) = best {
+        let (tid, _) = st.local[n].pop_front().expect("steal candidate");
+        return Pick::Run(tid);
+    }
+    if future_work {
+        Pick::Retry(sh.steal_delay)
+    } else {
+        Pick::Idle
     }
 }
 
 fn worker_loop(sh: Arc<Shared>, node: usize) {
+    let mut stalled = false;
     loop {
-        // --- pick a runnable task for this node ---
-        let (tid, mut task) = {
+        // --- pick a runnable task for this node (event-driven: tasks in
+        // these queues already have every argument resolved) ---
+        let mut task = {
             let mut st = sh.state.lock().unwrap();
             loop {
                 if sh.stop.load(Ordering::SeqCst) {
                     return;
                 }
-                if let Some(tid) = st.node_queues[node]
-                    .pop_front()
-                    .or_else(|| st.any_queue.pop_front())
-                {
-                    let task = st.pending.remove(&tid).expect("queued task exists");
-                    break (tid, task);
+                match pick_task(&sh, &mut st, node, &mut stalled) {
+                    Pick::Run(tid) => {
+                        break st.pending.remove(&tid).expect("queued task exists");
+                    }
+                    Pick::Retry(d) => {
+                        let (g, _) = sh.work_ready.wait_timeout(st, d).unwrap();
+                        st = g;
+                    }
+                    Pick::Idle => {
+                        st = sh.work_ready.wait(st).unwrap();
+                    }
                 }
-                st = sh.work_ready.wait(st).unwrap();
             }
         };
 
-        // --- resolve args (blocking, with transfer accounting) ---
+        // --- fetch resolved args (restores spilled data, accounts
+        // cross-node transfers; never waits on production) ---
         let args: Result<Vec<Arc<Vec<u8>>>, DfError> = task
             .spec
             .args
@@ -329,16 +506,14 @@ fn worker_loop(sh: Arc<Shared>, node: usize) {
             .collect();
 
         let start = sh.epoch.elapsed().as_secs_f64();
-        let result = args
-            .map_err(|e| e.to_string())
-            .and_then(|args| {
-                let ctx = TaskCtx {
-                    node,
-                    args,
-                    attempt: task.attempt,
-                };
-                (task.spec.func)(&ctx)
-            });
+        let result = args.map_err(|e| e.to_string()).and_then(|args| {
+            let ctx = TaskCtx {
+                node,
+                args,
+                attempt: task.attempt,
+            };
+            (task.spec.func)(&ctx)
+        });
         let end = sh.epoch.elapsed().as_secs_f64();
         sh.tasks_executed.fetch_add(1, Ordering::Relaxed);
         sh.events.lock().unwrap().push(TaskEvent {
@@ -347,6 +522,7 @@ fn worker_loop(sh: Arc<Shared>, node: usize) {
             start,
             end,
             ok: result.is_ok(),
+            attempt: task.attempt,
         });
 
         match result {
@@ -358,6 +534,12 @@ fn worker_loop(sh: Arc<Shared>, node: usize) {
                         outs.len(),
                         task.spec.num_returns
                     )));
+                    // poison the undelivered outputs: consumers dispatch
+                    // on resolution and must observe the failure instead
+                    // of waiting forever on a Pending object
+                    for oid in &task.outputs {
+                        sh.store.fail(*oid);
+                    }
                 } else {
                     for (id, data) in task.outputs.iter().zip(outs) {
                         sh.store.commit(*id, node, data);
@@ -370,8 +552,12 @@ fn worker_loop(sh: Arc<Shared>, node: usize) {
                 if task.attempt < task.spec.max_retries {
                     task.attempt += 1;
                     sh.tasks_retried.fetch_add(1, Ordering::Relaxed);
+                    let tid = sh.next_task_id.fetch_add(1, Ordering::Relaxed);
+                    let arg_ids: Vec<ObjectId> =
+                        task.spec.args.iter().map(|a| a.id).collect();
+                    let placement = task.spec.placement;
                     let mut st = sh.state.lock().unwrap();
-                    enqueue(&mut st, tid, &task);
+                    st.route(&sh, tid, placement, &arg_ids);
                     st.pending.insert(tid, task);
                     drop(st);
                     sh.work_ready.notify_all();
@@ -393,24 +579,33 @@ fn worker_loop(sh: Arc<Shared>, node: usize) {
     }
 }
 
-/// Post-completion bookkeeping: wake tasks waiting on our outputs and
-/// update quiescence accounting.
+/// Post-completion bookkeeping: route tasks whose last argument just
+/// resolved (the event-driven dispatch point — locality is computed here,
+/// when the bytes' location is known) and update quiescence accounting.
 fn finish_task(sh: &Arc<Shared>, outputs: &[ObjectId]) {
     let mut st = sh.state.lock().unwrap();
+    let mut now_runnable: Vec<u64> = Vec::new();
     for oid in outputs {
         if let Some(waiters) = st.waiting.remove(oid) {
             for wtid in waiters {
                 if let Some(w) = st.pending.get_mut(&wtid) {
                     w.unresolved -= 1;
                     if w.unresolved == 0 {
-                        match w.spec.placement {
-                            Placement::Node(n) => st.node_queues[n].push_back(wtid),
-                            Placement::Any => st.any_queue.push_back(wtid),
-                        }
+                        now_runnable.push(wtid);
                     }
                 }
             }
         }
+    }
+    for wtid in now_runnable {
+        let (placement, arg_ids): (Placement, Vec<ObjectId>) = {
+            let w = &st.pending[&wtid];
+            (
+                w.spec.placement,
+                w.spec.args.iter().map(|a| a.id).collect(),
+            )
+        };
+        st.route(sh, wtid, placement, &arg_ids);
     }
     st.outstanding = st.outstanding.saturating_sub(1);
     let quiescent = st.outstanding == 0;
@@ -432,6 +627,42 @@ mod tests {
             slots_per_node: slots,
             ..Default::default()
         })
+    }
+
+    /// A runtime whose locality routing is observable: stealing only
+    /// kicks in after a long grace period.
+    fn sticky_rt(nodes: usize, slots: usize) -> Arc<Runtime> {
+        Runtime::new(RuntimeOptions {
+            n_nodes: nodes,
+            slots_per_node: slots,
+            steal_delay: Duration::from_millis(400),
+            ..Default::default()
+        })
+    }
+
+    fn noop(name: &str, placement: Placement, args: Vec<ObjectRef>) -> TaskSpec {
+        TaskSpec {
+            name: name.into(),
+            placement,
+            func: task_fn(|_| Ok(vec![])),
+            args,
+            num_returns: 0,
+            max_retries: 0,
+        }
+    }
+
+    fn sleeper(name: &str, placement: Placement, ms: u64) -> TaskSpec {
+        TaskSpec {
+            name: name.into(),
+            placement,
+            func: task_fn(move |_| {
+                std::thread::sleep(Duration::from_millis(ms));
+                Ok(vec![])
+            }),
+            args: vec![],
+            num_returns: 0,
+            max_retries: 0,
+        }
     }
 
     #[test]
@@ -507,6 +738,202 @@ mod tests {
     }
 
     #[test]
+    fn any_placement_prefers_node_with_most_argument_bytes() {
+        let rt = sticky_rt(3, 1);
+        let big = rt.put(2, vec![0u8; 4096]);
+        let small = rt.put(0, vec![0u8; 16]);
+        let (_, h) = rt.submit(noop("loc", Placement::Any, vec![big, small]));
+        h.wait().unwrap();
+        let ev = rt
+            .task_events()
+            .into_iter()
+            .find(|e| e.name == "loc")
+            .unwrap();
+        assert_eq!(
+            ev.node, 2,
+            "Any task must land on the node holding the majority of its \
+             argument bytes"
+        );
+    }
+
+    #[test]
+    fn readiness_dispatch_routes_consumer_to_producer_node() {
+        let rt = sticky_rt(3, 1);
+        // the consumer is submitted while the producer is still running,
+        // so locality can only be computed at readiness time
+        let (outs, _) = rt.submit(TaskSpec {
+            name: "produce".into(),
+            placement: Placement::Node(1),
+            func: task_fn(|_| {
+                std::thread::sleep(Duration::from_millis(30));
+                Ok(vec![vec![7u8; 2048]])
+            }),
+            args: vec![],
+            num_returns: 1,
+            max_retries: 0,
+        });
+        let (_, h) = rt.submit(noop(
+            "consume",
+            Placement::Any,
+            vec![outs.into_iter().next().unwrap()],
+        ));
+        h.wait().unwrap();
+        let ev = rt
+            .task_events()
+            .into_iter()
+            .find(|e| e.name == "consume")
+            .unwrap();
+        assert_eq!(ev.node, 1, "consumer must follow its argument bytes");
+    }
+
+    #[test]
+    fn prefer_runs_on_preferred_node_when_free() {
+        let rt = sticky_rt(2, 1);
+        let (_, h) = rt.submit(noop("soft", Placement::Prefer(1), vec![]));
+        h.wait().unwrap();
+        let ev = rt
+            .task_events()
+            .into_iter()
+            .find(|e| e.name == "soft")
+            .unwrap();
+        assert_eq!(ev.node, 1);
+    }
+
+    #[test]
+    fn prefer_is_stolen_when_home_node_is_busy() {
+        let rt = Runtime::new(RuntimeOptions {
+            n_nodes: 2,
+            slots_per_node: 1,
+            steal_delay: Duration::from_millis(5),
+            ..Default::default()
+        });
+        let (_, busy) = rt.submit(sleeper("busy", Placement::Node(0), 300));
+        std::thread::sleep(Duration::from_millis(20)); // let it start
+        let (_, h) = rt.submit(noop("stealme", Placement::Prefer(0), vec![]));
+        h.wait().unwrap();
+        let ev = rt
+            .task_events()
+            .into_iter()
+            .find(|e| e.name == "stealme")
+            .unwrap();
+        assert_eq!(ev.node, 1, "idle node must steal after the grace period");
+        busy.wait().unwrap();
+    }
+
+    #[test]
+    fn over_budget_node_stops_receiving_dispatches_until_it_drains() {
+        let rt = Runtime::new(RuntimeOptions {
+            n_nodes: 2,
+            slots_per_node: 1,
+            store_capacity_per_node: 1000,
+            admission_watermark: 0.5,
+            steal_delay: Duration::from_millis(2),
+            ..Default::default()
+        });
+        // node 0 holds 800 resident bytes > 500-byte admission limit
+        let ballast = rt.put(0, vec![0u8; 800]);
+        let handles: Vec<TaskHandle> = (0..6)
+            .map(|i| {
+                rt.submit(sleeper(&format!("bp{i}"), Placement::Any, 10)).1
+            })
+            .collect();
+        for h in &handles {
+            h.wait().unwrap();
+        }
+        for e in rt.task_events() {
+            assert_eq!(
+                e.node, 1,
+                "over-budget node 0 must not be offered task {}",
+                e.name
+            );
+        }
+        assert!(
+            rt.store_stats().backpressure_stalls >= 1,
+            "declined dispatches must be recorded: {:?}",
+            rt.store_stats()
+        );
+        // drain node 0, keep node 1 busy: the next Any task must land on 0
+        drop(ballast);
+        let (_, busy) = rt.submit(sleeper("busy", Placement::Node(1), 100));
+        std::thread::sleep(Duration::from_millis(20));
+        let (_, h) = rt.submit(noop("after-drain", Placement::Any, vec![]));
+        h.wait().unwrap();
+        let ev = rt
+            .task_events()
+            .into_iter()
+            .find(|e| e.name == "after-drain")
+            .unwrap();
+        assert_eq!(ev.node, 0, "drained node must be offered work again");
+        busy.wait().unwrap();
+    }
+
+    #[test]
+    fn whole_cluster_over_budget_still_makes_progress() {
+        // when no node is under its watermark the gate disengages —
+        // declining everywhere would deadlock, since nothing would run
+        // to drain residency
+        let rt = Runtime::new(RuntimeOptions {
+            n_nodes: 2,
+            slots_per_node: 1,
+            store_capacity_per_node: 1000,
+            admission_watermark: 0.25,
+            ..Default::default()
+        });
+        let _b0 = rt.put(0, vec![0u8; 500]);
+        let _b1 = rt.put(1, vec![0u8; 500]);
+        let (_, h) = rt.submit(noop("progress", Placement::Any, vec![]));
+        h.wait().unwrap();
+    }
+
+    #[test]
+    fn pinned_tasks_run_on_over_budget_nodes() {
+        // pinned consumers are exactly what drains an over-budget node;
+        // admission control must not starve them (node 1 stays under its
+        // watermark, so the gate is engaged for node 0)
+        let rt = Runtime::new(RuntimeOptions {
+            n_nodes: 2,
+            slots_per_node: 1,
+            store_capacity_per_node: 1000,
+            admission_watermark: 0.25,
+            ..Default::default()
+        });
+        let ballast = rt.put(0, vec![0u8; 900]);
+        let (_, h) = rt.submit(noop("pinned", Placement::Node(0), vec![ballast]));
+        h.wait().unwrap();
+        let ev = rt
+            .task_events()
+            .into_iter()
+            .find(|e| e.name == "pinned")
+            .unwrap();
+        assert_eq!(ev.node, 0);
+    }
+
+    #[test]
+    fn on_ready_fires_for_task_outputs() {
+        use std::sync::atomic::AtomicUsize;
+        let rt = small_rt(2, 1);
+        let fired = Arc::new(AtomicUsize::new(0));
+        let (outs, h) = rt.submit(TaskSpec {
+            name: "produce".into(),
+            placement: Placement::Any,
+            func: task_fn(|_| {
+                std::thread::sleep(Duration::from_millis(10));
+                Ok(vec![vec![1]])
+            }),
+            args: vec![],
+            num_returns: 1,
+            max_retries: 0,
+        });
+        let f = fired.clone();
+        rt.on_ready(&outs[0], move || {
+            f.fetch_add(1, Ordering::SeqCst);
+        });
+        h.wait().unwrap();
+        // the callback runs during commit, before the handle resolves
+        assert_eq!(fired.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
     fn retries_then_succeeds() {
         let rt = small_rt(1, 1);
         let (outs, h) = rt.submit(TaskSpec {
@@ -527,6 +954,10 @@ mod tests {
         assert_eq!(*rt.get(&outs[0]).unwrap(), vec![2]);
         let (_executed, retried) = rt.task_counts();
         assert_eq!(retried, 2);
+        // per-attempt events: attempts 0..=2 all logged, only the last ok
+        let attempts: Vec<u32> = rt.task_events().iter().map(|e| e.attempt).collect();
+        assert_eq!(attempts, vec![0, 1, 2]);
+        assert!(rt.task_events().iter().filter(|e| e.ok).all(|e| e.attempt == 2));
     }
 
     #[test]

@@ -7,6 +7,19 @@
 //! coldest objects are spilled to a per-runtime temp directory and
 //! restored transparently on access — the paper's "virtual, infinite
 //! address space".
+//!
+//! The store also feeds the event-driven scheduler (§2.5 "Task
+//! scheduling" + "Memory management"):
+//!
+//! - **Readiness watchers** — [`Store::subscribe`] registers a callback
+//!   fired once when an object's data is committed; the runtime's
+//!   `on_ready` and the merge controller's block promotion ride on it.
+//! - **Locality** — [`Store::locality_node`] reports which node holds the
+//!   most bytes of a set of objects (Ray-style locality scheduling for
+//!   `Placement::Any` tasks).
+//! - **Residency** — [`Store::resident_on`] is a lock-free per-node
+//!   resident-bytes gauge the scheduler's admission control reads;
+//!   declined dispatches are counted in `backpressure_stalls`.
 
 use std::collections::HashMap;
 use std::fs;
@@ -79,6 +92,9 @@ struct Entry {
     seq: u64,
 }
 
+/// Callback fired once when an object's data becomes available.
+pub type ReadyCallback = Box<dyn FnOnce() + Send>;
+
 /// Transfer/spill counters (feed the metrics layer).
 #[derive(Debug, Default)]
 pub struct StoreCounters {
@@ -88,6 +104,10 @@ pub struct StoreCounters {
     pub spill_bytes: AtomicU64,
     pub restores: AtomicU64,
     pub restore_bytes: AtomicU64,
+    /// Scheduler dispatch stalls caused by memory admission control: a
+    /// worker declined runnable load-balanced work because its node was
+    /// over the admission watermark (paper §2.5 backpressure).
+    pub backpressure_stalls: AtomicU64,
 }
 
 /// Snapshot of store statistics.
@@ -101,6 +121,9 @@ pub struct StoreStats {
     pub restore_bytes: u64,
     pub resident_bytes: u64,
     pub resident_objects: u64,
+    /// Scheduler-level backpressure stall episodes (see
+    /// [`StoreCounters::backpressure_stalls`]).
+    pub backpressure_stalls: u64,
 }
 
 /// The whole-cluster object store (shards are per-node byte budgets, but
@@ -110,6 +133,9 @@ pub struct Store {
     ready: Condvar,
     /// Per-node resident-byte budgets; exceeding triggers spilling.
     node_capacity: Vec<u64>,
+    /// Lock-free mirror of per-node resident bytes (read by the
+    /// scheduler's admission control on every dispatch decision).
+    resident_gauge: Vec<AtomicU64>,
     spill_dir: PathBuf,
     next_id: AtomicU64,
     next_seq: AtomicU64,
@@ -120,6 +146,8 @@ struct Table {
     entries: HashMap<ObjectId, Entry>,
     /// Resident bytes per node.
     resident: Vec<u64>,
+    /// Readiness watchers: object -> callbacks fired at commit.
+    watchers: HashMap<ObjectId, Vec<ReadyCallback>>,
 }
 
 impl Store {
@@ -129,14 +157,21 @@ impl Store {
             table: Mutex::new(Table {
                 entries: HashMap::new(),
                 resident: vec![0; n_nodes],
+                watchers: HashMap::new(),
             }),
             ready: Condvar::new(),
             node_capacity: vec![capacity_per_node; n_nodes],
+            resident_gauge: (0..n_nodes).map(|_| AtomicU64::new(0)).collect(),
             spill_dir,
             next_id: AtomicU64::new(1),
             next_seq: AtomicU64::new(0),
             counters: StoreCounters::default(),
         })
+    }
+
+    fn set_resident(&self, t: &mut Table, node: usize, bytes: u64) {
+        t.resident[node] = bytes;
+        self.resident_gauge[node].store(bytes, Ordering::Relaxed);
     }
 
     /// Reserve an id for an object a task will produce later.
@@ -154,10 +189,11 @@ impl Store {
         ObjectRef::new(id, self.clone())
     }
 
-    /// Store data for a previously declared object and wake waiters.
+    /// Store data for a previously declared object, wake waiters and fire
+    /// readiness watchers (outside the table lock).
     pub fn commit(&self, id: ObjectId, node: usize, data: Vec<u8>) {
         let size = data.len() as u64;
-        {
+        let fired: Vec<ReadyCallback> = {
             let mut t = self.table.lock().unwrap();
             // The caller may have dropped every ObjectRef before the task
             // committed (fire-and-forget side-effect tasks): the result is
@@ -173,10 +209,15 @@ impl Store {
             }
             entry.slot = Slot::Memory(Arc::new(data));
             entry.node = node;
-            t.resident[node] += size;
+            let resident = t.resident[node] + size;
+            self.set_resident(&mut t, node, resident);
             self.maybe_spill(&mut t, node);
-        }
+            t.watchers.remove(&id).unwrap_or_default()
+        };
         self.ready.notify_all();
+        for cb in fired {
+            cb();
+        }
     }
 
     /// Immediately store data (driver put).
@@ -195,15 +236,72 @@ impl Store {
         )
     }
 
+    /// Whether the object has reached a terminal state for dispatch
+    /// purposes: committed (fetchable) *or* released/failed (a fetch will
+    /// error immediately). Only `Pending` objects are unresolved — the
+    /// scheduler must not dispatch a task whose argument may still be
+    /// produced, but it must dispatch one whose argument is poisoned so
+    /// the failure cascades instead of hanging.
+    pub fn is_resolved(&self, id: ObjectId) -> bool {
+        let t = self.table.lock().unwrap();
+        !matches!(t.entries.get(&id).map(|e| &e.slot), Some(Slot::Pending))
+    }
+
+    /// Register `cb` to run once `id`'s data is available. Fires inline
+    /// (on the calling thread) when the object is already committed, and
+    /// on the committing worker's thread otherwise; never under the table
+    /// lock. Watchers of objects that fail or are released are dropped
+    /// without firing.
+    pub fn subscribe(&self, id: ObjectId, cb: ReadyCallback) {
+        {
+            let mut t = self.table.lock().unwrap();
+            match t.entries.get(&id).map(|e| &e.slot) {
+                // committed: fall through and fire outside the lock
+                Some(Slot::Memory(_)) | Some(Slot::Spilled(..)) => {}
+                Some(Slot::Pending) => {
+                    t.watchers.entry(id).or_default().push(cb);
+                    return;
+                }
+                Some(Slot::Released) | None => return,
+            }
+        }
+        cb();
+    }
+
+    /// Node holding the most committed bytes among `ids` (Ray-style
+    /// locality for `Placement::Any`). `None` when no id has committed
+    /// data — the caller falls back to the shared no-locality queue.
+    /// Ties resolve to the lowest node index.
+    pub fn locality_node(&self, ids: &[ObjectId]) -> Option<usize> {
+        let t = self.table.lock().unwrap();
+        let mut per_node: HashMap<usize, u64> = HashMap::new();
+        for id in ids {
+            if let Some(e) = t.entries.get(id) {
+                let bytes = match &e.slot {
+                    Slot::Memory(d) => d.len() as u64,
+                    Slot::Spilled(_, size) => *size,
+                    _ => continue,
+                };
+                *per_node.entry(e.node).or_default() += bytes;
+            }
+        }
+        per_node
+            .into_iter()
+            .max_by_key(|&(node, bytes)| (bytes, std::cmp::Reverse(node)))
+            .map(|(node, _)| node)
+    }
+
+    /// Lock-free per-node resident-bytes gauge (admission control input).
+    pub fn resident_on(&self, node: usize) -> u64 {
+        self.resident_gauge[node].load(Ordering::Relaxed)
+    }
+
     /// Blocking fetch from `requesting_node`; accounts a transfer when the
     /// object lives on another node, restores from disk if spilled.
     pub fn get(&self, id: ObjectId, requesting_node: usize) -> Result<Arc<Vec<u8>>, DfError> {
         let mut t = self.table.lock().unwrap();
         loop {
-            let entry = t
-                .entries
-                .get(&id)
-                .ok_or(DfError::ObjectReleased(id))?;
+            let entry = t.entries.get(&id).ok_or(DfError::ObjectReleased(id))?;
             match &entry.slot {
                 Slot::Pending => {
                     t = self.ready.wait(t).unwrap();
@@ -252,6 +350,8 @@ impl Store {
                 entry.slot = Slot::Released;
             }
         }
+        // Readiness watchers never fire for a poisoned object.
+        t.watchers.remove(&id);
         drop(t);
         self.ready.notify_all();
     }
@@ -270,13 +370,16 @@ impl Store {
             };
             entry.slot = Slot::Released;
             if let Some((node, bytes, path)) = freed {
-                t.resident[node] = t.resident[node].saturating_sub(bytes);
+                let resident = t.resident[node].saturating_sub(bytes);
+                self.set_resident(&mut t, node, resident);
                 if let Some(p) = path {
                     let _ = fs::remove_file(p);
                 }
             }
             t.entries.remove(&id);
         }
+        t.watchers.remove(&id);
+        drop(t);
         // Wake any waiter blocked on this object so it can error out.
         self.ready.notify_all();
     }
@@ -292,9 +395,7 @@ impl Store {
             .entries
             .iter()
             .filter_map(|(id, e)| match (&e.slot, e.node) {
-                (Slot::Memory(d), n) if n == node => {
-                    Some((e.seq, *id, d.len() as u64))
-                }
+                (Slot::Memory(d), n) if n == node => Some((e.seq, *id, d.len() as u64)),
                 _ => None,
             })
             .collect();
@@ -311,7 +412,8 @@ impl Store {
                 let mut f = fs::File::create(&path).expect("spill create");
                 f.write_all(data).expect("spill write");
                 entry.slot = Slot::Spilled(path, size);
-                t.resident[node] -= size;
+                let resident = t.resident[node] - size;
+                self.set_resident(&mut t, node, resident);
                 self.counters.spills.fetch_add(1, Ordering::Relaxed);
                 self.counters.spill_bytes.fetch_add(size, Ordering::Relaxed);
             }
@@ -333,6 +435,10 @@ impl Store {
                 .values()
                 .filter(|e| matches!(e.slot, Slot::Memory(_)))
                 .count() as u64,
+            backpressure_stalls: self
+                .counters
+                .backpressure_stalls
+                .load(Ordering::Relaxed),
         }
     }
 }
@@ -438,5 +544,67 @@ mod tests {
         drop(r);
         // no direct handle to the path; released tombstone must error
         assert_eq!(s.stats().resident_objects, 0);
+    }
+
+    #[test]
+    fn locality_node_picks_heaviest_owner() {
+        let s = test_store(3, u64::MAX);
+        let a = s.put(0, vec![0u8; 10]);
+        let b = s.put(2, vec![0u8; 100]);
+        let c = s.put(2, vec![0u8; 50]);
+        assert_eq!(s.locality_node(&[a.id, b.id, c.id]), Some(2));
+        assert_eq!(s.locality_node(&[a.id]), Some(0));
+        // a declared-but-unproduced object contributes nothing
+        let d = s.declare(1);
+        assert_eq!(s.locality_node(&[d.id]), None);
+        assert_eq!(s.locality_node(&[]), None);
+    }
+
+    #[test]
+    fn resident_gauge_tracks_commits_and_releases() {
+        let s = test_store(2, u64::MAX);
+        let r = s.put(1, vec![0u8; 64]);
+        assert_eq!(s.resident_on(1), 64);
+        assert_eq!(s.resident_on(0), 0);
+        drop(r);
+        assert_eq!(s.resident_on(1), 0);
+    }
+
+    #[test]
+    fn subscribe_fires_on_commit_and_inline_when_ready() {
+        use std::sync::atomic::AtomicUsize;
+        let s = test_store(1, u64::MAX);
+        let fired = Arc::new(AtomicUsize::new(0));
+        // not yet produced: deferred until commit
+        let r = s.declare(0);
+        let f = fired.clone();
+        s.subscribe(r.id, Box::new(move || {
+            f.fetch_add(1, Ordering::SeqCst);
+        }));
+        assert_eq!(fired.load(Ordering::SeqCst), 0);
+        s.commit(r.id, 0, vec![1]);
+        assert_eq!(fired.load(Ordering::SeqCst), 1);
+        // already produced: fires inline
+        let f = fired.clone();
+        s.subscribe(r.id, Box::new(move || {
+            f.fetch_add(1, Ordering::SeqCst);
+        }));
+        assert_eq!(fired.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn subscribe_on_failed_object_never_fires() {
+        use std::sync::atomic::AtomicUsize;
+        let s = test_store(1, u64::MAX);
+        let fired = Arc::new(AtomicUsize::new(0));
+        let r = s.declare(0);
+        let f = fired.clone();
+        s.subscribe(r.id, Box::new(move || {
+            f.fetch_add(1, Ordering::SeqCst);
+        }));
+        s.fail(r.id);
+        // a late commit on a poisoned object is a no-op too
+        s.commit(r.id, 0, vec![9]);
+        assert_eq!(fired.load(Ordering::SeqCst), 0);
     }
 }

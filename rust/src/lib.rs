@@ -7,8 +7,11 @@
 //! The paper's two-stage external sort — map & shuffle with per-worker
 //! merge backpressure, then reduce — is one strategy
 //! ([`shuffle::TwoStageMerge`], the default); the single-pass MapReduce
-//! baseline is another ([`shuffle::SimpleShuffle`]); push-based and
-//! streaming variants slot in the same way.
+//! baseline is another ([`shuffle::SimpleShuffle`]); the fully-pipelined
+//! [`shuffle::StreamingShuffle`] submits the whole map → merge → reduce
+//! DAG up front as chained futures, with no driver-side barriers —
+//! pipelining, locality and memory backpressure come from the
+//! event-driven [`distfut`] runtime, exactly the paper's thesis.
 //!
 //! Strategies compose control-plane building blocks from [`coordinator`]
 //! — partition planning, task bodies, the merge controller — while a
@@ -65,7 +68,7 @@ pub mod prelude {
     pub use crate::s3sim::S3;
     pub use crate::shuffle::{
         JobReport, ShuffleJob, ShuffleStrategy, SimpleShuffle, StageTiming,
-        TwoStageMerge,
+        StreamingShuffle, TwoStageMerge,
     };
     pub use crate::sim::SimConfig;
     pub use crate::sortlib::{Record, RECORD_SIZE};

@@ -96,7 +96,7 @@ COMMANDS:
   sort   run a scaled shuffle job end-to-end on the in-process cluster
            --size 256MiB       dataset size (default 64MiB)
            --workers 4         worker nodes (default 4)
-           --strategy NAME     shuffle strategy (default two-stage-merge)
+           --strategy NAME     two-stage-merge | simple | streaming
            --list-strategies   print registered strategies and exit
            --backend xla|native (default: xla in pjrt builds, else native)
            --artifacts DIR     artifact dir (default ./artifacts)
@@ -250,6 +250,39 @@ fn cmd_sort(flags: &HashMap<String, String>) -> anyhow::Result<()> {
                 durs.iter().sum::<f64>(),
                 hi - lo,
                 exoshuffle::util::stats::mean(&durs),
+            );
+        }
+        // pipelining visibility: wall time two stage families overlap
+        // (≈0 under a stage barrier, > 0 under --strategy streaming)
+        for (a, b) in [("map", "merge"), ("merge", "reduce"), ("map", "reduce")]
+        {
+            println!(
+                "  overlap {a:>6}/{b:<7} {:>8.2}s",
+                exoshuffle::metrics::overlap_secs(&report.events, a, b)
+            );
+        }
+        // timelines cover the timed sort only — gen/validate are untimed
+        let sort_events: Vec<_> = report
+            .events
+            .iter()
+            .filter(|e| {
+                ["map-", "merge-", "reduce-"]
+                    .iter()
+                    .any(|p| e.name.starts_with(p))
+            })
+            .cloned()
+            .collect();
+        let timelines = exoshuffle::metrics::per_node_timelines(
+            &sort_events,
+            spec.n_workers(),
+        );
+        for t in &timelines {
+            println!(
+                "  node {:<2} busy={:>8.2}s util={:>5.1}% retries={}",
+                t.node,
+                t.busy_secs(),
+                t.utilization() * 100.0,
+                t.retried_attempts(),
             );
         }
     }

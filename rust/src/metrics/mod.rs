@@ -1,9 +1,13 @@
-//! Metrics: task execution logs, resource-utilization timeseries, and the
-//! Figure 1 report (median/min/max utilization bands across worker nodes).
+//! Metrics: task execution logs, resource-utilization timeseries,
+//! per-node execution timelines with stage-overlap measures
+//! ([`timeline`]), and the Figure 1 report (median/min/max utilization
+//! bands across worker nodes).
 
+pub mod timeline;
 pub mod timeseries;
 pub mod utilization;
 
+pub use timeline::{overlap_secs, per_node_timelines, NodeTimeline};
 pub use timeseries::Timeseries;
 pub use utilization::{UtilizationReport, UtilizationSample};
 
@@ -19,6 +23,9 @@ pub struct TaskEvent {
     pub start: f64,
     pub end: f64,
     pub ok: bool,
+    /// 0 for a first execution, incremented per retry — utilization
+    /// reports can tell recovery work from first-attempt work.
+    pub attempt: u32,
 }
 
 impl TaskEvent {
@@ -64,6 +71,7 @@ mod tests {
             start,
             end,
             ok: true,
+            attempt: 0,
         }
     }
 

@@ -1,0 +1,192 @@
+//! Per-node execution timelines and stage-overlap measures.
+//!
+//! The event-driven runtime pipelines stages that the barriered
+//! strategies serialize; this module makes that visible in reports. The
+//! key measure is [`overlap_secs`]: the wall time during which two task
+//! families (e.g. "merge" and "reduce") both have an attempt running.
+//! Under a hard stage barrier it is ~0; under a streaming topology it is
+//! the pipelining win. [`NodeTimeline`] gives the per-node view — busy
+//! time, span, utilization and retry (recovery) work, using the
+//! per-attempt numbers now carried on [`TaskEvent`].
+
+use crate::metrics::TaskEvent;
+
+/// Merged busy intervals (sorted, non-overlapping) of all events whose
+/// name starts with `prefix`.
+pub fn family_intervals(events: &[TaskEvent], prefix: &str) -> Vec<(f64, f64)> {
+    let mut iv: Vec<(f64, f64)> = events
+        .iter()
+        .filter(|e| e.name.starts_with(prefix))
+        .map(|e| (e.start, e.end))
+        .collect();
+    iv.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut merged: Vec<(f64, f64)> = Vec::new();
+    for (s, e) in iv {
+        match merged.last_mut() {
+            Some(last) if s <= last.1 => last.1 = last.1.max(e),
+            _ => merged.push((s, e)),
+        }
+    }
+    merged
+}
+
+/// Seconds during which families `a` and `b` both have at least one task
+/// running — the pipelining visibility measure (0 under a stage barrier).
+pub fn overlap_secs(events: &[TaskEvent], a: &str, b: &str) -> f64 {
+    let (ia, ib) = (family_intervals(events, a), family_intervals(events, b));
+    let (mut i, mut j) = (0, 0);
+    let mut total = 0.0;
+    while i < ia.len() && j < ib.len() {
+        let lo = ia[i].0.max(ib[j].0);
+        let hi = ia[i].1.min(ib[j].1);
+        if hi > lo {
+            total += hi - lo;
+        }
+        if ia[i].1 <= ib[j].1 {
+            i += 1;
+        } else {
+            j += 1;
+        }
+    }
+    total
+}
+
+/// One node's executed attempts in start order.
+#[derive(Clone, Debug, Default)]
+pub struct NodeTimeline {
+    pub node: usize,
+    /// This node's attempts, sorted by start time.
+    pub events: Vec<TaskEvent>,
+}
+
+impl NodeTimeline {
+    /// Wall seconds with at least one task running on this node.
+    pub fn busy_secs(&self) -> f64 {
+        family_intervals(&self.events, "")
+            .iter()
+            .map(|(s, e)| e - s)
+            .sum()
+    }
+
+    /// First start to last end.
+    pub fn span_secs(&self) -> f64 {
+        let lo = self.events.iter().map(|e| e.start).fold(f64::INFINITY, f64::min);
+        let hi = self.events.iter().map(|e| e.end).fold(0.0f64, f64::max);
+        (hi - lo).max(0.0)
+    }
+
+    /// Busy fraction of the span (wall-clock occupancy; slot-count
+    /// agnostic — use [`crate::metrics::busy_slots_timeseries`] for
+    /// slot-weighted utilization).
+    pub fn utilization(&self) -> f64 {
+        let span = self.span_secs();
+        if span > 0.0 {
+            self.busy_secs() / span
+        } else {
+            0.0
+        }
+    }
+
+    /// Attempts that were retries (recovery work, not first executions).
+    pub fn retried_attempts(&self) -> usize {
+        self.events.iter().filter(|e| e.attempt > 0).count()
+    }
+}
+
+/// Split a task log into per-node timelines (events sorted by start).
+pub fn per_node_timelines(events: &[TaskEvent], n_nodes: usize) -> Vec<NodeTimeline> {
+    let mut nodes: Vec<NodeTimeline> = (0..n_nodes)
+        .map(|node| NodeTimeline {
+            node,
+            events: Vec::new(),
+        })
+        .collect();
+    for e in events {
+        if e.node < n_nodes {
+            nodes[e.node].events.push(e.clone());
+        }
+    }
+    for n in &mut nodes {
+        n.events
+            .sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+    }
+    nodes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(name: &str, node: usize, start: f64, end: f64, attempt: u32) -> TaskEvent {
+        TaskEvent {
+            name: name.into(),
+            node,
+            start,
+            end,
+            ok: true,
+            attempt,
+        }
+    }
+
+    #[test]
+    fn family_intervals_merge_overlaps() {
+        let events = vec![
+            ev("map-1", 0, 0.0, 2.0, 0),
+            ev("map-2", 1, 1.0, 3.0, 0),
+            ev("map-3", 0, 5.0, 6.0, 0),
+            ev("merge-1", 0, 2.5, 4.0, 0),
+        ];
+        let iv = family_intervals(&events, "map");
+        assert_eq!(iv, vec![(0.0, 3.0), (5.0, 6.0)]);
+    }
+
+    #[test]
+    fn overlap_is_zero_under_a_barrier() {
+        let events = vec![
+            ev("map-1", 0, 0.0, 2.0, 0),
+            ev("map-2", 1, 1.0, 3.0, 0),
+            ev("reduce-1", 0, 3.0, 5.0, 0),
+            ev("reduce-2", 1, 4.0, 6.0, 0),
+        ];
+        assert_eq!(overlap_secs(&events, "map", "reduce"), 0.0);
+    }
+
+    #[test]
+    fn overlap_measures_pipelined_stages() {
+        let events = vec![
+            ev("map-1", 0, 0.0, 4.0, 0),
+            ev("reduce-1", 1, 2.0, 3.0, 0),
+            ev("reduce-2", 1, 3.5, 6.0, 0),
+        ];
+        // [2,3] and [3.5,4] overlap the map interval
+        let o = overlap_secs(&events, "map", "reduce");
+        assert!((o - 1.5).abs() < 1e-12, "{o}");
+        // symmetric
+        assert_eq!(o, overlap_secs(&events, "reduce", "map"));
+    }
+
+    #[test]
+    fn node_timeline_busy_span_and_retries() {
+        let events = vec![
+            ev("map-1", 0, 0.0, 2.0, 0),
+            ev("map-1", 0, 2.0, 4.0, 1), // retry attempt
+            ev("map-2", 1, 0.0, 1.0, 0),
+        ];
+        let nodes = per_node_timelines(&events, 2);
+        assert_eq!(nodes.len(), 2);
+        assert_eq!(nodes[0].events.len(), 2);
+        assert!((nodes[0].busy_secs() - 4.0).abs() < 1e-12);
+        assert!((nodes[0].span_secs() - 4.0).abs() < 1e-12);
+        assert!((nodes[0].utilization() - 1.0).abs() < 1e-12);
+        assert_eq!(nodes[0].retried_attempts(), 1);
+        assert_eq!(nodes[1].retried_attempts(), 0);
+    }
+
+    #[test]
+    fn empty_timeline_is_well_defined() {
+        let nodes = per_node_timelines(&[], 1);
+        assert_eq!(nodes[0].busy_secs(), 0.0);
+        assert_eq!(nodes[0].span_secs(), 0.0);
+        assert_eq!(nodes[0].utilization(), 0.0);
+    }
+}

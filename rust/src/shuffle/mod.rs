@@ -8,8 +8,10 @@
 //! which backpressure policy. The CloudSort reproduction is just one
 //! strategy ([`TwoStageMerge`], the paper's §2.3 pre-shuffle-merge
 //! design); the Exoshuffle baseline ([`SimpleShuffle`], straight
-//! map → reduce) is another, and push-based or streaming variants slot in
-//! the same way.
+//! map → reduce) is another; [`StreamingShuffle`] submits the whole
+//! map → merge → reduce DAG up front as chained futures, with zero
+//! driver-side barriers — pipelining falls out of the event-driven
+//! runtime, not the strategy.
 //!
 //! ```no_run
 //! use exoshuffle::prelude::*;
@@ -28,6 +30,7 @@
 
 pub mod report;
 pub mod simple;
+pub mod streaming;
 pub mod two_stage;
 
 use std::sync::Arc;
@@ -37,6 +40,7 @@ use anyhow::anyhow;
 
 pub use report::{JobReport, StageTiming, ValidationReport};
 pub use simple::SimpleShuffle;
+pub use streaming::StreamingShuffle;
 pub use two_stage::TwoStageMerge;
 
 use crate::coordinator::plan::JobSpec;
@@ -48,12 +52,14 @@ use crate::s3sim::S3;
 /// Everything a strategy needs to drive its stages: the job plan, the
 /// object store standing in for S3, the compute backend, and the
 /// distributed-futures runtime it submits tasks to. Strategies own the
-/// control plane; `cx.rt` is the data plane (§2.1).
+/// control plane; `cx.rt` is the data plane (§2.1). The runtime is
+/// handed out as an `Arc` so strategies can park readiness callbacks
+/// (e.g. merge controllers) that outlive the current stack frame.
 pub struct ShuffleContext<'a> {
     pub spec: &'a JobSpec,
     pub s3: &'a S3,
     pub backend: &'a Backend,
-    pub rt: &'a Runtime,
+    pub rt: &'a Arc<Runtime>,
 }
 
 /// What a strategy hands back after its timed stages complete.
@@ -122,6 +128,29 @@ impl StageClock {
     }
 }
 
+/// Pre-compile the kernel shapes of the merge-based topologies (map
+/// sort+partition at worker granularity, threshold-wide merges, and the
+/// merged-batch reduce). Shared by [`TwoStageMerge`] and
+/// [`StreamingShuffle`], which run the same task bodies.
+pub(crate) fn warmup_merge_topology(
+    spec: &JobSpec,
+    backend: &Backend,
+) -> anyhow::Result<()> {
+    let rpp = spec.records_per_partition() as usize;
+    let slice = rpp / spec.n_workers().max(1);
+    let merges_per_node = spec.merge_batches_per_node();
+    let reduce_run = (spec.total_records() as usize
+        / spec.n_output_partitions.max(1))
+        / merges_per_node.max(1);
+    crate::runtime::warmup(
+        backend,
+        rpp,
+        spec.merge_threshold_blocks.min(spec.n_input_partitions),
+        slice.max(2),
+    )?;
+    crate::runtime::warmup(backend, 2, merges_per_node, reduce_run.max(2))
+}
+
 /// Look up a strategy by registry name (accepts the aliases the CLI
 /// documents). `None` for unknown names.
 pub fn strategy_by_name(name: &str) -> Option<Arc<dyn ShuffleStrategy>> {
@@ -130,13 +159,18 @@ pub fn strategy_by_name(name: &str) -> Option<Arc<dyn ShuffleStrategy>> {
             Some(Arc::new(TwoStageMerge))
         }
         "simple" | "simple-shuffle" => Some(Arc::new(SimpleShuffle)),
+        "streaming" | "streaming-shuffle" => Some(Arc::new(StreamingShuffle)),
         _ => None,
     }
 }
 
 /// All registered strategies, for `--list-strategies` and tests.
 pub fn list_strategies() -> Vec<Arc<dyn ShuffleStrategy>> {
-    vec![Arc::new(TwoStageMerge), Arc::new(SimpleShuffle)]
+    vec![
+        Arc::new(TwoStageMerge),
+        Arc::new(SimpleShuffle),
+        Arc::new(StreamingShuffle),
+    ]
 }
 
 /// Builder for a full shuffle run: generate → shuffle (strategy-owned
@@ -200,6 +234,7 @@ impl ShuffleJob {
             slots_per_node: spec.cluster.task_parallelism().max(1),
             store_capacity_per_node: spec.store_capacity_per_node,
             spill_root: std::env::temp_dir(),
+            ..RuntimeOptions::default()
         });
 
         // --- input generation (§3.2), not part of the timed sort ---
@@ -278,6 +313,9 @@ mod tests {
         }
         for name in ["simple", "simple-shuffle"] {
             assert_eq!(strategy_by_name(name).unwrap().name(), "simple");
+        }
+        for name in ["streaming", "streaming-shuffle"] {
+            assert_eq!(strategy_by_name(name).unwrap().name(), "streaming");
         }
         assert!(strategy_by_name("push-based").is_none());
     }

@@ -1,0 +1,166 @@
+//! Fully-pipelined streaming shuffle: the **entire** map → merge → reduce
+//! DAG is submitted up front as chained distributed futures.
+//!
+//! This is the topology the event-driven runtime makes possible (the
+//! Exoshuffle thesis in its purest form): merge batches are fixed ahead
+//! of time — batch *b* on worker *w* merges block *w* of maps
+//! `[b·T, (b+1)·T)` — so every merge can be submitted before any map has
+//! produced a byte, with map output futures as its arguments; every
+//! reduce is submitted with merge output futures as *its* arguments. No
+//! `wait_quiescent`, no driver poll loop, no stage barrier: a reduce on
+//! worker *w* starts the moment *w*'s last merge commits, while other
+//! workers are still mapping or merging. Sequencing, locality and memory
+//! backpressure all come from the runtime — readiness dispatch orders the
+//! stages, and scheduler admission control (not a merge controller)
+//! bounds residency.
+//!
+//! Compared to [`crate::shuffle::TwoStageMerge`]: same task bodies, same
+//! merge fan-in cap, byte-identical output — but static batching instead
+//! of arrival-order batching, and stage overlap instead of a driver
+//! barrier between map_shuffle and reduce.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use anyhow::Context;
+
+use crate::coordinator::plan::JobSpec;
+use crate::coordinator::tasks;
+use crate::distfut::{future, ObjectRef, TaskHandle};
+use crate::runtime::Backend;
+use crate::shuffle::{ShuffleContext, ShuffleOutcome, ShuffleStrategy, StageClock};
+
+/// Whole-DAG-up-front topology (map → merge → reduce as chained futures).
+pub struct StreamingShuffle;
+
+impl ShuffleStrategy for StreamingShuffle {
+    fn name(&self) -> &'static str {
+        "streaming"
+    }
+
+    fn describe(&self) -> &'static str {
+        "fully-pipelined map -> merge -> reduce: the whole DAG is \
+         submitted up front as chained futures; stages overlap through \
+         readiness scheduling (no driver barriers)"
+    }
+
+    fn stage_names(&self) -> &'static [&'static str] {
+        // one fused stage: there are no driver-visible stage boundaries
+        &["streaming"]
+    }
+
+    fn warmup(&self, spec: &JobSpec, backend: &Backend) -> anyhow::Result<()> {
+        // same kernel shapes as the two-stage strategy (same task bodies)
+        crate::shuffle::warmup_merge_topology(spec, backend)
+    }
+
+    fn run_stages(&self, cx: &ShuffleContext) -> anyhow::Result<ShuffleOutcome> {
+        let spec = cx.spec;
+        let w = spec.n_workers();
+        let r1 = spec.reducers_per_worker();
+        let m = spec.n_input_partitions;
+        let threshold = spec.merge_threshold_blocks.max(1);
+        let n_batches = spec.merge_batches_per_node();
+        let worker_cuts = Arc::new(spec.worker_cuts());
+        let mut clock = StageClock::start();
+
+        // --- submit every map ---
+        let mut map_blocks: Vec<Vec<ObjectRef>> = Vec::with_capacity(m);
+        let mut map_handles: Vec<TaskHandle> = Vec::with_capacity(m);
+        for p in 0..m {
+            let (outs, h) = cx.rt.submit(tasks::map_task(
+                spec,
+                cx.s3,
+                cx.backend,
+                worker_cuts.clone(),
+                p,
+            ));
+            map_blocks.push(outs);
+            map_handles.push(h);
+        }
+
+        // --- chain every merge against its map-block futures ---
+        // Peak-unmerged gauge via readiness callbacks: +1 per block whose
+        // data lands, −batch when the covering merge's outputs land (a
+        // block always commits before its merge can run, so the gauge
+        // never underflows). Note the semantics: this counts *resident*
+        // unmerged blocks only. The two-stage controllers' backlog also
+        // counts routed-but-unproduced blocks (their in-flight maps), so
+        // when comparing peak_unmerged_blocks across strategies, this is
+        // the memory-exposure lower bound, not an identical quantity —
+        // counting routed blocks here would trivially read M, since the
+        // whole DAG is routed up front.
+        let gauges: Vec<Arc<AtomicUsize>> =
+            (0..w).map(|_| Arc::new(AtomicUsize::new(0))).collect();
+        let peak = Arc::new(AtomicUsize::new(0));
+        let mut merged: Vec<Vec<Vec<ObjectRef>>> = Vec::with_capacity(w);
+        let mut merge_handles: Vec<TaskHandle> =
+            Vec::with_capacity(w * n_batches);
+        for node in 0..w {
+            let mut batches: Vec<Vec<ObjectRef>> = Vec::with_capacity(n_batches);
+            for b in 0..n_batches {
+                let lo = b * threshold;
+                let hi = ((b + 1) * threshold).min(m);
+                let blocks: Vec<ObjectRef> = map_blocks[lo..hi]
+                    .iter()
+                    .map(|outs| outs[node].clone())
+                    .collect();
+                for block in &blocks {
+                    let g = gauges[node].clone();
+                    let pk = peak.clone();
+                    cx.rt.on_ready(block, move || {
+                        let v = g.fetch_add(1, Ordering::Relaxed) + 1;
+                        pk.fetch_max(v, Ordering::Relaxed);
+                    });
+                }
+                let batch_len = blocks.len();
+                let (outs, h) = cx.rt.submit(tasks::merge_task(
+                    spec, cx.backend, node, b, blocks,
+                ));
+                let g = gauges[node].clone();
+                cx.rt.on_ready(&outs[0], move || {
+                    g.fetch_sub(batch_len, Ordering::Relaxed);
+                });
+                batches.push(outs);
+                merge_handles.push(h);
+            }
+            merged.push(batches);
+        }
+        drop(map_blocks); // merge specs hold the only remaining block refs
+
+        // --- chain every reduce against its merge-output futures ---
+        let mut reduce_handles: Vec<TaskHandle> =
+            Vec::with_capacity(spec.n_output_partitions);
+        for (node, batches) in merged.iter().enumerate() {
+            for j in 0..r1 {
+                let global_r = node * r1 + j;
+                let blocks: Vec<ObjectRef> =
+                    batches.iter().map(|batch| batch[j].clone()).collect();
+                let (_outs, h) = cx.rt.submit(tasks::reduce_task(
+                    spec, cx.s3, cx.backend, node, global_r, blocks,
+                ));
+                reduce_handles.push(h);
+            }
+        }
+        drop(merged); // reduce specs hold the only remaining merged refs
+
+        // the only join in the strategy: the DAG's sinks. On failure,
+        // probe upstream handles so the error names the root cause
+        // instead of a cascaded "object released".
+        if let Err(sink_err) = future::wait_all(&reduce_handles) {
+            future::wait_all(&map_handles).context("streaming shuffle (map)")?;
+            future::wait_all(&merge_handles)
+                .context("streaming shuffle (merge)")?;
+            return Err(sink_err).context("streaming shuffle (reduce)");
+        }
+        clock.lap("streaming");
+
+        Ok(ShuffleOutcome {
+            stages: clock.into_stages(),
+            n_map_tasks: m,
+            n_merge_tasks: w * n_batches,
+            n_reduce_tasks: reduce_handles.len(),
+            peak_unmerged_blocks: peak.load(Ordering::Relaxed),
+        })
+    }
+}

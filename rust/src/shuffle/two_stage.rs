@@ -20,6 +20,12 @@ use crate::runtime::Backend;
 use crate::s3sim::S3;
 use crate::shuffle::{ShuffleContext, ShuffleOutcome, ShuffleStrategy, StageClock};
 
+/// Driver-side admission poll interval: how often the map-submission
+/// loop re-checks the backpressure predicate. Only map *admission* polls
+/// (as the paper's driver does); block promotion and merge launching are
+/// event-driven inside [`MergeController`].
+const ADMISSION_POLL: std::time::Duration = std::time::Duration::from_micros(500);
+
 /// The paper's pre-shuffle-merge topology (default strategy).
 pub struct TwoStageMerge;
 
@@ -38,22 +44,7 @@ impl ShuffleStrategy for TwoStageMerge {
     }
 
     fn warmup(&self, spec: &JobSpec, backend: &Backend) -> anyhow::Result<()> {
-        let rpp = spec.records_per_partition() as usize;
-        let slice = rpp / spec.n_workers().max(1);
-        let merges_per_node = crate::util::div_ceil(
-            spec.n_input_partitions as u64,
-            spec.merge_threshold_blocks as u64,
-        ) as usize;
-        let reduce_run = (spec.total_records() as usize
-            / spec.n_output_partitions.max(1))
-            / merges_per_node.max(1);
-        crate::runtime::warmup(
-            backend,
-            rpp,
-            spec.merge_threshold_blocks.min(spec.n_input_partitions),
-            slice.max(2),
-        )?;
-        crate::runtime::warmup(backend, 2, merges_per_node, reduce_run.max(2))
+        crate::shuffle::warmup_merge_topology(spec, backend)
     }
 
     fn run_stages(&self, cx: &ShuffleContext) -> anyhow::Result<ShuffleOutcome> {
@@ -67,7 +58,7 @@ impl ShuffleStrategy for TwoStageMerge {
             controllers.iter().map(|c| c.merges_launched()).sum();
         let peak_unmerged_blocks = controllers
             .iter()
-            .map(|c| c.peak_backlog)
+            .map(|c| c.peak_backlog())
             .max()
             .unwrap_or(0);
 
@@ -87,26 +78,28 @@ impl ShuffleStrategy for TwoStageMerge {
 }
 
 /// Stage 1: the map & shuffle loop. Submits map tasks respecting merge
-/// backpressure, routes map output futures to per-worker merge
-/// controllers, and returns the controllers once every map and merge has
-/// completed.
+/// backpressure and routes map output futures to per-worker merge
+/// controllers, whose readiness callbacks buffer blocks and launch
+/// merges as the data lands — the driver only throttles map admission.
+/// Returns the controllers once every map and merge has completed.
 fn map_shuffle_stage(
     spec: &JobSpec,
     s3: &S3,
     backend: &Backend,
-    rt: &Runtime,
+    rt: &Arc<Runtime>,
 ) -> anyhow::Result<Vec<MergeController>> {
     let w = spec.n_workers();
     let worker_cuts = Arc::new(spec.worker_cuts());
     let backend2 = backend.clone();
     let spec2 = spec.clone();
-    let mut controllers: Vec<MergeController> = (0..w)
+    let controllers: Vec<MergeController> = (0..w)
         .map(|node| {
             let backend = backend2.clone();
             let spec = spec2.clone();
             MergeController::new(
                 node,
                 spec2.merge_threshold_blocks,
+                rt,
                 Arc::new(move |node, batch, blocks| {
                     tasks::merge_task(&spec, &backend, node, batch, blocks)
                 }),
@@ -116,51 +109,41 @@ fn map_shuffle_stage(
 
     let mut map_handles: Vec<TaskHandle> =
         Vec::with_capacity(spec.n_input_partitions);
+    let backlog_limit = spec.max_buffered_blocks.max(1);
+    let merge_parallelism = spec.cluster.task_parallelism().max(1);
     let mut next_map = 0usize;
-    loop {
+    while next_map < spec.n_input_partitions {
         // submit maps while backpressure allows (paper: the driver queues
-        // extra tasks and feeds nodes as they free up; our Any-queue does
-        // the feeding, this loop does the admission control)
-        let backlog_limit = spec.max_buffered_blocks.max(1);
-        let merge_parallelism = spec.cluster.task_parallelism().max(1);
-        while next_map < spec.n_input_partitions {
-            let blocked = spec.backpressure
-                && controllers
-                    .iter()
-                    .any(|c| c.saturated(merge_parallelism, backlog_limit));
-            // admission is also bounded by total slots to keep the driver
-            // queue (not the runtime queue) the place where tasks wait
-            let in_flight = future::pending_count(&map_handles);
-            if blocked || in_flight >= spec.cluster.total_slots() * 2 {
-                break;
-            }
-            let (outs, h) = rt.submit(tasks::map_task(
-                spec,
-                s3,
-                backend,
-                worker_cuts.clone(),
-                next_map,
-            ));
-            for (node, block) in outs.into_iter().enumerate() {
-                controllers[node].on_map_block(block);
-            }
-            map_handles.push(h);
-            next_map += 1;
+        // extra tasks and feeds nodes as they free up; the runtime's
+        // shared queue does the feeding, this loop does admission control)
+        let blocked = spec.backpressure
+            && controllers
+                .iter()
+                .any(|c| c.saturated(merge_parallelism, backlog_limit));
+        // admission is also bounded by total slots to keep the driver
+        // queue (not the runtime queue) the place where tasks wait
+        let in_flight = future::pending_count(&map_handles);
+        if blocked || in_flight >= spec.cluster.total_slots() * 2 {
+            std::thread::sleep(ADMISSION_POLL);
+            continue;
         }
-        for c in controllers.iter_mut() {
-            c.poll(rt);
+        let (outs, h) = rt.submit(tasks::map_task(
+            spec,
+            s3,
+            backend,
+            worker_cuts.clone(),
+            next_map,
+        ));
+        for (node, block) in outs.into_iter().enumerate() {
+            controllers[node].on_map_block(block);
         }
-        if next_map == spec.n_input_partitions
-            && map_handles.iter().all(|h| h.is_done())
-        {
-            break;
-        }
-        std::thread::sleep(std::time::Duration::from_micros(500));
+        map_handles.push(h);
+        next_map += 1;
     }
     future::wait_all(&map_handles).context("map stage")?;
     // tail merges + barrier: "once all map and merge tasks finish" (§2.3)
-    for c in controllers.iter_mut() {
-        c.flush(rt);
+    for c in &controllers {
+        c.flush();
     }
     for c in &controllers {
         c.wait_all().context("merge stage")?;
@@ -181,13 +164,11 @@ fn reduce_stage(
     let r1 = spec.reducers_per_worker();
     let mut handles = Vec::with_capacity(spec.n_output_partitions);
     for c in &controllers {
+        let merged = c.merged_outputs();
         for j in 0..r1 {
             let global_r = c.node * r1 + j;
-            let blocks: Vec<_> = c
-                .merged_outputs
-                .iter()
-                .map(|batch| batch[j].clone())
-                .collect();
+            let blocks: Vec<_> =
+                merged.iter().map(|batch| batch[j].clone()).collect();
             let (_outs, h) = rt.submit(tasks::reduce_task(
                 spec, s3, backend, c.node, global_r, blocks,
             ));

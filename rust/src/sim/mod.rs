@@ -38,6 +38,12 @@ pub enum SimStrategy {
     /// block from each of the M maps and pays per-block request overhead
     /// M times — the scaling wall the two-stage design removes.
     SimpleShuffle,
+    /// The fully-pipelined topology: the whole map→merge→reduce DAG is
+    /// chained through futures with no stage barrier — a node's reduces
+    /// start the moment its own merges finish, while other nodes are
+    /// still merging, and map admission is not backpressured (memory is
+    /// the runtime's problem, not the strategy's).
+    Streaming,
 }
 
 impl SimStrategy {
@@ -46,6 +52,7 @@ impl SimStrategy {
         match self {
             SimStrategy::TwoStageMerge => "two-stage-merge",
             SimStrategy::SimpleShuffle => "simple",
+            SimStrategy::Streaming => "streaming",
         }
     }
 
@@ -57,6 +64,7 @@ impl SimStrategy {
         match crate::shuffle::strategy_by_name(name)?.name() {
             "two-stage-merge" => Some(SimStrategy::TwoStageMerge),
             "simple" => Some(SimStrategy::SimpleShuffle),
+            "streaming" => Some(SimStrategy::Streaming),
             _ => None,
         }
     }
@@ -181,6 +189,9 @@ struct Sim<'a> {
     merges_total_launched: usize,
     merge_slots_free: Vec<usize>,
     merge_queue: Vec<VecDeque<usize>>, // queued merge batch sizes per node
+    // streaming topology: per-node merge progress gates that node's reduces
+    merges_done_node: Vec<usize>,
+    last_merge_end: f64,
     // reduce stage
     reduce_slots_free: Vec<usize>,
     reduce_queue: Vec<usize>,
@@ -230,6 +241,8 @@ pub fn simulate(cfg: &SimConfig) -> SimResult {
         merges_total_launched: 0,
         merge_slots_free: vec![par; w],
         merge_queue: vec![VecDeque::new(); w],
+        merges_done_node: vec![0; w],
+        last_merge_end: 0.0,
         reduce_slots_free: vec![cfg.rates.reduce_slots; w],
         reduce_queue: vec![0; w],
         reduces_done: 0,
@@ -256,7 +269,10 @@ fn estimate_horizon(cfg: &SimConfig) -> f64 {
 
 impl<'a> Sim<'a> {
     fn run(mut self) -> SimResult {
-        let spec = &self.cfg.spec;
+        if self.cfg.strategy == SimStrategy::Streaming {
+            return self.run_streaming();
+        }
+        let spec = self.cfg.spec.clone();
         // --- stage 1: map & shuffle ---
         self.admit_maps();
         let mut map_shuffle_end = 0.0;
@@ -293,8 +309,40 @@ impl<'a> Sim<'a> {
             "simulation stalled in reduce"
         );
         let reduce_end = self.clock;
+        self.finish(map_shuffle_end, reduce_end)
+    }
 
-        // --- assemble result ---
+    /// The pipelined topology: one event loop, no stage barrier. Reduces
+    /// for a node are enqueued by that node's last merge completion (see
+    /// `step_task`); "map&shuffle" is reported as the span up to the last
+    /// merge, the pipelined reduce tail as the remainder.
+    ///
+    /// Slot accounting note: map/merge/reduce draw from separate slot
+    /// pools, but same-node stage overlap still cannot occur — a node's
+    /// last merge (the tail flush) only launches once *every* map is
+    /// globally done, so by the time a node's reduces start, its map and
+    /// merge pools are idle for good. The overlap streaming buys is
+    /// strictly *inter*-node (node n reduces while node m finishes its
+    /// merge tail), and those contend on separate per-node resources.
+    fn run_streaming(mut self) -> SimResult {
+        let spec = self.cfg.spec.clone();
+        self.admit_maps();
+        while let Some(Reverse((OrdF64(t), tid))) = self.queue.pop() {
+            self.clock = t;
+            self.step_task(tid);
+        }
+        assert_eq!(
+            self.reduces_done, spec.n_output_partitions,
+            "streaming simulation stalled"
+        );
+        let reduce_end = self.clock;
+        let map_shuffle_end = self.last_merge_end;
+        self.finish(map_shuffle_end, reduce_end)
+    }
+
+    /// Assemble the result (Table 1 row + Figure 1 inputs).
+    fn finish(self, map_shuffle_end: f64, reduce_end: f64) -> SimResult {
+        let spec = &self.cfg.spec;
         let per_in = spec.records_per_partition()
             * crate::sortlib::RECORD_SIZE as u64;
         let out_bytes = spec.total_bytes / spec.n_output_partitions as u64;
@@ -351,6 +399,9 @@ impl<'a> Sim<'a> {
                         .zip(&self.blocks_inflight_merge)
                         .all(|(b, i)| *b == 0 && *i == 0)
                     && self.merge_queue.iter().all(|q| q.is_empty())
+            }
+            SimStrategy::Streaming => {
+                unreachable!("streaming runs a single barrier-free loop")
             }
         }
     }
@@ -455,10 +506,11 @@ impl<'a> Sim<'a> {
         let bytes = spec.total_bytes / spec.n_output_partitions as u64;
         // reduce fan-in: one block per map under simple shuffle (each
         // paying per-block fetch overhead); merged batches under the
-        // two-stage design (fan-in folded into the merge stage).
+        // two-stage and streaming designs (fan-in folded into the merge
+        // stage).
         let fan_in = match self.cfg.strategy {
             SimStrategy::SimpleShuffle => spec.n_input_partitions,
-            SimStrategy::TwoStageMerge => 0,
+            SimStrategy::TwoStageMerge | SimStrategy::Streaming => 0,
         };
         while self.reduce_queue[node] > 0 && self.reduce_slots_free[node] > 0 {
             self.reduce_queue[node] -= 1;
@@ -665,6 +717,7 @@ impl<'a> Sim<'a> {
             start: t.start,
             end: self.clock,
             ok: true,
+            attempt: 0,
         });
         match t.kind {
             Kind::Map => {
@@ -678,12 +731,16 @@ impl<'a> Sim<'a> {
                     start: t.start + t.download_secs,
                     end: self.clock,
                     ok: true,
+                    attempt: 0,
                 });
                 for n in 0..self.cfg.spec.n_workers() {
                     self.blocks_buffered[n] += 1;
                 }
                 match self.cfg.strategy {
-                    SimStrategy::TwoStageMerge => {
+                    // streaming launches merges exactly like two-stage
+                    // (threshold batches + tail flush); only the reduce
+                    // gating and map backpressure differ
+                    SimStrategy::TwoStageMerge | SimStrategy::Streaming => {
                         for n in 0..self.cfg.spec.n_workers() {
                             self.poll_merge_controller(n);
                         }
@@ -703,11 +760,24 @@ impl<'a> Sim<'a> {
             }
             Kind::Merge => {
                 self.merges_done += 1;
+                self.merges_done_node[t.node] += 1;
+                self.last_merge_end = self.last_merge_end.max(self.clock);
                 self.merge_slots_free[t.node] += 1;
                 self.blocks_inflight_merge[t.node] = self
                     .blocks_inflight_merge[t.node]
                     .saturating_sub(t.blocks);
                 self.start_queued_merges(t.node);
+                // streaming: this node's reduces are gated only on its
+                // own merges — start them now, while other nodes are
+                // still mapping/merging (no global barrier)
+                if self.cfg.strategy == SimStrategy::Streaming
+                    && self.merges_done_node[t.node]
+                        == self.cfg.spec.merge_batches_per_node()
+                {
+                    self.reduce_queue[t.node] =
+                        self.cfg.spec.reducers_per_worker();
+                    self.start_queued_reduces(t.node);
+                }
                 self.admit_maps();
             }
             Kind::Reduce => {
@@ -828,7 +898,11 @@ mod tests {
 
     #[test]
     fn strategy_names_round_trip() {
-        for s in [SimStrategy::TwoStageMerge, SimStrategy::SimpleShuffle] {
+        for s in [
+            SimStrategy::TwoStageMerge,
+            SimStrategy::SimpleShuffle,
+            SimStrategy::Streaming,
+        ] {
             assert_eq!(SimStrategy::from_name(s.name()), Some(s));
         }
         // registry aliases resolve too (single name table)
@@ -840,7 +914,50 @@ mod tests {
             SimStrategy::from_name("simple-shuffle"),
             Some(SimStrategy::SimpleShuffle)
         );
+        assert_eq!(
+            SimStrategy::from_name("streaming-shuffle"),
+            Some(SimStrategy::Streaming)
+        );
         assert_eq!(SimStrategy::from_name("nope"), None);
+    }
+
+    #[test]
+    fn streaming_topology_completes_with_full_task_conservation() {
+        let mut cfg = small_cfg();
+        cfg.strategy = SimStrategy::Streaming;
+        let r = simulate(&cfg);
+        assert!(r.total_secs > 0.0);
+        assert!(r.map_shuffle_secs > 0.0 && r.reduce_secs > 0.0);
+        let count = |p: &str| {
+            r.events.iter().filter(|e| e.name.starts_with(p)).count()
+        };
+        assert_eq!(count("map-"), cfg.spec.n_input_partitions);
+        assert_eq!(count("reduce"), cfg.spec.n_output_partitions);
+        // per-node batches: ⌈M / threshold⌉ each
+        assert_eq!(
+            count("merge"),
+            cfg.spec.merge_batches_per_node() * cfg.spec.n_workers()
+        );
+    }
+
+    #[test]
+    fn streaming_pipelines_at_least_as_fast_as_the_barriered_run() {
+        // removing the map&shuffle → reduce barrier (and map admission
+        // backpressure) must not slow the job down; stragglers off so the
+        // comparison is deterministic
+        let mut cfg = small_cfg();
+        cfg.rates.tail_prob = 0.0;
+        cfg.strategy = SimStrategy::Streaming;
+        let streaming = simulate(&cfg);
+        let mut base = small_cfg();
+        base.rates.tail_prob = 0.0;
+        let two_stage = simulate(&base);
+        assert!(
+            streaming.total_secs <= two_stage.total_secs * 1.05,
+            "streaming {:.1}s vs two-stage {:.1}s",
+            streaming.total_secs,
+            two_stage.total_secs
+        );
     }
 
     #[test]

@@ -15,6 +15,7 @@ fn rt(nodes: usize, slots: usize, capacity: u64) -> Arc<Runtime> {
         slots_per_node: slots,
         store_capacity_per_node: capacity,
         spill_root: std::env::temp_dir(),
+        ..Default::default()
     })
 }
 
@@ -124,6 +125,55 @@ fn wide_fanout_under_spill_pressure() {
         assert!(buf.iter().all(|&b| b == i as u8), "object {i} corrupted");
     }
     assert!(rt.store_stats().restores > 0);
+}
+
+#[test]
+fn spill_restore_counters_and_byte_identity() {
+    // 16 × 8 KiB puts against a 32 KiB single-node budget: at least 12
+    // objects must spill, and every spill/restore must be fully
+    // accounted and byte-identical — including restores on the *task
+    // argument* path, not just driver gets.
+    const OBJ: usize = 8 << 10;
+    let rt = rt(1, 2, 32 << 10);
+    let refs: Vec<_> = (0..16u8).map(|i| rt.put(0, vec![i; OBJ])).collect();
+    let stats = rt.store_stats();
+    assert!(stats.spills >= 12, "expected forced spills: {stats:?}");
+    assert_eq!(
+        stats.spill_bytes,
+        stats.spills * OBJ as u64,
+        "every spilled object is {OBJ} bytes: {stats:?}"
+    );
+    assert!(stats.resident_bytes <= 32 << 10, "{stats:?}");
+
+    // restore through a task's argument resolution, verified in-task
+    let (_, h) = rt.submit(TaskSpec {
+        name: "verify-args".into(),
+        placement: Placement::Node(0),
+        func: task_fn(move |ctx| {
+            for (i, a) in ctx.args.iter().enumerate() {
+                if a.len() != OBJ || !a.iter().all(|&b| b == i as u8) {
+                    return Err(format!("object {i} corrupted after restore"));
+                }
+            }
+            Ok(vec![])
+        }),
+        args: refs.clone(),
+        num_returns: 0,
+        max_retries: 0,
+    });
+    h.wait().unwrap();
+
+    // driver-side restores are byte-identical too
+    for (i, r) in refs.iter().enumerate() {
+        assert_eq!(*rt.get(r).unwrap(), vec![i as u8; OBJ]);
+    }
+    let stats = rt.store_stats();
+    assert!(stats.restores >= stats.spills, "{stats:?}");
+    assert_eq!(
+        stats.restore_bytes,
+        stats.restores * OBJ as u64,
+        "every restored object is {OBJ} bytes: {stats:?}"
+    );
 }
 
 #[test]

@@ -57,20 +57,54 @@ fn strategies_produce_identical_validated_output() {
         .strategy(SimpleShuffle)
         .run()
         .unwrap();
+    let streaming = ShuffleJob::new(spec.clone())
+        .strategy(StreamingShuffle)
+        .run()
+        .unwrap();
     assert!(two_stage.validation.valid);
     assert!(simple.validation.valid);
+    assert!(streaming.validation.valid);
+    for other in [&simple, &streaming] {
+        assert_eq!(
+            two_stage.validation.summary.records,
+            other.validation.summary.records
+        );
+        assert_eq!(
+            two_stage.validation.summary.checksum,
+            other.validation.summary.checksum
+        );
+        assert_eq!(
+            two_stage.validation.summary.duplicates,
+            other.validation.summary.duplicates
+        );
+    }
+}
+
+/// The streaming strategy submits the whole DAG up front: same task
+/// structure as two-stage (threshold-sized merge batches per worker,
+/// one reduce per output partition), one fused stage, valid output.
+#[test]
+fn streaming_shuffle_submits_the_full_dag_without_barriers() {
+    let spec = JobSpec::scaled(4 << 20, 2);
+    let report = ShuffleJob::new(spec.clone())
+        .strategy(StreamingShuffle)
+        .backend(Backend::Native)
+        .run()
+        .unwrap();
+    assert!(report.validation.valid, "{:?}", report.validation);
+    assert_eq!(report.strategy, "streaming");
+    let stage_names: Vec<&str> =
+        report.stages.iter().map(|s| s.name.as_str()).collect();
+    assert_eq!(stage_names, ["streaming"], "no driver-visible stage split");
+    assert_eq!(report.n_map_tasks, spec.n_input_partitions);
     assert_eq!(
-        two_stage.validation.summary.records,
-        simple.validation.summary.records
+        report.n_merge_tasks,
+        spec.merge_batches_per_node() * spec.n_workers()
     );
-    assert_eq!(
-        two_stage.validation.summary.checksum,
-        simple.validation.summary.checksum
-    );
-    assert_eq!(
-        two_stage.validation.summary.duplicates,
-        simple.validation.summary.duplicates
-    );
+    assert_eq!(report.n_reduce_tasks, spec.n_output_partitions);
+    // merges really ran (events), and the exposure gauge saw blocks land
+    assert!(report.mean_task_secs("merge") > 0.0);
+    assert!(report.peak_unmerged_blocks >= 1);
 }
 
 #[test]
@@ -88,11 +122,12 @@ fn strategy_selection_by_registry_name() {
 }
 
 #[test]
-fn registry_lists_both_builtin_strategies() {
+fn registry_lists_all_builtin_strategies() {
     let names: Vec<&str> =
         list_strategies().iter().map(|s| s.name()).collect();
     assert!(names.contains(&"two-stage-merge"));
     assert!(names.contains(&"simple"));
+    assert!(names.contains(&"streaming"));
 }
 
 /// Stage timings must use the strategy-declared names, in order, sum to
