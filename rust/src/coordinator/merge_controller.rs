@@ -16,6 +16,12 @@
 //! at the threshold. The driver only reads the backpressure predicate
 //! ([`MergeController::saturated`]) in its map-admission loop; block
 //! promotion and merge launching never involve the driver.
+//!
+//! Node failure needs no controller-side handling: a buffered block whose
+//! data is lost to a kill stays referenced here, the scheduler holds the
+//! covering merge until the lineage re-execution recommits the block, and
+//! merges pinned to a dead node are rerouted by the runtime (their cut
+//! points travel in the task closure, so the output is identical).
 
 use std::sync::{Arc, Mutex, Weak};
 
@@ -277,6 +283,36 @@ mod tests {
         let mc = MergeController::new(0, 2, &rt, noop_factory(1));
         mc.flush();
         assert_eq!(mc.merges_launched(), 0);
+    }
+
+    #[test]
+    fn merges_survive_losing_a_buffered_block_to_a_node_kill() {
+        // blocks produced on node 1 are buffered by node 0's controller;
+        // killing node 1 loses their data mid-flow, and the tail merge
+        // must still complete through lineage re-execution
+        let rt = Runtime::new(RuntimeOptions::default());
+        let mc = MergeController::new(0, 10, &rt, noop_factory(1));
+        let mut handles = Vec::new();
+        for i in 0..3u8 {
+            let (outs, h) = rt.submit(TaskSpec {
+                name: format!("block-{i}"),
+                placement: Placement::Node(1),
+                func: task_fn(move |_| Ok(vec![vec![i; 64]])),
+                args: vec![],
+                num_returns: 1,
+                max_retries: 0,
+            });
+            mc.on_map_block(outs.into_iter().next().unwrap());
+            handles.push(h);
+        }
+        for h in handles {
+            h.wait().unwrap();
+        }
+        rt.kill_node(1).unwrap();
+        mc.flush();
+        assert_eq!(mc.merges_launched(), 1);
+        mc.wait_all().unwrap();
+        assert!(rt.recovery_stats().tasks_resubmitted >= 1);
     }
 
     #[test]

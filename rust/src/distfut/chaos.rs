@@ -1,0 +1,317 @@
+//! Deterministic chaos harness: seeded, reproducible fault events driven
+//! by the runtime's commit clock.
+//!
+//! The paper's resilience claim (§2.5) is that the distributed-futures
+//! runtime — not the shuffle — recovers from node and process failures.
+//! Testing that claim needs failures that strike *mid-run* at a
+//! reproducible point. Wall-clock timers cannot give that; the number of
+//! data-bearing commits can: a [`ChaosPlan`] triggers events "after the
+//! n-th commit observed since arming", so the same plan against the same
+//! request sequence injects the same failure set, and the byte-identity
+//! assertions in `rust/tests/chaos_recovery.rs` stay meaningful.
+//!
+//! Events:
+//! - [`ChaosEvent::KillNode`] — whole-node loss via
+//!   [`Runtime::kill_node`]: resident objects drop, queues drain, and
+//!   lineage re-execution rebuilds what consumers still need.
+//! - [`ChaosEvent::LoseTriggeringObject`] — drop exactly the object whose
+//!   commit tripped the trigger ([`Runtime::lose_object`]): a targeted
+//!   single-object loss.
+//!
+//! Transient S3 request failures remain the job of
+//! [`crate::s3sim::faults::FaultPlan`]; a chaos plan composes with it
+//! (kill a node *and* flake the object store in the same run).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, Weak};
+
+use crate::distfut::scheduler::Runtime;
+use crate::distfut::store::ObjectId;
+use crate::util::rng::stream_at;
+
+/// A failure to inject when a trigger fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChaosEvent {
+    /// Kill the given node: drop its resident objects, drain its queues,
+    /// re-execute lost lineage ([`Runtime::kill_node`]).
+    KillNode(usize),
+    /// Drop the data of the object whose commit fired the trigger
+    /// ([`Runtime::lose_object`]).
+    LoseTriggeringObject,
+}
+
+/// One scheduled failure: fires when the armed harness has observed
+/// `after_commits` data-bearing commits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChaosTrigger {
+    pub after_commits: u64,
+    pub event: ChaosEvent,
+}
+
+/// A reproducible failure schedule. Triggers are counted relative to the
+/// moment the plan is armed, so input generation (or any other prelude)
+/// does not shift the injection points of the run under test.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ChaosPlan {
+    pub triggers: Vec<ChaosTrigger>,
+}
+
+impl ChaosPlan {
+    pub fn new() -> ChaosPlan {
+        ChaosPlan::default()
+    }
+
+    /// Kill `node` after the `after_commits`-th commit.
+    pub fn kill_node(mut self, node: usize, after_commits: u64) -> ChaosPlan {
+        self.triggers.push(ChaosTrigger {
+            after_commits,
+            event: ChaosEvent::KillNode(node),
+        });
+        self
+    }
+
+    /// Lose the object committed at commit number `after_commits`.
+    pub fn lose_object(mut self, after_commits: u64) -> ChaosPlan {
+        self.triggers.push(ChaosTrigger {
+            after_commits,
+            event: ChaosEvent::LoseTriggeringObject,
+        });
+        self
+    }
+
+    /// A seeded plan of `kills` distinct node kills with trigger points
+    /// drawn from `commit_window` — the same `(seed, n_nodes, kills,
+    /// window)` always yields the same plan. At most `n_nodes - 1` kills
+    /// are generated (the runtime refuses to kill the last live node).
+    pub fn seeded_kills(
+        seed: u64,
+        n_nodes: usize,
+        kills: usize,
+        commit_window: (u64, u64),
+    ) -> ChaosPlan {
+        let kills = kills.min(n_nodes.saturating_sub(1));
+        let mut candidates: Vec<usize> = (0..n_nodes).collect();
+        let span = commit_window.1.saturating_sub(commit_window.0).max(1);
+        let mut plan = ChaosPlan::new();
+        for i in 0..kills {
+            let pick =
+                stream_at(seed, 2 * i as u64) as usize % candidates.len();
+            let node = candidates.swap_remove(pick);
+            let after =
+                commit_window.0 + stream_at(seed, 2 * i as u64 + 1) % span;
+            plan = plan.kill_node(node, after);
+        }
+        plan
+    }
+}
+
+/// One fired (or skipped) chaos event, for the recovery timeline.
+#[derive(Clone, Debug)]
+pub struct ChaosRecord {
+    /// Runtime clock seconds at which the event fired.
+    pub at_secs: f64,
+    /// The trigger's commit threshold.
+    pub after_commits: u64,
+    pub event: ChaosEvent,
+    /// Human-readable outcome ("killed node 1: …" / "skipped: …").
+    pub outcome: String,
+}
+
+/// An armed chaos plan: observes the runtime's commit clock and injects
+/// the plan's events at their thresholds. Keep the `Arc` alive to read
+/// the log after the run; the harness itself holds only a weak runtime
+/// reference, so it never delays runtime teardown.
+pub struct ChaosHarness {
+    triggers: Vec<ChaosTrigger>,
+    /// Index of the next unfired trigger (claimed by compare-exchange so
+    /// concurrent committers fire each trigger exactly once).
+    next: AtomicUsize,
+    base_commits: u64,
+    rt: Weak<Runtime>,
+    log: Mutex<Vec<ChaosRecord>>,
+}
+
+impl ChaosHarness {
+    /// Install `plan` on `rt`'s commit clock, counting commits from now.
+    pub fn arm(rt: &Arc<Runtime>, plan: ChaosPlan) -> Arc<ChaosHarness> {
+        let mut triggers = plan.triggers;
+        triggers.sort_by_key(|t| t.after_commits);
+        let harness = Arc::new(ChaosHarness {
+            triggers,
+            next: AtomicUsize::new(0),
+            base_commits: rt.commit_count(),
+            rt: Arc::downgrade(rt),
+            log: Mutex::new(Vec::new()),
+        });
+        let observer = harness.clone();
+        rt.on_commit(move |seq, id| observer.observe(seq, id));
+        harness
+    }
+
+    fn observe(&self, seq: u64, id: ObjectId) {
+        let rel = seq.saturating_sub(self.base_commits);
+        loop {
+            let i = self.next.load(Ordering::SeqCst);
+            if i >= self.triggers.len() {
+                // plan exhausted: stop serializing the commit hot path
+                if let Some(rt) = self.rt.upgrade() {
+                    rt.disarm_commit_hook();
+                }
+                return;
+            }
+            if self.triggers[i].after_commits > rel {
+                return;
+            }
+            if self
+                .next
+                .compare_exchange(i, i + 1, Ordering::SeqCst, Ordering::SeqCst)
+                .is_ok()
+            {
+                self.fire(self.triggers[i], id);
+            }
+        }
+    }
+
+    fn fire(&self, trigger: ChaosTrigger, id: ObjectId) {
+        let Some(rt) = self.rt.upgrade() else { return };
+        let outcome = match trigger.event {
+            ChaosEvent::KillNode(node) => match rt.kill_node(node) {
+                Ok(r) => format!(
+                    "killed node {node}: {} objects lost, {} tasks \
+                     resubmitted, {} queued tasks rerouted, {} unrecoverable",
+                    r.objects_lost,
+                    r.tasks_resubmitted,
+                    r.queue_reroutes,
+                    r.objects_unrecoverable
+                ),
+                Err(e) => format!("skipped: {e}"),
+            },
+            ChaosEvent::LoseTriggeringObject => match rt.lose_object(id) {
+                Ok(r) => format!(
+                    "lost object {:?}: {} tasks resubmitted",
+                    id, r.tasks_resubmitted
+                ),
+                Err(e) => format!("skipped: {e}"),
+            },
+        };
+        self.log.lock().unwrap().push(ChaosRecord {
+            at_secs: rt.now(),
+            after_commits: trigger.after_commits,
+            event: trigger.event,
+            outcome,
+        });
+    }
+
+    /// How many triggers have fired so far.
+    pub fn fired(&self) -> usize {
+        self.next.load(Ordering::SeqCst).min(self.triggers.len())
+    }
+
+    /// The recovery timeline: every fired event with its outcome.
+    pub fn log(&self) -> Vec<ChaosRecord> {
+        self.log.lock().unwrap().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distfut::scheduler::RuntimeOptions;
+    use crate::distfut::{task_fn, Placement, TaskSpec};
+
+    fn produce(name: &str, node: usize, byte: u8) -> TaskSpec {
+        TaskSpec {
+            name: name.into(),
+            placement: Placement::Node(node),
+            func: task_fn(move |_| Ok(vec![vec![byte; 16]])),
+            args: vec![],
+            num_returns: 1,
+            max_retries: 0,
+        }
+    }
+
+    #[test]
+    fn seeded_plans_are_reproducible_and_distinct_per_seed() {
+        let a = ChaosPlan::seeded_kills(11, 4, 2, (5, 50));
+        let b = ChaosPlan::seeded_kills(11, 4, 2, (5, 50));
+        assert_eq!(a, b, "same seed must give the same plan");
+        let c = ChaosPlan::seeded_kills(12, 4, 2, (5, 50));
+        assert_ne!(a, c, "different seed must give a different plan");
+        // distinct victims, thresholds inside the window
+        let nodes: Vec<usize> = a
+            .triggers
+            .iter()
+            .map(|t| match t.event {
+                ChaosEvent::KillNode(n) => n,
+                e => panic!("unexpected {e:?}"),
+            })
+            .collect();
+        assert_ne!(nodes[0], nodes[1]);
+        assert!(a.triggers.iter().all(|t| (5..50).contains(&t.after_commits)));
+        // never schedules more kills than the cluster can survive
+        assert_eq!(
+            ChaosPlan::seeded_kills(1, 2, 5, (1, 10)).triggers.len(),
+            1
+        );
+    }
+
+    #[test]
+    fn harness_counts_commits_relative_to_arming() {
+        let rt = Runtime::new(RuntimeOptions {
+            n_nodes: 2,
+            slots_per_node: 1,
+            ..Default::default()
+        });
+        // commits before arming must not advance the plan
+        for i in 0..4u8 {
+            let (_, h) = rt.submit(produce(&format!("pre{i}"), 0, i));
+            h.wait().unwrap();
+        }
+        let h = ChaosHarness::arm(&rt, ChaosPlan::new().kill_node(1, 2));
+        assert_eq!(h.fired(), 0);
+        let (_, t) = rt.submit(produce("post0", 0, 1));
+        t.wait().unwrap();
+        assert_eq!(h.fired(), 0, "one post-arm commit, trigger at two");
+        let (_, t) = rt.submit(produce("post1", 0, 2));
+        t.wait().unwrap();
+        assert_eq!(h.fired(), 1);
+        assert!(rt.is_node_dead(1));
+        let log = h.log();
+        assert_eq!(log.len(), 1);
+        assert!(log[0].outcome.contains("killed node 1"), "{:?}", log[0]);
+    }
+
+    #[test]
+    fn lose_triggering_object_recovers_via_lineage() {
+        let rt = Runtime::new(RuntimeOptions {
+            n_nodes: 2,
+            slots_per_node: 1,
+            ..Default::default()
+        });
+        let h = ChaosHarness::arm(&rt, ChaosPlan::new().lose_object(1));
+        let (outs, t) = rt.submit(produce("victim", 0, 5));
+        t.wait().unwrap();
+        // the trigger fired on victim's own commit and dropped it;
+        // lineage re-execution brings the bytes back
+        assert_eq!(*rt.get(&outs[0]).unwrap(), vec![5u8; 16]);
+        assert_eq!(h.fired(), 1);
+        assert!(h.log()[0].outcome.contains("lost object"), "{:?}", h.log());
+        assert!(rt.recovery_stats().tasks_resubmitted >= 1);
+    }
+
+    #[test]
+    fn kill_of_last_live_node_is_skipped_and_logged() {
+        let rt = Runtime::new(RuntimeOptions {
+            n_nodes: 2,
+            slots_per_node: 1,
+            ..Default::default()
+        });
+        rt.kill_node(0).unwrap();
+        let h = ChaosHarness::arm(&rt, ChaosPlan::new().kill_node(1, 1));
+        let (_, t) = rt.submit(produce("p", 1, 1));
+        t.wait().unwrap();
+        assert_eq!(h.fired(), 1);
+        assert!(h.log()[0].outcome.contains("skipped"), "{:?}", h.log());
+        assert!(!rt.is_node_dead(1), "last live node must survive");
+    }
+}

@@ -17,9 +17,27 @@
 //! - **Memory management & disk spilling** — objects are reference
 //!   counted; when a node's store exceeds capacity, cold objects spill to
 //!   local disk and are transparently restored on access.
-//! - **Fault tolerance** — a task that fails is retried up to
-//!   `max_retries` times; argument objects are re-fetched per attempt.
+//! - **Fault tolerance** — two tiers, as in the paper's "network failures
+//!   and worker process failures":
+//!   - *Task failure*: a task that returns an error is retried up to
+//!     `max_retries` times; argument objects are re-fetched per attempt.
+//!   - *Node failure*: [`Runtime::kill_node`] models whole-node loss.
+//!     The node's resident (non-spilled) objects vanish, its queues
+//!     drain, and the scheduler **re-executes the lineage** — the
+//!     recorded producing tasks — of every lost object, transitively
+//!     resurrecting released intermediates, re-resolving through spilled
+//!     copies where available, and rerouting `Node`/`Prefer` placements
+//!     off dead nodes. Reconstruction chains are bounded by
+//!     [`scheduler::RuntimeOptions::max_reconstruction_depth`]; objects
+//!     beyond the cap (or with no recorded lineage, e.g. driver `put`s)
+//!     are poisoned with a clear [`DfError::Unrecoverable`] instead of
+//!     hanging their consumers.
+//!
+//! The [`chaos`] module schedules seeded, reproducible failures (kill
+//! node *k* after the *n*-th commit, lose a specific object) on top of
+//! these primitives, so crash recovery is deterministically testable.
 
+pub mod chaos;
 pub mod future;
 pub mod scheduler;
 pub mod store;
@@ -27,7 +45,9 @@ pub mod store;
 use std::sync::Arc;
 
 pub use future::TaskHandle;
-pub use scheduler::{Runtime, RuntimeOptions, TaskCtx, TaskSpec};
+pub use scheduler::{
+    RecoveryReport, RecoveryStats, Runtime, RuntimeOptions, TaskCtx, TaskSpec,
+};
 pub use store::{ObjectId, ObjectRef, StoreStats};
 
 /// Task placement constraint.
@@ -36,6 +56,8 @@ pub enum Placement {
     /// Run on a specific node (paper: merge tasks are pinned to the node
     /// whose merge controller buffered the blocks). Exempt from memory
     /// admission control — pinned consumers drain an over-budget node.
+    /// If the node is dead, the task is rerouted to the next live node in
+    /// ring order (its body is location-independent by construction).
     Node(usize),
     /// Soft locality: queued on the given node, but an idle node may
     /// steal it after [`scheduler::RuntimeOptions::steal_delay`] so no
@@ -62,13 +84,28 @@ pub enum DfError {
     ShutDown,
     #[error("object {0:?} was released before use")]
     ObjectReleased(ObjectId),
+    /// The object's data was dropped by a node failure and a lineage
+    /// re-execution is pending. Worker-side fetches surface this so the
+    /// scheduler re-parks the consumer instead of blocking a task slot
+    /// that the reconstruction itself may need.
+    #[error("object {0:?} was lost in a node failure (reconstruction pending)")]
+    ObjectLost(ObjectId),
+    /// The object was lost and cannot be reconstructed.
+    #[error("object {id:?} is unrecoverable: {reason}")]
+    Unrecoverable { id: ObjectId, reason: String },
+    /// A recovery operation itself was invalid (e.g. killing the last
+    /// live node).
+    #[error("recovery: {0}")]
+    Recovery(String),
     #[error("store I/O error: {0}")]
     Io(#[from] std::io::Error),
 }
 
 /// The boxed task function type. Must be `Fn` (not `FnOnce`) so the
-/// scheduler can re-execute it on retry; it receives resolved argument
-/// buffers and returns one buffer per declared output.
+/// scheduler can re-execute it on retry or lineage reconstruction; it
+/// receives resolved argument buffers and returns one buffer per declared
+/// output. Task bodies must be deterministic functions of their arguments
+/// for recovery to reproduce byte-identical objects.
 pub type TaskFn =
     Arc<dyn Fn(&TaskCtx) -> Result<Vec<Vec<u8>>, String> + Send + Sync>;
 

@@ -1,5 +1,5 @@
 //! Event-driven task scheduler and worker pools (paper §2.5 "Task
-//! scheduling" + "Memory management").
+//! scheduling" + "Memory management" + "Fault tolerance").
 //!
 //! One worker-thread pool per simulated node, sized by the node's task
 //! parallelism (¾ of vCPUs for the paper's workers). Dispatch is driven
@@ -10,7 +10,7 @@
 //!
 //! - [`Placement::Node`] — hard pin; only that node's workers run it and
 //!   it is exempt from admission control (pinned consumers are what
-//!   drain an over-budget node).
+//!   drain an over-budget node). Rerouted in ring order if the node dies.
 //! - [`Placement::Prefer`] — soft locality: queued on the preferred node
 //!   but *stealable* by an idle node after [`RuntimeOptions::steal_delay`].
 //! - [`Placement::Any`] — Ray-style locality scheduling: routed to the
@@ -23,15 +23,31 @@
 //! declined dispatches are counted in `StoreStats::backpressure_stalls`.
 //! Failed tasks are retried up to `max_retries` times before their
 //! handle resolves to an error.
+//!
+//! **Lineage-based node-failure recovery** (§2.5 "Fault tolerance", after
+//! Exoshuffle / Ray): every submission records its lineage — the task
+//! function, placement and argument/output object ids — keyed by output.
+//! [`Runtime::kill_node`] models whole-node loss: the node's resident
+//! objects are dropped, its queues drained and rerouted, its workers
+//! exit, and the scheduler transitively re-submits the producing tasks of
+//! every lost object that can still be observed, resurrecting released
+//! intermediate objects on the way and re-resolving through spilled
+//! copies where available. Chains longer than
+//! [`RuntimeOptions::max_reconstruction_depth`] — and lost objects with
+//! no recorded lineage, such as driver `put`s — are poisoned with
+//! [`DfError::Unrecoverable`] so consumers fail fast with a clear error
+//! instead of hanging. Workers never block on a lost object: a fetch
+//! surfaces [`DfError::ObjectLost`] and the task is re-parked until the
+//! reconstruction recommits, so recovery cannot deadlock the slot pool.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::distfut::future::TaskHandle;
-use crate::distfut::store::{ObjectId, ObjectRef, Store, StoreStats};
+use crate::distfut::store::{ObjState, ObjectId, ObjectRef, Store, StoreStats};
 use crate::distfut::{DfError, Placement, TaskFn};
 use crate::metrics::TaskEvent;
 
@@ -57,6 +73,22 @@ pub struct RuntimeOptions {
     /// before an idle node is allowed to steal it. Small values favour
     /// utilization; larger values favour locality.
     pub steal_delay: Duration,
+    /// Record task lineage at submission so [`Runtime::kill_node`] can
+    /// re-execute the producers of lost objects. Disabling truncates
+    /// lineage entirely: node loss then poisons every lost object.
+    ///
+    /// Records (task fn `Arc` + argument/output ids, no data buffers)
+    /// are retained for the runtime's lifetime — deliberately, even
+    /// after their outputs are released, because transitive recovery
+    /// resurrects released intermediates through them. The cost is
+    /// O(tasks submitted), ~100 bytes each; lineage eviction (Ray's
+    /// `LineageEvicted` semantics) is future work.
+    pub record_lineage: bool,
+    /// Upper bound on a transitive reconstruction chain (number of
+    /// re-executed producers stacked on one lost object). Chains beyond
+    /// the cap poison with [`DfError::Unrecoverable`] instead of
+    /// re-executing unboundedly.
+    pub max_reconstruction_depth: usize,
 }
 
 impl Default for RuntimeOptions {
@@ -68,6 +100,8 @@ impl Default for RuntimeOptions {
             spill_root: std::env::temp_dir(),
             admission_watermark: 1.0,
             steal_delay: Duration::from_millis(1),
+            record_lineage: true,
+            max_reconstruction_depth: 64,
         }
     }
 }
@@ -96,6 +130,52 @@ pub struct TaskCtx {
     pub attempt: u32,
 }
 
+/// Everything needed to re-execute a task during recovery: the spec's
+/// fields with arguments demoted to ids (holding `ObjectRef`s here would
+/// pin every intermediate object for the runtime's lifetime — instead,
+/// recovery retains or resurrects the ids it actually needs).
+struct LineageRecord {
+    /// Submission id — unique per task, used to dedup and order
+    /// resubmissions.
+    seq: u64,
+    name: String,
+    placement: Placement,
+    func: TaskFn,
+    args: Vec<ObjectId>,
+    outputs: Vec<ObjectId>,
+    num_returns: usize,
+    max_retries: u32,
+}
+
+/// Outcome of one [`Runtime::kill_node`] / [`Runtime::lose_object`]
+/// recovery pass.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RecoveryReport {
+    /// Resident objects dropped by this failure.
+    pub objects_lost: usize,
+    /// Lineage re-executions submitted (including resurrected
+    /// transitive producers).
+    pub tasks_resubmitted: usize,
+    /// Queued tasks moved off the dead node's queues.
+    pub queue_reroutes: usize,
+    /// Lost objects poisoned because no reconstruction path exists.
+    pub objects_unrecoverable: usize,
+}
+
+/// Cumulative recovery counters for a runtime.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RecoveryStats {
+    pub nodes_killed: u64,
+    /// Resident objects dropped by node failures / chaos object loss.
+    pub objects_lost: u64,
+    pub objects_unrecoverable: u64,
+    /// Lineage re-executions submitted.
+    pub tasks_resubmitted: u64,
+    /// In-flight or queued tasks moved off dead nodes (their results,
+    /// if any, were discarded with the process).
+    pub tasks_rerouted: u64,
+}
+
 struct QueuedTask {
     spec: TaskSpec,
     outputs: Vec<ObjectId>,
@@ -103,6 +183,9 @@ struct QueuedTask {
     attempt: u32,
     /// Unresolved argument count (routed to a queue when it reaches 0).
     unresolved: usize,
+    /// True for lineage re-executions and dead-node reroutes (surfaced
+    /// on [`TaskEvent::recovery`]).
+    recovery: bool,
 }
 
 struct SchedState {
@@ -126,14 +209,32 @@ struct SchedState {
 impl SchedState {
     fn route(&mut self, sh: &Shared, tid: u64, placement: Placement, arg_ids: &[ObjectId]) {
         match placement {
-            Placement::Node(n) => self.pinned[n].push_back(tid),
-            Placement::Prefer(n) => self.local[n].push_back((tid, Instant::now())),
+            Placement::Node(n) => {
+                self.pinned[live_target(sh, n)].push_back(tid)
+            }
+            Placement::Prefer(n) => self.local[live_target(sh, n)]
+                .push_back((tid, Instant::now())),
             Placement::Any => match sh.store.locality_node(arg_ids) {
-                Some(n) => self.local[n].push_back((tid, Instant::now())),
+                Some(n) => self.local[live_target(sh, n)]
+                    .push_back((tid, Instant::now())),
                 None => self.shared.push_back(tid),
             },
         }
     }
+}
+
+/// `n` itself when alive, else the next live node in ring order (task
+/// bodies are location-independent: a "pinned" merge carries its logical
+/// node's cut points in its closure, so running it elsewhere produces
+/// identical bytes).
+fn live_target(sh: &Shared, n: usize) -> usize {
+    if !sh.store.is_dead(n) {
+        return n;
+    }
+    (1..sh.n_nodes)
+        .map(|i| (n + i) % sh.n_nodes)
+        .find(|&c| !sh.store.is_dead(c))
+        .unwrap_or(n)
 }
 
 /// The distributed-futures runtime (see module docs of [`crate::distfut`]).
@@ -152,11 +253,22 @@ struct Shared {
     /// Per-node resident-bytes ceiling for admission control.
     admission_limit: u64,
     steal_delay: Duration,
+    /// Lineage: output object -> its producing task's record.
+    lineage: Mutex<HashMap<ObjectId, Arc<LineageRecord>>>,
+    record_lineage: bool,
+    max_reconstruction_depth: usize,
+    /// Serializes kill/lose recovery passes (so concurrent kills cannot
+    /// race the last-live-node check).
+    kill_lock: Mutex<()>,
     next_task_id: AtomicU64,
     epoch: Instant,
     events: Mutex<Vec<TaskEvent>>,
     tasks_executed: AtomicU64,
     tasks_retried: AtomicU64,
+    nodes_killed: AtomicU64,
+    objects_unrecoverable: AtomicU64,
+    tasks_resubmitted: AtomicU64,
+    tasks_rerouted: AtomicU64,
     stop: AtomicBool,
 }
 
@@ -187,11 +299,19 @@ impl Runtime {
             n_nodes: opts.n_nodes,
             admission_limit,
             steal_delay: opts.steal_delay.max(Duration::from_micros(100)),
+            lineage: Mutex::new(HashMap::new()),
+            record_lineage: opts.record_lineage,
+            max_reconstruction_depth: opts.max_reconstruction_depth.max(1),
+            kill_lock: Mutex::new(()),
             next_task_id: AtomicU64::new(1),
             epoch: Instant::now(),
             events: Mutex::new(Vec::new()),
             tasks_executed: AtomicU64::new(0),
             tasks_retried: AtomicU64::new(0),
+            nodes_killed: AtomicU64::new(0),
+            objects_unrecoverable: AtomicU64::new(0),
+            tasks_resubmitted: AtomicU64::new(0),
+            tasks_rerouted: AtomicU64::new(0),
             stop: AtomicBool::new(false),
         });
         let rt = Arc::new(Runtime {
@@ -220,13 +340,29 @@ impl Runtime {
         self.shared.n_nodes
     }
 
-    /// Put a buffer into `node`'s store from the driver.
+    /// Whether `node` was killed ([`Runtime::kill_node`]).
+    pub fn is_node_dead(&self, node: usize) -> bool {
+        node < self.shared.n_nodes && self.shared.store.is_dead(node)
+    }
+
+    /// Nodes still alive.
+    pub fn live_nodes(&self) -> usize {
+        (0..self.shared.n_nodes)
+            .filter(|&n| !self.shared.store.is_dead(n))
+            .count()
+    }
+
+    /// Put a buffer into `node`'s store from the driver (redirected to a
+    /// live node if `node` is dead).
     pub fn put(&self, node: usize, data: Vec<u8>) -> ObjectRef {
+        let node = live_target(&self.shared, node);
         self.shared.store.put(node, data)
     }
 
     /// Blocking fetch of an object (driver side; accounted to the master
     /// as node usize::MAX — no transfer counted toward shuffle traffic).
+    /// Blocks through node-failure recovery until the object is
+    /// recommitted, or errors if it is unrecoverable.
     pub fn get(&self, r: &ObjectRef) -> Result<Arc<Vec<u8>>, DfError> {
         self.shared.store.get(r.id, usize::MAX)
     }
@@ -255,6 +391,31 @@ impl Runtime {
         self.shared.store.subscribe(r.id, Box::new(f));
     }
 
+    /// Observe every data-bearing commit as `(sequence number, object)`.
+    /// The chaos harness rides on this to trigger failures "after the
+    /// n-th commit"; observers are serialized, so the trigger point is
+    /// well defined even under concurrent commits. Replaces any
+    /// previously installed observer.
+    pub fn on_commit<F>(&self, f: F)
+    where
+        F: Fn(u64, ObjectId) + Send + Sync + 'static,
+    {
+        self.shared.store.set_commit_hook(Box::new(f));
+    }
+
+    /// Data-bearing commits so far (the chaos trigger clock).
+    pub fn commit_count(&self) -> u64 {
+        self.shared.store.commit_count()
+    }
+
+    /// Stop delivering commits to the observer installed by
+    /// [`Runtime::on_commit`]; the commit hot path goes back to
+    /// lock-free. The chaos harness calls this once its plan is
+    /// exhausted.
+    pub fn disarm_commit_hook(&self) {
+        self.shared.store.disarm_commit_hook();
+    }
+
     /// Submit a task; returns its output refs (immediately usable as args
     /// of downstream tasks) and a completion handle.
     pub fn submit(&self, spec: TaskSpec) -> (Vec<ObjectRef>, TaskHandle) {
@@ -269,6 +430,25 @@ impl Runtime {
         let output_ids: Vec<ObjectId> = outputs.iter().map(|o| o.id).collect();
         let handle = TaskHandle::new(spec.name.clone());
         let tid = sh.next_task_id.fetch_add(1, Ordering::Relaxed);
+
+        // Record lineage before the task can run: if one of its outputs
+        // is later lost to a node failure, this record re-executes it.
+        if sh.record_lineage && !output_ids.is_empty() {
+            let rec = Arc::new(LineageRecord {
+                seq: tid,
+                name: spec.name.clone(),
+                placement: spec.placement,
+                func: spec.func.clone(),
+                args: spec.args.iter().map(|a| a.id).collect(),
+                outputs: output_ids.clone(),
+                num_returns: spec.num_returns,
+                max_retries: spec.max_retries,
+            });
+            let mut lineage = sh.lineage.lock().unwrap();
+            for oid in &output_ids {
+                lineage.insert(*oid, rec.clone());
+            }
+        }
 
         let mut st = sh.state.lock().unwrap();
         if st.shutdown {
@@ -291,6 +471,7 @@ impl Runtime {
             handle: handle.clone(),
             attempt: 0,
             unresolved,
+            recovery: false,
         };
         st.outstanding += 1;
         if unresolved == 0 {
@@ -302,6 +483,311 @@ impl Runtime {
         drop(st);
         sh.work_ready.notify_all();
         (outputs, handle)
+    }
+
+    /// Kill a node (paper §2.5 "worker process failures", whole-node
+    /// variant): its resident objects vanish, its queued work is rerouted
+    /// to live nodes, its workers exit, and the lineage of every lost
+    /// object is transitively re-submitted. Errors if the node is out of
+    /// range, already dead, or the last live node.
+    pub fn kill_node(&self, node: usize) -> Result<RecoveryReport, DfError> {
+        let sh = &self.shared;
+        let _kill = sh.kill_lock.lock().unwrap();
+        if node >= sh.n_nodes {
+            return Err(DfError::Recovery(format!(
+                "no such node {node} (cluster has {})",
+                sh.n_nodes
+            )));
+        }
+        if sh.store.is_dead(node) {
+            return Err(DfError::Recovery(format!(
+                "node {node} is already dead"
+            )));
+        }
+        if self.live_nodes() <= 1 {
+            return Err(DfError::Recovery(
+                "cannot kill the last live node".into(),
+            ));
+        }
+        let lost = sh.store.fail_node(node);
+        sh.nodes_killed.fetch_add(1, Ordering::Relaxed);
+        let now = sh.epoch.elapsed().as_secs_f64();
+        sh.events.lock().unwrap().push(TaskEvent {
+            name: format!("node-killed-{node}"),
+            node,
+            start: now,
+            end: now,
+            ok: false,
+            attempt: 0,
+            recovery: true,
+        });
+        let report = self.recover_objects(Some(node), lost);
+        sh.work_ready.notify_all();
+        Ok(report)
+    }
+
+    /// Drop one object's resident data and re-execute its lineage (the
+    /// chaos harness's single-object loss). Errors if the object has no
+    /// resident data to lose.
+    pub fn lose_object(&self, id: ObjectId) -> Result<RecoveryReport, DfError> {
+        let sh = &self.shared;
+        let _kill = sh.kill_lock.lock().unwrap();
+        if !sh.store.drop_object(id) {
+            return Err(DfError::Recovery(format!(
+                "object {id:?} has no resident data to lose"
+            )));
+        }
+        let report = self.recover_objects(None, vec![id]);
+        sh.work_ready.notify_all();
+        Ok(report)
+    }
+
+    /// Recovery pass over `lost` objects: walk the lineage transitively
+    /// (pinning / resurrecting argument objects as needed), poison what
+    /// cannot be rebuilt, drain the dead node's queues, and resubmit the
+    /// producing tasks of everything else.
+    fn recover_objects(
+        &self,
+        dead_node: Option<usize>,
+        lost: Vec<ObjectId>,
+    ) -> RecoveryReport {
+        let sh = &self.shared;
+        let objects_lost = lost.len();
+
+        // --- phase 1: transitive closure over the lineage ---
+        // Every argument of every candidate record is pinned immediately
+        // (retain, or resurrect if already released) so a concurrent
+        // release cannot invalidate the walk; unused pins are dropped at
+        // the end of the pass.
+        let lineage = sh.lineage.lock().unwrap();
+        let mut need: HashMap<ObjectId, Option<Arc<LineageRecord>>> =
+            HashMap::new();
+        let mut arg_refs: HashMap<ObjectId, ObjectRef> = HashMap::new();
+        let mut queue: VecDeque<ObjectId> = lost.iter().copied().collect();
+        while let Some(id) = queue.pop_front() {
+            if need.contains_key(&id) {
+                continue;
+            }
+            let rec = lineage.get(&id).cloned();
+            if let Some(rec) = &rec {
+                for &a in &rec.args {
+                    if arg_refs.contains_key(&a) {
+                        continue;
+                    }
+                    let (r, state) = sh.store.retain_or_resurrect(a);
+                    arg_refs.insert(a, r);
+                    if matches!(state, ObjState::Lost | ObjState::Missing) {
+                        queue.push_back(a);
+                    }
+                }
+            }
+            need.insert(id, rec);
+        }
+        drop(lineage);
+
+        // --- phase 2: bound the reconstruction depth ---
+        let rec_of: HashMap<ObjectId, u64> = need
+            .iter()
+            .filter_map(|(id, r)| r.as_ref().map(|r| (*id, r.seq)))
+            .collect();
+        let records: HashMap<u64, Arc<LineageRecord>> = need
+            .values()
+            .flatten()
+            .map(|r| (r.seq, r.clone()))
+            .collect();
+        let mut memo: HashMap<u64, usize> = HashMap::new();
+        let max_depth = sh.max_reconstruction_depth;
+        let mut poisons: Vec<(ObjectId, String)> = Vec::new();
+        let mut needy: Vec<ObjectId> = need.keys().copied().collect();
+        needy.sort_unstable(); // deterministic poison/resubmission order
+        for id in &needy {
+            match &need[id] {
+                None => poisons.push((
+                    *id,
+                    "lost in a node failure with no lineage recorded \
+                     (driver put, or lineage disabled/truncated)"
+                        .into(),
+                )),
+                Some(rec) => {
+                    let d = chain_depth(rec.seq, &records, &rec_of, &mut memo);
+                    if d > max_depth {
+                        poisons.push((
+                            *id,
+                            format!(
+                                "reconstruction chain depth {d} exceeds \
+                                 max_reconstruction_depth {max_depth}"
+                            ),
+                        ));
+                    }
+                }
+            }
+        }
+        // Resubmission is demand-driven: only producers reachable from a
+        // *non-poisoned* lost root re-execute. Anything feeding solely a
+        // poisoned chain would recommit objects no consumer can observe
+        // (the chain's tail errors out regardless), so it is skipped.
+        let poisoned: HashSet<ObjectId> =
+            poisons.iter().map(|(id, _)| *id).collect();
+        let mut resubmit: Vec<Arc<LineageRecord>> = Vec::new();
+        let mut seen_rec: HashSet<u64> = HashSet::new();
+        let mut demanded: Vec<ObjectId> = lost
+            .iter()
+            .copied()
+            .filter(|id| !poisoned.contains(id))
+            .collect();
+        let mut demanded_seen: HashSet<ObjectId> =
+            demanded.iter().copied().collect();
+        while let Some(id) = demanded.pop() {
+            let Some(Some(rec)) = need.get(&id) else { continue };
+            if seen_rec.insert(rec.seq) {
+                resubmit.push(rec.clone());
+                for &a in &rec.args {
+                    if need.contains_key(&a)
+                        && !poisoned.contains(&a)
+                        && demanded_seen.insert(a)
+                    {
+                        demanded.push(a);
+                    }
+                }
+            }
+        }
+        resubmit.sort_by_key(|r| r.seq);
+
+        // --- phase 3: mutate scheduler state ---
+        let mut st = sh.state.lock().unwrap();
+        let mut queue_reroutes = 0usize;
+        if let Some(node) = dead_node {
+            let mut drained: Vec<u64> = st.pinned[node].drain(..).collect();
+            drained.extend(st.local[node].drain(..).map(|(tid, _)| tid));
+            for tid in drained {
+                let Some((placement, arg_ids)) =
+                    st.pending.get_mut(&tid).map(|t| {
+                        t.recovery = true; // surfaces on TaskEvent::recovery
+                        (
+                            t.spec.placement,
+                            t.spec
+                                .args
+                                .iter()
+                                .map(|a| a.id)
+                                .collect::<Vec<ObjectId>>(),
+                        )
+                    })
+                else {
+                    continue;
+                };
+                st.route(sh, tid, placement, &arg_ids);
+                queue_reroutes += 1;
+            }
+        }
+        // Poison unreconstructables and hand their scheduler waiters to
+        // dispatch (mirrors finish_task): consumers observe the terminal
+        // error instead of waiting forever.
+        let mut now_runnable: Vec<u64> = Vec::new();
+        for (id, reason) in &poisons {
+            sh.store.poison(*id, reason);
+            if let Some(waiters) = st.waiting.remove(id) {
+                for wtid in waiters {
+                    if let Some(w) = st.pending.get_mut(&wtid) {
+                        w.unresolved -= 1;
+                        if w.unresolved == 0 {
+                            now_runnable.push(wtid);
+                        }
+                    }
+                }
+            }
+        }
+        for wtid in now_runnable {
+            let (placement, arg_ids): (Placement, Vec<ObjectId>) = {
+                let w = &st.pending[&wtid];
+                (
+                    w.spec.placement,
+                    w.spec.args.iter().map(|a| a.id).collect(),
+                )
+            };
+            st.route(sh, wtid, placement, &arg_ids);
+        }
+        // Count only consumer-visible roots (objects that were actually
+        // lost) — resurrected intermediates poisoned alongside an
+        // over-cap chain had no observers and would inflate the report.
+        let root_poisons = {
+            let lost_set: HashSet<ObjectId> = lost.iter().copied().collect();
+            poisons.iter().filter(|(id, _)| lost_set.contains(id)).count()
+        };
+        sh.objects_unrecoverable
+            .fetch_add(root_poisons as u64, Ordering::Relaxed);
+
+        // Resubmit producers, skipping any whose outputs already have an
+        // in-flight producer (e.g. a dead worker's task rerouted moments
+        // before this pass). The opposite ordering — the dead worker
+        // re-parks *after* this scan — leaves two live producers for the
+        // same outputs: benign (first commit wins, bytes identical; the
+        // re-park must happen regardless, since it carries the caller's
+        // completion handle), at the cost of one duplicate execution in
+        // the counters.
+        let mut resubmitted = 0usize;
+        if st.shutdown {
+            // no worker will run a resubmission now: poison the lost
+            // objects so driver-side gets error out instead of blocking
+            // forever on a recommit that cannot come
+            for rec in &resubmit {
+                for o in &rec.outputs {
+                    sh.store
+                        .poison(*o, "lost during shutdown; not reconstructed");
+                }
+            }
+        } else {
+            let in_flight: HashSet<ObjectId> = st
+                .pending
+                .values()
+                .flat_map(|t| t.outputs.iter().copied())
+                .collect();
+            for rec in resubmit {
+                if rec.outputs.iter().any(|o| in_flight.contains(o)) {
+                    continue;
+                }
+                let tid = sh.next_task_id.fetch_add(1, Ordering::Relaxed);
+                let spec = TaskSpec {
+                    name: rec.name.clone(),
+                    placement: rec.placement,
+                    func: rec.func.clone(),
+                    args: rec.args.iter().map(|a| arg_refs[a].clone()).collect(),
+                    num_returns: rec.num_returns,
+                    max_retries: rec.max_retries,
+                };
+                let mut unresolved = 0usize;
+                for a in &rec.args {
+                    if !sh.store.is_resolved(*a) {
+                        unresolved += 1;
+                        st.waiting.entry(*a).or_default().push(tid);
+                    }
+                }
+                let task = QueuedTask {
+                    spec,
+                    outputs: rec.outputs.clone(),
+                    handle: TaskHandle::new(rec.name.clone()),
+                    attempt: 0,
+                    unresolved,
+                    recovery: true,
+                };
+                st.outstanding += 1;
+                if unresolved == 0 {
+                    st.route(sh, tid, task.spec.placement, &rec.args);
+                }
+                st.pending.insert(tid, task);
+                resubmitted += 1;
+            }
+        }
+        drop(st);
+        sh.tasks_resubmitted
+            .fetch_add(resubmitted as u64, Ordering::Relaxed);
+        sh.tasks_rerouted
+            .fetch_add(queue_reroutes as u64, Ordering::Relaxed);
+        RecoveryReport {
+            objects_lost,
+            tasks_resubmitted: resubmitted,
+            queue_reroutes,
+            objects_unrecoverable: root_poisons,
+        }
     }
 
     /// Block until no tasks are outstanding.
@@ -320,6 +806,20 @@ impl Runtime {
     /// Store statistics (transfers, spills, residency, stalls).
     pub fn store_stats(&self) -> StoreStats {
         self.shared.store.stats()
+    }
+
+    /// Cumulative recovery counters (kills, losses, resubmissions).
+    pub fn recovery_stats(&self) -> RecoveryStats {
+        let sh = &self.shared;
+        RecoveryStats {
+            nodes_killed: sh.nodes_killed.load(Ordering::Relaxed),
+            objects_lost: sh.store.stats().objects_lost,
+            objects_unrecoverable: sh
+                .objects_unrecoverable
+                .load(Ordering::Relaxed),
+            tasks_resubmitted: sh.tasks_resubmitted.load(Ordering::Relaxed),
+            tasks_rerouted: sh.tasks_rerouted.load(Ordering::Relaxed),
+        }
     }
 
     /// Total tasks executed (attempts) and retried.
@@ -367,6 +867,31 @@ impl Drop for Runtime {
 
 static NEXT_RUNTIME: AtomicU64 = AtomicU64::new(0);
 
+/// Length of the re-execution chain rooted at record `seq` (memoized;
+/// the lineage graph is a DAG by construction — outputs are declared
+/// after their producers' arguments).
+fn chain_depth(
+    seq: u64,
+    records: &HashMap<u64, Arc<LineageRecord>>,
+    rec_of: &HashMap<ObjectId, u64>,
+    memo: &mut HashMap<u64, usize>,
+) -> usize {
+    if let Some(&d) = memo.get(&seq) {
+        return d;
+    }
+    memo.insert(seq, usize::MAX); // defensive cycle guard
+    let below = records[&seq]
+        .args
+        .iter()
+        .filter_map(|a| rec_of.get(a))
+        .map(|s| chain_depth(*s, records, rec_of, memo))
+        .max()
+        .unwrap_or(0);
+    let d = below.saturating_add(1);
+    memo.insert(seq, d);
+    d
+}
+
 /// Outcome of one dispatch attempt by an idle worker.
 enum Pick {
     /// Run this task now.
@@ -390,13 +915,17 @@ fn pick_task(sh: &Shared, st: &mut SchedState, node: usize, stalled: &mut bool) 
     }
     // Admission control: an over-watermark node is not offered new
     // load-balanced work (scheduler-level backpressure, paper §2.5).
-    // The gate only engages while some other node is under its
-    // watermark — if the whole cluster is over budget, declining would
+    // The gate only engages while some other *live* node is under its
+    // watermark — if every live node is over budget, declining would
     // deadlock (nothing would run, so nothing would drain), so the gate
-    // disengages and the work runs anyway.
+    // disengages and the work runs anyway. Dead nodes report zero
+    // residency and must not count as available headroom.
     let over = sh.store.resident_on(node) > sh.admission_limit;
     if over
-        && (0..sh.n_nodes).any(|n| sh.store.resident_on(n) <= sh.admission_limit)
+        && (0..sh.n_nodes).any(|n| {
+            !sh.store.is_dead(n)
+                && sh.store.resident_on(n) <= sh.admission_limit
+        })
     {
         let now = Instant::now();
         // a stall is only recorded for work this node could actually
@@ -470,6 +999,63 @@ fn pick_task(sh: &Shared, st: &mut SchedState, node: usize, stalled: &mut bool) 
     }
 }
 
+/// Argument-fetch outcome for a dispatched task.
+enum Fetch {
+    Ready(Vec<Arc<Vec<u8>>>),
+    /// An argument was lost to a node failure after dispatch; the task
+    /// must be re-parked until the reconstruction recommits.
+    Lost,
+    Failed(String),
+}
+
+fn fetch_args(sh: &Shared, task: &QueuedTask, node: usize) -> Fetch {
+    let mut bufs = Vec::with_capacity(task.spec.args.len());
+    for a in &task.spec.args {
+        match sh.store.get(a.id, node) {
+            Ok(d) => bufs.push(d),
+            Err(DfError::ObjectLost(_)) => return Fetch::Lost,
+            Err(e) => return Fetch::Failed(e.to_string()),
+        }
+    }
+    Fetch::Ready(bufs)
+}
+
+/// Return a task to the pending set, re-registering readiness waits for
+/// any argument that is no longer resolved (a node failure can
+/// *un-resolve* an argument between dispatch and fetch). Used by the
+/// lost-argument fetch path and by workers whose node died mid-task; in
+/// both cases no retry is consumed — the failure is the system's, not
+/// the task's.
+fn park_task(sh: &Arc<Shared>, mut task: QueuedTask) {
+    let tid = sh.next_task_id.fetch_add(1, Ordering::Relaxed);
+    let arg_ids: Vec<ObjectId> = task.spec.args.iter().map(|a| a.id).collect();
+    let mut st = sh.state.lock().unwrap();
+    if st.shutdown {
+        task.handle.complete(Err("runtime shut down".into()));
+        st.outstanding = st.outstanding.saturating_sub(1);
+        let quiescent = st.outstanding == 0;
+        drop(st);
+        if quiescent {
+            sh.quiescent.notify_all();
+        }
+        return;
+    }
+    let mut unresolved = 0usize;
+    for a in &arg_ids {
+        if !sh.store.is_resolved(*a) {
+            unresolved += 1;
+            st.waiting.entry(*a).or_default().push(tid);
+        }
+    }
+    task.unresolved = unresolved;
+    if unresolved == 0 {
+        st.route(sh, tid, task.spec.placement, &arg_ids);
+    }
+    st.pending.insert(tid, task);
+    drop(st);
+    sh.work_ready.notify_all();
+}
+
 fn worker_loop(sh: Arc<Shared>, node: usize) {
     let mut stalled = false;
     loop {
@@ -479,6 +1065,10 @@ fn worker_loop(sh: Arc<Shared>, node: usize) {
             let mut st = sh.state.lock().unwrap();
             loop {
                 if sh.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                if sh.store.is_dead(node) {
+                    // the node was killed: this worker's process is gone
                     return;
                 }
                 match pick_task(&sh, &mut st, node, &mut stalled) {
@@ -497,24 +1087,38 @@ fn worker_loop(sh: Arc<Shared>, node: usize) {
         };
 
         // --- fetch resolved args (restores spilled data, accounts
-        // cross-node transfers; never waits on production) ---
-        let args: Result<Vec<Arc<Vec<u8>>>, DfError> = task
-            .spec
-            .args
-            .iter()
-            .map(|a| sh.store.get(a.id, node))
-            .collect();
+        // cross-node transfers; never waits on production — and never
+        // blocks on a lost object, so recovery cannot wedge the slot) ---
+        let fetched = fetch_args(&sh, &task, node);
+        if matches!(fetched, Fetch::Lost) {
+            park_task(&sh, task);
+            continue;
+        }
 
         let start = sh.epoch.elapsed().as_secs_f64();
-        let result = args.map_err(|e| e.to_string()).and_then(|args| {
-            let ctx = TaskCtx {
-                node,
-                args,
-                attempt: task.attempt,
-            };
-            (task.spec.func)(&ctx)
-        });
+        let result = match fetched {
+            Fetch::Ready(args) => {
+                let ctx = TaskCtx {
+                    node,
+                    args,
+                    attempt: task.attempt,
+                };
+                (task.spec.func)(&ctx)
+            }
+            Fetch::Failed(msg) => Err(msg),
+            Fetch::Lost => unreachable!("handled above"),
+        };
         let end = sh.epoch.elapsed().as_secs_f64();
+
+        // The node died while the task ran: its results die with the
+        // process. Re-execute on a live node without consuming a retry.
+        if sh.store.is_dead(node) {
+            sh.tasks_rerouted.fetch_add(1, Ordering::Relaxed);
+            task.recovery = true;
+            park_task(&sh, task);
+            continue;
+        }
+
         sh.tasks_executed.fetch_add(1, Ordering::Relaxed);
         sh.events.lock().unwrap().push(TaskEvent {
             name: task.spec.name.clone(),
@@ -523,6 +1127,7 @@ fn worker_loop(sh: Arc<Shared>, node: usize) {
             end,
             ok: result.is_ok(),
             attempt: task.attempt,
+            recovery: task.recovery,
         });
 
         match result {
@@ -541,8 +1146,22 @@ fn worker_loop(sh: Arc<Shared>, node: usize) {
                         sh.store.fail(*oid);
                     }
                 } else {
+                    // a commit refused mid-loop means the node was killed
+                    // between outputs: what landed before the kill is
+                    // already marked Lost, the rest dies here — the
+                    // re-execution recommits everything on a live node
+                    let mut died_mid_commit = false;
                     for (id, data) in task.outputs.iter().zip(outs) {
-                        sh.store.commit(*id, node, data);
+                        if !sh.store.commit(*id, node, data) {
+                            died_mid_commit = true;
+                            break;
+                        }
+                    }
+                    if died_mid_commit {
+                        sh.tasks_rerouted.fetch_add(1, Ordering::Relaxed);
+                        task.recovery = true;
+                        park_task(&sh, task);
+                        continue;
                     }
                     task.handle.complete(Ok(()));
                 }
@@ -661,6 +1280,18 @@ mod tests {
             }),
             args: vec![],
             num_returns: 0,
+            max_retries: 0,
+        }
+    }
+
+    /// A task producing one constant buffer (has lineage, unlike a put).
+    fn produce(name: &str, placement: Placement, byte: u8, len: usize) -> TaskSpec {
+        TaskSpec {
+            name: name.into(),
+            placement,
+            func: task_fn(move |_| Ok(vec![vec![byte; len]])),
+            args: vec![],
+            num_returns: 1,
             max_retries: 0,
         }
     }
@@ -1049,5 +1680,155 @@ mod tests {
         let rt = small_rt(2, 1);
         rt.shutdown();
         rt.shutdown();
+    }
+
+    // --- node-failure recovery -------------------------------------
+
+    #[test]
+    fn kill_node_rejects_invalid_targets() {
+        let rt = small_rt(2, 1);
+        assert!(rt.kill_node(7).is_err(), "out of range");
+        rt.kill_node(1).unwrap();
+        let err = rt.kill_node(1).unwrap_err().to_string();
+        assert!(err.contains("already dead"), "{err}");
+        let err = rt.kill_node(0).unwrap_err().to_string();
+        assert!(err.contains("last live node"), "{err}");
+        assert_eq!(rt.live_nodes(), 1);
+        assert!(rt.is_node_dead(1) && !rt.is_node_dead(0));
+    }
+
+    #[test]
+    fn work_pinned_to_a_dead_node_is_rerouted() {
+        let rt = small_rt(3, 1);
+        rt.kill_node(1).unwrap();
+        let (_, h) = rt.submit(sleeper("pinned-to-dead", Placement::Node(1), 1));
+        h.wait().unwrap();
+        let ev = rt
+            .task_events()
+            .into_iter()
+            .find(|e| e.name == "pinned-to-dead")
+            .unwrap();
+        assert_eq!(ev.node, 2, "ring order: node 1's work falls to node 2");
+    }
+
+    #[test]
+    fn lost_object_is_recomputed_from_lineage() {
+        let rt = small_rt(2, 2);
+        let (outs, h) = rt.submit(produce("src", Placement::Node(0), 7, 64));
+        h.wait().unwrap();
+        let report = rt.lose_object(outs[0].id()).unwrap();
+        assert_eq!(report.objects_lost, 1);
+        assert_eq!(report.tasks_resubmitted, 1);
+        assert_eq!(report.objects_unrecoverable, 0);
+        // the driver blocks through the reconstruction window
+        assert_eq!(*rt.get(&outs[0]).unwrap(), vec![7u8; 64]);
+        let stats = rt.recovery_stats();
+        assert_eq!(stats.tasks_resubmitted, 1);
+        assert_eq!(stats.objects_lost, 1);
+        // the re-execution is visible in the task log
+        assert!(rt
+            .task_events()
+            .iter()
+            .any(|e| e.name == "src" && e.recovery));
+    }
+
+    #[test]
+    fn kill_node_reexecutes_lost_lineage() {
+        let rt = small_rt(2, 2);
+        let (outs, h) = rt.submit(produce("src", Placement::Node(0), 9, 128));
+        h.wait().unwrap();
+        let report = rt.kill_node(0).unwrap();
+        assert!(report.objects_lost >= 1);
+        assert!(report.tasks_resubmitted >= 1);
+        assert_eq!(*rt.get(&outs[0]).unwrap(), vec![9u8; 128]);
+        assert_eq!(rt.recovery_stats().nodes_killed, 1);
+        // re-execution happened on the surviving node
+        let re = rt
+            .task_events()
+            .into_iter()
+            .find(|e| e.name == "src" && e.recovery)
+            .unwrap();
+        assert_eq!(re.node, 1);
+        // the kill itself is a timeline marker event
+        assert!(rt
+            .task_events()
+            .iter()
+            .any(|e| e.name == "node-killed-0" && !e.ok && e.recovery));
+    }
+
+    #[test]
+    fn driver_puts_are_unrecoverable_after_node_loss() {
+        let rt = small_rt(2, 1);
+        let ballast = rt.put(0, vec![1u8; 32]);
+        let report = rt.kill_node(0).unwrap();
+        assert_eq!(report.objects_unrecoverable, 1);
+        let err = rt.get(&ballast).unwrap_err().to_string();
+        assert!(err.contains("unrecoverable"), "{err}");
+        assert!(err.contains("no lineage"), "{err}");
+        assert_eq!(rt.recovery_stats().objects_unrecoverable, 1);
+    }
+
+    #[test]
+    fn consumer_waiting_on_lost_object_rides_through_recovery() {
+        let rt = small_rt(2, 2);
+        let (outs, h) = rt.submit(produce("src", Placement::Node(0), 3, 16));
+        h.wait().unwrap();
+        // consumer submitted against live data, then the data vanishes
+        rt.lose_object(outs[0].id()).unwrap();
+        let (sum, h2) = rt.submit(TaskSpec {
+            name: "consume".into(),
+            placement: Placement::Node(1),
+            func: task_fn(|ctx| {
+                Ok(vec![vec![ctx.args[0].iter().copied().sum::<u8>()]])
+            }),
+            args: vec![outs[0].clone()],
+            num_returns: 1,
+            max_retries: 0,
+        });
+        h2.wait().unwrap();
+        assert_eq!(*rt.get(&sum[0]).unwrap(), vec![3u8 * 16]);
+    }
+
+    #[test]
+    fn commit_hook_drives_deterministic_midrun_kills() {
+        // kill node 0 the moment its second commit lands, from the
+        // committing thread itself — the scheduler must recover and the
+        // DAG must still produce correct values
+        let rt = small_rt(2, 2);
+        let rt2 = Arc::downgrade(&rt);
+        rt.on_commit(move |seq, _id| {
+            if seq == 2 {
+                if let Some(rt) = rt2.upgrade() {
+                    let _ = rt.kill_node(0);
+                }
+            }
+        });
+        let mut outs = Vec::new();
+        for i in 0..6u8 {
+            let (o, _) = rt.submit(produce(
+                &format!("p{i}"),
+                Placement::Node(0),
+                i,
+                32,
+            ));
+            outs.push(o.into_iter().next().unwrap());
+        }
+        for (i, o) in outs.iter().enumerate() {
+            assert_eq!(*rt.get(o).unwrap(), vec![i as u8; 32], "object {i}");
+        }
+        assert_eq!(rt.recovery_stats().nodes_killed, 1);
+    }
+
+    #[test]
+    fn lineage_records_do_not_pin_arguments() {
+        // consuming a task output and dropping its refs must still free
+        // the store entry — lineage keeps ids, not ObjectRefs
+        let rt = small_rt(1, 1);
+        let (outs, h) = rt.submit(produce("src", Placement::Node(0), 1, 100));
+        h.wait().unwrap();
+        let (_, h2) = rt.submit(noop("use", Placement::Any, vec![outs[0].clone()]));
+        h2.wait().unwrap();
+        drop(outs);
+        assert_eq!(rt.store_stats().resident_bytes, 0);
     }
 }

@@ -20,12 +20,22 @@
 //! - **Residency** — [`Store::resident_on`] is a lock-free per-node
 //!   resident-bytes gauge the scheduler's admission control reads;
 //!   declined dispatches are counted in `backpressure_stalls`.
+//!
+//! **Node failure** (§2.5 "Fault tolerance"): [`Store::fail_node`] marks a
+//! node dead and flips its resident (in-memory) objects to [`Slot::Lost`]
+//! — their data is gone, but a lineage re-execution is expected to
+//! recommit them. Spilled copies survive a node kill in this runtime
+//! (spill stands in for durable local/external storage), so recovery
+//! re-resolves through them without re-execution. Commits attributed to a
+//! dead node are discarded — a dead process cannot publish results. A
+//! commit-sequence hook ([`Store::set_commit_hook`]) lets the chaos
+//! harness trigger deterministic failures "after the n-th commit".
 
 use std::collections::HashMap;
 use std::fs;
 use std::io::Write;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 use crate::distfut::DfError;
@@ -35,7 +45,9 @@ use crate::distfut::DfError;
 pub struct ObjectId(pub u64);
 
 /// A reference-counted handle to a distributed object. Dropping the last
-/// clone releases the object from its store (Ray ownership semantics).
+/// handle (counting [`Store::retain`]-fabricated ones) releases the
+/// object from its store (Ray ownership semantics). Clones share one
+/// count.
 #[derive(Clone)]
 pub struct ObjectRef {
     pub id: ObjectId,
@@ -80,8 +92,31 @@ enum Slot {
     Memory(Arc<Vec<u8>>),
     /// Spilled to local disk.
     Spilled(PathBuf, u64),
+    /// Data dropped by a node failure; a lineage re-execution is expected
+    /// to recommit it. The driver blocks for the recommit; workers fail
+    /// fast with [`DfError::ObjectLost`] so the scheduler can re-park the
+    /// consuming task instead of wedging a slot.
+    Lost,
+    /// Terminal: lost with no reconstruction path (no lineage recorded,
+    /// or the reconstruction chain exceeded the depth cap).
+    Unrecoverable(Arc<str>),
     /// Released; kept as tombstone until all waiters observe it.
     Released,
+}
+
+/// Where an object stands, as seen by the recovery walk.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ObjState {
+    /// Committed data is fetchable (in memory or spilled).
+    Available,
+    /// Declared, producer still in flight.
+    Pending,
+    /// Dropped by a node failure; needs reconstruction.
+    Lost,
+    /// Terminal (released, failed or unrecoverable): a fetch errors.
+    Terminal,
+    /// No table entry (fully released); recovery must resurrect it.
+    Missing,
 }
 
 struct Entry {
@@ -90,10 +125,17 @@ struct Entry {
     node: usize,
     /// Insertion sequence for cold-first spill ordering.
     seq: u64,
+    /// Outstanding `ObjectRef` handle families (declare = 1, each
+    /// [`Store::retain`] adds one). The entry is freed at zero.
+    refs: u32,
 }
 
 /// Callback fired once when an object's data becomes available.
 pub type ReadyCallback = Box<dyn FnOnce() + Send>;
+
+/// Observer of data-bearing commits: `(commit sequence number, object)`.
+/// Fired outside the table lock; the chaos harness builds on it.
+pub type CommitHook = Box<dyn Fn(u64, ObjectId) + Send + Sync>;
 
 /// Transfer/spill counters (feed the metrics layer).
 #[derive(Debug, Default)]
@@ -108,6 +150,9 @@ pub struct StoreCounters {
     /// worker declined runnable load-balanced work because its node was
     /// over the admission watermark (paper §2.5 backpressure).
     pub backpressure_stalls: AtomicU64,
+    /// Resident objects dropped by node failures / chaos object loss.
+    pub objects_lost: AtomicU64,
+    pub lost_bytes: AtomicU64,
 }
 
 /// Snapshot of store statistics.
@@ -124,6 +169,9 @@ pub struct StoreStats {
     /// Scheduler-level backpressure stall episodes (see
     /// [`StoreCounters::backpressure_stalls`]).
     pub backpressure_stalls: u64,
+    /// Resident objects dropped by node failures / chaos object loss.
+    pub objects_lost: u64,
+    pub lost_bytes: u64,
 }
 
 /// The whole-cluster object store (shards are per-node byte budgets, but
@@ -136,9 +184,18 @@ pub struct Store {
     /// Lock-free mirror of per-node resident bytes (read by the
     /// scheduler's admission control on every dispatch decision).
     resident_gauge: Vec<AtomicU64>,
+    /// Per-node death flags ([`Store::fail_node`]); commits attributed to
+    /// a dead node are discarded.
+    dead: Vec<AtomicBool>,
     spill_dir: PathBuf,
     next_id: AtomicU64,
     next_seq: AtomicU64,
+    /// Data-bearing commits so far (chaos trigger clock).
+    commits: AtomicU64,
+    /// Fast-path flag: true once a commit hook is installed. Unarmed
+    /// runs skip the hook lock entirely on the commit hot path.
+    hook_armed: AtomicBool,
+    commit_hook: Mutex<Option<CommitHook>>,
     pub counters: StoreCounters,
 }
 
@@ -162,9 +219,13 @@ impl Store {
             ready: Condvar::new(),
             node_capacity: vec![capacity_per_node; n_nodes],
             resident_gauge: (0..n_nodes).map(|_| AtomicU64::new(0)).collect(),
+            dead: (0..n_nodes).map(|_| AtomicBool::new(false)).collect(),
             spill_dir,
             next_id: AtomicU64::new(1),
             next_seq: AtomicU64::new(0),
+            commits: AtomicU64::new(0),
+            hook_armed: AtomicBool::new(false),
+            commit_hook: Mutex::new(None),
             counters: StoreCounters::default(),
         })
     }
@@ -184,28 +245,73 @@ impl Store {
                 slot: Slot::Pending,
                 node,
                 seq,
+                refs: 1,
             },
         );
         ObjectRef::new(id, self.clone())
     }
 
+    /// Fabricate an additional handle to a live object, bumping its
+    /// reference count (recovery pins the arguments of tasks it is about
+    /// to resubmit this way). `None` when the entry no longer exists.
+    pub fn retain(self: &Arc<Self>, id: ObjectId) -> Option<ObjectRef> {
+        let mut t = self.table.lock().unwrap();
+        let entry = t.entries.get_mut(&id)?;
+        entry.refs += 1;
+        drop(t);
+        Some(ObjectRef::new(id, self.clone()))
+    }
+
+    /// Re-create a table entry for a fully released object in the
+    /// [`Slot::Lost`] state, so a lineage re-execution can recommit it.
+    /// Recovery uses this when a lost task's argument was consumed and
+    /// released before the failure; the argument's own producer must be
+    /// resubmitted transitively. Retains instead when the entry is live.
+    pub fn retain_or_resurrect(self: &Arc<Self>, id: ObjectId) -> (ObjectRef, ObjState) {
+        let mut t = self.table.lock().unwrap();
+        if let Some(entry) = t.entries.get_mut(&id) {
+            entry.refs += 1;
+            let state = state_of_slot(&entry.slot);
+            drop(t);
+            return (ObjectRef::new(id, self.clone()), state);
+        }
+        let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
+        t.entries.insert(
+            id,
+            Entry {
+                slot: Slot::Lost,
+                node: 0,
+                seq,
+                refs: 1,
+            },
+        );
+        drop(t);
+        (ObjectRef::new(id, self.clone()), ObjState::Missing)
+    }
+
     /// Store data for a previously declared object, wake waiters and fire
-    /// readiness watchers (outside the table lock).
-    pub fn commit(&self, id: ObjectId, node: usize, data: Vec<u8>) {
+    /// readiness watchers (outside the table lock). Returns `false` iff
+    /// the commit was discarded because `node` is dead — the caller's
+    /// process "died" mid-commit and must re-execute elsewhere.
+    pub fn commit(&self, id: ObjectId, node: usize, data: Vec<u8>) -> bool {
         let size = data.len() as u64;
         let fired: Vec<ReadyCallback> = {
             let mut t = self.table.lock().unwrap();
+            if self.dead[node].load(Ordering::Relaxed) {
+                return false;
+            }
             // The caller may have dropped every ObjectRef before the task
             // committed (fire-and-forget side-effect tasks): the result is
             // unobservable, drop it.
             let Some(entry) = t.entries.get_mut(&id) else {
-                return;
+                return true;
             };
             match entry.slot {
-                Slot::Pending => {}
+                // first production, or a recovery recommit of a lost object
+                Slot::Pending | Slot::Lost => {}
                 // Retried task re-committing: keep the first copy.
-                Slot::Memory(_) | Slot::Spilled(..) => return,
-                Slot::Released => return,
+                Slot::Memory(_) | Slot::Spilled(..) => return true,
+                Slot::Released | Slot::Unrecoverable(_) => return true,
             }
             entry.slot = Slot::Memory(Arc::new(data));
             entry.node = node;
@@ -218,12 +324,53 @@ impl Store {
         for cb in fired {
             cb();
         }
+        // The chaos trigger clock: only data-bearing commits count. When
+        // a hook is armed, the sequence number is assigned *under* the
+        // hook lock so observers see (seq, id) pairs in order and
+        // matched — "after the n-th commit" is a single well-defined
+        // point even when workers commit concurrently. Unarmed runs take
+        // the lock-free path.
+        if self.hook_armed.load(Ordering::Acquire) {
+            let hook = self.commit_hook.lock().unwrap();
+            let seq = self.commits.fetch_add(1, Ordering::SeqCst) + 1;
+            if let Some(hook) = &*hook {
+                hook(seq, id);
+            }
+        } else {
+            self.commits.fetch_add(1, Ordering::Relaxed);
+        }
+        true
+    }
+
+    /// Install the commit observer (replaces any previous one).
+    pub fn set_commit_hook(&self, hook: CommitHook) {
+        *self.commit_hook.lock().unwrap() = Some(hook);
+        self.hook_armed.store(true, Ordering::Release);
+    }
+
+    /// Stop delivering commits to the observer (the hook stays installed
+    /// but the commit hot path goes back to lock-free). The chaos
+    /// harness disarms itself once its last trigger has fired so an
+    /// exhausted plan does not serialize the rest of the run.
+    pub fn disarm_commit_hook(&self) {
+        self.hook_armed.store(false, Ordering::Release);
+    }
+
+    /// Data-bearing commits so far.
+    pub fn commit_count(&self) -> u64 {
+        self.commits.load(Ordering::SeqCst)
     }
 
     /// Immediately store data (driver put).
     pub fn put(self: &Arc<Self>, node: usize, data: Vec<u8>) -> ObjectRef {
         let r = self.declare(node);
-        self.commit(r.id, node, data);
+        if !self.commit(r.id, node, data) {
+            // the node died between target selection and the commit: the
+            // data is gone and a driver put has no lineage — surface a
+            // clear error instead of leaving the ref Pending (a silent
+            // hang for any later get)
+            self.poison(r.id, "put target node died before the data landed");
+        }
         r
     }
 
@@ -238,31 +385,46 @@ impl Store {
 
     /// Whether the object has reached a terminal state for dispatch
     /// purposes: committed (fetchable) *or* released/failed (a fetch will
-    /// error immediately). Only `Pending` objects are unresolved — the
-    /// scheduler must not dispatch a task whose argument may still be
-    /// produced, but it must dispatch one whose argument is poisoned so
-    /// the failure cascades instead of hanging.
+    /// error immediately). `Pending` and `Lost` objects are unresolved —
+    /// the scheduler must not dispatch a task whose argument may still be
+    /// (re)produced, but it must dispatch one whose argument is poisoned
+    /// so the failure cascades instead of hanging.
     pub fn is_resolved(&self, id: ObjectId) -> bool {
         let t = self.table.lock().unwrap();
-        !matches!(t.entries.get(&id).map(|e| &e.slot), Some(Slot::Pending))
+        !matches!(
+            t.entries.get(&id).map(|e| &e.slot),
+            Some(Slot::Pending) | Some(Slot::Lost)
+        )
+    }
+
+    /// The object's state as seen by the recovery walk.
+    pub fn state_of(&self, id: ObjectId) -> ObjState {
+        let t = self.table.lock().unwrap();
+        match t.entries.get(&id) {
+            None => ObjState::Missing,
+            Some(e) => state_of_slot(&e.slot),
+        }
     }
 
     /// Register `cb` to run once `id`'s data is available. Fires inline
     /// (on the calling thread) when the object is already committed, and
     /// on the committing worker's thread otherwise; never under the table
-    /// lock. Watchers of objects that fail or are released are dropped
-    /// without firing.
+    /// lock. A watcher of a lost object fires when recovery recommits it.
+    /// Watchers of objects that fail or are released are dropped without
+    /// firing.
     pub fn subscribe(&self, id: ObjectId, cb: ReadyCallback) {
         {
             let mut t = self.table.lock().unwrap();
             match t.entries.get(&id).map(|e| &e.slot) {
                 // committed: fall through and fire outside the lock
                 Some(Slot::Memory(_)) | Some(Slot::Spilled(..)) => {}
-                Some(Slot::Pending) => {
+                Some(Slot::Pending) | Some(Slot::Lost) => {
                     t.watchers.entry(id).or_default().push(cb);
                     return;
                 }
-                Some(Slot::Released) | None => return,
+                Some(Slot::Released) | Some(Slot::Unrecoverable(_)) | None => {
+                    return;
+                }
             }
         }
         cb();
@@ -271,7 +433,8 @@ impl Store {
     /// Node holding the most committed bytes among `ids` (Ray-style
     /// locality for `Placement::Any`). `None` when no id has committed
     /// data — the caller falls back to the shared no-locality queue.
-    /// Ties resolve to the lowest node index.
+    /// Dead nodes never win (they cannot run the task); ties resolve to
+    /// the lowest node index.
     pub fn locality_node(&self, ids: &[ObjectId]) -> Option<usize> {
         let t = self.table.lock().unwrap();
         let mut per_node: HashMap<usize, u64> = HashMap::new();
@@ -282,6 +445,9 @@ impl Store {
                     Slot::Spilled(_, size) => *size,
                     _ => continue,
                 };
+                if self.dead[e.node].load(Ordering::Relaxed) {
+                    continue;
+                }
                 *per_node.entry(e.node).or_default() += bytes;
             }
         }
@@ -296,8 +462,17 @@ impl Store {
         self.resident_gauge[node].load(Ordering::Relaxed)
     }
 
+    /// Whether `node` has been killed ([`Store::fail_node`]).
+    pub fn is_dead(&self, node: usize) -> bool {
+        self.dead[node].load(Ordering::Relaxed)
+    }
+
     /// Blocking fetch from `requesting_node`; accounts a transfer when the
-    /// object lives on another node, restores from disk if spilled.
+    /// object lives on another node, restores from disk if spilled. The
+    /// driver (`requesting_node == usize::MAX`) blocks through a
+    /// [`Slot::Lost`] window until recovery recommits; workers fail fast
+    /// with [`DfError::ObjectLost`] so their slot is freed for the
+    /// reconstruction itself (the scheduler re-parks the task).
     pub fn get(&self, id: ObjectId, requesting_node: usize) -> Result<Arc<Vec<u8>>, DfError> {
         let mut t = self.table.lock().unwrap();
         loop {
@@ -305,6 +480,19 @@ impl Store {
             match &entry.slot {
                 Slot::Pending => {
                     t = self.ready.wait(t).unwrap();
+                }
+                Slot::Lost => {
+                    if requesting_node == usize::MAX {
+                        t = self.ready.wait(t).unwrap();
+                    } else {
+                        return Err(DfError::ObjectLost(id));
+                    }
+                }
+                Slot::Unrecoverable(reason) => {
+                    return Err(DfError::Unrecoverable {
+                        id,
+                        reason: reason.to_string(),
+                    });
                 }
                 Slot::Released => return Err(DfError::ObjectReleased(id)),
                 Slot::Memory(data) => {
@@ -342,12 +530,22 @@ impl Store {
 
     /// Mark a declared object as failed (its producing task exhausted
     /// retries). Waiters observe `ObjectReleased` instead of blocking
-    /// forever — failures cascade to downstream tasks, as in Ray.
+    /// forever — failures cascade to downstream tasks, as in Ray. A
+    /// *lost* object whose reconstruction fails keeps its recovery
+    /// diagnostic: it poisons as `Unrecoverable` naming the failure,
+    /// rather than masquerading as an ordinary release.
     pub fn fail(&self, id: ObjectId) {
         let mut t = self.table.lock().unwrap();
         if let Some(entry) = t.entries.get_mut(&id) {
-            if matches!(entry.slot, Slot::Pending) {
-                entry.slot = Slot::Released;
+            match entry.slot {
+                Slot::Pending => entry.slot = Slot::Released,
+                Slot::Lost => {
+                    entry.slot = Slot::Unrecoverable(Arc::from(
+                        "lost in a node failure and the lineage \
+                         re-execution failed",
+                    ));
+                }
+                _ => {}
             }
         }
         // Readiness watchers never fire for a poisoned object.
@@ -356,10 +554,82 @@ impl Store {
         self.ready.notify_all();
     }
 
-    /// Drop the object (last `ObjectRef` clone was dropped).
+    /// Mark a lost object as unreconstructable with a diagnostic reason.
+    /// Waiters observe [`DfError::Unrecoverable`] naming the cause.
+    pub fn poison(&self, id: ObjectId, reason: &str) {
+        let mut t = self.table.lock().unwrap();
+        if let Some(entry) = t.entries.get_mut(&id) {
+            if matches!(entry.slot, Slot::Pending | Slot::Lost) {
+                entry.slot = Slot::Unrecoverable(Arc::from(reason));
+            }
+        }
+        t.watchers.remove(&id);
+        drop(t);
+        self.ready.notify_all();
+    }
+
+    /// Kill `node`: mark it dead and flip every object resident in its
+    /// memory to [`Slot::Lost`], returning the lost ids for the lineage
+    /// walk. Spilled copies survive (durable storage); future commits
+    /// attributed to the node are discarded.
+    pub fn fail_node(&self, node: usize) -> Vec<ObjectId> {
+        let mut t = self.table.lock().unwrap();
+        self.dead[node].store(true, Ordering::SeqCst);
+        let mut lost = Vec::new();
+        let mut lost_bytes = 0u64;
+        for (id, e) in t.entries.iter_mut() {
+            if e.node == node {
+                if let Slot::Memory(d) = &e.slot {
+                    lost_bytes += d.len() as u64;
+                    e.slot = Slot::Lost;
+                    lost.push(*id);
+                }
+            }
+        }
+        self.set_resident(&mut t, node, 0);
+        self.counters
+            .objects_lost
+            .fetch_add(lost.len() as u64, Ordering::Relaxed);
+        self.counters
+            .lost_bytes
+            .fetch_add(lost_bytes, Ordering::Relaxed);
+        drop(t);
+        // Wake blocked fetchers so worker-side gets observe ObjectLost.
+        self.ready.notify_all();
+        lost
+    }
+
+    /// Drop one object's in-memory data ([`Slot::Lost`]): the chaos
+    /// harness's single-object loss. Returns `false` when the object has
+    /// no resident data to lose (pending, spilled, or gone).
+    pub fn drop_object(&self, id: ObjectId) -> bool {
+        let mut t = self.table.lock().unwrap();
+        let Some(entry) = t.entries.get_mut(&id) else {
+            return false;
+        };
+        let Slot::Memory(d) = &entry.slot else {
+            return false;
+        };
+        let bytes = d.len() as u64;
+        let node = entry.node;
+        entry.slot = Slot::Lost;
+        let resident = t.resident[node].saturating_sub(bytes);
+        self.set_resident(&mut t, node, resident);
+        self.counters.objects_lost.fetch_add(1, Ordering::Relaxed);
+        self.counters.lost_bytes.fetch_add(bytes, Ordering::Relaxed);
+        drop(t);
+        self.ready.notify_all();
+        true
+    }
+
+    /// Drop the object (an `ObjectRef` handle family was dropped).
     fn release(&self, id: ObjectId) {
         let mut t = self.table.lock().unwrap();
         if let Some(entry) = t.entries.get_mut(&id) {
+            entry.refs = entry.refs.saturating_sub(1);
+            if entry.refs > 0 {
+                return;
+            }
             let freed = match &entry.slot {
                 Slot::Memory(d) => {
                     let n = d.len() as u64;
@@ -439,7 +709,18 @@ impl Store {
                 .counters
                 .backpressure_stalls
                 .load(Ordering::Relaxed),
+            objects_lost: self.counters.objects_lost.load(Ordering::Relaxed),
+            lost_bytes: self.counters.lost_bytes.load(Ordering::Relaxed),
         }
+    }
+}
+
+fn state_of_slot(slot: &Slot) -> ObjState {
+    match slot {
+        Slot::Memory(_) | Slot::Spilled(..) => ObjState::Available,
+        Slot::Pending => ObjState::Pending,
+        Slot::Lost => ObjState::Lost,
+        Slot::Released | Slot::Unrecoverable(_) => ObjState::Terminal,
     }
 }
 
@@ -526,6 +807,33 @@ mod tests {
     }
 
     #[test]
+    fn retain_adds_an_independent_refcount() {
+        let s = test_store(1, u64::MAX);
+        let r = s.put(0, vec![0u8; 10]);
+        let fabricated = s.retain(r.id).expect("live object");
+        drop(r); // original family gone; fabricated handle keeps it alive
+        assert_eq!(s.get(fabricated.id, 0).unwrap().len(), 10);
+        drop(fabricated);
+        assert_eq!(s.stats().resident_bytes, 0);
+        assert!(s.retain(ObjectId(999)).is_none());
+    }
+
+    #[test]
+    fn retain_or_resurrect_revives_released_entries() {
+        let s = test_store(1, u64::MAX);
+        let r = s.put(0, vec![7u8; 4]);
+        let id = r.id;
+        drop(r);
+        assert_eq!(s.state_of(id), ObjState::Missing);
+        let (rref, state) = s.retain_or_resurrect(id);
+        assert_eq!(state, ObjState::Missing);
+        assert_eq!(s.state_of(id), ObjState::Lost);
+        // a recovery recommit brings the data back
+        assert!(s.commit(id, 0, vec![7u8; 4]));
+        assert_eq!(*s.get(rref.id, 0).unwrap(), vec![7u8; 4]);
+    }
+
+    #[test]
     fn double_commit_keeps_first() {
         let s = test_store(1, u64::MAX);
         let r = s.declare(0);
@@ -606,5 +914,103 @@ mod tests {
         // a late commit on a poisoned object is a no-op too
         s.commit(r.id, 0, vec![9]);
         assert_eq!(fired.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn fail_node_loses_resident_objects_and_discards_commits() {
+        let s = test_store(2, u64::MAX);
+        let resident = s.put(0, vec![1u8; 32]);
+        let declared = s.declare(0);
+        let elsewhere = s.put(1, vec![2u8; 8]);
+        let lost = s.fail_node(0);
+        assert_eq!(lost, vec![resident.id]);
+        assert!(s.is_dead(0));
+        assert_eq!(s.resident_on(0), 0);
+        assert_eq!(s.state_of(resident.id), ObjState::Lost);
+        // workers fail fast on lost data; other nodes untouched
+        assert!(matches!(
+            s.get(resident.id, 1),
+            Err(DfError::ObjectLost(_))
+        ));
+        assert_eq!(*s.get(elsewhere.id, 0).unwrap(), vec![2u8; 8]);
+        // a commit attributed to the dead node is discarded
+        assert!(!s.commit(declared.id, 0, vec![9u8; 4]));
+        assert_eq!(s.state_of(declared.id), ObjState::Pending);
+        // a recovery recommit on a *live* node restores the lost object
+        assert!(s.commit(resident.id, 1, vec![1u8; 32]));
+        assert_eq!(*s.get(resident.id, 0).unwrap(), vec![1u8; 32]);
+        let st = s.stats();
+        assert_eq!(st.objects_lost, 1);
+        assert_eq!(st.lost_bytes, 32);
+    }
+
+    #[test]
+    fn spilled_copies_survive_node_failure() {
+        let s = test_store(1, 10);
+        let r = s.put(0, vec![5u8; 100]); // immediately spilled
+        assert_eq!(s.stats().spills, 1);
+        let lost = s.fail_node(0);
+        assert!(lost.is_empty(), "spilled objects are not lost");
+        // recovery re-resolves through the spilled copy
+        assert_eq!(*s.get(r.id, usize::MAX).unwrap(), vec![5u8; 100]);
+    }
+
+    #[test]
+    fn poison_surfaces_a_clear_error() {
+        let s = test_store(1, u64::MAX);
+        let r = s.put(0, vec![1u8; 4]);
+        assert!(s.drop_object(r.id));
+        s.poison(r.id, "no lineage recorded");
+        let err = s.get(r.id, 0).unwrap_err().to_string();
+        assert!(err.contains("unrecoverable"), "{err}");
+        assert!(err.contains("no lineage recorded"), "{err}");
+        // terminal for dispatch: consumers cascade instead of waiting
+        assert!(s.is_resolved(r.id));
+    }
+
+    #[test]
+    fn drop_object_only_hits_resident_data() {
+        let s = test_store(1, u64::MAX);
+        let pending = s.declare(0);
+        assert!(!s.drop_object(pending.id));
+        let r = s.put(0, vec![0u8; 16]);
+        assert!(s.drop_object(r.id));
+        assert_eq!(s.resident_on(0), 0);
+        assert!(!s.drop_object(r.id), "already lost");
+    }
+
+    #[test]
+    fn commit_hook_sees_data_bearing_commits_in_sequence() {
+        use std::sync::atomic::AtomicU64 as A64;
+        let s = test_store(1, u64::MAX);
+        let seen = Arc::new(A64::new(0));
+        let seen2 = seen.clone();
+        s.set_commit_hook(Box::new(move |seq, _id| {
+            seen2.store(seq, Ordering::SeqCst);
+        }));
+        let r = s.put(0, vec![1]);
+        assert_eq!(seen.load(Ordering::SeqCst), 1);
+        assert_eq!(s.commit_count(), 1);
+        // duplicate commits do not advance the clock
+        s.commit(r.id, 0, vec![2]);
+        assert_eq!(s.commit_count(), 1);
+        s.put(0, vec![3]);
+        assert_eq!(seen.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn subscribe_on_lost_object_fires_at_recommit() {
+        use std::sync::atomic::AtomicUsize;
+        let s = test_store(1, u64::MAX);
+        let r = s.put(0, vec![1u8; 8]);
+        assert!(s.drop_object(r.id));
+        let fired = Arc::new(AtomicUsize::new(0));
+        let f = fired.clone();
+        s.subscribe(r.id, Box::new(move || {
+            f.fetch_add(1, Ordering::SeqCst);
+        }));
+        assert_eq!(fired.load(Ordering::SeqCst), 0);
+        assert!(s.commit(r.id, 0, vec![1u8; 8]));
+        assert_eq!(fired.load(Ordering::SeqCst), 1);
     }
 }

@@ -17,7 +17,9 @@
 //! — partition planning, task bodies, the merge controller — while a
 //! Ray-like distributed-futures runtime ([`distfut`]) owns the data
 //! plane: task execution, object transfer, memory management with disk
-//! spilling, and fault recovery.
+//! spilling, and fault recovery — task retries *and* lineage-based
+//! reconstruction after whole-node loss, deterministically testable via
+//! the [`distfut::chaos`] harness ([`shuffle::ShuffleJob::chaos`]).
 //!
 //! The compute hot-spot (sorting, partitioning and merging record arrays;
 //! the paper's 300-line C++ component) is implemented as Pallas/JAX kernels
@@ -64,6 +66,8 @@ pub mod prelude {
     pub use crate::cluster::ClusterSpec;
     pub use crate::coordinator::{run_cloudsort, JobSpec};
     pub use crate::cost::CostModel;
+    pub use crate::distfut::chaos::{ChaosEvent, ChaosHarness, ChaosPlan};
+    pub use crate::distfut::RecoveryStats;
     pub use crate::runtime::Backend;
     pub use crate::s3sim::S3;
     pub use crate::shuffle::{

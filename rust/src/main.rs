@@ -15,6 +15,7 @@ use std::path::PathBuf;
 
 use exoshuffle::config::{parse_bytes, Config};
 use exoshuffle::coordinator::JobSpec;
+use exoshuffle::distfut::chaos::ChaosPlan;
 use exoshuffle::cost::{CostModel, RunProfile};
 use exoshuffle::runtime::Backend;
 use exoshuffle::shuffle::{list_strategies, strategy_by_name, ShuffleJob};
@@ -102,6 +103,9 @@ COMMANDS:
            --artifacts DIR     artifact dir (default ./artifacts)
            --config FILE       TOML config (overrides --size/--workers)
            --no-backpressure   disable merge backpressure (ablation)
+           --chaos-kill N@C    kill node N after the C-th commit of the
+                               sort (lineage recovery demo; repeatable
+                               via comma: 1@10,2@40)
   sim    simulate the full 100 TB benchmark (Table 1 / Figure 1)
            --runs 3            number of runs (Table 1 rows)
            --strategy NAME     topology to replay (default two-stage-merge)
@@ -134,6 +138,27 @@ fn print_strategies(sim_only: bool) {
         println!("  {:<16} stages {:?}", s.name(), s.stage_names());
         println!("  {:<16}   {}", "", s.describe());
     }
+}
+
+/// Parse `--chaos-kill` values: `NODE@COMMITS`, comma-separated for
+/// multiple kills (e.g. `1@10,2@40`).
+fn parse_chaos_kills(value: &str) -> Result<ChaosPlan, String> {
+    let mut plan = ChaosPlan::new();
+    for part in value.split(',') {
+        let (node, commits) = part
+            .split_once('@')
+            .ok_or_else(|| format!("--chaos-kill wants NODE@COMMITS, got '{part}'"))?;
+        let node: usize = node
+            .trim()
+            .parse()
+            .map_err(|_| format!("bad node '{node}' in --chaos-kill"))?;
+        let commits: u64 = commits
+            .trim()
+            .parse()
+            .map_err(|_| format!("bad commit count '{commits}' in --chaos-kill"))?;
+        plan = plan.kill_node(node, commits);
+    }
+    Ok(plan)
 }
 
 fn cmd_sort(flags: &HashMap<String, String>) -> anyhow::Result<()> {
@@ -193,10 +218,13 @@ fn cmd_sort(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         backend.name(),
         strategy.name(),
     );
-    let report = ShuffleJob::new(spec.clone())
+    let mut job = ShuffleJob::new(spec.clone())
         .strategy_arc(strategy)
-        .backend(backend)
-        .run()?;
+        .backend(backend);
+    if let Some(plan) = flags.get("chaos-kill") {
+        job = job.chaos(parse_chaos_kills(plan).map_err(|e| anyhow::anyhow!(e))?);
+    }
+    let report = job.run()?;
     println!("generate:     {:>8.2}s", report.gen_secs);
     for stage in &report.stages {
         println!("{:<13} {:>8.2}s", format!("{}:", stage.name), stage.secs);
@@ -218,6 +246,23 @@ fn cmd_sort(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         human_bytes(report.store.transfer_bytes),
         report.store.spills,
     );
+    for rec in &report.chaos {
+        println!(
+            "chaos: t={:.2}s commit#{} {:?} -> {}",
+            rec.at_secs, rec.after_commits, rec.event, rec.outcome
+        );
+    }
+    if report.recovery.nodes_killed > 0 {
+        println!(
+            "recovery: {} node(s) killed, {} objects lost, \
+             {} tasks resubmitted, {} rerouted, {} unrecoverable",
+            report.recovery.nodes_killed,
+            report.recovery.objects_lost,
+            report.recovery.tasks_resubmitted,
+            report.recovery.tasks_rerouted,
+            report.recovery.objects_unrecoverable,
+        );
+    }
     println!(
         "validation: {} (records={}, checksum={:#x})",
         if report.validation.valid { "PASS" } else { "FAIL" },
@@ -278,11 +323,12 @@ fn cmd_sort(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         );
         for t in &timelines {
             println!(
-                "  node {:<2} busy={:>8.2}s util={:>5.1}% retries={}",
+                "  node {:<2} busy={:>8.2}s util={:>5.1}% retries={} recoveries={}",
                 t.node,
                 t.busy_secs(),
                 t.utilization() * 100.0,
                 t.retried_attempts(),
+                t.recovery_attempts(),
             );
         }
     }

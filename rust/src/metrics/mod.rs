@@ -24,8 +24,12 @@ pub struct TaskEvent {
     pub end: f64,
     pub ok: bool,
     /// 0 for a first execution, incremented per retry — utilization
-    /// reports can tell recovery work from first-attempt work.
+    /// reports can tell retry work from first-attempt work.
     pub attempt: u32,
+    /// True for node-failure recovery work: lineage re-executions,
+    /// dead-node reroutes, and the `node-killed-*` marker events the
+    /// scheduler emits at each kill.
+    pub recovery: bool,
 }
 
 impl TaskEvent {
@@ -72,6 +76,7 @@ mod tests {
             end,
             ok: true,
             attempt: 0,
+            recovery: false,
         }
     }
 

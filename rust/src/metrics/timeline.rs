@@ -87,9 +87,16 @@ impl NodeTimeline {
         }
     }
 
-    /// Attempts that were retries (recovery work, not first executions).
+    /// Attempts that were retries (repeat executions after a task-level
+    /// failure, not first executions).
     pub fn retried_attempts(&self) -> usize {
         self.events.iter().filter(|e| e.attempt > 0).count()
+    }
+
+    /// Node-failure recovery work on this node: lineage re-executions,
+    /// dead-node reroutes, and kill markers ([`TaskEvent::recovery`]).
+    pub fn recovery_attempts(&self) -> usize {
+        self.events.iter().filter(|e| e.recovery).count()
     }
 }
 
@@ -125,6 +132,7 @@ mod tests {
             end,
             ok: true,
             attempt,
+            recovery: false,
         }
     }
 
@@ -188,5 +196,70 @@ mod tests {
         assert_eq!(nodes[0].busy_secs(), 0.0);
         assert_eq!(nodes[0].span_secs(), 0.0);
         assert_eq!(nodes[0].utilization(), 0.0);
+        assert_eq!(nodes[0].retried_attempts(), 0);
+        assert_eq!(nodes[0].recovery_attempts(), 0);
+    }
+
+    #[test]
+    fn empty_event_list_has_zero_overlap_and_no_intervals() {
+        assert_eq!(family_intervals(&[], "map"), vec![]);
+        assert_eq!(overlap_secs(&[], "map", "reduce"), 0.0);
+        // one empty side is enough for zero overlap
+        let events = vec![ev("map-1", 0, 0.0, 5.0, 0)];
+        assert_eq!(overlap_secs(&events, "map", "reduce"), 0.0);
+        assert_eq!(overlap_secs(&events, "reduce", "map"), 0.0);
+        assert_eq!(per_node_timelines(&[], 3).len(), 3);
+    }
+
+    #[test]
+    fn single_node_run_collects_every_event() {
+        let events = vec![
+            ev("map-1", 0, 0.0, 1.0, 0),
+            ev("merge-1", 0, 1.0, 2.0, 0),
+            ev("reduce-1", 0, 2.0, 4.0, 0),
+        ];
+        let nodes = per_node_timelines(&events, 1);
+        assert_eq!(nodes.len(), 1);
+        assert_eq!(nodes[0].events.len(), 3);
+        assert!((nodes[0].busy_secs() - 4.0).abs() < 1e-12);
+        assert!((nodes[0].utilization() - 1.0).abs() < 1e-12);
+        // events on out-of-range nodes are dropped, not misfiled
+        let stray = vec![ev("map-9", 5, 0.0, 1.0, 0)];
+        let nodes = per_node_timelines(&stray, 1);
+        assert_eq!(nodes[0].events.len(), 0);
+    }
+
+    #[test]
+    fn overlap_is_exactly_zero_when_stages_are_strictly_serial() {
+        // stages that touch at a boundary instant share no wall time
+        let events = vec![
+            ev("map-1", 0, 0.0, 2.0, 0),
+            ev("map-2", 1, 1.0, 3.0, 0),
+            ev("merge-1", 0, 3.0, 5.0, 0),
+            ev("reduce-1", 0, 5.0, 6.0, 0),
+        ];
+        assert_eq!(overlap_secs(&events, "map", "merge"), 0.0);
+        assert_eq!(overlap_secs(&events, "merge", "reduce"), 0.0);
+        assert_eq!(overlap_secs(&events, "map", "reduce"), 0.0);
+    }
+
+    #[test]
+    fn recovery_attempts_counted_separately_from_retries() {
+        let mut kill = ev("node-killed-0", 0, 2.0, 2.0, 0);
+        kill.ok = false;
+        kill.recovery = true;
+        let mut reexec = ev("map-3", 1, 2.5, 3.5, 0);
+        reexec.recovery = true;
+        let events = vec![
+            ev("map-1", 0, 0.0, 2.0, 0),
+            ev("map-1", 0, 2.0, 3.0, 1), // plain retry
+            kill,
+            reexec,
+        ];
+        let nodes = per_node_timelines(&events, 2);
+        assert_eq!(nodes[0].retried_attempts(), 1);
+        assert_eq!(nodes[0].recovery_attempts(), 1, "kill marker counts");
+        assert_eq!(nodes[1].retried_attempts(), 0);
+        assert_eq!(nodes[1].recovery_attempts(), 1, "re-execution counts");
     }
 }

@@ -4,10 +4,16 @@
 //! "network failures and worker process failures" transparently. To test
 //! that path we inject failures deterministically: a `FaultPlan` fails a
 //! request with probability `p`, decided by hashing (op, bucket, key,
-//! attempt counter) with a seed — reproducible across runs, and a retried
-//! request (new attempt index) can succeed, like a transient network error.
+//! attempt index) with a seed. The attempt index is tracked *per request
+//! identity*: retrying the same (op, bucket, key) re-hashes with the next
+//! index — so a transient failure can clear on retry — while requests to
+//! other keys never perturb the decision. Same seed + same per-key
+//! request sequence ⇒ identical failure set, regardless of how requests
+//! from concurrent tasks interleave globally.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 use crate::util::rng::mix;
 
@@ -22,7 +28,9 @@ pub struct FaultPlan {
     /// tests); u64::MAX = unlimited.
     pub max_failures: u64,
     injected: AtomicU64,
-    sequence: AtomicU64,
+    /// Attempt index per request identity (hash of op/bucket/key): a
+    /// retried request draws with a fresh index, others are unaffected.
+    attempts: Mutex<HashMap<u64, u64>>,
 }
 
 impl FaultPlan {
@@ -38,7 +46,7 @@ impl FaultPlan {
             seed,
             max_failures: u64::MAX,
             injected: AtomicU64::new(0),
-            sequence: AtomicU64::new(0),
+            attempts: Mutex::new(HashMap::new()),
         }
     }
 
@@ -48,17 +56,36 @@ impl FaultPlan {
         self
     }
 
-    /// Decide whether this request fails (advances the plan's sequence).
+    /// Hash of the request identity, with field separators so
+    /// ("GET", "ab", "c") and ("GET", "a", "bc") differ.
+    fn request_hash(&self, op: &str, bucket: &str, key: &str) -> u64 {
+        let mut h = self.seed;
+        for field in [op, bucket, key] {
+            for b in field.bytes() {
+                h = mix(h ^ b as u64);
+            }
+            h = mix(h ^ 0xFF00);
+        }
+        h
+    }
+
+    /// Decide whether this request fails (advances the request's attempt
+    /// index).
     pub fn should_fail(&self, op: &str, bucket: &str, key: &str) -> bool {
         if self.probability <= 0.0 {
             return false;
         }
-        let seq = self.sequence.fetch_add(1, Ordering::Relaxed);
-        let mut h = self.seed ^ seq.wrapping_mul(0x9E3779B97F4A7C15);
-        for b in op.bytes().chain(bucket.bytes()).chain(key.bytes()) {
-            h = mix(h ^ b as u64);
-        }
-        let draw = (mix(h) >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        let h = self.request_hash(op, bucket, key);
+        let attempt = {
+            let mut attempts = self.attempts.lock().unwrap();
+            let counter = attempts.entry(h).or_insert(0);
+            let a = *counter;
+            *counter += 1;
+            a
+        };
+        let draw = (mix(h ^ attempt.wrapping_mul(0x9E3779B97F4A7C15)) >> 11)
+            as f64
+            * (1.0 / (1u64 << 53) as f64);
         if draw < self.probability {
             let prior = self.injected.fetch_add(1, Ordering::Relaxed);
             if prior < self.max_failures {
@@ -114,5 +141,59 @@ mod tests {
             .count();
         assert_eq!(fails, 5);
         assert_eq!(p.injected(), 5);
+        // past the cap the plan is inert, even for fresh keys and retries
+        assert!(!p.should_fail("GET", "b", "k0"));
+        assert!(!p.should_fail("GET", "b", "brand-new"));
+        assert_eq!(p.injected(), 5);
+    }
+
+    #[test]
+    fn same_seed_and_request_sequence_gives_identical_failure_set() {
+        let run = || {
+            let p = FaultPlan::with_probability(0.3, 99);
+            (0..300)
+                .map(|i| p.should_fail("GET", "b", &format!("k{}", i % 40)))
+                .collect::<Vec<bool>>()
+        };
+        assert_eq!(run(), run());
+        // a different seed draws a different set
+        let other = FaultPlan::with_probability(0.3, 100);
+        let set: Vec<bool> = (0..300)
+            .map(|i| other.should_fail("GET", "b", &format!("k{}", i % 40)))
+            .collect();
+        assert_ne!(set, run());
+    }
+
+    #[test]
+    fn decision_depends_only_on_request_identity_and_attempt() {
+        // the module-doc promise: a retried request re-hashes with its
+        // own next attempt index, so interleaved requests to *other*
+        // keys cannot perturb a key's retry outcomes
+        let solo_plan = FaultPlan::with_probability(0.5, 7);
+        let solo: Vec<bool> = (0..20)
+            .map(|_| solo_plan.should_fail("GET", "b", "x"))
+            .collect();
+        let interleaved_plan = FaultPlan::with_probability(0.5, 7);
+        let interleaved: Vec<bool> = (0..20)
+            .map(|i| {
+                interleaved_plan.should_fail("GET", "b", &format!("noise-{i}"));
+                interleaved_plan.should_fail("PUT", "other", "y");
+                interleaved_plan.should_fail("GET", "b", "x")
+            })
+            .collect();
+        assert_eq!(solo, interleaved);
+    }
+
+    #[test]
+    fn field_boundaries_are_part_of_the_identity() {
+        let p = FaultPlan::with_probability(0.5, 1);
+        // ("ab","c") and ("a","bc") must track separate attempt counters;
+        // draw many attempts from each and require the sequences differ
+        let a: Vec<bool> =
+            (0..64).map(|_| p.should_fail("GET", "ab", "c")).collect();
+        let q = FaultPlan::with_probability(0.5, 1);
+        let b: Vec<bool> =
+            (0..64).map(|_| q.should_fail("GET", "a", "bc")).collect();
+        assert_ne!(a, b, "identities must not collide across field splits");
     }
 }

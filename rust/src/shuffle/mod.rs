@@ -45,6 +45,7 @@ pub use two_stage::TwoStageMerge;
 
 use crate::coordinator::plan::JobSpec;
 use crate::coordinator::{generate, validate};
+use crate::distfut::chaos::{ChaosHarness, ChaosPlan};
 use crate::distfut::{Runtime, RuntimeOptions};
 use crate::runtime::Backend;
 use crate::s3sim::S3;
@@ -181,6 +182,7 @@ pub struct ShuffleJob {
     strategy: Arc<dyn ShuffleStrategy>,
     backend: Backend,
     s3: Option<S3>,
+    chaos: Option<ChaosPlan>,
 }
 
 impl ShuffleJob {
@@ -190,6 +192,7 @@ impl ShuffleJob {
             strategy: Arc::new(TwoStageMerge),
             backend: Backend::Native,
             s3: None,
+            chaos: None,
         }
     }
 
@@ -220,6 +223,16 @@ impl ShuffleJob {
         self
     }
 
+    /// Arm a deterministic failure schedule over the timed sort (§2.5
+    /// resilience): the plan's commit-count triggers start counting after
+    /// input generation, so injection points land inside the shuffle
+    /// itself. The fired events and recovery counters come back on
+    /// [`JobReport::chaos`] / [`JobReport::recovery`].
+    pub fn chaos(mut self, plan: ChaosPlan) -> ShuffleJob {
+        self.chaos = Some(plan);
+        self
+    }
+
     /// Run the full pipeline: generate → warmup → timed shuffle stages →
     /// validate. The returned report carries Table 1 and Table 2 inputs.
     pub fn run(self) -> anyhow::Result<JobReport> {
@@ -245,6 +258,13 @@ impl ShuffleJob {
         s3.reset_counters(); // Table 2 counts requests of the sort itself
 
         self.strategy.warmup(spec, &self.backend)?;
+
+        // Chaos (if any) arms against the post-generation commit clock:
+        // trigger thresholds are relative to the sort, not the prelude.
+        let harness = self
+            .chaos
+            .as_ref()
+            .map(|plan| ChaosHarness::arm(&rt, plan.clone()));
 
         // --- the timed shuffle: stage topology owned by the strategy ---
         let cx = ShuffleContext {
@@ -293,6 +313,8 @@ impl ShuffleJob {
             n_merge_tasks: outcome.n_merge_tasks,
             n_reduce_tasks: outcome.n_reduce_tasks,
             peak_unmerged_blocks: outcome.peak_unmerged_blocks,
+            recovery: rt.recovery_stats(),
+            chaos: harness.map(|h| h.log()).unwrap_or_default(),
         };
         rt.shutdown();
         Ok(report)

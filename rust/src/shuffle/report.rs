@@ -7,6 +7,8 @@
 //! keep working against any strategy's stage list.
 
 use crate::coordinator::plan::JobSpec;
+use crate::distfut::chaos::ChaosRecord;
+use crate::distfut::RecoveryStats;
 use crate::metrics::TaskEvent;
 use crate::s3sim::CounterSnapshot;
 use crate::sortlib::valsort::GlobalSummary;
@@ -46,6 +48,12 @@ pub struct JobReport {
     /// Peak per-worker count of shuffled-but-unmerged blocks — the
     /// memory exposure §2.3 backpressure bounds (ablation A1).
     pub peak_unmerged_blocks: usize,
+    /// Node-failure recovery counters (§2.5): kills, lost objects,
+    /// lineage resubmissions. All zero on an undisturbed run.
+    pub recovery: RecoveryStats,
+    /// Fired chaos events (empty unless the job armed a
+    /// [`crate::distfut::chaos::ChaosPlan`]).
+    pub chaos: Vec<ChaosRecord>,
 }
 
 /// valsort-equivalent global validation, plus the input/output checksum
@@ -172,6 +180,8 @@ mod tests {
             n_merge_tasks: 0,
             n_reduce_tasks: 0,
             peak_unmerged_blocks: 0,
+            recovery: RecoveryStats::default(),
+            chaos: vec![],
         }
     }
 

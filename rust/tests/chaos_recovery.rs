@@ -1,0 +1,151 @@
+//! Chaos-recovery integration tests (paper §2.5): seeded node kills and
+//! object losses injected mid-shuffle, with byte-identity assertions
+//! against fault-free runs. This is the ISSUE-3 acceptance suite — run
+//! it alone with `cargo test -q --test chaos_recovery`.
+
+use exoshuffle::coordinator::tasks::{bucket_of, output_key, OUTPUT_SALT};
+use exoshuffle::prelude::*;
+use exoshuffle::shuffle::strategy_by_name;
+
+/// Download every output partition, in order.
+fn output_bytes(spec: &JobSpec, s3: &S3) -> Vec<Vec<u8>> {
+    (0..spec.n_output_partitions)
+        .map(|r| {
+            s3.get(
+                &bucket_of(spec.seed ^ OUTPUT_SALT, r as u64, spec.s3_buckets),
+                &output_key(r),
+            )
+            .unwrap_or_else(|e| panic!("output partition {r}: {e}"))
+            .to_vec()
+        })
+        .collect()
+}
+
+/// The headline acceptance property: with a seeded chaos plan that kills
+/// a node mid-shuffle, every strategy completes and produces output
+/// byte-identical to its fault-free run.
+#[test]
+fn all_strategies_byte_identical_under_a_midrun_node_kill() {
+    let spec = JobSpec::scaled(4 << 20, 3);
+    for name in ["two-stage-merge", "simple", "streaming"] {
+        let strategy = strategy_by_name(name).expect("registered");
+        let clean_s3 = S3::with_buckets(spec.s3_buckets);
+        let clean = ShuffleJob::new(spec.clone())
+            .strategy_arc(strategy.clone())
+            .on(&clean_s3)
+            .run()
+            .unwrap();
+        assert!(clean.validation.valid, "{name} fault-free run");
+        assert_eq!(clean.recovery.nodes_killed, 0);
+        assert!(clean.chaos.is_empty());
+
+        // kill node 1 after the 10th commit of the sort: deep inside the
+        // map stage (the smallest strategy commits ≥ 72 blocks)
+        let chaos_s3 = S3::with_buckets(spec.s3_buckets);
+        let chaotic = ShuffleJob::new(spec.clone())
+            .strategy_arc(strategy)
+            .on(&chaos_s3)
+            .chaos(ChaosPlan::new().kill_node(1, 10))
+            .run()
+            .unwrap();
+        assert!(
+            chaotic.validation.valid,
+            "{name} under chaos: {:?}",
+            chaotic.validation
+        );
+        assert_eq!(
+            chaotic.recovery.nodes_killed, 1,
+            "{name}: the kill must have fired: {:?}",
+            chaotic.chaos
+        );
+        assert!(
+            chaotic.chaos[0].outcome.contains("killed node 1"),
+            "{name}: {:?}",
+            chaotic.chaos
+        );
+        assert_eq!(
+            chaotic.validation.summary.checksum,
+            clean.validation.summary.checksum,
+            "{name}: checksum must match the fault-free run"
+        );
+        assert_eq!(
+            output_bytes(&spec, &clean_s3),
+            output_bytes(&spec, &chaos_s3),
+            "{name}: every output partition must be byte-identical"
+        );
+    }
+}
+
+/// Multiple failures in one run: a node kill plus a targeted object loss,
+/// against the streaming strategy (whole DAG in flight when both strike).
+#[test]
+fn streaming_survives_a_kill_plus_an_object_loss() {
+    let spec = JobSpec::scaled(4 << 20, 4);
+    let clean = ShuffleJob::new(spec.clone())
+        .strategy(StreamingShuffle)
+        .run()
+        .unwrap();
+    let report = ShuffleJob::new(spec.clone())
+        .strategy(StreamingShuffle)
+        .chaos(ChaosPlan::new().kill_node(2, 8).lose_object(25))
+        .run()
+        .unwrap();
+    assert!(report.validation.valid, "{:?}", report.validation);
+    assert_eq!(report.chaos.len(), 2, "{:?}", report.chaos);
+    assert_eq!(report.recovery.nodes_killed, 1);
+    assert!(report.recovery.objects_lost >= 1);
+    assert_eq!(
+        report.validation.summary.checksum,
+        clean.validation.summary.checksum
+    );
+}
+
+/// Seeded plans are a pure function of their inputs, and riding one
+/// through a sort yields a valid, checksum-identical result.
+#[test]
+fn seeded_chaos_plans_are_reproducible_end_to_end() {
+    assert_eq!(
+        ChaosPlan::seeded_kills(0xC5A0, 3, 1, (5, 30)),
+        ChaosPlan::seeded_kills(0xC5A0, 3, 1, (5, 30)),
+    );
+    let spec = JobSpec::scaled(2 << 20, 3);
+    let clean = ShuffleJob::new(spec.clone()).run().unwrap();
+    let plan = ChaosPlan::seeded_kills(0xC5A0, spec.n_workers(), 1, (5, 30));
+    let report = ShuffleJob::new(spec.clone())
+        .chaos(plan.clone())
+        .run()
+        .unwrap();
+    assert!(report.validation.valid);
+    assert_eq!(report.recovery.nodes_killed, 1, "{:?}", report.chaos);
+    assert_eq!(
+        report.validation.summary.checksum,
+        clean.validation.summary.checksum
+    );
+    // same plan, fresh run: same victim (commit interleaving may differ,
+    // bytes may not)
+    let again = ShuffleJob::new(spec).chaos(plan).run().unwrap();
+    assert!(again.validation.valid);
+    assert_eq!(
+        again.validation.summary.checksum,
+        clean.validation.summary.checksum
+    );
+}
+
+/// A single-worker job cannot lose its only node: the trigger fires, the
+/// kill is refused, and the sort still completes.
+#[test]
+fn last_live_node_kill_is_refused_and_sort_completes() {
+    let spec = JobSpec::scaled(1 << 20, 1);
+    let report = ShuffleJob::new(spec)
+        .chaos(ChaosPlan::new().kill_node(0, 3))
+        .run()
+        .unwrap();
+    assert!(report.validation.valid);
+    assert_eq!(report.recovery.nodes_killed, 0);
+    assert_eq!(report.chaos.len(), 1);
+    assert!(
+        report.chaos[0].outcome.contains("skipped"),
+        "{:?}",
+        report.chaos
+    );
+}

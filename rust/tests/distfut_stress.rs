@@ -1,11 +1,14 @@
 //! Stress tests of the distributed-futures runtime: random DAGs, deep
-//! chains, wide fan-outs, concurrent submitters, and spill churn. These
-//! are the paper's §2.5 "for free" guarantees under load.
+//! chains, wide fan-outs, concurrent submitters, spill churn, and
+//! crash-recovery properties (seeded node kills mid-run with
+//! byte-identity assertions). These are the paper's §2.5 "for free"
+//! guarantees under load.
 
 use std::sync::Arc;
 
+use exoshuffle::distfut::chaos::{ChaosHarness, ChaosPlan};
 use exoshuffle::distfut::{
-    task_fn, Placement, Runtime, RuntimeOptions, TaskSpec,
+    task_fn, ObjectRef, Placement, Runtime, RuntimeOptions, TaskSpec,
 };
 use exoshuffle::util::rng::Xoshiro256;
 
@@ -239,6 +242,207 @@ fn failure_cascades_to_dependents() {
     assert!(h1.wait().is_err());
     let err = h2.wait().unwrap_err().to_string();
     assert!(err.contains("released"), "dependent should observe poisoned arg: {err}");
+}
+
+/// A deterministic layered DAG built entirely from tasks (sources too, so
+/// every object has lineage and any node may die). Returns the sink refs
+/// with their expected values; all intermediate refs are held by `keep`
+/// so lost objects always have live observers.
+fn sum_dag(
+    rt: &Arc<Runtime>,
+    nodes: usize,
+    keep: &mut Vec<ObjectRef>,
+) -> Vec<(ObjectRef, u64)> {
+    let mut layers: Vec<Vec<(ObjectRef, u64)>> = Vec::new();
+    let sources: Vec<(ObjectRef, u64)> = (0..8u64)
+        .map(|i| {
+            let v = 10 + i;
+            let (outs, _) = rt.submit(TaskSpec {
+                name: format!("src-{i}"),
+                placement: Placement::Node((i as usize) % nodes),
+                func: task_fn(move |_| Ok(vec![v.to_le_bytes().to_vec()])),
+                args: vec![],
+                num_returns: 1,
+                max_retries: 0,
+            });
+            (outs.into_iter().next().unwrap(), v)
+        })
+        .collect();
+    layers.push(sources);
+    for layer in 1..4 {
+        let prev = layers.last().unwrap().clone();
+        let mut next = Vec::new();
+        for j in 0..6usize {
+            // fixed fan-in of two, deterministic parent choice
+            let parents = [&prev[j % prev.len()], &prev[(j + 3) % prev.len()]];
+            let expect: u64 = parents.iter().map(|(_, v)| *v).sum();
+            let args: Vec<ObjectRef> =
+                parents.iter().map(|(r, _)| r.clone()).collect();
+            let placement = if j % 2 == 0 {
+                Placement::Any
+            } else {
+                Placement::Node((layer + j) % nodes)
+            };
+            let (outs, _) = rt.submit(TaskSpec {
+                name: format!("dag-{layer}-{j}"),
+                placement,
+                func: task_fn(|ctx| {
+                    let sum: u64 = ctx
+                        .args
+                        .iter()
+                        .map(|a| u64::from_le_bytes(a[..8].try_into().unwrap()))
+                        .sum();
+                    Ok(vec![sum.to_le_bytes().to_vec()])
+                }),
+                args,
+                num_returns: 1,
+                max_retries: 0,
+            });
+            next.push((outs.into_iter().next().unwrap(), expect));
+        }
+        layers.push(next);
+    }
+    for layer in &layers {
+        for (r, _) in layer {
+            keep.push(r.clone());
+        }
+    }
+    layers.pop().unwrap()
+}
+
+#[test]
+fn killing_each_node_in_turn_preserves_dag_results() {
+    // crash-recovery property: for every victim index, a seeded mid-run
+    // kill leaves the DAG's sink values identical to the no-fault run
+    // (the expectations double as the byte-identity oracle)
+    for victim in 0..3usize {
+        let rt = rt(3, 2, u64::MAX);
+        let harness =
+            ChaosHarness::arm(&rt, ChaosPlan::new().kill_node(victim, 4));
+        let mut keep = Vec::new();
+        let sinks = sum_dag(&rt, 3, &mut keep);
+        for (i, (r, expect)) in sinks.iter().enumerate() {
+            let buf = rt.get(r).unwrap();
+            assert_eq!(
+                u64::from_le_bytes(buf[..8].try_into().unwrap()),
+                *expect,
+                "victim {victim}, sink {i}"
+            );
+        }
+        assert_eq!(harness.fired(), 1, "victim {victim}: kill must fire");
+        let stats = rt.recovery_stats();
+        assert_eq!(stats.nodes_killed, 1, "victim {victim}");
+        rt.shutdown();
+    }
+}
+
+#[test]
+fn deep_chain_recovers_through_resurrected_lineage() {
+    // only the chain tail is kept alive: recovery must resurrect the
+    // released intermediates and re-execute the whole chain in order
+    let rt = rt(2, 2, u64::MAX);
+    let (outs, _) = rt.submit(TaskSpec {
+        name: "chain-0".into(),
+        placement: Placement::Node(0),
+        func: task_fn(|_| Ok(vec![1u64.to_le_bytes().to_vec()])),
+        args: vec![],
+        num_returns: 1,
+        max_retries: 0,
+    });
+    let mut prev = outs.into_iter().next().unwrap();
+    for i in 1..8u64 {
+        let (outs, _) = rt.submit(TaskSpec {
+            name: format!("chain-{i}"),
+            placement: Placement::Node(0),
+            func: task_fn(|ctx| {
+                let v = u64::from_le_bytes(ctx.args[0][..8].try_into().unwrap());
+                Ok(vec![(v + 1).to_le_bytes().to_vec()])
+            }),
+            args: vec![prev],
+            num_returns: 1,
+            max_retries: 0,
+        });
+        prev = outs.into_iter().next().unwrap();
+    }
+    rt.wait_quiescent();
+    let report = rt.kill_node(0).unwrap();
+    // intermediates were released: only the tail was resident, and the
+    // whole chain must come back as resubmissions
+    assert_eq!(report.objects_lost, 1, "{report:?}");
+    assert_eq!(report.tasks_resubmitted, 8, "{report:?}");
+    assert_eq!(report.objects_unrecoverable, 0, "{report:?}");
+    let buf = rt.get(&prev).unwrap();
+    assert_eq!(u64::from_le_bytes(buf[..8].try_into().unwrap()), 8);
+}
+
+#[test]
+fn truncated_lineage_surfaces_the_bounded_reconstruction_error() {
+    // same chain, but the depth cap is below the chain length: the lost
+    // tail must poison with a clear depth error instead of re-executing
+    // (or hanging its observer)
+    let rt = Runtime::new(RuntimeOptions {
+        n_nodes: 2,
+        slots_per_node: 2,
+        max_reconstruction_depth: 3,
+        ..Default::default()
+    });
+    let (outs, _) = rt.submit(TaskSpec {
+        name: "chain-0".into(),
+        placement: Placement::Node(0),
+        func: task_fn(|_| Ok(vec![1u64.to_le_bytes().to_vec()])),
+        args: vec![],
+        num_returns: 1,
+        max_retries: 0,
+    });
+    let mut prev = outs.into_iter().next().unwrap();
+    for i in 1..8u64 {
+        let (outs, _) = rt.submit(TaskSpec {
+            name: format!("chain-{i}"),
+            placement: Placement::Node(0),
+            func: task_fn(|ctx| {
+                let v = u64::from_le_bytes(ctx.args[0][..8].try_into().unwrap());
+                Ok(vec![(v + 1).to_le_bytes().to_vec()])
+            }),
+            args: vec![prev],
+            num_returns: 1,
+            max_retries: 0,
+        });
+        prev = outs.into_iter().next().unwrap();
+    }
+    rt.wait_quiescent();
+    let report = rt.kill_node(0).unwrap();
+    assert!(report.objects_unrecoverable >= 1, "{report:?}");
+    let err = rt.get(&prev).unwrap_err().to_string();
+    assert!(err.contains("unrecoverable"), "{err}");
+    assert!(err.contains("depth"), "{err}");
+    assert!(err.contains("max_reconstruction_depth"), "{err}");
+}
+
+#[test]
+fn disabled_lineage_poisons_lost_objects_with_a_clear_error() {
+    // record_lineage: false models fully truncated lineage — node loss
+    // must poison, not hang
+    let rt = Runtime::new(RuntimeOptions {
+        n_nodes: 2,
+        slots_per_node: 1,
+        record_lineage: false,
+        ..Default::default()
+    });
+    let (outs, h) = rt.submit(TaskSpec {
+        name: "src".into(),
+        placement: Placement::Node(0),
+        func: task_fn(|_| Ok(vec![vec![42u8; 8]])),
+        args: vec![],
+        num_returns: 1,
+        max_retries: 0,
+    });
+    h.wait().unwrap();
+    let report = rt.kill_node(0).unwrap();
+    assert_eq!(report.tasks_resubmitted, 0);
+    assert_eq!(report.objects_unrecoverable, 1);
+    let err = rt.get(&outs[0]).unwrap_err().to_string();
+    assert!(err.contains("unrecoverable"), "{err}");
+    assert!(err.contains("no lineage"), "{err}");
 }
 
 #[test]
