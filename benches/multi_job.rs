@@ -1,0 +1,62 @@
+//! Multi-tenant throughput: aggregate sorted bytes/second of a shared
+//! `JobService` running 1, 4 and 8 concurrent jobs on the same runtime.
+//!
+//! The multi-tenant promise is that consolidation beats serial
+//! dedicated runs: while one job waits on (simulated) S3, another's CPU
+//! burst fills the idle slots. This bench prints per-fleet aggregate
+//! throughput so scheduler changes keep that property measurable.
+//!
+//!     cargo bench --bench multi_job
+
+#[path = "harness.rs"]
+mod harness;
+
+use exoshuffle::prelude::*;
+
+/// Run `n_jobs` equal jobs concurrently; returns (wall seconds,
+/// aggregate bytes sorted).
+fn run_fleet(n_jobs: usize, size: u64, workers: usize) -> (f64, u64) {
+    let spec = JobSpec::scaled(size, workers);
+    let mut cfg = ServiceConfig::for_spec(&spec);
+    cfg.slots_per_node = 2; // scarce slots: contention is the point
+    let service = JobService::new(cfg);
+    let t = std::time::Instant::now();
+    let handles: Vec<JobHandle> = (0..n_jobs)
+        .map(|i| {
+            let mut s = spec.clone();
+            s.seed = 42 + i as u64;
+            ShuffleJob::new(s)
+                .name(format!("fleet-{i}"))
+                .submit(&service)
+                .expect("submit")
+        })
+        .collect();
+    for h in &handles {
+        let report = h.wait().expect("job");
+        assert!(report.validation.valid, "{} invalid", h.name());
+    }
+    let secs = t.elapsed().as_secs_f64();
+    service.shutdown();
+    (secs, n_jobs as u64 * size)
+}
+
+fn main() {
+    harness::section("multi-job aggregate throughput (shared JobService)");
+    let (size, workers) = (8u64 << 20, 2usize);
+    let mut baseline = 0.0f64;
+    for &n in &[1usize, 4, 8] {
+        let r = harness::bench(&format!("fleet_{n}_jobs"), 3, || {
+            let _ = run_fleet(n, size, workers);
+        });
+        let bytes = n as u64 * size;
+        let rate = bytes as f64 / r.mean_secs / (1 << 20) as f64;
+        if n == 1 {
+            baseline = rate;
+        }
+        println!(
+            "  {n} concurrent job(s): {rate:>8.1} MiB/s aggregate \
+             ({:.2}x the single-job rate)",
+            if baseline > 0.0 { rate / baseline } else { 0.0 },
+        );
+    }
+}

@@ -20,7 +20,7 @@ mod harness;
 use std::sync::Arc;
 
 use exoshuffle::distfut::{
-    task_fn, Placement, Runtime, RuntimeOptions, TaskSpec,
+    task_fn, JobId, Placement, Runtime, RuntimeOptions, TaskSpec,
 };
 
 fn rt() -> Arc<Runtime> {
@@ -33,6 +33,7 @@ fn rt() -> Arc<Runtime> {
 
 fn noop(name: String, args: Vec<exoshuffle::distfut::ObjectRef>) -> TaskSpec {
     TaskSpec {
+        job: JobId::ROOT,
         name,
         placement: Placement::Any,
         func: task_fn(|_| Ok(vec![vec![0u8]])),

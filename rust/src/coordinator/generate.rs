@@ -7,18 +7,20 @@ use anyhow::Context;
 use crate::coordinator::manifest::decode_gen_result;
 use crate::coordinator::plan::JobSpec;
 use crate::coordinator::tasks;
-use crate::distfut::Runtime;
+use crate::distfut::{JobId, Runtime};
 use crate::s3sim::S3;
 
-/// Generate all input partitions onto S3; returns the aggregate
-/// (record count, checksum) — the input manifest's integrity side.
+/// Generate all input partitions onto S3 on behalf of `job`; returns the
+/// aggregate (record count, checksum) — the input manifest's integrity
+/// side.
 pub fn generate_input(
     spec: &JobSpec,
     s3: &S3,
     rt: &Runtime,
+    job: JobId,
 ) -> anyhow::Result<(u64, u64)> {
     let results: Vec<_> = (0..spec.n_input_partitions)
-        .map(|p| rt.submit(tasks::gen_task(spec, s3, p)))
+        .map(|p| rt.submit_for(job, tasks::gen_task(spec, s3, p)))
         .collect();
     let mut records = 0u64;
     let mut checksum = 0u64;

@@ -25,7 +25,9 @@
 
 use std::sync::{Arc, Mutex, Weak};
 
-use crate::distfut::{DfError, ObjectRef, Placement, Runtime, TaskHandle, TaskSpec};
+use crate::distfut::{
+    DfError, JobId, ObjectRef, Placement, Runtime, TaskHandle, TaskSpec,
+};
 
 /// Builds the merge TaskSpec for a batch of blocks on a node.
 /// Arguments: (node, batch_index, blocks).
@@ -68,6 +70,9 @@ impl Inner {
 pub struct MergeController {
     /// Worker node this controller belongs to.
     pub node: usize,
+    /// Job the controller's merges belong to (multi-tenant runtimes run
+    /// one controller set per job).
+    job: JobId,
     /// Blocks per merge (threshold; paper: 40).
     threshold: usize,
     make_task: MergeTaskFactory,
@@ -85,24 +90,38 @@ fn launch(
     rt: &Runtime,
     make_task: &MergeTaskFactory,
     node: usize,
+    job: JobId,
     batch: Vec<ObjectRef>,
 ) {
     let spec = make_task(node, inner.merged_outputs.len(), batch);
     debug_assert!(matches!(spec.placement, Placement::Node(n) if n == node));
-    let (outputs, handle) = rt.submit(spec);
+    let (outputs, handle) = rt.submit_for(job, spec);
     inner.merged_outputs.push(outputs);
     inner.handles.push(handle);
 }
 
 impl MergeController {
+    /// A controller for [`JobId::ROOT`] (single-tenant runs and tests).
     pub fn new(
         node: usize,
         threshold: usize,
         rt: &Arc<Runtime>,
         make_task: MergeTaskFactory,
     ) -> Self {
+        Self::for_job(node, threshold, rt, JobId::ROOT, make_task)
+    }
+
+    /// A controller whose merges are submitted on behalf of `job`.
+    pub fn for_job(
+        node: usize,
+        threshold: usize,
+        rt: &Arc<Runtime>,
+        job: JobId,
+        make_task: MergeTaskFactory,
+    ) -> Self {
         MergeController {
             node,
+            job,
             threshold: threshold.max(1),
             make_task,
             rt: Arc::downgrade(rt),
@@ -129,7 +148,7 @@ impl MergeController {
         let inner = self.inner.clone();
         let weak_rt = self.rt.clone();
         let make_task = self.make_task.clone();
-        let (node, threshold) = (self.node, self.threshold);
+        let (node, job, threshold) = (self.node, self.job, self.threshold);
         rt.on_ready(&block, move || {
             let Some(rt) = weak_rt.upgrade() else { return };
             let mut g = inner.lock().unwrap();
@@ -143,7 +162,7 @@ impl MergeController {
             g.note_backlog();
             while g.buffered.len() >= threshold {
                 let batch: Vec<ObjectRef> = g.buffered.drain(..threshold).collect();
-                launch(&mut g, &rt, &make_task, node, batch);
+                launch(&mut g, &rt, &make_task, node, job, batch);
             }
         });
     }
@@ -160,7 +179,7 @@ impl MergeController {
         let mut pending = std::mem::take(&mut g.pending);
         batch.append(&mut pending);
         if !batch.is_empty() {
-            launch(&mut g, &rt, &self.make_task, self.node, batch);
+            launch(&mut g, &rt, &self.make_task, self.node, self.job, batch);
         }
     }
 
@@ -214,6 +233,7 @@ mod tests {
 
     fn noop_factory(returns: usize) -> MergeTaskFactory {
         Arc::new(move |node, batch, blocks| TaskSpec {
+            job: JobId::ROOT,
             name: format!("merge-{node}-{batch}"),
             placement: Placement::Node(node),
             func: task_fn(move |_ctx| Ok(vec![vec![1u8]; returns])),
@@ -247,6 +267,7 @@ mod tests {
         let mc = MergeController::new(0, 1, &rt, noop_factory(1));
         // a block whose data lands later: submit a slow producer
         let (outs, h) = rt.submit(TaskSpec {
+            job: JobId::ROOT,
             name: "slow".into(),
             placement: Placement::Node(0),
             func: task_fn(|_| {
@@ -295,6 +316,7 @@ mod tests {
         let mut handles = Vec::new();
         for i in 0..3u8 {
             let (outs, h) = rt.submit(TaskSpec {
+                job: JobId::ROOT,
                 name: format!("block-{i}"),
                 placement: Placement::Node(1),
                 func: task_fn(move |_| Ok(vec![vec![i; 64]])),
@@ -320,6 +342,7 @@ mod tests {
         let rt = Runtime::new(RuntimeOptions::default());
         let mc = MergeController::new(0, 10, &rt, noop_factory(1));
         let (outs, _h) = rt.submit(TaskSpec {
+            job: JobId::ROOT,
             name: "slow".into(),
             placement: Placement::Node(0),
             func: task_fn(|_| {

@@ -10,7 +10,7 @@ use std::sync::Arc;
 
 use crate::coordinator::manifest::{encode_gen_result, encode_summary};
 use crate::coordinator::plan::JobSpec;
-use crate::distfut::{task_fn, ObjectRef, Placement, TaskSpec};
+use crate::distfut::{task_fn, JobId, ObjectRef, Placement, TaskSpec};
 use crate::runtime::{self, Backend};
 use crate::s3sim::S3;
 use crate::sortlib::{
@@ -52,6 +52,7 @@ pub fn gen_task(spec: &JobSpec, s3: &S3, p: usize) -> TaskSpec {
     let per = spec.records_per_partition();
     let total = spec.total_records();
     TaskSpec {
+        job: JobId::ROOT,
         name: format!("gen-{p}"),
         placement: Placement::Any,
         func: task_fn(move |_ctx| {
@@ -97,6 +98,7 @@ pub fn map_task(
     let n_buckets = spec.s3_buckets;
     let n_out = cuts.len() + 1;
     TaskSpec {
+        job: JobId::ROOT,
         name: format!("map-{p}"),
         placement: Placement::Any,
         func: task_fn(move |_ctx| {
@@ -132,6 +134,7 @@ pub fn merge_task(
     let cuts = Arc::new(spec.reducer_cuts_of_worker(node));
     let r1 = spec.reducers_per_worker();
     TaskSpec {
+        job: JobId::ROOT,
         name: format!("merge-{node}-{batch}"),
         placement: Placement::Node(node),
         args: blocks,
@@ -177,6 +180,7 @@ pub fn reduce_task(
     let seed = spec.seed;
     let n_buckets = spec.s3_buckets;
     TaskSpec {
+        job: JobId::ROOT,
         name: format!("reduce-{global_r}"),
         placement: Placement::Node(node),
         args: blocks,
@@ -218,6 +222,7 @@ pub fn validate_task(spec: &JobSpec, s3: &S3, global_r: usize) -> TaskSpec {
     let seed = spec.seed;
     let n_buckets = spec.s3_buckets;
     TaskSpec {
+        job: JobId::ROOT,
         name: format!("validate-{global_r}"),
         placement: Placement::Any,
         args: vec![],

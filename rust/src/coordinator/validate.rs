@@ -8,22 +8,24 @@ use anyhow::Context;
 use crate::coordinator::manifest::decode_summary;
 use crate::coordinator::plan::JobSpec;
 use crate::coordinator::tasks;
-use crate::distfut::Runtime;
+use crate::distfut::{JobId, Runtime};
 use crate::s3sim::S3;
 use crate::shuffle::report::ValidationReport;
 use crate::sortlib::valsort::{self, PartitionSummary};
 
-/// Validate the output: per-partition valsort summaries, the global
-/// order/count check, and the checksum comparison against the input.
+/// Validate the output on behalf of `job`: per-partition valsort
+/// summaries, the global order/count check, and the checksum comparison
+/// against the input.
 pub fn validate_output(
     spec: &JobSpec,
     s3: &S3,
     rt: &Runtime,
+    job: JobId,
     input_records: u64,
     input_checksum: u64,
 ) -> anyhow::Result<ValidationReport> {
     let results: Vec<_> = (0..spec.n_output_partitions)
-        .map(|r| rt.submit(tasks::validate_task(spec, s3, r)))
+        .map(|r| rt.submit_for(job, tasks::validate_task(spec, s3, r)))
         .collect();
     let mut summaries: Vec<PartitionSummary> =
         Vec::with_capacity(results.len());

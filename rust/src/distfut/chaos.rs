@@ -22,11 +22,12 @@
 //! [`crate::s3sim::faults::FaultPlan`]; a chaos plan composes with it
 //! (kill a node *and* flake the object store in the same run).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, Weak};
 
 use crate::distfut::scheduler::Runtime;
 use crate::distfut::store::ObjectId;
+use crate::distfut::JobId;
 use crate::util::rng::stream_at;
 
 /// A failure to inject when a trigger fires.
@@ -121,42 +122,83 @@ pub struct ChaosRecord {
 /// the plan's events at their thresholds. Keep the `Arc` alive to read
 /// the log after the run; the harness itself holds only a weak runtime
 /// reference, so it never delays runtime teardown.
+///
+/// A harness may be **job-scoped** ([`ChaosHarness::arm_for_job`]): it
+/// then counts only commits belonging to that job, so "after the n-th
+/// commit" stays a property of the job under test even when other
+/// tenants of a shared runtime commit concurrently. Several scoped
+/// harnesses can be armed on one runtime at once — each registers its
+/// own commit observer.
 pub struct ChaosHarness {
     triggers: Vec<ChaosTrigger>,
     /// Index of the next unfired trigger (claimed by compare-exchange so
     /// concurrent committers fire each trigger exactly once).
     next: AtomicUsize,
-    base_commits: u64,
+    /// Commits this harness has observed since arming (commits of other
+    /// jobs do not count when the harness is scoped). Observers are
+    /// serialized by the store's hook lock, so the count is exact.
+    seen: AtomicU64,
+    /// Only commits of this job advance the clock (None = every commit).
+    scope: Option<JobId>,
+    /// The runtime-side observer registration, for self-removal once the
+    /// plan is exhausted (0 until arming completes).
+    observer_id: AtomicU64,
     rt: Weak<Runtime>,
     log: Mutex<Vec<ChaosRecord>>,
 }
 
 impl ChaosHarness {
-    /// Install `plan` on `rt`'s commit clock, counting commits from now.
+    /// Install `plan` on `rt`'s commit clock, counting every data-bearing
+    /// commit from now.
     pub fn arm(rt: &Arc<Runtime>, plan: ChaosPlan) -> Arc<ChaosHarness> {
+        Self::arm_scoped(rt, plan, None)
+    }
+
+    /// Install `plan` counting only commits of `job` — the multi-tenant
+    /// arming path: one job's failure schedule is unaffected by its
+    /// neighbours' commit traffic.
+    pub fn arm_for_job(
+        rt: &Arc<Runtime>,
+        plan: ChaosPlan,
+        job: JobId,
+    ) -> Arc<ChaosHarness> {
+        Self::arm_scoped(rt, plan, Some(job))
+    }
+
+    fn arm_scoped(
+        rt: &Arc<Runtime>,
+        plan: ChaosPlan,
+        scope: Option<JobId>,
+    ) -> Arc<ChaosHarness> {
         let mut triggers = plan.triggers;
         triggers.sort_by_key(|t| t.after_commits);
         let harness = Arc::new(ChaosHarness {
             triggers,
             next: AtomicUsize::new(0),
-            base_commits: rt.commit_count(),
+            seen: AtomicU64::new(0),
+            scope,
+            observer_id: AtomicU64::new(0),
             rt: Arc::downgrade(rt),
             log: Mutex::new(Vec::new()),
         });
         let observer = harness.clone();
-        rt.on_commit(move |seq, id| observer.observe(seq, id));
+        let id = rt.on_commit(move |_seq, oid, job| observer.observe(oid, job));
+        harness.observer_id.store(id, Ordering::SeqCst);
         harness
     }
 
-    fn observe(&self, seq: u64, id: ObjectId) {
-        let rel = seq.saturating_sub(self.base_commits);
+    fn observe(&self, id: ObjectId, job: JobId) {
+        if self.scope.is_some_and(|scoped| scoped != job) {
+            return;
+        }
+        let rel = self.seen.fetch_add(1, Ordering::SeqCst) + 1;
         loop {
             let i = self.next.load(Ordering::SeqCst);
             if i >= self.triggers.len() {
-                // plan exhausted: stop serializing the commit hot path
-                if let Some(rt) = self.rt.upgrade() {
-                    rt.disarm_commit_hook();
-                }
+                // plan exhausted: drop our observer so an exhausted plan
+                // stops serializing the commit hot path (other harnesses
+                // on the runtime keep theirs)
+                self.disarm();
                 return;
             }
             if self.triggers[i].after_commits > rel {
@@ -175,7 +217,11 @@ impl ChaosHarness {
     fn fire(&self, trigger: ChaosTrigger, id: ObjectId) {
         let Some(rt) = self.rt.upgrade() else { return };
         let outcome = match trigger.event {
-            ChaosEvent::KillNode(node) => match rt.kill_node(node) {
+            // a scoped harness attributes the kill marker to its job, so
+            // the marker retires with the job on a long-lived runtime
+            ChaosEvent::KillNode(node) => match rt
+                .kill_node_as(node, self.scope.unwrap_or(JobId::ROOT))
+            {
                 Ok(r) => format!(
                     "killed node {node}: {} objects lost, {} tasks \
                      resubmitted, {} queued tasks rerouted, {} unrecoverable",
@@ -202,6 +248,18 @@ impl ChaosHarness {
         });
     }
 
+    /// Drop this harness's commit observer (idempotent). The job
+    /// pipeline calls it at stage end so an unexhausted plan does not
+    /// keep observing a shared runtime after its job completed.
+    pub fn disarm(&self) {
+        if let Some(rt) = self.rt.upgrade() {
+            let oid = self.observer_id.load(Ordering::SeqCst);
+            if oid != 0 {
+                rt.remove_commit_observer(oid);
+            }
+        }
+    }
+
     /// How many triggers have fired so far.
     pub fn fired(&self) -> usize {
         self.next.load(Ordering::SeqCst).min(self.triggers.len())
@@ -217,10 +275,11 @@ impl ChaosHarness {
 mod tests {
     use super::*;
     use crate::distfut::scheduler::RuntimeOptions;
-    use crate::distfut::{task_fn, Placement, TaskSpec};
+    use crate::distfut::{task_fn, JobId, Placement, TaskSpec};
 
     fn produce(name: &str, node: usize, byte: u8) -> TaskSpec {
         TaskSpec {
+            job: JobId::ROOT,
             name: name.into(),
             placement: Placement::Node(node),
             func: task_fn(move |_| Ok(vec![vec![byte; 16]])),

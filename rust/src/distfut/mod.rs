@@ -36,6 +36,13 @@
 //! The [`chaos`] module schedules seeded, reproducible failures (kill
 //! node *k* after the *n*-th commit, lose a specific object) on top of
 //! these primitives, so crash recovery is deterministically testable.
+//!
+//! The runtime is **multi-tenant**: every task, store entry, lineage
+//! record and task event is tagged with a [`JobId`]; per-node queues are
+//! split per job and drained by weighted fair-share dequeue; admission
+//! control accounts residency per job; and [`Runtime::retire_job`] frees
+//! a completed job's records so one runtime can serve jobs indefinitely
+//! (see [`crate::service`]).
 
 pub mod chaos;
 pub mod future;
@@ -46,9 +53,32 @@ use std::sync::Arc;
 
 pub use future::TaskHandle;
 pub use scheduler::{
-    RecoveryReport, RecoveryStats, Runtime, RuntimeOptions, TaskCtx, TaskSpec,
+    JobParams, RecoveryReport, RecoveryStats, Runtime, RuntimeOptions,
+    TaskCtx, TaskSpec,
 };
 pub use store::{ObjectId, ObjectRef, StoreStats};
+
+/// Identity of a job inside a shared [`Runtime`] (the multi-tenant unit
+/// of scheduling, accounting and teardown). Every task, store entry,
+/// lineage record and task event is tagged with one; the scheduler's
+/// fair-share dequeue and per-job admission control key on it, and
+/// [`Runtime::retire_job`] frees a job's records when it completes so a
+/// long-lived runtime does not accumulate state forever.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct JobId(pub u64);
+
+impl JobId {
+    /// The pre-registered default job. Tasks submitted without an
+    /// explicit job (single-job runs, driver puts, tests) belong to it;
+    /// it has weight 1.0, no quotas, and is never retired.
+    pub const ROOT: JobId = JobId(0);
+}
+
+impl std::fmt::Display for JobId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "job-{}", self.0)
+    }
+}
 
 /// Task placement constraint.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

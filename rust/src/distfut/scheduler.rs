@@ -48,7 +48,7 @@ use std::time::{Duration, Instant};
 
 use crate::distfut::future::TaskHandle;
 use crate::distfut::store::{ObjState, ObjectId, ObjectRef, Store, StoreStats};
-use crate::distfut::{DfError, Placement, TaskFn};
+use crate::distfut::{DfError, JobId, Placement, TaskFn};
 use crate::metrics::TaskEvent;
 
 /// Runtime construction options.
@@ -110,6 +110,10 @@ impl Default for RuntimeOptions {
 pub struct TaskSpec {
     /// Diagnostic name; also used in metrics (e.g. "map", "merge").
     pub name: String,
+    /// Job the task belongs to (fair-share scheduling, per-job admission
+    /// and teardown). [`Runtime::submit_for`] stamps this; literal specs
+    /// default to [`JobId::ROOT`].
+    pub job: JobId,
     pub placement: Placement,
     pub func: TaskFn,
     /// Argument objects; the task starts only when all are resolved.
@@ -118,6 +122,55 @@ pub struct TaskSpec {
     pub num_returns: usize,
     /// Automatic retries on failure (paper §2.5 "Fault tolerance").
     pub max_retries: u32,
+}
+
+/// Per-job scheduling parameters inside a shared runtime (the
+/// [`crate::service::JobService`] quota surface).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct JobParams {
+    /// Fair-share weight (priority): when several jobs have runnable
+    /// work, task slots are granted in proportion to weight — a
+    /// weight-2.0 job dispatches twice as often as a weight-1.0 one.
+    pub weight: f64,
+    /// Hard cap on the job's concurrently *executing* tasks. Queued work
+    /// beyond the cap waits until a running task of the job completes;
+    /// the cap can never deadlock, because in-flight tasks always drain.
+    pub max_in_flight: Option<usize>,
+    /// Cluster-wide resident-byte budget: while the job's store
+    /// residency exceeds it, the job's load-balanced (`Any`/`Prefer`)
+    /// tasks are not dispatched. Pinned tasks still run — they (and
+    /// driver-side releases) are what drain the residency, exactly as
+    /// with the node-level watermark. A job whose residency could only
+    /// drain through its own load-balanced consumers should not set
+    /// this.
+    pub resident_budget: Option<u64>,
+}
+
+impl Default for JobParams {
+    fn default() -> Self {
+        JobParams {
+            weight: 1.0,
+            max_in_flight: None,
+            resident_budget: None,
+        }
+    }
+}
+
+/// Fair-share scheduler state of one registered job.
+struct JobSched {
+    params: JobParams,
+    /// Stride-scheduling virtual time: advanced by `1/weight` per
+    /// dispatch; the runnable job with the smallest vruntime dispatches
+    /// next, so long-run slot shares converge to the weight ratio. Jobs
+    /// (re)entering the runnable set are clamped up to the scheduler's
+    /// ratcheted `min_vruntime`, so neither a late arrival nor an idle
+    /// spell converts into a catch-up burst.
+    vruntime: f64,
+    /// Tasks of this job currently executing on workers.
+    running: usize,
+    /// Tasks of this job sitting in runnable queues (kept exact by
+    /// route/dequeue so activity checks are O(1) on the dispatch path).
+    queued: usize,
 }
 
 /// Execution context handed to a running task.
@@ -139,6 +192,10 @@ struct LineageRecord {
     /// resubmissions.
     seq: u64,
     name: String,
+    /// Job the producing task belonged to — re-executions stay
+    /// accounted to it, and [`Runtime::retire_job`] frees the job's
+    /// records wholesale.
+    job: JobId,
     placement: Placement,
     func: TaskFn,
     args: Vec<ObjectId>,
@@ -193,34 +250,146 @@ struct SchedState {
     waiting: HashMap<ObjectId, Vec<u64>>,
     /// Pending tasks by internal id.
     pending: HashMap<u64, QueuedTask>,
-    /// Hard-pinned runnable tasks, one queue per node (never stolen,
-    /// exempt from admission control).
-    pinned: Vec<VecDeque<u64>>,
-    /// Locality-routed runnable tasks per node, stamped with their
-    /// enqueue time; stealable once older than `steal_delay`.
-    local: Vec<VecDeque<(u64, Instant)>>,
-    /// Runnable tasks with no locality (any node drains this FIFO).
-    shared: VecDeque<u64>,
+    /// Fair-share state per registered job (jobs submitting without
+    /// registration are auto-registered with default parameters).
+    jobs: HashMap<JobId, JobSched>,
+    /// Hard-pinned runnable tasks, per node and per job (never stolen,
+    /// exempt from memory admission control). Empty per-job queues are
+    /// pruned on pop so iteration stays proportional to the live set.
+    pinned: Vec<HashMap<JobId, VecDeque<u64>>>,
+    /// Locality-routed runnable tasks per node and per job, stamped with
+    /// their enqueue time; stealable once older than `steal_delay`.
+    local: Vec<HashMap<JobId, VecDeque<(u64, Instant)>>>,
+    /// Runnable tasks with no locality, per job (any node drains these).
+    shared: HashMap<JobId, VecDeque<u64>>,
+    /// Monotonic fair clock: ratcheted to the winning job's pre-dispatch
+    /// vruntime on every dispatch (the fair-min winner's vruntime *is*
+    /// the pack floor). A job (re)entering the runnable set is placed at
+    /// this clock — CFS `min_vruntime` semantics — so it shares from
+    /// "now" instead of burning down incumbents' accumulated vruntime,
+    /// even if no job happens to be active at that instant.
+    min_vruntime: f64,
     /// In-flight + queued + waiting task count (for quiescence checks).
     outstanding: u64,
     shutdown: bool,
 }
 
 impl SchedState {
-    fn route(&mut self, sh: &Shared, tid: u64, placement: Placement, arg_ids: &[ObjectId]) {
-        match placement {
-            Placement::Node(n) => {
-                self.pinned[live_target(sh, n)].push_back(tid)
+    /// Whether `job` currently holds queued or executing work (O(1) via
+    /// the per-job counters).
+    fn job_is_active(&self, job: JobId) -> bool {
+        self.jobs
+            .get(&job)
+            .is_some_and(|j| j.running > 0 || j.queued > 0)
+    }
+
+    /// The job's scheduler entry, auto-registering with defaults at the
+    /// ratcheted fair clock.
+    fn job_mut(&mut self, job: JobId) -> &mut JobSched {
+        if !self.jobs.contains_key(&job) {
+            self.jobs.insert(
+                job,
+                JobSched {
+                    params: JobParams::default(),
+                    vruntime: self.min_vruntime,
+                    running: 0,
+                    queued: 0,
+                },
+            );
+        }
+        self.jobs.get_mut(&job).unwrap()
+    }
+
+    fn vruntime(&self, job: JobId) -> f64 {
+        self.jobs.get(&job).map(|j| j.vruntime).unwrap_or(0.0)
+    }
+
+    /// Whether `job` may dispatch another task (in-flight cap).
+    fn cap_ok(&self, job: JobId) -> bool {
+        match self.jobs.get(&job) {
+            Some(j) => {
+                j.params.max_in_flight.is_none_or(|cap| j.running < cap)
             }
+            None => true,
+        }
+    }
+
+    /// Charge one dispatch to `job`: advance its virtual time by
+    /// `1/weight`, move the task from queued to executing, and ratchet
+    /// the scheduler's fair clock (the winner's pre-dispatch vruntime is
+    /// the current pack floor; the clock never goes backwards).
+    fn charge_dispatch(&mut self, job: JobId) {
+        let pre = {
+            let j = self.job_mut(job);
+            let pre = j.vruntime;
+            j.vruntime += 1.0 / j.params.weight.max(1e-6);
+            j.queued = j.queued.saturating_sub(1);
+            j.running += 1;
+            pre
+        };
+        if pre > self.min_vruntime {
+            self.min_vruntime = pre;
+        }
+    }
+
+    /// A dispatched task of `job` stopped executing (completed, parked,
+    /// or requeued for retry).
+    fn dispatch_done(&mut self, job: JobId) {
+        if let Some(j) = self.jobs.get_mut(&job) {
+            j.running = j.running.saturating_sub(1);
+        }
+    }
+
+    fn route(
+        &mut self,
+        sh: &Shared,
+        tid: u64,
+        job: JobId,
+        placement: Placement,
+        arg_ids: &[ObjectId],
+    ) {
+        // A job entering the runnable set is placed at the ratcheted
+        // fair clock: its idle time (or late arrival) must not convert
+        // into a burst of back-to-back dispatches at the incumbents'
+        // expense.
+        let reactivating = !self.job_is_active(job);
+        let floor = self.min_vruntime;
+        let j = self.job_mut(job);
+        if reactivating && j.vruntime < floor {
+            j.vruntime = floor;
+        }
+        j.queued += 1;
+        match placement {
+            Placement::Node(n) => self.pinned[live_target(sh, n)]
+                .entry(job)
+                .or_default()
+                .push_back(tid),
             Placement::Prefer(n) => self.local[live_target(sh, n)]
+                .entry(job)
+                .or_default()
                 .push_back((tid, Instant::now())),
             Placement::Any => match sh.store.locality_node(arg_ids) {
                 Some(n) => self.local[live_target(sh, n)]
+                    .entry(job)
+                    .or_default()
                     .push_back((tid, Instant::now())),
-                None => self.shared.push_back(tid),
+                None => {
+                    self.shared.entry(job).or_default().push_back(tid)
+                }
             },
         }
     }
+}
+
+/// The fair-share pick: among `jobs`, the smallest `(vruntime, JobId)`
+/// wins — stride scheduling with a deterministic tie-break.
+fn fair_min(st: &SchedState, jobs: impl Iterator<Item = JobId>) -> Option<JobId> {
+    jobs.min_by(|a, b| {
+        st.vruntime(*a)
+            .partial_cmp(&st.vruntime(*b))
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(b))
+    })
 }
 
 /// `n` itself when alive, else the next live node in ring order (task
@@ -236,6 +405,9 @@ fn live_target(sh: &Shared, n: usize) -> usize {
         .find(|&c| !sh.store.is_dead(c))
         .unwrap_or(n)
 }
+
+/// A registered commit observer (see [`Runtime::on_commit`]).
+type CommitObserver = Arc<dyn Fn(u64, ObjectId, JobId) + Send + Sync>;
 
 /// The distributed-futures runtime (see module docs of [`crate::distfut`]).
 pub struct Runtime {
@@ -260,6 +432,12 @@ struct Shared {
     /// Serializes kill/lose recovery passes (so concurrent kills cannot
     /// race the last-live-node check).
     kill_lock: Mutex<()>,
+    /// Registered commit observers (fan-out of the store's single commit
+    /// hook). Multiple jobs can each arm a chaos harness on one runtime.
+    commit_observers: Mutex<Vec<(u64, CommitObserver)>>,
+    next_observer_id: AtomicU64,
+    /// Job identity allocator (0 is [`JobId::ROOT`]).
+    next_job_id: AtomicU64,
     next_task_id: AtomicU64,
     epoch: Instant,
     events: Mutex<Vec<TaskEvent>>,
@@ -287,9 +465,19 @@ impl Runtime {
             state: Mutex::new(SchedState {
                 waiting: HashMap::new(),
                 pending: HashMap::new(),
-                pinned: (0..opts.n_nodes).map(|_| VecDeque::new()).collect(),
-                local: (0..opts.n_nodes).map(|_| VecDeque::new()).collect(),
-                shared: VecDeque::new(),
+                jobs: HashMap::from([(
+                    JobId::ROOT,
+                    JobSched {
+                        params: JobParams::default(),
+                        vruntime: 0.0,
+                        running: 0,
+                        queued: 0,
+                    },
+                )]),
+                pinned: (0..opts.n_nodes).map(|_| HashMap::new()).collect(),
+                local: (0..opts.n_nodes).map(|_| HashMap::new()).collect(),
+                shared: HashMap::new(),
+                min_vruntime: 0.0,
                 outstanding: 0,
                 shutdown: false,
             }),
@@ -303,6 +491,9 @@ impl Runtime {
             record_lineage: opts.record_lineage,
             max_reconstruction_depth: opts.max_reconstruction_depth.max(1),
             kill_lock: Mutex::new(()),
+            commit_observers: Mutex::new(Vec::new()),
+            next_observer_id: AtomicU64::new(1),
+            next_job_id: AtomicU64::new(1),
             next_task_id: AtomicU64::new(1),
             epoch: Instant::now(),
             events: Mutex::new(Vec::new()),
@@ -391,16 +582,54 @@ impl Runtime {
         self.shared.store.subscribe(r.id, Box::new(f));
     }
 
-    /// Observe every data-bearing commit as `(sequence number, object)`.
-    /// The chaos harness rides on this to trigger failures "after the
-    /// n-th commit"; observers are serialized, so the trigger point is
-    /// well defined even under concurrent commits. Replaces any
-    /// previously installed observer.
-    pub fn on_commit<F>(&self, f: F)
+    /// Observe every data-bearing commit as `(sequence number, object,
+    /// owning job)`. The chaos harness rides on this to trigger failures
+    /// "after the n-th commit"; observers are serialized, so the trigger
+    /// point is well defined even under concurrent commits. Observers
+    /// accumulate — each job in a shared runtime can arm its own — and
+    /// the returned id removes one via
+    /// [`Runtime::remove_commit_observer`].
+    pub fn on_commit<F>(&self, f: F) -> u64
     where
-        F: Fn(u64, ObjectId) + Send + Sync + 'static,
+        F: Fn(u64, ObjectId, JobId) + Send + Sync + 'static,
     {
-        self.shared.store.set_commit_hook(Box::new(f));
+        let id = self
+            .shared
+            .next_observer_id
+            .fetch_add(1, Ordering::Relaxed);
+        let mut obs = self.shared.commit_observers.lock().unwrap();
+        obs.push((id, Arc::new(f)));
+        drop(obs);
+        // (Re)install the store-level fan-out hook; setting it re-arms
+        // the commit path if a previous observer set had drained.
+        let weak = Arc::downgrade(&self.shared);
+        self.shared.store.set_commit_hook(Box::new(
+            move |seq, oid, job| {
+                let Some(sh) = weak.upgrade() else { return };
+                let snapshot: Vec<CommitObserver> = sh
+                    .commit_observers
+                    .lock()
+                    .unwrap()
+                    .iter()
+                    .map(|(_, f)| f.clone())
+                    .collect();
+                for f in snapshot {
+                    f(seq, oid, job);
+                }
+            },
+        ));
+        id
+    }
+
+    /// Remove one commit observer; when the last one goes, the commit
+    /// hot path returns to lock-free. An exhausted chaos harness removes
+    /// itself this way so it stops serializing the rest of the run.
+    pub fn remove_commit_observer(&self, id: u64) {
+        let mut obs = self.shared.commit_observers.lock().unwrap();
+        obs.retain(|(oid, _)| *oid != id);
+        if obs.is_empty() {
+            self.shared.store.disarm_commit_hook();
+        }
     }
 
     /// Data-bearing commits so far (the chaos trigger clock).
@@ -408,11 +637,10 @@ impl Runtime {
         self.shared.store.commit_count()
     }
 
-    /// Stop delivering commits to the observer installed by
-    /// [`Runtime::on_commit`]; the commit hot path goes back to
-    /// lock-free. The chaos harness calls this once its plan is
-    /// exhausted.
+    /// Remove every commit observer and return the commit hot path to
+    /// lock-free.
     pub fn disarm_commit_hook(&self) {
+        self.shared.commit_observers.lock().unwrap().clear();
         self.shared.store.disarm_commit_hook();
     }
 
@@ -420,12 +648,13 @@ impl Runtime {
     /// of downstream tasks) and a completion handle.
     pub fn submit(&self, spec: TaskSpec) -> (Vec<ObjectRef>, TaskHandle) {
         let sh = &self.shared;
+        let job = spec.job;
         let owner_node = match spec.placement {
             Placement::Node(n) | Placement::Prefer(n) => n,
             Placement::Any => 0,
         };
         let outputs: Vec<ObjectRef> = (0..spec.num_returns)
-            .map(|_| sh.store.declare(owner_node))
+            .map(|_| sh.store.declare(owner_node, job))
             .collect();
         let output_ids: Vec<ObjectId> = outputs.iter().map(|o| o.id).collect();
         let handle = TaskHandle::new(spec.name.clone());
@@ -437,6 +666,7 @@ impl Runtime {
             let rec = Arc::new(LineageRecord {
                 seq: tid,
                 name: spec.name.clone(),
+                job,
                 placement: spec.placement,
                 func: spec.func.clone(),
                 args: spec.args.iter().map(|a| a.id).collect(),
@@ -455,6 +685,7 @@ impl Runtime {
             handle.complete(Err("runtime shut down".into()));
             return (outputs, handle);
         }
+        st.job_mut(job); // fair-share state exists even while waiting
         // single resolution check per arg: a concurrent commit between
         // two checks could otherwise leave the count and the waiting
         // registrations disagreeing (and the task stranded)
@@ -477,7 +708,7 @@ impl Runtime {
         if unresolved == 0 {
             let arg_ids: Vec<ObjectId> =
                 task.spec.args.iter().map(|a| a.id).collect();
-            st.route(sh, tid, task.spec.placement, &arg_ids);
+            st.route(sh, tid, job, task.spec.placement, &arg_ids);
         }
         st.pending.insert(tid, task);
         drop(st);
@@ -485,12 +716,109 @@ impl Runtime {
         (outputs, handle)
     }
 
+    /// Submit a task on behalf of `job` (stamps [`TaskSpec::job`]). The
+    /// multi-tenant submission path: the shuffle layer routes every task
+    /// of a [`crate::service::JobService`] job through this.
+    pub fn submit_for(
+        &self,
+        job: JobId,
+        mut spec: TaskSpec,
+    ) -> (Vec<ObjectRef>, TaskHandle) {
+        spec.job = job;
+        self.submit(spec)
+    }
+
+    /// Allocate a fresh job identity with the given scheduling
+    /// parameters. The id is unique for the runtime's lifetime; the job
+    /// starts at the ratcheted fair clock (no catch-up burst).
+    pub fn register_job(&self, params: JobParams) -> JobId {
+        let id = JobId(self.shared.next_job_id.fetch_add(1, Ordering::Relaxed));
+        let mut st = self.shared.state.lock().unwrap();
+        let floor = st.min_vruntime;
+        st.jobs.insert(
+            id,
+            JobSched {
+                params,
+                vruntime: floor,
+                running: 0,
+                queued: 0,
+            },
+        );
+        id
+    }
+
+    /// Update a job's scheduling parameters (weight, quotas). Takes
+    /// effect on the next dispatch decision.
+    pub fn set_job_params(&self, job: JobId, params: JobParams) {
+        let mut st = self.shared.state.lock().unwrap();
+        st.job_mut(job).params = params;
+    }
+
+    /// Tasks of `job` currently executing on workers (quota visibility).
+    pub fn job_in_flight(&self, job: JobId) -> usize {
+        let st = self.shared.state.lock().unwrap();
+        st.jobs.get(&job).map(|j| j.running).unwrap_or(0)
+    }
+
+    /// Whether `job` has no queued, executing, or argument-waiting
+    /// tasks — the precondition for [`Runtime::retire_job`]. A failed
+    /// stage can leave sibling tasks in flight; callers poll this before
+    /// retiring. Tasks never block unboundedly (failures cascade as
+    /// poisoned objects), so a job always quiesces.
+    pub fn job_quiesced(&self, job: JobId) -> bool {
+        let st = self.shared.state.lock().unwrap();
+        !st.job_is_active(job)
+            && !st.pending.values().any(|t| t.spec.job == job)
+    }
+
+    /// Retire a completed job: free its lineage records, drain and
+    /// return its task events, sweep any leftover store entries, and
+    /// drop its fair-share state. This is what lets one runtime serve
+    /// jobs forever without accumulating per-job records (the lineage
+    /// retention cost is now bounded by the *live* job set, not the
+    /// runtime's history). Must only be called once the job's tasks have
+    /// completed (poll [`Runtime::job_quiesced`] after a failure); a job
+    /// with live work keeps its scheduler entry (only records are
+    /// freed). [`JobId::ROOT`]'s scheduler entry is never removed.
+    pub fn retire_job(&self, job: JobId) -> Vec<TaskEvent> {
+        let sh = &self.shared;
+        sh.lineage.lock().unwrap().retain(|_, r| r.job != job);
+        let events = {
+            let mut ev = sh.events.lock().unwrap();
+            let (mine, rest): (Vec<TaskEvent>, Vec<TaskEvent>) =
+                ev.drain(..).partition(|e| e.job == job);
+            *ev = rest;
+            mine
+        };
+        sh.store.purge_job(job);
+        let mut st = sh.state.lock().unwrap();
+        let live = st.job_is_active(job)
+            || st.pending.values().any(|t| t.spec.job == job);
+        if !live && job != JobId::ROOT {
+            st.jobs.remove(&job);
+        }
+        events
+    }
+
     /// Kill a node (paper §2.5 "worker process failures", whole-node
     /// variant): its resident objects vanish, its queued work is rerouted
     /// to live nodes, its workers exit, and the lineage of every lost
     /// object is transitively re-submitted. Errors if the node is out of
-    /// range, already dead, or the last live node.
+    /// range, already dead, or the last live node. The timeline marker
+    /// event is attributed to [`JobId::ROOT`].
     pub fn kill_node(&self, node: usize) -> Result<RecoveryReport, DfError> {
+        self.kill_node_as(node, JobId::ROOT)
+    }
+
+    /// [`Runtime::kill_node`], attributing the `node-killed-*` timeline
+    /// marker to `job`. A job-scoped chaos harness passes its job so the
+    /// marker is drained with the job at retirement instead of
+    /// accumulating runtime-wide for the life of a shared service.
+    pub fn kill_node_as(
+        &self,
+        node: usize,
+        job: JobId,
+    ) -> Result<RecoveryReport, DfError> {
         let sh = &self.shared;
         let _kill = sh.kill_lock.lock().unwrap();
         if node >= sh.n_nodes {
@@ -514,6 +842,7 @@ impl Runtime {
         let now = sh.epoch.elapsed().as_secs_f64();
         sh.events.lock().unwrap().push(TaskEvent {
             name: format!("node-killed-{node}"),
+            job, // attributed to the triggering job (ROOT for manual kills)
             node,
             start: now,
             end: now,
@@ -574,7 +903,11 @@ impl Runtime {
                     if arg_refs.contains_key(&a) {
                         continue;
                     }
-                    let (r, state) = sh.store.retain_or_resurrect(a);
+                    // resurrected entries inherit the consuming task's
+                    // job (a job's arguments are its own objects; driver
+                    // puts resurrect unrecoverable anyway)
+                    let (r, state) =
+                        sh.store.retain_or_resurrect(a, rec.job);
                     arg_refs.insert(a, r);
                     if matches!(state, ObjState::Lost | ObjState::Missing) {
                         queue.push_back(a);
@@ -657,13 +990,21 @@ impl Runtime {
         let mut st = sh.state.lock().unwrap();
         let mut queue_reroutes = 0usize;
         if let Some(node) = dead_node {
-            let mut drained: Vec<u64> = st.pinned[node].drain(..).collect();
-            drained.extend(st.local[node].drain(..).map(|(tid, _)| tid));
+            let mut drained: Vec<u64> = st.pinned[node]
+                .drain()
+                .flat_map(|(_, q)| q.into_iter())
+                .collect();
+            drained.extend(
+                st.local[node]
+                    .drain()
+                    .flat_map(|(_, q)| q.into_iter().map(|(tid, _)| tid)),
+            );
             for tid in drained {
-                let Some((placement, arg_ids)) =
+                let Some((job, placement, arg_ids)) =
                     st.pending.get_mut(&tid).map(|t| {
                         t.recovery = true; // surfaces on TaskEvent::recovery
                         (
+                            t.spec.job,
                             t.spec.placement,
                             t.spec
                                 .args
@@ -675,7 +1016,11 @@ impl Runtime {
                 else {
                     continue;
                 };
-                st.route(sh, tid, placement, &arg_ids);
+                // leaving the dead node's queue, re-entering a live one
+                if let Some(j) = st.jobs.get_mut(&job) {
+                    j.queued = j.queued.saturating_sub(1);
+                }
+                st.route(sh, tid, job, placement, &arg_ids);
                 queue_reroutes += 1;
             }
         }
@@ -697,14 +1042,15 @@ impl Runtime {
             }
         }
         for wtid in now_runnable {
-            let (placement, arg_ids): (Placement, Vec<ObjectId>) = {
+            let (job, placement, arg_ids): (JobId, Placement, Vec<ObjectId>) = {
                 let w = &st.pending[&wtid];
                 (
+                    w.spec.job,
                     w.spec.placement,
                     w.spec.args.iter().map(|a| a.id).collect(),
                 )
             };
-            st.route(sh, wtid, placement, &arg_ids);
+            st.route(sh, wtid, job, placement, &arg_ids);
         }
         // Count only consumer-visible roots (objects that were actually
         // lost) — resurrected intermediates poisoned alongside an
@@ -748,6 +1094,7 @@ impl Runtime {
                 let tid = sh.next_task_id.fetch_add(1, Ordering::Relaxed);
                 let spec = TaskSpec {
                     name: rec.name.clone(),
+                    job: rec.job,
                     placement: rec.placement,
                     func: rec.func.clone(),
                     args: rec.args.iter().map(|a| arg_refs[a].clone()).collect(),
@@ -771,7 +1118,7 @@ impl Runtime {
                 };
                 st.outstanding += 1;
                 if unresolved == 0 {
-                    st.route(sh, tid, task.spec.placement, &rec.args);
+                    st.route(sh, tid, rec.job, task.spec.placement, &rec.args);
                 }
                 st.pending.insert(tid, task);
                 resubmitted += 1;
@@ -848,6 +1195,9 @@ impl Runtime {
             st.pinned.iter_mut().for_each(|q| q.clear());
             st.local.iter_mut().for_each(|q| q.clear());
             st.shared.clear();
+            for j in st.jobs.values_mut() {
+                j.queued = 0;
+            }
         }
         self.shared.stop.store(true, Ordering::SeqCst);
         self.shared.work_ready.notify_all();
@@ -903,95 +1253,236 @@ enum Pick {
     Idle,
 }
 
-/// Choose the next task for `node`, in priority order: pinned work,
-/// (admission control gate), home locality queue, shared queue, then
-/// stealing the oldest eligible entry from the most backlogged peer.
-fn pick_task(sh: &Shared, st: &mut SchedState, node: usize, stalled: &mut bool) -> Pick {
+/// Record (or clear) a per-job backpressure stall episode, deduplicated
+/// per worker like the node-level `stalled` flag.
+fn note_job_stall(sh: &Shared, byte_skipped: bool, job_stalled: &mut bool) {
+    if byte_skipped {
+        if !*job_stalled {
+            *job_stalled = true;
+            sh.store
+                .counters
+                .job_backpressure_stalls
+                .fetch_add(1, Ordering::Relaxed);
+        }
+    } else {
+        *job_stalled = false;
+    }
+}
+
+/// Choose the next task for `node`, in priority order: pinned work, then
+/// load-balanced work — home locality queue, shared queues, stealing the
+/// oldest eligible peer entry. Within each class the weighted fair-share
+/// pick (smallest stride vruntime) decides *which job* dispatches, the
+/// per-job in-flight cap is a hard gate everywhere, and two memory gates
+/// apply to load-balanced work only:
+///
+/// - the node-level admission watermark (paper §2.5), refined per job: an
+///   over-watermark node still dispatches jobs that are within their
+///   weight share of the node's admission budget, so a memory-hungry job
+///   backpressures itself, not its neighbours. If every live node is
+///   over budget the gate disengages entirely (declining everywhere
+///   would deadlock).
+/// - a job's explicit resident-byte quota ([`JobParams::resident_budget`]),
+///   enforced cluster-wide whether or not the node is over watermark.
+fn pick_task(
+    sh: &Shared,
+    st: &mut SchedState,
+    node: usize,
+    stalled: &mut bool,
+    job_stalled: &mut bool,
+) -> Pick {
     // Pinned work always runs: draining it is what relieves the memory
-    // pressure that admission control reacts to.
-    if let Some(tid) = st.pinned[node].pop_front() {
+    // pressure that admission control reacts to. Only the in-flight cap
+    // gates it (the cap always drains — running tasks complete without
+    // needing further dispatches).
+    let cand = fair_min(
+        st,
+        st.pinned[node]
+            .iter()
+            .filter(|(j, q)| !q.is_empty() && st.cap_ok(**j))
+            .map(|(j, _)| *j),
+    );
+    if let Some(job) = cand {
+        let q = st.pinned[node].get_mut(&job).unwrap();
+        let tid = q.pop_front().unwrap();
+        if q.is_empty() {
+            st.pinned[node].remove(&job);
+        }
+        st.charge_dispatch(job);
         *stalled = false;
+        *job_stalled = false;
         return Pick::Run(tid);
     }
-    // Admission control: an over-watermark node is not offered new
-    // load-balanced work (scheduler-level backpressure, paper §2.5).
-    // The gate only engages while some other *live* node is under its
-    // watermark — if every live node is over budget, declining would
-    // deadlock (nothing would run, so nothing would drain), so the gate
-    // disengages and the work runs anyway. Dead nodes report zero
-    // residency and must not count as available headroom.
+
+    // Node-level admission gate: engaged while this node is over its
+    // watermark and some other *live* node has headroom. Dead nodes
+    // report zero residency and must not count as available headroom.
     let over = sh.store.resident_on(node) > sh.admission_limit;
-    if over
+    let gated = over
         && (0..sh.n_nodes).any(|n| {
             !sh.store.is_dead(n)
                 && sh.store.resident_on(n) <= sh.admission_limit
+        });
+    // Per-job residency snapshot, taken only under the gate so the table
+    // lock stays off the common dispatch path.
+    let node_shares: Vec<(JobId, u64)> = if gated {
+        sh.store.job_residency_on(node)
+    } else {
+        Vec::new()
+    };
+    let total_w: f64 = node_shares
+        .iter()
+        .map(|(j, _)| {
+            st.jobs
+                .get(j)
+                .map(|s| s.params.weight.max(1e-6))
+                .unwrap_or(1.0)
         })
-    {
-        let now = Instant::now();
-        // a stall is only recorded for work this node could actually
-        // have taken right now: its own queues, the shared queue, or a
-        // steal-eligible peer head — not peer work still inside its
-        // locality grace period
-        let declinable = !st.shared.is_empty()
-            || !st.local[node].is_empty()
-            || st.local.iter().enumerate().any(|(n, q)| {
-                n != node
-                    && q.front().is_some_and(|&(_, routed_at)| {
-                        now.duration_since(routed_at) >= sh.steal_delay
-                    })
-            });
-        if declinable && !*stalled {
+        .sum();
+    let byte_ok = |st: &SchedState, job: JobId| -> bool {
+        if let Some(budget) =
+            st.jobs.get(&job).and_then(|j| j.params.resident_budget)
+        {
+            if sh.store.resident_of_job(job) > budget {
+                return false;
+            }
+        }
+        if gated {
+            let resident = node_shares
+                .iter()
+                .find(|(j, _)| *j == job)
+                .map(|(_, b)| *b)
+                .unwrap_or(0);
+            let w = st
+                .jobs
+                .get(&job)
+                .map(|s| s.params.weight.max(1e-6))
+                .unwrap_or(1.0);
+            let share =
+                (sh.admission_limit as f64 * w / total_w.max(1e-6)) as u64;
+            if resident > share {
+                return false;
+            }
+        }
+        true
+    };
+
+    let mut byte_skipped = false;
+    let mut future_work = false;
+
+    // --- home locality queue ---
+    let cand = fair_min(
+        st,
+        st.local[node].iter().filter_map(|(j, q)| {
+            if q.is_empty() || !st.cap_ok(*j) {
+                return None;
+            }
+            if !byte_ok(st, *j) {
+                byte_skipped = true;
+                return None;
+            }
+            Some(*j)
+        }),
+    );
+    if let Some(job) = cand {
+        let q = st.local[node].get_mut(&job).unwrap();
+        let (tid, _) = q.pop_front().unwrap();
+        if q.is_empty() {
+            st.local[node].remove(&job);
+        }
+        st.charge_dispatch(job);
+        *stalled = false;
+        note_job_stall(sh, byte_skipped, job_stalled);
+        return Pick::Run(tid);
+    }
+
+    // --- shared (no-locality) queues ---
+    let cand = fair_min(
+        st,
+        st.shared.iter().filter_map(|(j, q)| {
+            if q.is_empty() || !st.cap_ok(*j) {
+                return None;
+            }
+            if !byte_ok(st, *j) {
+                byte_skipped = true;
+                return None;
+            }
+            Some(*j)
+        }),
+    );
+    if let Some(job) = cand {
+        let q = st.shared.get_mut(&job).unwrap();
+        let tid = q.pop_front().unwrap();
+        if q.is_empty() {
+            st.shared.remove(&job);
+        }
+        st.charge_dispatch(job);
+        *stalled = false;
+        note_job_stall(sh, byte_skipped, job_stalled);
+        return Pick::Run(tid);
+    }
+
+    // --- work stealing: the oldest eligible peer head; fair-share
+    // decides the job, queue length breaks vruntime ties ---
+    let now = Instant::now();
+    let mut best: Option<(JobId, usize, usize)> = None; // (job, peer, len)
+    for (n, peers) in st.local.iter().enumerate() {
+        if n == node {
+            continue;
+        }
+        for (job, q) in peers {
+            let Some(&(_, routed_at)) = q.front() else { continue };
+            if now.duration_since(routed_at) < sh.steal_delay {
+                future_work = true;
+                continue;
+            }
+            if !st.cap_ok(*job) {
+                continue;
+            }
+            if !byte_ok(st, *job) {
+                byte_skipped = true;
+                continue;
+            }
+            let better = match &best {
+                None => true,
+                Some((bjob, _, blen)) => {
+                    let (va, vb) = (st.vruntime(*job), st.vruntime(*bjob));
+                    va < vb || (va == vb && q.len() > *blen)
+                }
+            };
+            if better {
+                best = Some((*job, n, q.len()));
+            }
+        }
+    }
+    if let Some((job, n, _)) = best {
+        let q = st.local[n].get_mut(&job).unwrap();
+        let (tid, _) = q.pop_front().expect("steal candidate");
+        if q.is_empty() {
+            st.local[n].remove(&job);
+        }
+        st.charge_dispatch(job);
+        *stalled = false;
+        note_job_stall(sh, byte_skipped, job_stalled);
+        return Pick::Run(tid);
+    }
+
+    // Nothing dispatchable. Work declined on memory grounds drains via
+    // object releases, which do not signal the scheduler — poll at the
+    // steal cadence. Cap-blocked work needs no poll: completions notify.
+    if byte_skipped {
+        if gated && !*stalled {
             *stalled = true;
             sh.store
                 .counters
                 .backpressure_stalls
                 .fetch_add(1, Ordering::Relaxed);
         }
-        // Residency drains via object releases, which do not signal the
-        // scheduler — poll at the steal cadence until under watermark.
-        let work_pending =
-            declinable || st.local.iter().any(|q| !q.is_empty());
-        return if work_pending {
-            Pick::Retry(sh.steal_delay)
-        } else {
-            Pick::Idle
-        };
+        note_job_stall(sh, true, job_stalled);
+        return Pick::Retry(sh.steal_delay);
     }
     *stalled = false;
-    if let Some((tid, _)) = st.local[node].pop_front() {
-        return Pick::Run(tid);
-    }
-    if let Some(tid) = st.shared.pop_front() {
-        return Pick::Run(tid);
-    }
-    // Work stealing: take from the longest peer queue whose head has
-    // waited out the locality grace period.
-    let now = Instant::now();
-    let mut best: Option<(usize, usize)> = None; // (queue len, node)
-    let mut future_work = false;
-    for (n, q) in st.local.iter().enumerate() {
-        if n == node {
-            continue;
-        }
-        if let Some(&(_, routed_at)) = q.front() {
-            if now.duration_since(routed_at) >= sh.steal_delay {
-                let len = q.len();
-                let better = match best {
-                    None => true,
-                    Some((best_len, _)) => len > best_len,
-                };
-                if better {
-                    best = Some((len, n));
-                }
-            } else {
-                future_work = true;
-            }
-        }
-    }
-    if let Some((_, n)) = best {
-        let (tid, _) = st.local[n].pop_front().expect("steal candidate");
-        return Pick::Run(tid);
-    }
+    *job_stalled = false;
     if future_work {
         Pick::Retry(sh.steal_delay)
     } else {
@@ -1028,8 +1519,10 @@ fn fetch_args(sh: &Shared, task: &QueuedTask, node: usize) -> Fetch {
 /// the task's.
 fn park_task(sh: &Arc<Shared>, mut task: QueuedTask) {
     let tid = sh.next_task_id.fetch_add(1, Ordering::Relaxed);
+    let job = task.spec.job;
     let arg_ids: Vec<ObjectId> = task.spec.args.iter().map(|a| a.id).collect();
     let mut st = sh.state.lock().unwrap();
+    st.dispatch_done(job); // the task is no longer executing
     if st.shutdown {
         task.handle.complete(Err("runtime shut down".into()));
         st.outstanding = st.outstanding.saturating_sub(1);
@@ -1049,7 +1542,7 @@ fn park_task(sh: &Arc<Shared>, mut task: QueuedTask) {
     }
     task.unresolved = unresolved;
     if unresolved == 0 {
-        st.route(sh, tid, task.spec.placement, &arg_ids);
+        st.route(sh, tid, job, task.spec.placement, &arg_ids);
     }
     st.pending.insert(tid, task);
     drop(st);
@@ -1058,6 +1551,7 @@ fn park_task(sh: &Arc<Shared>, mut task: QueuedTask) {
 
 fn worker_loop(sh: Arc<Shared>, node: usize) {
     let mut stalled = false;
+    let mut job_stalled = false;
     loop {
         // --- pick a runnable task for this node (event-driven: tasks in
         // these queues already have every argument resolved) ---
@@ -1071,7 +1565,7 @@ fn worker_loop(sh: Arc<Shared>, node: usize) {
                     // the node was killed: this worker's process is gone
                     return;
                 }
-                match pick_task(&sh, &mut st, node, &mut stalled) {
+                match pick_task(&sh, &mut st, node, &mut stalled, &mut job_stalled) {
                     Pick::Run(tid) => {
                         break st.pending.remove(&tid).expect("queued task exists");
                     }
@@ -1122,6 +1616,7 @@ fn worker_loop(sh: Arc<Shared>, node: usize) {
         sh.tasks_executed.fetch_add(1, Ordering::Relaxed);
         sh.events.lock().unwrap().push(TaskEvent {
             name: task.spec.name.clone(),
+            job: task.spec.job,
             node,
             start,
             end,
@@ -1165,7 +1660,7 @@ fn worker_loop(sh: Arc<Shared>, node: usize) {
                     }
                     task.handle.complete(Ok(()));
                 }
-                finish_task(&sh, &task.outputs);
+                finish_task(&sh, task.spec.job, &task.outputs);
             }
             Err(msg) => {
                 if task.attempt < task.spec.max_retries {
@@ -1174,9 +1669,10 @@ fn worker_loop(sh: Arc<Shared>, node: usize) {
                     let tid = sh.next_task_id.fetch_add(1, Ordering::Relaxed);
                     let arg_ids: Vec<ObjectId> =
                         task.spec.args.iter().map(|a| a.id).collect();
-                    let placement = task.spec.placement;
+                    let (job, placement) = (task.spec.job, task.spec.placement);
                     let mut st = sh.state.lock().unwrap();
-                    st.route(&sh, tid, placement, &arg_ids);
+                    st.dispatch_done(job);
+                    st.route(&sh, tid, job, placement, &arg_ids);
                     st.pending.insert(tid, task);
                     drop(st);
                     sh.work_ready.notify_all();
@@ -1192,17 +1688,19 @@ fn worker_loop(sh: Arc<Shared>, node: usize) {
                 for oid in &task.outputs {
                     sh.store.fail(*oid);
                 }
-                finish_task(&sh, &task.outputs);
+                finish_task(&sh, task.spec.job, &task.outputs);
             }
         }
     }
 }
 
-/// Post-completion bookkeeping: route tasks whose last argument just
-/// resolved (the event-driven dispatch point — locality is computed here,
-/// when the bytes' location is known) and update quiescence accounting.
-fn finish_task(sh: &Arc<Shared>, outputs: &[ObjectId]) {
+/// Post-completion bookkeeping: release the job's in-flight slot, route
+/// tasks whose last argument just resolved (the event-driven dispatch
+/// point — locality is computed here, when the bytes' location is known)
+/// and update quiescence accounting.
+fn finish_task(sh: &Arc<Shared>, job: JobId, outputs: &[ObjectId]) {
     let mut st = sh.state.lock().unwrap();
+    st.dispatch_done(job);
     let mut now_runnable: Vec<u64> = Vec::new();
     for oid in outputs {
         if let Some(waiters) = st.waiting.remove(oid) {
@@ -1217,14 +1715,15 @@ fn finish_task(sh: &Arc<Shared>, outputs: &[ObjectId]) {
         }
     }
     for wtid in now_runnable {
-        let (placement, arg_ids): (Placement, Vec<ObjectId>) = {
+        let (wjob, placement, arg_ids): (JobId, Placement, Vec<ObjectId>) = {
             let w = &st.pending[&wtid];
             (
+                w.spec.job,
                 w.spec.placement,
                 w.spec.args.iter().map(|a| a.id).collect(),
             )
         };
-        st.route(sh, wtid, placement, &arg_ids);
+        st.route(sh, wtid, wjob, placement, &arg_ids);
     }
     st.outstanding = st.outstanding.saturating_sub(1);
     let quiescent = st.outstanding == 0;
@@ -1261,6 +1760,7 @@ mod tests {
 
     fn noop(name: &str, placement: Placement, args: Vec<ObjectRef>) -> TaskSpec {
         TaskSpec {
+            job: JobId::ROOT,
             name: name.into(),
             placement,
             func: task_fn(|_| Ok(vec![])),
@@ -1272,6 +1772,7 @@ mod tests {
 
     fn sleeper(name: &str, placement: Placement, ms: u64) -> TaskSpec {
         TaskSpec {
+            job: JobId::ROOT,
             name: name.into(),
             placement,
             func: task_fn(move |_| {
@@ -1287,6 +1788,7 @@ mod tests {
     /// A task producing one constant buffer (has lineage, unlike a put).
     fn produce(name: &str, placement: Placement, byte: u8, len: usize) -> TaskSpec {
         TaskSpec {
+            job: JobId::ROOT,
             name: name.into(),
             placement,
             func: task_fn(move |_| Ok(vec![vec![byte; len]])),
@@ -1300,6 +1802,7 @@ mod tests {
     fn basic_task_runs_and_returns() {
         let rt = small_rt(2, 2);
         let (outs, h) = rt.submit(TaskSpec {
+            job: JobId::ROOT,
             name: "double".into(),
             placement: Placement::Any,
             func: task_fn(|ctx| {
@@ -1318,6 +1821,7 @@ mod tests {
     fn chained_futures_resolve_in_order() {
         let rt = small_rt(2, 1);
         let (a, _) = rt.submit(TaskSpec {
+            job: JobId::ROOT,
             name: "produce".into(),
             placement: Placement::Node(0),
             func: task_fn(|_| Ok(vec![vec![1, 2, 3]])),
@@ -1327,6 +1831,7 @@ mod tests {
         });
         // submitted before `produce` finishes; must wait for its arg
         let (b, h) = rt.submit(TaskSpec {
+            job: JobId::ROOT,
             name: "consume".into(),
             placement: Placement::Node(1),
             func: task_fn(|ctx| Ok(vec![vec![ctx.args[0].iter().sum::<u8>()]])),
@@ -1346,6 +1851,7 @@ mod tests {
         let mut handles = vec![];
         for node in 0..3 {
             let (_, h) = rt.submit(TaskSpec {
+                job: JobId::ROOT,
                 name: format!("pin{node}"),
                 placement: Placement::Node(node),
                 func: task_fn(move |ctx| {
@@ -1393,6 +1899,7 @@ mod tests {
         // the consumer is submitted while the producer is still running,
         // so locality can only be computed at readiness time
         let (outs, _) = rt.submit(TaskSpec {
+            job: JobId::ROOT,
             name: "produce".into(),
             placement: Placement::Node(1),
             func: task_fn(|_| {
@@ -1545,6 +2052,7 @@ mod tests {
         let rt = small_rt(2, 1);
         let fired = Arc::new(AtomicUsize::new(0));
         let (outs, h) = rt.submit(TaskSpec {
+            job: JobId::ROOT,
             name: "produce".into(),
             placement: Placement::Any,
             func: task_fn(|_| {
@@ -1568,6 +2076,7 @@ mod tests {
     fn retries_then_succeeds() {
         let rt = small_rt(1, 1);
         let (outs, h) = rt.submit(TaskSpec {
+            job: JobId::ROOT,
             name: "flaky".into(),
             placement: Placement::Any,
             func: task_fn(|ctx| {
@@ -1595,6 +2104,7 @@ mod tests {
     fn retries_exhausted_reports_error() {
         let rt = small_rt(1, 1);
         let (_, h) = rt.submit(TaskSpec {
+            job: JobId::ROOT,
             name: "doomed".into(),
             placement: Placement::Any,
             func: task_fn(|_| Err("always fails".into())),
@@ -1611,6 +2121,7 @@ mod tests {
     fn wrong_output_count_is_an_error() {
         let rt = small_rt(1, 1);
         let (_, h) = rt.submit(TaskSpec {
+            job: JobId::ROOT,
             name: "liar".into(),
             placement: Placement::Any,
             func: task_fn(|_| Ok(vec![])),
@@ -1628,6 +2139,7 @@ mod tests {
         let producers: Vec<ObjectRef> = (0..n)
             .map(|i| {
                 let (o, _) = rt.submit(TaskSpec {
+                    job: JobId::ROOT,
                     name: format!("p{i}"),
                     placement: Placement::Any,
                     func: task_fn(move |_| Ok(vec![vec![i as u8]])),
@@ -1639,6 +2151,7 @@ mod tests {
             })
             .collect();
         let (sum, h) = rt.submit(TaskSpec {
+            job: JobId::ROOT,
             name: "reduce".into(),
             placement: Placement::Node(0),
             func: task_fn(|ctx| {
@@ -1660,6 +2173,7 @@ mod tests {
         let rt = small_rt(2, 2);
         for i in 0..16 {
             rt.submit(TaskSpec {
+                job: JobId::ROOT,
                 name: format!("t{i}"),
                 placement: Placement::Any,
                 func: task_fn(|_| {
@@ -1680,6 +2194,201 @@ mod tests {
         let rt = small_rt(2, 1);
         rt.shutdown();
         rt.shutdown();
+    }
+
+    // --- multi-job fair sharing, quotas, teardown ------------------
+
+    #[test]
+    fn fair_share_interleaves_equal_weight_jobs() {
+        // one slot, two equal jobs with queued backlogs: stride
+        // scheduling must alternate their dispatches
+        let rt = small_rt(1, 1);
+        let a = rt.register_job(JobParams::default());
+        let b = rt.register_job(JobParams::default());
+        let mut handles = Vec::new();
+        for i in 0..4 {
+            handles.push(
+                rt.submit_for(a, sleeper(&format!("a{i}"), Placement::Node(0), 5)).1,
+            );
+            handles.push(
+                rt.submit_for(b, sleeper(&format!("b{i}"), Placement::Node(0), 5)).1,
+            );
+        }
+        for h in handles {
+            h.wait().unwrap();
+        }
+        let events = rt.task_events();
+        assert_eq!(events.len(), 8);
+        for pair in events.chunks(2) {
+            assert_ne!(
+                pair[0].job, pair[1].job,
+                "equal-weight jobs must alternate: {events:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn weight_biases_the_dispatch_ratio() {
+        let rt = small_rt(1, 1);
+        let heavy = rt.register_job(JobParams {
+            weight: 3.0,
+            ..JobParams::default()
+        });
+        let light = rt.register_job(JobParams::default());
+        let mut handles = Vec::new();
+        for i in 0..8 {
+            handles.push(
+                rt.submit_for(
+                    heavy,
+                    sleeper(&format!("h{i}"), Placement::Node(0), 3),
+                )
+                .1,
+            );
+        }
+        for i in 0..8 {
+            handles.push(
+                rt.submit_for(
+                    light,
+                    sleeper(&format!("l{i}"), Placement::Node(0), 3),
+                )
+                .1,
+            );
+        }
+        for h in handles {
+            h.wait().unwrap();
+        }
+        // over the first 8 dispatches the 3:1 weight must show: heavy
+        // holds at least 5 of them (exact stride order: h h l h h l …
+        // modulo the pre-backlog head start)
+        let first: Vec<JobId> =
+            rt.task_events().iter().take(8).map(|e| e.job).collect();
+        let heavies = first.iter().filter(|j| **j == heavy).count();
+        assert!(heavies >= 5, "weight ignored: {first:?}");
+    }
+
+    #[test]
+    fn late_job_gets_no_catch_up_burst() {
+        // job A dispatches a long backlog first; B arrives late. B must
+        // share from *now* (~alternating), not burn down A's accumulated
+        // vruntime with a monopolizing burst.
+        let rt = small_rt(1, 1);
+        let a = rt.register_job(JobParams::default());
+        let mut handles = Vec::new();
+        for i in 0..6 {
+            handles.push(
+                rt.submit_for(a, sleeper(&format!("a{i}"), Placement::Node(0), 4)).1,
+            );
+        }
+        std::thread::sleep(Duration::from_millis(10)); // A is mid-backlog
+        let b = rt.register_job(JobParams::default());
+        for i in 0..3 {
+            handles.push(
+                rt.submit_for(b, sleeper(&format!("b{i}"), Placement::Node(0), 4)).1,
+            );
+        }
+        for h in handles {
+            h.wait().unwrap();
+        }
+        // after B's arrival, no window of three consecutive dispatches
+        // may be all-B while A still has queued work
+        let events = rt.task_events();
+        let names: Vec<(&str, JobId)> = events
+            .iter()
+            .map(|e| (e.name.as_str(), e.job))
+            .collect();
+        let a_last = events
+            .iter()
+            .rposition(|e| e.job == a)
+            .expect("a ran");
+        for w in events[..a_last].windows(3) {
+            assert!(
+                w.iter().any(|e| e.job == a),
+                "B monopolized a window: {names:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn in_flight_cap_bounds_concurrent_execution() {
+        let rt = small_rt(2, 4); // 8 slots available
+        let capped = rt.register_job(JobParams {
+            max_in_flight: Some(2),
+            ..JobParams::default()
+        });
+        let mut handles = Vec::new();
+        for i in 0..10 {
+            handles.push(
+                rt.submit_for(capped, sleeper(&format!("c{i}"), Placement::Any, 5)).1,
+            );
+        }
+        for h in handles {
+            h.wait().unwrap();
+        }
+        // max concurrency from the event log must respect the cap
+        let events = rt.task_events();
+        let mut points: Vec<(f64, i32)> = Vec::new();
+        for e in &events {
+            points.push((e.start, 1));
+            points.push((e.end, -1));
+        }
+        points.sort_by(|x, y| {
+            x.0.partial_cmp(&y.0).unwrap().then(x.1.cmp(&y.1))
+        });
+        let (mut cur, mut peak) = (0, 0);
+        for (_, d) in points {
+            cur += d;
+            peak = peak.max(cur);
+        }
+        assert!(peak <= 2, "cap violated: {peak} concurrent");
+        assert_eq!(rt.job_in_flight(capped), 0);
+    }
+
+    #[test]
+    fn resident_budget_backpressures_a_jobs_balanced_work() {
+        // the quota job's Any task is declined while its residency is
+        // over budget; a neighbour's work keeps flowing, and draining
+        // the residency releases the gate
+        let rt = small_rt(2, 1);
+        let hog = rt.register_job(JobParams {
+            resident_budget: Some(64),
+            ..JobParams::default()
+        });
+        let (ballast, h) = rt.submit_for(
+            hog,
+            produce("ballast", Placement::Node(0), 1, 256),
+        );
+        h.wait().unwrap();
+        let (_, gated) =
+            rt.submit_for(hog, sleeper("gated", Placement::Any, 1));
+        let (_, free) = rt.submit(sleeper("free", Placement::Any, 1));
+        free.wait().unwrap();
+        assert!(
+            !gated.is_done(),
+            "over-budget job dispatched load-balanced work"
+        );
+        assert!(rt.store_stats().job_backpressure_stalls >= 1);
+        drop(ballast); // residency drains → the gate releases
+        gated.wait().unwrap();
+    }
+
+    #[test]
+    fn retire_job_frees_lineage_events_and_sched_state() {
+        let rt = small_rt(2, 2);
+        let job = rt.register_job(JobParams::default());
+        let (outs, h) =
+            rt.submit_for(job, produce("src", Placement::Node(0), 7, 64));
+        h.wait().unwrap();
+        drop(outs);
+        let events = rt.retire_job(job);
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].job, job);
+        // the job's events are gone from the runtime log…
+        assert!(rt.task_events().is_empty());
+        // …and so is its lineage: a later submission under a fresh job
+        // still works, and ROOT's state is untouched
+        let (outs2, h2) = rt.submit(produce("root", Placement::Node(1), 2, 8));
+        h2.wait().unwrap();
+        assert_eq!(*rt.get(&outs2[0]).unwrap(), vec![2u8; 8]);
     }
 
     // --- node-failure recovery -------------------------------------
@@ -1776,6 +2485,7 @@ mod tests {
         // consumer submitted against live data, then the data vanishes
         rt.lose_object(outs[0].id()).unwrap();
         let (sum, h2) = rt.submit(TaskSpec {
+            job: JobId::ROOT,
             name: "consume".into(),
             placement: Placement::Node(1),
             func: task_fn(|ctx| {
@@ -1796,7 +2506,7 @@ mod tests {
         // DAG must still produce correct values
         let rt = small_rt(2, 2);
         let rt2 = Arc::downgrade(&rt);
-        rt.on_commit(move |seq, _id| {
+        rt.on_commit(move |seq, _id, _job| {
             if seq == 2 {
                 if let Some(rt) = rt2.upgrade() {
                     let _ = rt.kill_node(0);

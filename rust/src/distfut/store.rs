@@ -38,7 +38,7 @@ use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
-use crate::distfut::DfError;
+use crate::distfut::{DfError, JobId};
 
 /// Globally unique object identifier.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -123,6 +123,9 @@ struct Entry {
     slot: Slot,
     /// Node whose store owns this object.
     node: usize,
+    /// Job the object belongs to (per-job residency accounting and
+    /// [`Store::purge_job`] teardown).
+    job: JobId,
     /// Insertion sequence for cold-first spill ordering.
     seq: u64,
     /// Outstanding `ObjectRef` handle families (declare = 1, each
@@ -133,9 +136,10 @@ struct Entry {
 /// Callback fired once when an object's data becomes available.
 pub type ReadyCallback = Box<dyn FnOnce() + Send>;
 
-/// Observer of data-bearing commits: `(commit sequence number, object)`.
-/// Fired outside the table lock; the chaos harness builds on it.
-pub type CommitHook = Box<dyn Fn(u64, ObjectId) + Send + Sync>;
+/// Observer of data-bearing commits: `(commit sequence number, object,
+/// owning job)`. Fired outside the table lock; the chaos harness builds
+/// on it (the job tag lets a harness count only its own job's commits).
+pub type CommitHook = Box<dyn Fn(u64, ObjectId, JobId) + Send + Sync>;
 
 /// Transfer/spill counters (feed the metrics layer).
 #[derive(Debug, Default)]
@@ -150,6 +154,11 @@ pub struct StoreCounters {
     /// worker declined runnable load-balanced work because its node was
     /// over the admission watermark (paper §2.5 backpressure).
     pub backpressure_stalls: AtomicU64,
+    /// Dispatch stalls caused by *per-job* admission control: a job's
+    /// runnable load-balanced work was passed over because the job was
+    /// over its resident-byte share (or quota) while other jobs ran —
+    /// the memory hog backpressures itself, not its neighbours.
+    pub job_backpressure_stalls: AtomicU64,
     /// Resident objects dropped by node failures / chaos object loss.
     pub objects_lost: AtomicU64,
     pub lost_bytes: AtomicU64,
@@ -169,6 +178,9 @@ pub struct StoreStats {
     /// Scheduler-level backpressure stall episodes (see
     /// [`StoreCounters::backpressure_stalls`]).
     pub backpressure_stalls: u64,
+    /// Per-job backpressure stall episodes (see
+    /// [`StoreCounters::job_backpressure_stalls`]).
+    pub job_backpressure_stalls: u64,
     /// Resident objects dropped by node failures / chaos object loss.
     pub objects_lost: u64,
     pub lost_bytes: u64,
@@ -203,6 +215,10 @@ struct Table {
     entries: HashMap<ObjectId, Entry>,
     /// Resident bytes per node.
     resident: Vec<u64>,
+    /// Resident bytes per node, split by job (per-job admission control;
+    /// empty entries are pruned so the maps stay as small as the live
+    /// job set).
+    resident_job: Vec<HashMap<JobId, u64>>,
     /// Readiness watchers: object -> callbacks fired at commit.
     watchers: HashMap<ObjectId, Vec<ReadyCallback>>,
 }
@@ -214,6 +230,7 @@ impl Store {
             table: Mutex::new(Table {
                 entries: HashMap::new(),
                 resident: vec![0; n_nodes],
+                resident_job: vec![HashMap::new(); n_nodes],
                 watchers: HashMap::new(),
             }),
             ready: Condvar::new(),
@@ -230,13 +247,27 @@ impl Store {
         })
     }
 
-    fn set_resident(&self, t: &mut Table, node: usize, bytes: u64) {
-        t.resident[node] = bytes;
-        self.resident_gauge[node].store(bytes, Ordering::Relaxed);
+    /// Account `bytes` of new residency on `node` against `job`.
+    fn add_resident(&self, t: &mut Table, node: usize, job: JobId, bytes: u64) {
+        t.resident[node] += bytes;
+        *t.resident_job[node].entry(job).or_insert(0) += bytes;
+        self.resident_gauge[node].store(t.resident[node], Ordering::Relaxed);
     }
 
-    /// Reserve an id for an object a task will produce later.
-    pub fn declare(self: &Arc<Self>, node: usize) -> ObjectRef {
+    /// Release `bytes` of residency on `node` from `job`'s account.
+    fn sub_resident(&self, t: &mut Table, node: usize, job: JobId, bytes: u64) {
+        t.resident[node] = t.resident[node].saturating_sub(bytes);
+        if let Some(v) = t.resident_job[node].get_mut(&job) {
+            *v = v.saturating_sub(bytes);
+            if *v == 0 {
+                t.resident_job[node].remove(&job);
+            }
+        }
+        self.resident_gauge[node].store(t.resident[node], Ordering::Relaxed);
+    }
+
+    /// Reserve an id for an object a task of `job` will produce later.
+    pub fn declare(self: &Arc<Self>, node: usize, job: JobId) -> ObjectRef {
         let id = ObjectId(self.next_id.fetch_add(1, Ordering::Relaxed));
         let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
         self.table.lock().unwrap().entries.insert(
@@ -244,6 +275,7 @@ impl Store {
             Entry {
                 slot: Slot::Pending,
                 node,
+                job,
                 seq,
                 refs: 1,
             },
@@ -267,7 +299,11 @@ impl Store {
     /// Recovery uses this when a lost task's argument was consumed and
     /// released before the failure; the argument's own producer must be
     /// resubmitted transitively. Retains instead when the entry is live.
-    pub fn retain_or_resurrect(self: &Arc<Self>, id: ObjectId) -> (ObjectRef, ObjState) {
+    pub fn retain_or_resurrect(
+        self: &Arc<Self>,
+        id: ObjectId,
+        job: JobId,
+    ) -> (ObjectRef, ObjState) {
         let mut t = self.table.lock().unwrap();
         if let Some(entry) = t.entries.get_mut(&id) {
             entry.refs += 1;
@@ -281,6 +317,7 @@ impl Store {
             Entry {
                 slot: Slot::Lost,
                 node: 0,
+                job,
                 seq,
                 refs: 1,
             },
@@ -295,6 +332,7 @@ impl Store {
     /// process "died" mid-commit and must re-execute elsewhere.
     pub fn commit(&self, id: ObjectId, node: usize, data: Vec<u8>) -> bool {
         let size = data.len() as u64;
+        let job;
         let fired: Vec<ReadyCallback> = {
             let mut t = self.table.lock().unwrap();
             if self.dead[node].load(Ordering::Relaxed) {
@@ -315,8 +353,8 @@ impl Store {
             }
             entry.slot = Slot::Memory(Arc::new(data));
             entry.node = node;
-            let resident = t.resident[node] + size;
-            self.set_resident(&mut t, node, resident);
+            job = entry.job;
+            self.add_resident(&mut t, node, job, size);
             self.maybe_spill(&mut t, node);
             t.watchers.remove(&id).unwrap_or_default()
         };
@@ -334,7 +372,7 @@ impl Store {
             let hook = self.commit_hook.lock().unwrap();
             let seq = self.commits.fetch_add(1, Ordering::SeqCst) + 1;
             if let Some(hook) = &*hook {
-                hook(seq, id);
+                hook(seq, id, job);
             }
         } else {
             self.commits.fetch_add(1, Ordering::Relaxed);
@@ -361,9 +399,9 @@ impl Store {
         self.commits.load(Ordering::SeqCst)
     }
 
-    /// Immediately store data (driver put).
+    /// Immediately store data (driver put; accounted to [`JobId::ROOT`]).
     pub fn put(self: &Arc<Self>, node: usize, data: Vec<u8>) -> ObjectRef {
-        let r = self.declare(node);
+        let r = self.declare(node, JobId::ROOT);
         if !self.commit(r.id, node, data) {
             // the node died between target selection and the commit: the
             // data is gone and a driver put has no lineage — surface a
@@ -460,6 +498,69 @@ impl Store {
     /// Lock-free per-node resident-bytes gauge (admission control input).
     pub fn resident_on(&self, node: usize) -> u64 {
         self.resident_gauge[node].load(Ordering::Relaxed)
+    }
+
+    /// Resident bytes of `job` on `node` (per-job admission control).
+    pub fn resident_of_job_on(&self, node: usize, job: JobId) -> u64 {
+        let t = self.table.lock().unwrap();
+        t.resident_job[node].get(&job).copied().unwrap_or(0)
+    }
+
+    /// Cluster-wide resident bytes of `job` (quota enforcement input).
+    pub fn resident_of_job(&self, job: JobId) -> u64 {
+        let t = self.table.lock().unwrap();
+        t.resident_job
+            .iter()
+            .filter_map(|m| m.get(&job))
+            .sum()
+    }
+
+    /// Per-job resident bytes on `node` — a snapshot for the scheduler's
+    /// per-job admission pass (taken only while the node is over its
+    /// watermark, so the table lock stays off the common dispatch path).
+    pub fn job_residency_on(&self, node: usize) -> Vec<(JobId, u64)> {
+        let t = self.table.lock().unwrap();
+        t.resident_job[node]
+            .iter()
+            .map(|(j, b)| (*j, *b))
+            .collect()
+    }
+
+    /// Drop every remaining entry of `job` — spill files included — and
+    /// return how many entries were purged. Called at job teardown: with
+    /// correct reference counting the job's objects are already released
+    /// by then, so this is a defensive sweep that guarantees a long-lived
+    /// runtime cannot accumulate leaked entries (watchers of purged
+    /// objects are dropped without firing; late fetches observe
+    /// `ObjectReleased`).
+    pub fn purge_job(&self, job: JobId) -> usize {
+        let mut t = self.table.lock().unwrap();
+        let ids: Vec<ObjectId> = t
+            .entries
+            .iter()
+            .filter(|(_, e)| e.job == job)
+            .map(|(id, _)| *id)
+            .collect();
+        for id in &ids {
+            let Some(entry) = t.entries.remove(id) else { continue };
+            match &entry.slot {
+                Slot::Memory(d) => {
+                    let bytes = d.len() as u64;
+                    let node = entry.node;
+                    self.sub_resident(&mut t, node, job, bytes);
+                }
+                Slot::Spilled(p, _) => {
+                    let _ = fs::remove_file(p);
+                }
+                _ => {}
+            }
+            t.watchers.remove(id);
+        }
+        drop(t);
+        if !ids.is_empty() {
+            self.ready.notify_all();
+        }
+        ids.len()
     }
 
     /// Whether `node` has been killed ([`Store::fail_node`]).
@@ -586,7 +687,9 @@ impl Store {
                 }
             }
         }
-        self.set_resident(&mut t, node, 0);
+        t.resident[node] = 0;
+        t.resident_job[node].clear();
+        self.resident_gauge[node].store(0, Ordering::Relaxed);
         self.counters
             .objects_lost
             .fetch_add(lost.len() as u64, Ordering::Relaxed);
@@ -612,9 +715,9 @@ impl Store {
         };
         let bytes = d.len() as u64;
         let node = entry.node;
+        let job = entry.job;
         entry.slot = Slot::Lost;
-        let resident = t.resident[node].saturating_sub(bytes);
-        self.set_resident(&mut t, node, resident);
+        self.sub_resident(&mut t, node, job, bytes);
         self.counters.objects_lost.fetch_add(1, Ordering::Relaxed);
         self.counters.lost_bytes.fetch_add(bytes, Ordering::Relaxed);
         drop(t);
@@ -633,15 +736,16 @@ impl Store {
             let freed = match &entry.slot {
                 Slot::Memory(d) => {
                     let n = d.len() as u64;
-                    Some((entry.node, n, None))
+                    Some((entry.node, entry.job, n, None))
                 }
-                Slot::Spilled(p, _) => Some((entry.node, 0, Some(p.clone()))),
+                Slot::Spilled(p, _) => {
+                    Some((entry.node, entry.job, 0, Some(p.clone())))
+                }
                 _ => None,
             };
             entry.slot = Slot::Released;
-            if let Some((node, bytes, path)) = freed {
-                let resident = t.resident[node].saturating_sub(bytes);
-                self.set_resident(&mut t, node, resident);
+            if let Some((node, job, bytes, path)) = freed {
+                self.sub_resident(&mut t, node, job, bytes);
                 if let Some(p) = path {
                     let _ = fs::remove_file(p);
                 }
@@ -682,8 +786,8 @@ impl Store {
                 let mut f = fs::File::create(&path).expect("spill create");
                 f.write_all(data).expect("spill write");
                 entry.slot = Slot::Spilled(path, size);
-                let resident = t.resident[node] - size;
-                self.set_resident(&mut t, node, resident);
+                let job = entry.job;
+                self.sub_resident(&mut t, node, job, size);
                 self.counters.spills.fetch_add(1, Ordering::Relaxed);
                 self.counters.spill_bytes.fetch_add(size, Ordering::Relaxed);
             }
@@ -708,6 +812,10 @@ impl Store {
             backpressure_stalls: self
                 .counters
                 .backpressure_stalls
+                .load(Ordering::Relaxed),
+            job_backpressure_stalls: self
+                .counters
+                .job_backpressure_stalls
                 .load(Ordering::Relaxed),
             objects_lost: self.counters.objects_lost.load(Ordering::Relaxed),
             lost_bytes: self.counters.lost_bytes.load(Ordering::Relaxed),
@@ -758,7 +866,7 @@ mod tests {
     #[test]
     fn declare_then_commit_wakes_waiter() {
         let s = test_store(1, u64::MAX);
-        let r = s.declare(0);
+        let r = s.declare(0, JobId::ROOT);
         assert!(!s.is_ready(r.id));
         let s2 = s.clone();
         let id = r.id;
@@ -825,7 +933,7 @@ mod tests {
         let id = r.id;
         drop(r);
         assert_eq!(s.state_of(id), ObjState::Missing);
-        let (rref, state) = s.retain_or_resurrect(id);
+        let (rref, state) = s.retain_or_resurrect(id, JobId::ROOT);
         assert_eq!(state, ObjState::Missing);
         assert_eq!(s.state_of(id), ObjState::Lost);
         // a recovery recommit brings the data back
@@ -836,7 +944,7 @@ mod tests {
     #[test]
     fn double_commit_keeps_first() {
         let s = test_store(1, u64::MAX);
-        let r = s.declare(0);
+        let r = s.declare(0, JobId::ROOT);
         s.commit(r.id, 0, vec![1]);
         s.commit(r.id, 0, vec![2, 2]); // retry duplicate
         assert_eq!(*s.get(r.id, 0).unwrap(), vec![1]);
@@ -863,7 +971,7 @@ mod tests {
         assert_eq!(s.locality_node(&[a.id, b.id, c.id]), Some(2));
         assert_eq!(s.locality_node(&[a.id]), Some(0));
         // a declared-but-unproduced object contributes nothing
-        let d = s.declare(1);
+        let d = s.declare(1, JobId::ROOT);
         assert_eq!(s.locality_node(&[d.id]), None);
         assert_eq!(s.locality_node(&[]), None);
     }
@@ -884,7 +992,7 @@ mod tests {
         let s = test_store(1, u64::MAX);
         let fired = Arc::new(AtomicUsize::new(0));
         // not yet produced: deferred until commit
-        let r = s.declare(0);
+        let r = s.declare(0, JobId::ROOT);
         let f = fired.clone();
         s.subscribe(r.id, Box::new(move || {
             f.fetch_add(1, Ordering::SeqCst);
@@ -905,7 +1013,7 @@ mod tests {
         use std::sync::atomic::AtomicUsize;
         let s = test_store(1, u64::MAX);
         let fired = Arc::new(AtomicUsize::new(0));
-        let r = s.declare(0);
+        let r = s.declare(0, JobId::ROOT);
         let f = fired.clone();
         s.subscribe(r.id, Box::new(move || {
             f.fetch_add(1, Ordering::SeqCst);
@@ -920,7 +1028,7 @@ mod tests {
     fn fail_node_loses_resident_objects_and_discards_commits() {
         let s = test_store(2, u64::MAX);
         let resident = s.put(0, vec![1u8; 32]);
-        let declared = s.declare(0);
+        let declared = s.declare(0, JobId::ROOT);
         let elsewhere = s.put(1, vec![2u8; 8]);
         let lost = s.fail_node(0);
         assert_eq!(lost, vec![resident.id]);
@@ -971,7 +1079,7 @@ mod tests {
     #[test]
     fn drop_object_only_hits_resident_data() {
         let s = test_store(1, u64::MAX);
-        let pending = s.declare(0);
+        let pending = s.declare(0, JobId::ROOT);
         assert!(!s.drop_object(pending.id));
         let r = s.put(0, vec![0u8; 16]);
         assert!(s.drop_object(r.id));
@@ -985,7 +1093,7 @@ mod tests {
         let s = test_store(1, u64::MAX);
         let seen = Arc::new(A64::new(0));
         let seen2 = seen.clone();
-        s.set_commit_hook(Box::new(move |seq, _id| {
+        s.set_commit_hook(Box::new(move |seq, _id, _job| {
             seen2.store(seq, Ordering::SeqCst);
         }));
         let r = s.put(0, vec![1]);

@@ -21,6 +21,14 @@
 //! reconstruction after whole-node loss, deterministically testable via
 //! the [`distfut::chaos`] harness ([`shuffle::ShuffleJob::chaos`]).
 //!
+//! The runtime is **multi-tenant**: a long-lived [`service::JobService`]
+//! runs many concurrent jobs on one shared runtime, with weighted
+//! fair-share scheduling, per-job admission control and quotas, and
+//! per-job teardown ([`distfut::Runtime::retire_job`]) so the service
+//! can run forever. [`shuffle::ShuffleJob::submit`] is the multi-tenant
+//! entry point; [`shuffle::ShuffleJob::run`] remains the one-shot path
+//! (now a thin wrapper over a throwaway service).
+//!
 //! The compute hot-spot (sorting, partitioning and merging record arrays;
 //! the paper's 300-line C++ component) is implemented as Pallas/JAX kernels
 //! AOT-compiled to HLO and executed from Rust via PJRT ([`runtime`], the
@@ -56,6 +64,7 @@ pub mod distfut;
 pub mod metrics;
 pub mod runtime;
 pub mod s3sim;
+pub mod service;
 pub mod shuffle;
 pub mod sim;
 pub mod sortlib;
@@ -67,9 +76,13 @@ pub mod prelude {
     pub use crate::coordinator::{run_cloudsort, JobSpec};
     pub use crate::cost::CostModel;
     pub use crate::distfut::chaos::{ChaosEvent, ChaosHarness, ChaosPlan};
-    pub use crate::distfut::RecoveryStats;
+    pub use crate::distfut::{JobId, JobParams, RecoveryStats};
+    pub use crate::metrics::fairness::FairnessSummary;
     pub use crate::runtime::Backend;
     pub use crate::s3sim::S3;
+    pub use crate::service::{
+        JobHandle, JobService, JobStatus, ServiceConfig,
+    };
     pub use crate::shuffle::{
         JobReport, ShuffleJob, ShuffleStrategy, SimpleShuffle, StageTiming,
         StreamingShuffle, TwoStageMerge,

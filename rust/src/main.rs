@@ -15,11 +15,12 @@ use std::path::PathBuf;
 
 use exoshuffle::config::{parse_bytes, Config};
 use exoshuffle::coordinator::JobSpec;
-use exoshuffle::distfut::chaos::ChaosPlan;
 use exoshuffle::cost::{CostModel, RunProfile};
+use exoshuffle::distfut::chaos::ChaosPlan;
 use exoshuffle::runtime::Backend;
+use exoshuffle::service::{JobService, ServiceConfig};
 use exoshuffle::shuffle::{list_strategies, strategy_by_name, ShuffleJob};
-use exoshuffle::sim::{simulate, SimConfig, SimStrategy};
+use exoshuffle::sim::{estimate_multi_job, simulate, SimConfig, SimStrategy};
 use exoshuffle::util::{human_bytes, human_secs};
 
 fn main() {
@@ -75,6 +76,7 @@ fn run(args: Vec<String>) -> anyhow::Result<()> {
         .map_err(|e| anyhow::anyhow!(e))?;
     match cmd {
         "sort" => cmd_sort(&flags),
+        "serve" => cmd_serve(&flags),
         "sim" => cmd_sim(&flags),
         "cost" => cmd_cost(&flags),
         "info" => cmd_info(&flags),
@@ -106,9 +108,20 @@ COMMANDS:
            --chaos-kill N@C    kill node N after the C-th commit of the
                                sort (lineage recovery demo; repeatable
                                via comma: 1@10,2@40)
+  serve  run N concurrent jobs through one shared JobService
+           --jobs 4            number of concurrent jobs
+           --mix a,b,c         strategies assigned round-robin
+                               (default two-stage-merge)
+           --size 32MiB        dataset size per job
+           --workers 4         worker nodes of the shared runtime
+           --stagger-ms 0      delay between submissions
+           --weights 1,2,...   per-job fair-share weights (round-robin)
+           --max-in-flight N   per-job quota on executing tasks
+           --backend xla|native
   sim    simulate the full 100 TB benchmark (Table 1 / Figure 1)
            --runs 3            number of runs (Table 1 rows)
            --strategy NAME     topology to replay (default two-stage-merge)
+           --jobs N            also estimate N-tenant contention
            --fig1-csv FILE     write Figure 1 utilization CSV
   cost   print the Table 2 cost breakdown
            --hours 1.4939      job completion hours
@@ -338,6 +351,176 @@ fn cmd_sort(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// The multi-tenant workload driver: one shared `JobService`, N
+/// staggered jobs with a strategy mix, per-job reports and a fairness
+/// summary (share of task slots per job over the contended window).
+fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let jobs: usize = flags
+        .get("jobs")
+        .map(|v| v.parse())
+        .transpose()?
+        .unwrap_or(4);
+    let workers: usize = flags
+        .get("workers")
+        .map(|v| v.parse())
+        .transpose()?
+        .unwrap_or(4);
+    let size = flags
+        .get("size")
+        .map(|s| parse_bytes(s))
+        .transpose()
+        .map_err(|e| anyhow::anyhow!(e))?
+        .unwrap_or(32 << 20);
+    let stagger_ms: u64 = flags
+        .get("stagger-ms")
+        .map(|v| v.parse())
+        .transpose()?
+        .unwrap_or(0);
+    let mix: Vec<String> = flags
+        .get("mix")
+        .map(|m| m.split(',').map(|s| s.trim().to_string()).collect())
+        .unwrap_or_else(|| vec!["two-stage-merge".to_string()]);
+    let weights: Vec<f64> = match flags.get("weights") {
+        Some(w) => w
+            .split(',')
+            .map(|v| v.trim().parse::<f64>())
+            .collect::<Result<_, _>>()
+            .map_err(|e| anyhow::anyhow!("bad --weights: {e}"))?,
+        None => vec![1.0],
+    };
+    let max_in_flight: Option<usize> = flags
+        .get("max-in-flight")
+        .map(|v| v.parse())
+        .transpose()?;
+    let artifacts = flags
+        .get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"));
+    let backend = Backend::from_name(
+        flags
+            .get("backend")
+            .map(|s| s.as_str())
+            .unwrap_or(DEFAULT_BACKEND),
+        &artifacts,
+    )?;
+
+    let spec = JobSpec::scaled(size, workers);
+    let service = JobService::new(ServiceConfig::for_spec(&spec));
+    println!(
+        "serving {jobs} concurrent jobs of {} each on a shared {workers}-node \
+         runtime (mix: {})",
+        human_bytes(size),
+        mix.join(","),
+    );
+    let mut handles = Vec::with_capacity(jobs);
+    for i in 0..jobs {
+        let strategy_name = &mix[i % mix.len()];
+        let strategy = strategy_by_name(strategy_name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown strategy '{strategy_name}' in --mix \
+                 (try sort --list-strategies)"
+            )
+        })?;
+        let mut job = ShuffleJob::new(spec.clone())
+            .strategy_arc(strategy)
+            .backend(backend.clone())
+            .name(format!("job-{i}-{strategy_name}"))
+            .priority(weights[i % weights.len()]);
+        if let Some(cap) = max_in_flight {
+            job = job.max_in_flight(cap);
+        }
+        handles.push(job.submit(&service)?);
+        if stagger_ms > 0 && i + 1 < jobs {
+            std::thread::sleep(std::time::Duration::from_millis(stagger_ms));
+        }
+    }
+
+    let mut failed = 0usize;
+    for h in &handles {
+        match h.wait() {
+            Ok(report) => println!(
+                "{:<24} {:<16} total {:>7.2}s  validation {}",
+                report.name,
+                report.strategy,
+                report.total_secs,
+                if report.validation.valid { "PASS" } else { "FAIL" },
+            ),
+            Err(e) => {
+                failed += 1;
+                println!("{:<24} FAILED: {e:#}", h.name());
+            }
+        }
+    }
+
+    let job_name = |job: exoshuffle::distfut::JobId| {
+        handles
+            .iter()
+            .find(|h| h.id() == job)
+            .map(|h| h.name().to_string())
+            .unwrap_or_else(|| job.to_string())
+    };
+    let fairness = service.fairness();
+    if fairness.per_job.len() >= 2 {
+        println!(
+            "\nfairness over the contended window [{:.2}s, {:.2}s]:",
+            fairness.window.0, fairness.window.1
+        );
+        for share in &fairness.per_job {
+            println!(
+                "  {:<24} {:>5.1}% of task slots ({:.2} slot-secs)",
+                job_name(share.job),
+                share.share * 100.0,
+                share.busy_slot_secs,
+            );
+        }
+        println!("  min share: {:.1}%", fairness.min_share() * 100.0);
+        // per-job share-of-slots over time: each cell is 1/48 of the
+        // run, shaded by the job's fraction of the slots granted then
+        let events: Vec<exoshuffle::metrics::TaskEvent> = handles
+            .iter()
+            .filter_map(|h| h.report())
+            .flat_map(|r| r.events)
+            .collect();
+        let series = exoshuffle::metrics::slot_share_series(&events, 48);
+        if !series.is_empty() {
+            println!("share of task slots over time:");
+            for (job, shares) in &series {
+                let cells: String = shares
+                    .iter()
+                    .map(|s| {
+                        if *s <= 0.01 {
+                            ' '
+                        } else if *s < 0.25 {
+                            '.'
+                        } else if *s < 0.5 {
+                            '-'
+                        } else if *s < 0.75 {
+                            '+'
+                        } else {
+                            '#'
+                        }
+                    })
+                    .collect();
+                println!("  {:<24} |{cells}|", job_name(*job));
+            }
+        }
+    }
+    let stats = service.runtime().store_stats();
+    println!(
+        "runtime: {} transfers ({}), {} spills, {} node stalls, {} job stalls",
+        stats.transfers,
+        human_bytes(stats.transfer_bytes),
+        stats.spills,
+        stats.backpressure_stalls,
+        stats.job_backpressure_stalls,
+    );
+    service.shutdown();
+    if failed > 0 {
+        return Err(anyhow::anyhow!("{failed} job(s) failed"));
+    }
+    Ok(())
+}
+
 fn cmd_sim(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     if flags.contains_key("list-strategies") {
         print_strategies(true);
@@ -399,6 +582,33 @@ fn cmd_sim(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         avg(|r| r.reduce_secs),
         avg(|r| r.total_secs),
     );
+    // Multi-tenant contention model (the JobService at paper scale)
+    if let Some(jobs) = flags.get("jobs") {
+        let jobs: usize = jobs.parse()?;
+        let mut cfg = SimConfig::paper_100tb();
+        cfg.strategy = strategy;
+        let mut tenants = vec![1usize];
+        let mut n = 2;
+        while n < jobs {
+            tenants.push(n);
+            n *= 2;
+        }
+        if jobs > 1 {
+            tenants.push(jobs);
+        }
+        println!("\nmulti-job contention (fair-shared cluster):");
+        for n in tenants {
+            let e = estimate_multi_job(&cfg, n);
+            println!(
+                "  {n:>2} tenants: per-job {:>7.0}s ({:>4.2}x solo), \
+                 aggregate {}/s",
+                e.per_job_secs,
+                e.slowdown,
+                human_bytes(e.aggregate_bytes_per_sec as u64),
+            );
+        }
+    }
+
     // Table 2 from run #1
     let r = &rows[0];
     let model = CostModel::paper();

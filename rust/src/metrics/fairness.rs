@@ -1,0 +1,342 @@
+//! Per-job fair-share measures for multi-tenant runs.
+//!
+//! A shared runtime's scheduler promises weighted fair sharing of task
+//! slots; this module makes the promise *measurable* from the task log.
+//! The key number is a job's **share of slot-time over the contended
+//! window** — the interval during which at least two jobs were runnable.
+//! Outside that window a job trivially holds 100% of the slots it uses,
+//! so only contended time says anything about fairness. The acceptance
+//! bar for the multi-tenant runtime (`rust/tests/multi_job.rs`) is that
+//! no equal-weight job's share drops below 25% while two jobs run.
+
+use crate::distfut::JobId;
+use crate::metrics::TaskEvent;
+
+/// One job's slot usage within its contended time.
+#[derive(Clone, Debug)]
+pub struct JobShare {
+    pub job: JobId,
+    /// First event start .. last event end of this job (its runnable
+    /// span, as approximated by the task log).
+    pub span: (f64, f64),
+    /// Slot-seconds this job executed inside its contended intervals
+    /// (concurrent attempts add up — this is slot time, not wall time).
+    pub busy_slot_secs: f64,
+    /// This job's fraction of all slot-seconds granted during the
+    /// intervals where *it* was contended (its span overlapped ≥ 1
+    /// other runnable job). `1.0` for a job that never contended with
+    /// anyone — an uncontended job is by definition not starved.
+    pub share: f64,
+}
+
+/// Fairness summary of a multi-job task log.
+#[derive(Clone, Debug)]
+pub struct FairnessSummary {
+    /// Bounding interval of the contended time: first start to last end
+    /// of the intervals where ≥ 2 job spans overlap. `(0.0, 0.0)` when
+    /// jobs never overlapped.
+    pub window: (f64, f64),
+    /// Per-job shares, sorted by job id.
+    pub per_job: Vec<JobShare>,
+}
+
+impl FairnessSummary {
+    /// The share of `job`, or 0.0 if it never ran.
+    pub fn share_of(&self, job: JobId) -> f64 {
+        self.per_job
+            .iter()
+            .find(|s| s.job == job)
+            .map(|s| s.share)
+            .unwrap_or(0.0)
+    }
+
+    /// Smallest share across jobs (the starvation indicator).
+    pub fn min_share(&self) -> f64 {
+        self.per_job
+            .iter()
+            .map(|s| s.share)
+            .fold(f64::INFINITY, f64::min)
+    }
+}
+
+/// Slot-seconds of `events` clipped to `[lo, hi]`.
+fn busy_within(events: &[&TaskEvent], lo: f64, hi: f64) -> f64 {
+    events
+        .iter()
+        .map(|e| (e.end.min(hi) - e.start.max(lo)).max(0.0))
+        .sum()
+}
+
+/// Jobs present in a task log, each with its events, sorted by job id.
+fn by_job(events: &[TaskEvent]) -> Vec<(JobId, Vec<&TaskEvent>)> {
+    let mut jobs: Vec<(JobId, Vec<&TaskEvent>)> = Vec::new();
+    for e in events {
+        if e.end <= e.start {
+            continue; // zero-width markers (node kills) carry no slot time
+        }
+        match jobs.iter_mut().find(|(j, _)| *j == e.job) {
+            Some((_, v)) => v.push(e),
+            None => jobs.push((e.job, vec![e])),
+        }
+    }
+    jobs.sort_by_key(|(j, _)| *j);
+    jobs
+}
+
+/// Merged intervals during which at least two of the given spans
+/// overlap — the contended time of a multi-job log. Boundary sweep;
+/// ends sort before starts at equal times, so touching spans share no
+/// contended time.
+fn contended_intervals(spans: &[(JobId, f64, f64)]) -> Vec<(f64, f64)> {
+    let mut pts: Vec<(f64, i32)> = Vec::new();
+    for &(_, lo, hi) in spans {
+        if hi > lo {
+            pts.push((lo, 1));
+            pts.push((hi, -1));
+        }
+    }
+    pts.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+    let mut out: Vec<(f64, f64)> = Vec::new();
+    let mut depth = 0i32;
+    let mut start = 0.0f64;
+    for (t, d) in pts {
+        let prev = depth;
+        depth += d;
+        if prev < 2 && depth >= 2 {
+            start = t;
+        }
+        if prev >= 2 && depth < 2 && t > start {
+            out.push((start, t));
+        }
+    }
+    out
+}
+
+/// Compute the fairness summary of a (possibly multi-job) task log.
+///
+/// Contended time is the union of intervals where at least two job
+/// spans overlap (with exactly two jobs: `max(starts)..min(ends)`).
+/// Each job's share is its slot-seconds within *its own* contended
+/// intervals over all jobs' slot-seconds there, so a job that never
+/// overlapped anyone reports `share = 1.0` (uncontended ≠ starved) and
+/// a job squeezed out while others ran reports ≈ 0.
+pub fn fairness_summary(events: &[TaskEvent]) -> FairnessSummary {
+    let jobs = by_job(events);
+    let spans: Vec<(JobId, f64, f64)> = jobs
+        .iter()
+        .map(|(j, ev)| {
+            let lo = ev.iter().map(|e| e.start).fold(f64::INFINITY, f64::min);
+            let hi = ev.iter().map(|e| e.end).fold(0.0f64, f64::max);
+            (*j, lo, hi)
+        })
+        .collect();
+    let contended = contended_intervals(&spans);
+    let window = match (contended.first(), contended.last()) {
+        (Some(first), Some(last)) => (first.0, last.1),
+        _ => (0.0, 0.0),
+    };
+    let per_job = jobs
+        .iter()
+        .map(|(job, ev)| {
+            let (_, lo, hi) = spans
+                .iter()
+                .find(|(j, _, _)| j == job)
+                .copied()
+                .unwrap();
+            // this job's contended time: contended intervals clipped to
+            // its own span
+            let mine: Vec<(f64, f64)> = contended
+                .iter()
+                .filter_map(|&(a, b)| {
+                    let (a, b) = (a.max(lo), b.min(hi));
+                    (b > a).then_some((a, b))
+                })
+                .collect();
+            if mine.is_empty() {
+                return JobShare {
+                    job: *job,
+                    span: (lo, hi),
+                    busy_slot_secs: 0.0,
+                    share: 1.0,
+                };
+            }
+            let busy: f64 =
+                mine.iter().map(|&(a, b)| busy_within(ev, a, b)).sum();
+            let total: f64 = jobs
+                .iter()
+                .map(|(_, other)| {
+                    mine.iter()
+                        .map(|&(a, b)| busy_within(other, a, b))
+                        .sum::<f64>()
+                })
+                .sum();
+            JobShare {
+                job: *job,
+                span: (lo, hi),
+                busy_slot_secs: busy,
+                share: if total > 0.0 { busy / total } else { 1.0 },
+            }
+        })
+        .collect();
+    FairnessSummary { window, per_job }
+}
+
+/// Per-job share-of-slots over time: the log is cut into `bins` equal
+/// intervals and each job's fraction of the slot-seconds granted in each
+/// bin is reported (0.0 in bins where nothing ran). `serve` renders this
+/// as the per-job occupancy strip in its fairness printout.
+pub fn slot_share_series(
+    events: &[TaskEvent],
+    bins: usize,
+) -> Vec<(JobId, Vec<f64>)> {
+    let bins = bins.max(1);
+    let end = events.iter().map(|e| e.end).fold(0.0f64, f64::max);
+    if end <= 0.0 {
+        return Vec::new();
+    }
+    let dt = end / bins as f64;
+    let jobs = by_job(events);
+    let mut per_job: Vec<(JobId, Vec<f64>)> = jobs
+        .iter()
+        .map(|(j, _)| (*j, vec![0.0; bins]))
+        .collect();
+    let mut totals = vec![0.0f64; bins];
+    for (ji, (_, ev)) in jobs.iter().enumerate() {
+        for b in 0..bins {
+            let (lo, hi) = (b as f64 * dt, (b + 1) as f64 * dt);
+            let busy = busy_within(ev, lo, hi);
+            per_job[ji].1[b] = busy;
+            totals[b] += busy;
+        }
+    }
+    for (_, series) in &mut per_job {
+        for (b, v) in series.iter_mut().enumerate() {
+            *v = if totals[b] > 0.0 { *v / totals[b] } else { 0.0 };
+        }
+    }
+    per_job
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(job: u64, node: usize, start: f64, end: f64) -> TaskEvent {
+        TaskEvent {
+            name: format!("t-{job}"),
+            job: JobId(job),
+            node,
+            start,
+            end,
+            ok: true,
+            attempt: 0,
+            recovery: false,
+        }
+    }
+
+    #[test]
+    fn two_jobs_split_evenly_report_half_shares() {
+        // both jobs run [0,10] with one slot each
+        let events = vec![ev(1, 0, 0.0, 10.0), ev(2, 1, 0.0, 10.0)];
+        let s = fairness_summary(&events);
+        assert_eq!(s.window, (0.0, 10.0));
+        assert!((s.share_of(JobId(1)) - 0.5).abs() < 1e-9);
+        assert!((s.share_of(JobId(2)) - 0.5).abs() < 1e-9);
+        assert!((s.min_share() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn contended_window_is_the_overlap_of_two_jobs() {
+        // job 1 runs [0,10], job 2 joins at 4 and leaves at 8
+        let events = vec![
+            ev(1, 0, 0.0, 10.0),
+            ev(2, 1, 4.0, 8.0),
+            ev(2, 1, 4.0, 8.0), // two slots for job 2 inside the window
+        ];
+        let s = fairness_summary(&events);
+        assert_eq!(s.window, (4.0, 8.0));
+        // inside [4,8]: job 1 holds 4 slot-secs, job 2 holds 8
+        assert!((s.share_of(JobId(1)) - 4.0 / 12.0).abs() < 1e-9);
+        assert!((s.share_of(JobId(2)) - 8.0 / 12.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn starved_job_reports_near_zero_share() {
+        let events = vec![
+            ev(1, 0, 0.0, 100.0),
+            ev(1, 1, 0.0, 100.0),
+            ev(2, 0, 0.0, 1.0), // barely scheduled while 1 floods
+            ev(2, 0, 99.0, 100.0),
+        ];
+        let s = fairness_summary(&events);
+        assert!(s.share_of(JobId(2)) < 0.05, "{s:?}");
+        assert_eq!(s.min_share(), s.share_of(JobId(2)));
+    }
+
+    #[test]
+    fn single_job_and_empty_logs_are_well_defined() {
+        let s = fairness_summary(&[]);
+        assert!(s.per_job.is_empty());
+        assert!(s.min_share().is_infinite());
+        let s = fairness_summary(&[ev(1, 0, 0.0, 5.0)]);
+        assert_eq!(s.per_job.len(), 1);
+        assert_eq!(s.share_of(JobId(1)), 1.0); // uncontended = not starved
+    }
+
+    #[test]
+    fn disjoint_jobs_are_uncontended_not_starved() {
+        // three jobs that never overlap: nobody contends, nobody starves
+        let events = vec![
+            ev(1, 0, 0.0, 1.0),
+            ev(2, 0, 2.0, 3.0),
+            ev(3, 0, 4.0, 5.0),
+        ];
+        let s = fairness_summary(&events);
+        assert_eq!(s.window, (0.0, 0.0), "{s:?}");
+        for j in [1, 2, 3] {
+            assert_eq!(s.share_of(JobId(j)), 1.0, "{s:?}");
+        }
+        assert_eq!(s.min_share(), 1.0);
+    }
+
+    #[test]
+    fn partially_overlapping_trio_scopes_shares_to_each_jobs_contention() {
+        // A and B overlap on [2,4]; C runs alone later
+        let events = vec![
+            ev(1, 0, 0.0, 4.0),
+            ev(2, 1, 2.0, 6.0),
+            ev(3, 0, 8.0, 10.0),
+        ];
+        let s = fairness_summary(&events);
+        assert_eq!(s.window, (2.0, 4.0));
+        // inside [2,4] each of A and B holds one slot → 50/50
+        assert!((s.share_of(JobId(1)) - 0.5).abs() < 1e-9, "{s:?}");
+        assert!((s.share_of(JobId(2)) - 0.5).abs() < 1e-9, "{s:?}");
+        // C never contended: full share, and it must not drag min_share
+        assert_eq!(s.share_of(JobId(3)), 1.0);
+        assert!((s.min_share() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn markers_carry_no_slot_time() {
+        let mut marker = ev(1, 0, 5.0, 5.0);
+        marker.ok = false;
+        let events = vec![marker, ev(1, 0, 0.0, 2.0), ev(2, 1, 0.0, 2.0)];
+        let s = fairness_summary(&events);
+        assert_eq!(s.per_job.len(), 2);
+        assert!((s.share_of(JobId(1)) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn share_series_tracks_occupancy_over_time() {
+        // job 1 owns the first half, job 2 the second
+        let events = vec![ev(1, 0, 0.0, 5.0), ev(2, 0, 5.0, 10.0)];
+        let series = slot_share_series(&events, 2);
+        assert_eq!(series.len(), 2);
+        let j1 = &series.iter().find(|(j, _)| *j == JobId(1)).unwrap().1;
+        let j2 = &series.iter().find(|(j, _)| *j == JobId(2)).unwrap().1;
+        assert!((j1[0] - 1.0).abs() < 1e-9 && j1[1].abs() < 1e-9);
+        assert!(j2[0].abs() < 1e-9 && (j2[1] - 1.0).abs() < 1e-9);
+        assert!(slot_share_series(&[], 4).is_empty());
+    }
+}

@@ -1,15 +1,20 @@
 //! Metrics: task execution logs, resource-utilization timeseries,
 //! per-node execution timelines with stage-overlap measures
-//! ([`timeline`]), and the Figure 1 report (median/min/max utilization
+//! ([`timeline`]), per-job fair-share summaries for multi-tenant runs
+//! ([`fairness`]), and the Figure 1 report (median/min/max utilization
 //! bands across worker nodes).
 
+pub mod fairness;
 pub mod timeline;
 pub mod timeseries;
 pub mod utilization;
 
+pub use fairness::{fairness_summary, slot_share_series, FairnessSummary};
 pub use timeline::{overlap_secs, per_node_timelines, NodeTimeline};
 pub use timeseries::Timeseries;
 pub use utilization::{UtilizationReport, UtilizationSample};
+
+use crate::distfut::JobId;
 
 /// One task execution attempt (produced by the distfut scheduler and the
 /// discrete-event simulator alike; times are seconds on the run's clock —
@@ -18,6 +23,9 @@ pub use utilization::{UtilizationReport, UtilizationSample};
 pub struct TaskEvent {
     /// Task family, e.g. "map", "merge", "reduce".
     pub name: String,
+    /// Job the attempt belonged to ([`JobId::ROOT`] for single-job runs
+    /// and runtime-wide markers like node kills).
+    pub job: JobId,
     /// Node the attempt ran on.
     pub node: usize,
     pub start: f64,
@@ -70,6 +78,7 @@ mod tests {
 
     fn ev(name: &str, node: usize, start: f64, end: f64) -> TaskEvent {
         TaskEvent {
+            job: JobId::ROOT,
             name: name.into(),
             node,
             start,

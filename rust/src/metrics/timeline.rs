@@ -123,9 +123,11 @@ pub fn per_node_timelines(events: &[TaskEvent], n_nodes: usize) -> Vec<NodeTimel
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::distfut::JobId;
 
     fn ev(name: &str, node: usize, start: f64, end: f64, attempt: u32) -> TaskEvent {
         TaskEvent {
+            job: JobId::ROOT,
             name: name.into(),
             node,
             start,

@@ -1,0 +1,445 @@
+//! Multi-tenant job service: one long-lived [`Runtime`] serving many
+//! concurrent shuffle jobs.
+//!
+//! The Exoshuffle thesis is that shuffle is a *library* on a shared
+//! distributed-futures substrate that many applications use at once.
+//! [`JobService`] is that substrate's front door: it owns the runtime,
+//! accepts [`ShuffleJob`] submissions, runs each job's driver loop on its
+//! own thread, and returns a non-blocking [`JobHandle`]. Isolation and
+//! fairness come from the runtime's per-job machinery:
+//!
+//! - **Fair sharing** — every task is tagged with a
+//!   [`JobId`]; the scheduler's per-job queues are drained by weighted
+//!   fair-share dequeue (stride scheduling, weight = job priority via
+//!   [`ShuffleJob::priority`]), so an N-times-larger neighbour cannot
+//!   starve a small job.
+//! - **Quotas** — [`ShuffleJob::max_in_flight`] hard-caps a job's
+//!   concurrently executing tasks; [`ShuffleJob::resident_budget`]
+//!   backpressures a job whose store residency outgrows its budget.
+//!   Under the node-level admission watermark, residency is accounted
+//!   *per job*, so a memory-hungry job backpressures itself, not its
+//!   neighbours.
+//! - **Teardown** — when a job completes, [`Runtime::retire_job`] frees
+//!   its lineage records, drains its task events into the
+//!   [`JobReport`], and sweeps any leftover store entries, so the
+//!   service can run forever without accumulating per-job state.
+//!
+//! ```no_run
+//! use exoshuffle::prelude::*;
+//! # fn main() -> anyhow::Result<()> {
+//! let service = JobService::new(ServiceConfig::default());
+//! let a = ShuffleJob::new(JobSpec::scaled(64 << 20, 4))
+//!     .name("tenant-a")
+//!     .submit(&service)?;
+//! let b = ShuffleJob::new(JobSpec::scaled(64 << 20, 4))
+//!     .name("tenant-b")
+//!     .strategy(SimpleShuffle)
+//!     .submit(&service)?;
+//! let (ra, rb) = (a.wait()?, b.wait()?);
+//! assert!(ra.validation.valid && rb.validation.valid);
+//! println!("{}", service.fairness().min_share());
+//! service.shutdown();
+//! # Ok(()) }
+//! ```
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::anyhow;
+
+use crate::coordinator::plan::JobSpec;
+use crate::distfut::{JobId, Runtime, RuntimeOptions};
+use crate::metrics::fairness::{fairness_summary, FairnessSummary};
+use crate::metrics::TaskEvent;
+use crate::shuffle::{JobReport, ShuffleJob};
+
+/// Sizing of a [`JobService`]'s shared runtime.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// Simulated worker nodes. Jobs whose spec wants more workers than
+    /// this are rejected at submission.
+    pub n_nodes: usize,
+    /// Concurrent task slots per node.
+    pub slots_per_node: usize,
+    /// Object-store byte budget per node before spilling kicks in.
+    pub store_capacity_per_node: u64,
+    /// Memory-admission watermark fraction (see
+    /// [`RuntimeOptions::admission_watermark`]).
+    pub admission_watermark: f64,
+    /// Spill directory root.
+    pub spill_root: PathBuf,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            n_nodes: 4,
+            slots_per_node: 2,
+            store_capacity_per_node: 1 << 30,
+            admission_watermark: 1.0,
+            spill_root: std::env::temp_dir(),
+        }
+    }
+}
+
+impl ServiceConfig {
+    /// A service sized for one job's spec — what the one-shot
+    /// [`ShuffleJob::run`] wrapper spins up.
+    pub fn for_spec(spec: &JobSpec) -> ServiceConfig {
+        ServiceConfig {
+            n_nodes: spec.n_workers(),
+            slots_per_node: spec.cluster.task_parallelism().max(1),
+            store_capacity_per_node: spec.store_capacity_per_node,
+            ..ServiceConfig::default()
+        }
+    }
+}
+
+/// Coarse job lifecycle state, as seen through a [`JobHandle`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobStatus {
+    Running,
+    Succeeded,
+    Failed,
+}
+
+struct JobShared {
+    id: JobId,
+    name: String,
+    /// `None` while running; the driver thread fills it exactly once.
+    result: Mutex<Option<Result<JobReport, String>>>,
+    done: Condvar,
+}
+
+/// Non-blocking handle to a submitted job: poll [`JobHandle::status`],
+/// or block on [`JobHandle::wait`] for the report. Cloned handles
+/// observe the same job.
+#[derive(Clone)]
+pub struct JobHandle {
+    shared: Arc<JobShared>,
+}
+
+impl JobHandle {
+    /// The runtime-assigned job identity.
+    pub fn id(&self) -> JobId {
+        self.shared.id
+    }
+
+    /// The job's display name.
+    pub fn name(&self) -> &str {
+        &self.shared.name
+    }
+
+    /// Whether the job has finished (either way). Non-blocking.
+    pub fn is_done(&self) -> bool {
+        self.shared.result.lock().unwrap().is_some()
+    }
+
+    /// Current lifecycle state. Non-blocking.
+    pub fn status(&self) -> JobStatus {
+        match &*self.shared.result.lock().unwrap() {
+            None => JobStatus::Running,
+            Some(Ok(_)) => JobStatus::Succeeded,
+            Some(Err(_)) => JobStatus::Failed,
+        }
+    }
+
+    /// The report, if the job already finished successfully.
+    /// Non-blocking.
+    pub fn report(&self) -> Option<JobReport> {
+        match &*self.shared.result.lock().unwrap() {
+            Some(Ok(r)) => Some(r.clone()),
+            _ => None,
+        }
+    }
+
+    /// Block until the job finishes; returns its report or the error
+    /// that stopped it.
+    pub fn wait(&self) -> anyhow::Result<JobReport> {
+        let mut guard = self.shared.result.lock().unwrap();
+        while guard.is_none() {
+            guard = self.shared.done.wait(guard).unwrap();
+        }
+        match guard.as_ref().unwrap() {
+            Ok(r) => Ok(r.clone()),
+            Err(e) => Err(anyhow!("job '{}' failed: {e}", self.shared.name)),
+        }
+    }
+}
+
+/// A long-lived shared runtime serving many concurrent shuffle jobs
+/// (see the module docs).
+pub struct JobService {
+    rt: Arc<Runtime>,
+    /// Driver threads still possibly running; finished ones are reaped
+    /// on every submission so the list stays bounded by concurrency.
+    drivers: Mutex<Vec<JoinHandle<()>>>,
+    /// Job handles: every running job plus a bounded tail of completed
+    /// ones (kept for [`JobService::fairness`] / [`JobService::jobs`];
+    /// pruned on submission so a service running forever does not retain
+    /// every report it ever produced).
+    handles: Mutex<Vec<JobHandle>>,
+    accepting: AtomicBool,
+}
+
+/// Completed job handles retained for fairness/report queries; older
+/// completed handles are released as new jobs arrive.
+const COMPLETED_HANDLES_RETAINED: usize = 64;
+
+/// Render a driver-thread panic payload for the job's error result.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+impl JobService {
+    pub fn new(cfg: ServiceConfig) -> JobService {
+        let rt = Runtime::new(RuntimeOptions {
+            n_nodes: cfg.n_nodes.max(1),
+            slots_per_node: cfg.slots_per_node.max(1),
+            store_capacity_per_node: cfg.store_capacity_per_node,
+            spill_root: cfg.spill_root,
+            admission_watermark: cfg.admission_watermark,
+            ..RuntimeOptions::default()
+        });
+        JobService {
+            rt,
+            drivers: Mutex::new(Vec::new()),
+            handles: Mutex::new(Vec::new()),
+            accepting: AtomicBool::new(true),
+        }
+    }
+
+    /// The shared runtime (for direct task submission, chaos arming, or
+    /// stats alongside the service's jobs).
+    pub fn runtime(&self) -> &Arc<Runtime> {
+        &self.rt
+    }
+
+    /// Worker nodes of the shared runtime.
+    pub fn n_nodes(&self) -> usize {
+        self.rt.n_nodes()
+    }
+
+    /// Accept a job: registers its identity and quotas with the runtime
+    /// and starts its driver loop on a dedicated thread. Returns a
+    /// non-blocking [`JobHandle`] immediately.
+    pub fn submit(&self, job: ShuffleJob) -> anyhow::Result<JobHandle> {
+        if !self.accepting.load(Ordering::SeqCst) {
+            return Err(anyhow!("job service is shut down"));
+        }
+        job.spec.check().map_err(|e| anyhow!(e))?;
+        if job.spec.n_workers() > self.rt.n_nodes() {
+            return Err(anyhow!(
+                "job wants {} workers but the service runtime has {} nodes",
+                job.spec.n_workers(),
+                self.rt.n_nodes()
+            ));
+        }
+        let id = self.rt.register_job(job.params);
+        let name = job.name.clone().unwrap_or_else(|| id.to_string());
+        let shared = Arc::new(JobShared {
+            id,
+            name: name.clone(),
+            result: Mutex::new(None),
+            done: Condvar::new(),
+        });
+        let handle = JobHandle {
+            shared: shared.clone(),
+        };
+        let rt = self.rt.clone();
+        let driver = std::thread::Builder::new()
+            .name(format!("jobsvc-{}", id.0))
+            .spawn(move || {
+                // Contain panics from strategy/backend code: the handle
+                // must always resolve, or wait() would hang forever.
+                let outcome = std::panic::catch_unwind(
+                    std::panic::AssertUnwindSafe(|| {
+                        crate::shuffle::execute_on(job, &rt, id)
+                    }),
+                );
+                let mut result = match outcome {
+                    Ok(r) => r.map_err(|e| format!("{e:#}")),
+                    Err(p) => Err(format!(
+                        "job driver panicked: {}",
+                        panic_message(p.as_ref())
+                    )),
+                };
+                // Teardown runs on every path: lineage freed, the job's
+                // task events drained (into the report on success), any
+                // leftover store entries swept — the runtime carries no
+                // per-job state forward. An error can leave sibling
+                // tasks in flight, so wait for the job to drain first
+                // (retire_job's precondition); tasks never block
+                // unboundedly — failures cascade as poisons — so this
+                // terminates.
+                while !rt.job_quiesced(id) {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                let events: Vec<TaskEvent> = rt.retire_job(id);
+                if let Ok(report) = &mut result {
+                    report.events = events;
+                }
+                let mut guard = shared.result.lock().unwrap();
+                *guard = Some(result);
+                drop(guard);
+                shared.done.notify_all();
+            })
+            .map_err(|e| anyhow!("failed to spawn job driver: {e}"))?;
+        // Reap finished driver threads and prune old completed handles
+        // so a service that runs forever retains state proportional to
+        // its concurrency, not its history.
+        {
+            let mut drivers = self.drivers.lock().unwrap();
+            let (done, live): (Vec<_>, Vec<_>) =
+                drivers.drain(..).partition(|d| d.is_finished());
+            *drivers = live;
+            drivers.push(driver);
+            for d in done {
+                let _ = d.join();
+            }
+        }
+        {
+            let mut handles = self.handles.lock().unwrap();
+            let completed =
+                handles.iter().filter(|h| h.is_done()).count();
+            if completed > COMPLETED_HANDLES_RETAINED {
+                let mut excess = completed - COMPLETED_HANDLES_RETAINED;
+                handles.retain(|h| {
+                    if excess > 0 && h.is_done() {
+                        excess -= 1;
+                        false
+                    } else {
+                        true
+                    }
+                });
+            }
+            handles.push(handle.clone());
+        }
+        Ok(handle)
+    }
+
+    /// Handles of every running job plus a bounded tail of recently
+    /// completed ones (older completed handles are released as new jobs
+    /// arrive, so retention tracks concurrency, not history).
+    pub fn jobs(&self) -> Vec<JobHandle> {
+        self.handles.lock().unwrap().clone()
+    }
+
+    /// Jobs still running.
+    pub fn active_jobs(&self) -> usize {
+        self.handles
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|h| !h.is_done())
+            .count()
+    }
+
+    /// Fairness summary over the retained *completed, successful* jobs'
+    /// task events: per-job share of task slots during each job's
+    /// contended time (only the bounded tail of completed jobs is
+    /// scanned — see [`JobService::jobs`]). The acceptance bar for
+    /// equal-weight tenants is that no job's share drops below 25%
+    /// while two jobs are runnable.
+    pub fn fairness(&self) -> FairnessSummary {
+        let events: Vec<TaskEvent> = self
+            .handles
+            .lock()
+            .unwrap()
+            .iter()
+            .filter_map(|h| h.report())
+            .flat_map(|r| r.events)
+            .collect();
+        fairness_summary(&events)
+    }
+
+    /// Stop accepting new jobs, wait for in-flight jobs to finish, then
+    /// shut the runtime down (joining its worker threads). Idempotent.
+    pub fn shutdown(&self) {
+        self.accepting.store(false, Ordering::SeqCst);
+        let drivers: Vec<JoinHandle<()>> =
+            self.drivers.lock().unwrap().drain(..).collect();
+        for d in drivers {
+            let _ = d.join();
+        }
+        self.rt.shutdown();
+    }
+}
+
+impl Drop for JobService {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Backend;
+    use crate::shuffle::SimpleShuffle;
+
+    #[test]
+    fn single_job_through_service_matches_run() {
+        let spec = JobSpec::scaled(2 << 20, 2);
+        let service = JobService::new(ServiceConfig::for_spec(&spec));
+        let h = ShuffleJob::new(spec.clone())
+            .strategy(SimpleShuffle)
+            .backend(Backend::Native)
+            .name("svc-single")
+            .submit(&service)
+            .unwrap();
+        assert_eq!(h.name(), "svc-single");
+        let report = h.wait().unwrap();
+        assert!(report.validation.valid, "{:?}", report.validation);
+        assert_eq!(report.name, "svc-single");
+        assert_eq!(h.status(), JobStatus::Succeeded);
+        // the job's events were drained into the report at retirement…
+        assert!(!report.events.is_empty());
+        assert!(report.events.iter().all(|e| e.job == h.id()));
+        // …and the runtime carries nothing forward
+        assert!(service.runtime().task_events().is_empty());
+        service.shutdown();
+    }
+
+    #[test]
+    fn submit_rejects_oversized_and_shutdown_specs() {
+        let service = JobService::new(ServiceConfig {
+            n_nodes: 2,
+            ..ServiceConfig::default()
+        });
+        let err = ShuffleJob::new(JobSpec::scaled(4 << 20, 4))
+            .submit(&service)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("workers"), "{err}");
+        service.shutdown();
+        let err = ShuffleJob::new(JobSpec::scaled(1 << 20, 2))
+            .submit(&service)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("shut down"), "{err}");
+    }
+
+    #[test]
+    fn handle_is_nonblocking_while_running() {
+        let spec = JobSpec::scaled(2 << 20, 2);
+        let service = JobService::new(ServiceConfig::for_spec(&spec));
+        let h = ShuffleJob::new(spec).submit(&service).unwrap();
+        // races are fine either way: Running before completion,
+        // Succeeded after — never a block
+        let _ = h.status();
+        let report = h.wait().unwrap();
+        assert!(report.validation.valid);
+        assert_eq!(service.active_jobs(), 0);
+        service.shutdown();
+    }
+}

@@ -46,21 +46,35 @@ pub use two_stage::TwoStageMerge;
 use crate::coordinator::plan::JobSpec;
 use crate::coordinator::{generate, validate};
 use crate::distfut::chaos::{ChaosHarness, ChaosPlan};
-use crate::distfut::{Runtime, RuntimeOptions};
+use crate::distfut::{JobId, JobParams, ObjectRef, Runtime, TaskHandle, TaskSpec};
 use crate::runtime::Backend;
 use crate::s3sim::S3;
+use crate::service::{JobHandle, JobService, ServiceConfig};
 
 /// Everything a strategy needs to drive its stages: the job plan, the
-/// object store standing in for S3, the compute backend, and the
-/// distributed-futures runtime it submits tasks to. Strategies own the
-/// control plane; `cx.rt` is the data plane (§2.1). The runtime is
-/// handed out as an `Arc` so strategies can park readiness callbacks
-/// (e.g. merge controllers) that outlive the current stack frame.
+/// object store standing in for S3, the compute backend, the
+/// distributed-futures runtime it submits tasks to, and the job identity
+/// the runtime accounts those tasks under. Strategies own the control
+/// plane; `cx.rt` is the data plane (§2.1). The runtime is handed out as
+/// an `Arc` so strategies can park readiness callbacks (e.g. merge
+/// controllers) that outlive the current stack frame.
 pub struct ShuffleContext<'a> {
     pub spec: &'a JobSpec,
     pub s3: &'a S3,
     pub backend: &'a Backend,
     pub rt: &'a Arc<Runtime>,
+    /// The job every task of this run is tagged with — the runtime may
+    /// be shared with other concurrent jobs ([`crate::service`]).
+    pub job: JobId,
+}
+
+impl ShuffleContext<'_> {
+    /// Submit a task on behalf of this context's job (strategies route
+    /// every submission through here so a shared runtime can account,
+    /// fair-share and tear down per job).
+    pub fn submit(&self, spec: TaskSpec) -> (Vec<ObjectRef>, TaskHandle) {
+        self.rt.submit_for(self.job, spec)
+    }
 }
 
 /// What a strategy hands back after its timed stages complete.
@@ -177,12 +191,24 @@ pub fn list_strategies() -> Vec<Arc<dyn ShuffleStrategy>> {
 /// Builder for a full shuffle run: generate → shuffle (strategy-owned
 /// stages) → validate. Defaults reproduce the paper's CloudSort job:
 /// [`TwoStageMerge`] on the native backend against a fresh S3 stand-in.
+///
+/// Two execution paths share one pipeline:
+/// - [`ShuffleJob::run`] — one-shot: spins up a throwaway
+///   [`JobService`] (and thus a private runtime), runs the job, and
+///   shuts the service down on *every* path, success or error — worker
+///   threads can no longer leak when a stage fails.
+/// - [`ShuffleJob::submit`] — multi-tenant: hands the job to a shared
+///   long-lived [`JobService`] and returns a non-blocking
+///   [`JobHandle`]; many jobs run concurrently under fair-share
+///   scheduling with per-job isolation.
 pub struct ShuffleJob {
-    spec: JobSpec,
-    strategy: Arc<dyn ShuffleStrategy>,
-    backend: Backend,
-    s3: Option<S3>,
-    chaos: Option<ChaosPlan>,
+    pub(crate) spec: JobSpec,
+    pub(crate) strategy: Arc<dyn ShuffleStrategy>,
+    pub(crate) backend: Backend,
+    pub(crate) s3: Option<S3>,
+    pub(crate) chaos: Option<ChaosPlan>,
+    pub(crate) name: Option<String>,
+    pub(crate) params: JobParams,
 }
 
 impl ShuffleJob {
@@ -193,7 +219,38 @@ impl ShuffleJob {
             backend: Backend::Native,
             s3: None,
             chaos: None,
+            name: None,
+            params: JobParams::default(),
         }
+    }
+
+    /// Human-readable job name (reports, `serve` output). Defaults to
+    /// the runtime-assigned `job-N`.
+    pub fn name(mut self, name: impl Into<String>) -> ShuffleJob {
+        self.name = Some(name.into());
+        self
+    }
+
+    /// Fair-share weight (priority) inside a shared [`JobService`]: a
+    /// weight-2.0 job receives twice the task slots of a weight-1.0 one
+    /// while both are runnable. Default 1.0.
+    pub fn priority(mut self, weight: f64) -> ShuffleJob {
+        self.params.weight = weight;
+        self
+    }
+
+    /// Quota: hard cap on this job's concurrently executing tasks.
+    pub fn max_in_flight(mut self, tasks: usize) -> ShuffleJob {
+        self.params.max_in_flight = Some(tasks);
+        self
+    }
+
+    /// Quota: resident-byte budget — while the job's store residency
+    /// exceeds it, its load-balanced tasks are not dispatched (pinned
+    /// consumers still drain it).
+    pub fn resident_budget(mut self, bytes: u64) -> ShuffleJob {
+        self.params.resident_budget = Some(bytes);
+        self
     }
 
     /// Select the stage topology (default: [`TwoStageMerge`]).
@@ -235,90 +292,132 @@ impl ShuffleJob {
 
     /// Run the full pipeline: generate → warmup → timed shuffle stages →
     /// validate. The returned report carries Table 1 and Table 2 inputs.
+    ///
+    /// Thin wrapper over the multi-tenant path: a throwaway
+    /// [`JobService`] (sized from the spec) runs this single job and is
+    /// shut down afterwards — on the error path too, so a failing stage
+    /// no longer leaks the runtime's worker threads.
     pub fn run(self) -> anyhow::Result<JobReport> {
-        let spec = &self.spec;
-        spec.check().map_err(|e| anyhow!(e))?;
-        let s3 = match self.s3 {
-            Some(s3) => s3,
-            None => S3::with_buckets(spec.s3_buckets),
-        };
-        let rt = Runtime::new(RuntimeOptions {
-            n_nodes: spec.n_workers(),
-            slots_per_node: spec.cluster.task_parallelism().max(1),
-            store_capacity_per_node: spec.store_capacity_per_node,
-            spill_root: std::env::temp_dir(),
-            ..RuntimeOptions::default()
-        });
-
-        // --- input generation (§3.2), not part of the timed sort ---
-        let t0 = Instant::now();
-        let (input_records, input_checksum) =
-            generate::generate_input(spec, &s3, &rt)?;
-        let gen_secs = t0.elapsed().as_secs_f64();
-        s3.reset_counters(); // Table 2 counts requests of the sort itself
-
-        self.strategy.warmup(spec, &self.backend)?;
-
-        // Chaos (if any) arms against the post-generation commit clock:
-        // trigger thresholds are relative to the sort, not the prelude.
-        let harness = self
-            .chaos
-            .as_ref()
-            .map(|plan| ChaosHarness::arm(&rt, plan.clone()));
-
-        // --- the timed shuffle: stage topology owned by the strategy ---
-        let cx = ShuffleContext {
-            spec,
-            s3: &s3,
-            backend: &self.backend,
-            rt: &rt,
-        };
-        let outcome = self.strategy.run_stages(&cx)?;
-        // enforce the trait contract in every build: reported stage names
-        // must match the declaration exactly, in order — JobReport's
-        // Table 1 accessors key on them
-        let reported: Vec<&str> =
-            outcome.stages.iter().map(|s| s.name.as_str()).collect();
-        if reported != self.strategy.stage_names() {
-            return Err(anyhow!(
-                "strategy '{}' reported stages {:?} but declared {:?}",
-                self.strategy.name(),
-                reported,
-                self.strategy.stage_names()
-            ));
-        }
-        let total_secs = outcome.stages.iter().map(|s| s.secs).sum();
-        let s3_counters = s3.counters();
-
-        // --- validation (§3.2), untimed ---
-        let validation = validate::validate_output(
-            spec,
-            &s3,
-            &rt,
-            input_records,
-            input_checksum,
-        )?;
-
-        let report = JobReport {
-            strategy: self.strategy.name().to_string(),
-            gen_secs,
-            stages: outcome.stages,
-            total_secs,
-            validation,
-            s3: s3_counters,
-            store: rt.store_stats(),
-            events: rt.task_events(),
-            task_counts: rt.task_counts(),
-            n_map_tasks: outcome.n_map_tasks,
-            n_merge_tasks: outcome.n_merge_tasks,
-            n_reduce_tasks: outcome.n_reduce_tasks,
-            peak_unmerged_blocks: outcome.peak_unmerged_blocks,
-            recovery: rt.recovery_stats(),
-            chaos: harness.map(|h| h.log()).unwrap_or_default(),
-        };
-        rt.shutdown();
-        Ok(report)
+        let service = JobService::new(ServiceConfig::for_spec(&self.spec));
+        let result = service.submit(self).and_then(|h| h.wait());
+        service.shutdown();
+        result
     }
+
+    /// Submit this job to a shared, long-lived [`JobService`] and return
+    /// a non-blocking [`JobHandle`]. Many jobs run concurrently on the
+    /// service's runtime under weighted fair-share scheduling; quotas
+    /// set via [`ShuffleJob::max_in_flight`] /
+    /// [`ShuffleJob::resident_budget`] apply per job.
+    pub fn submit(self, service: &JobService) -> anyhow::Result<JobHandle> {
+        service.submit(self)
+    }
+}
+
+/// Execute one job's full pipeline (generate → warmup → timed stages →
+/// validate) against a shared runtime, with every task accounted to
+/// `id`. Shared by the one-shot [`ShuffleJob::run`] wrapper and the
+/// multi-tenant [`JobService`] worker threads; the caller owns job
+/// teardown ([`Runtime::retire_job`]) and fills [`JobReport::events`]
+/// from it. Spec validation (consistency + worker count vs runtime
+/// nodes) happens once, at [`JobService::submit`] — the single entry
+/// point both paths funnel through.
+pub(crate) fn execute_on(
+    job: ShuffleJob,
+    rt: &Arc<Runtime>,
+    id: JobId,
+) -> anyhow::Result<JobReport> {
+    let spec = &job.spec;
+    let name = job
+        .name
+        .clone()
+        .unwrap_or_else(|| id.to_string());
+    let s3 = match &job.s3 {
+        Some(s3) => s3.clone(),
+        None => S3::with_buckets(spec.s3_buckets),
+    };
+
+    // --- input generation (§3.2), not part of the timed sort ---
+    let t0 = Instant::now();
+    let (input_records, input_checksum) =
+        generate::generate_input(spec, &s3, rt, id)?;
+    let gen_secs = t0.elapsed().as_secs_f64();
+    s3.reset_counters(); // Table 2 counts requests of the sort itself
+
+    job.strategy.warmup(spec, &job.backend)?;
+
+    // Chaos (if any) arms against the post-generation commit clock of
+    // *this job only*: trigger thresholds are relative to the job's own
+    // sort — neither the prelude nor other tenants' commits shift them.
+    let harness = job
+        .chaos
+        .as_ref()
+        .map(|plan| ChaosHarness::arm_for_job(rt, plan.clone(), id));
+
+    // --- the timed shuffle: stage topology owned by the strategy ---
+    let cx = ShuffleContext {
+        spec,
+        s3: &s3,
+        backend: &job.backend,
+        rt,
+        job: id,
+    };
+    let outcome = job.strategy.run_stages(&cx);
+    // the failure window is the timed sort: stop observing commits now
+    // (error path included), so an unexhausted plan neither counts
+    // validation traffic nor lingers on a shared runtime after this job
+    // retires
+    if let Some(h) = &harness {
+        h.disarm();
+    }
+    let outcome = outcome?;
+    // enforce the trait contract in every build: reported stage names
+    // must match the declaration exactly, in order — JobReport's
+    // Table 1 accessors key on them
+    let reported: Vec<&str> =
+        outcome.stages.iter().map(|s| s.name.as_str()).collect();
+    if reported != job.strategy.stage_names() {
+        return Err(anyhow!(
+            "strategy '{}' reported stages {:?} but declared {:?}",
+            job.strategy.name(),
+            reported,
+            job.strategy.stage_names()
+        ));
+    }
+    let total_secs = outcome.stages.iter().map(|s| s.secs).sum();
+    let s3_counters = s3.counters();
+
+    // --- validation (§3.2), untimed ---
+    let validation = validate::validate_output(
+        spec,
+        &s3,
+        rt,
+        id,
+        input_records,
+        input_checksum,
+    )?;
+
+    Ok(JobReport {
+        name,
+        job: id,
+        strategy: job.strategy.name().to_string(),
+        gen_secs,
+        stages: outcome.stages,
+        total_secs,
+        validation,
+        s3: s3_counters,
+        store: rt.store_stats(),
+        // filled by the caller from `Runtime::retire_job` (the events
+        // drained there are exactly this job's)
+        events: Vec::new(),
+        task_counts: rt.task_counts(),
+        n_map_tasks: outcome.n_map_tasks,
+        n_merge_tasks: outcome.n_merge_tasks,
+        n_reduce_tasks: outcome.n_reduce_tasks,
+        peak_unmerged_blocks: outcome.peak_unmerged_blocks,
+        recovery: rt.recovery_stats(),
+        chaos: harness.map(|h| h.log()).unwrap_or_default(),
+    })
 }
 
 #[cfg(test)]

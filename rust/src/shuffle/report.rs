@@ -8,7 +8,7 @@
 
 use crate::coordinator::plan::JobSpec;
 use crate::distfut::chaos::ChaosRecord;
-use crate::distfut::RecoveryStats;
+use crate::distfut::{JobId, RecoveryStats};
 use crate::metrics::TaskEvent;
 use crate::s3sim::CounterSnapshot;
 use crate::sortlib::valsort::GlobalSummary;
@@ -21,8 +21,18 @@ pub struct StageTiming {
 }
 
 /// Outcome of a full shuffle run.
+///
+/// For a job run through a shared [`crate::service::JobService`],
+/// `events` covers this job only (drained at retirement), while
+/// `store`, `recovery` and `task_counts` are runtime-wide snapshots —
+/// the data plane is shared, so transfer/spill/recovery counters
+/// aggregate across tenants.
 #[derive(Clone, Debug)]
 pub struct JobReport {
+    /// Human-readable job name (defaults to the runtime's `job-N`).
+    pub name: String,
+    /// The job identity the run was accounted under.
+    pub job: JobId,
     /// Registry name of the strategy that ran (e.g. "two-stage-merge").
     pub strategy: String,
     /// Input generation wall time (untimed in the benchmark, reported).
@@ -149,6 +159,8 @@ mod tests {
     fn report_with_stages(stages: Vec<(&str, f64)>) -> JobReport {
         let total = stages.iter().map(|(_, s)| s).sum();
         JobReport {
+            name: "test".into(),
+            job: JobId::ROOT,
             strategy: "test".into(),
             gen_secs: 0.0,
             stages: stages

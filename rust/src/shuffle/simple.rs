@@ -82,7 +82,7 @@ impl ShuffleStrategy for SimpleShuffle {
             let node = global_r / r1;
             let blocks: Vec<ObjectRef> =
                 map_outs.iter().map(|outs| outs[global_r].clone()).collect();
-            let (_outs, h) = cx.rt.submit(tasks::reduce_task(
+            let (_outs, h) = cx.submit(tasks::reduce_task(
                 spec, cx.s3, cx.backend, node, global_r, blocks,
             ));
             handles.push(h);
@@ -109,6 +109,5 @@ fn rt_submit_map(
     cuts: Arc<Vec<u64>>,
     p: usize,
 ) -> (Vec<ObjectRef>, TaskHandle) {
-    cx.rt
-        .submit(tasks::map_task(cx.spec, cx.s3, cx.backend, cuts, p))
+    cx.submit(tasks::map_task(cx.spec, cx.s3, cx.backend, cuts, p))
 }

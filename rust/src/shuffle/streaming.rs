@@ -68,7 +68,7 @@ impl ShuffleStrategy for StreamingShuffle {
         let mut map_blocks: Vec<Vec<ObjectRef>> = Vec::with_capacity(m);
         let mut map_handles: Vec<TaskHandle> = Vec::with_capacity(m);
         for p in 0..m {
-            let (outs, h) = cx.rt.submit(tasks::map_task(
+            let (outs, h) = cx.submit(tasks::map_task(
                 spec,
                 cx.s3,
                 cx.backend,
@@ -114,7 +114,7 @@ impl ShuffleStrategy for StreamingShuffle {
                     });
                 }
                 let batch_len = blocks.len();
-                let (outs, h) = cx.rt.submit(tasks::merge_task(
+                let (outs, h) = cx.submit(tasks::merge_task(
                     spec, cx.backend, node, b, blocks,
                 ));
                 let g = gauges[node].clone();
@@ -136,7 +136,7 @@ impl ShuffleStrategy for StreamingShuffle {
                 let global_r = node * r1 + j;
                 let blocks: Vec<ObjectRef> =
                     batches.iter().map(|batch| batch[j].clone()).collect();
-                let (_outs, h) = cx.rt.submit(tasks::reduce_task(
+                let (_outs, h) = cx.submit(tasks::reduce_task(
                     spec, cx.s3, cx.backend, node, global_r, blocks,
                 ));
                 reduce_handles.push(h);

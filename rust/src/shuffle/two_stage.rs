@@ -15,9 +15,8 @@ use anyhow::Context;
 use crate::coordinator::merge_controller::MergeController;
 use crate::coordinator::plan::JobSpec;
 use crate::coordinator::tasks;
-use crate::distfut::{future, Runtime, TaskHandle};
+use crate::distfut::{future, TaskHandle};
 use crate::runtime::Backend;
-use crate::s3sim::S3;
 use crate::shuffle::{ShuffleContext, ShuffleOutcome, ShuffleStrategy, StageClock};
 
 /// Driver-side admission poll interval: how often the map-submission
@@ -52,7 +51,7 @@ impl ShuffleStrategy for TwoStageMerge {
         let mut clock = StageClock::start();
 
         // --- stage 1: map & shuffle (§2.3) ---
-        let controllers = map_shuffle_stage(spec, cx.s3, cx.backend, cx.rt)?;
+        let controllers = map_shuffle_stage(cx)?;
         clock.lap("map_shuffle");
         let n_merge_tasks: usize =
             controllers.iter().map(|c| c.merges_launched()).sum();
@@ -63,8 +62,7 @@ impl ShuffleStrategy for TwoStageMerge {
             .unwrap_or(0);
 
         // --- stage 2: reduce (§2.4) ---
-        let n_reduce_tasks =
-            reduce_stage(spec, cx.s3, cx.backend, cx.rt, controllers)?;
+        let n_reduce_tasks = reduce_stage(cx, controllers)?;
         clock.lap("reduce");
 
         Ok(ShuffleOutcome {
@@ -83,11 +81,9 @@ impl ShuffleStrategy for TwoStageMerge {
 /// merges as the data lands — the driver only throttles map admission.
 /// Returns the controllers once every map and merge has completed.
 fn map_shuffle_stage(
-    spec: &JobSpec,
-    s3: &S3,
-    backend: &Backend,
-    rt: &Arc<Runtime>,
+    cx: &ShuffleContext,
 ) -> anyhow::Result<Vec<MergeController>> {
+    let (spec, s3, backend) = (cx.spec, cx.s3, cx.backend);
     let w = spec.n_workers();
     let worker_cuts = Arc::new(spec.worker_cuts());
     let backend2 = backend.clone();
@@ -96,10 +92,11 @@ fn map_shuffle_stage(
         .map(|node| {
             let backend = backend2.clone();
             let spec = spec2.clone();
-            MergeController::new(
+            MergeController::for_job(
                 node,
                 spec2.merge_threshold_blocks,
-                rt,
+                cx.rt,
+                cx.job,
                 Arc::new(move |node, batch, blocks| {
                     tasks::merge_task(&spec, &backend, node, batch, blocks)
                 }),
@@ -127,7 +124,7 @@ fn map_shuffle_stage(
             std::thread::sleep(ADMISSION_POLL);
             continue;
         }
-        let (outs, h) = rt.submit(tasks::map_task(
+        let (outs, h) = cx.submit(tasks::map_task(
             spec,
             s3,
             backend,
@@ -155,12 +152,10 @@ fn map_shuffle_stage(
 /// that owns the reducer range; merges that reducer's block from every
 /// merge batch and uploads the output partition.
 fn reduce_stage(
-    spec: &JobSpec,
-    s3: &S3,
-    backend: &Backend,
-    rt: &Runtime,
+    cx: &ShuffleContext,
     controllers: Vec<MergeController>,
 ) -> anyhow::Result<usize> {
+    let spec = cx.spec;
     let r1 = spec.reducers_per_worker();
     let mut handles = Vec::with_capacity(spec.n_output_partitions);
     for c in &controllers {
@@ -169,8 +164,8 @@ fn reduce_stage(
             let global_r = c.node * r1 + j;
             let blocks: Vec<_> =
                 merged.iter().map(|batch| batch[j].clone()).collect();
-            let (_outs, h) = rt.submit(tasks::reduce_task(
-                spec, s3, backend, c.node, global_r, blocks,
+            let (_outs, h) = cx.submit(tasks::reduce_task(
+                spec, cx.s3, cx.backend, c.node, global_r, blocks,
             ));
             handles.push(h);
         }

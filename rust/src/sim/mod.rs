@@ -20,6 +20,7 @@ use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
 
 use crate::coordinator::JobSpec;
+use crate::distfut::JobId;
 use crate::metrics::{TaskEvent, Timeseries, UtilizationReport};
 use crate::s3sim::{GET_CHUNK, PUT_CHUNK};
 use crate::util::rng::Xoshiro256;
@@ -708,6 +709,7 @@ impl<'a> Sim<'a> {
         // --- task completed ---
         let t = self.tasks[tid].clone();
         self.events.push(TaskEvent {
+            job: JobId::ROOT,
             name: match t.kind {
                 Kind::Map => format!("map-{tid}"),
                 Kind::Merge => format!("merge-{tid}"),
@@ -727,6 +729,7 @@ impl<'a> Sim<'a> {
                 // the map's W slices arrive at every worker's controller;
                 // record the shuffle (send+receive) as an event family
                 self.events.push(TaskEvent {
+                    job: JobId::ROOT,
                     name: format!("shuffle-{tid}"),
                     node: t.node,
                     start: t.start + t.download_secs,
@@ -788,6 +791,65 @@ impl<'a> Sim<'a> {
                 self.start_queued_reduces(t.node);
             }
         }
+    }
+}
+
+// --------------------------------------------------------------------
+// multi-job contention model (the JobService at benchmark scale)
+// --------------------------------------------------------------------
+
+/// Estimate of `n_jobs` identical jobs sharing one cluster under
+/// fair-share scheduling (the [`crate::service::JobService`] model).
+#[derive(Clone, Copy, Debug)]
+pub struct MultiJobResult {
+    pub n_jobs: usize,
+    /// One job's completion time when the cluster is fair-shared
+    /// `n_jobs` ways (all jobs finish together under equal weights).
+    pub per_job_secs: f64,
+    /// The same job's solo completion time.
+    pub solo_secs: f64,
+    /// `per_job_secs / solo_secs` — the contention slowdown each tenant
+    /// experiences.
+    pub slowdown: f64,
+    /// Cluster-wide sorted bytes per second with `n_jobs` tenants:
+    /// `n_jobs × total_bytes / per_job_secs`.
+    pub aggregate_bytes_per_sec: f64,
+}
+
+/// Replay `cfg`'s job against a fair `1/n_jobs` share of every per-node
+/// resource — task slots (vCPUs), NIC, NVMe, the per-node S3 cap — and
+/// report per-tenant slowdown plus aggregate throughput. This models the
+/// steady state of a [`crate::service::JobService`] running `n_jobs`
+/// equal-weight tenants: the scheduler's weighted fair-share dequeue
+/// grants each job `1/n` of the slots, and the shared NIC/disk divide
+/// the same way. Phase overlap across tenants (one job's CPU burst
+/// filling another's I/O wait) is not modelled, so the estimate is an
+/// upper bound on per-tenant latency and a lower bound on aggregate
+/// throughput.
+pub fn estimate_multi_job(cfg: &SimConfig, n_jobs: usize) -> MultiJobResult {
+    let n = n_jobs.max(1);
+    let solo = simulate(cfg);
+    let contended = if n == 1 {
+        solo.clone()
+    } else {
+        let mut shared = cfg.clone();
+        let w = &mut shared.spec.cluster.worker;
+        w.vcpus = (w.vcpus / n as u32).max(2);
+        w.net_bps /= n as f64;
+        w.disk_read_bps /= n as f64;
+        w.disk_write_bps /= n as f64;
+        shared.rates.s3_node_cap_bps /= n as f64;
+        shared.rates.reduce_slots = (shared.rates.reduce_slots / n).max(1);
+        simulate(&shared)
+    };
+    let bytes = cfg.spec.total_bytes as f64;
+    MultiJobResult {
+        n_jobs: n,
+        per_job_secs: contended.total_secs,
+        solo_secs: solo.total_secs,
+        slowdown: contended.total_secs / solo.total_secs.max(1e-9),
+        aggregate_bytes_per_sec: n as f64 * bytes
+            / contended.total_secs.max(1e-9),
     }
 }
 
@@ -1063,6 +1125,27 @@ mod tests {
         // re-executed work is ~1/W of the cluster's, so the wall-clock
         // overhead stays a small fraction of the job
         assert!(e.reexec_wall_secs < 0.15 * total, "{e:?}");
+    }
+
+    #[test]
+    fn multi_job_contention_slows_each_tenant_monotonically() {
+        let cfg = small_cfg();
+        let one = estimate_multi_job(&cfg, 1);
+        assert_eq!(one.n_jobs, 1);
+        assert!((one.slowdown - 1.0).abs() < 1e-9, "{one:?}");
+        let two = estimate_multi_job(&cfg, 2);
+        let four = estimate_multi_job(&cfg, 4);
+        assert!(two.per_job_secs > one.per_job_secs, "{two:?}");
+        assert!(four.per_job_secs > two.per_job_secs, "{four:?}");
+        assert!(two.slowdown > 1.0 && four.slowdown > two.slowdown);
+        // aggregate throughput stays positive and within sane bounds of
+        // the solo rate (fair sharing trades latency, not much capacity)
+        let solo_rate =
+            cfg.spec.total_bytes as f64 / one.per_job_secs.max(1e-9);
+        for r in [&two, &four] {
+            assert!(r.aggregate_bytes_per_sec > 0.2 * solo_rate, "{r:?}");
+            assert!(r.aggregate_bytes_per_sec < 4.0 * solo_rate, "{r:?}");
+        }
     }
 
     #[test]

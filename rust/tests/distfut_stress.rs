@@ -8,7 +8,7 @@ use std::sync::Arc;
 
 use exoshuffle::distfut::chaos::{ChaosHarness, ChaosPlan};
 use exoshuffle::distfut::{
-    task_fn, ObjectRef, Placement, Runtime, RuntimeOptions, TaskSpec,
+    task_fn, JobId, ObjectRef, Placement, Runtime, RuntimeOptions, TaskSpec,
 };
 use exoshuffle::util::rng::Xoshiro256;
 
@@ -49,6 +49,7 @@ fn random_dag_executes_consistently() {
             let expect: u64 = parents.iter().map(|(_, v)| *v).sum();
             let args: Vec<_> = parents.into_iter().map(|(r, _)| r).collect();
             let (outs, _h) = rt.submit(TaskSpec {
+                job: JobId::ROOT,
                 name: format!("dag-{layer}-{j}"),
                 placement: if rng.next_below(2) == 0 {
                     Placement::Any
@@ -85,6 +86,7 @@ fn deep_chain_resolves() {
     let mut prev = rt.put(0, 0u64.to_le_bytes().to_vec());
     for i in 0..200u64 {
         let (outs, _h) = rt.submit(TaskSpec {
+            job: JobId::ROOT,
             name: format!("chain-{i}"),
             placement: Placement::Any,
             func: task_fn(|ctx| {
@@ -109,6 +111,7 @@ fn wide_fanout_under_spill_pressure() {
     let produced: Vec<_> = (0..64u8)
         .map(|i| {
             let (outs, _h) = rt.submit(TaskSpec {
+                job: JobId::ROOT,
                 name: format!("spill-{i}"),
                 placement: Placement::Any,
                 func: task_fn(move |_| Ok(vec![vec![i; 64 << 10]])),
@@ -150,6 +153,7 @@ fn spill_restore_counters_and_byte_identity() {
 
     // restore through a task's argument resolution, verified in-task
     let (_, h) = rt.submit(TaskSpec {
+        job: JobId::ROOT,
         name: "verify-args".into(),
         placement: Placement::Node(0),
         func: task_fn(move |ctx| {
@@ -189,6 +193,7 @@ fn concurrent_submitters() {
                 let mut sum_refs = vec![];
                 for i in 0..25u64 {
                     let (outs, _h) = rt.submit(TaskSpec {
+                        job: JobId::ROOT,
                         name: format!("t{t}-{i}"),
                         placement: Placement::Any,
                         func: task_fn(move |_| {
@@ -224,6 +229,7 @@ fn concurrent_submitters() {
 fn failure_cascades_to_dependents() {
     let rt = rt(1, 1, u64::MAX);
     let (outs, h1) = rt.submit(TaskSpec {
+        job: JobId::ROOT,
         name: "doomed".into(),
         placement: Placement::Any,
         func: task_fn(|_| Err("nope".into())),
@@ -232,6 +238,7 @@ fn failure_cascades_to_dependents() {
         max_retries: 1,
     });
     let (_, h2) = rt.submit(TaskSpec {
+        job: JobId::ROOT,
         name: "dependent".into(),
         placement: Placement::Any,
         func: task_fn(|_| Ok(vec![])),
@@ -258,6 +265,7 @@ fn sum_dag(
         .map(|i| {
             let v = 10 + i;
             let (outs, _) = rt.submit(TaskSpec {
+                job: JobId::ROOT,
                 name: format!("src-{i}"),
                 placement: Placement::Node((i as usize) % nodes),
                 func: task_fn(move |_| Ok(vec![v.to_le_bytes().to_vec()])),
@@ -284,6 +292,7 @@ fn sum_dag(
                 Placement::Node((layer + j) % nodes)
             };
             let (outs, _) = rt.submit(TaskSpec {
+                job: JobId::ROOT,
                 name: format!("dag-{layer}-{j}"),
                 placement,
                 func: task_fn(|ctx| {
@@ -342,6 +351,7 @@ fn deep_chain_recovers_through_resurrected_lineage() {
     // released intermediates and re-execute the whole chain in order
     let rt = rt(2, 2, u64::MAX);
     let (outs, _) = rt.submit(TaskSpec {
+        job: JobId::ROOT,
         name: "chain-0".into(),
         placement: Placement::Node(0),
         func: task_fn(|_| Ok(vec![1u64.to_le_bytes().to_vec()])),
@@ -352,6 +362,7 @@ fn deep_chain_recovers_through_resurrected_lineage() {
     let mut prev = outs.into_iter().next().unwrap();
     for i in 1..8u64 {
         let (outs, _) = rt.submit(TaskSpec {
+            job: JobId::ROOT,
             name: format!("chain-{i}"),
             placement: Placement::Node(0),
             func: task_fn(|ctx| {
@@ -387,6 +398,7 @@ fn truncated_lineage_surfaces_the_bounded_reconstruction_error() {
         ..Default::default()
     });
     let (outs, _) = rt.submit(TaskSpec {
+        job: JobId::ROOT,
         name: "chain-0".into(),
         placement: Placement::Node(0),
         func: task_fn(|_| Ok(vec![1u64.to_le_bytes().to_vec()])),
@@ -397,6 +409,7 @@ fn truncated_lineage_surfaces_the_bounded_reconstruction_error() {
     let mut prev = outs.into_iter().next().unwrap();
     for i in 1..8u64 {
         let (outs, _) = rt.submit(TaskSpec {
+            job: JobId::ROOT,
             name: format!("chain-{i}"),
             placement: Placement::Node(0),
             func: task_fn(|ctx| {
@@ -429,6 +442,7 @@ fn disabled_lineage_poisons_lost_objects_with_a_clear_error() {
         ..Default::default()
     });
     let (outs, h) = rt.submit(TaskSpec {
+        job: JobId::ROOT,
         name: "src".into(),
         placement: Placement::Node(0),
         func: task_fn(|_| Ok(vec![vec![42u8; 8]])),
@@ -449,6 +463,7 @@ fn disabled_lineage_poisons_lost_objects_with_a_clear_error() {
 fn attempt_counter_visible_to_tasks() {
     let rt = rt(1, 1, u64::MAX);
     let (outs, h) = rt.submit(TaskSpec {
+        job: JobId::ROOT,
         name: "count-attempts".into(),
         placement: Placement::Any,
         func: task_fn(|ctx| {
