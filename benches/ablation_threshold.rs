@@ -13,17 +13,28 @@ mod harness;
 use exoshuffle::sim::{simulate, SimConfig};
 
 fn main() {
+    let smoke = harness::smoke();
     harness::section("merge threshold sweep, 100 TB simulation (paper: 40)");
     println!(
         "{:>9} | {:>12} | {:>8} | {:>8} | {:>20}",
         "threshold", "map&shuffle", "reduce", "total", "peak unmerged/node"
     );
     let mut totals = Vec::new();
-    for threshold in [5usize, 10, 20, 40, 80, 160] {
+    let mut results = Vec::new();
+    let sweep: &[usize] = harness::pick(&[5, 10, 20, 40, 80, 160], &[5, 40]);
+    for &threshold in sweep {
         let mut cfg = SimConfig::paper_100tb();
+        if smoke {
+            cfg.spec = exoshuffle::coordinator::JobSpec::scaled(1 << 30, 4);
+        }
         cfg.spec.merge_threshold_blocks = threshold;
         cfg.spec.max_buffered_blocks = threshold * 3;
+        let t = std::time::Instant::now();
         let r = simulate(&cfg);
+        results.push(harness::single(
+            &format!("ablation_threshold_{threshold}"),
+            t.elapsed().as_secs_f64(),
+        ));
         println!(
             "{:>9} | {:>10.0} s | {:>6.0} s | {:>6.0} s | {:>14} blocks",
             threshold,
@@ -33,6 +44,11 @@ fn main() {
             r.peak_unmerged_blocks
         );
         totals.push((threshold, r.total_secs));
+    }
+    harness::emit_json("ablation_threshold", &results);
+    if smoke {
+        println!("ablation_threshold bench: smoke scale, sweep assertions skipped");
+        return;
     }
     // the paper's operating point should not be far off the sweep's best
     let best = totals

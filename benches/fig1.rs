@@ -18,7 +18,17 @@ use exoshuffle::sim::{simulate, SimConfig};
 
 fn main() {
     harness::section("Figure 1: cluster utilization, run #1 (simulated)");
-    let r = simulate(&SimConfig::paper_100tb());
+    let smoke = harness::smoke();
+    let mut cfg = SimConfig::paper_100tb();
+    if smoke {
+        cfg.spec = exoshuffle::coordinator::JobSpec::scaled(1 << 30, 4);
+    }
+    let t = std::time::Instant::now();
+    let r = simulate(&cfg);
+    harness::emit_json(
+        "fig1",
+        &[harness::single("fig1_sim", t.elapsed().as_secs_f64())],
+    );
     print!("{}", r.utilization.to_ascii(72));
 
     std::fs::create_dir_all("target").unwrap();
@@ -26,6 +36,10 @@ fn main() {
     std::fs::write(path, r.utilization.to_csv()).unwrap();
     println!("series written to {path}");
 
+    if smoke {
+        println!("fig1 bench: smoke scale, shape assertions skipped");
+        return;
+    }
     // --- shape assertions ---
     let stage_split = r.map_shuffle_secs;
     let mean_over = |name: &str, lo: f64, hi: f64| -> f64 {

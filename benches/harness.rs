@@ -60,6 +60,69 @@ pub fn throughput(records: usize, mean_secs: f64) -> f64 {
     records as f64 / mean_secs
 }
 
+/// True when the run asks for the tiny CI "smoke" scale: `BENCH_SMOKE=1`
+/// in the environment, or `--smoke` among the args. Smoke runs shrink
+/// workloads to seconds and skip full-scale shape assertions — they
+/// exist to keep every bench binary executing (and emitting JSON) per
+/// PR, not to produce meaningful absolute numbers.
+pub fn smoke() -> bool {
+    std::env::var("BENCH_SMOKE")
+        .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
+        .unwrap_or(false)
+        || std::env::args().any(|a| a == "--smoke")
+}
+
+/// Pick the full-scale or smoke-scale value for a bench input.
+pub fn pick<T>(full: T, smoke_value: T) -> T {
+    if smoke() {
+        smoke_value
+    } else {
+        full
+    }
+}
+
+/// A [`BenchResult`] from a single measured wall time (for benches that
+/// time phases manually instead of through [`bench`]).
+pub fn single(name: &str, wall_secs: f64) -> BenchResult {
+    BenchResult {
+        name: name.to_string(),
+        iters: 1,
+        mean_secs: wall_secs,
+        stddev_secs: 0.0,
+        min_secs: wall_secs,
+        max_secs: wall_secs,
+    }
+}
+
+/// Write `BENCH_<bench>.json` with the collected results — into
+/// `$BENCH_JSON_DIR`, or the working directory — so CI can upload
+/// per-PR perf-trajectory artifacts.
+pub fn emit_json(bench: &str, results: &[BenchResult]) {
+    let dir = std::env::var("BENCH_JSON_DIR").unwrap_or_else(|_| ".".into());
+    let path = std::path::Path::new(&dir).join(format!("BENCH_{bench}.json"));
+    let mut out = String::from("[\n");
+    for (i, r) in results.iter().enumerate() {
+        out.push_str(&format!(
+            "  {{\"name\":{:?},\"iters\":{},\"mean_secs\":{:.9},\
+             \"stddev_secs\":{:.9},\"min_secs\":{:.9},\"max_secs\":{:.9},\
+             \"smoke\":{}}}{}\n",
+            r.name,
+            r.iters,
+            r.mean_secs,
+            r.stddev_secs,
+            r.min_secs,
+            r.max_secs,
+            smoke(),
+            if i + 1 < results.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("]\n");
+    match std::fs::write(&path, out) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("warning: could not write {}: {e}", path.display()),
+    }
+}
+
 pub fn fmt_secs(s: f64) -> String {
     if s >= 1.0 {
         format!("{s:.3}s")

@@ -20,19 +20,23 @@ fn main() -> anyhow::Result<()> {
         Ok(b) => b,
         Err(e) => {
             println!("kernels bench skipped: {e}");
+            harness::emit_json("kernels", &[]);
             return Ok(());
         }
     };
     let native = Backend::Native;
     let cuts = reducer_cuts(40);
+    let iters = harness::pick(10, 2);
+    let mut results = Vec::new();
 
     harness::section("sort_and_partition (map-task hot spot)");
-    for n in [4096usize, 16384] {
+    let sizes: &[usize] = harness::pick(&[4096, 16384], &[4096]);
+    for &n in sizes {
         let mut rng = Xoshiro256::new(n as u64);
         let keys: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
         for (name, backend) in [("xla", &xla), ("native", &native)] {
             let label = format!("sort n={n} [{name}]");
-            let r = harness::bench(&label, 10, || {
+            let r = harness::bench(&label, iters, || {
                 let out = sort_and_partition(backend, &keys, &cuts).unwrap();
                 assert_eq!(out.keys.len(), n);
             });
@@ -40,11 +44,14 @@ fn main() -> anyhow::Result<()> {
                 "      -> {:.2} Mrec/s",
                 harness::throughput(n, r.mean_secs) / 1e6
             );
+            results.push(r);
         }
     }
 
     harness::section("merge_and_partition (merge/reduce-task hot spot)");
-    for (runs, len) in [(8usize, 512usize), (8, 2048), (40, 400)] {
+    let shapes: &[(usize, usize)] =
+        harness::pick(&[(8, 512), (8, 2048), (40, 400)], &[(8, 512)]);
+    for &(runs, len) in shapes {
         let mut rng = Xoshiro256::new((runs * len) as u64);
         let data: Vec<Vec<u64>> = (0..runs)
             .map(|_| {
@@ -57,7 +64,7 @@ fn main() -> anyhow::Result<()> {
         let total = runs * len;
         for (name, backend) in [("xla", &xla), ("native", &native)] {
             let label = format!("merge r={runs} l={len} [{name}]");
-            let r = harness::bench(&label, 10, || {
+            let r = harness::bench(&label, iters, || {
                 let out = merge_and_partition(backend, &refs, &cuts).unwrap();
                 assert_eq!(out.keys.len(), total);
             });
@@ -65,6 +72,7 @@ fn main() -> anyhow::Result<()> {
                 "      -> {:.2} Mrec/s",
                 harness::throughput(total, r.mean_secs) / 1e6
             );
+            results.push(r);
         }
     }
 
@@ -78,6 +86,7 @@ fn main() -> anyhow::Result<()> {
     assert_eq!(a.perm, b.perm);
     assert_eq!(a.offs, b.offs);
     println!("sort results identical across backends");
+    harness::emit_json("kernels", &results);
     println!("kernels bench: PASS");
     Ok(())
 }

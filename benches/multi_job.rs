@@ -42,10 +42,14 @@ fn run_fleet(n_jobs: usize, size: u64, workers: usize) -> (f64, u64) {
 
 fn main() {
     harness::section("multi-job aggregate throughput (shared JobService)");
-    let (size, workers) = (8u64 << 20, 2usize);
+    let size = harness::pick(8u64 << 20, 2 << 20);
+    let workers = 2usize;
+    let fleets: &[usize] = harness::pick(&[1, 4, 8], &[1, 2]);
+    let iters = harness::pick(3, 1);
     let mut baseline = 0.0f64;
-    for &n in &[1usize, 4, 8] {
-        let r = harness::bench(&format!("fleet_{n}_jobs"), 3, || {
+    let mut results = Vec::new();
+    for &n in fleets {
+        let r = harness::bench(&format!("fleet_{n}_jobs"), iters, || {
             let _ = run_fleet(n, size, workers);
         });
         let bytes = n as u64 * size;
@@ -58,5 +62,7 @@ fn main() {
              ({:.2}x the single-job rate)",
             if baseline > 0.0 { rate / baseline } else { 0.0 },
         );
+        results.push(r);
     }
+    harness::emit_json("multi_job", &results);
 }

@@ -45,9 +45,12 @@ fn noop(name: String, args: Vec<exoshuffle::distfut::ObjectRef>) -> TaskSpec {
 
 fn main() {
     harness::section("event-driven scheduler dispatch overhead");
+    let mut results = Vec::new();
+    let iters = harness::pick(5, 1);
 
-    for &n in &[100usize, 1000] {
-        let r = harness::bench(&format!("fan_out_{n}_noop_tasks"), 5, || {
+    let fan_outs: &[usize] = harness::pick(&[100, 1000], &[100]);
+    for &n in fan_outs {
+        let r = harness::bench(&format!("fan_out_{n}_noop_tasks"), iters, || {
             let rt = rt();
             for i in 0..n {
                 rt.submit(noop(format!("t{i}"), vec![]));
@@ -59,10 +62,11 @@ fn main() {
             "  -> {:.1}µs/task dispatch+execute+complete",
             r.mean_secs / n as f64 * 1e6
         );
+        results.push(r);
     }
 
-    let n = 500;
-    let r = harness::bench(&format!("chain_{n}_dependent_tasks"), 5, || {
+    let n = harness::pick(500, 50);
+    let r = harness::bench(&format!("chain_{n}_dependent_tasks"), iters, || {
         let rt = rt();
         let mut prev = rt.put(0, vec![0u8]);
         let mut last = None;
@@ -78,9 +82,10 @@ fn main() {
         "  -> {:.1}µs/hop readiness-routed dispatch",
         r.mean_secs / n as f64 * 1e6
     );
+    results.push(r);
 
-    let n = 1000;
-    let r = harness::bench(&format!("locality_fan_out_{n}_tasks"), 5, || {
+    let n = harness::pick(1000, 100);
+    let r = harness::bench(&format!("locality_fan_out_{n}_tasks"), iters, || {
         let rt = rt();
         let inputs: Vec<_> =
             (0..n).map(|i| rt.put(i % 4, vec![0u8; 64])).collect();
@@ -94,6 +99,8 @@ fn main() {
         "  -> {:.1}µs/task with locality routing",
         r.mean_secs / n as f64 * 1e6
     );
+    results.push(r);
 
+    harness::emit_json("sched_overhead", &results);
     println!("sched_overhead bench: PASS");
 }

@@ -14,7 +14,25 @@ use exoshuffle::sim::{simulate, SimConfig};
 
 fn main() {
     harness::section("per-task mean durations, 100 TB simulation vs paper");
-    let r = simulate(&SimConfig::paper_100tb());
+    let smoke = harness::smoke();
+    let mut cfg = SimConfig::paper_100tb();
+    if smoke {
+        cfg.spec = exoshuffle::coordinator::JobSpec::scaled(1 << 30, 4);
+    }
+    let t = std::time::Instant::now();
+    let r = simulate(&cfg);
+    harness::emit_json(
+        "stage_times",
+        &[harness::single("stage_times_sim", t.elapsed().as_secs_f64())],
+    );
+    if smoke {
+        println!(
+            "map {:.1}s merge {:.1}s reduce {:.1}s (smoke scale, paper \
+             comparison skipped)",
+            r.mean_map_secs, r.mean_merge_secs, r.mean_reduce_secs
+        );
+        return;
+    }
     let rows = [
         ("map task", r.mean_map_secs, 24.0),
         ("  of which download", r.mean_map_download_secs, 15.0 + 5.0), // + task overhead charged on first phase

@@ -18,21 +18,31 @@ mod harness;
 use exoshuffle::sim::{simulate, SimConfig, SimStrategy};
 
 fn main() {
+    let smoke = harness::smoke();
     harness::section("100 TB CloudSort by shuffle strategy (simulated)");
     println!(
         "{:<16} | {:>12} | {:>10} | {:>10} | {:>18}",
         "strategy", "map&shuffle", "reduce", "total", "peak unmerged/node"
     );
     let mut results = Vec::new();
+    let mut walls = Vec::new();
     for strategy in [
         SimStrategy::TwoStageMerge,
         SimStrategy::SimpleShuffle,
         SimStrategy::Streaming,
     ] {
         let mut cfg = SimConfig::paper_100tb();
+        if smoke {
+            cfg.spec = exoshuffle::coordinator::JobSpec::scaled(1 << 30, 4);
+        }
         cfg.strategy = strategy;
         cfg.rates.tail_prob = 0.0; // deterministic cross-strategy compare
+        let t = std::time::Instant::now();
         let r = simulate(&cfg);
+        walls.push(harness::single(
+            &format!("strategy_compare_{}", strategy.name()),
+            t.elapsed().as_secs_f64(),
+        ));
         println!(
             "{:<16} | {:>10.0} s | {:>8.0} s | {:>8.0} s | {:>12} blocks",
             strategy.name(),
@@ -42,6 +52,11 @@ fn main() {
             r.peak_unmerged_blocks
         );
         results.push((strategy, r));
+    }
+    harness::emit_json("strategy_compare", &walls);
+    if smoke {
+        println!("strategy_compare bench: smoke scale, shape assertions skipped");
+        return;
     }
     let two_stage = &results[0].1;
     let simple = &results[1].1;

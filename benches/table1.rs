@@ -8,16 +8,22 @@
 #[path = "harness.rs"]
 mod harness;
 
+use exoshuffle::coordinator::JobSpec;
 use exoshuffle::sim::{simulate, SimConfig};
 
 fn main() {
+    let smoke = harness::smoke();
     harness::section("Table 1: 100 TB CloudSort job completion times (simulated)");
     println!("Run      | Map & Shuffle | Reduce  | Total");
 
     let mut totals = Vec::new();
     let mut stages = Vec::new();
-    for run in 0..3 {
+    let mut results = Vec::new();
+    for run in 0..harness::pick(3, 1) {
         let mut cfg = SimConfig::paper_100tb();
+        if smoke {
+            cfg.spec = JobSpec::scaled(1 << 30, 4);
+        }
         cfg.seed = 1 + run as u64;
         let t = std::time::Instant::now();
         let r = simulate(&cfg);
@@ -30,6 +36,7 @@ fn main() {
             r.total_secs,
             wall
         );
+        results.push(harness::single(&format!("table1_sim_run{}", run + 1), wall));
         totals.push(r.total_secs);
         stages.push((r.map_shuffle_secs, r.reduce_secs));
     }
@@ -41,6 +48,11 @@ fn main() {
         avg_ms, avg_rd, avg_total
     );
     println!("Paper    |       3508 s  |  1870 s |  5378 s");
+    harness::emit_json("table1", &results);
+    if smoke {
+        println!("table1 bench: smoke scale, shape assertions skipped");
+        return;
+    }
 
     // --- shape assertions (reproduction bar: shape, not absolutes) ---
     let ratio = avg_ms / avg_rd;

@@ -43,7 +43,23 @@ fn main() {
     }
 
     harness::section("Table 2 with the simulator's run profile (shape)");
-    let r = simulate(&SimConfig::paper_100tb());
+    let smoke = harness::smoke();
+    let mut cfg = SimConfig::paper_100tb();
+    if smoke {
+        cfg.spec = exoshuffle::coordinator::JobSpec::scaled(1 << 30, 4);
+    }
+    let t = std::time::Instant::now();
+    let r = simulate(&cfg);
+    harness::emit_json(
+        "table2",
+        &[harness::single("table2_sim", t.elapsed().as_secs_f64())],
+    );
+    if smoke {
+        // the smoke sim is not the 100 TB profile: the paper-arithmetic
+        // assertions above already ran, skip the sim-shape comparison
+        println!("table2 bench: smoke scale, sim-profile comparison skipped");
+        return;
+    }
     let sim_profile = RunProfile {
         n_workers: 40,
         job_seconds: r.total_secs,

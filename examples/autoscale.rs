@@ -1,0 +1,125 @@
+//! Elastic cluster demo: a bursty multi-job mix on a shared
+//! `JobService` whose fleet is driven by the cost-aware autoscaler —
+//! the library form of `exoshuffle serve --autoscale`.
+//!
+//! The service starts with a single node. Four staggered jobs arrive in
+//! two bursts; queue pressure grows the fleet toward the ceiling, the
+//! idle gap (and the tail) shrinks it back, and the run ends with a
+//! printed node-count timeline plus the dollars saved against a fleet
+//! pinned at the ceiling. Every job's output validates regardless of
+//! how often the fleet resized under it.
+//!
+//!     cargo run --release --example autoscale
+
+use std::time::Duration;
+
+use exoshuffle::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    let spec = JobSpec::scaled(8 << 20, 4);
+    let min_nodes = 1;
+    let max_nodes = 4;
+
+    let mut cfg = ServiceConfig::for_spec(&spec);
+    cfg.n_nodes = min_nodes;
+    cfg.max_nodes = max_nodes;
+    let service = JobService::new(cfg);
+    let scaler = Autoscaler::start(
+        service.runtime().clone(),
+        AutoscalerConfig {
+            min_nodes,
+            max_nodes,
+            ..AutoscalerConfig::default()
+        },
+    );
+    println!(
+        "elastic service: {min_nodes}..{max_nodes} nodes, 4 bursty jobs\n"
+    );
+
+    // burst 1: two jobs back to back; burst 2 after an idle gap
+    let mut handles = Vec::new();
+    for (i, strategy) in ["two-stage-merge", "streaming"].iter().enumerate() {
+        handles.push(
+            ShuffleJob::new(spec.clone())
+                .strategy_arc(
+                    exoshuffle::shuffle::strategy_by_name(strategy).unwrap(),
+                )
+                .name(format!("burst1-{i}"))
+                .submit(&service)?,
+        );
+    }
+    for h in handles.drain(..) {
+        let report = h.wait()?;
+        println!(
+            "{:<12} {:<16} total {:>6.2}s  validation {}",
+            report.name,
+            report.strategy,
+            report.total_secs,
+            if report.validation.valid { "PASS" } else { "FAIL" },
+        );
+        assert!(report.validation.valid);
+    }
+    // idle gap: the autoscaler should drain the burst capacity
+    std::thread::sleep(Duration::from_millis(600));
+    let between = service.runtime().available_nodes();
+    println!("\nidle gap: fleet at {between} node(s)\n");
+
+    for i in 0..2 {
+        handles.push(
+            ShuffleJob::new(spec.clone())
+                .name(format!("burst2-{i}"))
+                .submit(&service)?,
+        );
+    }
+    for h in handles.drain(..) {
+        let report = h.wait()?;
+        println!(
+            "{:<12} {:<16} total {:>6.2}s  validation {}",
+            report.name,
+            report.strategy,
+            report.total_secs,
+            if report.validation.valid { "PASS" } else { "FAIL" },
+        );
+        assert!(report.validation.valid);
+    }
+
+    scaler.stop();
+    let rt = service.runtime();
+    println!("\nautoscaler decisions:");
+    for e in scaler.events() {
+        println!(
+            "  t={:>6.2}s {} node {:<2} -> {} nodes  ({})",
+            e.at_secs,
+            if e.scale_up { "+join " } else { "-drain" },
+            e.node,
+            e.nodes_after,
+            e.reason,
+        );
+    }
+    println!("node-count timeline:");
+    for (t, n) in rt.node_count_timeline() {
+        println!("  t={t:>6.2}s  {n} node(s)");
+    }
+    let cost = scaler.cost_report(&CostModel::paper());
+    println!(
+        "\nfleet cost (paper worker rate): elastic ${:.4} vs \
+         pinned-at-{max_nodes} ${:.4} — saved ${:.4} ({:.0}%)",
+        cost.elastic_dollars,
+        cost.fixed_dollars,
+        cost.saved_dollars(),
+        cost.saved_fraction() * 100.0,
+    );
+    let stats = rt.store_stats();
+    println!(
+        "drains migrated {} objects ({} B); objects lost: {}",
+        stats.drain_migrations, stats.drain_migrated_bytes, stats.objects_lost,
+    );
+    assert_eq!(stats.objects_lost, 0, "drains must never lose data");
+    assert!(
+        cost.elastic_dollars <= cost.fixed_dollars,
+        "an elastic fleet must not cost more than the pinned one"
+    );
+    service.shutdown();
+    println!("\nautoscale example: PASS");
+    Ok(())
+}

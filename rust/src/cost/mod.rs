@@ -5,6 +5,13 @@
 //! the whole job, output for the reduce stage), and S3 data access cost
 //! (GET/PUT request counts × request unit prices). Prices are the paper's
 //! November 2022 us-west-2 on-demand numbers.
+//!
+//! On top of the fixed-fleet arithmetic, [`CostModel::elastic_fleet_cost`]
+//! prices an **elastic** fleet from its live-node-count timeline
+//! ([`crate::distfut::Runtime::node_count_timeline`]): worker node-seconds
+//! are integrated under the step function and compared against a fleet
+//! pinned at `max_nodes` for the same wall time — the dollars-saved
+//! readout of the autoscaler ([`crate::service::Autoscaler`]).
 
 /// AWS price constants (paper references [1][2][3]).
 #[derive(Clone, Copy, Debug)]
@@ -73,6 +80,38 @@ impl CostBreakdown {
     }
 }
 
+/// Worker-compute dollars of an elastic fleet vs one pinned at its
+/// ceiling, over the same wall-clock window. Master and EBS costs are
+/// excluded: both fleets pay them identically, so they cancel in the
+/// savings readout.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FleetCost {
+    /// Wall-clock window the timeline was integrated over.
+    pub elapsed_secs: f64,
+    /// Worker node-seconds actually provisioned (∫ live-count dt).
+    pub node_seconds: f64,
+    /// Node-seconds a fleet pinned at `max_nodes` would have billed.
+    pub fixed_node_seconds: f64,
+    pub elastic_dollars: f64,
+    pub fixed_dollars: f64,
+}
+
+impl FleetCost {
+    /// Dollars the elastic fleet saved vs the pinned one.
+    pub fn saved_dollars(&self) -> f64 {
+        self.fixed_dollars - self.elastic_dollars
+    }
+
+    /// Saved fraction of the pinned cost (0.0 when the pinned cost is 0).
+    pub fn saved_fraction(&self) -> f64 {
+        if self.fixed_dollars > 0.0 {
+            self.saved_dollars() / self.fixed_dollars
+        } else {
+            0.0
+        }
+    }
+}
+
 /// The TCO calculator.
 #[derive(Clone, Copy, Debug)]
 pub struct CostModel {
@@ -107,6 +146,41 @@ impl CostModel {
             storage_output: p.s3_storage_100tb_hourly * tb100 * reduce_hours,
             access_get: run.get_requests as f64 / 1000.0 * p.get_per_1000,
             access_put: run.put_requests as f64 / 1000.0 * p.put_per_1000,
+        }
+    }
+
+    /// Price an elastic fleet's worker compute from a `(seconds,
+    /// live-node count)` step timeline integrated up to `end_secs`, and
+    /// compare it against a fleet pinned at `max_nodes` for the same
+    /// window. Timelines come from
+    /// [`crate::distfut::Runtime::node_count_timeline`] (real runs) or
+    /// [`crate::sim::estimate_autoscale`] (the 100 TB model).
+    pub fn elastic_fleet_cost(
+        &self,
+        timeline: &[(f64, usize)],
+        end_secs: f64,
+        max_nodes: usize,
+    ) -> FleetCost {
+        let end_secs = end_secs.max(0.0);
+        let mut node_seconds = 0.0;
+        for (i, &(t, n)) in timeline.iter().enumerate() {
+            let next = timeline
+                .get(i + 1)
+                .map(|&(t2, _)| t2)
+                .unwrap_or(end_secs)
+                .min(end_secs);
+            if next > t {
+                node_seconds += (next - t) * n as f64;
+            }
+        }
+        let rate = self.pricing.worker_hourly / 3600.0;
+        let fixed_node_seconds = end_secs * max_nodes as f64;
+        FleetCost {
+            elapsed_secs: end_secs,
+            node_seconds,
+            fixed_node_seconds,
+            elastic_dollars: node_seconds * rate,
+            fixed_dollars: fixed_node_seconds * rate,
         }
     }
 
@@ -188,6 +262,28 @@ mod tests {
         run.data_bytes /= 2;
         let b = m.breakdown(&run);
         assert!((b.storage_input - 4.6045 / 2.0).abs() < 0.001);
+    }
+
+    #[test]
+    fn elastic_fleet_cost_integrates_the_step_timeline() {
+        let m = CostModel::paper();
+        // 1 node for 100 s, 3 nodes for 100 s, 2 nodes for the last 100 s
+        let timeline = vec![(0.0, 1), (100.0, 3), (200.0, 2)];
+        let c = m.elastic_fleet_cost(&timeline, 300.0, 4);
+        assert!((c.node_seconds - 600.0).abs() < 1e-9, "{c:?}");
+        assert!((c.fixed_node_seconds - 1200.0).abs() < 1e-9);
+        let rate = m.pricing.worker_hourly / 3600.0;
+        assert!((c.elastic_dollars - 600.0 * rate).abs() < 1e-9);
+        assert!((c.saved_dollars() - 600.0 * rate).abs() < 1e-9);
+        assert!((c.saved_fraction() - 0.5).abs() < 1e-9);
+        // a fleet that never scaled matches the pinned price exactly
+        let flat = m.elastic_fleet_cost(&[(0.0, 4)], 300.0, 4);
+        assert!((flat.saved_dollars()).abs() < 1e-9);
+        // entries past the window are ignored
+        let c = m.elastic_fleet_cost(&[(0.0, 2), (500.0, 9)], 300.0, 2);
+        assert!((c.node_seconds - 600.0).abs() < 1e-9, "{c:?}");
+        // degenerate inputs are well defined
+        assert_eq!(m.elastic_fleet_cost(&[], 0.0, 0), FleetCost::default());
     }
 
     #[test]

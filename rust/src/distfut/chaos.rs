@@ -30,7 +30,7 @@ use crate::distfut::store::ObjectId;
 use crate::distfut::JobId;
 use crate::util::rng::stream_at;
 
-/// A failure to inject when a trigger fires.
+/// A failure (or fleet reconfiguration) to inject when a trigger fires.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ChaosEvent {
     /// Kill the given node: drop its resident objects, drain its queues,
@@ -39,6 +39,18 @@ pub enum ChaosEvent {
     /// Drop the data of the object whose commit fired the trigger
     /// ([`Runtime::lose_object`]).
     LoseTriggeringObject,
+    /// Hot-join one worker node ([`Runtime::add_node`]) — a
+    /// deterministic elastic scale-up mid-run.
+    AddNode,
+    /// Gracefully drain the given node ([`Runtime::drain_node`]).
+    /// Fired off the commit path on its own thread: a drain waits for
+    /// in-flight tasks — possibly including the very task whose commit
+    /// tripped this trigger.
+    DrainNode(usize),
+    /// Scale the fleet to the given available-node count, adding or
+    /// draining (highest index first) as needed. Asynchronous, like
+    /// [`ChaosEvent::DrainNode`].
+    ScaleTo(usize),
 }
 
 /// One scheduled failure: fires when the armed harness has observed
@@ -76,6 +88,34 @@ impl ChaosPlan {
         self.triggers.push(ChaosTrigger {
             after_commits,
             event: ChaosEvent::LoseTriggeringObject,
+        });
+        self
+    }
+
+    /// Hot-join one worker node after the `after_commits`-th commit.
+    pub fn add_node(mut self, after_commits: u64) -> ChaosPlan {
+        self.triggers.push(ChaosTrigger {
+            after_commits,
+            event: ChaosEvent::AddNode,
+        });
+        self
+    }
+
+    /// Gracefully drain `node` after the `after_commits`-th commit.
+    pub fn drain_node(mut self, node: usize, after_commits: u64) -> ChaosPlan {
+        self.triggers.push(ChaosTrigger {
+            after_commits,
+            event: ChaosEvent::DrainNode(node),
+        });
+        self
+    }
+
+    /// Scale the fleet to `nodes` available nodes after the
+    /// `after_commits`-th commit (the CLI's `--scale-event N@C`).
+    pub fn scale_to(mut self, nodes: usize, after_commits: u64) -> ChaosPlan {
+        self.triggers.push(ChaosTrigger {
+            after_commits,
+            event: ChaosEvent::ScaleTo(nodes),
         });
         self
     }
@@ -143,6 +183,10 @@ pub struct ChaosHarness {
     /// The runtime-side observer registration, for self-removal once the
     /// plan is exhausted (0 until arming completes).
     observer_id: AtomicU64,
+    /// Weak self-handle, set at arming: asynchronous events (drains,
+    /// scale-to) log their outcome from a spawned thread, which must not
+    /// keep the harness alive on its own.
+    self_ref: Mutex<Weak<ChaosHarness>>,
     rt: Weak<Runtime>,
     log: Mutex<Vec<ChaosRecord>>,
 }
@@ -178,9 +222,11 @@ impl ChaosHarness {
             seen: AtomicU64::new(0),
             scope,
             observer_id: AtomicU64::new(0),
+            self_ref: Mutex::new(Weak::new()),
             rt: Arc::downgrade(rt),
             log: Mutex::new(Vec::new()),
         });
+        *harness.self_ref.lock().unwrap() = Arc::downgrade(&harness);
         let observer = harness.clone();
         let id = rt.on_commit(move |_seq, oid, job| observer.observe(oid, job));
         harness.observer_id.store(id, Ordering::SeqCst);
@@ -216,12 +262,12 @@ impl ChaosHarness {
 
     fn fire(&self, trigger: ChaosTrigger, id: ObjectId) {
         let Some(rt) = self.rt.upgrade() else { return };
+        let job = self.scope.unwrap_or(JobId::ROOT);
+        let at_secs = rt.now();
         let outcome = match trigger.event {
             // a scoped harness attributes the kill marker to its job, so
             // the marker retires with the job on a long-lived runtime
-            ChaosEvent::KillNode(node) => match rt
-                .kill_node_as(node, self.scope.unwrap_or(JobId::ROOT))
-            {
+            ChaosEvent::KillNode(node) => match rt.kill_node_as(node, job) {
                 Ok(r) => format!(
                     "killed node {node}: {} objects lost, {} tasks \
                      resubmitted, {} queued tasks rerouted, {} unrecoverable",
@@ -239,9 +285,58 @@ impl ChaosHarness {
                 ),
                 Err(e) => format!("skipped: {e}"),
             },
+            ChaosEvent::AddNode => match rt.add_node_as(job) {
+                Ok(node) => format!(
+                    "added node {node} ({} available)",
+                    rt.available_nodes()
+                ),
+                Err(e) => format!("skipped: {e}"),
+            },
+            // Graceful operations wait for in-flight tasks — possibly
+            // including the very task whose commit fired this trigger —
+            // so they run off the commit path, on their own thread.
+            // Initiation is recorded synchronously (so a job that ends
+            // before the operation completes still reports the event);
+            // the outcome lands as a second record when it resolves.
+            ChaosEvent::DrainNode(_) | ChaosEvent::ScaleTo(_) => {
+                self.record(
+                    at_secs,
+                    trigger,
+                    "initiated (graceful, completes asynchronously)".into(),
+                );
+                let me = self.self_ref.lock().unwrap().clone();
+                std::thread::spawn(move || {
+                    let outcome = match trigger.event {
+                        ChaosEvent::DrainNode(node) => {
+                            match rt.drain_node_as(node, job) {
+                                Ok(r) => format!(
+                                    "drained node {node}: {} queued tasks \
+                                     rerouted, {} objects ({} B) migrated",
+                                    r.queue_reroutes,
+                                    r.objects_migrated,
+                                    r.bytes_migrated
+                                ),
+                                Err(e) => format!("skipped: {e}"),
+                            }
+                        }
+                        ChaosEvent::ScaleTo(target) => {
+                            scale_fleet_to(&rt, target, job)
+                        }
+                        _ => unreachable!("only async events spawn"),
+                    };
+                    if let Some(h) = me.upgrade() {
+                        h.record(at_secs, trigger, outcome);
+                    }
+                });
+                return;
+            }
         };
+        self.record(at_secs, trigger, outcome);
+    }
+
+    fn record(&self, at_secs: f64, trigger: ChaosTrigger, outcome: String) {
         self.log.lock().unwrap().push(ChaosRecord {
-            at_secs: rt.now(),
+            at_secs,
             after_commits: trigger.after_commits,
             event: trigger.event,
             outcome,
@@ -269,6 +364,39 @@ impl ChaosHarness {
     pub fn log(&self) -> Vec<ChaosRecord> {
         self.log.lock().unwrap().clone()
     }
+}
+
+/// Add or drain (highest index first) until the fleet has `target`
+/// available nodes; stops at the first refusal (ceiling, last node).
+fn scale_fleet_to(rt: &Arc<Runtime>, target: usize, job: JobId) -> String {
+    let mut added = 0usize;
+    let mut drained = 0usize;
+    while rt.available_nodes() < target {
+        match rt.add_node_as(job) {
+            Ok(_) => added += 1,
+            Err(e) => {
+                return format!(
+                    "scale-to {target} stopped after +{added}: {e}"
+                )
+            }
+        }
+    }
+    while rt.available_nodes() > target {
+        let Some(victim) = rt.highest_available_node() else {
+            break;
+        };
+        match rt.drain_node_as(victim, job) {
+            Ok(_) => drained += 1,
+            Err(e) => {
+                return format!(
+                    "scale-to {target} stopped after -{drained}: {e}"
+                )
+            }
+        }
+    }
+    format!(
+        "scaled fleet to {target} available nodes (+{added}/-{drained})"
+    )
 }
 
 #[cfg(test)]
@@ -356,6 +484,56 @@ mod tests {
         assert_eq!(h.fired(), 1);
         assert!(h.log()[0].outcome.contains("lost object"), "{:?}", h.log());
         assert!(rt.recovery_stats().tasks_resubmitted >= 1);
+    }
+
+    #[test]
+    fn add_node_trigger_joins_a_worker_at_the_commit_point() {
+        let rt = Runtime::new(RuntimeOptions {
+            n_nodes: 1,
+            slots_per_node: 1,
+            max_nodes: 2,
+            ..Default::default()
+        });
+        let h = ChaosHarness::arm(&rt, ChaosPlan::new().add_node(2));
+        let (_, t) = rt.submit(produce("a", 0, 1));
+        t.wait().unwrap();
+        assert_eq!(rt.live_nodes(), 1, "trigger at two, one commit so far");
+        let (_, t) = rt.submit(produce("b", 0, 2));
+        t.wait().unwrap();
+        assert_eq!(h.fired(), 1);
+        assert_eq!(rt.live_nodes(), 2);
+        assert!(h.log()[0].outcome.contains("added node 1"), "{:?}", h.log());
+        // the joined node takes work
+        let (_, t) = rt.submit(produce("pinned", 1, 3));
+        t.wait().unwrap();
+        assert!(rt.task_events().iter().any(|e| e.node == 1 && e.ok));
+    }
+
+    #[test]
+    fn drain_node_trigger_retires_gracefully_off_the_commit_path() {
+        let rt = Runtime::new(RuntimeOptions {
+            n_nodes: 2,
+            slots_per_node: 1,
+            ..Default::default()
+        });
+        let h = ChaosHarness::arm(&rt, ChaosPlan::new().drain_node(1, 1));
+        let (outs, t) = rt.submit(produce("victim-host", 1, 9));
+        t.wait().unwrap();
+        // the drain runs asynchronously: wait for retirement
+        let deadline = std::time::Instant::now()
+            + std::time::Duration::from_secs(5);
+        while !rt.is_node_dead(1) {
+            assert!(
+                std::time::Instant::now() < deadline,
+                "drain did not complete: {:?}",
+                h.log()
+            );
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        // drained, not killed: the object survived by migration
+        assert_eq!(*rt.get(&outs[0]).unwrap(), vec![9u8; 16]);
+        assert_eq!(rt.recovery_stats().objects_lost, 0);
+        assert_eq!(rt.recovery_stats().nodes_killed, 0);
     }
 
     #[test]

@@ -43,6 +43,15 @@
 //! control accounts residency per job; and [`Runtime::retire_job`] frees
 //! a completed job's records so one runtime can serve jobs indefinitely
 //! (see [`crate::service`]).
+//!
+//! It is also **elastic**: [`Runtime::add_node`] hot-joins workers up to
+//! [`scheduler::RuntimeOptions::max_nodes`] (a re-added node id is a
+//! fresh incarnation — the store tracks per-node generations), and
+//! [`Runtime::drain_node`] gracefully decommissions one — queues
+//! reroute, running tasks finish, resident objects migrate, nothing is
+//! lost. The [`crate::service::Autoscaler`] drives both from queue
+//! depth, slot utilization and residency watermarks, pricing decisions
+//! with [`crate::cost`].
 
 pub mod chaos;
 pub mod future;
@@ -53,8 +62,8 @@ use std::sync::Arc;
 
 pub use future::TaskHandle;
 pub use scheduler::{
-    JobParams, RecoveryReport, RecoveryStats, Runtime, RuntimeOptions,
-    TaskCtx, TaskSpec,
+    DrainReport, JobParams, MembershipEvent, RecoveryReport, RecoveryStats,
+    Runtime, RuntimeOptions, TaskCtx, TaskSpec,
 };
 pub use store::{ObjectId, ObjectRef, StoreStats};
 

@@ -39,9 +39,23 @@
 //! instead of hanging. Workers never block on a lost object: a fetch
 //! surfaces [`DfError::ObjectLost`] and the task is re-parked until the
 //! reconstruction recommits, so recovery cannot deadlock the slot pool.
+//!
+//! **Elastic membership**: the fleet is no longer frozen at construction.
+//! [`Runtime::add_node`] hot-joins a worker — a fresh incarnation of a
+//! retired slot, or a new slot up to [`RuntimeOptions::max_nodes`] — and
+//! the scheduler immediately offers it `Any`/`Prefer` and stealable work
+//! (queued backlogs rebalance onto it through the shared queue and work
+//! stealing). [`Runtime::drain_node`] is the graceful opposite of
+//! [`Runtime::kill_node`]: the node stops being offered work, its queues
+//! reroute, its running tasks finish and commit, its resident objects
+//! migrate to live peers, and only then does it retire — nothing is ever
+//! `Lost`. Locality, admission control and fair sharing recompute over
+//! the live node set, and a membership log feeds node-count-over-time
+//! reporting ([`Runtime::node_count_timeline`]) plus liveness-weighted
+//! utilization metrics.
 
 use std::collections::{HashMap, HashSet, VecDeque};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -89,6 +103,12 @@ pub struct RuntimeOptions {
     /// the cap poison with [`DfError::Unrecoverable`] instead of
     /// re-executing unboundedly.
     pub max_reconstruction_depth: usize,
+    /// Ceiling on the elastic fleet: [`Runtime::add_node`] can grow the
+    /// cluster to this many nodes. `0` (the default) pins the fleet at
+    /// `n_nodes` — no elasticity beyond re-adding killed/drained slots.
+    /// Queue and store slot vectors are sized to this up front, so a
+    /// never-joined slot costs a few empty maps and three atomics.
+    pub max_nodes: usize,
 }
 
 impl Default for RuntimeOptions {
@@ -102,6 +122,7 @@ impl Default for RuntimeOptions {
             steal_delay: Duration::from_millis(1),
             record_lineage: true,
             max_reconstruction_depth: 64,
+            max_nodes: 0,
         }
     }
 }
@@ -219,6 +240,30 @@ pub struct RecoveryReport {
     pub objects_unrecoverable: usize,
 }
 
+/// Outcome of one graceful [`Runtime::drain_node`] decommission.
+/// Everything here is *moved*, not lost — contrast [`RecoveryReport`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DrainReport {
+    /// Queued tasks rerouted off the draining node's queues.
+    pub queue_reroutes: usize,
+    /// Resident objects migrated to live peers before retirement.
+    pub objects_migrated: usize,
+    /// Bytes those migrations moved.
+    pub bytes_migrated: u64,
+}
+
+/// One fleet-membership change: a node joined (construction,
+/// [`Runtime::add_node`]) or left ([`Runtime::kill_node`], the
+/// retirement step of [`Runtime::drain_node`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MembershipEvent {
+    /// Runtime-clock seconds of the change.
+    pub at_secs: f64,
+    pub node: usize,
+    /// `true` for a join, `false` for a departure.
+    pub joined: bool,
+}
+
 /// Cumulative recovery counters for a runtime.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct RecoveryStats {
@@ -269,6 +314,9 @@ struct SchedState {
     /// "now" instead of burning down incumbents' accumulated vruntime,
     /// even if no job happens to be active at that instant.
     min_vruntime: f64,
+    /// Tasks currently executing per node — what [`Runtime::drain_node`]
+    /// waits on before migrating the node's objects and retiring it.
+    running_on: Vec<usize>,
     /// In-flight + queued + waiting task count (for quiescence checks).
     outstanding: u64,
     shutdown: bool,
@@ -314,11 +362,12 @@ impl SchedState {
         }
     }
 
-    /// Charge one dispatch to `job`: advance its virtual time by
-    /// `1/weight`, move the task from queued to executing, and ratchet
-    /// the scheduler's fair clock (the winner's pre-dispatch vruntime is
-    /// the current pack floor; the clock never goes backwards).
-    fn charge_dispatch(&mut self, job: JobId) {
+    /// Charge one dispatch of `job` on `node`: advance the job's virtual
+    /// time by `1/weight`, move the task from queued to executing, and
+    /// ratchet the scheduler's fair clock (the winner's pre-dispatch
+    /// vruntime is the current pack floor; the clock never goes
+    /// backwards).
+    fn charge_dispatch(&mut self, job: JobId, node: usize) {
         let pre = {
             let j = self.job_mut(job);
             let pre = j.vruntime;
@@ -330,14 +379,65 @@ impl SchedState {
         if pre > self.min_vruntime {
             self.min_vruntime = pre;
         }
+        self.running_on[node] += 1;
     }
 
-    /// A dispatched task of `job` stopped executing (completed, parked,
-    /// or requeued for retry).
-    fn dispatch_done(&mut self, job: JobId) {
+    /// A dispatched task of `job` stopped executing on `node` (completed,
+    /// parked, or requeued for retry).
+    fn dispatch_done(&mut self, job: JobId, node: usize) {
         if let Some(j) = self.jobs.get_mut(&job) {
             j.running = j.running.saturating_sub(1);
         }
+        self.running_on[node] = self.running_on[node].saturating_sub(1);
+    }
+
+    /// Drain `node`'s pinned and local queues and reroute every queued
+    /// task to a live target, returning how many moved. `mark_recovery`
+    /// tags the moves as node-failure recovery work (the kill path);
+    /// planned drains leave the flag alone.
+    fn reroute_node_queues(
+        &mut self,
+        sh: &Shared,
+        node: usize,
+        mark_recovery: bool,
+    ) -> usize {
+        let mut drained: Vec<u64> = self.pinned[node]
+            .drain()
+            .flat_map(|(_, q)| q.into_iter())
+            .collect();
+        drained.extend(
+            self.local[node]
+                .drain()
+                .flat_map(|(_, q)| q.into_iter().map(|(tid, _)| tid)),
+        );
+        let mut moved = 0usize;
+        for tid in drained {
+            let Some((job, placement, arg_ids)) =
+                self.pending.get_mut(&tid).map(|t| {
+                    if mark_recovery {
+                        t.recovery = true; // surfaces on TaskEvent::recovery
+                    }
+                    (
+                        t.spec.job,
+                        t.spec.placement,
+                        t.spec
+                            .args
+                            .iter()
+                            .map(|a| a.id)
+                            .collect::<Vec<ObjectId>>(),
+                    )
+                })
+            else {
+                continue;
+            };
+            // leaving the old node's queue, re-entering a live one
+            if let Some(j) = self.jobs.get_mut(&job) {
+                j.queued = j.queued.saturating_sub(1);
+            }
+            self.route(sh, tid, job, placement, &arg_ids);
+            moved += 1;
+        }
+        moved
     }
 
     fn route(
@@ -392,17 +492,34 @@ fn fair_min(st: &SchedState, jobs: impl Iterator<Item = JobId>) -> Option<JobId>
     })
 }
 
-/// `n` itself when alive, else the next live node in ring order (task
-/// bodies are location-independent: a "pinned" merge carries its logical
-/// node's cut points in its closure, so running it elsewhere produces
-/// identical bytes).
+/// `n` itself when it can take work, else the next available node in
+/// ring order (task bodies are location-independent: a "pinned" merge
+/// carries its logical node's cut points in its closure, so running it
+/// elsewhere produces identical bytes). Draining nodes are skipped like
+/// dead ones — they take nothing new. Logical nodes beyond the
+/// provisioned span (a job planned for more workers than have joined
+/// yet) fold into it.
+///
+/// When *zero* nodes are available (every survivor of a kill is
+/// draining), fall back to the first **live** node: a draining node's
+/// queues are re-swept when its drain resolves — an aborting drain
+/// resumes the node, a completing one reroutes at retirement — so work
+/// parked there is never stranded, whereas a dead node's queues would
+/// be.
 fn live_target(sh: &Shared, n: usize) -> usize {
-    if !sh.store.is_dead(n) {
+    let span = sh.n_provisioned().max(1);
+    let n = n % span;
+    if sh.store.is_available(n) {
         return n;
     }
-    (1..sh.n_nodes)
-        .map(|i| (n + i) % sh.n_nodes)
-        .find(|&c| !sh.store.is_dead(c))
+    (1..span)
+        .map(|i| (n + i) % span)
+        .find(|&c| sh.store.is_available(c))
+        .or_else(|| {
+            (0..span)
+                .map(|i| (n + i) % span)
+                .find(|&c| !sh.store.is_dead(c))
+        })
         .unwrap_or(n)
 }
 
@@ -420,8 +537,18 @@ struct Shared {
     work_ready: Condvar,
     quiescent: Condvar,
     store: Arc<Store>,
-    /// Number of nodes, fixed at construction (lock-free reads).
-    n_nodes: usize,
+    /// Highest node index ever activated + 1 — the span every per-node
+    /// iteration covers (lock-free reads; grows under `add_node`, never
+    /// shrinks).
+    provisioned: AtomicUsize,
+    /// Ceiling on the fleet; per-node vectors are sized to it.
+    max_nodes: usize,
+    /// Worker threads each node incarnation is spawned with.
+    slots_per_node: usize,
+    /// Fleet-membership changes since construction (joins, kills, drain
+    /// retirements) — feeds node-count timelines and liveness-weighted
+    /// utilization.
+    membership: Mutex<Vec<MembershipEvent>>,
     /// Per-node resident-bytes ceiling for admission control.
     admission_limit: u64,
     steal_delay: Duration,
@@ -450,6 +577,13 @@ struct Shared {
     stop: AtomicBool,
 }
 
+impl Shared {
+    /// The provisioned span: highest activated node index + 1.
+    fn n_provisioned(&self) -> usize {
+        self.provisioned.load(Ordering::Relaxed)
+    }
+}
+
 impl Runtime {
     pub fn new(opts: RuntimeOptions) -> Arc<Self> {
         let spill_dir = opts.spill_root.join(format!(
@@ -457,7 +591,17 @@ impl Runtime {
             std::process::id(),
             NEXT_RUNTIME.fetch_add(1, Ordering::Relaxed)
         ));
-        let store = Store::new(opts.n_nodes, opts.store_capacity_per_node, spill_dir);
+        let max_nodes = if opts.max_nodes == 0 {
+            opts.n_nodes
+        } else {
+            opts.max_nodes.max(opts.n_nodes)
+        };
+        let store = Store::new_elastic(
+            max_nodes,
+            opts.n_nodes,
+            opts.store_capacity_per_node,
+            spill_dir,
+        );
         let admission_limit = (opts.store_capacity_per_node as f64
             * opts.admission_watermark.clamp(0.0, 1.0))
             as u64;
@@ -474,17 +618,29 @@ impl Runtime {
                         queued: 0,
                     },
                 )]),
-                pinned: (0..opts.n_nodes).map(|_| HashMap::new()).collect(),
-                local: (0..opts.n_nodes).map(|_| HashMap::new()).collect(),
+                pinned: (0..max_nodes).map(|_| HashMap::new()).collect(),
+                local: (0..max_nodes).map(|_| HashMap::new()).collect(),
                 shared: HashMap::new(),
                 min_vruntime: 0.0,
+                running_on: vec![0; max_nodes],
                 outstanding: 0,
                 shutdown: false,
             }),
             work_ready: Condvar::new(),
             quiescent: Condvar::new(),
             store,
-            n_nodes: opts.n_nodes,
+            provisioned: AtomicUsize::new(opts.n_nodes),
+            max_nodes,
+            slots_per_node: opts.slots_per_node,
+            membership: Mutex::new(
+                (0..opts.n_nodes)
+                    .map(|node| MembershipEvent {
+                        at_secs: 0.0,
+                        node,
+                        joined: true,
+                    })
+                    .collect(),
+            ),
             admission_limit,
             steal_delay: opts.steal_delay.max(Duration::from_micros(100)),
             lineage: Mutex::new(HashMap::new()),
@@ -517,7 +673,7 @@ impl Runtime {
                     std::thread::Builder::new()
                         .name(format!("worker-{node}-{slot}"))
                         .stack_size(8 << 20)
-                        .spawn(move || worker_loop(sh, node))
+                        .spawn(move || worker_loop(sh, node, 0))
                         .expect("spawn worker"),
                 );
             }
@@ -526,21 +682,52 @@ impl Runtime {
         rt
     }
 
-    /// Number of nodes (lock-free; fixed at construction).
+    /// Provisioned node span: highest node index ever activated + 1
+    /// (lock-free; grows under [`Runtime::add_node`], never shrinks —
+    /// per-node reports index over this span).
     pub fn n_nodes(&self) -> usize {
-        self.shared.n_nodes
+        self.shared.n_provisioned()
     }
 
-    /// Whether `node` was killed ([`Runtime::kill_node`]).
+    /// Ceiling on the fleet ([`RuntimeOptions::max_nodes`]).
+    pub fn max_nodes(&self) -> usize {
+        self.shared.max_nodes
+    }
+
+    /// Whether `node` was killed ([`Runtime::kill_node`]) or retired by
+    /// a drain.
     pub fn is_node_dead(&self, node: usize) -> bool {
-        node < self.shared.n_nodes && self.shared.store.is_dead(node)
+        node < self.shared.n_provisioned() && self.shared.store.is_dead(node)
     }
 
-    /// Nodes still alive.
+    /// Whether `node` can currently be offered work (live, not
+    /// draining).
+    pub fn is_node_available(&self, node: usize) -> bool {
+        node < self.shared.n_provisioned()
+            && self.shared.store.is_available(node)
+    }
+
+    /// Nodes still alive (draining nodes are alive until they retire).
     pub fn live_nodes(&self) -> usize {
-        (0..self.shared.n_nodes)
+        (0..self.shared.n_provisioned())
             .filter(|&n| !self.shared.store.is_dead(n))
             .count()
+    }
+
+    /// Nodes currently accepting work (live and not draining).
+    pub fn available_nodes(&self) -> usize {
+        (0..self.shared.n_provisioned())
+            .filter(|&n| self.shared.store.is_available(n))
+            .count()
+    }
+
+    /// The highest-index available node — the canonical scale-down
+    /// victim: ring-order reroutes fall toward the low, long-lived
+    /// indices. `None` when nothing is available.
+    pub fn highest_available_node(&self) -> Option<usize> {
+        (0..self.shared.n_provisioned())
+            .rev()
+            .find(|&n| self.shared.store.is_available(n))
     }
 
     /// Put a buffer into `node`'s store from the driver (redirected to a
@@ -800,6 +987,312 @@ impl Runtime {
         events
     }
 
+    /// Hot-join a worker node: (re)activate the first retired slot — or
+    /// a never-used one below [`RuntimeOptions::max_nodes`] — as a fresh
+    /// incarnation, spawn its worker pool, and start offering it
+    /// `Any`/`Prefer` and stealable work. Queued backlogs rebalance onto
+    /// it through the shared no-locality queue and work stealing; store
+    /// registration, locality, admission control and fair sharing all
+    /// recompute over the enlarged live set. Returns the node index.
+    /// Errors when the fleet is at its ceiling or the runtime is shut
+    /// down. The `node-added-*` marker is attributed to [`JobId::ROOT`].
+    pub fn add_node(&self) -> Result<usize, DfError> {
+        self.add_node_as(JobId::ROOT)
+    }
+
+    /// [`Runtime::add_node`], attributing the `node-added-*` timeline
+    /// marker to `job` (so a job-scoped chaos scale event retires with
+    /// its job instead of accumulating on a long-lived service).
+    pub fn add_node_as(&self, job: JobId) -> Result<usize, DfError> {
+        let sh = &self.shared;
+        let _membership = sh.kill_lock.lock().unwrap();
+        if sh.stop.load(Ordering::SeqCst) {
+            return Err(DfError::Recovery("runtime is shut down".into()));
+        }
+        let span = sh.n_provisioned();
+        // prefer re-activating a retired slot (fresh incarnation), else
+        // grow the provisioned span below the ceiling
+        let node = (0..span)
+            .find(|&n| sh.store.is_dead(n))
+            .or_else(|| (span < sh.max_nodes).then_some(span))
+            .ok_or_else(|| {
+                DfError::Recovery(format!(
+                    "cluster is at max_nodes = {} with every slot live",
+                    sh.max_nodes
+                ))
+            })?;
+        let gen = sh.store.revive_node(node);
+        if node >= span {
+            sh.provisioned.store(node + 1, Ordering::SeqCst);
+        }
+        {
+            let mut workers = self.workers.lock().unwrap();
+            for slot in 0..sh.slots_per_node {
+                let shc = self.shared.clone();
+                workers.push(
+                    std::thread::Builder::new()
+                        .name(format!("worker-{node}-{slot}-g{gen}"))
+                        .stack_size(8 << 20)
+                        .spawn(move || worker_loop(shc, node, gen))
+                        .expect("spawn worker"),
+                );
+            }
+        }
+        let now = sh.epoch.elapsed().as_secs_f64();
+        sh.membership.lock().unwrap().push(MembershipEvent {
+            at_secs: now,
+            node,
+            joined: true,
+        });
+        sh.events.lock().unwrap().push(TaskEvent {
+            name: format!("node-added-{node}"),
+            job,
+            node,
+            start: now,
+            end: now,
+            ok: true,
+            attempt: 0,
+            recovery: false,
+        });
+        // idle peers re-evaluate their steal candidates; the new workers
+        // drain the shared queue directly
+        sh.work_ready.notify_all();
+        Ok(node)
+    }
+
+    /// Gracefully decommission `node` — the planned opposite of
+    /// [`Runtime::kill_node`]: stop offering it work, reroute its queued
+    /// tasks, let its running tasks finish and commit, migrate its
+    /// resident objects to live peers (spilled copies already survive
+    /// retirement), then retire it. Nothing is ever `Lost` and no
+    /// lineage re-execution happens. Blocks until the node has retired.
+    /// Errors if the node is out of range, dead, already draining, or
+    /// the last available node.
+    pub fn drain_node(&self, node: usize) -> Result<DrainReport, DfError> {
+        self.drain_node_as(node, JobId::ROOT)
+    }
+
+    /// [`Runtime::drain_node`], attributing the `node-drained-*` marker
+    /// to `job` (see [`Runtime::kill_node_as`]).
+    pub fn drain_node_as(
+        &self,
+        node: usize,
+        job: JobId,
+    ) -> Result<DrainReport, DfError> {
+        let sh = &self.shared;
+
+        // 1) validate, stop offering the node work, and reroute its
+        // queues — under the membership lock so concurrent drains cannot
+        // both believe a peer remains, and under the scheduler lock so no
+        // route decision interleaves with the queue drain.
+        let mut queue_reroutes = 0usize;
+        let drain_generation;
+        {
+            let _membership = sh.kill_lock.lock().unwrap();
+            if sh.stop.load(Ordering::SeqCst) {
+                return Err(DfError::Recovery("runtime is shut down".into()));
+            }
+            let span = sh.n_provisioned();
+            if node >= span {
+                return Err(DfError::Recovery(format!(
+                    "no such node {node} (cluster has {span})"
+                )));
+            }
+            if sh.store.is_dead(node) {
+                return Err(DfError::Recovery(format!("node {node} is dead")));
+            }
+            if sh.store.is_draining(node) {
+                return Err(DfError::Recovery(format!(
+                    "node {node} is already draining"
+                )));
+            }
+            if !(0..span).any(|n| n != node && sh.store.is_available(n)) {
+                return Err(DfError::Recovery(
+                    "cannot drain the last available node".into(),
+                ));
+            }
+            let mut st = sh.state.lock().unwrap();
+            sh.store.set_draining(node, true);
+            queue_reroutes += st.reroute_node_queues(sh, node, false);
+            drain_generation = sh.store.node_generation(node);
+        }
+        sh.work_ready.notify_all();
+
+        // 2) wait for the node's in-flight tasks to finish — they commit
+        // normally; a drain loses no work. pick_task skips a draining
+        // node, so the count can only fall. The membership lock is NOT
+        // held here: one of this node's committing tasks may itself
+        // trigger a membership operation (a chaos kill fires on the
+        // committing thread), and blocking that commit against a lock we
+        // hold while waiting for the commit to finish would deadlock.
+        loop {
+            let st = sh.state.lock().unwrap();
+            if st.running_on[node] == 0 {
+                break;
+            }
+            drop(st);
+            std::thread::sleep(Duration::from_micros(200));
+        }
+
+        // 3+4) migrate and retire, revalidating under the membership
+        // lock: the fleet (or the runtime itself) may have changed while
+        // we waited.
+        let _membership = sh.kill_lock.lock().unwrap();
+        if sh.stop.load(Ordering::SeqCst) {
+            // a detached chaos drain can outlive its job's runtime: do
+            // not retire/evacuate on a runtime mid-shutdown
+            sh.store.set_draining(node, false);
+            return Err(DfError::Recovery("runtime is shut down".into()));
+        }
+        if sh.store.is_dead(node) {
+            // killed while draining: fail_node already handled the data
+            return Err(DfError::Recovery(format!(
+                "node {node} was killed while draining"
+            )));
+        }
+        if sh.store.node_generation(node) != drain_generation {
+            // killed AND revived while we waited: the slot now belongs
+            // to a fresh incarnation with live work — retiring it here
+            // would break the drain's nothing-is-lost guarantee. The
+            // revival already cleared the draining flag.
+            return Err(DfError::Recovery(format!(
+                "node {node} was killed and re-added while draining"
+            )));
+        }
+        let span = sh.n_provisioned();
+        if !(0..span).any(|n| n != node && sh.store.is_available(n)) {
+            // a concurrent kill removed the would-be peers: abort the
+            // drain instead of retiring the last available node
+            sh.store.set_draining(node, false);
+            sh.work_ready.notify_all();
+            return Err(DfError::Recovery(
+                "cannot drain the last available node".into(),
+            ));
+        }
+        // Tasks can have landed back on this node's queues while we
+        // waited: with zero available nodes, `live_target` falls back to
+        // live (draining) ones. Re-sweep onto the peer the revalidation
+        // just guaranteed — the membership lock held through retirement
+        // keeps that peer alive.
+        {
+            let mut st = sh.state.lock().unwrap();
+            queue_reroutes += st.reroute_node_queues(sh, node, false);
+        }
+        let (objects_migrated, bytes_migrated) = sh.store.evacuate_node(node);
+        sh.store.retire_node(node);
+        sh.work_ready.notify_all();
+        let now = sh.epoch.elapsed().as_secs_f64();
+        sh.membership.lock().unwrap().push(MembershipEvent {
+            at_secs: now,
+            node,
+            joined: false,
+        });
+        sh.events.lock().unwrap().push(TaskEvent {
+            name: format!("node-drained-{node}"),
+            job,
+            node,
+            start: now,
+            end: now,
+            ok: true,
+            attempt: 0,
+            recovery: false,
+        });
+        Ok(DrainReport {
+            queue_reroutes,
+            objects_migrated,
+            bytes_migrated,
+        })
+    }
+
+    /// Fleet-membership changes since construction, oldest first.
+    pub fn membership_log(&self) -> Vec<MembershipEvent> {
+        self.shared.membership.lock().unwrap().clone()
+    }
+
+    /// Live-node count over time as `(seconds, live nodes after the
+    /// change)` steps, starting at `(0.0, initial fleet)`. Reports and
+    /// the cost model's elastic-fleet pricing consume this.
+    pub fn node_count_timeline(&self) -> Vec<(f64, usize)> {
+        let mut out: Vec<(f64, usize)> = Vec::new();
+        let mut live = 0usize;
+        for e in self.membership_log() {
+            live = if e.joined {
+                live + 1
+            } else {
+                live.saturating_sub(1)
+            };
+            match out.last_mut() {
+                Some((t, l)) if *t == e.at_secs => *l = live,
+                _ => out.push((e.at_secs, live)),
+            }
+        }
+        out
+    }
+
+    /// Per-node liveness intervals `[join, leave)` over the provisioned
+    /// span, closing still-open intervals at `until` — the weighting
+    /// input for [`crate::metrics::fleet_utilization`]: per-node
+    /// averages must weight by how long each node was actually in the
+    /// fleet once it can resize.
+    pub fn node_liveness(&self, until: f64) -> Vec<Vec<(f64, f64)>> {
+        let span = self.shared.n_provisioned();
+        let mut intervals = vec![Vec::new(); span];
+        let mut open: Vec<Option<f64>> = vec![None; span];
+        for e in self.membership_log() {
+            if e.node >= span {
+                continue;
+            }
+            if e.joined {
+                open[e.node].get_or_insert(e.at_secs);
+            } else if let Some(start) = open[e.node].take() {
+                if e.at_secs > start {
+                    intervals[e.node].push((start, e.at_secs));
+                }
+            }
+        }
+        for (node, o) in open.into_iter().enumerate() {
+            if let Some(start) = o {
+                if until > start {
+                    intervals[node].push((start, until));
+                }
+            }
+        }
+        intervals
+    }
+
+    /// Tasks sitting in runnable queues right now (the autoscaler's
+    /// backlog signal).
+    pub fn queued_tasks(&self) -> usize {
+        let st = self.shared.state.lock().unwrap();
+        st.jobs.values().map(|j| j.queued).sum()
+    }
+
+    /// Tasks executing on workers right now.
+    pub fn running_tasks(&self) -> usize {
+        let st = self.shared.state.lock().unwrap();
+        st.running_on.iter().sum()
+    }
+
+    /// Concurrent task slots each node runs
+    /// ([`RuntimeOptions::slots_per_node`]).
+    pub fn slots_per_node(&self) -> usize {
+        self.shared.slots_per_node
+    }
+
+    /// Peak resident-store fraction across available nodes (the
+    /// autoscaler's residency-watermark signal); 0.0 with no available
+    /// node.
+    pub fn peak_residency_fraction(&self) -> f64 {
+        let sh = &self.shared;
+        (0..sh.n_provisioned())
+            .filter(|&n| sh.store.is_available(n))
+            .map(|n| {
+                sh.store.resident_on(n) as f64
+                    / sh.store.capacity_of(n).max(1) as f64
+            })
+            .fold(0.0, f64::max)
+    }
+
     /// Kill a node (paper §2.5 "worker process failures", whole-node
     /// variant): its resident objects vanish, its queued work is rerouted
     /// to live nodes, its workers exit, and the lineage of every lost
@@ -821,10 +1314,10 @@ impl Runtime {
     ) -> Result<RecoveryReport, DfError> {
         let sh = &self.shared;
         let _kill = sh.kill_lock.lock().unwrap();
-        if node >= sh.n_nodes {
+        if node >= sh.n_provisioned() {
             return Err(DfError::Recovery(format!(
                 "no such node {node} (cluster has {})",
-                sh.n_nodes
+                sh.n_provisioned()
             )));
         }
         if sh.store.is_dead(node) {
@@ -840,6 +1333,11 @@ impl Runtime {
         let lost = sh.store.fail_node(node);
         sh.nodes_killed.fetch_add(1, Ordering::Relaxed);
         let now = sh.epoch.elapsed().as_secs_f64();
+        sh.membership.lock().unwrap().push(MembershipEvent {
+            at_secs: now,
+            node,
+            joined: false,
+        });
         sh.events.lock().unwrap().push(TaskEvent {
             name: format!("node-killed-{node}"),
             job, // attributed to the triggering job (ROOT for manual kills)
@@ -990,39 +1488,7 @@ impl Runtime {
         let mut st = sh.state.lock().unwrap();
         let mut queue_reroutes = 0usize;
         if let Some(node) = dead_node {
-            let mut drained: Vec<u64> = st.pinned[node]
-                .drain()
-                .flat_map(|(_, q)| q.into_iter())
-                .collect();
-            drained.extend(
-                st.local[node]
-                    .drain()
-                    .flat_map(|(_, q)| q.into_iter().map(|(tid, _)| tid)),
-            );
-            for tid in drained {
-                let Some((job, placement, arg_ids)) =
-                    st.pending.get_mut(&tid).map(|t| {
-                        t.recovery = true; // surfaces on TaskEvent::recovery
-                        (
-                            t.spec.job,
-                            t.spec.placement,
-                            t.spec
-                                .args
-                                .iter()
-                                .map(|a| a.id)
-                                .collect::<Vec<ObjectId>>(),
-                        )
-                    })
-                else {
-                    continue;
-                };
-                // leaving the dead node's queue, re-entering a live one
-                if let Some(j) = st.jobs.get_mut(&job) {
-                    j.queued = j.queued.saturating_sub(1);
-                }
-                st.route(sh, tid, job, placement, &arg_ids);
-                queue_reroutes += 1;
-            }
+            queue_reroutes = st.reroute_node_queues(sh, node, true);
         }
         // Poison unreconstructables and hand their scheduler waiters to
         // dispatch (mirrors finish_task): consumers observe the terminal
@@ -1291,6 +1757,12 @@ fn pick_task(
     stalled: &mut bool,
     job_stalled: &mut bool,
 ) -> Pick {
+    // A draining node is offered nothing — not even pinned work (its
+    // queues were rerouted when the drain began); its workers idle until
+    // retirement flips the dead flag and they exit.
+    if sh.store.is_draining(node) {
+        return Pick::Idle;
+    }
     // Pinned work always runs: draining it is what relieves the memory
     // pressure that admission control reacts to. Only the in-flight cap
     // gates it (the cap always drains — running tasks complete without
@@ -1308,19 +1780,20 @@ fn pick_task(
         if q.is_empty() {
             st.pinned[node].remove(&job);
         }
-        st.charge_dispatch(job);
+        st.charge_dispatch(job, node);
         *stalled = false;
         *job_stalled = false;
         return Pick::Run(tid);
     }
 
     // Node-level admission gate: engaged while this node is over its
-    // watermark and some other *live* node has headroom. Dead nodes
-    // report zero residency and must not count as available headroom.
+    // watermark and some other *available* node has headroom. Dead and
+    // draining nodes cannot take the declined work and must not count
+    // as headroom.
     let over = sh.store.resident_on(node) > sh.admission_limit;
     let gated = over
-        && (0..sh.n_nodes).any(|n| {
-            !sh.store.is_dead(n)
+        && (0..sh.n_provisioned()).any(|n| {
+            sh.store.is_available(n)
                 && sh.store.resident_on(n) <= sh.admission_limit
         });
     // Per-job residency snapshot, taken only under the gate so the table
@@ -1390,7 +1863,7 @@ fn pick_task(
         if q.is_empty() {
             st.local[node].remove(&job);
         }
-        st.charge_dispatch(job);
+        st.charge_dispatch(job, node);
         *stalled = false;
         note_job_stall(sh, byte_skipped, job_stalled);
         return Pick::Run(tid);
@@ -1416,7 +1889,7 @@ fn pick_task(
         if q.is_empty() {
             st.shared.remove(&job);
         }
-        st.charge_dispatch(job);
+        st.charge_dispatch(job, node);
         *stalled = false;
         note_job_stall(sh, byte_skipped, job_stalled);
         return Pick::Run(tid);
@@ -1461,7 +1934,7 @@ fn pick_task(
         if q.is_empty() {
             st.local[n].remove(&job);
         }
-        st.charge_dispatch(job);
+        st.charge_dispatch(job, node);
         *stalled = false;
         note_job_stall(sh, byte_skipped, job_stalled);
         return Pick::Run(tid);
@@ -1516,13 +1989,13 @@ fn fetch_args(sh: &Shared, task: &QueuedTask, node: usize) -> Fetch {
 /// *un-resolve* an argument between dispatch and fetch). Used by the
 /// lost-argument fetch path and by workers whose node died mid-task; in
 /// both cases no retry is consumed — the failure is the system's, not
-/// the task's.
-fn park_task(sh: &Arc<Shared>, mut task: QueuedTask) {
+/// the task's. `node` is the worker node releasing the execution slot.
+fn park_task(sh: &Arc<Shared>, node: usize, mut task: QueuedTask) {
     let tid = sh.next_task_id.fetch_add(1, Ordering::Relaxed);
     let job = task.spec.job;
     let arg_ids: Vec<ObjectId> = task.spec.args.iter().map(|a| a.id).collect();
     let mut st = sh.state.lock().unwrap();
-    st.dispatch_done(job); // the task is no longer executing
+    st.dispatch_done(job, node); // the task is no longer executing
     if st.shutdown {
         task.handle.complete(Err("runtime shut down".into()));
         st.outstanding = st.outstanding.saturating_sub(1);
@@ -1549,7 +2022,11 @@ fn park_task(sh: &Arc<Shared>, mut task: QueuedTask) {
     sh.work_ready.notify_all();
 }
 
-fn worker_loop(sh: Arc<Shared>, node: usize) {
+/// One worker slot of a node *incarnation*: `generation` is the store
+/// generation the slot was spawned under. When the node dies — or is
+/// retired and later re-added, bumping the generation — the slot exits;
+/// a fresh incarnation runs its own pool.
+fn worker_loop(sh: Arc<Shared>, node: usize, generation: u64) {
     let mut stalled = false;
     let mut job_stalled = false;
     loop {
@@ -1561,8 +2038,11 @@ fn worker_loop(sh: Arc<Shared>, node: usize) {
                 if sh.stop.load(Ordering::SeqCst) {
                     return;
                 }
-                if sh.store.is_dead(node) {
-                    // the node was killed: this worker's process is gone
+                if sh.store.is_dead(node)
+                    || sh.store.node_generation(node) != generation
+                {
+                    // killed or retired (and possibly re-added as a new
+                    // incarnation): this worker's process is gone
                     return;
                 }
                 match pick_task(&sh, &mut st, node, &mut stalled, &mut job_stalled) {
@@ -1585,7 +2065,7 @@ fn worker_loop(sh: Arc<Shared>, node: usize) {
         // blocks on a lost object, so recovery cannot wedge the slot) ---
         let fetched = fetch_args(&sh, &task, node);
         if matches!(fetched, Fetch::Lost) {
-            park_task(&sh, task);
+            park_task(&sh, node, task);
             continue;
         }
 
@@ -1604,12 +2084,15 @@ fn worker_loop(sh: Arc<Shared>, node: usize) {
         };
         let end = sh.epoch.elapsed().as_secs_f64();
 
-        // The node died while the task ran: its results die with the
+        // The node died (or was retired and re-added as a fresh
+        // incarnation) while the task ran: its results die with the
         // process. Re-execute on a live node without consuming a retry.
-        if sh.store.is_dead(node) {
+        if sh.store.is_dead(node)
+            || sh.store.node_generation(node) != generation
+        {
             sh.tasks_rerouted.fetch_add(1, Ordering::Relaxed);
             task.recovery = true;
-            park_task(&sh, task);
+            park_task(&sh, node, task);
             continue;
         }
 
@@ -1642,12 +2125,14 @@ fn worker_loop(sh: Arc<Shared>, node: usize) {
                     }
                 } else {
                     // a commit refused mid-loop means the node was killed
-                    // between outputs: what landed before the kill is
-                    // already marked Lost, the rest dies here — the
-                    // re-execution recommits everything on a live node
+                    // (or superseded by a newer incarnation) between
+                    // outputs: what landed before the kill is already
+                    // marked Lost, the rest dies here — the re-execution
+                    // recommits everything on a live node
                     let mut died_mid_commit = false;
                     for (id, data) in task.outputs.iter().zip(outs) {
-                        if !sh.store.commit(*id, node, data) {
+                        if !sh.store.commit_from(*id, node, generation, data)
+                        {
                             died_mid_commit = true;
                             break;
                         }
@@ -1655,12 +2140,12 @@ fn worker_loop(sh: Arc<Shared>, node: usize) {
                     if died_mid_commit {
                         sh.tasks_rerouted.fetch_add(1, Ordering::Relaxed);
                         task.recovery = true;
-                        park_task(&sh, task);
+                        park_task(&sh, node, task);
                         continue;
                     }
                     task.handle.complete(Ok(()));
                 }
-                finish_task(&sh, task.spec.job, &task.outputs);
+                finish_task(&sh, node, task.spec.job, &task.outputs);
             }
             Err(msg) => {
                 if task.attempt < task.spec.max_retries {
@@ -1671,7 +2156,7 @@ fn worker_loop(sh: Arc<Shared>, node: usize) {
                         task.spec.args.iter().map(|a| a.id).collect();
                     let (job, placement) = (task.spec.job, task.spec.placement);
                     let mut st = sh.state.lock().unwrap();
-                    st.dispatch_done(job);
+                    st.dispatch_done(job, node);
                     st.route(&sh, tid, job, placement, &arg_ids);
                     st.pending.insert(tid, task);
                     drop(st);
@@ -1688,19 +2173,20 @@ fn worker_loop(sh: Arc<Shared>, node: usize) {
                 for oid in &task.outputs {
                     sh.store.fail(*oid);
                 }
-                finish_task(&sh, task.spec.job, &task.outputs);
+                finish_task(&sh, node, task.spec.job, &task.outputs);
             }
         }
     }
 }
 
-/// Post-completion bookkeeping: release the job's in-flight slot, route
-/// tasks whose last argument just resolved (the event-driven dispatch
-/// point — locality is computed here, when the bytes' location is known)
-/// and update quiescence accounting.
-fn finish_task(sh: &Arc<Shared>, job: JobId, outputs: &[ObjectId]) {
+/// Post-completion bookkeeping: release the job's in-flight slot (and
+/// `node`'s execution slot), route tasks whose last argument just
+/// resolved (the event-driven dispatch point — locality is computed
+/// here, when the bytes' location is known) and update quiescence
+/// accounting.
+fn finish_task(sh: &Arc<Shared>, node: usize, job: JobId, outputs: &[ObjectId]) {
     let mut st = sh.state.lock().unwrap();
-    st.dispatch_done(job);
+    st.dispatch_done(job, node);
     let mut now_runnable: Vec<u64> = Vec::new();
     for oid in outputs {
         if let Some(waiters) = st.waiting.remove(oid) {

@@ -30,6 +30,18 @@
 //! dead node are discarded — a dead process cannot publish results. A
 //! commit-sequence hook ([`Store::set_commit_hook`]) lets the chaos
 //! harness trigger deterministic failures "after the n-th commit".
+//!
+//! **Elastic membership**: the store is sized for `max_nodes` slots up
+//! front; slots beyond the initial fleet start retired (dead) and are
+//! activated by [`Store::revive_node`] when the runtime hot-joins a
+//! worker. Each activation bumps the slot's **generation** counter, so a
+//! re-added node id is a fresh incarnation: commits from workers of an
+//! older incarnation ([`Store::commit_from`]) are discarded exactly like
+//! a dead node's. A **draining** node (graceful decommission) keeps its
+//! data fetchable and its running tasks committing, but is skipped by
+//! locality routing; [`Store::evacuate_node`] then migrates its resident
+//! objects to live peers so [`Store::retire_node`] loses nothing —
+//! contrast with `fail_node`, which models a crash.
 
 use std::collections::HashMap;
 use std::fs;
@@ -162,6 +174,9 @@ pub struct StoreCounters {
     /// Resident objects dropped by node failures / chaos object loss.
     pub objects_lost: AtomicU64,
     pub lost_bytes: AtomicU64,
+    /// Objects migrated off draining nodes ([`Store::evacuate_node`]).
+    pub drain_migrations: AtomicU64,
+    pub drain_migrated_bytes: AtomicU64,
 }
 
 /// Snapshot of store statistics.
@@ -184,6 +199,10 @@ pub struct StoreStats {
     /// Resident objects dropped by node failures / chaos object loss.
     pub objects_lost: u64,
     pub lost_bytes: u64,
+    /// Objects (and bytes) migrated off draining nodes during graceful
+    /// decommissions — drained data is moved, never lost.
+    pub drain_migrations: u64,
+    pub drain_migrated_bytes: u64,
 }
 
 /// The whole-cluster object store (shards are per-node byte budgets, but
@@ -196,9 +215,17 @@ pub struct Store {
     /// Lock-free mirror of per-node resident bytes (read by the
     /// scheduler's admission control on every dispatch decision).
     resident_gauge: Vec<AtomicU64>,
-    /// Per-node death flags ([`Store::fail_node`]); commits attributed to
-    /// a dead node are discarded.
+    /// Per-node death flags ([`Store::fail_node`] / [`Store::retire_node`]);
+    /// commits attributed to a dead node are discarded. Elastic slots
+    /// beyond the initial fleet start dead until revived.
     dead: Vec<AtomicBool>,
+    /// Per-node draining flags: a draining node runs what it already has
+    /// but receives nothing new, and locality routing skips it.
+    draining: Vec<AtomicBool>,
+    /// Per-node incarnation counters, bumped by [`Store::revive_node`]:
+    /// a re-added node id is a fresh node, and commits from workers of an
+    /// older incarnation are discarded ([`Store::commit_from`]).
+    generation: Vec<AtomicU64>,
     spill_dir: PathBuf,
     next_id: AtomicU64,
     next_seq: AtomicU64,
@@ -225,18 +252,34 @@ struct Table {
 
 impl Store {
     pub fn new(n_nodes: usize, capacity_per_node: u64, spill_dir: PathBuf) -> Arc<Self> {
+        Self::new_elastic(n_nodes, n_nodes, capacity_per_node, spill_dir)
+    }
+
+    /// A store with `max_nodes` slots of which the first `initial_live`
+    /// start active; the rest are retired until [`Store::revive_node`]
+    /// activates them (elastic fleets).
+    pub fn new_elastic(
+        max_nodes: usize,
+        initial_live: usize,
+        capacity_per_node: u64,
+        spill_dir: PathBuf,
+    ) -> Arc<Self> {
         fs::create_dir_all(&spill_dir).expect("create spill dir");
         Arc::new(Store {
             table: Mutex::new(Table {
                 entries: HashMap::new(),
-                resident: vec![0; n_nodes],
-                resident_job: vec![HashMap::new(); n_nodes],
+                resident: vec![0; max_nodes],
+                resident_job: vec![HashMap::new(); max_nodes],
                 watchers: HashMap::new(),
             }),
             ready: Condvar::new(),
-            node_capacity: vec![capacity_per_node; n_nodes],
-            resident_gauge: (0..n_nodes).map(|_| AtomicU64::new(0)).collect(),
-            dead: (0..n_nodes).map(|_| AtomicBool::new(false)).collect(),
+            node_capacity: vec![capacity_per_node; max_nodes],
+            resident_gauge: (0..max_nodes).map(|_| AtomicU64::new(0)).collect(),
+            dead: (0..max_nodes)
+                .map(|n| AtomicBool::new(n >= initial_live))
+                .collect(),
+            draining: (0..max_nodes).map(|_| AtomicBool::new(false)).collect(),
+            generation: (0..max_nodes).map(|_| AtomicU64::new(0)).collect(),
             spill_dir,
             next_id: AtomicU64::new(1),
             next_seq: AtomicU64::new(0),
@@ -331,12 +374,41 @@ impl Store {
     /// the commit was discarded because `node` is dead — the caller's
     /// process "died" mid-commit and must re-execute elsewhere.
     pub fn commit(&self, id: ObjectId, node: usize, data: Vec<u8>) -> bool {
+        self.commit_inner(id, node, None, data)
+    }
+
+    /// [`Store::commit`] from a worker of a specific node incarnation:
+    /// discarded when `node` is dead *or* has been re-added since the
+    /// worker was spawned (generation mismatch) — a stale incarnation's
+    /// results must not land on its successor.
+    pub fn commit_from(
+        &self,
+        id: ObjectId,
+        node: usize,
+        generation: u64,
+        data: Vec<u8>,
+    ) -> bool {
+        self.commit_inner(id, node, Some(generation), data)
+    }
+
+    fn commit_inner(
+        &self,
+        id: ObjectId,
+        node: usize,
+        expected_generation: Option<u64>,
+        data: Vec<u8>,
+    ) -> bool {
         let size = data.len() as u64;
         let job;
         let fired: Vec<ReadyCallback> = {
             let mut t = self.table.lock().unwrap();
             if self.dead[node].load(Ordering::Relaxed) {
                 return false;
+            }
+            if let Some(gen) = expected_generation {
+                if self.generation[node].load(Ordering::Relaxed) != gen {
+                    return false;
+                }
             }
             // The caller may have dropped every ObjectRef before the task
             // committed (fire-and-forget side-effect tasks): the result is
@@ -471,8 +543,8 @@ impl Store {
     /// Node holding the most committed bytes among `ids` (Ray-style
     /// locality for `Placement::Any`). `None` when no id has committed
     /// data — the caller falls back to the shared no-locality queue.
-    /// Dead nodes never win (they cannot run the task); ties resolve to
-    /// the lowest node index.
+    /// Dead and draining nodes never win (they cannot take the task);
+    /// ties resolve to the lowest node index.
     pub fn locality_node(&self, ids: &[ObjectId]) -> Option<usize> {
         let t = self.table.lock().unwrap();
         let mut per_node: HashMap<usize, u64> = HashMap::new();
@@ -483,7 +555,7 @@ impl Store {
                     Slot::Spilled(_, size) => *size,
                     _ => continue,
                 };
-                if self.dead[e.node].load(Ordering::Relaxed) {
+                if !self.is_available(e.node) {
                     continue;
                 }
                 *per_node.entry(e.node).or_default() += bytes;
@@ -563,9 +635,119 @@ impl Store {
         ids.len()
     }
 
-    /// Whether `node` has been killed ([`Store::fail_node`]).
+    /// Whether `node` has been killed ([`Store::fail_node`]) or retired
+    /// ([`Store::retire_node`]) — or never activated, for elastic slots.
     pub fn is_dead(&self, node: usize) -> bool {
         self.dead[node].load(Ordering::Relaxed)
+    }
+
+    /// Whether `node` is being gracefully decommissioned.
+    pub fn is_draining(&self, node: usize) -> bool {
+        self.draining[node].load(Ordering::Relaxed)
+    }
+
+    /// Whether `node` may be offered new work: live and not draining.
+    pub fn is_available(&self, node: usize) -> bool {
+        !self.is_dead(node) && !self.is_draining(node)
+    }
+
+    /// Current incarnation of `node` (bumped per [`Store::revive_node`]).
+    pub fn node_generation(&self, node: usize) -> u64 {
+        self.generation[node].load(Ordering::Relaxed)
+    }
+
+    /// Flip `node`'s draining flag (set by the scheduler under its state
+    /// lock so routing decisions and the flag cannot interleave).
+    pub fn set_draining(&self, node: usize, on: bool) {
+        self.draining[node].store(on, Ordering::SeqCst);
+    }
+
+    /// (Re)activate `node` as a fresh incarnation: clears the dead and
+    /// draining flags and bumps the generation so anything left of a
+    /// previous incarnation (exited workers, stale commits) cannot be
+    /// mistaken for the new node's. Returns the new generation.
+    pub fn revive_node(&self, node: usize) -> u64 {
+        let gen = self.generation[node].fetch_add(1, Ordering::SeqCst) + 1;
+        self.draining[node].store(false, Ordering::SeqCst);
+        self.dead[node].store(false, Ordering::SeqCst);
+        gen
+    }
+
+    /// Retire a drained node: it leaves the fleet without losing
+    /// anything — the caller has already rerouted its queues, waited out
+    /// its running tasks and evacuated its resident objects. Spilled
+    /// copies stay fetchable (spill stands in for durable storage).
+    pub fn retire_node(&self, node: usize) {
+        self.dead[node].store(true, Ordering::SeqCst);
+        self.ready.notify_all();
+    }
+
+    /// Migrate every object resident in `node`'s memory to the live,
+    /// non-draining peer with the most free capacity, spilling on the
+    /// receiving side if it overflows. Returns `(objects, bytes)` moved.
+    /// The graceful-decommission data path: nothing is ever `Lost`.
+    pub fn evacuate_node(&self, node: usize) -> (usize, u64) {
+        use std::cmp::Reverse;
+        let mut t = self.table.lock().unwrap();
+        let ids: Vec<ObjectId> = t
+            .entries
+            .iter()
+            .filter(|(_, e)| {
+                e.node == node && matches!(e.slot, Slot::Memory(_))
+            })
+            .map(|(id, _)| *id)
+            .collect();
+        // Max-heap of (free capacity, node), updated as objects land, so
+        // target selection is O(log nodes) per object — the table lock
+        // is held for the whole pass and must not hide an
+        // O(objects × nodes) scan. Ties go to the lowest index.
+        let mut targets: std::collections::BinaryHeap<(u64, Reverse<usize>)> =
+            (0..self.node_capacity.len())
+                .filter(|&n| n != node && self.is_available(n))
+                .map(|n| {
+                    (
+                        self.node_capacity[n].saturating_sub(t.resident[n]),
+                        Reverse(n),
+                    )
+                })
+                .collect();
+        let mut moved = 0usize;
+        let mut moved_bytes = 0u64;
+        let mut touched: Vec<usize> = Vec::new();
+        for id in ids {
+            let Some(entry) = t.entries.get_mut(&id) else { continue };
+            let Slot::Memory(d) = &entry.slot else { continue };
+            let bytes = d.len() as u64;
+            let Some((free, Reverse(target))) = targets.pop() else {
+                break;
+            };
+            entry.node = target;
+            let job = entry.job;
+            self.sub_resident(&mut t, node, job, bytes);
+            self.add_resident(&mut t, target, job, bytes);
+            targets.push((free.saturating_sub(bytes), Reverse(target)));
+            moved += 1;
+            moved_bytes += bytes;
+            if !touched.contains(&target) {
+                touched.push(target);
+            }
+        }
+        for n in touched {
+            self.maybe_spill(&mut t, n);
+        }
+        drop(t);
+        self.counters
+            .drain_migrations
+            .fetch_add(moved as u64, Ordering::Relaxed);
+        self.counters
+            .drain_migrated_bytes
+            .fetch_add(moved_bytes, Ordering::Relaxed);
+        (moved, moved_bytes)
+    }
+
+    /// Store byte budget of `node` (residency-watermark denominator).
+    pub fn capacity_of(&self, node: usize) -> u64 {
+        self.node_capacity[node]
     }
 
     /// Blocking fetch from `requesting_node`; accounts a transfer when the
@@ -819,6 +1001,14 @@ impl Store {
                 .load(Ordering::Relaxed),
             objects_lost: self.counters.objects_lost.load(Ordering::Relaxed),
             lost_bytes: self.counters.lost_bytes.load(Ordering::Relaxed),
+            drain_migrations: self
+                .counters
+                .drain_migrations
+                .load(Ordering::Relaxed),
+            drain_migrated_bytes: self
+                .counters
+                .drain_migrated_bytes
+                .load(Ordering::Relaxed),
         }
     }
 }
@@ -1104,6 +1294,49 @@ mod tests {
         assert_eq!(s.commit_count(), 1);
         s.put(0, vec![3]);
         assert_eq!(seen.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn elastic_slots_start_retired_and_revive_with_fresh_generations() {
+        let dir = std::env::temp_dir().join(format!(
+            "exoshuffle-store-elastic-{}",
+            std::process::id()
+        ));
+        let s = Store::new_elastic(3, 1, u64::MAX, dir);
+        assert!(!s.is_dead(0));
+        assert!(s.is_dead(1) && s.is_dead(2), "elastic slots start retired");
+        assert_eq!(s.node_generation(1), 0);
+        assert_eq!(s.revive_node(1), 1);
+        assert!(s.is_available(1));
+        // a commit from the previous incarnation is discarded…
+        let r = s.declare(1, JobId::ROOT);
+        assert!(!s.commit_from(r.id, 1, 0, vec![9u8; 4]));
+        // …while the current incarnation commits normally
+        assert!(s.commit_from(r.id, 1, 1, vec![7u8; 4]));
+        assert_eq!(*s.get(r.id, 1).unwrap(), vec![7u8; 4]);
+    }
+
+    #[test]
+    fn evacuate_then_retire_loses_nothing() {
+        let s = test_store(2, u64::MAX);
+        let a = s.put(0, vec![1u8; 64]);
+        let b = s.put(0, vec![2u8; 32]);
+        s.set_draining(0, true);
+        assert!(!s.is_available(0) && !s.is_dead(0));
+        // draining node no longer wins locality despite holding the bytes
+        assert_eq!(s.locality_node(&[a.id, b.id]), None);
+        let (moved, bytes) = s.evacuate_node(0);
+        assert_eq!((moved, bytes), (2, 96));
+        assert_eq!(s.resident_on(0), 0);
+        assert_eq!(s.resident_on(1), 96);
+        s.retire_node(0);
+        assert!(s.is_dead(0));
+        // both objects still fetchable, nothing Lost
+        assert_eq!(*s.get(a.id, 1).unwrap(), vec![1u8; 64]);
+        assert_eq!(*s.get(b.id, 1).unwrap(), vec![2u8; 32]);
+        assert_eq!(s.stats().objects_lost, 0);
+        assert_eq!(s.stats().drain_migrations, 2);
+        assert_eq!(s.stats().drain_migrated_bytes, 96);
     }
 
     #[test]

@@ -29,6 +29,13 @@
 //! entry point; [`shuffle::ShuffleJob::run`] remains the one-shot path
 //! (now a thin wrapper over a throwaway service).
 //!
+//! It is also **elastic**: [`distfut::Runtime::add_node`] hot-joins
+//! workers and [`distfut::Runtime::drain_node`] gracefully decommissions
+//! them (migrate, then retire — nothing lost), and the cost-aware
+//! [`service::Autoscaler`] grows the fleet under queue pressure and
+//! shrinks it when idle, pricing every run against a pinned fleet with
+//! the [`cost`] model.
+//!
 //! The compute hot-spot (sorting, partitioning and merging record arrays;
 //! the paper's 300-line C++ component) is implemented as Pallas/JAX kernels
 //! AOT-compiled to HLO and executed from Rust via PJRT ([`runtime`], the
@@ -81,7 +88,8 @@ pub mod prelude {
     pub use crate::runtime::Backend;
     pub use crate::s3sim::S3;
     pub use crate::service::{
-        JobHandle, JobService, JobStatus, ServiceConfig,
+        Autoscaler, AutoscalerConfig, JobHandle, JobService, JobStatus,
+        ScaleEvent, ServiceConfig,
     };
     pub use crate::shuffle::{
         JobReport, ShuffleJob, ShuffleStrategy, SimpleShuffle, StageTiming,

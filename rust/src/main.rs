@@ -16,11 +16,15 @@ use std::path::PathBuf;
 use exoshuffle::config::{parse_bytes, Config};
 use exoshuffle::coordinator::JobSpec;
 use exoshuffle::cost::{CostModel, RunProfile};
-use exoshuffle::distfut::chaos::ChaosPlan;
+use exoshuffle::distfut::chaos::{ChaosEvent, ChaosPlan};
 use exoshuffle::runtime::Backend;
-use exoshuffle::service::{JobService, ServiceConfig};
+use exoshuffle::service::{
+    Autoscaler, AutoscalerConfig, JobService, ServiceConfig,
+};
 use exoshuffle::shuffle::{list_strategies, strategy_by_name, ShuffleJob};
-use exoshuffle::sim::{estimate_multi_job, simulate, SimConfig, SimStrategy};
+use exoshuffle::sim::{
+    estimate_autoscale, estimate_multi_job, simulate, SimConfig, SimStrategy,
+};
 use exoshuffle::util::{human_bytes, human_secs};
 
 fn main() {
@@ -37,7 +41,8 @@ fn main() {
 
 /// Flags that stand alone (bare `--flag` means `--flag true`); all other
 /// flags require a value.
-const BOOLEAN_FLAGS: &[&str] = &["no-backpressure", "list-strategies", "events"];
+const BOOLEAN_FLAGS: &[&str] =
+    &["no-backpressure", "list-strategies", "events", "autoscale"];
 
 /// Parse `--key value` pairs after the subcommand. A flag listed in
 /// [`BOOLEAN_FLAGS`] may appear bare; a value flag with a missing value
@@ -108,6 +113,9 @@ COMMANDS:
            --chaos-kill N@C    kill node N after the C-th commit of the
                                sort (lineage recovery demo; repeatable
                                via comma: 1@10,2@40)
+           --scale-event N@C   scale the fleet to N available nodes
+                               after the C-th commit (deterministic
+                               elastic event; comma-repeatable)
   serve  run N concurrent jobs through one shared JobService
            --jobs 4            number of concurrent jobs
            --mix a,b,c         strategies assigned round-robin
@@ -117,11 +125,22 @@ COMMANDS:
            --stagger-ms 0      delay between submissions
            --weights 1,2,...   per-job fair-share weights (round-robin)
            --max-in-flight N   per-job quota on executing tasks
+           --autoscale         start at --min-nodes and let the
+                               cost-aware autoscaler grow/shrink the
+                               fleet (node-count timeline + dollars
+                               saved vs a fleet pinned at --max-nodes)
+           --min-nodes 1       autoscaler floor
+           --max-nodes W       autoscaler ceiling (default --workers)
            --backend xla|native
   sim    simulate the full 100 TB benchmark (Table 1 / Figure 1)
            --runs 3            number of runs (Table 1 rows)
            --strategy NAME     topology to replay (default two-stage-merge)
            --jobs N            also estimate N-tenant contention
+           --autoscale         elastic-fleet mode: replay the run under
+                               a scaling fleet (capacity ramp + straggler
+                               drains) and price it vs the pinned fleet
+           --min-nodes W/4     elastic ramp floor
+           --provision-secs 60 node provisioning cadence of the ramp
            --fig1-csv FILE     write Figure 1 utilization CSV
   cost   print the Table 2 cost breakdown
            --hours 1.4939      job completion hours
@@ -172,6 +191,50 @@ fn parse_chaos_kills(value: &str) -> Result<ChaosPlan, String> {
         plan = plan.kill_node(node, commits);
     }
     Ok(plan)
+}
+
+/// Parse `--scale-event` values onto `plan`: `NODES@COMMITS`, comma-
+/// separated (e.g. `6@100,2@400` — grow to 6 available nodes after
+/// commit 100, shrink to 2 after commit 400).
+fn parse_scale_events(
+    value: &str,
+    mut plan: ChaosPlan,
+) -> Result<ChaosPlan, String> {
+    for part in value.split(',') {
+        let (nodes, commits) = part.split_once('@').ok_or_else(|| {
+            format!("--scale-event wants NODES@COMMITS, got '{part}'")
+        })?;
+        let nodes: usize = nodes
+            .trim()
+            .parse()
+            .map_err(|_| format!("bad node count '{nodes}' in --scale-event"))?;
+        let commits: u64 = commits.trim().parse().map_err(|_| {
+            format!("bad commit count '{commits}' in --scale-event")
+        })?;
+        plan = plan.scale_to(nodes, commits);
+    }
+    Ok(plan)
+}
+
+/// Render a live-node-count timeline as a fixed-width strip, one digit
+/// per time bin (`#` above 9 nodes, space before the first sample).
+fn render_node_strip(timeline: &[(f64, usize)], end: f64, bins: usize) -> String {
+    let mut out = String::with_capacity(bins);
+    let end = end.max(1e-9);
+    for b in 0..bins {
+        let t = (b as f64 + 0.5) / bins as f64 * end;
+        let count = timeline
+            .iter()
+            .take_while(|&&(at, _)| at <= t)
+            .last()
+            .map(|&(_, n)| n);
+        out.push(match count {
+            None => ' ',
+            Some(n) if n > 9 => '#',
+            Some(n) => std::char::from_digit(n as u32, 10).unwrap_or('#'),
+        });
+    }
+    out
 }
 
 fn cmd_sort(flags: &HashMap<String, String>) -> anyhow::Result<()> {
@@ -234,10 +297,39 @@ fn cmd_sort(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let mut job = ShuffleJob::new(spec.clone())
         .strategy_arc(strategy)
         .backend(backend);
-    if let Some(plan) = flags.get("chaos-kill") {
-        job = job.chaos(parse_chaos_kills(plan).map_err(|e| anyhow::anyhow!(e))?);
+    let mut plan = ChaosPlan::new();
+    if let Some(kills) = flags.get("chaos-kill") {
+        plan = parse_chaos_kills(kills).map_err(|e| anyhow::anyhow!(e))?;
     }
-    let report = job.run()?;
+    if let Some(scales) = flags.get("scale-event") {
+        plan = parse_scale_events(scales, plan)
+            .map_err(|e| anyhow::anyhow!(e))?;
+    }
+    let scale_ceiling = plan
+        .triggers
+        .iter()
+        .map(|t| match t.event {
+            ChaosEvent::ScaleTo(n) => n,
+            _ => 0,
+        })
+        .max()
+        .unwrap_or(0);
+    if !plan.triggers.is_empty() {
+        job = job.chaos(plan);
+    }
+    // a --scale-event above --workers needs fleet headroom the one-shot
+    // run() wrapper (whose fleet is pinned at the spec's worker count)
+    // cannot provide
+    let report = if scale_ceiling > spec.n_workers() {
+        let mut cfg = ServiceConfig::for_spec(&spec);
+        cfg.max_nodes = scale_ceiling;
+        let service = JobService::new(cfg);
+        let result = service.submit(job).and_then(|h| h.wait());
+        service.shutdown();
+        result?
+    } else {
+        job.run()?
+    };
     println!("generate:     {:>8.2}s", report.gen_secs);
     for stage in &report.stages {
         println!("{:<13} {:>8.2}s", format!("{}:", stage.name), stage.secs);
@@ -274,6 +366,20 @@ fn cmd_sort(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             report.recovery.tasks_resubmitted,
             report.recovery.tasks_rerouted,
             report.recovery.objects_unrecoverable,
+        );
+    }
+    if report.node_timeline.len() > 1 {
+        let end = report
+            .events
+            .iter()
+            .map(|e| e.end)
+            .chain(report.node_timeline.iter().map(|&(t, _)| t))
+            .fold(0.0f64, f64::max);
+        println!(
+            "nodes over time: |{}| ({} at end, {} migrated in drains)",
+            render_node_strip(&report.node_timeline, end, 48),
+            report.node_timeline.last().map(|&(_, n)| n).unwrap_or(0),
+            report.store.drain_migrations,
         );
     }
     println!(
@@ -404,14 +510,61 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         &artifacts,
     )?;
 
+    let autoscale = flags.get("autoscale").map(|v| v == "true") == Some(true);
+    let min_nodes: usize = flags
+        .get("min-nodes")
+        .map(|v| v.parse())
+        .transpose()?
+        .unwrap_or(1)
+        .max(1);
+    let max_nodes: usize = flags
+        .get("max-nodes")
+        .map(|v| v.parse())
+        .transpose()?
+        .unwrap_or(workers);
+    if autoscale && max_nodes < workers {
+        // jobs plan for --workers nodes and would be rejected at
+        // submission anyway; fail here with the clearer message rather
+        // than silently raising the user's spend ceiling
+        return Err(anyhow::anyhow!(
+            "--max-nodes {max_nodes} is below --workers {workers}; jobs \
+             plan for {workers} workers, so the fleet ceiling cannot be \
+             smaller"
+        ));
+    }
+
     let spec = JobSpec::scaled(size, workers);
-    let service = JobService::new(ServiceConfig::for_spec(&spec));
-    println!(
-        "serving {jobs} concurrent jobs of {} each on a shared {workers}-node \
-         runtime (mix: {})",
-        human_bytes(size),
-        mix.join(","),
-    );
+    let mut svc_cfg = ServiceConfig::for_spec(&spec);
+    if autoscale {
+        svc_cfg.n_nodes = min_nodes;
+        svc_cfg.max_nodes = max_nodes;
+    }
+    let service = JobService::new(svc_cfg);
+    let scaler = autoscale.then(|| {
+        Autoscaler::start(
+            service.runtime().clone(),
+            AutoscalerConfig {
+                min_nodes,
+                max_nodes,
+                ..AutoscalerConfig::default()
+            },
+        )
+    });
+    if autoscale {
+        println!(
+            "serving {jobs} concurrent jobs of {} each on an elastic \
+             {min_nodes}..{max_nodes}-node runtime (mix: {})",
+            human_bytes(size),
+            mix.join(","),
+        );
+    } else {
+        println!(
+            "serving {jobs} concurrent jobs of {} each on a shared \
+             {workers}-node runtime (mix: {})",
+            human_bytes(size),
+            mix.join(","),
+        );
+    }
     let mut handles = Vec::with_capacity(jobs);
     for i in 0..jobs {
         let strategy_name = &mix[i % mix.len()];
@@ -514,6 +667,65 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         stats.backpressure_stalls,
         stats.job_backpressure_stalls,
     );
+    if let Some(scaler) = &scaler {
+        scaler.stop();
+        let rt = service.runtime();
+        let now = rt.now();
+        println!("\nautoscaler decisions:");
+        for e in scaler.events() {
+            println!(
+                "  t={:>6.2}s {} node {:<2} -> {} nodes  ({})",
+                e.at_secs,
+                if e.scale_up { "+join " } else { "-drain" },
+                e.node,
+                e.nodes_after,
+                e.reason,
+            );
+        }
+        println!(
+            "node count over time: |{}|",
+            render_node_strip(&rt.node_count_timeline(), now, 48)
+        );
+        // liveness-weighted: per-node averages weight by time-in-fleet,
+        // so short-lived burst nodes don't skew the cluster number
+        let events: Vec<exoshuffle::metrics::TaskEvent> = handles
+            .iter()
+            .filter_map(|h| h.report())
+            .flat_map(|r| r.events)
+            .collect();
+        let liveness = rt.node_liveness(now);
+        let fleet_util =
+            exoshuffle::metrics::fleet_utilization(&events, &liveness);
+        let per_node = exoshuffle::metrics::per_node_live_utilization(
+            &events, &liveness,
+        );
+        let live_secs: Vec<f64> = liveness
+            .iter()
+            .map(|iv| iv.iter().map(|(a, b)| b - a).sum())
+            .collect();
+        println!(
+            "fleet utilization (liveness-weighted): mean {:.1}%, \
+             median node {:.1}%",
+            fleet_util * 100.0,
+            exoshuffle::util::stats::weighted_percentile(
+                &per_node, &live_secs, 50.0
+            ) * 100.0,
+        );
+        let cost = scaler.cost_report(&CostModel::paper());
+        println!(
+            "fleet cost (paper worker rate): elastic ${:.4} vs \
+             pinned-at-{max_nodes} ${:.4} — saved ${:.4} ({:.0}%)",
+            cost.elastic_dollars,
+            cost.fixed_dollars,
+            cost.saved_dollars(),
+            cost.saved_fraction() * 100.0,
+        );
+        println!(
+            "drains migrated {} objects ({}); nothing lost",
+            stats.drain_migrations,
+            human_bytes(stats.drain_migrated_bytes),
+        );
+    }
     service.shutdown();
     if failed > 0 {
         return Err(anyhow::anyhow!("{failed} job(s) failed"));
@@ -607,6 +819,47 @@ fn cmd_sim(flags: &HashMap<String, String>) -> anyhow::Result<()> {
                 human_bytes(e.aggregate_bytes_per_sec as u64),
             );
         }
+    }
+
+    // Elastic-fleet mode: the same run under a scaling fleet
+    if flags.get("autoscale").map(|v| v == "true") == Some(true) {
+        let mut cfg = SimConfig::paper_100tb();
+        cfg.strategy = strategy;
+        let w = cfg.spec.n_workers();
+        let min_nodes: usize = flags
+            .get("min-nodes")
+            .map(|v| v.parse())
+            .transpose()?
+            .unwrap_or((w / 4).max(1));
+        let provision_secs: f64 = flags
+            .get("provision-secs")
+            .map(|v| v.parse())
+            .transpose()?
+            .unwrap_or(60.0);
+        let e = estimate_autoscale(&cfg, min_nodes, provision_secs);
+        println!(
+            "\nelastic fleet ({min_nodes}..{w} nodes, one join per \
+             {provision_secs:.0}s of backlog):"
+        );
+        println!(
+            "  nodes over time: |{}|",
+            render_node_strip(&e.node_timeline, e.total_secs, 64)
+        );
+        println!(
+            "  completion: {:.0}s elastic vs {:.0}s fixed ({:+.1}%)",
+            e.total_secs,
+            e.fixed_total_secs,
+            (e.total_secs / e.fixed_total_secs - 1.0) * 100.0,
+        );
+        println!(
+            "  worker compute: {:.0} node-s elastic vs {:.0} node-s \
+             pinned — ${:.2} vs ${:.2}, saved ${:.2}",
+            e.cost.node_seconds,
+            e.cost.fixed_node_seconds,
+            e.cost.elastic_dollars,
+            e.cost.fixed_dollars,
+            e.cost.saved_dollars(),
+        );
     }
 
     // Table 2 from run #1

@@ -12,7 +12,10 @@ pub mod utilization;
 pub use fairness::{fairness_summary, slot_share_series, FairnessSummary};
 pub use timeline::{overlap_secs, per_node_timelines, NodeTimeline};
 pub use timeseries::Timeseries;
-pub use utilization::{UtilizationReport, UtilizationSample};
+pub use utilization::{
+    fleet_utilization, per_node_live_utilization, UtilizationReport,
+    UtilizationSample,
+};
 
 use crate::distfut::JobId;
 

@@ -6,7 +6,7 @@
 //! that report and renders it as CSV (machine-readable regeneration of the
 //! figure) plus a coarse ASCII sparkline for terminals.
 
-use crate::metrics::Timeseries;
+use crate::metrics::{TaskEvent, Timeseries};
 
 /// One resource's sampled bands.
 #[derive(Clone, Debug)]
@@ -79,9 +79,73 @@ impl UtilizationReport {
     }
 }
 
+/// Per-node busy fraction over each node's *live* time on an elastic
+/// fleet. `liveness[n]` holds node `n`'s membership intervals
+/// ([`crate::distfut::Runtime::node_liveness`]); busy time is the merged
+/// union of the node's event intervals clipped to them. A node that
+/// joined halfway and then ran flat out reads 1.0 — dividing by the
+/// whole run span (the constant-fleet assumption) would halve it.
+pub fn per_node_live_utilization(
+    events: &[TaskEvent],
+    liveness: &[Vec<(f64, f64)>],
+) -> Vec<f64> {
+    liveness
+        .iter()
+        .enumerate()
+        .map(|(node, live_iv)| {
+            let live: f64 = live_iv.iter().map(|(a, b)| b - a).sum();
+            if live <= 0.0 {
+                return 0.0;
+            }
+            let mut busy_iv: Vec<(f64, f64)> = events
+                .iter()
+                .filter(|e| e.node == node && e.end > e.start)
+                .map(|e| (e.start, e.end))
+                .collect();
+            busy_iv.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let mut merged: Vec<(f64, f64)> = Vec::new();
+            for (s, e) in busy_iv {
+                match merged.last_mut() {
+                    Some(last) if s <= last.1 => last.1 = last.1.max(e),
+                    _ => merged.push((s, e)),
+                }
+            }
+            let busy: f64 = merged
+                .iter()
+                .map(|&(s, e)| {
+                    live_iv
+                        .iter()
+                        .map(|&(a, b)| (e.min(b) - s.max(a)).max(0.0))
+                        .sum::<f64>()
+                })
+                .sum();
+            (busy / live).min(1.0)
+        })
+        .collect()
+}
+
+/// Fleet-mean utilization with per-node averages **weighted by
+/// node-liveness duration** — the truthful cluster average once the
+/// fleet resizes. The unweighted mean over-counts short-lived nodes
+/// (a node live for a tenth of the run would weigh like a full-run
+/// one) and under-reports nodes diluted by the constant-fleet span
+/// assumption; see [`crate::util::stats::weighted_mean`].
+pub fn fleet_utilization(
+    events: &[TaskEvent],
+    liveness: &[Vec<(f64, f64)>],
+) -> f64 {
+    let per_node = per_node_live_utilization(events, liveness);
+    let weights: Vec<f64> = liveness
+        .iter()
+        .map(|iv| iv.iter().map(|(a, b)| b - a).sum())
+        .collect();
+    crate::util::stats::weighted_mean(&per_node, &weights)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::distfut::JobId;
 
     fn demo_report() -> UtilizationReport {
         let mut ts = Timeseries::new(2, 1.0, 4.0);
@@ -117,5 +181,56 @@ mod tests {
         let art = rep.to_ascii(10);
         assert!(art.contains("cpu"));
         assert!(art.contains('|'));
+    }
+
+    fn ev(node: usize, start: f64, end: f64) -> TaskEvent {
+        TaskEvent {
+            name: "t".into(),
+            job: JobId::ROOT,
+            node,
+            start,
+            end,
+            ok: true,
+            attempt: 0,
+            recovery: false,
+        }
+    }
+
+    #[test]
+    fn late_joining_node_reads_full_utilization_over_its_live_time() {
+        // node 0 lives the whole run [0,10] and works half of it;
+        // node 1 joins at 5, works flat out until 10
+        let events = vec![ev(0, 0.0, 5.0), ev(1, 5.0, 10.0)];
+        let liveness = vec![vec![(0.0, 10.0)], vec![(5.0, 10.0)]];
+        let per = per_node_live_utilization(&events, &liveness);
+        assert!((per[0] - 0.5).abs() < 1e-12, "{per:?}");
+        assert!(
+            (per[1] - 1.0).abs() < 1e-12,
+            "a node busy for its whole live span must read 1.0, not be \
+             diluted by the pre-join window: {per:?}"
+        );
+        // fleet mean weights by live duration: (0.5·10 + 1.0·5) / 15
+        let fleet = fleet_utilization(&events, &liveness);
+        assert!((fleet - 10.0 / 15.0).abs() < 1e-12, "{fleet}");
+    }
+
+    #[test]
+    fn drained_windows_and_overlaps_are_clipped() {
+        // node 0 live [0,4] then re-added [8,10]; a 2s task in each
+        // window plus work outside its liveness (should be clipped)
+        let events = vec![
+            ev(0, 0.0, 2.0),
+            ev(0, 5.0, 7.0), // dead window: contributes nothing
+            ev(0, 8.0, 10.0),
+            ev(0, 8.0, 10.0), // overlap merges, not double-counts
+        ];
+        let liveness = vec![vec![(0.0, 4.0), (8.0, 10.0)]];
+        let per = per_node_live_utilization(&events, &liveness);
+        // busy 2 of 4 + busy 2 of 2 → 4/6
+        assert!((per[0] - 4.0 / 6.0).abs() < 1e-12, "{per:?}");
+        // a never-live node is well defined
+        let per = per_node_live_utilization(&events, &[vec![], vec![]]);
+        assert_eq!(per, vec![0.0, 0.0]);
+        assert_eq!(fleet_utilization(&events, &[vec![]]), 0.0);
     }
 }

@@ -42,6 +42,8 @@
 //! # Ok(()) }
 //! ```
 
+pub mod autoscaler;
+
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -49,6 +51,8 @@ use std::thread::JoinHandle;
 use std::time::Duration;
 
 use anyhow::anyhow;
+
+pub use autoscaler::{Autoscaler, AutoscalerConfig, ScaleEvent};
 
 use crate::coordinator::plan::JobSpec;
 use crate::distfut::{JobId, Runtime, RuntimeOptions};
@@ -59,9 +63,14 @@ use crate::shuffle::{JobReport, ShuffleJob};
 /// Sizing of a [`JobService`]'s shared runtime.
 #[derive(Clone, Debug)]
 pub struct ServiceConfig {
-    /// Simulated worker nodes. Jobs whose spec wants more workers than
-    /// this are rejected at submission.
+    /// Simulated worker nodes the runtime *starts* with. Jobs whose spec
+    /// wants more workers than the fleet ceiling are rejected at
+    /// submission.
     pub n_nodes: usize,
+    /// Elastic-fleet ceiling: [`crate::distfut::Runtime::add_node`] (and
+    /// the [`Autoscaler`]) can grow the fleet to this many nodes. `0`
+    /// (the default) pins the fleet at `n_nodes`.
+    pub max_nodes: usize,
     /// Concurrent task slots per node.
     pub slots_per_node: usize,
     /// Object-store byte budget per node before spilling kicks in.
@@ -77,6 +86,7 @@ impl Default for ServiceConfig {
     fn default() -> Self {
         ServiceConfig {
             n_nodes: 4,
+            max_nodes: 0,
             slots_per_node: 2,
             store_capacity_per_node: 1 << 30,
             admission_watermark: 1.0,
@@ -204,6 +214,7 @@ impl JobService {
     pub fn new(cfg: ServiceConfig) -> JobService {
         let rt = Runtime::new(RuntimeOptions {
             n_nodes: cfg.n_nodes.max(1),
+            max_nodes: cfg.max_nodes,
             slots_per_node: cfg.slots_per_node.max(1),
             store_capacity_per_node: cfg.store_capacity_per_node,
             spill_root: cfg.spill_root,
@@ -237,11 +248,16 @@ impl JobService {
             return Err(anyhow!("job service is shut down"));
         }
         job.spec.check().map_err(|e| anyhow!(e))?;
-        if job.spec.n_workers() > self.rt.n_nodes() {
+        // validated against the fleet *ceiling*, not the current size:
+        // on an elastic service a job may arrive while the fleet is
+        // scaled down — its pinned work folds onto the live nodes until
+        // the autoscaler grows the fleet under the load.
+        if job.spec.n_workers() > self.rt.max_nodes() {
             return Err(anyhow!(
-                "job wants {} workers but the service runtime has {} nodes",
+                "job wants {} workers but the service fleet is capped at \
+                 {} nodes",
                 job.spec.n_workers(),
-                self.rt.n_nodes()
+                self.rt.max_nodes()
             ));
         }
         let id = self.rt.register_job(job.params);

@@ -415,6 +415,7 @@ pub(crate) fn execute_on(
         n_merge_tasks: outcome.n_merge_tasks,
         n_reduce_tasks: outcome.n_reduce_tasks,
         peak_unmerged_blocks: outcome.peak_unmerged_blocks,
+        node_timeline: rt.node_count_timeline(),
         recovery: rt.recovery_stats(),
         chaos: harness.map(|h| h.log()).unwrap_or_default(),
     })

@@ -58,6 +58,12 @@ pub struct JobReport {
     /// Peak per-worker count of shuffled-but-unmerged blocks — the
     /// memory exposure §2.3 backpressure bounds (ablation A1).
     pub peak_unmerged_blocks: usize,
+    /// Live-node count over runtime time, `(seconds, count)` steps —
+    /// records fleet reconfigurations (joins, kills, drains) during the
+    /// run so fairness and overlap analyses stay interpretable on an
+    /// elastic fleet. A single `(0.0, W)` entry on a fixed fleet.
+    /// Runtime-wide on a shared service (the data plane is shared).
+    pub node_timeline: Vec<(f64, usize)>,
     /// Node-failure recovery counters (§2.5): kills, lost objects,
     /// lineage resubmissions. All zero on an undisturbed run.
     pub recovery: RecoveryStats,
@@ -192,6 +198,7 @@ mod tests {
             n_merge_tasks: 0,
             n_reduce_tasks: 0,
             peak_unmerged_blocks: 0,
+            node_timeline: vec![],
             recovery: RecoveryStats::default(),
             chaos: vec![],
         }

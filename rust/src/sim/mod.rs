@@ -854,6 +854,119 @@ pub fn estimate_multi_job(cfg: &SimConfig, n_jobs: usize) -> MultiJobResult {
 }
 
 // --------------------------------------------------------------------
+// elastic-fleet model (sim --autoscale)
+// --------------------------------------------------------------------
+
+/// The 100 TB run replayed under a scaling fleet: completion time, the
+/// node-count timeline, and worker dollars vs a fleet pinned at `W`.
+#[derive(Clone, Debug)]
+pub struct AutoscaleEstimate {
+    /// Elastic completion time (≥ the fixed fleet's: capacity ramps in).
+    pub total_secs: f64,
+    /// The fixed fleet's completion time (the plain simulated run).
+    pub fixed_total_secs: f64,
+    /// Live-node count over virtual time: the provisioning ramp up from
+    /// `min_nodes`, then per-node drains as each node's work ends.
+    pub node_timeline: Vec<(f64, usize)>,
+    /// Worker pricing: the elastic side integrates `node_timeline` over
+    /// the elastic run; the fixed side prices `W` nodes for the *fixed*
+    /// run's (shorter) wall time.
+    pub cost: crate::cost::FleetCost,
+}
+
+/// Replay `cfg`'s run and model the same work on an elastic fleet: the
+/// cluster starts at `min_nodes`, the autoscaler adds one node every
+/// `provision_secs` while the backlog persists (capped at the spec's
+/// `W`), and each node drains as soon as its share of the work ends.
+///
+/// The model conserves work in node-seconds: the ramp processes
+/// `W × T_fixed` node-seconds under the time-varying capacity, so a
+/// late-joining node is paid for later but the job runs longer — in
+/// this ideal work-conserving limit the ramp itself is cost-neutral.
+/// The dollars saved come from the scale-*down* side: in the fixed run
+/// every node bills until the global end, while the elastic fleet
+/// drains each node at its last task (per-node idle tails taken from
+/// the replayed run's event log). Phase-structure effects (a ramp
+/// stretching the map stage into the merge window) are not modelled,
+/// so the elastic `total_secs` is a lower bound and the savings a
+/// conservative estimate.
+pub fn estimate_autoscale(
+    cfg: &SimConfig,
+    min_nodes: usize,
+    provision_secs: f64,
+) -> AutoscaleEstimate {
+    let fixed = simulate(cfg);
+    let w = cfg.spec.n_workers();
+    let min = min_nodes.clamp(1, w);
+    let provision = provision_secs.max(1e-6);
+
+    // ramp: one join per provisioning interval while work remains
+    let total_work = fixed.total_secs * w as f64;
+    let mut timeline = vec![(0.0, min)];
+    let mut t = 0.0f64;
+    let mut live = min;
+    let mut done = 0.0f64;
+    while live < w {
+        let chunk = provision * live as f64;
+        if done + chunk >= total_work {
+            break;
+        }
+        done += chunk;
+        t += provision;
+        live += 1;
+        timeline.push((t, live));
+    }
+    let ramp_end = t;
+    let total_secs = t + (total_work - done) / live as f64;
+
+    // scale-down tail: each node's idle span between its last task and
+    // the global end in the fixed run — the elastic fleet drains it.
+    // Conservative: with fewer physical nodes than W, keep the smallest
+    // tails (least savings).
+    let mut tails: Vec<f64> = (0..w)
+        .map(|node| {
+            let last = fixed
+                .events
+                .iter()
+                .filter(|e| e.node == node)
+                .map(|e| e.end)
+                .fold(0.0f64, f64::max);
+            (fixed.total_secs - last).max(0.0)
+        })
+        .collect();
+    tails.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut drops: Vec<f64> = tails
+        .iter()
+        .take(live)
+        .filter(|&&tail| tail > 0.0)
+        .map(|&tail| (total_secs - tail).max(ramp_end))
+        .collect();
+    drops.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    for drop_at in drops {
+        if live == 0 {
+            break;
+        }
+        live -= 1;
+        timeline.push((drop_at, live));
+    }
+
+    let model = crate::cost::CostModel::paper();
+    let mut cost = model.elastic_fleet_cost(&timeline, total_secs, w);
+    // the pinned comparison bills the *fixed* run's wall time, not the
+    // (longer) elastic one elastic_fleet_cost assumed
+    let fixed_cost =
+        model.elastic_fleet_cost(&[(0.0, w)], fixed.total_secs, w);
+    cost.fixed_node_seconds = fixed_cost.fixed_node_seconds;
+    cost.fixed_dollars = fixed_cost.fixed_dollars;
+    AutoscaleEstimate {
+        total_secs,
+        fixed_total_secs: fixed.total_secs,
+        node_timeline: timeline,
+        cost,
+    }
+}
+
+// --------------------------------------------------------------------
 // recovery-time model (§2.5 at benchmark scale)
 // --------------------------------------------------------------------
 
@@ -1146,6 +1259,38 @@ mod tests {
             assert!(r.aggregate_bytes_per_sec > 0.2 * solo_rate, "{r:?}");
             assert!(r.aggregate_bytes_per_sec < 4.0 * solo_rate, "{r:?}");
         }
+    }
+
+    #[test]
+    fn autoscale_estimate_ramps_saves_dollars_and_stays_deterministic() {
+        let mut cfg = small_cfg();
+        cfg.noise = 0.08; // stragglers give the drain side real tails
+        let e = estimate_autoscale(&cfg, 1, 30.0);
+        // the ramp starts at min and never exceeds W
+        assert_eq!(e.node_timeline.first().copied(), Some((0.0, 1)));
+        assert!(e
+            .node_timeline
+            .iter()
+            .all(|&(_, n)| n <= cfg.spec.n_workers()));
+        // times are non-decreasing
+        for pair in e.node_timeline.windows(2) {
+            assert!(pair[0].0 <= pair[1].0, "{:?}", e.node_timeline);
+        }
+        // an elastic fleet trades wall time for dollars
+        assert!(e.total_secs >= e.fixed_total_secs, "{e:?}");
+        assert!(
+            e.cost.node_seconds < e.cost.fixed_node_seconds,
+            "{e:?}"
+        );
+        assert!(e.cost.saved_dollars() > 0.0, "{e:?}");
+        // deterministic given the seed
+        let again = estimate_autoscale(&cfg, 1, 30.0);
+        assert_eq!(e.total_secs, again.total_secs);
+        assert_eq!(e.node_timeline, again.node_timeline);
+        // min_nodes == W degenerates to the fixed fleet's ramp-free cost
+        let flat = estimate_autoscale(&cfg, cfg.spec.n_workers(), 30.0);
+        assert_eq!(flat.node_timeline[0], (0.0, cfg.spec.n_workers()));
+        assert!((flat.total_secs - flat.fixed_total_secs).abs() < 1e-6);
     }
 
     #[test]

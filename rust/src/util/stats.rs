@@ -41,6 +41,55 @@ pub fn median(xs: &[f64]) -> f64 {
     percentile(xs, 50.0)
 }
 
+/// Weighted arithmetic mean (0.0 when the weights sum to zero). The
+/// per-node averaging primitive for elastic fleets: weights are
+/// node-liveness durations, so a node that was in the fleet for a tenth
+/// of the run contributes a tenth of the weight instead of skewing the
+/// average like a full-run node — `mean` over raw per-node values
+/// silently assumes a constant node count.
+pub fn weighted_mean(xs: &[f64], ws: &[f64]) -> f64 {
+    debug_assert_eq!(xs.len(), ws.len());
+    let total: f64 = ws.iter().filter(|w| **w > 0.0).sum();
+    if total <= 0.0 {
+        return 0.0;
+    }
+    xs.iter()
+        .zip(ws)
+        .filter(|(_, w)| **w > 0.0)
+        .map(|(x, w)| x * w)
+        .sum::<f64>()
+        / total
+}
+
+/// Weighted percentile, `q` in [0, 100]: the smallest value whose
+/// cumulative weight reaches `q`% of the total weight. Zero- and
+/// negative-weight samples are ignored; 0.0 for empty (or fully
+/// zero-weight) input. With equal weights this is the step-function
+/// (non-interpolated) counterpart of [`percentile`].
+pub fn weighted_percentile(xs: &[f64], ws: &[f64], q: f64) -> f64 {
+    debug_assert_eq!(xs.len(), ws.len());
+    let mut v: Vec<(f64, f64)> = xs
+        .iter()
+        .copied()
+        .zip(ws.iter().copied())
+        .filter(|(_, w)| *w > 0.0)
+        .collect();
+    if v.is_empty() {
+        return 0.0;
+    }
+    v.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let total: f64 = v.iter().map(|(_, w)| w).sum();
+    let target = q.clamp(0.0, 100.0) / 100.0 * total;
+    let mut cumulative = 0.0;
+    for &(x, w) in &v {
+        cumulative += w;
+        if cumulative >= target {
+            return x;
+        }
+    }
+    v.last().unwrap().0
+}
+
 /// Min/median/max triple — the shape Figure 1's bands need.
 pub fn min_med_max(xs: &[f64]) -> (f64, f64, f64) {
     if xs.is_empty() {
@@ -82,5 +131,39 @@ mod tests {
         assert_eq!(stddev(&[]), 0.0);
         assert_eq!(percentile(&[], 50.0), 0.0);
         assert_eq!(min_med_max(&[]), (0.0, 0.0, 0.0));
+        assert_eq!(weighted_mean(&[], &[]), 0.0);
+        assert_eq!(weighted_percentile(&[], &[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn weighted_mean_weights_by_liveness_duration() {
+        // a node live 10% of the run at full utilization must not read
+        // like a full-run node: (0.5·10 + 1.0·1) / 11
+        let utils = [0.5, 1.0];
+        let live = [10.0, 1.0];
+        assert!((weighted_mean(&utils, &live) - 6.0 / 11.0).abs() < 1e-12);
+        // equal weights degrade to the plain mean
+        assert!(
+            (weighted_mean(&utils, &[3.0, 3.0]) - mean(&utils)).abs()
+                < 1e-12
+        );
+        // zero-weight (never-live) nodes are excluded entirely
+        assert_eq!(weighted_mean(&[0.9, 123.0], &[2.0, 0.0]), 0.9);
+        assert_eq!(weighted_mean(&[1.0], &[0.0]), 0.0);
+    }
+
+    #[test]
+    fn weighted_percentile_follows_cumulative_weight() {
+        let xs = [1.0, 2.0, 3.0];
+        let ws = [1.0, 1.0, 8.0];
+        // 3.0 holds 80% of the weight: the median lands on it
+        assert_eq!(weighted_percentile(&xs, &ws, 50.0), 3.0);
+        assert_eq!(weighted_percentile(&xs, &ws, 10.0), 1.0);
+        assert_eq!(weighted_percentile(&xs, &ws, 100.0), 3.0);
+        // zero-weight samples never surface
+        assert_eq!(
+            weighted_percentile(&[9.0, 2.0], &[0.0, 1.0], 100.0),
+            2.0
+        );
     }
 }

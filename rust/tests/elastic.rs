@@ -1,0 +1,345 @@
+//! Elasticity × chaos acceptance suite (ISSUE 5): live node joins,
+//! graceful drains and kill-then-rejoin sequences injected mid-run, with
+//! byte-identity assertions against fixed-fleet runs, plus fair-share
+//! re-convergence after a scale-up. Run alone with
+//! `cargo test -q --test elastic`.
+
+use std::time::{Duration, Instant};
+
+use exoshuffle::coordinator::tasks::{bucket_of, output_key, OUTPUT_SALT};
+use exoshuffle::distfut::{
+    task_fn, Placement, Runtime, RuntimeOptions, TaskSpec,
+};
+use exoshuffle::metrics::fairness_summary;
+use exoshuffle::prelude::*;
+use exoshuffle::shuffle::strategy_by_name;
+
+/// Download every output partition, in order.
+fn output_bytes(spec: &JobSpec, s3: &S3) -> Vec<Vec<u8>> {
+    (0..spec.n_output_partitions)
+        .map(|r| {
+            s3.get(
+                &bucket_of(spec.seed ^ OUTPUT_SALT, r as u64, spec.s3_buckets),
+                &output_key(r),
+            )
+            .unwrap_or_else(|e| panic!("output partition {r}: {e}"))
+            .to_vec()
+        })
+        .collect()
+}
+
+/// A fault-free fixed-fleet run of `spec` with `strategy`, for the
+/// byte-identity baseline.
+fn clean_run(spec: &JobSpec, strategy: &str) -> (JobReport, Vec<Vec<u8>>) {
+    let s3 = S3::with_buckets(spec.s3_buckets);
+    let report = ShuffleJob::new(spec.clone())
+        .strategy_arc(strategy_by_name(strategy).expect("registered"))
+        .on(&s3)
+        .run()
+        .unwrap();
+    assert!(report.validation.valid, "{strategy} fault-free run");
+    (report, output_bytes(spec, &s3))
+}
+
+/// Headline acceptance: a node hot-joining mid-shuffle changes nothing
+/// about the bytes, for every strategy. The elastic service starts two
+/// nodes short of the job's plan and grows under the chaos trigger.
+#[test]
+fn all_strategies_byte_identical_when_a_node_joins_mid_shuffle() {
+    let spec = JobSpec::scaled(4 << 20, 3);
+    for name in ["two-stage-merge", "simple", "streaming"] {
+        let (clean, clean_bytes) = clean_run(&spec, name);
+
+        let mut cfg = ServiceConfig::for_spec(&spec);
+        cfg.n_nodes = 2; // the third worker joins at commit 10
+        cfg.max_nodes = 3;
+        let service = JobService::new(cfg);
+        let s3 = S3::with_buckets(spec.s3_buckets);
+        let handle = ShuffleJob::new(spec.clone())
+            .strategy_arc(strategy_by_name(name).unwrap())
+            .on(&s3)
+            .chaos(ChaosPlan::new().add_node(10))
+            .name(format!("elastic-{name}"))
+            .submit(&service)
+            .unwrap();
+        let report = handle.wait().unwrap();
+        assert!(report.validation.valid, "{name}: {:?}", report.validation);
+        assert_eq!(
+            report.chaos.len(),
+            1,
+            "{name}: the join must have fired: {:?}",
+            report.chaos
+        );
+        assert!(
+            report.chaos[0].outcome.contains("added node 2"),
+            "{name}: {:?}",
+            report.chaos
+        );
+        assert_eq!(service.runtime().live_nodes(), 3);
+        assert!(
+            report.node_timeline.iter().any(|&(_, n)| n == 3),
+            "{name}: node-count timeline must record the join: {:?}",
+            report.node_timeline
+        );
+        assert_eq!(
+            report.validation.summary.checksum,
+            clean.validation.summary.checksum,
+            "{name}: checksum must match the fixed-fleet run"
+        );
+        assert_eq!(
+            output_bytes(&spec, &s3),
+            clean_bytes,
+            "{name}: every output partition must be byte-identical"
+        );
+        service.shutdown();
+    }
+}
+
+/// A graceful drain mid-merge loses nothing: no kill, no lost objects,
+/// no lineage re-execution — and the bytes match the fixed-fleet run.
+#[test]
+fn all_strategies_byte_identical_when_a_node_drains_mid_merge() {
+    let spec = JobSpec::scaled(4 << 20, 3);
+    for name in ["two-stage-merge", "simple", "streaming"] {
+        let (clean, clean_bytes) = clean_run(&spec, name);
+
+        let service = JobService::new(ServiceConfig::for_spec(&spec));
+        let s3 = S3::with_buckets(spec.s3_buckets);
+        // every strategy commits ≥ 72 map blocks at this scale, so
+        // commit 60 lands deep in the shuffle — inside the merge window
+        // for the merge-based strategies
+        let handle = ShuffleJob::new(spec.clone())
+            .strategy_arc(strategy_by_name(name).unwrap())
+            .on(&s3)
+            .chaos(ChaosPlan::new().drain_node(1, 60))
+            .submit(&service)
+            .unwrap();
+        let report = handle.wait().unwrap();
+        assert!(report.validation.valid, "{name}: {:?}", report.validation);
+        // drains are asynchronous: wait for the retirement to land
+        let rt = service.runtime();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while !rt.is_node_dead(1) {
+            assert!(
+                Instant::now() < deadline,
+                "{name}: drain never completed"
+            );
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert_eq!(rt.live_nodes(), 2);
+        // graceful: nothing was lost and nothing re-executed as recovery
+        assert_eq!(rt.recovery_stats().nodes_killed, 0, "{name}");
+        assert_eq!(rt.recovery_stats().objects_lost, 0, "{name}");
+        assert_eq!(
+            report.validation.summary.checksum,
+            clean.validation.summary.checksum,
+            "{name}"
+        );
+        assert_eq!(output_bytes(&spec, &s3), clean_bytes, "{name}");
+        service.shutdown();
+    }
+}
+
+/// Seeded kill-then-rejoin: node 1 dies at commit 10 and a fresh
+/// incarnation of the slot joins at commit 30. Reproducible end to end,
+/// byte-identical to the fault-free run.
+#[test]
+fn seeded_kill_then_rejoin_is_reproducible_and_byte_identical() {
+    let spec = JobSpec::scaled(4 << 20, 3);
+    let plan = ChaosPlan::new().kill_node(1, 10).add_node(30);
+    let (clean, clean_bytes) = clean_run(&spec, "two-stage-merge");
+
+    let mut checksums = Vec::new();
+    let mut outputs = Vec::new();
+    for _ in 0..2 {
+        let s3 = S3::with_buckets(spec.s3_buckets);
+        let report = ShuffleJob::new(spec.clone())
+            .on(&s3)
+            .chaos(plan.clone())
+            .run()
+            .unwrap();
+        assert!(report.validation.valid, "{:?}", report.validation);
+        assert_eq!(report.recovery.nodes_killed, 1, "{:?}", report.chaos);
+        assert_eq!(report.chaos.len(), 2, "{:?}", report.chaos);
+        assert!(report.chaos[0].outcome.contains("killed node 1"));
+        assert!(
+            report.chaos[1].outcome.contains("added node 1"),
+            "the rejoin must revive the killed slot: {:?}",
+            report.chaos
+        );
+        // the timeline dips to 2 and returns to 3
+        assert!(report.node_timeline.iter().any(|&(_, n)| n == 2));
+        assert_eq!(report.node_timeline.last().map(|&(_, n)| n), Some(3));
+        checksums.push(report.validation.summary.checksum);
+        outputs.push(output_bytes(&spec, &s3));
+    }
+    assert_eq!(checksums[0], checksums[1], "seeded runs must reproduce");
+    assert_eq!(outputs[0], outputs[1]);
+    assert_eq!(checksums[0], clean.validation.summary.checksum);
+    assert_eq!(outputs[0], clean_bytes);
+}
+
+fn sleeper(name: &str, ms: u64) -> TaskSpec {
+    TaskSpec {
+        job: JobId::ROOT,
+        name: name.into(),
+        placement: Placement::Any,
+        func: task_fn(move |_| {
+            std::thread::sleep(Duration::from_millis(ms));
+            Ok(vec![])
+        }),
+        args: vec![],
+        num_returns: 0,
+        max_retries: 0,
+    }
+}
+
+/// Two equal-weight jobs squeezed onto one slot stay fair through a
+/// scale-up: after the second node joins, both jobs' contended-window
+/// shares re-converge to ≥ 25% and the joined node takes queued work.
+#[test]
+fn fair_shares_reconverge_after_a_scale_up() {
+    let rt = Runtime::new(RuntimeOptions {
+        n_nodes: 1,
+        slots_per_node: 1,
+        max_nodes: 2,
+        ..Default::default()
+    });
+    let a = rt.register_job(JobParams::default());
+    let b = rt.register_job(JobParams::default());
+    let mut handles = Vec::new();
+    for i in 0..20 {
+        handles.push(rt.submit_for(a, sleeper(&format!("a{i}"), 4)).1);
+        handles.push(rt.submit_for(b, sleeper(&format!("b{i}"), 4)).1);
+    }
+    std::thread::sleep(Duration::from_millis(25)); // contend on one slot
+    let node = rt.add_node().unwrap();
+    assert_eq!(node, 1);
+    assert_eq!(rt.n_nodes(), 2, "provisioned span must grow");
+    for h in handles {
+        h.wait().unwrap();
+    }
+    let events = rt.task_events();
+    assert!(
+        events.iter().any(|e| e.node == 1 && e.ok),
+        "the joined node must take rebalanced queue work"
+    );
+    let summary = fairness_summary(&events);
+    assert!(
+        summary.share_of(a) >= 0.25 && summary.share_of(b) >= 0.25,
+        "shares must re-converge across the scale-up: {summary:?}"
+    );
+    // the ceiling is enforced once every slot is live
+    let err = rt.add_node().unwrap_err().to_string();
+    assert!(err.contains("max_nodes"), "{err}");
+    rt.shutdown();
+}
+
+/// Drain semantics at the runtime level: migration instead of loss, the
+/// last-node guard, and slot revival as a fresh incarnation.
+#[test]
+fn drain_migrates_objects_then_slot_revives_as_a_fresh_node() {
+    let rt = Runtime::new(RuntimeOptions {
+        n_nodes: 2,
+        slots_per_node: 1,
+        ..Default::default()
+    });
+    let (outs, h) = rt.submit(TaskSpec {
+        job: JobId::ROOT,
+        name: "resident".into(),
+        placement: Placement::Node(0),
+        func: task_fn(|_| Ok(vec![vec![7u8; 64]])),
+        args: vec![],
+        num_returns: 1,
+        max_retries: 0,
+    });
+    h.wait().unwrap();
+    let report = rt.drain_node(0).unwrap();
+    assert_eq!(report.objects_migrated, 1, "{report:?}");
+    assert_eq!(report.bytes_migrated, 64);
+    assert!(rt.is_node_dead(0));
+    assert_eq!(rt.live_nodes(), 1);
+    // nothing lost, no recovery machinery engaged, data still readable
+    assert_eq!(rt.recovery_stats().objects_lost, 0);
+    assert_eq!(rt.recovery_stats().tasks_resubmitted, 0);
+    assert_eq!(*rt.get(&outs[0]).unwrap(), vec![7u8; 64]);
+    // the last available node refuses to drain
+    let err = rt.drain_node(1).unwrap_err().to_string();
+    assert!(err.contains("last available"), "{err}");
+    // re-adding revives the retired slot; pinned work runs there again
+    assert_eq!(rt.add_node().unwrap(), 0);
+    assert_eq!(rt.live_nodes(), 2);
+    let (_, h) = rt.submit(TaskSpec {
+        job: JobId::ROOT,
+        name: "after-rejoin".into(),
+        placement: Placement::Node(0),
+        func: task_fn(|_| Ok(vec![])),
+        args: vec![],
+        num_returns: 0,
+        max_retries: 0,
+    });
+    h.wait().unwrap();
+    let events = rt.task_events();
+    assert!(events
+        .iter()
+        .any(|e| e.name == "after-rejoin" && e.node == 0 && e.ok));
+    // membership markers for reports
+    assert!(events.iter().any(|e| e.name == "node-drained-0"));
+    assert!(events.iter().any(|e| e.name == "node-added-0"));
+    rt.shutdown();
+}
+
+/// A drain with work queued on the draining node reroutes it (counted
+/// on the report) and the job still completes.
+#[test]
+fn drain_reroutes_queued_work_and_backlog_completes() {
+    let rt = Runtime::new(RuntimeOptions {
+        n_nodes: 2,
+        slots_per_node: 1,
+        ..Default::default()
+    });
+    // one long task occupies node 1 while a pinned backlog queues there
+    let (_, busy) = rt.submit(TaskSpec {
+        job: JobId::ROOT,
+        name: "busy".into(),
+        placement: Placement::Node(1),
+        func: task_fn(|_| {
+            std::thread::sleep(Duration::from_millis(60));
+            Ok(vec![])
+        }),
+        args: vec![],
+        num_returns: 0,
+        max_retries: 0,
+    });
+    std::thread::sleep(Duration::from_millis(10));
+    let handles: Vec<_> = (0..6)
+        .map(|i| {
+            rt.submit(TaskSpec {
+                job: JobId::ROOT,
+                name: format!("queued{i}"),
+                placement: Placement::Node(1),
+                func: task_fn(|_| Ok(vec![])),
+                args: vec![],
+                num_returns: 0,
+                max_retries: 0,
+            })
+            .1
+        })
+        .collect();
+    let report = rt.drain_node(1).unwrap();
+    assert!(
+        report.queue_reroutes >= 1,
+        "queued work must reroute: {report:?}"
+    );
+    busy.wait().unwrap();
+    for h in handles {
+        h.wait().unwrap();
+    }
+    // everything ran on the surviving node after the drain began
+    assert!(rt
+        .task_events()
+        .iter()
+        .filter(|e| e.name.starts_with("queued"))
+        .all(|e| e.node == 0));
+    rt.shutdown();
+}
