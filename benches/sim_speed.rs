@@ -1,0 +1,113 @@
+//! Bench S3 (ours) — wall-clock speed of the deterministic simulation
+//! runtime (`distfut::sim`).
+//!
+//! The sim backend replays the whole distfut surface on a single-threaded
+//! virtual-time event loop; its usefulness as a fuzzing substrate (the
+//! `vopr` subcommand) depends on simulated runs being *cheaper* than real
+//! ones. This bench tracks:
+//!
+//! - raw event-loop dispatch: wall µs per no-op task through the
+//!   virtual-time loop (the sim counterpart of `sched_overhead`)
+//! - an end-to-end sort on the sim backend vs the same spec on the
+//!   threaded backend, so the compression ratio (virtual seconds
+//!   simulated per wall second) stays visible over time
+//!
+//!     cargo bench --bench sim_speed
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::cell::Cell;
+
+use exoshuffle::coordinator::JobSpec;
+use exoshuffle::distfut::{
+    task_fn, JobId, Placement, RuntimeHandle, RuntimeOptions, SimRuntime,
+    TaskSpec,
+};
+use exoshuffle::runtime::Backend;
+use exoshuffle::service::{JobService, ServiceConfig};
+use exoshuffle::shuffle::ShuffleJob;
+
+fn noop(name: String) -> TaskSpec {
+    TaskSpec {
+        job: JobId::ROOT,
+        name,
+        placement: Placement::Any,
+        func: task_fn(|_| Ok(vec![vec![0u8]])),
+        args: vec![],
+        num_returns: 1,
+        max_retries: 0,
+    }
+}
+
+/// One full sort through the `JobService` path on either backend;
+/// returns the run's final runtime-clock reading (virtual seconds on
+/// the sim backend).
+fn run_sort(spec: &JobSpec, sim_seed: Option<u64>) -> f64 {
+    let mut cfg = ServiceConfig::for_spec(spec);
+    cfg.sim_seed = sim_seed;
+    let service = JobService::new(cfg);
+    let report = service
+        .submit(ShuffleJob::new(spec.clone()).backend(Backend::Native))
+        .and_then(|h| h.wait())
+        .expect("sort");
+    assert!(report.validation.valid, "{:?}", report.validation);
+    let clock_secs = service.runtime().now();
+    service.shutdown();
+    clock_secs
+}
+
+fn main() {
+    harness::section("deterministic simulation runtime speed");
+    let mut results = Vec::new();
+    let iters = harness::pick(5, 1);
+
+    let n = harness::pick(1000, 100);
+    let r = harness::bench(&format!("sim_fan_out_{n}_noop_tasks"), iters, || {
+        let rt = RuntimeHandle::from(SimRuntime::new(
+            RuntimeOptions {
+                n_nodes: 4,
+                slots_per_node: 2,
+                ..Default::default()
+            },
+            7,
+        ));
+        for i in 0..n {
+            rt.submit(noop(format!("t{i}")));
+        }
+        rt.wait_quiescent();
+        rt.shutdown();
+    });
+    println!(
+        "  -> {:.1}µs/task through the virtual-time event loop",
+        r.mean_secs / n as f64 * 1e6
+    );
+    results.push(r);
+
+    let size: u64 = harness::pick(16 << 20, 2 << 20);
+    let spec = JobSpec::scaled(size, 3);
+    let virtual_secs = Cell::new(0.0f64);
+    let r = harness::bench(
+        &format!("sim_full_sort_{}mib", size >> 20),
+        iters,
+        || virtual_secs.set(run_sort(&spec, Some(7))),
+    );
+    println!(
+        "  -> {:.3} virtual secs simulated in {} wall",
+        virtual_secs.get(),
+        harness::fmt_secs(r.mean_secs)
+    );
+    results.push(r);
+
+    let r = harness::bench(
+        &format!("threaded_full_sort_{}mib", size >> 20),
+        iters,
+        || {
+            run_sort(&spec, None);
+        },
+    );
+    results.push(r);
+
+    harness::emit_json("sim_speed", &results);
+    println!("sim_speed bench: PASS");
+}

@@ -7,7 +7,7 @@ use anyhow::Context;
 use crate::coordinator::manifest::decode_gen_result;
 use crate::coordinator::plan::JobSpec;
 use crate::coordinator::tasks;
-use crate::distfut::{JobId, Runtime};
+use crate::distfut::{JobId, RuntimeHandle};
 use crate::s3sim::S3;
 
 /// Generate all input partitions onto S3 on behalf of `job`; returns the
@@ -16,7 +16,7 @@ use crate::s3sim::S3;
 pub fn generate_input(
     spec: &JobSpec,
     s3: &S3,
-    rt: &Runtime,
+    rt: &RuntimeHandle,
     job: JobId,
 ) -> anyhow::Result<(u64, u64)> {
     let results: Vec<_> = (0..spec.n_input_partitions)

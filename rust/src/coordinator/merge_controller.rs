@@ -23,10 +23,11 @@
 //! merges pinned to a dead node are rerouted by the runtime (their cut
 //! points travel in the task closure, so the output is identical).
 
-use std::sync::{Arc, Mutex, Weak};
+use std::sync::{Arc, Mutex};
 
 use crate::distfut::{
-    DfError, JobId, ObjectRef, Placement, Runtime, TaskHandle, TaskSpec,
+    DfError, JobId, ObjectRef, Placement, RuntimeHandle, TaskHandle,
+    TaskSpec, WeakRuntimeHandle,
 };
 
 /// Builds the merge TaskSpec for a batch of blocks on a node.
@@ -78,7 +79,8 @@ pub struct MergeController {
     make_task: MergeTaskFactory,
     /// Weak so readiness callbacks parked in the runtime's store never
     /// keep the runtime alive (the store is owned by the runtime).
-    rt: Weak<Runtime>,
+    /// A [`WeakRuntimeHandle`] works against either backend.
+    rt: WeakRuntimeHandle,
     inner: Arc<Mutex<Inner>>,
 }
 
@@ -87,7 +89,7 @@ pub struct MergeController {
 /// from callbacks is safe.
 fn launch(
     inner: &mut Inner,
-    rt: &Runtime,
+    rt: &RuntimeHandle,
     make_task: &MergeTaskFactory,
     node: usize,
     job: JobId,
@@ -105,17 +107,17 @@ impl MergeController {
     pub fn new(
         node: usize,
         threshold: usize,
-        rt: &Arc<Runtime>,
+        rt: impl Into<RuntimeHandle>,
         make_task: MergeTaskFactory,
     ) -> Self {
-        Self::for_job(node, threshold, rt, JobId::ROOT, make_task)
+        Self::for_job(node, threshold, rt.into(), JobId::ROOT, make_task)
     }
 
     /// A controller whose merges are submitted on behalf of `job`.
     pub fn for_job(
         node: usize,
         threshold: usize,
-        rt: &Arc<Runtime>,
+        rt: impl Into<RuntimeHandle>,
         job: JobId,
         make_task: MergeTaskFactory,
     ) -> Self {
@@ -124,7 +126,7 @@ impl MergeController {
             job,
             threshold: threshold.max(1),
             make_task,
-            rt: Arc::downgrade(rt),
+            rt: rt.into().downgrade(),
             inner: Arc::new(Mutex::new(Inner::default())),
         }
     }
@@ -229,7 +231,7 @@ impl MergeController {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::distfut::{task_fn, RuntimeOptions};
+    use crate::distfut::{task_fn, Runtime, RuntimeOptions};
 
     fn noop_factory(returns: usize) -> MergeTaskFactory {
         Arc::new(move |node, batch, blocks| TaskSpec {

@@ -8,7 +8,7 @@ use anyhow::Context;
 use crate::coordinator::manifest::decode_summary;
 use crate::coordinator::plan::JobSpec;
 use crate::coordinator::tasks;
-use crate::distfut::{JobId, Runtime};
+use crate::distfut::{JobId, RuntimeHandle};
 use crate::s3sim::S3;
 use crate::shuffle::report::ValidationReport;
 use crate::sortlib::valsort::{self, PartitionSummary};
@@ -19,7 +19,7 @@ use crate::sortlib::valsort::{self, PartitionSummary};
 pub fn validate_output(
     spec: &JobSpec,
     s3: &S3,
-    rt: &Runtime,
+    rt: &RuntimeHandle,
     job: JobId,
     input_records: u64,
     input_checksum: u64,

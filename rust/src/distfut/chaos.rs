@@ -25,6 +25,7 @@
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, Weak};
 
+use crate::distfut::handle::{RuntimeHandle, WeakRuntimeHandle};
 use crate::distfut::scheduler::Runtime;
 use crate::distfut::store::ObjectId;
 use crate::distfut::JobId;
@@ -184,33 +185,37 @@ pub struct ChaosHarness {
     /// plan is exhausted (0 until arming completes).
     observer_id: AtomicU64,
     /// Weak self-handle, set at arming: asynchronous events (drains,
-    /// scale-to) log their outcome from a spawned thread, which must not
-    /// keep the harness alive on its own.
+    /// scale-to) log their outcome from a completion callback, which
+    /// must not keep the harness alive on its own.
     self_ref: Mutex<Weak<ChaosHarness>>,
-    rt: Weak<Runtime>,
+    rt: WeakRuntimeHandle,
     log: Mutex<Vec<ChaosRecord>>,
 }
 
 impl ChaosHarness {
     /// Install `plan` on `rt`'s commit clock, counting every data-bearing
-    /// commit from now.
-    pub fn arm(rt: &Arc<Runtime>, plan: ChaosPlan) -> Arc<ChaosHarness> {
-        Self::arm_scoped(rt, plan, None)
+    /// commit from now. Accepts either backend (an `&Arc<Runtime>`, an
+    /// `&Arc<SimRuntime>`, or a [`RuntimeHandle`]).
+    pub fn arm(
+        rt: impl Into<RuntimeHandle>,
+        plan: ChaosPlan,
+    ) -> Arc<ChaosHarness> {
+        Self::arm_scoped(rt.into(), plan, None)
     }
 
     /// Install `plan` counting only commits of `job` — the multi-tenant
     /// arming path: one job's failure schedule is unaffected by its
     /// neighbours' commit traffic.
     pub fn arm_for_job(
-        rt: &Arc<Runtime>,
+        rt: impl Into<RuntimeHandle>,
         plan: ChaosPlan,
         job: JobId,
     ) -> Arc<ChaosHarness> {
-        Self::arm_scoped(rt, plan, Some(job))
+        Self::arm_scoped(rt.into(), plan, Some(job))
     }
 
     fn arm_scoped(
-        rt: &Arc<Runtime>,
+        rt: RuntimeHandle,
         plan: ChaosPlan,
         scope: Option<JobId>,
     ) -> Arc<ChaosHarness> {
@@ -223,7 +228,7 @@ impl ChaosHarness {
             scope,
             observer_id: AtomicU64::new(0),
             self_ref: Mutex::new(Weak::new()),
-            rt: Arc::downgrade(rt),
+            rt: rt.downgrade(),
             log: Mutex::new(Vec::new()),
         });
         *harness.self_ref.lock().unwrap() = Arc::downgrade(&harness);
@@ -294,40 +299,56 @@ impl ChaosHarness {
             },
             // Graceful operations wait for in-flight tasks — possibly
             // including the very task whose commit fired this trigger —
-            // so they run off the commit path, on their own thread.
-            // Initiation is recorded synchronously (so a job that ends
-            // before the operation completes still reports the event);
-            // the outcome lands as a second record when it resolves.
-            ChaosEvent::DrainNode(_) | ChaosEvent::ScaleTo(_) => {
+            // so they run off the commit path: on a spawned thread
+            // (threaded backend) or as a deferred event-loop completion
+            // (sim backend). Initiation is recorded synchronously (so a
+            // job that ends before the operation completes still reports
+            // the event); the outcome lands as a second record when it
+            // resolves.
+            ChaosEvent::DrainNode(node) => {
                 self.record(
                     at_secs,
                     trigger,
                     "initiated (graceful, completes asynchronously)".into(),
                 );
                 let me = self.self_ref.lock().unwrap().clone();
-                std::thread::spawn(move || {
-                    let outcome = match trigger.event {
-                        ChaosEvent::DrainNode(node) => {
-                            match rt.drain_node_as(node, job) {
-                                Ok(r) => format!(
-                                    "drained node {node}: {} queued tasks \
-                                     rerouted, {} objects ({} B) migrated",
-                                    r.queue_reroutes,
-                                    r.objects_migrated,
-                                    r.bytes_migrated
-                                ),
-                                Err(e) => format!("skipped: {e}"),
-                            }
+                rt.drain_node_async(
+                    node,
+                    job,
+                    Box::new(move |res| {
+                        let outcome = match res {
+                            Ok(r) => format!(
+                                "drained node {node}: {} queued tasks \
+                                 rerouted, {} objects ({} B) migrated",
+                                r.queue_reroutes,
+                                r.objects_migrated,
+                                r.bytes_migrated
+                            ),
+                            Err(e) => format!("skipped: {e}"),
+                        };
+                        if let Some(h) = me.upgrade() {
+                            h.record(at_secs, trigger, outcome);
                         }
-                        ChaosEvent::ScaleTo(target) => {
-                            scale_fleet_to(&rt, target, job)
+                    }),
+                );
+                return;
+            }
+            ChaosEvent::ScaleTo(target) => {
+                self.record(
+                    at_secs,
+                    trigger,
+                    "initiated (graceful, completes asynchronously)".into(),
+                );
+                let me = self.self_ref.lock().unwrap().clone();
+                rt.scale_to_async(
+                    target,
+                    job,
+                    Box::new(move |outcome| {
+                        if let Some(h) = me.upgrade() {
+                            h.record(at_secs, trigger, outcome);
                         }
-                        _ => unreachable!("only async events spawn"),
-                    };
-                    if let Some(h) = me.upgrade() {
-                        h.record(at_secs, trigger, outcome);
-                    }
-                });
+                    }),
+                );
                 return;
             }
         };
@@ -368,7 +389,14 @@ impl ChaosHarness {
 
 /// Add or drain (highest index first) until the fleet has `target`
 /// available nodes; stops at the first refusal (ceiling, last node).
-fn scale_fleet_to(rt: &Arc<Runtime>, target: usize, job: JobId) -> String {
+/// Threaded-backend implementation of
+/// [`RuntimeHandle::scale_to_async`]; the sim backend has its own
+/// non-blocking equivalent with identical outcome strings.
+pub(crate) fn scale_fleet_to(
+    rt: &Arc<Runtime>,
+    target: usize,
+    job: JobId,
+) -> String {
     let mut added = 0usize;
     let mut drained = 0usize;
     while rt.available_nodes() < target {

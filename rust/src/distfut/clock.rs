@@ -1,0 +1,69 @@
+//! Wall/virtual time abstraction shared by both execution backends.
+//!
+//! The threaded [`crate::distfut::Runtime`] stamps task events with
+//! seconds elapsed since its construction `Instant`; the simulated
+//! [`crate::distfut::sim::SimRuntime`] advances a virtual clock inside
+//! its discrete-event loop. Anything that measures durations against
+//! runtime timestamps — stage clocks, timelines, the cost model's
+//! node-seconds integration — reads through a [`Clock`] so the same
+//! reporting code sees wall seconds on one backend and virtual seconds
+//! on the other.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// A monotonic seconds-since-epoch source. Cheap to clone: both variants
+/// are a handle onto the owning runtime's epoch, not a copy of it.
+#[derive(Clone, Debug)]
+pub enum Clock {
+    /// Wall time measured from the threaded runtime's construction
+    /// instant.
+    Wall(Instant),
+    /// Virtual seconds (stored as `f64` bits) advanced by the simulation
+    /// event loop; frozen whenever no event is being processed.
+    Virtual(Arc<AtomicU64>),
+}
+
+impl Clock {
+    /// A fresh wall clock whose epoch is now.
+    pub fn wall() -> Clock {
+        Clock::Wall(Instant::now())
+    }
+
+    /// Seconds since the clock's epoch.
+    pub fn now_secs(&self) -> f64 {
+        match self {
+            Clock::Wall(epoch) => epoch.elapsed().as_secs_f64(),
+            Clock::Virtual(bits) => {
+                f64::from_bits(bits.load(Ordering::SeqCst))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wall_clock_advances() {
+        let c = Clock::wall();
+        let a = c.now_secs();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(c.now_secs() > a);
+    }
+
+    #[test]
+    fn virtual_clock_reads_stored_bits() {
+        let bits = Arc::new(AtomicU64::new(0.0f64.to_bits()));
+        let c = Clock::Virtual(bits.clone());
+        assert_eq!(c.now_secs(), 0.0);
+        bits.store(1.5f64.to_bits(), Ordering::SeqCst);
+        assert_eq!(c.now_secs(), 1.5);
+        // clones share the epoch
+        let c2 = c.clone();
+        bits.store(4.25f64.to_bits(), Ordering::SeqCst);
+        assert_eq!(c2.now_secs(), 4.25);
+    }
+}

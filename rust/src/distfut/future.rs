@@ -12,6 +12,15 @@ pub(crate) struct TaskState {
     pub(crate) done: Condvar,
 }
 
+/// Cooperative progress hook for single-threaded backends: a handle that
+/// carries one drives the owning runtime's event loop while waiting
+/// instead of blocking on the condvar (which would deadlock a runtime
+/// with no worker threads). `pump` returns `false` once no further
+/// progress is possible.
+pub(crate) trait Pump: Send + Sync {
+    fn pump(&self) -> bool;
+}
+
 /// Handle to a submitted task: await completion / observe failure.
 /// The task's *data* outputs are the `ObjectRef`s returned at submit time;
 /// this handle only conveys control-plane completion.
@@ -19,6 +28,10 @@ pub(crate) struct TaskState {
 pub struct TaskHandle {
     pub(crate) name: String,
     pub(crate) state: Arc<TaskState>,
+    /// Set by pump-driven backends ([`crate::distfut::sim::SimRuntime`]);
+    /// `None` for the threaded runtime, whose workers complete handles
+    /// from their own threads.
+    pub(crate) pump: Option<Arc<dyn Pump>>,
 }
 
 impl TaskHandle {
@@ -29,6 +42,15 @@ impl TaskHandle {
                 result: Mutex::new(None),
                 done: Condvar::new(),
             }),
+            pump: None,
+        }
+    }
+
+    /// A handle whose `wait` drives `pump` instead of blocking.
+    pub(crate) fn new_pumped(name: String, pump: Arc<dyn Pump>) -> Self {
+        TaskHandle {
+            pump: Some(pump),
+            ..TaskHandle::new(name)
         }
     }
 
@@ -42,18 +64,45 @@ impl TaskHandle {
         self.state.result.lock().unwrap().is_some()
     }
 
-    /// Block until the task commits or exhausts retries.
+    /// Block until the task commits or exhausts retries. On a pumped
+    /// handle this drives the owning runtime's event loop; a drained
+    /// loop with the task still incomplete is a simulation deadlock and
+    /// surfaces as a task failure instead of hanging.
     pub fn wait(&self) -> Result<(), DfError> {
+        if let Some(pump) = &self.pump {
+            loop {
+                let settled: Option<Result<(), String>> =
+                    self.state.result.lock().unwrap().clone();
+                match settled {
+                    Some(result) => return self.to_err(result),
+                    None => {
+                        if !pump.pump() {
+                            return Err(DfError::TaskFailed {
+                                name: self.name.clone(),
+                                attempts: 0,
+                                last: "simulation deadlock: event loop \
+                                       drained with task incomplete"
+                                    .into(),
+                            });
+                        }
+                    }
+                }
+            }
+        }
         let mut guard = self.state.result.lock().unwrap();
         while guard.is_none() {
             guard = self.state.done.wait(guard).unwrap();
         }
-        match guard.as_ref().unwrap() {
+        self.to_err((*guard).clone().unwrap())
+    }
+
+    fn to_err(&self, result: Result<(), String>) -> Result<(), DfError> {
+        match result {
             Ok(()) => Ok(()),
             Err(msg) => Err(DfError::TaskFailed {
                 name: self.name.clone(),
                 attempts: 0, // attempts encoded in msg by the scheduler
-                last: msg.clone(),
+                last: msg,
             }),
         }
     }

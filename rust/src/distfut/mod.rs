@@ -37,6 +37,13 @@
 //! node *k* after the *n*-th commit, lose a specific object) on top of
 //! these primitives, so crash recovery is deterministically testable.
 //!
+//! Two **execution backends** implement this surface: the threaded
+//! [`Runtime`] (real worker threads, wall time) and the simulated
+//! [`sim::SimRuntime`] (single-threaded discrete-event loop, virtual
+//! time, exactly reproducible from a seed — the `vopr` fuzzer's
+//! substrate). Code programs against [`handle::RuntimeHandle`] to run
+//! unchanged on either.
+//!
 //! The runtime is **multi-tenant**: every task, store entry, lineage
 //! record and task event is tagged with a [`JobId`]; per-node queues are
 //! split per job and drained by weighted fair-share dequeue; admission
@@ -54,17 +61,23 @@
 //! with [`crate::cost`].
 
 pub mod chaos;
+pub mod clock;
 pub mod future;
+pub mod handle;
 pub mod scheduler;
+pub mod sim;
 pub mod store;
 
 use std::sync::Arc;
 
+pub use clock::Clock;
 pub use future::TaskHandle;
+pub use handle::{RuntimeHandle, WeakRuntimeHandle};
 pub use scheduler::{
     DrainReport, JobParams, MembershipEvent, RecoveryReport, RecoveryStats,
     Runtime, RuntimeOptions, TaskCtx, TaskSpec,
 };
+pub use sim::SimRuntime;
 pub use store::{ObjectId, ObjectRef, StoreStats};
 
 /// Identity of a job inside a shared [`Runtime`] (the multi-tenant unit

@@ -60,6 +60,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::distfut::clock::Clock;
 use crate::distfut::future::TaskHandle;
 use crate::distfut::store::{ObjState, ObjectId, ObjectRef, Store, StoreStats};
 use crate::distfut::{DfError, JobId, Placement, TaskFn};
@@ -1621,6 +1622,12 @@ impl Runtime {
         self.shared.store.stats()
     }
 
+    /// Store entries still present in any state (the fuzzer's no-leak
+    /// probe: zero once every job has been retired).
+    pub fn store_live_entries(&self) -> usize {
+        self.shared.store.live_entries()
+    }
+
     /// Cumulative recovery counters (kills, losses, resubmissions).
     pub fn recovery_stats(&self) -> RecoveryStats {
         let sh = &self.shared;
@@ -1646,6 +1653,14 @@ impl Runtime {
     /// Seconds since runtime start (event timestamps use this clock).
     pub fn now(&self) -> f64 {
         self.shared.epoch.elapsed().as_secs_f64()
+    }
+
+    /// A [`Clock`] handle onto this runtime's epoch: `now_secs()` equals
+    /// [`Runtime::now`]. Stage clocks and reports read through this so
+    /// the same code measures wall seconds here and virtual seconds on
+    /// the simulated backend.
+    pub fn clock(&self) -> Clock {
+        Clock::Wall(self.shared.epoch)
     }
 
     /// Stop workers and join them. Pending tasks fail with ShutDown.

@@ -1,0 +1,2198 @@
+//! Deterministic discrete-event simulation backend for the distfut
+//! runtime.
+//!
+//! [`SimRuntime`] implements the same surface as the threaded
+//! [`crate::distfut::Runtime`] — submit/get, kill/add/drain, commit
+//! hooks, lineage recovery — as a **single-threaded event loop over a
+//! virtual clock**. No worker threads exist: task durations are drawn
+//! from a seeded counter-mode RNG ([`crate::util::rng::stream_at`]) and
+//! pushed onto an event heap; "waiting" (a handle's `wait`, a driver
+//! `get`) *pumps* the loop, popping the next completion event and
+//! running the task body inline. Every run is an exact function of
+//! `(seed, submission sequence)`: same seed, same task stream, same
+//! placements, same recovery decisions, same bytes.
+//!
+//! Not to be confused with [`crate::sim`], the *analytic cost model*:
+//! that module predicts CloudSort runtimes from closed-form disk/network
+//! formulas without executing anything, while this one actually executes
+//! task graphs (real task bodies, real object store) under virtual time.
+//! The two meet in the metrics layer: timelines built from either
+//! backend read timestamps through [`Clock`], so the same reporting code
+//! serves wall seconds and virtual seconds.
+//!
+//! What is deliberately **not** modeled, relative to the threaded
+//! backend: memory-admission watermarks, per-job resident budgets, and
+//! steal-delay locality windows. Those shift *when* a task dispatches,
+//! never *what* it computes, so output byte-identity between backends
+//! holds without them; the `vopr` fuzzer (see the CLI) leans on exactly
+//! that property.
+//!
+//! Concurrency: the loop is internally synchronized (several threads may
+//! pump; steps serialize on a loop lock), but determinism is only
+//! guaranteed when a single thread drives the runtime — the intended
+//! shape, and what [`crate::service::JobService`] does (its driver
+//! thread is the sole pumper).
+
+use std::collections::{BTreeSet, BinaryHeap, HashMap, HashSet, VecDeque};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, Weak};
+
+use crate::distfut::clock::Clock;
+use crate::distfut::future::{Pump, TaskHandle};
+use crate::distfut::scheduler::{
+    DrainReport, JobParams, MembershipEvent, RecoveryReport, RecoveryStats,
+    RuntimeOptions, TaskCtx, TaskSpec,
+};
+use crate::distfut::store::{
+    ObjState, ObjectId, ObjectRef, Store, StoreStats,
+};
+use crate::distfut::{DfError, JobId, Placement, TaskFn};
+use crate::metrics::TaskEvent;
+use crate::util::rng::stream_at;
+
+/// Unique spill-directory counter (mirrors the threaded runtime's).
+static NEXT_SIM: AtomicU64 = AtomicU64::new(0);
+
+/// Callback receiving the outcome of an asynchronous drain (the chaos
+/// harness's graceful scale-down path — it must not block the event
+/// loop, so completion is delivered by callback when the node's last
+/// running task finishes).
+pub type DrainCallback =
+    Box<dyn FnOnce(Result<DrainReport, DfError>) + Send>;
+
+/// A drain completion to deliver once runtime locks are released.
+type DrainNotice = (DrainCallback, Result<DrainReport, DfError>);
+
+/// A registered commit observer (see [`SimRuntime::on_commit`]).
+type CommitObserver = Arc<dyn Fn(u64, ObjectId, JobId) + Send + Sync>;
+
+/// Everything needed to re-execute a task during recovery (the sim's
+/// copy of the scheduler's lineage record — args demoted to ids so
+/// intermediates are not pinned for the runtime's lifetime).
+struct SimLineage {
+    /// Submission id — unique per task, orders resubmissions.
+    seq: u64,
+    name: String,
+    job: JobId,
+    placement: Placement,
+    func: TaskFn,
+    args: Vec<ObjectId>,
+    outputs: Vec<ObjectId>,
+    num_returns: usize,
+    max_retries: u32,
+}
+
+/// A submitted-but-not-running task (mirrors the scheduler's
+/// `QueuedTask`).
+struct SimTask {
+    spec: TaskSpec,
+    outputs: Vec<ObjectId>,
+    handle: TaskHandle,
+    attempt: u32,
+    /// Unresolved argument count (moved to `ready` when it reaches 0).
+    unresolved: usize,
+    /// True for lineage re-executions and dead-node reroutes.
+    recovery: bool,
+}
+
+/// A dispatched task occupying a node slot until its completion event.
+struct Running {
+    task: SimTask,
+    node: usize,
+    /// Ties this entry to its heap event; a kill re-parks the task and
+    /// the orphaned event is skipped as stale when popped.
+    dispatch_id: u64,
+    started: f64,
+    #[allow(dead_code)] // parity with the threaded worker's check
+    generation: u64,
+}
+
+/// One scheduled completion on the virtual timeline.
+struct SimEvent {
+    at: f64,
+    /// Insertion sequence — total order even among equal timestamps, so
+    /// heap pop order is deterministic.
+    seq: u64,
+    tid: u64,
+    dispatch_id: u64,
+}
+
+impl PartialEq for SimEvent {
+    fn eq(&self, other: &Self) -> bool {
+        self.seq == other.seq
+    }
+}
+impl Eq for SimEvent {}
+impl PartialOrd for SimEvent {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for SimEvent {
+    /// Reversed: `BinaryHeap` is a max-heap, we pop the *earliest* event
+    /// (ties broken by insertion order).
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        other
+            .at
+            .total_cmp(&self.at)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Per-job accounting (the sim's `JobSched`; no stride scheduling —
+/// dispatch is deterministic tid order under the in-flight cap).
+#[derive(Default)]
+struct SimJob {
+    params: JobParams,
+    /// Tasks currently holding a node slot.
+    running: usize,
+    /// Tasks submitted and not yet completed/failed.
+    outstanding: u64,
+}
+
+/// An in-progress graceful drain, completed when the node's last
+/// running task finishes.
+struct DrainOp {
+    job: JobId,
+    queue_reroutes: usize,
+    callbacks: Vec<DrainCallback>,
+}
+
+struct SimState {
+    /// Virtual seconds; advances to each popped event's timestamp.
+    now: f64,
+    next_dispatch_id: u64,
+    next_event_seq: u64,
+    /// Unresolved argument -> tids waiting on it.
+    waiting: HashMap<ObjectId, Vec<u64>>,
+    /// All submitted-not-running tasks by tid.
+    pending: HashMap<u64, SimTask>,
+    /// Tids with all arguments resolved, dispatched in ascending order.
+    ready: BTreeSet<u64>,
+    /// Dispatched tasks by tid.
+    running: HashMap<u64, Running>,
+    /// Occupied slots per node (indexed over the max_nodes span).
+    running_on: Vec<usize>,
+    jobs: HashMap<JobId, SimJob>,
+    heap: BinaryHeap<SimEvent>,
+    /// Submitted-not-completed tasks runtime-wide.
+    outstanding: u64,
+    /// Nodes mid-drain, keyed by node index.
+    drains: HashMap<usize, DrainOp>,
+    shutdown: bool,
+}
+
+impl SimState {
+    fn job_entry(&mut self, job: JobId) -> &mut SimJob {
+        self.jobs.entry(job).or_default()
+    }
+}
+
+/// The pump hook handed to task handles: driving a handle's `wait`
+/// steps the owning runtime's event loop. Holds a `Weak` so handles
+/// outliving the runtime report a drained loop instead of leaking it.
+struct SimPump(Weak<SimShared>);
+
+impl Pump for SimPump {
+    fn pump(&self) -> bool {
+        match self.0.upgrade() {
+            Some(sh) => sh.pump_step(),
+            None => false,
+        }
+    }
+}
+
+/// Snapshot of a running task taken under the state lock, executed
+/// outside it (phase B may re-enter the runtime through commit hooks —
+/// a chaos observer killing a node mid-commit).
+struct Dispatched {
+    tid: u64,
+    dispatch_id: u64,
+    node: usize,
+    attempt: u32,
+    started: f64,
+    recovery: bool,
+    name: String,
+    job: JobId,
+    func: TaskFn,
+    args: Vec<ObjectRef>,
+    outputs: Vec<ObjectId>,
+    num_returns: usize,
+    max_retries: u32,
+}
+
+/// What executing one task body decided (applied under the state lock
+/// in phase C).
+enum StepOutcome {
+    /// An argument was lost mid-fetch: re-park silently (no event, no
+    /// executed count) — recovery will re-resolve it.
+    ParkLost,
+    /// The node died under the task (commit refused): counts as a
+    /// reroute, re-park as recovery work.
+    ParkRecovery,
+    /// Terminal: complete the handle with this result.
+    Finished(Result<(), String>),
+    /// Failed with retries left.
+    Retry,
+}
+
+struct SimShared {
+    state: Mutex<SimState>,
+    /// Serializes pump steps (phase B runs task bodies outside the state
+    /// lock; two concurrent pumpers must not interleave bodies).
+    loop_lock: Mutex<()>,
+    store: Arc<Store>,
+    /// Virtual clock, f64 seconds as bits ([`Clock::Virtual`]).
+    clock: Arc<AtomicU64>,
+    seed: u64,
+    slots_per_node: usize,
+    max_nodes: usize,
+    /// Highest node index ever activated + 1.
+    provisioned: AtomicUsize,
+    record_lineage: bool,
+    max_reconstruction_depth: usize,
+    membership: Mutex<Vec<MembershipEvent>>,
+    events: Mutex<Vec<TaskEvent>>,
+    lineage: Mutex<HashMap<ObjectId, Arc<SimLineage>>>,
+    commit_observers: Mutex<Vec<(u64, CommitObserver)>>,
+    next_observer_id: AtomicU64,
+    next_job_id: AtomicU64,
+    next_task_id: AtomicU64,
+    /// The pump hook cloned into every handle this runtime issues.
+    pump_handle: Arc<SimPump>,
+    tasks_executed: AtomicU64,
+    tasks_retried: AtomicU64,
+    nodes_killed: AtomicU64,
+    objects_unrecoverable: AtomicU64,
+    tasks_resubmitted: AtomicU64,
+    tasks_rerouted: AtomicU64,
+}
+
+/// The simulated runtime. Construct with [`SimRuntime::new`]; the same
+/// `(options, seed)` pair replays the same execution bit-for-bit.
+pub struct SimRuntime {
+    shared: Arc<SimShared>,
+}
+
+impl SimRuntime {
+    /// Build a simulated cluster. `seed` parameterizes every sampled
+    /// task duration; two runtimes constructed with equal options and
+    /// seeds, driven by the same submission sequence from one thread,
+    /// produce identical task events, placements, and output bytes.
+    pub fn new(opts: RuntimeOptions, seed: u64) -> Arc<SimRuntime> {
+        let spill_dir = opts.spill_root.join(format!(
+            "exoshuffle-simspill-{}-{}",
+            std::process::id(),
+            NEXT_SIM.fetch_add(1, Ordering::Relaxed)
+        ));
+        let max_nodes = if opts.max_nodes == 0 {
+            opts.n_nodes
+        } else {
+            opts.max_nodes.max(opts.n_nodes)
+        };
+        let store = Store::new_elastic(
+            max_nodes,
+            opts.n_nodes,
+            opts.store_capacity_per_node,
+            spill_dir,
+        );
+        let shared = Arc::new_cyclic(|weak: &Weak<SimShared>| SimShared {
+            state: Mutex::new(SimState {
+                now: 0.0,
+                next_dispatch_id: 0,
+                next_event_seq: 0,
+                waiting: HashMap::new(),
+                pending: HashMap::new(),
+                ready: BTreeSet::new(),
+                running: HashMap::new(),
+                running_on: vec![0; max_nodes],
+                jobs: HashMap::from([(JobId::ROOT, SimJob::default())]),
+                heap: BinaryHeap::new(),
+                outstanding: 0,
+                drains: HashMap::new(),
+                shutdown: false,
+            }),
+            loop_lock: Mutex::new(()),
+            store,
+            clock: Arc::new(AtomicU64::new(0.0f64.to_bits())),
+            seed,
+            slots_per_node: opts.slots_per_node.max(1),
+            max_nodes,
+            provisioned: AtomicUsize::new(opts.n_nodes),
+            record_lineage: opts.record_lineage,
+            max_reconstruction_depth: opts.max_reconstruction_depth.max(1),
+            membership: Mutex::new(
+                (0..opts.n_nodes)
+                    .map(|node| MembershipEvent {
+                        at_secs: 0.0,
+                        node,
+                        joined: true,
+                    })
+                    .collect(),
+            ),
+            events: Mutex::new(Vec::new()),
+            lineage: Mutex::new(HashMap::new()),
+            commit_observers: Mutex::new(Vec::new()),
+            next_observer_id: AtomicU64::new(1),
+            next_job_id: AtomicU64::new(1),
+            next_task_id: AtomicU64::new(1),
+            pump_handle: Arc::new(SimPump(weak.clone())),
+            tasks_executed: AtomicU64::new(0),
+            tasks_retried: AtomicU64::new(0),
+            nodes_killed: AtomicU64::new(0),
+            objects_unrecoverable: AtomicU64::new(0),
+            tasks_resubmitted: AtomicU64::new(0),
+            tasks_rerouted: AtomicU64::new(0),
+        });
+        Arc::new(SimRuntime { shared })
+    }
+
+    /// The seed this runtime was constructed with (repro lines embed
+    /// it).
+    pub fn seed(&self) -> u64 {
+        self.shared.seed
+    }
+
+    /// Run one step of the event loop: dispatch everything dispatchable,
+    /// then pop and execute the next completion event. Returns `false`
+    /// when no further progress is possible (no runnable work and an
+    /// empty timeline — quiescence, or a genuine dependency deadlock).
+    pub fn pump(&self) -> bool {
+        self.shared.pump_step()
+    }
+
+    // ------------------------------------------------------------------
+    // submission
+    // ------------------------------------------------------------------
+
+    /// Submit a task; returns its output refs and a completion handle
+    /// whose `wait` drives the event loop.
+    pub fn submit(&self, spec: TaskSpec) -> (Vec<ObjectRef>, TaskHandle) {
+        let sh = &self.shared;
+        let job = spec.job;
+        let owner_node = match spec.placement {
+            Placement::Node(n) | Placement::Prefer(n) => n,
+            Placement::Any => 0,
+        };
+        let outputs: Vec<ObjectRef> = (0..spec.num_returns)
+            .map(|_| sh.store.declare(owner_node, job))
+            .collect();
+        let output_ids: Vec<ObjectId> =
+            outputs.iter().map(|o| o.id).collect();
+        let handle = TaskHandle::new_pumped(
+            spec.name.clone(),
+            sh.pump_handle.clone() as Arc<dyn Pump>,
+        );
+        let tid = sh.next_task_id.fetch_add(1, Ordering::Relaxed);
+
+        // Lineage before the task can run (and before the state lock —
+        // recovery takes them in the opposite order but never holds the
+        // lineage lock while acquiring state).
+        if sh.record_lineage && !output_ids.is_empty() {
+            let rec = Arc::new(SimLineage {
+                seq: tid,
+                name: spec.name.clone(),
+                job,
+                placement: spec.placement,
+                func: spec.func.clone(),
+                args: spec.args.iter().map(|a| a.id).collect(),
+                outputs: output_ids.clone(),
+                num_returns: spec.num_returns,
+                max_retries: spec.max_retries,
+            });
+            let mut lineage = sh.lineage.lock().unwrap();
+            for oid in &output_ids {
+                lineage.insert(*oid, rec.clone());
+            }
+        }
+
+        let mut st = sh.state.lock().unwrap();
+        if st.shutdown {
+            handle.complete(Err("runtime shut down".into()));
+            return (outputs, handle);
+        }
+        st.job_entry(job); // accounting exists even while waiting
+        let mut unresolved = 0usize;
+        for a in &spec.args {
+            if !sh.store.is_resolved(a.id) {
+                unresolved += 1;
+                st.waiting.entry(a.id).or_default().push(tid);
+            }
+        }
+        let task = SimTask {
+            spec,
+            outputs: output_ids,
+            handle: handle.clone(),
+            attempt: 0,
+            unresolved,
+            recovery: false,
+        };
+        st.outstanding += 1;
+        st.job_entry(job).outstanding += 1;
+        if unresolved == 0 {
+            st.ready.insert(tid);
+        }
+        st.pending.insert(tid, task);
+        (outputs, handle)
+    }
+
+    /// Submit on behalf of `job` (stamps [`TaskSpec::job`]).
+    pub fn submit_for(
+        &self,
+        job: JobId,
+        mut spec: TaskSpec,
+    ) -> (Vec<ObjectRef>, TaskHandle) {
+        spec.job = job;
+        self.submit(spec)
+    }
+
+    // ------------------------------------------------------------------
+    // objects
+    // ------------------------------------------------------------------
+
+    /// Put a buffer into `node`'s store from the driver (redirected to a
+    /// live node if `node` is dead).
+    pub fn put(&self, node: usize, data: Vec<u8>) -> ObjectRef {
+        let node = self.shared.live_target(node);
+        self.shared.store.put(node, data)
+    }
+
+    /// Driver-side fetch: pumps the event loop until the object
+    /// resolves (the single-threaded analogue of the threaded store's
+    /// blocking get), then reads it.
+    pub fn get(&self, r: &ObjectRef) -> Result<Arc<Vec<u8>>, DfError> {
+        self.get_resolved(r.id, usize::MAX)
+    }
+
+    /// Fetch from a specific node's perspective (counts a transfer).
+    pub fn get_from(
+        &self,
+        r: &ObjectRef,
+        node: usize,
+    ) -> Result<Arc<Vec<u8>>, DfError> {
+        self.get_resolved(r.id, node)
+    }
+
+    fn get_resolved(
+        &self,
+        id: ObjectId,
+        node: usize,
+    ) -> Result<Arc<Vec<u8>>, DfError> {
+        loop {
+            if self.shared.store.is_resolved(id) {
+                return self.shared.store.get(id, node);
+            }
+            if !self.shared.pump_step() {
+                return Err(DfError::Recovery(format!(
+                    "simulation deadlock: object {id:?} never resolves"
+                )));
+            }
+        }
+    }
+
+    /// Whether the object's data has been produced.
+    pub fn object_ready(&self, r: &ObjectRef) -> bool {
+        self.shared.store.is_ready(r.id)
+    }
+
+    /// Run `f` once `r`'s data is available: inline if already produced,
+    /// otherwise from inside the event step that commits it.
+    pub fn on_ready<F>(&self, r: &ObjectRef, f: F)
+    where
+        F: FnOnce() + Send + 'static,
+    {
+        self.shared.store.subscribe(r.id, Box::new(f));
+    }
+
+    // ------------------------------------------------------------------
+    // commit observation
+    // ------------------------------------------------------------------
+
+    /// Observe every data-bearing commit (the chaos trigger surface);
+    /// same contract as the threaded runtime's.
+    pub fn on_commit<F>(&self, f: F) -> u64
+    where
+        F: Fn(u64, ObjectId, JobId) + Send + Sync + 'static,
+    {
+        let id = self
+            .shared
+            .next_observer_id
+            .fetch_add(1, Ordering::Relaxed);
+        let mut obs = self.shared.commit_observers.lock().unwrap();
+        obs.push((id, Arc::new(f)));
+        drop(obs);
+        let weak = Arc::downgrade(&self.shared);
+        self.shared.store.set_commit_hook(Box::new(
+            move |seq, oid, job| {
+                let Some(sh) = weak.upgrade() else { return };
+                let snapshot: Vec<CommitObserver> = sh
+                    .commit_observers
+                    .lock()
+                    .unwrap()
+                    .iter()
+                    .map(|(_, f)| f.clone())
+                    .collect();
+                for f in snapshot {
+                    f(seq, oid, job);
+                }
+            },
+        ));
+        id
+    }
+
+    /// Remove one commit observer.
+    pub fn remove_commit_observer(&self, id: u64) {
+        let mut obs = self.shared.commit_observers.lock().unwrap();
+        obs.retain(|(oid, _)| *oid != id);
+        if obs.is_empty() {
+            self.shared.store.disarm_commit_hook();
+        }
+    }
+
+    /// Data-bearing commits so far.
+    pub fn commit_count(&self) -> u64 {
+        self.shared.store.commit_count()
+    }
+
+    /// Remove every commit observer.
+    pub fn disarm_commit_hook(&self) {
+        self.shared.commit_observers.lock().unwrap().clear();
+        self.shared.store.disarm_commit_hook();
+    }
+
+    // ------------------------------------------------------------------
+    // jobs
+    // ------------------------------------------------------------------
+
+    /// Allocate a fresh job identity.
+    pub fn register_job(&self, params: JobParams) -> JobId {
+        let id =
+            JobId(self.shared.next_job_id.fetch_add(1, Ordering::Relaxed));
+        let mut st = self.shared.state.lock().unwrap();
+        st.jobs.insert(
+            id,
+            SimJob {
+                params,
+                ..SimJob::default()
+            },
+        );
+        id
+    }
+
+    /// Update a job's scheduling parameters.
+    pub fn set_job_params(&self, job: JobId, params: JobParams) {
+        let mut st = self.shared.state.lock().unwrap();
+        st.job_entry(job).params = params;
+    }
+
+    /// Tasks of `job` currently executing.
+    pub fn job_in_flight(&self, job: JobId) -> usize {
+        let st = self.shared.state.lock().unwrap();
+        st.jobs.get(&job).map(|j| j.running).unwrap_or(0)
+    }
+
+    /// Whether `job` has no submitted-not-completed tasks.
+    pub fn job_quiesced(&self, job: JobId) -> bool {
+        let st = self.shared.state.lock().unwrap();
+        st.jobs.get(&job).map(|j| j.outstanding == 0).unwrap_or(true)
+    }
+
+    /// Pump the event loop until `job` quiesces (the single-threaded
+    /// analogue of polling [`SimRuntime::job_quiesced`] with a sleep).
+    pub fn await_job_quiesced(&self, job: JobId) {
+        while !self.job_quiesced(job) {
+            if !self.shared.pump_step() {
+                return; // drained: outstanding handles surface errors
+            }
+        }
+    }
+
+    /// Retire a completed job: free lineage, drain its task events,
+    /// sweep leftover store entries, drop its accounting.
+    pub fn retire_job(&self, job: JobId) -> Vec<TaskEvent> {
+        let sh = &self.shared;
+        sh.lineage.lock().unwrap().retain(|_, r| r.job != job);
+        let events = {
+            let mut ev = sh.events.lock().unwrap();
+            let (mine, rest): (Vec<TaskEvent>, Vec<TaskEvent>) =
+                ev.drain(..).partition(|e| e.job == job);
+            *ev = rest;
+            mine
+        };
+        sh.store.purge_job(job);
+        let mut st = sh.state.lock().unwrap();
+        let live =
+            st.jobs.get(&job).map(|j| j.outstanding > 0).unwrap_or(false);
+        if !live && job != JobId::ROOT {
+            st.jobs.remove(&job);
+        }
+        events
+    }
+
+    // ------------------------------------------------------------------
+    // fleet membership
+    // ------------------------------------------------------------------
+
+    /// Hot-join a worker node (fresh incarnation of a retired slot, or a
+    /// new slot below `max_nodes`).
+    pub fn add_node(&self) -> Result<usize, DfError> {
+        self.add_node_as(JobId::ROOT)
+    }
+
+    /// [`SimRuntime::add_node`], attributing the marker event to `job`.
+    pub fn add_node_as(&self, job: JobId) -> Result<usize, DfError> {
+        let sh = &self.shared;
+        let st = sh.state.lock().unwrap();
+        sh.add_node_locked(&st, job)
+    }
+
+    /// Kill a node: resident objects vanish, running and queued work
+    /// reroutes, lost lineage re-executes. Same validation and report
+    /// semantics as the threaded runtime.
+    pub fn kill_node(&self, node: usize) -> Result<RecoveryReport, DfError> {
+        self.kill_node_as(node, JobId::ROOT)
+    }
+
+    /// [`SimRuntime::kill_node`], attributing the marker to `job`.
+    ///
+    /// Takes only the state lock (not the loop lock): a chaos observer
+    /// fires this *inside* an event step, which already holds the loop
+    /// lock.
+    pub fn kill_node_as(
+        &self,
+        node: usize,
+        job: JobId,
+    ) -> Result<RecoveryReport, DfError> {
+        let sh = &self.shared;
+        let mut notices: Vec<DrainNotice> = Vec::new();
+        let result = {
+            let mut st = sh.state.lock().unwrap();
+            let span = sh.n_provisioned();
+            if node >= span {
+                return Err(DfError::Recovery(format!(
+                    "no such node {node} (cluster has {span})"
+                )));
+            }
+            if sh.store.is_dead(node) {
+                return Err(DfError::Recovery(format!(
+                    "node {node} is already dead"
+                )));
+            }
+            let live = (0..span).filter(|&n| !sh.store.is_dead(n)).count();
+            if live <= 1 {
+                return Err(DfError::Recovery(
+                    "cannot kill the last live node".into(),
+                ));
+            }
+            // Queue reroutes counted before the store flips the node
+            // dead (afterwards live_target no longer lands on it).
+            let queue_reroutes = sh.count_pinned_ready(&st, node);
+            let lost = sh.store.fail_node(node);
+            sh.nodes_killed.fetch_add(1, Ordering::Relaxed);
+            let now = st.now;
+            sh.membership.lock().unwrap().push(MembershipEvent {
+                at_secs: now,
+                node,
+                joined: false,
+            });
+            sh.events.lock().unwrap().push(TaskEvent {
+                name: format!("node-killed-{node}"),
+                job,
+                node,
+                start: now,
+                end: now,
+                ok: false,
+                attempt: 0,
+                recovery: true,
+            });
+            // A drain in progress on this node can never complete now.
+            if let Some(op) = st.drains.remove(&node) {
+                sh.store.set_draining(node, false);
+                for cb in op.callbacks {
+                    notices.push((
+                        cb,
+                        Err(DfError::Recovery(format!(
+                            "node {node} was killed while draining"
+                        ))),
+                    ));
+                }
+            }
+            // Re-park the node's running tasks: their in-progress bodies
+            // (if any — a kill from a chaos observer interrupts exactly
+            // one, mid-phase-B) will find their entry gone and defer to
+            // this re-park. Sorted so fresh tid assignment order never
+            // depends on hash-map iteration.
+            let mut killed: Vec<u64> = st
+                .running
+                .iter()
+                .filter(|(_, r)| r.node == node)
+                .map(|(tid, _)| *tid)
+                .collect();
+            killed.sort_unstable();
+            for tid in killed {
+                let r = st.running.remove(&tid).unwrap();
+                st.running_on[r.node] -= 1;
+                st.job_entry(r.task.spec.job).running -= 1;
+                sh.tasks_rerouted.fetch_add(1, Ordering::Relaxed);
+                let mut task = r.task;
+                task.recovery = true;
+                sh.repark(&mut st, task);
+            }
+            Ok(sh.recover(&mut st, lost, queue_reroutes))
+        };
+        for (cb, res) in notices {
+            cb(res);
+        }
+        result
+    }
+
+    /// Drop one object's resident data and re-execute its lineage.
+    pub fn lose_object(
+        &self,
+        id: ObjectId,
+    ) -> Result<RecoveryReport, DfError> {
+        let sh = &self.shared;
+        let mut st = sh.state.lock().unwrap();
+        if !sh.store.drop_object(id) {
+            return Err(DfError::Recovery(format!(
+                "object {id:?} has no resident data to lose"
+            )));
+        }
+        Ok(sh.recover(&mut st, vec![id], 0))
+    }
+
+    /// Gracefully decommission `node`, pumping the loop until its
+    /// running tasks finish. Same validation/report semantics as the
+    /// threaded [`crate::distfut::Runtime::drain_node`].
+    pub fn drain_node(&self, node: usize) -> Result<DrainReport, DfError> {
+        self.drain_node_as(node, JobId::ROOT)
+    }
+
+    /// [`SimRuntime::drain_node`], attributing the marker to `job`.
+    pub fn drain_node_as(
+        &self,
+        node: usize,
+        job: JobId,
+    ) -> Result<DrainReport, DfError> {
+        let slot: Arc<Mutex<Option<Result<DrainReport, DfError>>>> =
+            Arc::new(Mutex::new(None));
+        let slot2 = slot.clone();
+        self.drain_node_async(
+            node,
+            job,
+            Box::new(move |res| {
+                *slot2.lock().unwrap() = Some(res);
+            }),
+        );
+        loop {
+            if let Some(res) = slot.lock().unwrap().take() {
+                return res;
+            }
+            if !self.shared.pump_step() {
+                return Err(DfError::Recovery(
+                    "simulation deadlock: drain never completed".into(),
+                ));
+            }
+        }
+    }
+
+    /// Begin a drain and deliver its result by callback when the node's
+    /// last running task completes. Never pumps — safe to call from a
+    /// commit observer inside an event step.
+    pub fn drain_node_async(
+        &self,
+        node: usize,
+        job: JobId,
+        done: DrainCallback,
+    ) {
+        let sh = &self.shared;
+        let mut notices: Vec<DrainNotice> = Vec::new();
+        {
+            let mut st = sh.state.lock().unwrap();
+            match sh.begin_drain(&mut st, node, job) {
+                Err(e) => notices.push((done, Err(e))),
+                Ok(()) => {
+                    st.drains
+                        .get_mut(&node)
+                        .expect("drain op just inserted")
+                        .callbacks
+                        .push(done);
+                    if st.running_on[node] == 0 {
+                        notices.extend(sh.complete_drain(&mut st, node));
+                    }
+                }
+            }
+        }
+        for (cb, res) in notices {
+            cb(res);
+        }
+    }
+
+    /// Grow/shrink the fleet to `target` available nodes, draining
+    /// highest-index nodes first; the outcome line is delivered by
+    /// callback. Never pumps (chaos scale events fire inside event
+    /// steps).
+    pub fn scale_to_async(
+        &self,
+        target: usize,
+        job: JobId,
+        done: Box<dyn FnOnce(String) + Send>,
+    ) {
+        let sh = &self.shared;
+        let mut added = 0usize;
+        while self.available_nodes() < target {
+            match self.add_node_as(job) {
+                Ok(_) => added += 1,
+                Err(e) => {
+                    done(format!(
+                        "scale-to {target} stopped after +{added}: {e}"
+                    ));
+                    return;
+                }
+            }
+        }
+        let mut victims: Vec<usize> = (0..sh.n_provisioned())
+            .filter(|&n| sh.store.is_available(n))
+            .collect();
+        let excess = victims.len().saturating_sub(target);
+        victims = victims.split_off(victims.len() - excess);
+        victims.reverse(); // highest index drains first
+        if victims.is_empty() {
+            done(format!(
+                "scaled fleet to {target} available nodes (+{added}/-0)"
+            ));
+            return;
+        }
+        let gate = Arc::new(Mutex::new(ScaleGate {
+            remaining: victims.len(),
+            drained: 0,
+            first_err: None,
+            done: Some(done),
+        }));
+        for node in victims {
+            let gate = gate.clone();
+            self.drain_node_async(
+                node,
+                job,
+                Box::new(move |res| {
+                    let mut g = gate.lock().unwrap();
+                    match res {
+                        Ok(_) => g.drained += 1,
+                        Err(e) => {
+                            if g.first_err.is_none() {
+                                g.first_err = Some(e.to_string());
+                            }
+                        }
+                    }
+                    g.remaining -= 1;
+                    if g.remaining == 0 {
+                        let done =
+                            g.done.take().expect("gate fires once");
+                        let msg = match &g.first_err {
+                            Some(e) => format!(
+                                "scale-to {target} stopped after \
+                                 -{}: {e}",
+                                g.drained
+                            ),
+                            None => format!(
+                                "scaled fleet to {target} available \
+                                 nodes (+{added}/-{})",
+                                g.drained
+                            ),
+                        };
+                        drop(g);
+                        done(msg);
+                    }
+                }),
+            );
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // views
+    // ------------------------------------------------------------------
+
+    /// Provisioned node span (highest activated index + 1).
+    pub fn n_nodes(&self) -> usize {
+        self.shared.n_provisioned()
+    }
+
+    /// Fleet ceiling.
+    pub fn max_nodes(&self) -> usize {
+        self.shared.max_nodes
+    }
+
+    /// Whether `node` was killed or retired.
+    pub fn is_node_dead(&self, node: usize) -> bool {
+        node < self.shared.n_provisioned() && self.shared.store.is_dead(node)
+    }
+
+    /// Whether `node` can currently be offered work.
+    pub fn is_node_available(&self, node: usize) -> bool {
+        node < self.shared.n_provisioned()
+            && self.shared.store.is_available(node)
+    }
+
+    /// Nodes still alive (draining nodes count until they retire).
+    pub fn live_nodes(&self) -> usize {
+        (0..self.shared.n_provisioned())
+            .filter(|&n| !self.shared.store.is_dead(n))
+            .count()
+    }
+
+    /// Nodes currently accepting work.
+    pub fn available_nodes(&self) -> usize {
+        (0..self.shared.n_provisioned())
+            .filter(|&n| self.shared.store.is_available(n))
+            .count()
+    }
+
+    /// The highest-index available node (scale-down victim order).
+    pub fn highest_available_node(&self) -> Option<usize> {
+        (0..self.shared.n_provisioned())
+            .rev()
+            .find(|&n| self.shared.store.is_available(n))
+    }
+
+    /// Fleet-membership changes since construction, oldest first.
+    pub fn membership_log(&self) -> Vec<MembershipEvent> {
+        self.shared.membership.lock().unwrap().clone()
+    }
+
+    /// Live-node count over virtual time.
+    pub fn node_count_timeline(&self) -> Vec<(f64, usize)> {
+        let mut out: Vec<(f64, usize)> = Vec::new();
+        let mut live = 0usize;
+        for e in self.membership_log() {
+            live = if e.joined {
+                live + 1
+            } else {
+                live.saturating_sub(1)
+            };
+            match out.last_mut() {
+                Some((t, l)) if *t == e.at_secs => *l = live,
+                _ => out.push((e.at_secs, live)),
+            }
+        }
+        out
+    }
+
+    /// Per-node liveness intervals `[join, leave)`, closing open ones at
+    /// `until` (virtual seconds).
+    pub fn node_liveness(&self, until: f64) -> Vec<Vec<(f64, f64)>> {
+        let span = self.shared.n_provisioned();
+        let mut intervals = vec![Vec::new(); span];
+        let mut open: Vec<Option<f64>> = vec![None; span];
+        for e in self.membership_log() {
+            if e.node >= span {
+                continue;
+            }
+            if e.joined {
+                open[e.node].get_or_insert(e.at_secs);
+            } else if let Some(start) = open[e.node].take() {
+                if e.at_secs > start {
+                    intervals[e.node].push((start, e.at_secs));
+                }
+            }
+        }
+        for (node, o) in open.into_iter().enumerate() {
+            if let Some(start) = o {
+                if until > start {
+                    intervals[node].push((start, until));
+                }
+            }
+        }
+        intervals
+    }
+
+    /// Tasks sitting runnable right now.
+    pub fn queued_tasks(&self) -> usize {
+        self.shared.state.lock().unwrap().ready.len()
+    }
+
+    /// Tasks occupying node slots right now.
+    pub fn running_tasks(&self) -> usize {
+        self.shared.state.lock().unwrap().running_on.iter().sum()
+    }
+
+    /// Concurrent task slots per node.
+    pub fn slots_per_node(&self) -> usize {
+        self.shared.slots_per_node
+    }
+
+    /// Peak resident-store fraction across available nodes.
+    pub fn peak_residency_fraction(&self) -> f64 {
+        let sh = &self.shared;
+        (0..sh.n_provisioned())
+            .filter(|&n| sh.store.is_available(n))
+            .map(|n| {
+                sh.store.resident_on(n) as f64
+                    / sh.store.capacity_of(n).max(1) as f64
+            })
+            .fold(0.0, f64::max)
+    }
+
+    /// Pump until no tasks are outstanding (or the loop drains).
+    pub fn wait_quiescent(&self) {
+        loop {
+            if self.shared.state.lock().unwrap().outstanding == 0 {
+                return;
+            }
+            if !self.shared.pump_step() {
+                return;
+            }
+        }
+    }
+
+    /// Task execution log, timestamped in virtual seconds.
+    pub fn task_events(&self) -> Vec<TaskEvent> {
+        self.shared.events.lock().unwrap().clone()
+    }
+
+    /// Store statistics.
+    pub fn store_stats(&self) -> StoreStats {
+        self.shared.store.stats()
+    }
+
+    /// Store entries still present in any state (the fuzzer's no-leak
+    /// probe).
+    pub fn store_live_entries(&self) -> usize {
+        self.shared.store.live_entries()
+    }
+
+    /// Cumulative recovery counters.
+    pub fn recovery_stats(&self) -> RecoveryStats {
+        let sh = &self.shared;
+        RecoveryStats {
+            nodes_killed: sh.nodes_killed.load(Ordering::Relaxed),
+            objects_lost: sh.store.stats().objects_lost,
+            objects_unrecoverable: sh
+                .objects_unrecoverable
+                .load(Ordering::Relaxed),
+            tasks_resubmitted: sh.tasks_resubmitted.load(Ordering::Relaxed),
+            tasks_rerouted: sh.tasks_rerouted.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Total tasks executed (attempts) and retried.
+    pub fn task_counts(&self) -> (u64, u64) {
+        (
+            self.shared.tasks_executed.load(Ordering::Relaxed),
+            self.shared.tasks_retried.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Current virtual time in seconds.
+    pub fn now(&self) -> f64 {
+        f64::from_bits(self.shared.clock.load(Ordering::SeqCst))
+    }
+
+    /// A [`Clock`] onto this runtime's virtual timeline.
+    pub fn clock(&self) -> Clock {
+        Clock::Virtual(self.shared.clock.clone())
+    }
+
+    /// Shut the runtime down: every submitted-not-completed task fails
+    /// with "runtime shut down", the timeline clears, in-progress drains
+    /// error out. Idempotent.
+    pub fn shutdown(&self) {
+        let mut notices: Vec<DrainNotice> = Vec::new();
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            if st.shutdown {
+                return;
+            }
+            st.shutdown = true;
+            for (_, t) in st.pending.drain() {
+                t.handle.complete(Err("runtime shut down".into()));
+            }
+            for (_, r) in st.running.drain() {
+                r.task.handle.complete(Err("runtime shut down".into()));
+            }
+            st.ready.clear();
+            st.waiting.clear();
+            st.heap.clear();
+            st.outstanding = 0;
+            for j in st.jobs.values_mut() {
+                j.running = 0;
+                j.outstanding = 0;
+            }
+            st.running_on.iter_mut().for_each(|n| *n = 0);
+            let drains: Vec<DrainOp> =
+                st.drains.drain().map(|(_, op)| op).collect();
+            for op in drains {
+                for cb in op.callbacks {
+                    notices.push((
+                        cb,
+                        Err(DfError::Recovery("runtime is shut down".into())),
+                    ));
+                }
+            }
+        }
+        for (cb, res) in notices {
+            cb(res);
+        }
+    }
+}
+
+impl Drop for SimRuntime {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+impl SimShared {
+    fn n_provisioned(&self) -> usize {
+        self.provisioned.load(Ordering::Relaxed)
+    }
+
+    /// Ring-order redirect off dead/unavailable nodes (the scheduler's
+    /// `live_target`, over the sim's provisioned span).
+    fn live_target(&self, n: usize) -> usize {
+        let span = self.n_provisioned().max(1);
+        let n = n % span;
+        if self.store.is_available(n) {
+            return n;
+        }
+        (1..span)
+            .map(|i| (n + i) % span)
+            .find(|&c| self.store.is_available(c))
+            .or_else(|| {
+                (0..span)
+                    .map(|i| (n + i) % span)
+                    .find(|&c| !self.store.is_dead(c))
+            })
+            .unwrap_or(n)
+    }
+
+    /// Ready tasks whose pinned placement lands on `node` — the sim's
+    /// queue-reroute count (it has no per-node queues; routing happens
+    /// at dispatch, so "rerouting" is what live_target will silently do
+    /// for these once the node stops being available).
+    fn count_pinned_ready(&self, st: &SimState, node: usize) -> usize {
+        st.ready
+            .iter()
+            .filter(|&&tid| {
+                st.pending.get(&tid).is_some_and(|t| {
+                    matches!(t.spec.placement, Placement::Node(n)
+                        if self.live_target(n) == node)
+                })
+            })
+            .count()
+    }
+
+    /// Sampled virtual duration of one dispatch: 1–5 ms, a pure
+    /// function of `(seed, dispatch_id)` via the shared splitmix64
+    /// stream — the single source of simulated nondeterminism.
+    fn duration_of(&self, dispatch_id: u64) -> f64 {
+        1e-3 * (1.0 + (stream_at(self.seed, dispatch_id) % 4096) as f64 / 1024.0)
+    }
+
+    /// Placement decision for a ready task; `None` leaves it queued.
+    fn pick_node(
+        &self,
+        running_on: &[usize],
+        task: &SimTask,
+    ) -> Option<usize> {
+        let span = self.n_provisioned();
+        let free = |n: usize| {
+            n < span
+                && self.store.is_available(n)
+                && running_on[n] < self.slots_per_node
+        };
+        match task.spec.placement {
+            Placement::Node(n) => {
+                // pinned: runs on the live target or waits for a slot
+                let t = self.live_target(n);
+                free(t).then_some(t)
+            }
+            Placement::Prefer(n) => {
+                let t = self.live_target(n);
+                if free(t) {
+                    Some(t)
+                } else {
+                    (0..span).find(|&c| free(c))
+                }
+            }
+            Placement::Any => {
+                let arg_ids: Vec<ObjectId> =
+                    task.spec.args.iter().map(|a| a.id).collect();
+                match self.store.locality_node(&arg_ids) {
+                    Some(n) if free(n) => Some(n),
+                    _ => (0..span).find(|&c| free(c)),
+                }
+            }
+        }
+    }
+
+    /// Move every dispatchable ready task onto a node and schedule its
+    /// completion event. Repeats until a full pass dispatches nothing
+    /// (a dispatch can free no slot, but placement choices interact).
+    fn dispatch_ready(&self, st: &mut SimState) {
+        loop {
+            let snapshot: Vec<u64> = st.ready.iter().copied().collect();
+            let mut dispatched_any = false;
+            for tid in snapshot {
+                let Some(task) = st.pending.get(&tid) else {
+                    st.ready.remove(&tid);
+                    continue;
+                };
+                let job = task.spec.job;
+                let cap_ok = st
+                    .jobs
+                    .get(&job)
+                    .map(|j| {
+                        j.params
+                            .max_in_flight
+                            .is_none_or(|cap| j.running < cap)
+                    })
+                    .unwrap_or(true);
+                if !cap_ok {
+                    continue;
+                }
+                let Some(node) = self.pick_node(&st.running_on, task)
+                else {
+                    continue;
+                };
+                st.ready.remove(&tid);
+                let task = st.pending.remove(&tid).expect("checked above");
+                let dispatch_id = st.next_dispatch_id;
+                st.next_dispatch_id += 1;
+                let seq = st.next_event_seq;
+                st.next_event_seq += 1;
+                let dur = self.duration_of(dispatch_id);
+                st.heap.push(SimEvent {
+                    at: st.now + dur,
+                    seq,
+                    tid,
+                    dispatch_id,
+                });
+                st.running_on[node] += 1;
+                st.job_entry(job).running += 1;
+                let generation = self.store.node_generation(node);
+                st.running.insert(
+                    tid,
+                    Running {
+                        task,
+                        node,
+                        dispatch_id,
+                        started: st.now,
+                        generation,
+                    },
+                );
+                dispatched_any = true;
+            }
+            if !dispatched_any {
+                return;
+            }
+        }
+    }
+
+    /// One event-loop step. Three phases: (A) dispatch + pop the next
+    /// live event under the state lock, (B) run the task body with the
+    /// state lock *released* (bodies and commit hooks may re-enter the
+    /// runtime — chaos kills, downstream submits), (C) apply the
+    /// outcome. Returns `false` when the loop is drained.
+    fn pump_step(&self) -> bool {
+        let _step = self.loop_lock.lock().unwrap();
+
+        // --- phase A: dispatch, then pop the next non-stale event ---
+        let d: Dispatched = {
+            let mut st = self.state.lock().unwrap();
+            if st.shutdown {
+                return false;
+            }
+            self.dispatch_ready(&mut st);
+            loop {
+                let Some(ev) = st.heap.pop() else {
+                    return false;
+                };
+                // Stale events: the task was re-parked (kill) since this
+                // completion was scheduled.
+                let live = st
+                    .running
+                    .get(&ev.tid)
+                    .is_some_and(|r| r.dispatch_id == ev.dispatch_id);
+                if !live {
+                    continue;
+                }
+                if ev.at > st.now {
+                    st.now = ev.at;
+                    self.clock
+                        .store(st.now.to_bits(), Ordering::SeqCst);
+                }
+                let r = &st.running[&ev.tid];
+                break Dispatched {
+                    tid: ev.tid,
+                    dispatch_id: ev.dispatch_id,
+                    node: r.node,
+                    attempt: r.task.attempt,
+                    started: r.started,
+                    recovery: r.task.recovery,
+                    name: r.task.spec.name.clone(),
+                    job: r.task.spec.job,
+                    func: r.task.spec.func.clone(),
+                    args: r.task.spec.args.clone(),
+                    outputs: r.task.outputs.clone(),
+                    num_returns: r.task.spec.num_returns,
+                    max_retries: r.task.spec.max_retries,
+                };
+            }
+        };
+
+        // --- phase B: execute the body outside the state lock ---
+        let outcome = self.execute(&d);
+
+        // --- phase C: apply under the state lock ---
+        let notices = {
+            let mut st = self.state.lock().unwrap();
+            let still_ours = st
+                .running
+                .get(&d.tid)
+                .is_some_and(|r| r.dispatch_id == d.dispatch_id);
+            if !still_ours {
+                // a kill re-parked it mid-body; nothing more to do
+                self.check_drain(&mut st, d.node)
+            } else {
+                let r = st.running.remove(&d.tid).expect("checked");
+                st.running_on[d.node] -= 1;
+                st.job_entry(d.job).running -= 1;
+                let mut task = r.task;
+                if !matches!(outcome, StepOutcome::ParkLost) {
+                    self.tasks_executed.fetch_add(1, Ordering::Relaxed);
+                    self.events.lock().unwrap().push(TaskEvent {
+                        name: d.name.clone(),
+                        job: d.job,
+                        node: d.node,
+                        start: d.started,
+                        end: st.now,
+                        ok: matches!(
+                            outcome,
+                            StepOutcome::Finished(Ok(()))
+                        ),
+                        attempt: d.attempt,
+                        recovery: d.recovery,
+                    });
+                }
+                match outcome {
+                    StepOutcome::ParkLost => self.repark(&mut st, task),
+                    StepOutcome::ParkRecovery => {
+                        self.tasks_rerouted.fetch_add(1, Ordering::Relaxed);
+                        task.recovery = true;
+                        self.repark(&mut st, task);
+                    }
+                    StepOutcome::Retry => {
+                        task.attempt += 1;
+                        self.tasks_retried.fetch_add(1, Ordering::Relaxed);
+                        let tid = self
+                            .next_task_id
+                            .fetch_add(1, Ordering::Relaxed);
+                        // arguments stayed resolved: straight to ready
+                        st.ready.insert(tid);
+                        st.pending.insert(tid, task);
+                    }
+                    StepOutcome::Finished(result) => {
+                        task.handle.complete(result);
+                        self.finish(&mut st, d.job, &task.outputs);
+                    }
+                }
+                self.check_drain(&mut st, d.node)
+            }
+        };
+        for (cb, res) in notices {
+            cb(res);
+        }
+        true
+    }
+
+    /// Phase B: fetch arguments, run the task function, commit outputs.
+    /// Mirrors the threaded `worker_loop` body, including the exact
+    /// failure strings.
+    fn execute(&self, d: &Dispatched) -> StepOutcome {
+        let mut args: Vec<Arc<Vec<u8>>> = Vec::with_capacity(d.args.len());
+        for a in &d.args {
+            match self.store.get(a.id, d.node) {
+                Ok(buf) => args.push(buf),
+                Err(DfError::ObjectLost(_)) => return StepOutcome::ParkLost,
+                Err(e) => return StepOutcome::Finished(Err(e.to_string())),
+            }
+        }
+        let ctx = TaskCtx {
+            node: d.node,
+            args,
+            attempt: d.attempt,
+        };
+        match (d.func)(&ctx) {
+            Ok(outs) => {
+                if outs.len() != d.num_returns {
+                    for o in &d.outputs {
+                        self.store.fail(*o);
+                    }
+                    return StepOutcome::Finished(Err(format!(
+                        "task '{}' returned {} outputs, declared {}",
+                        d.name,
+                        outs.len(),
+                        d.num_returns
+                    )));
+                }
+                for (o, data) in d.outputs.iter().zip(outs) {
+                    if !self.store.commit_from(*o, d.node, data) {
+                        // node died under us (a chaos kill re-entered
+                        // from a commit hook of an earlier output)
+                        return StepOutcome::ParkRecovery;
+                    }
+                }
+                StepOutcome::Finished(Ok(()))
+            }
+            Err(msg) => {
+                if d.attempt < d.max_retries {
+                    StepOutcome::Retry
+                } else {
+                    for o in &d.outputs {
+                        self.store.fail(*o);
+                    }
+                    StepOutcome::Finished(Err(format!(
+                        "{msg} (after {} attempts)",
+                        d.attempt + 1
+                    )))
+                }
+            }
+        }
+    }
+
+    /// Return a task to the pending set under a fresh tid, re-counting
+    /// unresolved arguments (some may have been lost since).
+    fn repark(&self, st: &mut SimState, mut task: SimTask) {
+        if st.shutdown {
+            task.handle.complete(Err("runtime shut down".into()));
+            st.outstanding = st.outstanding.saturating_sub(1);
+            let j = st.job_entry(task.spec.job);
+            j.outstanding = j.outstanding.saturating_sub(1);
+            return;
+        }
+        let tid = self.next_task_id.fetch_add(1, Ordering::Relaxed);
+        let mut unresolved = 0usize;
+        for a in &task.spec.args {
+            if !self.store.is_resolved(a.id) {
+                unresolved += 1;
+                st.waiting.entry(a.id).or_default().push(tid);
+            }
+        }
+        task.unresolved = unresolved;
+        if unresolved == 0 {
+            st.ready.insert(tid);
+        }
+        st.pending.insert(tid, task);
+    }
+
+    /// A task completed (ok or terminally failed): wake consumers of its
+    /// outputs and drop it from the outstanding counts.
+    fn finish(&self, st: &mut SimState, job: JobId, outputs: &[ObjectId]) {
+        for o in outputs {
+            if let Some(waiters) = st.waiting.remove(o) {
+                for wtid in waiters {
+                    if let Some(w) = st.pending.get_mut(&wtid) {
+                        w.unresolved -= 1;
+                        if w.unresolved == 0 {
+                            st.ready.insert(wtid);
+                        }
+                    }
+                }
+            }
+        }
+        st.outstanding = st.outstanding.saturating_sub(1);
+        let j = st.job_entry(job);
+        j.outstanding = j.outstanding.saturating_sub(1);
+    }
+
+    fn add_node_locked(
+        &self,
+        st: &SimState,
+        job: JobId,
+    ) -> Result<usize, DfError> {
+        if st.shutdown {
+            return Err(DfError::Recovery("runtime is shut down".into()));
+        }
+        let span = self.n_provisioned();
+        let node = (0..span)
+            .find(|&n| self.store.is_dead(n))
+            .or_else(|| (span < self.max_nodes).then_some(span))
+            .ok_or_else(|| {
+                DfError::Recovery(format!(
+                    "cluster is at max_nodes = {} with every slot live",
+                    self.max_nodes
+                ))
+            })?;
+        self.store.revive_node(node);
+        if node >= span {
+            self.provisioned.store(node + 1, Ordering::SeqCst);
+        }
+        let now = st.now;
+        self.membership.lock().unwrap().push(MembershipEvent {
+            at_secs: now,
+            node,
+            joined: true,
+        });
+        self.events.lock().unwrap().push(TaskEvent {
+            name: format!("node-added-{node}"),
+            job,
+            node,
+            start: now,
+            end: now,
+            ok: true,
+            attempt: 0,
+            recovery: false,
+        });
+        Ok(node)
+    }
+
+    /// Validate and start a drain (state lock held by the caller).
+    fn begin_drain(
+        &self,
+        st: &mut SimState,
+        node: usize,
+        job: JobId,
+    ) -> Result<(), DfError> {
+        if st.shutdown {
+            return Err(DfError::Recovery("runtime is shut down".into()));
+        }
+        let span = self.n_provisioned();
+        if node >= span {
+            return Err(DfError::Recovery(format!(
+                "no such node {node} (cluster has {span})"
+            )));
+        }
+        if self.store.is_dead(node) {
+            return Err(DfError::Recovery(format!("node {node} is dead")));
+        }
+        if self.store.is_draining(node) {
+            return Err(DfError::Recovery(format!(
+                "node {node} is already draining"
+            )));
+        }
+        if !(0..span).any(|n| n != node && self.store.is_available(n)) {
+            return Err(DfError::Recovery(
+                "cannot drain the last available node".into(),
+            ));
+        }
+        let queue_reroutes = self.count_pinned_ready(st, node);
+        self.store.set_draining(node, true);
+        st.drains.insert(
+            node,
+            DrainOp {
+                job,
+                queue_reroutes,
+                callbacks: Vec::new(),
+            },
+        );
+        Ok(())
+    }
+
+    /// The node's last running task finished: migrate, retire, notify.
+    fn complete_drain(
+        &self,
+        st: &mut SimState,
+        node: usize,
+    ) -> Vec<DrainNotice> {
+        let Some(op) = st.drains.remove(&node) else {
+            return Vec::new();
+        };
+        let span = self.n_provisioned();
+        if !(0..span).any(|n| n != node && self.store.is_available(n)) {
+            // peers vanished while draining: abort, don't retire the
+            // last available node
+            self.store.set_draining(node, false);
+            return op
+                .callbacks
+                .into_iter()
+                .map(|cb| {
+                    (
+                        cb,
+                        Err(DfError::Recovery(
+                            "cannot drain the last available node".into(),
+                        )),
+                    )
+                })
+                .collect();
+        }
+        let (objects_migrated, bytes_migrated) =
+            self.store.evacuate_node(node);
+        self.store.retire_node(node);
+        let now = st.now;
+        self.membership.lock().unwrap().push(MembershipEvent {
+            at_secs: now,
+            node,
+            joined: false,
+        });
+        self.events.lock().unwrap().push(TaskEvent {
+            name: format!("node-drained-{node}"),
+            job: op.job,
+            node,
+            start: now,
+            end: now,
+            ok: true,
+            attempt: 0,
+            recovery: false,
+        });
+        let report = DrainReport {
+            queue_reroutes: op.queue_reroutes,
+            objects_migrated,
+            bytes_migrated,
+        };
+        op.callbacks
+            .into_iter()
+            .map(|cb| (cb, Ok(report)))
+            .collect()
+    }
+
+    /// If `node` is draining and idle, complete the drain.
+    fn check_drain(
+        &self,
+        st: &mut SimState,
+        node: usize,
+    ) -> Vec<DrainNotice> {
+        if st.drains.contains_key(&node) && st.running_on[node] == 0 {
+            self.complete_drain(st, node)
+        } else {
+            Vec::new()
+        }
+    }
+
+    /// Recovery pass over `lost` objects — the sim's verbatim mirror of
+    /// the scheduler's `recover_objects`, run entirely under the state
+    /// lock (the sim store's poison/fail never fire callbacks, so no
+    /// re-entrancy hazard exists).
+    fn recover(
+        &self,
+        st: &mut SimState,
+        lost: Vec<ObjectId>,
+        queue_reroutes: usize,
+    ) -> RecoveryReport {
+        let objects_lost = lost.len();
+
+        // --- phase 1: transitive closure over the lineage ---
+        let lineage = self.lineage.lock().unwrap();
+        let mut need: HashMap<ObjectId, Option<Arc<SimLineage>>> =
+            HashMap::new();
+        let mut arg_refs: HashMap<ObjectId, ObjectRef> = HashMap::new();
+        let mut queue: VecDeque<ObjectId> = lost.iter().copied().collect();
+        while let Some(id) = queue.pop_front() {
+            if need.contains_key(&id) {
+                continue;
+            }
+            let rec = lineage.get(&id).cloned();
+            if let Some(rec) = &rec {
+                for &a in &rec.args {
+                    if arg_refs.contains_key(&a) {
+                        continue;
+                    }
+                    let (r, state) =
+                        self.store.retain_or_resurrect(a, rec.job);
+                    arg_refs.insert(a, r);
+                    if matches!(state, ObjState::Lost | ObjState::Missing) {
+                        queue.push_back(a);
+                    }
+                }
+            }
+            need.insert(id, rec);
+        }
+        drop(lineage);
+
+        // --- phase 2: bound the reconstruction depth ---
+        let rec_of: HashMap<ObjectId, u64> = need
+            .iter()
+            .filter_map(|(id, r)| r.as_ref().map(|r| (*id, r.seq)))
+            .collect();
+        let records: HashMap<u64, Arc<SimLineage>> = need
+            .values()
+            .flatten()
+            .map(|r| (r.seq, r.clone()))
+            .collect();
+        let mut memo: HashMap<u64, usize> = HashMap::new();
+        let max_depth = self.max_reconstruction_depth;
+        let mut poisons: Vec<(ObjectId, String)> = Vec::new();
+        let mut needy: Vec<ObjectId> = need.keys().copied().collect();
+        needy.sort_unstable(); // deterministic poison/resubmission order
+        for id in &needy {
+            match &need[id] {
+                None => poisons.push((
+                    *id,
+                    "lost in a node failure with no lineage recorded \
+                     (driver put, or lineage disabled/truncated)"
+                        .into(),
+                )),
+                Some(rec) => {
+                    let d =
+                        chain_depth(rec.seq, &records, &rec_of, &mut memo);
+                    if d > max_depth {
+                        poisons.push((
+                            *id,
+                            format!(
+                                "reconstruction chain depth {d} exceeds \
+                                 max_reconstruction_depth {max_depth}"
+                            ),
+                        ));
+                    }
+                }
+            }
+        }
+        // Demand-driven resubmission from non-poisoned lost roots.
+        let poisoned: HashSet<ObjectId> =
+            poisons.iter().map(|(id, _)| *id).collect();
+        let mut resubmit: Vec<Arc<SimLineage>> = Vec::new();
+        let mut seen_rec: HashSet<u64> = HashSet::new();
+        let mut demanded: Vec<ObjectId> = lost
+            .iter()
+            .copied()
+            .filter(|id| !poisoned.contains(id))
+            .collect();
+        let mut demanded_seen: HashSet<ObjectId> =
+            demanded.iter().copied().collect();
+        while let Some(id) = demanded.pop() {
+            let Some(Some(rec)) = need.get(&id) else { continue };
+            if seen_rec.insert(rec.seq) {
+                resubmit.push(rec.clone());
+                for &a in &rec.args {
+                    if need.contains_key(&a)
+                        && !poisoned.contains(&a)
+                        && demanded_seen.insert(a)
+                    {
+                        demanded.push(a);
+                    }
+                }
+            }
+        }
+        resubmit.sort_by_key(|r| r.seq);
+
+        // --- phase 3: poison unreconstructables, resubmit the rest ---
+        for (id, reason) in &poisons {
+            self.store.poison(*id, reason);
+            if let Some(waiters) = st.waiting.remove(id) {
+                for wtid in waiters {
+                    if let Some(w) = st.pending.get_mut(&wtid) {
+                        w.unresolved -= 1;
+                        if w.unresolved == 0 {
+                            st.ready.insert(wtid);
+                        }
+                    }
+                }
+            }
+        }
+        let root_poisons = {
+            let lost_set: HashSet<ObjectId> = lost.iter().copied().collect();
+            poisons
+                .iter()
+                .filter(|(id, _)| lost_set.contains(id))
+                .count()
+        };
+        self.objects_unrecoverable
+            .fetch_add(root_poisons as u64, Ordering::Relaxed);
+
+        let mut resubmitted = 0usize;
+        if st.shutdown {
+            for rec in &resubmit {
+                for o in &rec.outputs {
+                    self.store.poison(
+                        *o,
+                        "lost during shutdown; not reconstructed",
+                    );
+                }
+            }
+        } else {
+            // Skip records whose outputs already have an in-flight
+            // producer (a killed node's re-parked tasks, re-queued just
+            // before this pass).
+            let in_flight: HashSet<ObjectId> = st
+                .pending
+                .values()
+                .flat_map(|t| t.outputs.iter().copied())
+                .collect();
+            for rec in resubmit {
+                if rec.outputs.iter().any(|o| in_flight.contains(o)) {
+                    continue;
+                }
+                let tid =
+                    self.next_task_id.fetch_add(1, Ordering::Relaxed);
+                let spec = TaskSpec {
+                    name: rec.name.clone(),
+                    job: rec.job,
+                    placement: rec.placement,
+                    func: rec.func.clone(),
+                    args: rec
+                        .args
+                        .iter()
+                        .map(|a| arg_refs[a].clone())
+                        .collect(),
+                    num_returns: rec.num_returns,
+                    max_retries: rec.max_retries,
+                };
+                let mut unresolved = 0usize;
+                for a in &rec.args {
+                    if !self.store.is_resolved(*a) {
+                        unresolved += 1;
+                        st.waiting.entry(*a).or_default().push(tid);
+                    }
+                }
+                let task = SimTask {
+                    spec,
+                    outputs: rec.outputs.clone(),
+                    handle: TaskHandle::new_pumped(
+                        rec.name.clone(),
+                        self.pump_handle.clone() as Arc<dyn Pump>,
+                    ),
+                    attempt: 0,
+                    unresolved,
+                    recovery: true,
+                };
+                st.outstanding += 1;
+                st.job_entry(rec.job).outstanding += 1;
+                if unresolved == 0 {
+                    st.ready.insert(tid);
+                }
+                st.pending.insert(tid, task);
+                resubmitted += 1;
+            }
+        }
+        self.tasks_resubmitted
+            .fetch_add(resubmitted as u64, Ordering::Relaxed);
+        self.tasks_rerouted
+            .fetch_add(queue_reroutes as u64, Ordering::Relaxed);
+        RecoveryReport {
+            objects_lost,
+            tasks_resubmitted: resubmitted,
+            queue_reroutes,
+            objects_unrecoverable: root_poisons,
+        }
+    }
+}
+
+/// Countdown gate for the multi-victim scale-down path.
+struct ScaleGate {
+    remaining: usize,
+    drained: usize,
+    first_err: Option<String>,
+    done: Option<Box<dyn FnOnce(String) + Send>>,
+}
+
+/// Length of the re-execution chain rooted at record `seq` (memoized;
+/// identical to the scheduler's).
+fn chain_depth(
+    seq: u64,
+    records: &HashMap<u64, Arc<SimLineage>>,
+    rec_of: &HashMap<ObjectId, u64>,
+    memo: &mut HashMap<u64, usize>,
+) -> usize {
+    if let Some(&d) = memo.get(&seq) {
+        return d;
+    }
+    memo.insert(seq, usize::MAX); // defensive cycle guard
+    let below = records[&seq]
+        .args
+        .iter()
+        .filter_map(|a| rec_of.get(a))
+        .map(|&s| chain_depth(s, records, rec_of, memo))
+        .max()
+        .unwrap_or(0);
+    let d = below.saturating_add(1);
+    memo.insert(seq, d);
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distfut::task_fn;
+
+    fn sim(n_nodes: usize, seed: u64) -> Arc<SimRuntime> {
+        sim_elastic(n_nodes, 0, seed)
+    }
+
+    fn sim_elastic(
+        n_nodes: usize,
+        max_nodes: usize,
+        seed: u64,
+    ) -> Arc<SimRuntime> {
+        SimRuntime::new(
+            RuntimeOptions {
+                n_nodes,
+                max_nodes,
+                ..RuntimeOptions::default()
+            },
+            seed,
+        )
+    }
+
+    fn echo_spec(name: &str, data: Vec<u8>) -> TaskSpec {
+        TaskSpec {
+            name: name.into(),
+            job: JobId::ROOT,
+            placement: Placement::Any,
+            func: task_fn(move |_| Ok(vec![data.clone()])),
+            args: vec![],
+            num_returns: 1,
+            max_retries: 0,
+        }
+    }
+
+    #[test]
+    fn simple_graph_executes() {
+        let rt = sim(2, 7);
+        let (a, ha) = rt.submit(echo_spec("a", vec![1, 2, 3]));
+        let (b, hb) = rt.submit(TaskSpec {
+            name: "b".into(),
+            job: JobId::ROOT,
+            placement: Placement::Any,
+            func: task_fn(|ctx| {
+                let mut v = ctx.args[0].as_ref().clone();
+                v.push(9);
+                Ok(vec![v])
+            }),
+            args: vec![a[0].clone()],
+            num_returns: 1,
+            max_retries: 0,
+        });
+        ha.wait().unwrap();
+        hb.wait().unwrap();
+        assert_eq!(rt.get(&b[0]).unwrap().as_ref(), &vec![1, 2, 3, 9]);
+        assert!(rt.now() > 0.0, "virtual clock must advance");
+        assert_eq!(rt.task_counts().0, 2);
+    }
+
+    #[test]
+    fn same_seed_reproduces_events_exactly() {
+        let run = |seed: u64| -> Vec<(String, usize, u64, u64)> {
+            let rt = sim(3, seed);
+            let mut handles = Vec::new();
+            let mut outs = Vec::new();
+            for i in 0..12u8 {
+                let (o, h) = rt.submit(echo_spec("t", vec![i; 64]));
+                outs.push(o);
+                handles.push(h);
+            }
+            for h in &handles {
+                h.wait().unwrap();
+            }
+            rt.task_events()
+                .into_iter()
+                .map(|e| {
+                    (e.name, e.node, e.start.to_bits(), e.end.to_bits())
+                })
+                .collect()
+        };
+        assert_eq!(run(42), run(42));
+        assert_ne!(
+            run(42)
+                .iter()
+                .map(|(_, _, _, end)| *end)
+                .collect::<Vec<_>>(),
+            run(43)
+                .iter()
+                .map(|(_, _, _, end)| *end)
+                .collect::<Vec<_>>(),
+            "different seeds should sample different durations"
+        );
+    }
+
+    #[test]
+    fn kill_node_recovers_lineage() {
+        let rt = sim(3, 11);
+        let (a, ha) = rt.submit(echo_spec("a", vec![5; 128]));
+        ha.wait().unwrap();
+        // find where it lives and kill that node
+        let mut victim = None;
+        for n in 0..3 {
+            if rt.shared.store.resident_on(n) > 0 {
+                victim = Some(n);
+            }
+        }
+        let victim = victim.expect("object resides somewhere");
+        let report = rt.kill_node(victim).unwrap();
+        assert_eq!(report.objects_lost, 1);
+        assert_eq!(report.tasks_resubmitted, 1);
+        assert_eq!(report.objects_unrecoverable, 0);
+        // the get pumps the resubmitted producer to completion
+        assert_eq!(rt.get(&a[0]).unwrap().as_ref(), &vec![5; 128]);
+        assert_eq!(rt.recovery_stats().nodes_killed, 1);
+    }
+
+    #[test]
+    fn driver_put_is_unrecoverable_after_kill() {
+        let rt = sim(2, 3);
+        let r = rt.put(0, vec![1, 2, 3]);
+        let report = rt.kill_node(0).unwrap();
+        assert_eq!(report.objects_unrecoverable, 1);
+        let err = rt.get(&r).unwrap_err();
+        assert!(matches!(err, DfError::Unrecoverable { .. }), "{err}");
+    }
+
+    #[test]
+    fn kill_validation_errors() {
+        let rt = sim(2, 1);
+        assert!(rt.kill_node(9).is_err());
+        rt.kill_node(1).unwrap();
+        let err = rt.kill_node(1).unwrap_err();
+        assert!(err.to_string().contains("already dead"), "{err}");
+        let err = rt.kill_node(0).unwrap_err();
+        assert!(err.to_string().contains("last live node"), "{err}");
+    }
+
+    #[test]
+    fn drain_migrates_and_retires() {
+        let rt = sim(2, 5);
+        let (a, ha) = rt.submit(TaskSpec {
+            placement: Placement::Node(1),
+            ..echo_spec("a", vec![7; 64])
+        });
+        ha.wait().unwrap();
+        let resident_on_1 = rt.shared.store.resident_on(1) > 0;
+        let report = rt.drain_node(1).unwrap();
+        if resident_on_1 {
+            assert!(report.objects_migrated >= 1);
+        }
+        assert!(rt.is_node_dead(1));
+        assert_eq!(rt.available_nodes(), 1);
+        // data survived the migration
+        assert_eq!(rt.get(&a[0]).unwrap().as_ref(), &vec![7; 64]);
+        // membership log recorded the departure
+        assert!(rt.membership_log().iter().any(|e| !e.joined));
+    }
+
+    #[test]
+    fn drain_validation_errors() {
+        let rt = sim(2, 5);
+        let err = rt.drain_node(5).unwrap_err();
+        assert!(err.to_string().contains("no such node"), "{err}");
+        rt.drain_node(0).unwrap();
+        let err = rt.drain_node(0).unwrap_err();
+        assert!(err.to_string().contains("is dead"), "{err}");
+        let err = rt.drain_node(1).unwrap_err();
+        assert!(
+            err.to_string().contains("last available node"),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn retries_then_fails_with_attempt_count() {
+        let rt = sim(1, 2);
+        let (_, h) = rt.submit(TaskSpec {
+            name: "flaky".into(),
+            job: JobId::ROOT,
+            placement: Placement::Any,
+            func: task_fn(|_| Err("boom".into())),
+            args: vec![],
+            num_returns: 1,
+            max_retries: 2,
+        });
+        let err = h.wait().unwrap_err();
+        assert!(err.to_string().contains("boom (after 3 attempts)"), "{err}");
+        let (executed, retried) = rt.task_counts();
+        assert_eq!(executed, 3);
+        assert_eq!(retried, 2);
+    }
+
+    #[test]
+    fn retry_succeeds_on_later_attempt() {
+        let rt = sim(1, 2);
+        let (o, h) = rt.submit(TaskSpec {
+            name: "flaky".into(),
+            job: JobId::ROOT,
+            placement: Placement::Any,
+            func: task_fn(|ctx| {
+                if ctx.attempt < 2 {
+                    Err("transient".into())
+                } else {
+                    Ok(vec![vec![42]])
+                }
+            }),
+            args: vec![],
+            num_returns: 1,
+            max_retries: 5,
+        });
+        h.wait().unwrap();
+        assert_eq!(rt.get(&o[0]).unwrap().as_ref(), &vec![42]);
+    }
+
+    #[test]
+    fn deadlock_surfaces_as_error_not_hang() {
+        let rt = sim(1, 0);
+        // an argument nobody will ever produce
+        let orphan = rt.shared.store.declare(0, JobId::ROOT);
+        let (_, h) = rt.submit(TaskSpec {
+            name: "starved".into(),
+            job: JobId::ROOT,
+            placement: Placement::Any,
+            func: task_fn(|_| Ok(vec![vec![]])),
+            args: vec![orphan],
+            num_returns: 1,
+            max_retries: 0,
+        });
+        let err = h.wait().unwrap_err();
+        assert!(err.to_string().contains("simulation deadlock"), "{err}");
+    }
+
+    #[test]
+    fn add_node_grows_fleet() {
+        let rt = sim_elastic(1, 3, 9);
+        assert_eq!(rt.n_nodes(), 1);
+        assert_eq!(rt.add_node().unwrap(), 1);
+        assert_eq!(rt.add_node().unwrap(), 2);
+        assert_eq!(rt.n_nodes(), 3);
+        let err = rt.add_node().unwrap_err();
+        assert!(err.to_string().contains("max_nodes"), "{err}");
+        // killed slot is re-activated first
+        rt.kill_node(1).unwrap();
+        assert_eq!(rt.add_node().unwrap(), 1);
+    }
+
+    #[test]
+    fn shutdown_fails_outstanding_tasks() {
+        let rt = sim(1, 4);
+        let orphan = rt.shared.store.declare(0, JobId::ROOT);
+        let (_, h) = rt.submit(TaskSpec {
+            name: "stuck".into(),
+            job: JobId::ROOT,
+            placement: Placement::Any,
+            func: task_fn(|_| Ok(vec![vec![]])),
+            args: vec![orphan],
+            num_returns: 1,
+            max_retries: 0,
+        });
+        rt.shutdown();
+        let err = h.wait().unwrap_err();
+        assert!(err.to_string().contains("runtime shut down"), "{err}");
+        // submissions after shutdown fail immediately
+        let (_, h2) = rt.submit(echo_spec("late", vec![1]));
+        assert!(h2.wait().is_err());
+    }
+
+    #[test]
+    fn no_leak_after_retire() {
+        let rt = sim(2, 6);
+        let params = JobParams::default();
+        let job = rt.register_job(params);
+        let (o, h) = rt.submit_for(job, echo_spec("x", vec![1; 32]));
+        h.wait().unwrap();
+        drop(o);
+        rt.await_job_quiesced(job);
+        rt.retire_job(job);
+        assert_eq!(rt.store_live_entries(), 0);
+    }
+
+    #[test]
+    fn commit_observers_fire_in_virtual_time() {
+        let rt = sim(2, 8);
+        let seen = Arc::new(AtomicU64::new(0));
+        let seen2 = seen.clone();
+        let id = rt.on_commit(move |_, _, _| {
+            seen2.fetch_add(1, Ordering::Relaxed);
+        });
+        let (_, h) = rt.submit(echo_spec("c", vec![1]));
+        h.wait().unwrap();
+        assert_eq!(seen.load(Ordering::Relaxed), 1);
+        rt.remove_commit_observer(id);
+        let (_, h2) = rt.submit(echo_spec("c2", vec![2]));
+        h2.wait().unwrap();
+        assert_eq!(seen.load(Ordering::Relaxed), 1);
+    }
+}

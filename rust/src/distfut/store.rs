@@ -689,7 +689,7 @@ impl Store {
     pub fn evacuate_node(&self, node: usize) -> (usize, u64) {
         use std::cmp::Reverse;
         let mut t = self.table.lock().unwrap();
-        let ids: Vec<ObjectId> = t
+        let mut ids: Vec<ObjectId> = t
             .entries
             .iter()
             .filter(|(_, e)| {
@@ -697,6 +697,10 @@ impl Store {
             })
             .map(|(id, _)| *id)
             .collect();
+        // Deterministic migration order: which object lands on which
+        // target (and therefore future locality decisions) must not
+        // depend on hash-table iteration order.
+        ids.sort_unstable();
         // Max-heap of (free capacity, node), updated as objects land, so
         // target selection is O(log nodes) per object — the table lock
         // is held for the whole pass and must not hide an
@@ -869,6 +873,11 @@ impl Store {
                 }
             }
         }
+        // Table iteration order is arbitrary: sort so the lost set (and
+        // everything downstream of it — poison order, resubmission seqs)
+        // is identical across runs, which the deterministic simulation
+        // backend relies on.
+        lost.sort_unstable();
         t.resident[node] = 0;
         t.resident_job[node].clear();
         self.resident_gauge[node].store(0, Ordering::Relaxed);
@@ -974,6 +983,14 @@ impl Store {
                 self.counters.spill_bytes.fetch_add(size, Ordering::Relaxed);
             }
         }
+    }
+
+    /// Entries still present in the table, in any state. After every job
+    /// has been retired this must be zero — the `vopr` fuzzer's no-leak
+    /// invariant: with correct reference counting and `purge_job`
+    /// sweeps, a long-lived runtime accumulates nothing.
+    pub fn live_entries(&self) -> usize {
+        self.table.lock().unwrap().entries.len()
     }
 
     pub fn stats(&self) -> StoreStats {

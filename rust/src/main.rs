@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   sort      run a scaled shuffle job end-to-end (generate → sort → validate)
 //!   sim       discrete-event simulation of the full 100 TB benchmark
+//!   vopr      seed-sweep fuzzer over the deterministic simulation runtime
 //!   cost      print the Table 2 cost breakdown for a run profile
 //!   info      print artifact/backend information
 //!
@@ -10,7 +11,8 @@
 //! hand-rolled layer (`--key value` flags after the subcommand, with
 //! bare `--flag` treated as `--flag true`).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
+use std::io::Write;
 use std::path::PathBuf;
 
 use exoshuffle::config::{parse_bytes, Config};
@@ -25,6 +27,7 @@ use exoshuffle::shuffle::{list_strategies, strategy_by_name, ShuffleJob};
 use exoshuffle::sim::{
     estimate_autoscale, estimate_multi_job, simulate, SimConfig, SimStrategy,
 };
+use exoshuffle::util::rng::stream_at;
 use exoshuffle::util::{human_bytes, human_secs};
 
 fn main() {
@@ -41,8 +44,13 @@ fn main() {
 
 /// Flags that stand alone (bare `--flag` means `--flag true`); all other
 /// flags require a value.
-const BOOLEAN_FLAGS: &[&str] =
-    &["no-backpressure", "list-strategies", "events", "autoscale"];
+const BOOLEAN_FLAGS: &[&str] = &[
+    "no-backpressure",
+    "list-strategies",
+    "events",
+    "autoscale",
+    "resume",
+];
 
 /// Parse `--key value` pairs after the subcommand. A flag listed in
 /// [`BOOLEAN_FLAGS`] may appear bare; a value flag with a missing value
@@ -83,6 +91,7 @@ fn run(args: Vec<String>) -> anyhow::Result<()> {
         "sort" => cmd_sort(&flags),
         "serve" => cmd_serve(&flags),
         "sim" => cmd_sim(&flags),
+        "vopr" => cmd_vopr(&flags),
         "cost" => cmd_cost(&flags),
         "info" => cmd_info(&flags),
         "help" | "--help" | "-h" => {
@@ -142,6 +151,21 @@ COMMANDS:
            --min-nodes W/4     elastic ramp floor
            --provision-secs 60 node provisioning cadence of the ramp
            --fig1-csv FILE     write Figure 1 utilization CSV
+  vopr   sweep seeds x strategies x chaos plans over the deterministic
+         simulation runtime (distfut::sim); every run executes the real
+         shuffle pipeline on a virtual clock and is byte-checked against
+         an unfaulted reference plus liveness/no-leak invariants. One
+         JSON line per run; failures print a one-line repro command.
+           --seed-start 0      first seed (inclusive)
+           --seed-end 8        last seed (exclusive)
+           --strategies all    comma list or `all`
+                               (two-stage-merge,simple,streaming)
+           --chaos all         comma list or `all` (none,kill,drain)
+           --workers 3         fleet size per run (>= 2)
+           --size 2MiB         dataset size per run
+           --out FILE          append JSONL results here (else stdout)
+           --resume            skip (seed,strategy,chaos) cells already
+                               recorded in --out (CI shard restarts)
   cost   print the Table 2 cost breakdown
            --hours 1.4939      job completion hours
            --reduce-hours 0.5194
@@ -877,6 +901,336 @@ fn cmd_sim(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Chaos plan of one vopr cell, derived deterministically from the
+/// run's seed so the printed repro command reproduces the exact fault.
+/// `None` for the unfaulted mode.
+fn vopr_chaos_plan(
+    mode: &str,
+    seed: u64,
+    workers: usize,
+) -> Option<ChaosPlan> {
+    match mode {
+        "none" => None,
+        // one seeded kill landing inside the sort (commits 3..20)
+        "kill" => Some(ChaosPlan::seeded_kills(seed, workers, 1, (3, 20))),
+        // one seeded graceful drain; streams 101/102 keep the draw
+        // disjoint from seeded_kills' streams and the sim's own draws
+        "drain" => {
+            let victim = (stream_at(seed, 101) as usize) % workers;
+            let after = 3 + stream_at(seed, 102) % 18;
+            Some(ChaosPlan::new().drain_node(victim, after))
+        }
+        other => unreachable!("chaos mode '{other}' validated at parse"),
+    }
+}
+
+/// Minimal JSON string escaping for the JSONL output (no serde in the
+/// dependency set).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Extract the `(seed, strategy, chaos)` identity of a vopr JSONL line
+/// (resume support). `None` for lines that don't carry all three keys.
+fn vopr_line_key(line: &str) -> Option<(u64, String, String)> {
+    let field = |key: &str| -> Option<&str> {
+        let tag = format!("\"{key}\":");
+        let rest = line[line.find(&tag)? + tag.len()..].trim_start();
+        if let Some(stripped) = rest.strip_prefix('"') {
+            Some(&stripped[..stripped.find('"')?])
+        } else {
+            let end = rest.find(|c: char| c == ',' || c == '}')?;
+            Some(rest[..end].trim())
+        }
+    };
+    Some((
+        field("seed")?.parse().ok()?,
+        field("strategy")?.to_string(),
+        field("chaos")?.to_string(),
+    ))
+}
+
+/// What one vopr cell produced, after invariant checking.
+struct VoprOutcome {
+    /// Invariant violations (empty = the run passed).
+    errors: Vec<String>,
+    /// Output digest (0s when the job failed before validation).
+    checksum: u64,
+    records: u64,
+    /// Virtual seconds the simulated run took.
+    virtual_secs: f64,
+    tasks_executed: u64,
+    tasks_retried: u64,
+    tasks_resubmitted: u64,
+}
+
+/// Execute one (seed, strategy, chaos) cell on the simulation backend
+/// and check its invariants: the job terminates and validates, output
+/// bytes match the unfaulted reference, nothing is unrecoverable (the
+/// sim records full lineage, so even injected kills must reconstruct),
+/// and the store drains to zero entries after retirement.
+fn vopr_run_one(
+    spec: &JobSpec,
+    strategy: &str,
+    mode: &str,
+    seed: u64,
+    reference: Option<(u64, u64)>,
+) -> VoprOutcome {
+    let mut cfg = ServiceConfig::for_spec(spec);
+    cfg.sim_seed = Some(seed);
+    let service = JobService::new(cfg);
+    let mut job = ShuffleJob::new(spec.clone())
+        .strategy_arc(strategy_by_name(strategy).expect("validated"))
+        .backend(Backend::Native)
+        .name(format!("vopr-{seed}-{strategy}-{mode}"));
+    if let Some(plan) = vopr_chaos_plan(mode, seed, spec.n_workers()) {
+        job = job.chaos(plan);
+    }
+    let result = service.submit(job).and_then(|h| h.wait());
+    let rt = service.runtime();
+    let recovery = rt.recovery_stats();
+    let (tasks_executed, tasks_retried) = rt.task_counts();
+    let leaked = rt.store_live_entries();
+    let virtual_secs = rt.now();
+
+    let mut errors = Vec::new();
+    let (mut checksum, mut records) = (0u64, 0u64);
+    match &result {
+        Ok(report) => {
+            checksum = report.validation.summary.checksum;
+            records = report.validation.summary.records;
+            if !report.validation.valid {
+                errors.push(format!(
+                    "validation failed: {:?}",
+                    report.validation
+                ));
+            }
+            if let Some((rcs, rrecs)) = reference {
+                if checksum != rcs || records != rrecs {
+                    errors.push(format!(
+                        "output diverged from unfaulted reference: \
+                         checksum {checksum:#x} vs {rcs:#x}, records \
+                         {records} vs {rrecs}"
+                    ));
+                }
+            }
+        }
+        Err(e) => errors.push(format!("job failed: {e:#}")),
+    }
+    if recovery.objects_unrecoverable > 0 {
+        errors.push(format!(
+            "{} objects unrecoverable despite recorded lineage",
+            recovery.objects_unrecoverable
+        ));
+    }
+    if leaked > 0 {
+        errors.push(format!(
+            "{leaked} store entries leaked after job retirement"
+        ));
+    }
+    service.shutdown();
+    VoprOutcome {
+        errors,
+        checksum,
+        records,
+        virtual_secs,
+        tasks_executed,
+        tasks_retried,
+        tasks_resubmitted: recovery.tasks_resubmitted,
+    }
+}
+
+/// The vopr seed-sweep fuzzer: every (seed, strategy, chaos) cell runs
+/// the real shuffle pipeline on the deterministic simulation runtime
+/// and is checked against the strategy's unfaulted reference output.
+fn cmd_vopr(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let seed_start: u64 = flags
+        .get("seed-start")
+        .map(|v| v.parse())
+        .transpose()?
+        .unwrap_or(0);
+    let seed_end: u64 = flags
+        .get("seed-end")
+        .map(|v| v.parse())
+        .transpose()?
+        .unwrap_or(seed_start + 8);
+    if seed_end <= seed_start {
+        return Err(anyhow::anyhow!(
+            "--seed-end ({seed_end}) must be greater than --seed-start \
+             ({seed_start})"
+        ));
+    }
+    let workers: usize = flags
+        .get("workers")
+        .map(|v| v.parse())
+        .transpose()?
+        .unwrap_or(3);
+    if workers < 2 {
+        return Err(anyhow::anyhow!(
+            "--workers must be >= 2: kill/drain chaos needs a surviving \
+             node"
+        ));
+    }
+    let size = flags
+        .get("size")
+        .map(|s| parse_bytes(s))
+        .transpose()
+        .map_err(|e| anyhow::anyhow!(e))?
+        .unwrap_or(2 << 20);
+    let strategy_names: Vec<String> =
+        match flags.get("strategies").map(|s| s.as_str()).unwrap_or("all") {
+            "all" => list_strategies().iter().map(|s| s.name().to_string()).collect(),
+            csv => csv.split(',').map(|s| s.trim().to_string()).collect(),
+        };
+    for name in &strategy_names {
+        if strategy_by_name(name).is_none() {
+            return Err(anyhow::anyhow!(
+                "unknown strategy '{name}' in --strategies \
+                 (try sort --list-strategies)"
+            ));
+        }
+    }
+    let chaos_modes: Vec<String> = match flags.get("chaos").map(|s| s.as_str()).unwrap_or("all")
+    {
+        "all" => vec!["none".to_string(), "kill".to_string(), "drain".to_string()],
+        csv => csv.split(',').map(|s| s.trim().to_string()).collect(),
+    };
+    for mode in &chaos_modes {
+        if !["none", "kill", "drain"].contains(&mode.as_str()) {
+            return Err(anyhow::anyhow!(
+                "unknown chaos mode '{mode}' in --chaos \
+                 (none, kill, drain, or all)"
+            ));
+        }
+    }
+    let out_path = flags.get("out").map(PathBuf::from);
+    let resume = flags.get("resume").map(|v| v == "true") == Some(true);
+    if resume && out_path.is_none() {
+        return Err(anyhow::anyhow!(
+            "--resume needs --out to know which cells already ran"
+        ));
+    }
+
+    // checkpoint/resume: cells already recorded in --out are skipped, so
+    // an interrupted CI shard re-launches from where it stopped
+    let mut done: HashSet<(u64, String, String)> = HashSet::new();
+    if resume {
+        if let Some(path) = &out_path {
+            if let Ok(text) = std::fs::read_to_string(path) {
+                done.extend(text.lines().filter_map(vopr_line_key));
+            }
+        }
+    }
+    let mut out_file = match &out_path {
+        Some(path) => Some(
+            std::fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(path)?,
+        ),
+        None => None,
+    };
+
+    let spec = JobSpec::scaled(size, workers);
+    let size_arg = flags
+        .get("size")
+        .cloned()
+        .unwrap_or_else(|| size.to_string());
+    let total = (seed_end - seed_start) as usize * strategy_names.len() * chaos_modes.len();
+    eprintln!(
+        "vopr: seeds [{seed_start}, {seed_end}) x {:?} x {:?} on \
+         {workers} workers, {} per run ({total} cells)",
+        strategy_names,
+        chaos_modes,
+        human_bytes(size),
+    );
+
+    // per-strategy unfaulted reference digest, computed lazily on the
+    // sweep's first seed: every cell must reproduce these exact bytes
+    let mut reference: HashMap<String, Option<(u64, u64)>> = HashMap::new();
+    let (mut passed, mut failed, mut skipped) = (0usize, 0usize, 0usize);
+    for seed in seed_start..seed_end {
+        for strategy in &strategy_names {
+            let reference = *reference.entry(strategy.clone()).or_insert_with(|| {
+                let r = vopr_run_one(&spec, strategy, "none", seed_start, None);
+                r.errors.is_empty().then_some((r.checksum, r.records))
+            });
+            for mode in &chaos_modes {
+                let key = (seed, strategy.clone(), mode.clone());
+                if done.contains(&key) {
+                    skipped += 1;
+                    continue;
+                }
+                let r = vopr_run_one(&spec, strategy, mode, seed, reference);
+                let ok = r.errors.is_empty();
+                if ok {
+                    passed += 1;
+                } else {
+                    failed += 1;
+                    for err in &r.errors {
+                        eprintln!(
+                            "vopr FAIL seed={seed} strategy={strategy} \
+                             chaos={mode}: {err}"
+                        );
+                    }
+                    eprintln!(
+                        "repro: exoshuffle vopr --seed-start {seed} \
+                         --seed-end {} --strategies {strategy} \
+                         --chaos {mode} --workers {workers} \
+                         --size {size_arg}",
+                        seed + 1
+                    );
+                }
+                let error_json = if ok {
+                    "null".to_string()
+                } else {
+                    format!("\"{}\"", json_escape(&r.errors.join("; ")))
+                };
+                let line = format!(
+                    "{{\"seed\":{seed},\"strategy\":\"{strategy}\",\
+                     \"chaos\":\"{mode}\",\"workers\":{workers},\
+                     \"ok\":{ok},\"checksum\":\"{:#x}\",\
+                     \"records\":{},\"virtual_secs\":{:.6},\
+                     \"tasks\":{},\"retries\":{},\"resubmitted\":{},\
+                     \"error\":{error_json}}}",
+                    r.checksum,
+                    r.records,
+                    r.virtual_secs,
+                    r.tasks_executed,
+                    r.tasks_retried,
+                    r.tasks_resubmitted,
+                );
+                match &mut out_file {
+                    Some(f) => writeln!(f, "{line}")?,
+                    None => println!("{line}"),
+                }
+            }
+        }
+    }
+    eprintln!(
+        "vopr: {passed} passed, {failed} failed, {skipped} resumed \
+         (of {total})"
+    );
+    if failed > 0 {
+        return Err(anyhow::anyhow!("{failed} vopr cell(s) failed"));
+    }
+    Ok(())
+}
+
 fn cmd_cost(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let get = |k: &str, d: f64| -> anyhow::Result<f64> {
         Ok(flags.get(k).map(|v| v.parse()).transpose()?.unwrap_or(d))
@@ -904,4 +1258,114 @@ fn cmd_info(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let _backend = Backend::xla(&dir)?;
     println!("XLA backend loaded+compiled in {:.2}s", t.elapsed().as_secs_f64());
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use exoshuffle::distfut::chaos::ChaosTrigger;
+
+    fn args(list: &[&str]) -> Vec<String> {
+        list.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_flags_handles_values_and_bare_booleans() {
+        let flags =
+            parse_flags(&args(&["--size", "2MiB", "--resume", "--workers", "3"])).unwrap();
+        assert_eq!(flags.get("size").map(String::as_str), Some("2MiB"));
+        assert_eq!(flags.get("resume").map(String::as_str), Some("true"));
+        assert_eq!(flags.get("workers").map(String::as_str), Some("3"));
+    }
+
+    #[test]
+    fn parse_flags_rejects_missing_values_and_bare_words() {
+        let err = parse_flags(&args(&["--size"])).unwrap_err();
+        assert!(err.contains("needs a value"), "{err}");
+        let err = parse_flags(&args(&["oops"])).unwrap_err();
+        assert!(err.contains("expected --flag"), "{err}");
+    }
+
+    #[test]
+    fn chaos_kill_parses_single_and_comma_separated() {
+        let plan = parse_chaos_kills("1@10").unwrap();
+        assert_eq!(plan.triggers.len(), 1);
+        assert!(matches!(
+            plan.triggers[0],
+            ChaosTrigger {
+                after_commits: 10,
+                event: ChaosEvent::KillNode(1),
+            }
+        ));
+        let plan = parse_chaos_kills("1@10, 2@40").unwrap();
+        assert_eq!(plan.triggers.len(), 2);
+        assert!(matches!(plan.triggers[1].event, ChaosEvent::KillNode(2)));
+        assert_eq!(plan.triggers[1].after_commits, 40);
+    }
+
+    #[test]
+    fn chaos_kill_rejects_malformed_input_with_clear_errors() {
+        for bad in ["", "1", "@5", "1@", "x@5", "1@x", "1@5@7", "-1@5", "1@-5", "1@10,,2@40"]
+        {
+            let err = parse_chaos_kills(bad).unwrap_err();
+            assert!(
+                err.contains("--chaos-kill"),
+                "'{bad}' must name the flag in its error, got: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn scale_event_parses_onto_an_existing_plan() {
+        let plan = ChaosPlan::new().kill_node(1, 5);
+        let plan = parse_scale_events("6@100,2@400", plan).unwrap();
+        assert_eq!(plan.triggers.len(), 3);
+        assert!(matches!(plan.triggers[1].event, ChaosEvent::ScaleTo(6)));
+        assert_eq!(plan.triggers[1].after_commits, 100);
+        assert!(matches!(plan.triggers[2].event, ChaosEvent::ScaleTo(2)));
+    }
+
+    #[test]
+    fn scale_event_rejects_malformed_input_with_clear_errors() {
+        for bad in ["", "6", "@100", "6@", "w@100", "6@w", "6@1@2"] {
+            let err = parse_scale_events(bad, ChaosPlan::new()).unwrap_err();
+            assert!(
+                err.contains("--scale-event"),
+                "'{bad}' must name the flag in its error, got: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn vopr_chaos_plans_are_seed_deterministic() {
+        assert!(vopr_chaos_plan("none", 7, 3).is_none());
+        let a = vopr_chaos_plan("kill", 7, 3).unwrap();
+        let b = vopr_chaos_plan("kill", 7, 3).unwrap();
+        assert_eq!(a.triggers.len(), 1);
+        assert_eq!(a.triggers[0].after_commits, b.triggers[0].after_commits);
+        let d = vopr_chaos_plan("drain", 7, 3).unwrap();
+        assert!(matches!(d.triggers[0].event, ChaosEvent::DrainNode(n) if n < 3));
+        assert!(d.triggers[0].after_commits >= 3);
+    }
+
+    #[test]
+    fn vopr_jsonl_round_trips_its_resume_key() {
+        let line = "{\"seed\":42,\"strategy\":\"two-stage-merge\",\
+                    \"chaos\":\"kill\",\"workers\":3,\"ok\":true,\
+                    \"checksum\":\"0xabc\",\"records\":100,\
+                    \"virtual_secs\":1.5,\"tasks\":10,\"retries\":0,\
+                    \"resubmitted\":2,\"error\":null}";
+        let key = vopr_line_key(line).unwrap();
+        assert_eq!(key, (42, "two-stage-merge".into(), "kill".into()));
+        assert!(vopr_line_key("not json").is_none());
+        assert!(vopr_line_key("{\"seed\":1}").is_none());
+    }
+
+    #[test]
+    fn json_escape_handles_quotes_and_control_chars() {
+        assert_eq!(json_escape("plain"), "plain");
+        assert_eq!(json_escape("a\"b\\c"), "a\\\"b\\\\c");
+        assert_eq!(json_escape("line\nbreak\ttab"), "line\\nbreak\\ttab");
+        assert_eq!(json_escape("\u{1}"), "\\u0001");
+    }
 }

@@ -50,12 +50,15 @@ impl FairnessSummary {
             .unwrap_or(0.0)
     }
 
-    /// Smallest share across jobs (the starvation indicator).
+    /// Smallest share across jobs (the starvation indicator). `1.0`
+    /// for a log with no slot-time at all (empty, or only zero-width
+    /// virtual-time markers): nothing ran, so nothing starved.
     pub fn min_share(&self) -> f64 {
         self.per_job
             .iter()
             .map(|s| s.share)
             .fold(f64::INFINITY, f64::min)
+            .min(1.0)
     }
 }
 
@@ -71,8 +74,12 @@ fn busy_within(events: &[&TaskEvent], lo: f64, hi: f64) -> f64 {
 fn by_job(events: &[TaskEvent]) -> Vec<(JobId, Vec<&TaskEvent>)> {
     let mut jobs: Vec<(JobId, Vec<&TaskEvent>)> = Vec::new();
     for e in events {
-        if e.end <= e.start {
-            continue; // zero-width markers (node kills) carry no slot time
+        // Keep only events with positive, finite width: zero-width
+        // markers (node kills, instant virtual-time tasks) carry no slot
+        // time, and NaN stamps compare false on `<=` so the inverted
+        // form would let them through into the share arithmetic.
+        if !(e.end > e.start && e.start.is_finite() && e.end.is_finite()) {
+            continue;
         }
         match jobs.iter_mut().find(|(j, _)| *j == e.job) {
             Some((_, v)) => v.push(e),
@@ -95,7 +102,7 @@ fn contended_intervals(spans: &[(JobId, f64, f64)]) -> Vec<(f64, f64)> {
             pts.push((hi, -1));
         }
     }
-    pts.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+    pts.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
     let mut out: Vec<(f64, f64)> = Vec::new();
     let mut depth = 0i32;
     let mut start = 0.0f64;
@@ -190,7 +197,11 @@ pub fn slot_share_series(
     bins: usize,
 ) -> Vec<(JobId, Vec<f64>)> {
     let bins = bins.max(1);
-    let end = events.iter().map(|e| e.end).fold(0.0f64, f64::max);
+    let end = events
+        .iter()
+        .map(|e| e.end)
+        .filter(|t| t.is_finite())
+        .fold(0.0f64, f64::max);
     if end <= 0.0 {
         return Vec::new();
     }
@@ -277,10 +288,37 @@ mod tests {
     fn single_job_and_empty_logs_are_well_defined() {
         let s = fairness_summary(&[]);
         assert!(s.per_job.is_empty());
-        assert!(s.min_share().is_infinite());
+        assert_eq!(s.min_share(), 1.0, "empty log: nothing ran, nothing starved");
         let s = fairness_summary(&[ev(1, 0, 0.0, 5.0)]);
         assert_eq!(s.per_job.len(), 1);
         assert_eq!(s.share_of(JobId(1)), 1.0); // uncontended = not starved
+    }
+
+    #[test]
+    fn all_zero_duration_virtual_log_is_artifact_free() {
+        // a simulated run where every attempt took zero virtual seconds:
+        // no slot time exists, so no fairness claim can be made
+        let events = vec![ev(1, 0, 3.0, 3.0), ev(2, 1, 3.0, 3.0)];
+        let s = fairness_summary(&events);
+        assert!(s.per_job.is_empty(), "{s:?}");
+        assert_eq!(s.window, (0.0, 0.0));
+        assert_eq!(s.min_share(), 1.0);
+        assert!(slot_share_series(&events, 4).is_empty());
+    }
+
+    #[test]
+    fn non_finite_stamps_are_dropped_not_propagated() {
+        let events = vec![
+            ev(1, 0, f64::NAN, f64::NAN),
+            ev(1, 0, 0.0, 4.0),
+            ev(2, 1, 0.0, 4.0),
+        ];
+        let s = fairness_summary(&events);
+        assert!((s.share_of(JobId(1)) - 0.5).abs() < 1e-9, "{s:?}");
+        assert!(s.min_share().is_finite());
+        for (_, series) in slot_share_series(&events, 2) {
+            assert!(series.iter().all(|v| v.is_finite()), "{series:?}");
+        }
     }
 
     #[test]

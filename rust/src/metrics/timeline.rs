@@ -12,14 +12,17 @@
 use crate::metrics::TaskEvent;
 
 /// Merged busy intervals (sorted, non-overlapping) of all events whose
-/// name starts with `prefix`.
+/// name starts with `prefix`. Zero-width events (virtual-time instant
+/// tasks, kill markers) hold no busy time and are skipped rather than
+/// emitted as degenerate intervals; non-finite stamps are dropped.
 pub fn family_intervals(events: &[TaskEvent], prefix: &str) -> Vec<(f64, f64)> {
     let mut iv: Vec<(f64, f64)> = events
         .iter()
         .filter(|e| e.name.starts_with(prefix))
+        .filter(|e| e.start.is_finite() && e.end.is_finite() && e.end > e.start)
         .map(|e| (e.start, e.end))
         .collect();
-    iv.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    iv.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.total_cmp(&b.1)));
     let mut merged: Vec<(f64, f64)> = Vec::new();
     for (s, e) in iv {
         match merged.last_mut() {
@@ -114,8 +117,7 @@ pub fn per_node_timelines(events: &[TaskEvent], n_nodes: usize) -> Vec<NodeTimel
         }
     }
     for n in &mut nodes {
-        n.events
-            .sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+        n.events.sort_by(|a, b| a.start.total_cmp(&b.start));
     }
     nodes
 }
@@ -263,5 +265,38 @@ mod tests {
         assert_eq!(nodes[0].recovery_attempts(), 1, "kill marker counts");
         assert_eq!(nodes[1].retried_attempts(), 0);
         assert_eq!(nodes[1].recovery_attempts(), 1, "re-execution counts");
+    }
+
+    #[test]
+    fn zero_duration_virtual_events_yield_finite_measures() {
+        // a simulated run can execute tasks in zero virtual seconds:
+        // every event collapses to an instant
+        let events = vec![
+            ev("map-1", 0, 1.0, 1.0, 0),
+            ev("map-2", 0, 1.0, 1.0, 0),
+            ev("reduce-1", 0, 1.0, 1.0, 0),
+        ];
+        assert_eq!(family_intervals(&events, "map"), vec![]);
+        assert_eq!(overlap_secs(&events, "map", "reduce"), 0.0);
+        let nodes = per_node_timelines(&events, 1);
+        assert_eq!(nodes[0].busy_secs(), 0.0);
+        assert_eq!(nodes[0].span_secs(), 0.0);
+        let u = nodes[0].utilization();
+        assert!(u.is_finite() && u == 0.0, "zero-span division guarded: {u}");
+    }
+
+    #[test]
+    fn non_finite_stamps_do_not_panic_or_poison() {
+        let mut nan = ev("map-9", 0, f64::NAN, f64::NAN, 0);
+        nan.recovery = true;
+        let events = vec![nan, ev("map-1", 0, 0.0, 2.0, 0)];
+        // sorting and interval maths tolerate the NaN event (dropped
+        // from busy intervals, kept only as a countable attempt)
+        let iv = family_intervals(&events, "map");
+        assert_eq!(iv, vec![(0.0, 2.0)]);
+        let nodes = per_node_timelines(&events, 1);
+        assert!((nodes[0].busy_secs() - 2.0).abs() < 1e-12);
+        assert!(nodes[0].utilization().is_finite());
+        assert_eq!(nodes[0].recovery_attempts(), 1);
     }
 }

@@ -102,7 +102,7 @@ pub fn per_node_live_utilization(
                 .filter(|e| e.node == node && e.end > e.start)
                 .map(|e| (e.start, e.end))
                 .collect();
-            busy_iv.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            busy_iv.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.total_cmp(&b.1)));
             let mut merged: Vec<(f64, f64)> = Vec::new();
             for (s, e) in busy_iv {
                 match merged.last_mut() {

@@ -11,7 +11,8 @@
 //! - **slot utilization** (executing tasks over available slots),
 //! - **residency watermark** (peak resident-store fraction),
 //!
-//! — and issues [`Runtime::add_node`] / [`Runtime::drain_node`]
+//! — and issues [`RuntimeHandle::add_node`] /
+//! [`RuntimeHandle::drain_node`]
 //! decisions against configurable `min_nodes`/`max_nodes` bounds with a
 //! cooldown between actions. Every run prices its fleet with the
 //! [`crate::cost`] model ([`Autoscaler::cost_report`]), so the report
@@ -27,7 +28,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::cost::{CostModel, FleetCost};
-use crate::distfut::Runtime;
+use crate::distfut::RuntimeHandle;
 
 /// Policy knobs of an [`Autoscaler`]. The defaults are tuned for the
 /// in-process runtime's timescale (milliseconds-long tasks); a real
@@ -38,7 +39,7 @@ pub struct AutoscalerConfig {
     /// Never drain below this many available nodes.
     pub min_nodes: usize,
     /// Never grow beyond this many (clamped to the runtime's
-    /// [`Runtime::max_nodes`] ceiling at start).
+    /// [`RuntimeHandle::max_nodes`] ceiling at start).
     pub max_nodes: usize,
     /// Scale up when the runnable backlog per available node exceeds
     /// this.
@@ -90,7 +91,7 @@ pub struct ScaleEvent {
 }
 
 struct Inner {
-    rt: Arc<Runtime>,
+    rt: RuntimeHandle,
     cfg: AutoscalerConfig,
     stop: AtomicBool,
     events: Mutex<Vec<ScaleEvent>>,
@@ -106,8 +107,13 @@ pub struct Autoscaler {
 }
 
 impl Autoscaler {
-    /// Start the policy loop on its own thread, watching `rt`.
-    pub fn start(rt: Arc<Runtime>, cfg: AutoscalerConfig) -> Autoscaler {
+    /// Start the policy loop on its own thread, watching `rt` (either
+    /// backend: anything convertible to a [`RuntimeHandle`]).
+    pub fn start(
+        rt: impl Into<RuntimeHandle>,
+        cfg: AutoscalerConfig,
+    ) -> Autoscaler {
+        let rt = rt.into();
         let cfg = AutoscalerConfig {
             min_nodes: cfg.min_nodes.max(1),
             max_nodes: cfg.max_nodes.min(rt.max_nodes()).max(1),
@@ -239,7 +245,7 @@ fn policy_loop(inner: &Arc<Inner>) {
 mod tests {
     use super::*;
     use crate::distfut::{
-        task_fn, JobId, Placement, RuntimeOptions, TaskSpec,
+        task_fn, JobId, Placement, Runtime, RuntimeOptions, TaskSpec,
     };
 
     fn sleeper(name: &str, ms: u64) -> TaskSpec {

@@ -48,14 +48,15 @@ use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
 
 use anyhow::anyhow;
 
 pub use autoscaler::{Autoscaler, AutoscalerConfig, ScaleEvent};
 
 use crate::coordinator::plan::JobSpec;
-use crate::distfut::{JobId, Runtime, RuntimeOptions};
+use crate::distfut::{
+    JobId, Runtime, RuntimeHandle, RuntimeOptions, SimRuntime,
+};
 use crate::metrics::fairness::{fairness_summary, FairnessSummary};
 use crate::metrics::TaskEvent;
 use crate::shuffle::{JobReport, ShuffleJob};
@@ -80,6 +81,13 @@ pub struct ServiceConfig {
     pub admission_watermark: f64,
     /// Spill directory root.
     pub spill_root: PathBuf,
+    /// `Some(seed)`: back the service with the deterministic simulation
+    /// runtime ([`crate::distfut::sim`]) seeded with `seed` instead of
+    /// the threaded runtime — tasks run on a single-threaded virtual-time
+    /// event loop and every run is byte-identical for a fixed
+    /// (seed, config). This is what the `vopr` fuzzer drives. `None`
+    /// (the default): the threaded wall-clock backend.
+    pub sim_seed: Option<u64>,
 }
 
 impl Default for ServiceConfig {
@@ -91,6 +99,7 @@ impl Default for ServiceConfig {
             store_capacity_per_node: 1 << 30,
             admission_watermark: 1.0,
             spill_root: std::env::temp_dir(),
+            sim_seed: None,
         }
     }
 }
@@ -183,7 +192,7 @@ impl JobHandle {
 /// A long-lived shared runtime serving many concurrent shuffle jobs
 /// (see the module docs).
 pub struct JobService {
-    rt: Arc<Runtime>,
+    rt: RuntimeHandle,
     /// Driver threads still possibly running; finished ones are reaped
     /// on every submission so the list stays bounded by concurrency.
     drivers: Mutex<Vec<JoinHandle<()>>>,
@@ -212,7 +221,7 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
 
 impl JobService {
     pub fn new(cfg: ServiceConfig) -> JobService {
-        let rt = Runtime::new(RuntimeOptions {
+        let opts = RuntimeOptions {
             n_nodes: cfg.n_nodes.max(1),
             max_nodes: cfg.max_nodes,
             slots_per_node: cfg.slots_per_node.max(1),
@@ -220,7 +229,11 @@ impl JobService {
             spill_root: cfg.spill_root,
             admission_watermark: cfg.admission_watermark,
             ..RuntimeOptions::default()
-        });
+        };
+        let rt = match cfg.sim_seed {
+            Some(seed) => RuntimeHandle::from(SimRuntime::new(opts, seed)),
+            None => RuntimeHandle::from(Runtime::new(opts)),
+        };
         JobService {
             rt,
             drivers: Mutex::new(Vec::new()),
@@ -231,7 +244,7 @@ impl JobService {
 
     /// The shared runtime (for direct task submission, chaos arming, or
     /// stats alongside the service's jobs).
-    pub fn runtime(&self) -> &Arc<Runtime> {
+    pub fn runtime(&self) -> &RuntimeHandle {
         &self.rt
     }
 
@@ -296,10 +309,9 @@ impl JobService {
                 // tasks in flight, so wait for the job to drain first
                 // (retire_job's precondition); tasks never block
                 // unboundedly — failures cascade as poisons — so this
-                // terminates.
-                while !rt.job_quiesced(id) {
-                    std::thread::sleep(Duration::from_millis(1));
-                }
+                // terminates. Backend-aware: the sim pumps its event
+                // loop here instead of sleeping.
+                rt.await_job_quiesced(id);
                 let events: Vec<TaskEvent> = rt.retire_job(id);
                 if let Ok(report) = &mut result {
                     report.events = events;

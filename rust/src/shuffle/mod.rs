@@ -34,7 +34,6 @@ pub mod streaming;
 pub mod two_stage;
 
 use std::sync::Arc;
-use std::time::Instant;
 
 use anyhow::anyhow;
 
@@ -46,7 +45,9 @@ pub use two_stage::TwoStageMerge;
 use crate::coordinator::plan::JobSpec;
 use crate::coordinator::{generate, validate};
 use crate::distfut::chaos::{ChaosHarness, ChaosPlan};
-use crate::distfut::{JobId, JobParams, ObjectRef, Runtime, TaskHandle, TaskSpec};
+use crate::distfut::{
+    Clock, JobId, JobParams, ObjectRef, RuntimeHandle, TaskHandle, TaskSpec,
+};
 use crate::runtime::Backend;
 use crate::s3sim::S3;
 use crate::service::{JobHandle, JobService, ServiceConfig};
@@ -55,14 +56,15 @@ use crate::service::{JobHandle, JobService, ServiceConfig};
 /// object store standing in for S3, the compute backend, the
 /// distributed-futures runtime it submits tasks to, and the job identity
 /// the runtime accounts those tasks under. Strategies own the control
-/// plane; `cx.rt` is the data plane (§2.1). The runtime is handed out as
-/// an `Arc` so strategies can park readiness callbacks (e.g. merge
-/// controllers) that outlive the current stack frame.
+/// plane; `cx.rt` is the data plane (§2.1). The runtime is a cloneable
+/// [`RuntimeHandle`] — threaded or simulated — so strategies can park
+/// readiness callbacks (e.g. merge controllers) that outlive the current
+/// stack frame, and run unchanged on either backend.
 pub struct ShuffleContext<'a> {
     pub spec: &'a JobSpec,
     pub s3: &'a S3,
     pub backend: &'a Backend,
-    pub rt: &'a Arc<Runtime>,
+    pub rt: &'a RuntimeHandle,
     /// The job every task of this run is tagged with — the runtime may
     /// be shared with other concurrent jobs ([`crate::service`]).
     pub job: JobId,
@@ -74,6 +76,14 @@ impl ShuffleContext<'_> {
     /// fair-share and tear down per job).
     pub fn submit(&self, spec: TaskSpec) -> (Vec<ObjectRef>, TaskHandle) {
         self.rt.submit_for(self.job, spec)
+    }
+
+    /// Stage stopwatch on this runtime's clock: wall time under the
+    /// threaded backend, virtual time under [`crate::distfut::sim`].
+    /// Strategies must time stages through this (not `Instant`) so
+    /// simulated runs report deterministic timings.
+    pub fn stage_clock(&self) -> StageClock {
+        StageClock::start_at(self.rt.clock())
     }
 }
 
@@ -115,27 +125,41 @@ pub trait ShuffleStrategy: Send + Sync {
 }
 
 /// Stage stopwatch shared by strategies: `lap(name)` closes the current
-/// stage and starts the next one.
+/// stage and starts the next one. Reads whichever [`Clock`] it was
+/// started on, so the same strategy code reports wall-clock stage times
+/// on the threaded runtime and virtual-time stage times under the
+/// deterministic simulator.
 pub struct StageClock {
-    t: Instant,
+    clock: Clock,
+    t0: f64,
     stages: Vec<StageTiming>,
 }
 
 impl StageClock {
-    pub fn start() -> StageClock {
+    /// Start the stopwatch on an explicit clock (what
+    /// [`ShuffleContext::stage_clock`] does with the runtime's clock).
+    pub fn start_at(clock: Clock) -> StageClock {
+        let t0 = clock.now_secs();
         StageClock {
-            t: Instant::now(),
+            clock,
+            t0,
             stages: Vec::new(),
         }
     }
 
+    /// Start on the wall clock (standalone uses and tests).
+    pub fn start() -> StageClock {
+        StageClock::start_at(Clock::wall())
+    }
+
     /// Close the current stage under `name`.
     pub fn lap(&mut self, name: &str) {
+        let now = self.clock.now_secs();
         self.stages.push(StageTiming {
             name: name.to_string(),
-            secs: self.t.elapsed().as_secs_f64(),
+            secs: now - self.t0,
         });
-        self.t = Instant::now();
+        self.t0 = now;
     }
 
     pub fn into_stages(self) -> Vec<StageTiming> {
@@ -318,13 +342,13 @@ impl ShuffleJob {
 /// validate) against a shared runtime, with every task accounted to
 /// `id`. Shared by the one-shot [`ShuffleJob::run`] wrapper and the
 /// multi-tenant [`JobService`] worker threads; the caller owns job
-/// teardown ([`Runtime::retire_job`]) and fills [`JobReport::events`]
-/// from it. Spec validation (consistency + worker count vs runtime
-/// nodes) happens once, at [`JobService::submit`] — the single entry
-/// point both paths funnel through.
+/// teardown ([`RuntimeHandle::retire_job`]) and fills
+/// [`JobReport::events`] from it. Spec validation (consistency + worker
+/// count vs runtime nodes) happens once, at [`JobService::submit`] — the
+/// single entry point both paths funnel through.
 pub(crate) fn execute_on(
     job: ShuffleJob,
-    rt: &Arc<Runtime>,
+    rt: &RuntimeHandle,
     id: JobId,
 ) -> anyhow::Result<JobReport> {
     let spec = &job.spec;
@@ -338,10 +362,11 @@ pub(crate) fn execute_on(
     };
 
     // --- input generation (§3.2), not part of the timed sort ---
-    let t0 = Instant::now();
+    let clock = rt.clock();
+    let t0 = clock.now_secs();
     let (input_records, input_checksum) =
         generate::generate_input(spec, &s3, rt, id)?;
-    let gen_secs = t0.elapsed().as_secs_f64();
+    let gen_secs = clock.now_secs() - t0;
     s3.reset_counters(); // Table 2 counts requests of the sort itself
 
     job.strategy.warmup(spec, &job.backend)?;

@@ -18,7 +18,7 @@ use crate::coordinator::plan::JobSpec;
 use crate::coordinator::tasks;
 use crate::distfut::{future, ObjectRef, TaskHandle};
 use crate::runtime::Backend;
-use crate::shuffle::{ShuffleContext, ShuffleOutcome, ShuffleStrategy, StageClock};
+use crate::shuffle::{ShuffleContext, ShuffleOutcome, ShuffleStrategy};
 
 /// Single-pass map → reduce topology (no merge stage).
 pub struct SimpleShuffle;
@@ -49,7 +49,7 @@ impl ShuffleStrategy for SimpleShuffle {
         let r = spec.n_output_partitions;
         let r1 = spec.reducers_per_worker();
         let reducer_cuts = Arc::new(spec.reducer_cuts());
-        let mut clock = StageClock::start();
+        let mut clock = cx.stage_clock();
 
         // --- stage 1: map. Each map sorts its partition and splits it
         // R ways; admission is slot-bounded so the driver queue (not the
@@ -63,7 +63,9 @@ impl ShuffleStrategy for SimpleShuffle {
             if future::pending_count(&map_handles)
                 >= spec.cluster.total_slots() * 2
             {
-                std::thread::sleep(std::time::Duration::from_micros(500));
+                // park (not sleep): under the sim backend this pumps the
+                // event loop instead of stalling virtual time
+                cx.rt.park(std::time::Duration::from_micros(500));
                 continue;
             }
             let (outs, h) = rt_submit_map(cx, reducer_cuts.clone(), next_map);

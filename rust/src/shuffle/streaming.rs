@@ -28,7 +28,7 @@ use crate::coordinator::plan::JobSpec;
 use crate::coordinator::tasks;
 use crate::distfut::{future, ObjectRef, TaskHandle};
 use crate::runtime::Backend;
-use crate::shuffle::{ShuffleContext, ShuffleOutcome, ShuffleStrategy, StageClock};
+use crate::shuffle::{ShuffleContext, ShuffleOutcome, ShuffleStrategy};
 
 /// Whole-DAG-up-front topology (map → merge → reduce as chained futures).
 pub struct StreamingShuffle;
@@ -62,7 +62,7 @@ impl ShuffleStrategy for StreamingShuffle {
         let threshold = spec.merge_threshold_blocks.max(1);
         let n_batches = spec.merge_batches_per_node();
         let worker_cuts = Arc::new(spec.worker_cuts());
-        let mut clock = StageClock::start();
+        let mut clock = cx.stage_clock();
 
         // --- submit every map ---
         let mut map_blocks: Vec<Vec<ObjectRef>> = Vec::with_capacity(m);

@@ -17,7 +17,7 @@ use crate::coordinator::plan::JobSpec;
 use crate::coordinator::tasks;
 use crate::distfut::{future, TaskHandle};
 use crate::runtime::Backend;
-use crate::shuffle::{ShuffleContext, ShuffleOutcome, ShuffleStrategy, StageClock};
+use crate::shuffle::{ShuffleContext, ShuffleOutcome, ShuffleStrategy};
 
 /// Driver-side admission poll interval: how often the map-submission
 /// loop re-checks the backpressure predicate. Only map *admission* polls
@@ -48,7 +48,7 @@ impl ShuffleStrategy for TwoStageMerge {
 
     fn run_stages(&self, cx: &ShuffleContext) -> anyhow::Result<ShuffleOutcome> {
         let spec = cx.spec;
-        let mut clock = StageClock::start();
+        let mut clock = cx.stage_clock();
 
         // --- stage 1: map & shuffle (§2.3) ---
         let controllers = map_shuffle_stage(cx)?;
@@ -121,7 +121,9 @@ fn map_shuffle_stage(
         // queue (not the runtime queue) the place where tasks wait
         let in_flight = future::pending_count(&map_handles);
         if blocked || in_flight >= spec.cluster.total_slots() * 2 {
-            std::thread::sleep(ADMISSION_POLL);
+            // park (not sleep): under the sim backend this pumps the
+            // event loop instead of stalling virtual time
+            cx.rt.park(ADMISSION_POLL);
             continue;
         }
         let (outs, h) = cx.submit(tasks::map_task(

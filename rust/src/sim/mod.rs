@@ -13,6 +13,12 @@
 //! paper's measured averages (map 24 s incl. 15 s download, merge 17 s,
 //! reduce 22 s). Stage times (Table 1) and utilization curves (Figure 1)
 //! are then *outputs* of scheduling + contention, not inputs.
+//!
+//! Not to be confused with [`crate::distfut::sim`], the deterministic
+//! *execution* backend: that module runs real task graphs (actual task
+//! bodies, a real object store) under virtual time for reproducible
+//! fuzzing (`vopr`), while this one predicts paper-scale runs from a
+//! resource model without executing any shuffle.
 
 pub mod taskmodel;
 
