@@ -17,18 +17,27 @@ pub struct BenchResult {
     pub stddev_secs: f64,
     pub min_secs: f64,
     pub max_secs: f64,
+    /// Mean heap allocations per iteration — 0 unless the bench was
+    /// built with `--features alloc-stats`.
+    pub allocs: u64,
+    /// Mean heap bytes requested per iteration (same gating).
+    pub alloc_bytes: u64,
 }
 
 /// Time `f` `iters` times (after one untimed warmup) and print a
 /// criterion-style line. Returns the stats for derived reporting.
+/// Under `--features alloc-stats` the per-iteration heap allocation
+/// count rides along, so the CI perf gate can check allocation ratios.
 pub fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> BenchResult {
-    f(); // warmup
+    f(); // warmup (also fills buffer pools / thread-local scratch)
     let mut samples = Vec::with_capacity(iters);
+    let alloc_before = exoshuffle::util::alloc::snapshot();
     for _ in 0..iters {
         let t = Instant::now();
         f();
         samples.push(t.elapsed().as_secs_f64());
     }
+    let alloc_delta = exoshuffle::util::alloc::since(alloc_before);
     let mean = samples.iter().sum::<f64>() / samples.len() as f64;
     let var = samples
         .iter()
@@ -52,6 +61,8 @@ pub fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> BenchResult {
         stddev_secs: stddev,
         min_secs: min,
         max_secs: max,
+        allocs: alloc_delta.allocations / iters.max(1) as u64,
+        alloc_bytes: alloc_delta.bytes / iters.max(1) as u64,
     }
 }
 
@@ -91,6 +102,8 @@ pub fn single(name: &str, wall_secs: f64) -> BenchResult {
         stddev_secs: 0.0,
         min_secs: wall_secs,
         max_secs: wall_secs,
+        allocs: 0,
+        alloc_bytes: 0,
     }
 }
 
@@ -105,13 +118,15 @@ pub fn emit_json(bench: &str, results: &[BenchResult]) {
         out.push_str(&format!(
             "  {{\"name\":{:?},\"iters\":{},\"mean_secs\":{:.9},\
              \"stddev_secs\":{:.9},\"min_secs\":{:.9},\"max_secs\":{:.9},\
-             \"smoke\":{}}}{}\n",
+             \"allocs\":{},\"alloc_bytes\":{},\"smoke\":{}}}{}\n",
             r.name,
             r.iters,
             r.mean_secs,
             r.stddev_secs,
             r.min_secs,
             r.max_secs,
+            r.allocs,
+            r.alloc_bytes,
             smoke(),
             if i + 1 < results.len() { "," } else { "" }
         ));

@@ -1,92 +1,164 @@
-//! Bench A2 (ablation) — the compute hot path: AOT-compiled Pallas/XLA
-//! kernels via PJRT versus the native Rust baseline (the paper's C++
-//! component analogue), on the exact call shapes the pipeline uses.
+//! Bench A2 — the data-plane kernel rewrites versus the reference
+//! implementations they replaced ([`exoshuffle::sortlib::reference`]).
+//! Runs entirely on the native backend (no XLA artifacts needed), so it
+//! executes on every CI run and the reported ratios are
+//! hardware-independent signals the perf gate (`ci/compare_bench.py`)
+//! enforces:
 //!
-//! Reported per shape: mean latency and records/s for
-//!   - sort_and_partition (map-task hot spot)
-//!   - merge_and_partition (merge/reduce-task hot spot)
+//!   - `sort …`    SoA radix `sort_pairs` vs the AoS reference
+//!   - `merge …`   fused keyed merge+gather vs merge-then-gather
+//!   - `maplike …` full map-task data path: one pooled keyed arena vs
+//!                 a `Vec` per output (allocation gate under
+//!                 `--features alloc-stats`)
 //!
-//!     make artifacts && cargo bench --bench kernels
+//! Each pair emits a `[ref]` and an `[opt]` entry; the gate requires
+//! opt to beat ref by the ratios in ci/compare_bench.py.
+//!
+//!     cargo bench --bench kernels
+//!     BENCH_SMOKE=1 cargo bench --features alloc-stats --bench kernels
 
 #[path = "harness.rs"]
 mod harness;
 
-use exoshuffle::runtime::{merge_and_partition, sort_and_partition, Backend};
-use exoshuffle::sortlib::reducer_cuts;
+use exoshuffle::distfut::BufferPool;
+use exoshuffle::sortlib::keyed::{self, KEYED_RECORD_SIZE};
+use exoshuffle::sortlib::{self, gensort, radix, reducer_cuts, reference};
 use exoshuffle::util::rng::Xoshiro256;
 
-fn main() -> anyhow::Result<()> {
-    let xla = match Backend::xla(std::path::Path::new("artifacts")) {
-        Ok(b) => b,
-        Err(e) => {
-            println!("kernels bench skipped: {e}");
-            harness::emit_json("kernels", &[]);
-            return Ok(());
+/// Build a sorted run as both plain 100-byte records (reference kernel
+/// input) and keyed 108-byte records (optimized kernel input).
+fn sorted_run(seed: u64, offset: u64, records: u64) -> (Vec<u8>, Vec<u8>) {
+    let buf = gensort::generate_partition(&gensort::GenSpec {
+        seed,
+        offset,
+        records,
+    });
+    let keys = sortlib::extract_partition_keys(&buf);
+    let vals: Vec<u32> = (0..keys.len() as u32).collect();
+    let (_, perm) = radix::sort_pairs(&keys, &vals);
+    let n = keys.len();
+    let mut keyed_buf = vec![0u8; n * KEYED_RECORD_SIZE];
+    let bb =
+        keyed::gather_keyed_ranges(&buf, &keys, &perm, &[0, n as u32], &mut keyed_buf);
+    assert_eq!(bb, vec![0, n * KEYED_RECORD_SIZE]);
+    let plain = keyed::to_records(&keyed_buf);
+    (plain, keyed_buf)
+}
+
+fn report_pair(fam: &str, records: usize, r: &harness::BenchResult, o: &harness::BenchResult) {
+    println!(
+        "      -> {fam}: {:.2}x speedup, {:.2} Mrec/s opt{}",
+        r.mean_secs / o.mean_secs,
+        harness::throughput(records, o.mean_secs) / 1e6,
+        if o.allocs > 0 || r.allocs > 0 {
+            format!(", allocs {} ref / {} opt", r.allocs, o.allocs)
+        } else {
+            String::new()
         }
-    };
-    let native = Backend::Native;
-    let cuts = reducer_cuts(40);
-    let iters = harness::pick(10, 2);
+    );
+}
+
+fn main() {
+    let iters = harness::pick(10, 4);
+    let pool = BufferPool::new();
     let mut results = Vec::new();
 
-    harness::section("sort_and_partition (map-task hot spot)");
-    let sizes: &[usize] = harness::pick(&[4096, 16384], &[4096]);
+    harness::section("sort_pairs: SoA radix [opt] vs AoS reference [ref]");
+    let sizes: &[usize] = harness::pick(&[1 << 16, 1 << 18], &[1 << 16]);
     for &n in sizes {
         let mut rng = Xoshiro256::new(n as u64);
         let keys: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
-        for (name, backend) in [("xla", &xla), ("native", &native)] {
-            let label = format!("sort n={n} [{name}]");
-            let r = harness::bench(&label, iters, || {
-                let out = sort_and_partition(backend, &keys, &cuts).unwrap();
-                assert_eq!(out.keys.len(), n);
-            });
-            println!(
-                "      -> {:.2} Mrec/s",
-                harness::throughput(n, r.mean_secs) / 1e6
-            );
-            results.push(r);
-        }
+        let vals: Vec<u32> = (0..n as u32).collect();
+        assert_eq!(
+            reference::sort_pairs(&keys, &vals),
+            radix::sort_pairs(&keys, &vals),
+            "sort rewrite diverged from reference"
+        );
+        let r = harness::bench(&format!("sort n={n} [ref]"), iters, || {
+            std::hint::black_box(reference::sort_pairs(&keys, &vals));
+        });
+        let o = harness::bench(&format!("sort n={n} [opt]"), iters, || {
+            std::hint::black_box(radix::sort_pairs(&keys, &vals));
+        });
+        report_pair("sort", n, &r, &o);
+        results.push(r);
+        results.push(o);
     }
 
-    harness::section("merge_and_partition (merge/reduce-task hot spot)");
+    harness::section("merge: fused keyed walk [opt] vs merge-then-gather [ref]");
     let shapes: &[(usize, usize)] =
-        harness::pick(&[(8, 512), (8, 2048), (40, 400)], &[(8, 512)]);
+        harness::pick(&[(8, 8192), (40, 4000)], &[(8, 4096)]);
     for &(runs, len) in shapes {
-        let mut rng = Xoshiro256::new((runs * len) as u64);
-        let data: Vec<Vec<u64>> = (0..runs)
-            .map(|_| {
-                let mut v: Vec<u64> = (0..len).map(|_| rng.next_u64()).collect();
-                v.sort_unstable();
-                v
-            })
+        let built: Vec<(Vec<u8>, Vec<u8>)> = (0..runs)
+            .map(|r| sorted_run(7, (r * len) as u64, len as u64))
             .collect();
-        let refs: Vec<&[u64]> = data.iter().map(|d| d.as_slice()).collect();
+        let plain: Vec<&[u8]> = built.iter().map(|(p, _)| p.as_slice()).collect();
+        let keyed_runs: Vec<&[u8]> = built.iter().map(|(_, k)| k.as_slice()).collect();
+        let cuts = reducer_cuts(8);
         let total = runs * len;
-        for (name, backend) in [("xla", &xla), ("native", &native)] {
-            let label = format!("merge r={runs} l={len} [{name}]");
-            let r = harness::bench(&label, iters, || {
-                let out = merge_and_partition(backend, &refs, &cuts).unwrap();
-                assert_eq!(out.keys.len(), total);
-            });
-            println!(
-                "      -> {:.2} Mrec/s",
-                harness::throughput(total, r.mean_secs) / 1e6
-            );
-            results.push(r);
-        }
+        // sanity: the fused walk must reproduce the two-pass reference
+        let want = reference::merge_then_gather(&plain, &cuts);
+        let mut fused = vec![0u8; total * KEYED_RECORD_SIZE];
+        let bb = keyed::merge_keyed_ranges(&keyed_runs, &cuts, &mut fused);
+        let got: Vec<Vec<u8>> = bb
+            .windows(2)
+            .map(|w| keyed::to_records(&fused[w[0]..w[1]]))
+            .collect();
+        assert_eq!(want, got, "merge rewrite diverged from reference");
+
+        let r = harness::bench(&format!("merge r={runs} l={len} [ref]"), iters, || {
+            std::hint::black_box(reference::merge_then_gather(&plain, &cuts));
+        });
+        let o = harness::bench(&format!("merge r={runs} l={len} [opt]"), iters, || {
+            let mut out = pool.alloc(total * KEYED_RECORD_SIZE);
+            let bb = keyed::merge_keyed_ranges(&keyed_runs, &cuts, &mut out);
+            std::hint::black_box(out.into_blocks(&bb));
+        });
+        report_pair("merge", total, &r, &o);
+        results.push(r);
+        results.push(o);
     }
 
-    // cross-check: both backends agree bit-for-bit
-    harness::section("cross-check xla == native");
-    let mut rng = Xoshiro256::new(99);
-    let keys: Vec<u64> = (0..5000).map(|_| rng.next_u64()).collect();
-    let a = sort_and_partition(&xla, &keys, &cuts)?;
-    let b = sort_and_partition(&native, &keys, &cuts)?;
-    assert_eq!(a.keys, b.keys);
-    assert_eq!(a.perm, b.perm);
-    assert_eq!(a.offs, b.offs);
-    println!("sort results identical across backends");
+    harness::section("maplike: map-task data path, pooled arena [opt] vs Vec-per-output [ref]");
+    let n: u64 = harness::pick(1 << 17, 1 << 15);
+    let buf = gensort::generate_partition(&gensort::GenSpec {
+        seed: 3,
+        offset: 0,
+        records: n,
+    });
+    let cuts = reducer_cuts(40);
+    let vals: Vec<u32> = (0..n as u32).collect();
+    let r = harness::bench(&format!("maplike n={n} [ref]"), iters, || {
+        let keys = sortlib::extract_partition_keys(&buf);
+        let (skeys, perm) = reference::sort_pairs(&keys, &vals);
+        let offs = radix::partition_offsets(&skeys, &cuts);
+        let mut bounds = Vec::with_capacity(cuts.len() + 2);
+        bounds.push(0);
+        bounds.extend_from_slice(&offs);
+        bounds.push(perm.len() as u32);
+        std::hint::black_box(sortlib::apply_permutation_multi_ranges(
+            &[buf.as_slice()],
+            &perm,
+            &bounds,
+        ));
+    });
+    let o = harness::bench(&format!("maplike n={n} [opt]"), iters, || {
+        let keys = sortlib::extract_partition_keys(&buf);
+        let (skeys, perm) = radix::sort_pairs(&keys, &vals);
+        let offs = radix::partition_offsets(&skeys, &cuts);
+        let mut bounds = Vec::with_capacity(cuts.len() + 2);
+        bounds.push(0);
+        bounds.extend_from_slice(&offs);
+        bounds.push(perm.len() as u32);
+        let mut out = pool.alloc(keys.len() * KEYED_RECORD_SIZE);
+        let bb = keyed::gather_keyed_ranges(&buf, &keys, &perm, &bounds, &mut out);
+        std::hint::black_box(out.into_blocks(&bb));
+    });
+    report_pair("maplike", n as usize, &r, &o);
+    results.push(r);
+    results.push(o);
+
+    println!("\npool after run: {:?}", pool.stats());
     harness::emit_json("kernels", &results);
     println!("kernels bench: PASS");
-    Ok(())
 }

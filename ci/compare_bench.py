@@ -1,0 +1,232 @@
+#!/usr/bin/env python3
+"""CI perf gate over the BENCH_*.json files the bench binaries emit.
+
+Two kinds of checks:
+
+1. Within-run ratio gates (hardware-independent, always enforced) on
+   BENCH_kernels.json: every ``<family> ... [ref]`` / ``[opt]`` entry
+   pair from benches/kernels.rs is compared in the *same* run on the
+   *same* machine, so the thresholds hold regardless of runner speed.
+     - speedup (ref.mean_secs / opt.mean_secs) >= 1.5 for the ``sort``
+       and ``merge`` families;
+     - heap-allocation ratio (ref.allocs / opt.allocs) >= 5.0 for the
+       ``merge`` and ``maplike`` (map-task data path) families — only
+       checked when the benches were built with ``--features
+       alloc-stats`` (otherwise allocs are all zero and the gate is
+       skipped with a notice).
+
+2. Regression gate vs committed baselines (ci/baselines/BENCH_*.json):
+   any entry whose name appears in a non-provisional baseline must not
+   regress mean_secs by more than 20%. Baselines carry a ``provisional``
+   flag: the repo ships provisional (empty) baselines because the
+   authoring environment has no Rust toolchain to produce real numbers;
+   provisional baselines skip this gate loudly instead of vacuously
+   passing against made-up numbers.
+
+Refreshing baselines (run on the machine class CI uses):
+
+    BENCH_SMOKE=1 BENCH_JSON_DIR=bench-current \
+        cargo bench --features alloc-stats --bench kernels \
+        && cargo bench --bench sched_overhead && cargo bench --bench fig1
+    python3 ci/compare_bench.py --current bench-current --update-baselines
+
+then commit the rewritten ci/baselines/*.json (now provisional: false).
+
+Exit status: 0 when every enforced gate passes, 1 otherwise.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+BENCHES = ["kernels", "sched_overhead", "fig1"]
+
+# ref/opt speedup floors per kernels-bench family (first word of the
+# entry name). maplike is reported but not speed-gated: it is the
+# allocation-hygiene pair.
+SPEEDUP_MIN = {"sort": 1.5, "merge": 1.5}
+
+# ref/opt heap-allocation floors (alloc-stats builds only).
+ALLOC_RATIO_MIN = {"merge": 5.0, "maplike": 5.0}
+
+# Regression tolerance vs non-provisional baselines.
+REGRESSION_TOLERANCE = 0.20
+
+
+def load_results(path):
+    """Load a bench JSON file: a bare result array (bench output) or a
+    {"provisional": bool, "results": [...]} baseline object."""
+    with open(path) as f:
+        data = json.load(f)
+    if isinstance(data, list):
+        return {"provisional": False, "results": data}
+    return {
+        "provisional": bool(data.get("provisional", False)),
+        "results": data.get("results", []),
+    }
+
+
+def family(name):
+    return name.split(" ", 1)[0].split("=", 1)[0]
+
+
+def pair_up(results):
+    """Yield (base_name, family, ref_entry, opt_entry) for every
+    '[ref]'/'[opt]' pair in a kernels result list."""
+    by_name = {r["name"]: r for r in results}
+    for name, ref in sorted(by_name.items()):
+        if not name.endswith(" [ref]"):
+            continue
+        base = name[: -len(" [ref]")]
+        opt = by_name.get(base + " [opt]")
+        if opt is None:
+            yield base, family(base), ref, None
+        else:
+            yield base, family(base), ref, opt
+
+
+def check_ratios(results, failures):
+    """Within-run speedup + allocation gates on kernels results."""
+    counting = any(r.get("allocs", 0) > 0 for r in results)
+    pairs = list(pair_up(results))
+    if not pairs:
+        failures.append("kernels: no [ref]/[opt] entry pairs found")
+        return
+    for base, fam, ref, opt in pairs:
+        if opt is None:
+            failures.append(f"kernels: '{base} [ref]' has no [opt] twin")
+            continue
+        speedup = ref["mean_secs"] / max(opt["mean_secs"], 1e-12)
+        floor = SPEEDUP_MIN.get(fam)
+        gated = floor is not None
+        status = "    "
+        if gated and speedup < floor:
+            failures.append(
+                f"kernels: {base}: speedup {speedup:.2f}x < required {floor}x"
+            )
+            status = "FAIL"
+        print(
+            f"  {status} {base}: {speedup:.2f}x speedup"
+            + (f" (floor {floor}x)" if gated else " (informational)")
+        )
+        afloor = ALLOC_RATIO_MIN.get(fam)
+        if afloor is None:
+            continue
+        if not counting:
+            print(f"       {base}: alloc gate skipped (no alloc-stats build)")
+            continue
+        ref_allocs = ref.get("allocs", 0)
+        opt_allocs = opt.get("allocs", 0)
+        if ref_allocs == 0:
+            failures.append(f"kernels: {base}: ref allocs are 0 despite alloc-stats")
+            continue
+        ratio = ref_allocs / max(opt_allocs, 1)
+        if opt_allocs > 0 and ratio < afloor:
+            failures.append(
+                f"kernels: {base}: alloc ratio {ratio:.1f}x "
+                f"({ref_allocs} ref / {opt_allocs} opt) < required {afloor}x"
+            )
+            print(f"  FAIL {base}: alloc ratio {ratio:.1f}x (floor {afloor}x)")
+        else:
+            print(
+                f"       {base}: alloc ratio {ratio:.1f}x "
+                f"({ref_allocs} ref / {opt_allocs} opt, floor {afloor}x)"
+            )
+
+
+def check_regressions(bench, current, baseline, failures):
+    """mean_secs regression gate vs a committed baseline."""
+    if baseline["provisional"]:
+        print(
+            f"  {bench}: baseline is provisional — regression gate skipped. "
+            "Refresh with --update-baselines on a CI-class machine."
+        )
+        return
+    base_by_name = {r["name"]: r for r in baseline["results"]}
+    compared = 0
+    for cur in current["results"]:
+        base = base_by_name.get(cur["name"])
+        if base is None:
+            continue
+        if cur.get("smoke") != base.get("smoke"):
+            continue  # different scales are not comparable
+        compared += 1
+        limit = base["mean_secs"] * (1.0 + REGRESSION_TOLERANCE)
+        if cur["mean_secs"] > limit:
+            failures.append(
+                f"{bench}: {cur['name']}: {cur['mean_secs']:.6f}s > "
+                f"{limit:.6f}s (baseline {base['mean_secs']:.6f}s "
+                f"+{REGRESSION_TOLERANCE:.0%})"
+            )
+    print(f"  {bench}: {compared} entries compared against baseline")
+
+
+def update_baselines(current_dir, baseline_dir):
+    os.makedirs(baseline_dir, exist_ok=True)
+    for bench in BENCHES:
+        src = os.path.join(current_dir, f"BENCH_{bench}.json")
+        if not os.path.exists(src):
+            print(f"skip {bench}: {src} not found")
+            continue
+        results = load_results(src)["results"]
+        dst = os.path.join(baseline_dir, f"BENCH_{bench}.json")
+        with open(dst, "w") as f:
+            json.dump({"provisional": False, "results": results}, f, indent=2)
+            f.write("\n")
+        print(f"wrote {dst} ({len(results)} entries)")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--current",
+        required=True,
+        help="directory with this run's BENCH_*.json (i.e. $BENCH_JSON_DIR)",
+    )
+    ap.add_argument("--baselines", default="ci/baselines")
+    ap.add_argument(
+        "--update-baselines",
+        action="store_true",
+        help="rewrite the committed baselines from --current and exit",
+    )
+    args = ap.parse_args()
+
+    if args.update_baselines:
+        update_baselines(args.current, args.baselines)
+        return 0
+
+    failures = []
+
+    kernels_path = os.path.join(args.current, "BENCH_kernels.json")
+    print("ratio gates (within-run, hardware-independent):")
+    if os.path.exists(kernels_path):
+        check_ratios(load_results(kernels_path)["results"], failures)
+    else:
+        failures.append(f"missing {kernels_path}")
+
+    print("regression gates (vs committed baselines):")
+    for bench in BENCHES:
+        cur_path = os.path.join(args.current, f"BENCH_{bench}.json")
+        base_path = os.path.join(args.baselines, f"BENCH_{bench}.json")
+        if not os.path.exists(cur_path):
+            failures.append(f"missing {cur_path}")
+            continue
+        if not os.path.exists(base_path):
+            failures.append(f"missing baseline {base_path}")
+            continue
+        check_regressions(
+            bench, load_results(cur_path), load_results(base_path), failures
+        )
+
+    if failures:
+        print("\nperf gate FAILED:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("\nperf gate PASSED")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -10,12 +10,11 @@ use std::sync::Arc;
 
 use crate::coordinator::manifest::{encode_gen_result, encode_summary};
 use crate::coordinator::plan::JobSpec;
-use crate::distfut::{task_fn, JobId, ObjectRef, Placement, TaskSpec};
+use crate::distfut::{task_fn, task_fn_blocks, JobId, ObjectRef, Placement, TaskSpec};
 use crate::runtime::{self, Backend};
 use crate::s3sim::S3;
-use crate::sortlib::{
-    self, gensort, valsort, RECORD_SIZE,
-};
+use crate::sortlib::keyed::{self, KEYED_RECORD_SIZE};
+use crate::sortlib::{self, gensort, valsort, RECORD_SIZE};
 use crate::util::rng::stream_at;
 
 /// Retries for tasks that touch (simulated) S3 — transient failures are
@@ -80,11 +79,13 @@ pub fn gen_task(spec: &JobSpec, s3: &S3, p: usize) -> TaskSpec {
 }
 
 /// Map task (§2.3): download an input partition, sort it, and split it at
-/// the given cut points into `cuts.len() + 1` record buffers. The
-/// strategy chooses the granularity: worker cuts (W slices routed to
-/// merge controllers, the paper's design) or the full reducer cuts
-/// (R slices consumed directly by reduce tasks, the simple-shuffle
-/// baseline).
+/// the given cut points into `cuts.len() + 1` *keyed* record blocks
+/// ([`crate::sortlib::keyed`]) — all views into one pooled arena written
+/// once by the gather, which also embeds the partition keys so no later
+/// stage re-extracts them. The strategy chooses the granularity: worker
+/// cuts (W slices routed to merge controllers, the paper's design) or
+/// the full reducer cuts (R slices consumed directly by reduce tasks,
+/// the simple-shuffle baseline).
 pub fn map_task(
     spec: &JobSpec,
     s3: &S3,
@@ -101,19 +102,22 @@ pub fn map_task(
         job: JobId::ROOT,
         name: format!("map-{p}"),
         placement: Placement::Any,
-        func: task_fn(move |_ctx| {
+        func: task_fn_blocks(move |ctx| {
             let buf = s3
                 .get(&bucket_of(seed, p as u64, n_buckets), &input_key(p))
                 .map_err(|e| e.to_string())?;
             let keys = sortlib::extract_partition_keys(&buf);
             let r = runtime::sort_and_partition(&backend, &keys, &cuts)
                 .map_err(|e| e.to_string())?;
-            // gather sorted records directly into the output slices
             let mut bounds = Vec::with_capacity(cuts.len() + 2);
             bounds.push(0);
             bounds.extend_from_slice(&r.offs);
-            bounds.push(keys.len() as u32);
-            Ok(sortlib::apply_permutation_ranges(&buf, &r.perm, &bounds))
+            bounds.push(r.perm.len() as u32);
+            // gather sorted keyed records into one pooled arena; the
+            // n_out outputs are zero-copy views into it
+            let mut out = ctx.pool.alloc(keys.len() * KEYED_RECORD_SIZE);
+            let bb = keyed::gather_keyed_ranges(&buf, &keys, &r.perm, &bounds, &mut out);
+            Ok(out.into_blocks(&bb))
         }),
         args: vec![],
         num_returns: n_out,
@@ -121,8 +125,10 @@ pub fn map_task(
     }
 }
 
-/// Merge task (§2.3): merge already-sorted map blocks and partition into
-/// R1 merged blocks, one per reducer range of this worker.
+/// Merge task (§2.3): merge already-sorted keyed map blocks and
+/// partition into R1 merged keyed blocks, one per reducer range of this
+/// worker — a single fused walk into one pooled arena on the native
+/// backend (no key re-extraction, no permutation pass).
 pub fn merge_task(
     spec: &JobSpec,
     backend: &Backend,
@@ -140,26 +146,16 @@ pub fn merge_task(
         args: blocks,
         num_returns: r1,
         max_retries: 1,
-        func: task_fn(move |ctx| {
-            let bufs: Vec<&[u8]> =
+        func: task_fn_blocks(move |ctx| {
+            let runs: Vec<&[u8]> =
                 ctx.args.iter().map(|a| a.as_slice()).collect();
-            let key_runs: Vec<Vec<u64>> = bufs
-                .iter()
-                .map(|b| sortlib::extract_partition_keys(b))
-                .collect();
-            let runs: Vec<&[u64]> =
-                key_runs.iter().map(|k| k.as_slice()).collect();
-            let r = runtime::merge_and_partition(&backend, &runs, &cuts)
-                .map_err(|e| e.to_string())?;
-            // gather merged records directly into the R1 reducer slices
-            let total: u32 = runs.iter().map(|k| k.len() as u32).sum();
-            let mut bounds = Vec::with_capacity(r1 + 1);
-            bounds.push(0);
-            bounds.extend_from_slice(&r.offs[..r1 - 1]);
-            bounds.push(total);
-            Ok(sortlib::apply_permutation_multi_ranges(
-                &bufs, &r.perm, &bounds,
-            ))
+            let total: usize =
+                runs.iter().map(|r| keyed::keyed_record_count(r)).sum();
+            let mut out = ctx.pool.alloc(total * KEYED_RECORD_SIZE);
+            let bb =
+                runtime::merge_keyed_ranges(&backend, &runs, &cuts[..r1 - 1], &mut out)
+                    .map_err(|e| e.to_string())?;
+            Ok(out.into_blocks(&bb))
         }),
     }
 }
@@ -187,17 +183,15 @@ pub fn reduce_task(
         num_returns: 1,
         max_retries: S3_TASK_RETRIES,
         func: task_fn(move |ctx| {
-            let bufs: Vec<&[u8]> =
+            let runs: Vec<&[u8]> =
                 ctx.args.iter().map(|a| a.as_slice()).collect();
-            let key_runs: Vec<Vec<u64>> = bufs
-                .iter()
-                .map(|b| sortlib::extract_partition_keys(b))
-                .collect();
-            let runs: Vec<&[u64]> =
-                key_runs.iter().map(|k| k.as_slice()).collect();
-            let r = runtime::merge_and_partition(&backend, &runs, &[])
+            let total: usize =
+                runs.iter().map(|r| keyed::keyed_record_count(r)).sum();
+            // plain records: this buffer goes to S3, not back to the pool
+            let mut out = vec![0u8; total * RECORD_SIZE];
+            let written = runtime::merge_keyed_records(&backend, &runs, &mut out)
                 .map_err(|e| e.to_string())?;
-            let mut out = sortlib::apply_permutation_multi(&bufs, &r.perm);
+            debug_assert_eq!(written, out.len());
             // the kernels order by the u64 partition key; restore full
             // 10-byte-key order among prefix-colliding records
             sortlib::fix_key_ties(&mut out);

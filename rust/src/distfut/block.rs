@@ -1,0 +1,468 @@
+//! Zero-copy data-plane blocks: refcounted views over pooled arenas.
+//!
+//! The hot path of the shuffle moves ~3× the dataset through memory
+//! (map → merge → reduce), so the block representation must not cost a
+//! heap allocation and a copy per slice. This module provides:
+//!
+//! - [`Block`] — a cheap, clonable *view* (`offset + len`) over a
+//!   refcounted [`Arena`] allocation. A map task's `n_out` output slices
+//!   are `n_out` `Block`s into **one** arena written once by the gather,
+//!   not `n_out` separate `Vec`s. `Block` derefs to `&[u8]`, so
+//!   consumers read it exactly like the `Arc<Vec<u8>>` it replaces.
+//! - [`BufferPool`] — a per-node, size-classed (power-of-two) free list
+//!   of arena backings. Dropping the last `Block` of an arena returns
+//!   the backing to its pool, so steady-state task execution recycles a
+//!   handful of large buffers instead of hammering the allocator.
+//!
+//! # Arena ownership and aliasing rules
+//!
+//! - An arena is writable only while it is a [`PoolBuf`] (exclusively
+//!   owned, `DerefMut`). [`PoolBuf::freeze`] / [`PoolBuf::into_blocks`]
+//!   converts it into an immutable [`Arena`] shared by `Block` views;
+//!   after that point no `&mut` access exists, so views never observe a
+//!   mutation (enforced by the type system, not convention).
+//! - Sibling `Block`s of one arena alias disjoint (or overlapping —
+//!   both are safe, they are read-only) byte ranges. The arena's memory
+//!   is returned to the pool only when the **last** sibling drops, so a
+//!   view can never read recycled bytes.
+//! - A recycled backing may contain stale bytes from a previous task
+//!   (possibly of another job). [`BufferPool::alloc`] hands it out as a
+//!   `PoolBuf` whose contract is *write-before-read*: the producing
+//!   task fully overwrites `[0, len)` before freezing. Stale bytes are
+//!   never reachable through a committed `Block` that honoured this.
+//!
+//! # Block lifecycle through the store
+//!
+//! `commit → view → spill → restore → evacuate`:
+//!
+//! 1. **commit** — a task's output `Block`s land in
+//!    [`super::store::Store`] slots as-is: no copy, the store just
+//!    shares the arena refcount.
+//! 2. **view** — `get` clones the `Block` (an `Arc` bump + two
+//!    integers); consumers read `&[u8]` straight out of the arena.
+//! 3. **spill** — over-capacity shards write `&block[..]` (the view
+//!    bytes, not the whole arena) to disk and drop the view, releasing
+//!    the arena once its siblings go.
+//! 4. **restore** — a spilled object is read back into a fresh unpooled
+//!    arena ([`Block::from`] a `Vec<u8>`); alignment and pooling of the
+//!    original arena are irrelevant to correctness.
+//! 5. **evacuate** — draining a node relabels the owning shard of each
+//!    entry; the `Block` itself (and its arena) never moves.
+
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, Weak};
+
+/// Smallest pooled backing (smaller requests round up to this class).
+const MIN_CLASS_BYTES: usize = 4096;
+/// Free buffers kept per size class; returns beyond this are dropped so
+/// an allocation burst cannot pin memory forever.
+const MAX_FREE_PER_CLASS: usize = 8;
+
+/// Counters describing how well the pool is recycling.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Backings allocated fresh from the global allocator.
+    pub fresh: u64,
+    /// Allocations served from a recycled backing.
+    pub reused: u64,
+    /// Backings returned to a free list at arena drop.
+    pub recycled: u64,
+    /// Backings dropped at return because their class list was full.
+    pub discarded: u64,
+}
+
+struct PoolShared {
+    /// `free[c]` holds backings of capacity `1 << (c + MIN_SHIFT)`.
+    free: Mutex<Vec<Vec<Vec<u8>>>>,
+    fresh: AtomicU64,
+    reused: AtomicU64,
+    recycled: AtomicU64,
+    discarded: AtomicU64,
+}
+
+const MIN_SHIFT: u32 = MIN_CLASS_BYTES.trailing_zeros();
+
+fn class_of(len: usize) -> (usize, usize) {
+    let cap = len.next_power_of_two().max(MIN_CLASS_BYTES);
+    ((cap.trailing_zeros() - MIN_SHIFT) as usize, cap)
+}
+
+impl PoolShared {
+    fn take(&self, class: usize, cap: usize) -> Option<Vec<u8>> {
+        let mut free = self.free.lock().unwrap();
+        let buf = free.get_mut(class)?.pop()?;
+        debug_assert_eq!(buf.len(), cap);
+        Some(buf)
+    }
+
+    fn recycle(&self, data: Vec<u8>) {
+        // Only class-shaped backings come back (pooled allocs are always
+        // full power-of-two length ≥ the minimum class); anything else —
+        // e.g. a buffer shrunk by a buggy caller — is safer dropped.
+        if data.len() < MIN_CLASS_BYTES || !data.len().is_power_of_two() {
+            self.discarded.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let (class, _) = class_of(data.len());
+        let mut free = self.free.lock().unwrap();
+        if free.len() <= class {
+            free.resize_with(class + 1, Vec::new);
+        }
+        if free[class].len() < MAX_FREE_PER_CLASS {
+            free[class].push(data);
+            self.recycled.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.discarded.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// A per-node arena pool with size-classed recycling. Cheap to clone
+/// (all clones share the free lists).
+#[derive(Clone)]
+pub struct BufferPool {
+    shared: Arc<PoolShared>,
+}
+
+impl Default for BufferPool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BufferPool {
+    pub fn new() -> Self {
+        BufferPool {
+            shared: Arc::new(PoolShared {
+                free: Mutex::new(Vec::new()),
+                fresh: AtomicU64::new(0),
+                reused: AtomicU64::new(0),
+                recycled: AtomicU64::new(0),
+                discarded: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// A writable backing with logical length `len` (class-rounded
+    /// capacity under the hood). Contents are unspecified — recycled
+    /// backings keep their previous bytes; the caller must fully write
+    /// `[0, len)` before freezing (see the module aliasing rules).
+    pub fn alloc(&self, len: usize) -> PoolBuf {
+        if len == 0 {
+            // zero-length outputs are real (an empty partition slice);
+            // no point threading them through the free lists
+            return PoolBuf {
+                data: Vec::new(),
+                len: 0,
+                pool: Weak::new(),
+            };
+        }
+        let (class, cap) = class_of(len);
+        let data = match self.shared.take(class, cap) {
+            Some(buf) => {
+                self.shared.reused.fetch_add(1, Ordering::Relaxed);
+                buf
+            }
+            None => {
+                self.shared.fresh.fetch_add(1, Ordering::Relaxed);
+                vec![0u8; cap]
+            }
+        };
+        PoolBuf {
+            data,
+            len,
+            pool: Arc::downgrade(&self.shared),
+        }
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            fresh: self.shared.fresh.load(Ordering::Relaxed),
+            reused: self.shared.reused.load(Ordering::Relaxed),
+            recycled: self.shared.recycled.load(Ordering::Relaxed),
+            discarded: self.shared.discarded.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// The immutable, refcounted backing of one or more [`Block`] views.
+/// Returns its bytes to the originating [`BufferPool`] (if still alive)
+/// when the last view drops.
+pub struct Arena {
+    data: Vec<u8>,
+    len: usize,
+    pool: Weak<PoolShared>,
+}
+
+impl Arena {
+    fn bytes(&self) -> &[u8] {
+        &self.data[..self.len]
+    }
+}
+
+impl Drop for Arena {
+    fn drop(&mut self) {
+        if let Some(pool) = self.pool.upgrade() {
+            pool.recycle(std::mem::take(&mut self.data));
+        }
+    }
+}
+
+/// An exclusively-owned, writable arena backing checked out of a
+/// [`BufferPool`]. Freeze it into [`Block`] views once fully written.
+pub struct PoolBuf {
+    data: Vec<u8>,
+    len: usize,
+    pool: Weak<PoolShared>,
+}
+
+impl PoolBuf {
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Seal the buffer into an immutable shared arena.
+    pub fn freeze(self) -> Arc<Arena> {
+        Arc::new(Arena {
+            data: self.data,
+            len: self.len,
+            pool: self.pool,
+        })
+    }
+
+    /// Seal and view the whole buffer as one block.
+    pub fn into_block(self) -> Block {
+        let len = self.len;
+        Block {
+            arena: self.freeze(),
+            off: 0,
+            len,
+        }
+    }
+
+    /// Seal the buffer and slice it at `bounds` (ascending byte offsets,
+    /// `bounds[0] == 0`, `bounds.last() <= len`): one zero-copy block
+    /// per window — the map/merge "n_out slices, one arena" shape.
+    pub fn into_blocks(self, bounds: &[usize]) -> Vec<Block> {
+        debug_assert!(bounds.windows(2).all(|w| w[0] <= w[1]));
+        debug_assert!(bounds.last().is_none_or(|&b| b <= self.len));
+        let arena = self.freeze();
+        bounds
+            .windows(2)
+            .map(|w| Block {
+                arena: arena.clone(),
+                off: w[0],
+                len: w[1] - w[0],
+            })
+            .collect()
+    }
+}
+
+impl Deref for PoolBuf {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        &self.data[..self.len]
+    }
+}
+
+impl DerefMut for PoolBuf {
+    fn deref_mut(&mut self) -> &mut [u8] {
+        &mut self.data[..self.len]
+    }
+}
+
+/// A refcounted, read-only byte view over an [`Arena`]. Clones share
+/// the arena; slicing ([`Block::slice`]) is zero-copy. Derefs to
+/// `&[u8]`, so it drops into `Arc<Vec<u8>>` call sites unchanged.
+#[derive(Clone)]
+pub struct Block {
+    arena: Arc<Arena>,
+    off: usize,
+    len: usize,
+}
+
+impl Block {
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        &self.arena.bytes()[self.off..self.off + self.len]
+    }
+
+    /// A zero-copy sub-view (`range` is relative to this block).
+    pub fn slice(&self, range: std::ops::Range<usize>) -> Block {
+        assert!(
+            range.start <= range.end && range.end <= self.len,
+            "block slice {range:?} out of bounds (len {})",
+            self.len
+        );
+        Block {
+            arena: self.arena.clone(),
+            off: self.off + range.start,
+            len: range.end - range.start,
+        }
+    }
+
+    /// How many views (including this one) share the backing arena.
+    pub fn arena_refs(&self) -> usize {
+        Arc::strong_count(&self.arena)
+    }
+}
+
+impl From<Vec<u8>> for Block {
+    /// Wrap an owned byte vector as an unpooled single-view arena (the
+    /// compatibility path: driver puts, S3 reads, spill restores).
+    fn from(v: Vec<u8>) -> Block {
+        let len = v.len();
+        Block {
+            arena: Arc::new(Arena {
+                data: v,
+                len,
+                pool: Weak::new(),
+            }),
+            off: 0,
+            len,
+        }
+    }
+}
+
+impl Deref for Block {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl AsRef<[u8]> for Block {
+    fn as_ref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl std::fmt::Debug for Block {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Block(len={}, off={}, arena={})", self.len, self.off, self.arena.len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_views_read_like_slices() {
+        let b = Block::from(vec![1u8, 2, 3, 4, 5]);
+        assert_eq!(*b, vec![1, 2, 3, 4, 5]);
+        assert_eq!(b.as_ref(), &vec![1u8, 2, 3, 4, 5]);
+        assert_eq!(b[1..4], [2, 3, 4]);
+        assert_eq!(b.len(), 5);
+        let s = b.slice(1..4);
+        assert_eq!(*s, [2u8, 3, 4]);
+        assert_eq!(s.len(), 3);
+        assert_eq!(*s.slice(2..3), [4u8]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn slice_out_of_bounds_panics() {
+        Block::from(vec![0u8; 4]).slice(2..6);
+    }
+
+    #[test]
+    fn one_arena_many_views() {
+        let pool = BufferPool::new();
+        let mut buf = pool.alloc(300);
+        for (i, b) in buf.iter_mut().enumerate() {
+            *b = (i % 251) as u8;
+        }
+        let blocks = buf.into_blocks(&[0, 100, 100, 300]);
+        assert_eq!(blocks.len(), 3);
+        assert_eq!(blocks[0].len(), 100);
+        assert!(blocks[1].is_empty());
+        assert_eq!(blocks[2].len(), 200);
+        assert_eq!(blocks[0][7], 7);
+        assert_eq!(blocks[2][0], 100 % 251);
+        // all three views share one arena
+        assert_eq!(blocks[0].arena_refs(), 3);
+        assert_eq!(pool.stats().fresh, 1);
+    }
+
+    #[test]
+    fn pool_recycles_after_last_view_drops() {
+        let pool = BufferPool::new();
+        let blocks = pool.alloc(10_000).into_blocks(&[0, 5000, 10_000]);
+        assert_eq!(pool.stats(), PoolStats { fresh: 1, ..Default::default() });
+        // the arena outlives any single sibling
+        let keep = blocks[1].clone();
+        drop(blocks);
+        assert_eq!(pool.stats().recycled, 0, "a live view pins the arena");
+        assert_eq!(keep[0], 0u8);
+        drop(keep);
+        assert_eq!(pool.stats().recycled, 1);
+        // same class → served from the free list
+        let again = pool.alloc(9_000);
+        assert_eq!(pool.stats().reused, 1);
+        assert_eq!(again.len(), 9_000);
+    }
+
+    #[test]
+    fn classes_do_not_mix_and_lists_are_bounded() {
+        let pool = BufferPool::new();
+        drop(pool.alloc(100).into_block()); // 4 KiB class
+        let s = pool.stats();
+        assert_eq!((s.fresh, s.recycled), (1, 1));
+        // a different class misses the 4 KiB free list
+        drop(pool.alloc(100_000).into_block());
+        assert_eq!(pool.stats().fresh, 2);
+        // over-returning one class discards the excess
+        let bufs: Vec<Block> = (0..MAX_FREE_PER_CLASS + 3)
+            .map(|_| pool.alloc(64).into_block())
+            .collect();
+        drop(bufs);
+        let s = pool.stats();
+        assert!(s.discarded >= 2, "{s:?}");
+    }
+
+    #[test]
+    fn unpooled_blocks_never_touch_the_pool() {
+        let pool = BufferPool::new();
+        drop(Block::from(vec![0u8; 8192]));
+        assert_eq!(pool.stats(), PoolStats::default());
+        // zero-length alloc is unpooled too
+        let empty = pool.alloc(0).into_block();
+        assert!(empty.is_empty());
+        drop(empty);
+        assert_eq!(pool.stats(), PoolStats::default());
+    }
+
+    #[test]
+    fn recycled_backing_cannot_alias_live_views() {
+        let pool = BufferPool::new();
+        let mut a = pool.alloc(4096);
+        a.fill(0xAA);
+        let a = a.into_block();
+        // while `a` lives, a same-class alloc gets a distinct backing
+        let mut b = pool.alloc(4096);
+        b.fill(0xBB);
+        let b = b.into_block();
+        assert!(a.iter().all(|&x| x == 0xAA));
+        assert!(b.iter().all(|&x| x == 0xBB));
+        assert_eq!(pool.stats().fresh, 2);
+        drop(a);
+        // the recycled backing is handed out again — stale bytes and all —
+        // but only after no view can read it
+        let c = pool.alloc(4096);
+        assert_eq!(pool.stats().reused, 1);
+        assert!(c.iter().all(|&x| x == 0xAA), "write-before-read contract");
+    }
+}

@@ -21,6 +21,7 @@
 use std::sync::{Arc, Weak};
 use std::time::Duration;
 
+use crate::distfut::block::Block;
 use crate::distfut::chaos::scale_fleet_to;
 use crate::distfut::clock::Clock;
 use crate::distfut::future::TaskHandle;
@@ -128,14 +129,14 @@ impl RuntimeHandle {
         }
     }
 
-    pub fn put(&self, node: usize, data: Vec<u8>) -> ObjectRef {
+    pub fn put(&self, node: usize, data: impl Into<Block>) -> ObjectRef {
         match self {
             RuntimeHandle::Threaded(rt) => rt.put(node, data),
             RuntimeHandle::Sim(rt) => rt.put(node, data),
         }
     }
 
-    pub fn get(&self, r: &ObjectRef) -> Result<Arc<Vec<u8>>, DfError> {
+    pub fn get(&self, r: &ObjectRef) -> Result<Block, DfError> {
         match self {
             RuntimeHandle::Threaded(rt) => rt.get(r),
             RuntimeHandle::Sim(rt) => rt.get(r),
@@ -146,7 +147,7 @@ impl RuntimeHandle {
         &self,
         r: &ObjectRef,
         node: usize,
-    ) -> Result<Arc<Vec<u8>>, DfError> {
+    ) -> Result<Block, DfError> {
         match self {
             RuntimeHandle::Threaded(rt) => rt.get_from(r, node),
             RuntimeHandle::Sim(rt) => rt.get_from(r, node),

@@ -60,6 +60,7 @@
 //! depth, slot utilization and residency watermarks, pricing decisions
 //! with [`crate::cost`].
 
+pub mod block;
 pub mod chaos;
 pub mod clock;
 pub mod future;
@@ -70,6 +71,7 @@ pub mod store;
 
 use std::sync::Arc;
 
+pub use block::{Block, BufferPool, PoolBuf, PoolStats};
 pub use clock::Clock;
 pub use future::TaskHandle;
 pub use handle::{RuntimeHandle, WeakRuntimeHandle};
@@ -155,16 +157,28 @@ pub enum DfError {
 
 /// The boxed task function type. Must be `Fn` (not `FnOnce`) so the
 /// scheduler can re-execute it on retry or lineage reconstruction; it
-/// receives resolved argument buffers and returns one buffer per declared
-/// output. Task bodies must be deterministic functions of their arguments
-/// for recovery to reproduce byte-identical objects.
-pub type TaskFn =
-    Arc<dyn Fn(&TaskCtx) -> Result<Vec<Vec<u8>>, String> + Send + Sync>;
+/// receives resolved argument [`Block`] views and returns one [`Block`]
+/// per declared output (typically views into one pooled arena — see
+/// [`block`]). Task bodies must be deterministic functions of their
+/// arguments for recovery to reproduce byte-identical objects.
+pub type TaskFn = Arc<dyn Fn(&TaskCtx) -> Result<Vec<Block>, String> + Send + Sync>;
 
-/// Helper to build a [`TaskFn`] from a closure.
+/// Helper to build a [`TaskFn`] from a closure returning owned byte
+/// vectors (each becomes a single-view [`Block`]). The compatibility
+/// path for control-plane tasks and tests; the zero-copy data plane
+/// uses [`task_fn_blocks`].
 pub fn task_fn<F>(f: F) -> TaskFn
 where
     F: Fn(&TaskCtx) -> Result<Vec<Vec<u8>>, String> + Send + Sync + 'static,
+{
+    Arc::new(move |ctx| Ok(f(ctx)?.into_iter().map(Block::from).collect()))
+}
+
+/// Helper to build a [`TaskFn`] from a closure returning [`Block`] views
+/// directly (the zero-copy path: slices of one pooled arena).
+pub fn task_fn_blocks<F>(f: F) -> TaskFn
+where
+    F: Fn(&TaskCtx) -> Result<Vec<Block>, String> + Send + Sync + 'static,
 {
     Arc::new(f)
 }

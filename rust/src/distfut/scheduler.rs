@@ -60,6 +60,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::distfut::block::{Block, BufferPool};
 use crate::distfut::clock::Clock;
 use crate::distfut::future::TaskHandle;
 use crate::distfut::store::{ObjState, ObjectId, ObjectRef, Store, StoreStats};
@@ -199,10 +200,14 @@ struct JobSched {
 pub struct TaskCtx {
     /// Node the task is executing on.
     pub node: usize,
-    /// Resolved argument buffers (same order as `TaskSpec::args`).
-    pub args: Vec<Arc<Vec<u8>>>,
+    /// Resolved argument buffers (same order as `TaskSpec::args`) —
+    /// zero-copy [`Block`] views; deref to `&[u8]`.
+    pub args: Vec<Block>,
     /// 0 on the first attempt, incremented per retry.
     pub attempt: u32,
+    /// The executing node's buffer pool. Tasks allocate output arenas
+    /// here so backing buffers recycle across tasks on the node.
+    pub pool: BufferPool,
 }
 
 /// Everything needed to re-execute a task during recovery: the spec's
@@ -733,7 +738,7 @@ impl Runtime {
 
     /// Put a buffer into `node`'s store from the driver (redirected to a
     /// live node if `node` is dead).
-    pub fn put(&self, node: usize, data: Vec<u8>) -> ObjectRef {
+    pub fn put(&self, node: usize, data: impl Into<Block>) -> ObjectRef {
         let node = live_target(&self.shared, node);
         self.shared.store.put(node, data)
     }
@@ -742,12 +747,12 @@ impl Runtime {
     /// as node usize::MAX — no transfer counted toward shuffle traffic).
     /// Blocks through node-failure recovery until the object is
     /// recommitted, or errors if it is unrecoverable.
-    pub fn get(&self, r: &ObjectRef) -> Result<Arc<Vec<u8>>, DfError> {
+    pub fn get(&self, r: &ObjectRef) -> Result<Block, DfError> {
         self.shared.store.get(r.id, usize::MAX)
     }
 
     /// Fetch from a specific node's perspective (tasks use their ctx node).
-    pub fn get_from(&self, r: &ObjectRef, node: usize) -> Result<Arc<Vec<u8>>, DfError> {
+    pub fn get_from(&self, r: &ObjectRef, node: usize) -> Result<Block, DfError> {
         self.shared.store.get(r.id, node)
     }
 
@@ -1980,7 +1985,7 @@ fn pick_task(
 
 /// Argument-fetch outcome for a dispatched task.
 enum Fetch {
-    Ready(Vec<Arc<Vec<u8>>>),
+    Ready(Vec<Block>),
     /// An argument was lost to a node failure after dispatch; the task
     /// must be re-parked until the reconstruction recommits.
     Lost,
@@ -2091,6 +2096,7 @@ fn worker_loop(sh: Arc<Shared>, node: usize, generation: u64) {
                     node,
                     args,
                     attempt: task.attempt,
+                    pool: sh.store.pool(node),
                 };
                 (task.spec.func)(&ctx)
             }

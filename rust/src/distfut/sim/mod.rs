@@ -37,6 +37,7 @@ use std::collections::{BTreeSet, BinaryHeap, HashMap, HashSet, VecDeque};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, Weak};
 
+use crate::distfut::block::Block;
 use crate::distfut::clock::Clock;
 use crate::distfut::future::{Pump, TaskHandle};
 use crate::distfut::scheduler::{
@@ -103,7 +104,8 @@ struct Running {
     /// the orphaned event is skipped as stale when popped.
     dispatch_id: u64,
     started: f64,
-    #[allow(dead_code)] // parity with the threaded worker's check
+    /// Store generation the task was dispatched under; stale
+    /// incarnations' commits are rejected, as in the threaded worker.
     generation: u64,
 }
 
@@ -212,6 +214,9 @@ struct Dispatched {
     attempt: u32,
     started: f64,
     recovery: bool,
+    /// Node generation at dispatch — forwarded to `commit_from` so a
+    /// stale incarnation's outputs are rejected.
+    generation: u64,
     name: String,
     job: JobId,
     func: TaskFn,
@@ -452,7 +457,7 @@ impl SimRuntime {
 
     /// Put a buffer into `node`'s store from the driver (redirected to a
     /// live node if `node` is dead).
-    pub fn put(&self, node: usize, data: Vec<u8>) -> ObjectRef {
+    pub fn put(&self, node: usize, data: impl Into<Block>) -> ObjectRef {
         let node = self.shared.live_target(node);
         self.shared.store.put(node, data)
     }
@@ -460,7 +465,7 @@ impl SimRuntime {
     /// Driver-side fetch: pumps the event loop until the object
     /// resolves (the single-threaded analogue of the threaded store's
     /// blocking get), then reads it.
-    pub fn get(&self, r: &ObjectRef) -> Result<Arc<Vec<u8>>, DfError> {
+    pub fn get(&self, r: &ObjectRef) -> Result<Block, DfError> {
         self.get_resolved(r.id, usize::MAX)
     }
 
@@ -469,7 +474,7 @@ impl SimRuntime {
         &self,
         r: &ObjectRef,
         node: usize,
-    ) -> Result<Arc<Vec<u8>>, DfError> {
+    ) -> Result<Block, DfError> {
         self.get_resolved(r.id, node)
     }
 
@@ -477,7 +482,7 @@ impl SimRuntime {
         &self,
         id: ObjectId,
         node: usize,
-    ) -> Result<Arc<Vec<u8>>, DfError> {
+    ) -> Result<Block, DfError> {
         loop {
             if self.shared.store.is_resolved(id) {
                 return self.shared.store.get(id, node);
@@ -1329,6 +1334,7 @@ impl SimShared {
                     attempt: r.task.attempt,
                     started: r.started,
                     recovery: r.task.recovery,
+                    generation: r.generation,
                     name: r.task.spec.name.clone(),
                     job: r.task.spec.job,
                     func: r.task.spec.func.clone(),
@@ -1409,7 +1415,7 @@ impl SimShared {
     /// Mirrors the threaded `worker_loop` body, including the exact
     /// failure strings.
     fn execute(&self, d: &Dispatched) -> StepOutcome {
-        let mut args: Vec<Arc<Vec<u8>>> = Vec::with_capacity(d.args.len());
+        let mut args: Vec<Block> = Vec::with_capacity(d.args.len());
         for a in &d.args {
             match self.store.get(a.id, d.node) {
                 Ok(buf) => args.push(buf),
@@ -1421,6 +1427,7 @@ impl SimShared {
             node: d.node,
             args,
             attempt: d.attempt,
+            pool: self.store.pool(d.node),
         };
         match (d.func)(&ctx) {
             Ok(outs) => {
@@ -1436,7 +1443,7 @@ impl SimShared {
                     )));
                 }
                 for (o, data) in d.outputs.iter().zip(outs) {
-                    if !self.store.commit_from(*o, d.node, data) {
+                    if !self.store.commit_from(*o, d.node, d.generation, data) {
                         // node died under us (a chaos kill re-entered
                         // from a commit hook of an earlier output)
                         return StepOutcome::ParkRecovery;
@@ -1943,7 +1950,7 @@ mod tests {
             job: JobId::ROOT,
             placement: Placement::Any,
             func: task_fn(|ctx| {
-                let mut v = ctx.args[0].as_ref().clone();
+                let mut v = ctx.args[0].to_vec();
                 v.push(9);
                 Ok(vec![v])
             }),

@@ -50,6 +50,7 @@ use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
+use crate::distfut::block::{Block, BufferPool};
 use crate::distfut::{DfError, JobId};
 
 /// Globally unique object identifier.
@@ -100,8 +101,10 @@ impl Drop for RefGuard {
 enum Slot {
     /// Declared (task submitted) but not yet produced.
     Pending,
-    /// Resident in (simulated node-local) memory.
-    Memory(Arc<Vec<u8>>),
+    /// Resident in (simulated node-local) memory: a zero-copy view over
+    /// a (possibly shared, possibly pooled) arena — see
+    /// [`crate::distfut::block`].
+    Memory(Block),
     /// Spilled to local disk.
     Spilled(PathBuf, u64),
     /// Data dropped by a node failure; a lineage re-execution is expected
@@ -226,6 +229,10 @@ pub struct Store {
     /// a re-added node id is a fresh node, and commits from workers of an
     /// older incarnation are discarded ([`Store::commit_from`]).
     generation: Vec<AtomicU64>,
+    /// Per-node arena pools: task outputs on node `n` draw their arena
+    /// backings from `pools[n]`, and dropping the last [`Block`] view of
+    /// an arena returns the backing there (size-classed recycling).
+    pools: Vec<BufferPool>,
     spill_dir: PathBuf,
     next_id: AtomicU64,
     next_seq: AtomicU64,
@@ -280,6 +287,7 @@ impl Store {
                 .collect(),
             draining: (0..max_nodes).map(|_| AtomicBool::new(false)).collect(),
             generation: (0..max_nodes).map(|_| AtomicU64::new(0)).collect(),
+            pools: (0..max_nodes).map(|_| BufferPool::new()).collect(),
             spill_dir,
             next_id: AtomicU64::new(1),
             next_seq: AtomicU64::new(0),
@@ -373,8 +381,8 @@ impl Store {
     /// readiness watchers (outside the table lock). Returns `false` iff
     /// the commit was discarded because `node` is dead — the caller's
     /// process "died" mid-commit and must re-execute elsewhere.
-    pub fn commit(&self, id: ObjectId, node: usize, data: Vec<u8>) -> bool {
-        self.commit_inner(id, node, None, data)
+    pub fn commit(&self, id: ObjectId, node: usize, data: impl Into<Block>) -> bool {
+        self.commit_inner(id, node, None, data.into())
     }
 
     /// [`Store::commit`] from a worker of a specific node incarnation:
@@ -386,9 +394,9 @@ impl Store {
         id: ObjectId,
         node: usize,
         generation: u64,
-        data: Vec<u8>,
+        data: impl Into<Block>,
     ) -> bool {
-        self.commit_inner(id, node, Some(generation), data)
+        self.commit_inner(id, node, Some(generation), data.into())
     }
 
     fn commit_inner(
@@ -396,7 +404,7 @@ impl Store {
         id: ObjectId,
         node: usize,
         expected_generation: Option<u64>,
-        data: Vec<u8>,
+        data: Block,
     ) -> bool {
         let size = data.len() as u64;
         let job;
@@ -423,7 +431,7 @@ impl Store {
                 Slot::Memory(_) | Slot::Spilled(..) => return true,
                 Slot::Released | Slot::Unrecoverable(_) => return true,
             }
-            entry.slot = Slot::Memory(Arc::new(data));
+            entry.slot = Slot::Memory(data);
             entry.node = node;
             job = entry.job;
             self.add_resident(&mut t, node, job, size);
@@ -472,7 +480,7 @@ impl Store {
     }
 
     /// Immediately store data (driver put; accounted to [`JobId::ROOT`]).
-    pub fn put(self: &Arc<Self>, node: usize, data: Vec<u8>) -> ObjectRef {
+    pub fn put(self: &Arc<Self>, node: usize, data: impl Into<Block>) -> ObjectRef {
         let r = self.declare(node, JobId::ROOT);
         if !self.commit(r.id, node, data) {
             // the node died between target selection and the commit: the
@@ -754,13 +762,20 @@ impl Store {
         self.node_capacity[node]
     }
 
+    /// `node`'s arena pool (cloned handle; clones share the free lists).
+    /// Task bodies allocate their output arenas here via
+    /// [`crate::distfut::TaskCtx::pool`].
+    pub fn pool(&self, node: usize) -> BufferPool {
+        self.pools[node].clone()
+    }
+
     /// Blocking fetch from `requesting_node`; accounts a transfer when the
     /// object lives on another node, restores from disk if spilled. The
     /// driver (`requesting_node == usize::MAX`) blocks through a
     /// [`Slot::Lost`] window until recovery recommits; workers fail fast
     /// with [`DfError::ObjectLost`] so their slot is freed for the
     /// reconstruction itself (the scheduler re-parks the task).
-    pub fn get(&self, id: ObjectId, requesting_node: usize) -> Result<Arc<Vec<u8>>, DfError> {
+    pub fn get(&self, id: ObjectId, requesting_node: usize) -> Result<Block, DfError> {
         let mut t = self.table.lock().unwrap();
         loop {
             let entry = t.entries.get(&id).ok_or(DfError::ObjectReleased(id))?;
@@ -809,7 +824,7 @@ impl Store {
                     }
                     // Do not re-admit to memory: reduce thrash; reducers
                     // stream restored blocks once.
-                    return Ok(Arc::new(bytes));
+                    return Ok(Block::from(bytes));
                 }
             }
         }
@@ -1354,6 +1369,38 @@ mod tests {
         assert_eq!(s.stats().objects_lost, 0);
         assert_eq!(s.stats().drain_migrations, 2);
         assert_eq!(s.stats().drain_migrated_bytes, 96);
+    }
+
+    #[test]
+    fn pooled_block_views_spill_and_restore_byte_identical() {
+        let s = test_store(1, 150);
+        let pool = s.pool(0);
+        let mut buf = pool.alloc(200);
+        for (i, b) in buf.iter_mut().enumerate() {
+            *b = i as u8;
+        }
+        // two store entries sharing one pooled arena (a map task's shape)
+        let blocks = buf.into_blocks(&[0, 100, 200]);
+        let a = s.declare(0, JobId::ROOT);
+        let b = s.declare(0, JobId::ROOT);
+        assert!(s.commit(a.id, 0, blocks[0].clone()));
+        // the second commit pushes the shard over capacity → the colder
+        // view spills: only its 100 view bytes hit disk, not the arena
+        assert!(s.commit(b.id, 0, blocks[1].clone()));
+        drop(blocks);
+        let st = s.stats();
+        assert_eq!((st.spills, st.spill_bytes), (1, 100));
+        let got_a = s.get(a.id, 0).unwrap();
+        let got_b = s.get(b.id, 0).unwrap();
+        let want: Vec<u8> = (0..200).map(|i| i as u8).collect();
+        assert_eq!(*got_a, want[..100]);
+        assert_eq!(*got_b, want[100..]);
+        assert_eq!(s.stats().restores, 1);
+        // releasing every view (slots included) recycles the arena
+        assert_eq!(pool.stats().recycled, 0);
+        drop((got_a, got_b, a, b));
+        let ps = pool.stats();
+        assert_eq!((ps.fresh, ps.recycled), (1, 1), "{ps:?}");
     }
 
     #[test]

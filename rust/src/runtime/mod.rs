@@ -33,6 +33,8 @@ use std::sync::Arc;
 #[cfg(feature = "pjrt")]
 use crate::sortlib::radix;
 
+use crate::sortlib::keyed;
+
 /// Result of a sort/merge + partition task.
 #[derive(Clone, Debug, PartialEq)]
 pub struct SortResult {
@@ -124,6 +126,63 @@ pub fn merge_and_partition(
         Backend::Native => Ok(native::merge_and_partition(runs, cuts)),
         #[cfg(feature = "pjrt")]
         Backend::Xla(engine) => xla_merge_any(engine, runs, cuts),
+    }
+}
+
+/// Merge sorted *keyed* runs (108-byte records, embedded partition
+/// keys — see [`crate::sortlib::keyed`]) into `out`, split at the
+/// ascending interior `cuts`. Returns `cuts.len() + 2` ascending byte
+/// bounds (leading 0, trailing total) over `out`.
+///
+/// The native path is the fused single-pass walk
+/// ([`crate::sortlib::keyed::merge_keyed_ranges`]): no permutation
+/// vector, no key re-extraction, no per-record binary search. The XLA
+/// path keeps the kernel contract — index merge on the embedded key
+/// arrays, then a generic keyed gather by permutation.
+pub fn merge_keyed_ranges(
+    backend: &Backend,
+    runs: &[&[u8]],
+    cuts: &[u64],
+    out: &mut [u8],
+) -> anyhow::Result<Vec<usize>> {
+    match backend {
+        Backend::Native => Ok(keyed::merge_keyed_ranges(runs, cuts, out)),
+        #[cfg(feature = "pjrt")]
+        Backend::Xla(engine) => {
+            let key_runs: Vec<Vec<u64>> =
+                runs.iter().map(|r| keyed::keys_of(r)).collect();
+            let refs: Vec<&[u64]> =
+                key_runs.iter().map(|k| k.as_slice()).collect();
+            let r = xla_merge_any(engine, &refs, cuts)?;
+            let total: u32 = refs.iter().map(|k| k.len() as u32).sum();
+            let mut bounds = Vec::with_capacity(cuts.len() + 2);
+            bounds.push(0);
+            bounds.extend_from_slice(&r.offs);
+            bounds.push(total);
+            Ok(keyed::gather_keyed_multi_ranges(runs, &r.perm, &bounds, out))
+        }
+    }
+}
+
+/// Merge sorted keyed runs into **plain** 100-byte records (the reduce
+/// path — keys are dropped during the walk, the output goes to S3).
+/// Returns bytes written to `out`.
+pub fn merge_keyed_records(
+    backend: &Backend,
+    runs: &[&[u8]],
+    out: &mut [u8],
+) -> anyhow::Result<usize> {
+    match backend {
+        Backend::Native => Ok(keyed::merge_keyed_records(runs, out)),
+        #[cfg(feature = "pjrt")]
+        Backend::Xla(engine) => {
+            let key_runs: Vec<Vec<u64>> =
+                runs.iter().map(|r| keyed::keys_of(r)).collect();
+            let refs: Vec<&[u64]> =
+                key_runs.iter().map(|k| k.as_slice()).collect();
+            let r = xla_merge_any(engine, &refs, &[])?;
+            Ok(keyed::gather_records_multi(runs, &r.perm, out))
+        }
     }
 }
 

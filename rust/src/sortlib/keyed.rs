@@ -1,0 +1,493 @@
+//! Keyed record blocks: the zero-copy intermediate format of the
+//! map → merge → reduce data plane.
+//!
+//! A *keyed record* is 108 bytes: the record's u64 partition key
+//! (little-endian, no alignment requirement) followed by the plain
+//! 100-byte record. Map tasks pay `extract_partition_keys` once — while
+//! the input is hot from the S3 download — and every downstream stage
+//! reads the embedded keys instead of re-deriving them from record
+//! bytes, so key extraction runs once per byte for the whole pipeline
+//! (ISSUE 7 / ROADMAP item 1).
+//!
+//! Interleaving (rather than a split keys-then-records layout) is what
+//! makes the fused merge possible: [`merge_keyed_ranges`] walks a loser
+//! tree over the runs and copies each winner's 108 bytes to a strictly
+//! sequential output cursor, detecting reducer-cut crossings on the fly.
+//! That fuses the seed's index merge + per-record
+//! `starts.partition_point` gather
+//! ([`crate::sortlib::reference::merge_then_gather`]) into one pass with
+//! no permutation vector, no re-extracted key runs, and no binary
+//! search per record.
+//!
+//! All writers target a caller-provided `&mut [u8]` (a pooled
+//! `PoolBuf` in the runtime, a plain vector in tests) and return
+//! ascending **byte bounds** per output range — exactly the shape
+//! `PoolBuf::into_blocks` slices into zero-copy views. This module
+//! stays byte-format-only so `sortlib` keeps no dependency on the
+//! runtime layers above it.
+//!
+//! Ordering contract: runs are merged by (partition key, run index,
+//! position in run). Runs are presented in concatenation order, so this
+//! equals the seed merge's (key, global record index) order and the
+//! fused output is byte-identical to the reference two-pass path.
+
+use crate::sortlib::{partition_key, RECORD_SIZE};
+
+/// Bytes of the embedded little-endian u64 partition key.
+pub const KEY_BYTES: usize = 8;
+/// Bytes per keyed record: embedded key + plain record.
+pub const KEYED_RECORD_SIZE: usize = KEY_BYTES + RECORD_SIZE;
+
+/// Number of keyed records in a buffer (panics if not whole — caller bug).
+pub fn keyed_record_count(buf: &[u8]) -> usize {
+    assert_eq!(
+        buf.len() % KEYED_RECORD_SIZE,
+        0,
+        "buffer not keyed-record-aligned"
+    );
+    buf.len() / KEYED_RECORD_SIZE
+}
+
+/// The embedded partition key of keyed record `i`.
+#[inline]
+pub fn key_at(buf: &[u8], i: usize) -> u64 {
+    let off = i * KEYED_RECORD_SIZE;
+    u64::from_le_bytes(buf[off..off + KEY_BYTES].try_into().unwrap())
+}
+
+/// The plain 100-byte record of keyed record `i`.
+#[inline]
+pub fn record_at(buf: &[u8], i: usize) -> &[u8] {
+    let off = i * KEYED_RECORD_SIZE + KEY_BYTES;
+    &buf[off..off + RECORD_SIZE]
+}
+
+/// All embedded keys of a keyed buffer (the XLA fallback path re-merges
+/// on key arrays; the fused native path never materializes this).
+pub fn keys_of(buf: &[u8]) -> Vec<u64> {
+    (0..keyed_record_count(buf)).map(|i| key_at(buf, i)).collect()
+}
+
+/// Encode plain records as keyed records in input order (extracting the
+/// partition keys). Test/bench constructor; the pipeline itself keys
+/// records inside [`gather_keyed_ranges`] where the gather already
+/// touches every byte.
+pub fn from_records(src: &[u8]) -> Vec<u8> {
+    let n = crate::sortlib::record_count(src);
+    let mut out = vec![0u8; n * KEYED_RECORD_SIZE];
+    for i in 0..n {
+        let rec = &src[i * RECORD_SIZE..(i + 1) * RECORD_SIZE];
+        let o = i * KEYED_RECORD_SIZE;
+        out[o..o + KEY_BYTES].copy_from_slice(&partition_key(rec).to_le_bytes());
+        out[o + KEY_BYTES..o + KEYED_RECORD_SIZE].copy_from_slice(rec);
+    }
+    out
+}
+
+/// Strip the embedded keys: plain records in keyed-buffer order.
+pub fn to_records(buf: &[u8]) -> Vec<u8> {
+    let n = keyed_record_count(buf);
+    let mut out = vec![0u8; n * RECORD_SIZE];
+    for i in 0..n {
+        out[i * RECORD_SIZE..(i + 1) * RECORD_SIZE].copy_from_slice(record_at(buf, i));
+    }
+    out
+}
+
+/// Map-side gather: materialize plain `src` records as **keyed** records
+/// in permutation order, split at `bounds` (indices into `perm`,
+/// ascending, `bounds[0] == 0`, `bounds.last() == perm.len()`).
+/// `src_keys` are the partition keys of `src` in *input* order (the
+/// map's one-time extraction); output record `i` carries
+/// `src_keys[perm[i]]`, so keys are never re-derived from record bytes.
+/// Sentinel entries (`perm[i] >= record count`, fixed-shape kernel
+/// padding) are skipped, as in [`crate::sortlib::apply_permutation_ranges`].
+///
+/// `out` must hold `live * KEYED_RECORD_SIZE` bytes where `live` is the
+/// number of non-sentinel entries (= `src_keys.len()` for a full
+/// permutation). Returns ascending byte bounds, one range per `bounds`
+/// window — the `PoolBuf::into_blocks` shape.
+pub fn gather_keyed_ranges(
+    src: &[u8],
+    src_keys: &[u64],
+    perm: &[u32],
+    bounds: &[u32],
+    out: &mut [u8],
+) -> Vec<usize> {
+    let n = crate::sortlib::record_count(src);
+    assert_eq!(src_keys.len(), n, "src_keys must cover src");
+    let mut byte_bounds = Vec::with_capacity(bounds.len());
+    byte_bounds.push(0usize);
+    let mut cursor = 0usize;
+    for w in bounds.windows(2) {
+        let (lo, hi) = (w[0] as usize, w[1] as usize);
+        debug_assert!(lo <= hi && hi <= perm.len());
+        for &p in &perm[lo..hi] {
+            let p = p as usize;
+            if p >= n {
+                continue;
+            }
+            out[cursor..cursor + KEY_BYTES]
+                .copy_from_slice(&src_keys[p].to_le_bytes());
+            out[cursor + KEY_BYTES..cursor + KEYED_RECORD_SIZE]
+                .copy_from_slice(&src[p * RECORD_SIZE..(p + 1) * RECORD_SIZE]);
+            cursor += KEYED_RECORD_SIZE;
+        }
+        byte_bounds.push(cursor);
+    }
+    byte_bounds
+}
+
+/// Generic permutation gather over the concatenation of keyed runs
+/// (the XLA fallback's merge path: `perm` comes from an index merge).
+/// Keyed records are copied wholesale — the embedded key travels with
+/// its record. Returns ascending byte bounds per `bounds` window.
+pub fn gather_keyed_multi_ranges(
+    srcs: &[&[u8]],
+    perm: &[u32],
+    bounds: &[u32],
+    out: &mut [u8],
+) -> Vec<usize> {
+    let mut starts = Vec::with_capacity(srcs.len() + 1);
+    let mut acc = 0usize;
+    for s in srcs {
+        starts.push(acc);
+        acc += keyed_record_count(s);
+    }
+    starts.push(acc);
+    let mut byte_bounds = Vec::with_capacity(bounds.len());
+    byte_bounds.push(0usize);
+    let mut cursor = 0usize;
+    for w in bounds.windows(2) {
+        let (lo, hi) = (w[0] as usize, w[1] as usize);
+        debug_assert!(lo <= hi && hi <= perm.len());
+        for &p in &perm[lo..hi] {
+            let p = p as usize;
+            if p >= acc {
+                continue;
+            }
+            let b = starts.partition_point(|&s| s <= p) - 1;
+            let local = p - starts[b];
+            let off = local * KEYED_RECORD_SIZE;
+            out[cursor..cursor + KEYED_RECORD_SIZE]
+                .copy_from_slice(&srcs[b][off..off + KEYED_RECORD_SIZE]);
+            cursor += KEYED_RECORD_SIZE;
+        }
+        byte_bounds.push(cursor);
+    }
+    byte_bounds
+}
+
+/// Plain-record variant of [`gather_keyed_multi_ranges`] (the XLA
+/// fallback's reduce path): strips keys while gathering. Returns bytes
+/// written.
+pub fn gather_records_multi(srcs: &[&[u8]], perm: &[u32], out: &mut [u8]) -> usize {
+    let mut starts = Vec::with_capacity(srcs.len() + 1);
+    let mut acc = 0usize;
+    for s in srcs {
+        starts.push(acc);
+        acc += keyed_record_count(s);
+    }
+    starts.push(acc);
+    let mut cursor = 0usize;
+    for &p in perm {
+        let p = p as usize;
+        if p >= acc {
+            continue;
+        }
+        let b = starts.partition_point(|&s| s <= p) - 1;
+        let local = p - starts[b];
+        out[cursor..cursor + RECORD_SIZE].copy_from_slice(record_at(srcs[b], local));
+        cursor += RECORD_SIZE;
+    }
+    cursor
+}
+
+/// The fused merge walk shared by [`merge_keyed_ranges`] and
+/// [`merge_keyed_records`]: visit the records of the sorted keyed runs
+/// in (key, run index, position) order, calling `emit(key, run, pos)`
+/// once per record. Two-pointer fast paths for k <= 2; a loser tree —
+/// one root-to-leaf replay per record — above that (same structure as
+/// [`crate::sortlib::radix::kway_merge`], minus the index indirection).
+fn merge_walk(runs: &[&[u8]], counts: &[usize], mut emit: impl FnMut(u64, usize, usize)) {
+    let n_runs = runs.len();
+    match n_runs {
+        0 => return,
+        1 => {
+            for p in 0..counts[0] {
+                emit(key_at(runs[0], p), 0, p);
+            }
+            return;
+        }
+        2 => {
+            let (mut i, mut j) = (0, 0);
+            while i < counts[0] && j < counts[1] {
+                let (ka, kb) = (key_at(runs[0], i), key_at(runs[1], j));
+                // ties go to run 0: (key, run index) order
+                if ka <= kb {
+                    emit(ka, 0, i);
+                    i += 1;
+                } else {
+                    emit(kb, 1, j);
+                    j += 1;
+                }
+            }
+            while i < counts[0] {
+                emit(key_at(runs[0], i), 0, i);
+                i += 1;
+            }
+            while j < counts[1] {
+                emit(key_at(runs[1], j), 1, j);
+                j += 1;
+            }
+            return;
+        }
+        _ => {}
+    }
+
+    let k = n_runs.next_power_of_two();
+    let mut pos = vec![0usize; n_runs];
+    // head of leaf r as a (key, run) order key; (MAX, MAX) when padding
+    // or exhausted — strictly above any real record since run < MAX
+    let head = |r: usize, pos: &[usize]| -> (u64, usize) {
+        if r < n_runs && pos[r] < counts[r] {
+            (key_at(runs[r], pos[r]), r)
+        } else {
+            (u64::MAX, usize::MAX)
+        }
+    };
+
+    let mut tree = vec![0usize; k];
+    let mut level: Vec<usize> = (0..k).collect();
+    let mut base = k / 2;
+    while level.len() > 1 {
+        let mut next = Vec::with_capacity(level.len() / 2);
+        for i in 0..level.len() / 2 {
+            let (a, b) = (level[2 * i], level[2 * i + 1]);
+            let (w, l) = if head(a, &pos) <= head(b, &pos) {
+                (a, b)
+            } else {
+                (b, a)
+            };
+            tree[base + i] = l;
+            next.push(w);
+        }
+        level = next;
+        base /= 2;
+    }
+    tree[0] = level[0];
+
+    loop {
+        let w = tree[0];
+        if w >= n_runs || pos[w] >= counts[w] {
+            break; // global winner is a sentinel: all runs exhausted
+        }
+        let p = pos[w];
+        emit(key_at(runs[w], p), w, p);
+        pos[w] = p + 1;
+        // replay the path from leaf w to the root
+        let mut winner = w;
+        let mut node = (k + w) >> 1;
+        while node >= 1 {
+            let contender = tree[node];
+            if head(contender, &pos) < head(winner, &pos) {
+                tree[node] = winner;
+                winner = contender;
+            }
+            node >>= 1;
+        }
+        tree[0] = winner;
+    }
+}
+
+/// Fused merge + partition + gather over sorted keyed runs: one walk
+/// writes merged **keyed** records sequentially into `out` and records
+/// a range boundary each time the key stream crosses one of the
+/// ascending interior `cuts` (strict `<` contract — a record with
+/// key == cut belongs to the right range, matching
+/// [`crate::sortlib::radix::partition_offsets`]).
+///
+/// `out` must hold the total keyed bytes of all runs. Returns
+/// `cuts.len() + 2` ascending byte bounds (leading 0, trailing total).
+pub fn merge_keyed_ranges(runs: &[&[u8]], cuts: &[u64], out: &mut [u8]) -> Vec<usize> {
+    debug_assert!(cuts.windows(2).all(|w| w[0] <= w[1]));
+    let counts: Vec<usize> = runs.iter().map(|r| keyed_record_count(r)).collect();
+    let mut byte_bounds = Vec::with_capacity(cuts.len() + 2);
+    byte_bounds.push(0usize);
+    let mut cut_idx = 0usize;
+    let mut cursor = 0usize;
+    merge_walk(runs, &counts, |key, run, p| {
+        while cut_idx < cuts.len() && key >= cuts[cut_idx] {
+            byte_bounds.push(cursor);
+            cut_idx += 1;
+        }
+        let off = p * KEYED_RECORD_SIZE;
+        out[cursor..cursor + KEYED_RECORD_SIZE]
+            .copy_from_slice(&runs[run][off..off + KEYED_RECORD_SIZE]);
+        cursor += KEYED_RECORD_SIZE;
+    });
+    while byte_bounds.len() < cuts.len() + 1 {
+        byte_bounds.push(cursor); // trailing empty ranges
+    }
+    byte_bounds.push(cursor);
+    byte_bounds
+}
+
+/// Fused merge of sorted keyed runs into **plain** records (the reduce
+/// path: the output goes to S3, keys are dropped during the walk).
+/// `out` must hold `total records * RECORD_SIZE` bytes; returns bytes
+/// written.
+pub fn merge_keyed_records(runs: &[&[u8]], out: &mut [u8]) -> usize {
+    let counts: Vec<usize> = runs.iter().map(|r| keyed_record_count(r)).collect();
+    let mut cursor = 0usize;
+    merge_walk(runs, &counts, |_key, run, p| {
+        out[cursor..cursor + RECORD_SIZE].copy_from_slice(record_at(runs[run], p));
+        cursor += RECORD_SIZE;
+    });
+    cursor
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sortlib::{extract_partition_keys, radix};
+    use crate::util::rng::Xoshiro256;
+
+    fn random_records(seed: u64, n: usize) -> Vec<u8> {
+        crate::sortlib::gensort::generate_partition(&crate::sortlib::gensort::GenSpec {
+            seed,
+            offset: 0,
+            records: n as u64,
+        })
+    }
+
+    fn sorted_keyed_run(seed: u64, n: usize) -> Vec<u8> {
+        let recs = random_records(seed, n);
+        let keys = extract_partition_keys(&recs);
+        let vals: Vec<u32> = (0..n as u32).collect();
+        let (_, perm) = radix::sort_pairs(&keys, &vals);
+        let sorted = crate::sortlib::apply_permutation(&recs, &perm);
+        from_records(&sorted)
+    }
+
+    #[test]
+    fn roundtrip_and_accessors() {
+        let recs = random_records(1, 17);
+        let keyed = from_records(&recs);
+        assert_eq!(keyed_record_count(&keyed), 17);
+        let keys = extract_partition_keys(&recs);
+        for (i, &k) in keys.iter().enumerate() {
+            assert_eq!(key_at(&keyed, i), k);
+            assert_eq!(record_at(&keyed, i), &recs[i * RECORD_SIZE..(i + 1) * RECORD_SIZE]);
+        }
+        assert_eq!(keys_of(&keyed), keys);
+        assert_eq!(to_records(&keyed), recs);
+    }
+
+    #[test]
+    fn gather_matches_apply_permutation_ranges() {
+        let recs = random_records(2, 40);
+        let keys = extract_partition_keys(&recs);
+        let vals: Vec<u32> = (0..40).collect();
+        let (sorted_keys, mut perm) = radix::sort_pairs(&keys, &vals);
+        perm.push(u32::MAX); // sentinel padding must be skipped
+        let cuts = crate::sortlib::reducer_cuts(4);
+        let offs = radix::partition_offsets(&sorted_keys, &cuts);
+        let mut bounds = vec![0u32];
+        bounds.extend_from_slice(&offs);
+        bounds.push(perm.len() as u32);
+        let expect = crate::sortlib::apply_permutation_ranges(&recs, &perm, &bounds);
+        let mut out = vec![0u8; 40 * KEYED_RECORD_SIZE];
+        let bb = gather_keyed_ranges(&recs, &keys, &perm, &bounds, &mut out);
+        assert_eq!(bb.len(), bounds.len());
+        assert_eq!(*bb.last().unwrap(), out.len());
+        for (i, w) in bb.windows(2).enumerate() {
+            let keyed_range = &out[w[0]..w[1]];
+            assert_eq!(to_records(keyed_range), expect[i], "range {i}");
+            // embedded keys match the records they ride with
+            for j in 0..keyed_record_count(keyed_range) {
+                assert_eq!(
+                    key_at(keyed_range, j),
+                    crate::sortlib::partition_key(record_at(keyed_range, j))
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fused_merge_is_byte_identical_to_reference_two_pass() {
+        for (seed, sizes) in [
+            (7u64, vec![30usize, 50, 11]),
+            (8, vec![1, 0, 64, 7]),
+            (9, vec![128]),
+            (10, vec![16, 16]),
+        ] {
+            let keyed_runs: Vec<Vec<u8>> = sizes
+                .iter()
+                .enumerate()
+                .map(|(i, &n)| sorted_keyed_run(seed * 100 + i as u64, n))
+                .collect();
+            let plain_runs: Vec<Vec<u8>> =
+                keyed_runs.iter().map(|r| to_records(r)).collect();
+            let plain_refs: Vec<&[u8]> =
+                plain_runs.iter().map(|r| r.as_slice()).collect();
+            let cuts = crate::sortlib::reducer_cuts(5);
+            let expect =
+                crate::sortlib::reference::merge_then_gather(&plain_refs, &cuts);
+
+            let keyed_refs: Vec<&[u8]> =
+                keyed_runs.iter().map(|r| r.as_slice()).collect();
+            let total: usize = sizes.iter().sum();
+            let mut out = vec![0u8; total * KEYED_RECORD_SIZE];
+            let bb = merge_keyed_ranges(&keyed_refs, &cuts, &mut out);
+            assert_eq!(bb.len(), cuts.len() + 2);
+            assert_eq!(*bb.last().unwrap(), out.len());
+            for (i, w) in bb.windows(2).enumerate() {
+                assert_eq!(to_records(&out[w[0]..w[1]]), expect[i], "range {i}");
+            }
+
+            // the record-emitting variant equals the concatenation
+            let mut flat = vec![0u8; total * RECORD_SIZE];
+            let written = merge_keyed_records(&keyed_refs, &mut flat);
+            assert_eq!(written, flat.len());
+            assert_eq!(flat, expect.concat());
+        }
+    }
+
+    #[test]
+    fn merge_tie_break_matches_run_order() {
+        // identical keys across three runs: output preserves run order,
+        // then within-run order (= the seed's global-index order)
+        let mut rec = vec![0u8; RECORD_SIZE];
+        rec[..8].copy_from_slice(&42u64.to_be_bytes());
+        let run_of = |tags: &[u8]| -> Vec<u8> {
+            let mut recs = Vec::new();
+            for &t in tags {
+                let mut r = rec.clone();
+                r[10] = t;
+                recs.extend_from_slice(&r);
+            }
+            from_records(&recs)
+        };
+        let runs = [run_of(&[1, 2]), run_of(&[3]), run_of(&[4, 5])];
+        let refs: Vec<&[u8]> = runs.iter().map(|r| r.as_slice()).collect();
+        let mut out = vec![0u8; 5 * RECORD_SIZE];
+        merge_keyed_records(&refs, &mut out);
+        let tags: Vec<u8> =
+            (0..5).map(|i| out[i * RECORD_SIZE + 10]).collect();
+        assert_eq!(tags, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn empty_runs_and_trailing_cuts() {
+        let mut out = [0u8; 0];
+        let bb = merge_keyed_ranges(&[], &[1, 2, 3], &mut out);
+        assert_eq!(bb, vec![0, 0, 0, 0, 0]);
+        let run = sorted_keyed_run(3, 5);
+        let mut out = vec![0u8; run.len()];
+        // cuts above every key: all records land in range 0
+        let bb = merge_keyed_ranges(&[&run], &[u64::MAX], &mut out);
+        assert_eq!(bb, vec![0, run.len(), run.len()]);
+        assert_eq!(out, run);
+    }
+}

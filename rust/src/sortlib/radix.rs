@@ -9,39 +9,105 @@
 //! gather. An LSD radix sort (4 passes × 16 bits) beats comparison sorting
 //! at our block sizes; `kway_merge` is a loser-tree-style heap merge.
 
+/// Reused per-thread radix scratch: ping-pong key/val arrays (SoA) and
+/// the digit histograms. Steady-state, `sort_pairs` performs zero heap
+/// allocations beyond its two output vectors — the scratch grows to the
+/// largest block a thread has sorted and stays there.
+struct RadixScratch {
+    keys: Vec<u64>,
+    vals: Vec<u32>,
+    keys2: Vec<u64>,
+    vals2: Vec<u32>,
+    /// 4 histograms of 2^16 buckets, one per 16-bit digit, all built in
+    /// a single read pass over the keys.
+    counts: Vec<u32>,
+}
+
+thread_local! {
+    static RADIX_SCRATCH: std::cell::RefCell<RadixScratch> =
+        std::cell::RefCell::new(RadixScratch {
+            keys: Vec::new(),
+            vals: Vec::new(),
+            keys2: Vec::new(),
+            vals2: Vec::new(),
+            counts: Vec::new(),
+        });
+}
+
 /// Sort (keys, vals) pairs ascending by (key, val) — LSD radix, 16-bit
 /// digits, stable, so val order within equal keys is preserved from input;
 /// to match the kernels' lexicographic (key, val) order, callers pass vals
 /// that are already ascending in input order (the identity permutation).
+///
+/// SoA layout (separate key/val scatter arrays, not `(u64, u32)` pairs —
+/// no padding, 50% more records per cache line on the key stream), all
+/// four digit histograms built in one read pass, and passes whose digit
+/// is constant across the block skipped outright (counting sort is
+/// stable, so a single-bucket pass is the identity permutation). Scratch
+/// is thread-local and reused across calls. Bit-for-bit identical to
+/// [`crate::sortlib::reference::sort_pairs`], which property tests pin.
 pub fn sort_pairs(keys: &[u64], vals: &[u32]) -> (Vec<u64>, Vec<u32>) {
     assert_eq!(keys.len(), vals.len());
     let n = keys.len();
-    let mut src: Vec<(u64, u32)> =
-        keys.iter().copied().zip(vals.iter().copied()).collect();
-    let mut dst: Vec<(u64, u32)> = vec![(0, 0); n];
-    // 4 passes over 16-bit digits; one reused count buffer (a fresh 256 KiB
-    // alloc per pass showed up as page-fault churn in profiles)
-    let mut counts = vec![0u32; 1 << 16];
-    for pass in 0..4 {
-        let shift = pass * 16;
-        counts.fill(0);
-        for &(k, _) in &src {
-            counts[((k >> shift) & 0xFFFF) as usize] += 1;
-        }
-        let mut total = 0u32;
-        for c in counts.iter_mut() {
-            let x = *c;
-            *c = total;
-            total += x;
-        }
-        for &(k, v) in &src {
-            let d = ((k >> shift) & 0xFFFF) as usize;
-            dst[counts[d] as usize] = (k, v);
-            counts[d] += 1;
-        }
-        std::mem::swap(&mut src, &mut dst);
+    if n == 0 {
+        return (Vec::new(), Vec::new());
     }
-    src.into_iter().unzip()
+    RADIX_SCRATCH.with(|cell| {
+        let s = &mut *cell.borrow_mut();
+        s.keys.clear();
+        s.keys.extend_from_slice(keys);
+        s.vals.clear();
+        s.vals.extend_from_slice(vals);
+        s.keys2.resize(n, 0);
+        s.vals2.resize(n, 0);
+        s.counts.clear();
+        s.counts.resize(4 << 16, 0);
+
+        // one read pass builds all four histograms
+        for &k in keys {
+            for pass in 0..4 {
+                let d = ((k >> (pass * 16)) & 0xFFFF) as usize;
+                s.counts[(pass << 16) | d] += 1;
+            }
+        }
+
+        // `flip` tracks which side currently holds the data
+        let mut flip = false;
+        for pass in 0..4 {
+            let hist = &mut s.counts[pass << 16..(pass + 1) << 16];
+            // constant digit across the whole block: stable counting
+            // sort of one bucket is the identity — skip the pass
+            let d0 = ((keys[0] >> (pass * 16)) & 0xFFFF) as usize;
+            if hist[d0] as usize == n {
+                continue;
+            }
+            let mut total = 0u32;
+            for c in hist.iter_mut() {
+                let x = *c;
+                *c = total;
+                total += x;
+            }
+            let (src_k, src_v, dst_k, dst_v) = if flip {
+                (&s.keys2, &s.vals2, &mut s.keys, &mut s.vals)
+            } else {
+                (&s.keys, &s.vals, &mut s.keys2, &mut s.vals2)
+            };
+            let shift = pass * 16;
+            for (&k, &v) in src_k.iter().zip(src_v) {
+                let d = ((k >> shift) & 0xFFFF) as usize;
+                let pos = hist[d] as usize;
+                dst_k[pos] = k;
+                dst_v[pos] = v;
+                hist[d] += 1;
+            }
+            flip = !flip;
+        }
+        if flip {
+            (s.keys2.clone(), s.vals2.clone())
+        } else {
+            (s.keys.clone(), s.vals.clone())
+        }
+    })
 }
 
 /// Merge sorted runs of (key, val) pairs into one sorted pair of vectors.

@@ -1,0 +1,116 @@
+//! Reference (pre-optimization) kernel implementations, kept verbatim
+//! as the correctness oracle and perf-gate baseline.
+//!
+//! The hot-path kernels in [`crate::sortlib::radix`] and
+//! [`crate::sortlib::fix_key_ties`] were rewritten for cache efficiency
+//! and allocation hygiene (SoA radix passes with reused scratch,
+//! in-place tie repair). These are the originals they replaced: simple,
+//! obviously-correct, and allocation-heavy. Property tests pin the
+//! rewrites bit-for-bit against them (`tests/properties.rs`), and
+//! `benches/kernels.rs` measures the speedup ratio the CI perf gate
+//! enforces — so this module is compiled into the library proper, not
+//! `#[cfg(test)]`.
+
+use crate::sortlib::{partition_key, record_count, Key, Record, RECORD_SIZE};
+
+/// Pre-SoA [`crate::sortlib::radix::sort_pairs`]: LSD radix over AoS
+/// `(u64, u32)` pairs, 4 × 16-bit passes, no pass skipping.
+pub fn sort_pairs(keys: &[u64], vals: &[u32]) -> (Vec<u64>, Vec<u32>) {
+    assert_eq!(keys.len(), vals.len());
+    let n = keys.len();
+    let mut src: Vec<(u64, u32)> =
+        keys.iter().copied().zip(vals.iter().copied()).collect();
+    let mut dst: Vec<(u64, u32)> = vec![(0, 0); n];
+    let mut counts = vec![0u32; 1 << 16];
+    for pass in 0..4 {
+        let shift = pass * 16;
+        counts.fill(0);
+        for &(k, _) in &src {
+            counts[((k >> shift) & 0xFFFF) as usize] += 1;
+        }
+        let mut total = 0u32;
+        for c in counts.iter_mut() {
+            let x = *c;
+            *c = total;
+            total += x;
+        }
+        for &(k, v) in &src {
+            let d = ((k >> shift) & 0xFFFF) as usize;
+            dst[counts[d] as usize] = (k, v);
+            counts[d] += 1;
+        }
+        std::mem::swap(&mut src, &mut dst);
+    }
+    src.into_iter().unzip()
+}
+
+/// Pre-in-place [`crate::sortlib::fix_key_ties`]: allocates a
+/// `Vec<Vec<u8>>` plus before/after key vectors per colliding group.
+/// Same contract, including the returned moved-record count.
+pub fn fix_key_ties(buf: &mut [u8]) -> usize {
+    let n = record_count(buf);
+    let mut moved = 0usize;
+    let mut i = 0;
+    while i + 1 < n {
+        let pk = partition_key(&buf[i * RECORD_SIZE..]);
+        let mut j = i + 1;
+        while j < n && partition_key(&buf[j * RECORD_SIZE..]) == pk {
+            j += 1;
+        }
+        if j - i > 1 {
+            let group = &mut buf[i * RECORD_SIZE..j * RECORD_SIZE];
+            let mut recs: Vec<Vec<u8>> =
+                group.chunks_exact(RECORD_SIZE).map(|r| r.to_vec()).collect();
+            let before: Vec<Key> =
+                recs.iter().map(|r| Record::new(r).key()).collect();
+            recs.sort_by_key(|r| Record::new(r).key());
+            let after: Vec<Key> =
+                recs.iter().map(|r| Record::new(r).key()).collect();
+            if before != after {
+                moved += j - i;
+                for (dst, src) in
+                    group.chunks_exact_mut(RECORD_SIZE).zip(&recs)
+                {
+                    dst.copy_from_slice(src);
+                }
+            }
+        }
+        i = j;
+    }
+    moved
+}
+
+/// The pre-fusion merge-task data path: index-merge the runs' keys, then
+/// gather payload bytes range-by-range with a per-record binary search
+/// ([`crate::sortlib::apply_permutation_multi_ranges`]). The fused
+/// [`crate::sortlib::keyed::merge_keyed_ranges`] must produce the same
+/// record bytes in the same ranges; this composition is its oracle.
+pub fn merge_then_gather(srcs: &[&[u8]], cuts: &[u64]) -> Vec<Vec<u8>> {
+    let key_runs: Vec<Vec<u64>> = srcs
+        .iter()
+        .map(|b| crate::sortlib::extract_partition_keys(b))
+        .collect();
+    let mut starts = Vec::with_capacity(key_runs.len());
+    let mut acc = 0u32;
+    for k in &key_runs {
+        starts.push(acc);
+        acc += k.len() as u32;
+    }
+    let vals: Vec<Vec<u32>> = key_runs
+        .iter()
+        .zip(&starts)
+        .map(|(k, &s)| (s..s + k.len() as u32).collect())
+        .collect();
+    let pairs: Vec<(&[u64], &[u32])> = key_runs
+        .iter()
+        .zip(&vals)
+        .map(|(k, v)| (k.as_slice(), v.as_slice()))
+        .collect();
+    let (keys, perm) = crate::sortlib::radix::kway_merge(&pairs);
+    let offs = crate::sortlib::radix::partition_offsets(&keys, cuts);
+    let mut bounds = Vec::with_capacity(cuts.len() + 2);
+    bounds.push(0);
+    bounds.extend_from_slice(&offs);
+    bounds.push(acc);
+    crate::sortlib::apply_permutation_multi_ranges(srcs, &perm, &bounds)
+}

@@ -1,0 +1,106 @@
+//! Opt-in counting global allocator (cargo feature `alloc-stats`).
+//!
+//! Wraps the system allocator and counts every allocation and allocated
+//! byte with relaxed atomics, so the zero-copy claim of the pooled data
+//! plane is a *number* in bench JSON (allocations per map/merge/reduce
+//! task), not prose. Off by default: the counters are two atomic adds
+//! per allocation, which is cheap but not free, and production builds
+//! should not pay it.
+//!
+//! With the feature enabled, `benches/kernels.rs` reports the
+//! allocation ratio of the reference kernels over the pooled rewrites,
+//! and the CI perf gate (`ci/compare_bench.py`) enforces the >= 5x
+//! reduction acceptance bar.
+
+#[cfg(feature = "alloc-stats")]
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::AtomicU64;
+#[cfg(feature = "alloc-stats")]
+use std::sync::atomic::Ordering;
+
+/// Total heap allocations observed process-wide (0 unless built with
+/// `--features alloc-stats`).
+pub static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+/// Total heap bytes requested process-wide (0 unless built with
+/// `--features alloc-stats`).
+pub static ALLOCATED_BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// Whether this build counts allocations (feature `alloc-stats`).
+pub const fn counting_enabled() -> bool {
+    cfg!(feature = "alloc-stats")
+}
+
+/// A point-in-time reading of the counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AllocSnapshot {
+    pub allocations: u64,
+    pub bytes: u64,
+}
+
+/// Read the counters (zeros when counting is disabled).
+pub fn snapshot() -> AllocSnapshot {
+    use std::sync::atomic::Ordering::Relaxed;
+    AllocSnapshot {
+        allocations: ALLOCATIONS.load(Relaxed),
+        bytes: ALLOCATED_BYTES.load(Relaxed),
+    }
+}
+
+/// Allocations and bytes since `before` (saturating, in case the
+/// counters are zeros from a non-counting build).
+pub fn since(before: AllocSnapshot) -> AllocSnapshot {
+    let now = snapshot();
+    AllocSnapshot {
+        allocations: now.allocations.saturating_sub(before.allocations),
+        bytes: now.bytes.saturating_sub(before.bytes),
+    }
+}
+
+/// The counting wrapper around the system allocator.
+#[cfg(feature = "alloc-stats")]
+pub struct CountingAlloc;
+
+#[cfg(feature = "alloc-stats")]
+// SAFETY: delegates verbatim to `System`; the counters are relaxed
+// atomics with no allocation of their own.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        ALLOCATED_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        ALLOCATED_BYTES
+            .fetch_add(new_size.saturating_sub(layout.size()) as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[cfg(feature = "alloc-stats")]
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_is_monotonic_when_counting() {
+        let before = snapshot();
+        let v = vec![0u8; 4096];
+        std::hint::black_box(&v);
+        let d = since(before);
+        if counting_enabled() {
+            assert!(d.allocations >= 1, "vec alloc not counted: {d:?}");
+            assert!(d.bytes >= 4096);
+        } else {
+            assert_eq!(d, AllocSnapshot::default());
+        }
+    }
+}

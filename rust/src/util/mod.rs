@@ -1,6 +1,7 @@
 //! Small self-contained utilities (offline environment: no external
 //! crates beyond the `xla` closure, so RNG, JSON and stats live here).
 
+pub mod alloc;
 pub mod json;
 pub mod rng;
 pub mod stats;
