@@ -21,7 +21,12 @@ Two kinds of checks:
    flag: the repo ships provisional (empty) baselines because the
    authoring environment has no Rust toolchain to produce real numbers;
    provisional baselines skip this gate loudly instead of vacuously
-   passing against made-up numbers.
+   passing against made-up numbers. Every provisional skip emits a
+   GitHub Actions ``::warning::`` annotation so the disarmed gate shows
+   up on the run summary, not just in a scrolled-past log; pass
+   ``--require-armed`` to turn any provisional skip into a hard failure
+   (use this once baselines have been refreshed, so a regression to
+   ``provisional: true`` cannot silently disarm the gate again).
 
 Refreshing baselines (run on the machine class CI uses):
 
@@ -135,13 +140,24 @@ def check_ratios(results, failures):
             )
 
 
-def check_regressions(bench, current, baseline, failures):
+def check_regressions(bench, current, baseline, failures, require_armed):
     """mean_secs regression gate vs a committed baseline."""
     if baseline["provisional"]:
-        print(
-            f"  {bench}: baseline is provisional — regression gate skipped. "
-            "Refresh with --update-baselines on a CI-class machine."
+        msg = (
+            f"{bench}: baseline is provisional — 20% regression gate "
+            "skipped. Refresh ci/baselines/BENCH_*.json with "
+            "--update-baselines on a CI-class machine (see the module "
+            "docstring or the README's 'Perf gate' section)."
         )
+        # GitHub Actions annotation: surfaces on the run summary page so
+        # a never-armed gate cannot hide in the log forever
+        print(f"::warning title=perf regression gate disarmed::{msg}")
+        print(f"  {msg}")
+        if require_armed:
+            failures.append(
+                f"{bench}: --require-armed is set but the baseline is "
+                "still provisional"
+            )
         return
     base_by_name = {r["name"]: r for r in baseline["results"]}
     compared = 0
@@ -190,6 +206,12 @@ def main():
         action="store_true",
         help="rewrite the committed baselines from --current and exit",
     )
+    ap.add_argument(
+        "--require-armed",
+        action="store_true",
+        help="fail (instead of warn) when a baseline is provisional — "
+        "set this once real baselines are committed",
+    )
     args = ap.parse_args()
 
     if args.update_baselines:
@@ -216,7 +238,11 @@ def main():
             failures.append(f"missing baseline {base_path}")
             continue
         check_regressions(
-            bench, load_results(cur_path), load_results(base_path), failures
+            bench,
+            load_results(cur_path),
+            load_results(base_path),
+            failures,
+            args.require_armed,
         )
 
     if failures:

@@ -108,6 +108,20 @@ impl Config {
                 ..spec.cluster
             };
         }
+        // Named-key divisibility check ahead of the generic
+        // `spec.check()`: a non-multiple used to survive into
+        // `worker_cuts()`'s `assert!(r % w == 0)` and panic mid-run;
+        // fail at parse time, naming the offending keys.
+        if spec.n_workers() == 0
+            || spec.n_output_partitions % spec.n_workers() != 0
+        {
+            return Err(format!(
+                "[job] output_partitions ({}) must be a positive multiple \
+                 of [cluster] workers ({})",
+                spec.n_output_partitions,
+                spec.n_workers()
+            ));
+        }
         spec.check()?;
         Ok(spec)
     }
@@ -209,5 +223,18 @@ backpressure = true
         )
         .unwrap();
         assert!(cfg.to_job_spec().is_err()); // 7 not a multiple of 4
+    }
+
+    #[test]
+    fn indivisible_reducers_error_names_the_config_keys() {
+        // regression: this shape used to pass parsing and panic later in
+        // worker_cuts(); it must now fail here, naming both keys
+        let cfg = Config::parse(
+            "[job]\ntotal_bytes = 1MiB\noutput_partitions = 7\n[cluster]\nworkers = 4\n",
+        )
+        .unwrap();
+        let err = cfg.to_job_spec().unwrap_err();
+        assert!(err.contains("output_partitions"), "{err}");
+        assert!(err.contains("workers"), "{err}");
     }
 }

@@ -4,11 +4,12 @@
 
 use anyhow::Context;
 
-use crate::coordinator::manifest::decode_gen_result;
+use crate::coordinator::manifest::{decode_gen_result, decode_samples};
 use crate::coordinator::plan::JobSpec;
 use crate::coordinator::tasks;
 use crate::distfut::{JobId, RuntimeHandle};
 use crate::s3sim::S3;
+use crate::sortlib::cuts_from_samples;
 
 /// Generate all input partitions onto S3 on behalf of `job`; returns the
 /// aggregate (record count, checksum) — the input manifest's integrity
@@ -32,4 +33,34 @@ pub fn generate_input(
         checksum = checksum.wrapping_add(cs);
     }
     Ok((records, checksum))
+}
+
+/// Pre-map sampling stage of adaptive range partitioning: read a
+/// `spec.sample_fraction` fraction of input shards (strided across the
+/// whole input so no region is blind), pool their key samples, and
+/// choose the R−1 interior reducer cuts from the pooled CDF
+/// ([`cuts_from_samples`]). Untimed, like generation — the caller
+/// installs the cuts as [`crate::coordinator::plan::Cuts::Sampled`]
+/// before the timed shuffle starts. Returns `(cuts, keys_sampled)`.
+pub fn sample_cuts(
+    spec: &JobSpec,
+    s3: &S3,
+    rt: &RuntimeHandle,
+    job: JobId,
+) -> anyhow::Result<(Vec<u64>, usize)> {
+    let m = spec.n_input_partitions;
+    let n_sampled =
+        ((m as f64 * spec.sample_fraction).ceil() as usize).clamp(1, m);
+    let stride = m / n_sampled;
+    let results: Vec<_> = (0..n_sampled)
+        .map(|i| rt.submit_for(job, tasks::sample_task(spec, s3, i * stride)))
+        .collect();
+    let mut samples: Vec<u64> = Vec::new();
+    for (outs, h) in results {
+        h.wait().context("key sampling")?;
+        let buf = rt.get(&outs[0])?;
+        samples.extend(decode_samples(&buf));
+    }
+    let n = samples.len();
+    Ok((cuts_from_samples(&samples, spec.n_output_partitions), n))
 }

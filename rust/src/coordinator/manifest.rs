@@ -47,6 +47,14 @@ pub fn decode_gen_result(buf: &[u8]) -> (u64, u64, u64) {
     )
 }
 
+/// Decode a sampling task's return: packed little-endian u64 partition
+/// keys (any trailing partial chunk is ignored).
+pub fn decode_samples(buf: &[u8]) -> Vec<u64> {
+    buf.chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+        .collect()
+}
+
 /// Encode a [`PartitionSummary`] — a validation task's return.
 pub fn encode_summary(s: &PartitionSummary) -> Vec<u8> {
     let mut out = Vec::with_capacity(2 + 2 * KEY_SIZE + 4 * 8);
@@ -86,6 +94,19 @@ mod tests {
     fn gen_result_roundtrip() {
         let enc = encode_gen_result(1 << 40, 0xDEAD_BEEF, 12345);
         assert_eq!(decode_gen_result(&enc), (1 << 40, 0xDEAD_BEEF, 12345));
+    }
+
+    #[test]
+    fn samples_roundtrip() {
+        let keys = [5u64, u64::MAX, 0, 42];
+        let mut buf = Vec::new();
+        for k in keys {
+            buf.extend_from_slice(&k.to_le_bytes());
+        }
+        assert_eq!(decode_samples(&buf), keys);
+        buf.push(0xFF); // trailing partial chunk ignored
+        assert_eq!(decode_samples(&buf), keys);
+        assert!(decode_samples(&[]).is_empty());
     }
 
     #[test]

@@ -7,8 +7,28 @@
 //! every structural ratio, so scaled runs exercise the same control-plane
 //! decisions.
 
+use std::sync::Arc;
+
 use crate::cluster::ClusterSpec;
 use crate::sortlib::{reducer_cuts, worker_cuts, RECORD_SIZE};
+
+pub use crate::sortlib::gensort::Skew;
+
+/// How the key space is cut into reducer ranges.
+///
+/// `Uniform` is the paper's equal-range partitioner (§2.2): correct for
+/// gensort's uniform Indy keys, silently degenerate on skewed input.
+/// `Sampled` carries the R−1 interior reducer cuts chosen from a sampled
+/// key CDF by the pre-map sampling stage
+/// ([`crate::sortlib::keys::cuts_from_samples`]); worker cuts are the
+/// same nested subsample as in the uniform case, so every accessor below
+/// keeps its contract under either variant.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub enum Cuts {
+    #[default]
+    Uniform,
+    Sampled(Arc<Vec<u64>>),
+}
 
 /// Full specification of a CloudSort job.
 #[derive(Clone, Debug)]
@@ -36,7 +56,26 @@ pub struct JobSpec {
     pub s3_buckets: usize,
     /// distfut object-store capacity per node in bytes (drives spilling).
     pub store_capacity_per_node: u64,
+    /// Key distribution of the generated input ([`Skew::Uniform`] is the
+    /// benchmark's Indy category; `Zipf(theta)` for skew experiments).
+    pub skew: Skew,
+    /// Reducer-cut source: equal ranges, or sampled cuts installed by the
+    /// pre-map sampling stage.
+    pub cuts: Cuts,
+    /// Fraction of input shards the pre-map sampling stage reads to
+    /// choose cuts (0.0 disables sampling and keeps [`Cuts::Uniform`]).
+    pub sample_fraction: f64,
+    /// Keys sampled per sampled shard.
+    pub sample_keys_per_shard: usize,
+    /// Speculative re-execution: re-submit a straggler task on another
+    /// node once its runtime exceeds this multiple of the running median
+    /// of its completed family. `None` disables speculation.
+    pub speculate: Option<f64>,
 }
+
+/// Default keys sampled per shard by the pre-map sampling stage — enough
+/// for ~1% quantile accuracy per shard, cheap against a full read.
+pub const DEFAULT_SAMPLE_KEYS_PER_SHARD: usize = 1024;
 
 impl JobSpec {
     /// The paper's exact 100 TB configuration (only runnable through the
@@ -53,6 +92,11 @@ impl JobSpec {
             seed: 0x2022_11_10,
             s3_buckets: 40,
             store_capacity_per_node: 128 * (1 << 30),
+            skew: Skew::Uniform,
+            cuts: Cuts::Uniform,
+            sample_fraction: 0.0,
+            sample_keys_per_shard: DEFAULT_SAMPLE_KEYS_PER_SHARD,
+            speculate: None,
         }
     }
 
@@ -82,6 +126,11 @@ impl JobSpec {
             seed: 42,
             s3_buckets: n_workers.max(1),
             store_capacity_per_node: 1 << 30,
+            skew: Skew::Uniform,
+            cuts: Cuts::Uniform,
+            sample_fraction: 0.0,
+            sample_keys_per_shard: DEFAULT_SAMPLE_KEYS_PER_SHARD,
+            speculate: None,
         }
     }
 
@@ -117,14 +166,29 @@ impl JobSpec {
         self.total_bytes / RECORD_SIZE as u64
     }
 
-    /// Interior cut points between worker ranges (W-1 values).
+    /// Interior cut points between worker ranges (W-1 values). Under
+    /// [`Cuts::Sampled`] these are the same nested subsample of the
+    /// stored reducer cuts that [`worker_cuts`] takes of the uniform
+    /// ones, so worker ranges always align with reducer-range groups.
     pub fn worker_cuts(&self) -> Vec<u64> {
-        worker_cuts(self.n_output_partitions, self.n_workers())
+        match &self.cuts {
+            Cuts::Uniform => {
+                worker_cuts(self.n_output_partitions, self.n_workers())
+            }
+            Cuts::Sampled(rc) => {
+                let w = self.n_workers();
+                let r1 = self.reducers_per_worker();
+                (1..w).map(|i| rc[i * r1 - 1]).collect()
+            }
+        }
     }
 
     /// All interior reducer cuts (R-1 values).
     pub fn reducer_cuts(&self) -> Vec<u64> {
-        reducer_cuts(self.n_output_partitions)
+        match &self.cuts {
+            Cuts::Uniform => reducer_cuts(self.n_output_partitions),
+            Cuts::Sampled(rc) => rc.as_ref().clone(),
+        }
     }
 
     /// The R1-1 interior cuts *within* worker `w`'s range.
@@ -150,6 +214,37 @@ impl JobSpec {
         }
         if self.records_per_partition() * RECORD_SIZE as u64 > u32::MAX as u64 {
             return Err("input partition exceeds 4 GiB task buffer".into());
+        }
+        if !(0.0..=1.0).contains(&self.sample_fraction)
+            || !self.sample_fraction.is_finite()
+        {
+            return Err(format!(
+                "sample_fraction {} must be in [0, 1]",
+                self.sample_fraction
+            ));
+        }
+        if let Cuts::Sampled(rc) = &self.cuts {
+            if rc.len() != self.n_output_partitions.saturating_sub(1) {
+                return Err(format!(
+                    "sampled cuts carry {} values, want R-1 = {}",
+                    rc.len(),
+                    self.n_output_partitions - 1
+                ));
+            }
+        }
+        if let Some(m) = self.speculate {
+            if !(m > 1.0) || !m.is_finite() {
+                return Err(format!(
+                    "speculation multiplier {m} must be a finite value > 1"
+                ));
+            }
+        }
+        if let Skew::Zipf(theta) = self.skew {
+            if !(theta > 0.0) || !theta.is_finite() {
+                return Err(format!(
+                    "zipf theta {theta} must be a finite value > 0"
+                ));
+            }
         }
         Ok(())
     }
@@ -212,5 +307,49 @@ mod tests {
         let mut s = JobSpec::scaled(16 << 20, 4);
         s.n_output_partitions += 1;
         assert!(s.check().is_err());
+    }
+
+    #[test]
+    fn check_rejects_bad_skew_knobs() {
+        let mut s = JobSpec::scaled(16 << 20, 4);
+        s.sample_fraction = 1.5;
+        assert!(s.check().unwrap_err().contains("sample_fraction"));
+        s.sample_fraction = 0.25;
+        assert!(s.check().is_ok());
+        s.speculate = Some(1.0);
+        assert!(s.check().unwrap_err().contains("speculation"));
+        s.speculate = Some(2.0);
+        assert!(s.check().is_ok());
+        s.skew = Skew::Zipf(-1.0);
+        assert!(s.check().unwrap_err().contains("theta"));
+        s.skew = Skew::Zipf(1.5);
+        assert!(s.check().is_ok());
+    }
+
+    #[test]
+    fn sampled_cuts_dispatch_through_accessors() {
+        let mut s = JobSpec::scaled(32 << 20, 4);
+        let r = s.n_output_partitions;
+        let r1 = s.reducers_per_worker();
+        // wrong-arity cuts rejected
+        s.cuts = Cuts::Sampled(Arc::new(vec![1, 2, 3]));
+        if r != 4 {
+            assert!(s.check().unwrap_err().contains("sampled cuts"));
+        }
+        // a valid strictly increasing cut vector dispatches everywhere
+        let rc: Vec<u64> = (1..r as u64).map(|i| i * 1000).collect();
+        s.cuts = Cuts::Sampled(Arc::new(rc.clone()));
+        assert!(s.check().is_ok(), "{:?}", s.check());
+        assert_eq!(s.reducer_cuts(), rc);
+        let wc = s.worker_cuts();
+        assert_eq!(wc.len(), s.n_workers() - 1);
+        for (i, &cut) in wc.iter().enumerate() {
+            assert_eq!(cut, rc[(i + 1) * r1 - 1]);
+        }
+        // per-worker cuts still slice the worker's reducer range
+        for w in 0..s.n_workers() {
+            let cuts = s.reducer_cuts_of_worker(w);
+            assert_eq!(cuts, rc[w * r1..w * r1 + r1 - 1].to_vec());
+        }
     }
 }

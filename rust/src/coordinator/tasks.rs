@@ -47,6 +47,7 @@ pub fn output_key(r: usize) -> String {
 pub fn gen_task(spec: &JobSpec, s3: &S3, p: usize) -> TaskSpec {
     let s3 = s3.clone();
     let seed = spec.seed;
+    let skew = spec.skew;
     let n_buckets = spec.s3_buckets;
     let per = spec.records_per_partition();
     let total = spec.total_records();
@@ -57,11 +58,14 @@ pub fn gen_task(spec: &JobSpec, s3: &S3, p: usize) -> TaskSpec {
         func: task_fn(move |_ctx| {
             let offset = p as u64 * per;
             let records = per.min(total.saturating_sub(offset));
-            let buf = gensort::generate_partition(&gensort::GenSpec {
-                seed,
-                offset,
-                records,
-            });
+            let buf = gensort::generate_partition_with(
+                &gensort::GenSpec {
+                    seed,
+                    offset,
+                    records,
+                },
+                skew,
+            );
             let checksum = gensort::partition_checksum(&buf);
             let bytes = buf.len() as u64;
             s3.put(
@@ -75,6 +79,44 @@ pub fn gen_task(spec: &JobSpec, s3: &S3, p: usize) -> TaskSpec {
         args: vec![],
         num_returns: 1,
         max_retries: S3_TASK_RETRIES,
+    }
+}
+
+/// Key-sampling task (pre-map stage of adaptive range partitioning):
+/// download one input shard and return an evenly-strided sample of its
+/// u64 partition keys as packed LE bytes
+/// ([`crate::coordinator::manifest::decode_samples`]). The driver pools
+/// samples across a configurable fraction of shards and chooses reducer
+/// cuts from the pooled CDF ([`crate::sortlib::cuts_from_samples`]).
+/// Runs before the timed sort (alongside generation accounting-wise), so
+/// its GETs don't appear in Table 2.
+pub fn sample_task(spec: &JobSpec, s3: &S3, p: usize) -> TaskSpec {
+    let s3 = s3.clone();
+    let seed = spec.seed;
+    let n_buckets = spec.s3_buckets;
+    let keys_per_shard = spec.sample_keys_per_shard.max(1);
+    TaskSpec {
+        job: JobId::ROOT,
+        name: format!("sample-{p}"),
+        placement: Placement::Any,
+        args: vec![],
+        num_returns: 1,
+        max_retries: S3_TASK_RETRIES,
+        func: task_fn(move |_ctx| {
+            let buf = s3
+                .get(&bucket_of(seed, p as u64, n_buckets), &input_key(p))
+                .map_err(|e| e.to_string())?;
+            let n = buf.len() / RECORD_SIZE;
+            let stride = (n / keys_per_shard).max(1);
+            let mut out = Vec::with_capacity(8 * keys_per_shard.min(n));
+            let mut i = 0;
+            while i < n {
+                let key = sortlib::partition_key(&buf[i * RECORD_SIZE..]);
+                out.extend_from_slice(&key.to_le_bytes());
+                i += stride;
+            }
+            Ok(vec![out])
+        }),
     }
 }
 

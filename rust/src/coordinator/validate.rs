@@ -34,6 +34,8 @@ pub fn validate_output(
         let buf = rt.get(&outs[0])?;
         summaries.push(decode_summary(&buf));
     }
+    let partition_records: Vec<u64> =
+        summaries.iter().map(|s| s.records).collect();
     let summary = valsort::validate_summaries(&summaries);
     let valid = summary.valid
         && summary.records == input_records
@@ -43,5 +45,6 @@ pub fn validate_output(
         input_records,
         input_checksum,
         valid,
+        partition_records,
     })
 }

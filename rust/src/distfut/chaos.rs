@@ -32,7 +32,7 @@ use crate::distfut::JobId;
 use crate::util::rng::stream_at;
 
 /// A failure (or fleet reconfiguration) to inject when a trigger fires.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub enum ChaosEvent {
     /// Kill the given node: drop its resident objects, drain its queues,
     /// re-execute lost lineage ([`Runtime::kill_node`]).
@@ -52,11 +52,23 @@ pub enum ChaosEvent {
     /// draining (highest index first) as needed. Asynchronous, like
     /// [`ChaosEvent::DrainNode`].
     ScaleTo(usize),
+    /// Degrade the given node: every task that runs there afterwards
+    /// takes `factor` (≥ 1.0) times as long
+    /// ([`crate::distfut::RuntimeHandle::slow_node`]). The node keeps
+    /// completing work correctly — this is the straggler injection
+    /// speculative re-execution is tested against, not a failure.
+    SlowNode(usize, f64),
+    /// Add a fixed per-task latency (milliseconds) on every node,
+    /// modeling degraded S3 round-trips — the object store stand-in has
+    /// no latency model of its own, so the tax is levied where both
+    /// backends already meter time: task execution
+    /// ([`crate::distfut::RuntimeHandle::set_extra_latency_ms`]).
+    S3Latency(u64),
 }
 
 /// One scheduled failure: fires when the armed harness has observed
 /// `after_commits` data-bearing commits.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct ChaosTrigger {
     pub after_commits: u64,
     pub event: ChaosEvent,
@@ -65,7 +77,7 @@ pub struct ChaosTrigger {
 /// A reproducible failure schedule. Triggers are counted relative to the
 /// moment the plan is armed, so input generation (or any other prelude)
 /// does not shift the injection points of the run under test.
-#[derive(Clone, Debug, Default, PartialEq, Eq)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct ChaosPlan {
     pub triggers: Vec<ChaosTrigger>,
 }
@@ -117,6 +129,31 @@ impl ChaosPlan {
         self.triggers.push(ChaosTrigger {
             after_commits,
             event: ChaosEvent::ScaleTo(nodes),
+        });
+        self
+    }
+
+    /// Slow `node` to `factor`× task duration after the
+    /// `after_commits`-th commit (the CLI's `--chaos-slow N@C:FACTOR`).
+    pub fn slow_node(
+        mut self,
+        node: usize,
+        factor: f64,
+        after_commits: u64,
+    ) -> ChaosPlan {
+        self.triggers.push(ChaosTrigger {
+            after_commits,
+            event: ChaosEvent::SlowNode(node, factor),
+        });
+        self
+    }
+
+    /// Degrade S3: add `ms` milliseconds to every task dispatch after
+    /// the `after_commits`-th commit (`--chaos-s3-latency MS@C`).
+    pub fn s3_latency(mut self, ms: u64, after_commits: u64) -> ChaosPlan {
+        self.triggers.push(ChaosTrigger {
+            after_commits,
+            event: ChaosEvent::S3Latency(ms),
         });
         self
     }
@@ -290,6 +327,18 @@ impl ChaosHarness {
                 ),
                 Err(e) => format!("skipped: {e}"),
             },
+            ChaosEvent::SlowNode(node, factor) => {
+                match rt.slow_node(node, factor) {
+                    Ok(()) => format!(
+                        "slowed node {node} to {factor:.2}x task duration"
+                    ),
+                    Err(e) => format!("skipped: {e}"),
+                }
+            }
+            ChaosEvent::S3Latency(ms) => {
+                rt.set_extra_latency_ms(ms);
+                format!("degraded S3: +{ms}ms on every task dispatch")
+            }
             ChaosEvent::AddNode => match rt.add_node_as(job) {
                 Ok(node) => format!(
                     "added node {node} ({} available)",

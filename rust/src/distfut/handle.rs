@@ -27,7 +27,7 @@ use crate::distfut::clock::Clock;
 use crate::distfut::future::TaskHandle;
 use crate::distfut::scheduler::{
     DrainReport, JobParams, MembershipEvent, RecoveryReport, RecoveryStats,
-    Runtime, TaskSpec,
+    Runtime, SpeculationStats, TaskSpec,
 };
 use crate::distfut::sim::{DrainCallback, SimRuntime};
 use crate::distfut::store::{ObjectId, ObjectRef, StoreStats};
@@ -520,6 +520,50 @@ impl RuntimeHandle {
         match self {
             RuntimeHandle::Threaded(rt) => rt.recovery_stats(),
             RuntimeHandle::Sim(rt) => rt.recovery_stats(),
+        }
+    }
+
+    pub fn speculation_stats(&self) -> SpeculationStats {
+        match self {
+            RuntimeHandle::Threaded(rt) => rt.speculation_stats(),
+            RuntimeHandle::Sim(rt) => rt.speculation_stats(),
+        }
+    }
+
+    /// Chaos: stretch every task duration on `node` by `factor` —
+    /// wall-clock sleeps (threaded) or virtual-duration multiplication
+    /// (sim). `1.0` restores full speed.
+    pub fn slow_node(
+        &self,
+        node: usize,
+        factor: f64,
+    ) -> Result<(), DfError> {
+        match self {
+            RuntimeHandle::Threaded(rt) => rt.slow_node(node, factor),
+            RuntimeHandle::Sim(rt) => rt.slow_node(node, factor),
+        }
+    }
+
+    pub fn node_slow_factor(&self, node: usize) -> f64 {
+        match self {
+            RuntimeHandle::Threaded(rt) => rt.node_slow_factor(node),
+            RuntimeHandle::Sim(rt) => rt.node_slow_factor(node),
+        }
+    }
+
+    /// Chaos: add `ms` milliseconds to every task on every node (the
+    /// degraded-S3 model). `0` restores normal latency.
+    pub fn set_extra_latency_ms(&self, ms: u64) {
+        match self {
+            RuntimeHandle::Threaded(rt) => rt.set_extra_latency_ms(ms),
+            RuntimeHandle::Sim(rt) => rt.set_extra_latency_ms(ms),
+        }
+    }
+
+    pub fn extra_latency_ms(&self) -> u64 {
+        match self {
+            RuntimeHandle::Threaded(rt) => rt.extra_latency_ms(),
+            RuntimeHandle::Sim(rt) => rt.extra_latency_ms(),
         }
     }
 

@@ -77,7 +77,7 @@ pub use future::TaskHandle;
 pub use handle::{RuntimeHandle, WeakRuntimeHandle};
 pub use scheduler::{
     DrainReport, JobParams, MembershipEvent, RecoveryReport, RecoveryStats,
-    Runtime, RuntimeOptions, TaskCtx, TaskSpec,
+    Runtime, RuntimeOptions, SpeculationStats, TaskCtx, TaskSpec,
 };
 pub use sim::SimRuntime;
 pub use store::{ObjectId, ObjectRef, StoreStats};

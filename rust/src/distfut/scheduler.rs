@@ -111,6 +111,17 @@ pub struct RuntimeOptions {
     /// Queue and store slot vectors are sized to this up front, so a
     /// never-joined slot costs a few empty maps and three atomics.
     pub max_nodes: usize,
+    /// Speculative re-execution of stragglers (§2.5 fault tolerance,
+    /// speculation flavour): a running task whose elapsed time exceeds
+    /// `multiplier ×` the running median of its family's completed
+    /// durations gets one speculative sibling on another available
+    /// node. The copies share their output objects and completion
+    /// handle; the store's first-commit-wins rule and the handle's
+    /// first-completion-wins rule make whichever copy finishes second a
+    /// no-op, so output bytes are identical to an unspeculated run.
+    /// `None` (the default) disables the scanner entirely; values that
+    /// are not finite and greater than 1.0 are treated as `None`.
+    pub speculate: Option<f64>,
 }
 
 impl Default for RuntimeOptions {
@@ -125,6 +136,7 @@ impl Default for RuntimeOptions {
             record_lineage: true,
             max_reconstruction_depth: 64,
             max_nodes: 0,
+            speculate: None,
         }
     }
 }
@@ -284,6 +296,49 @@ pub struct RecoveryStats {
     pub tasks_rerouted: u64,
 }
 
+/// Cumulative speculative-execution counters for a runtime
+/// ([`RuntimeOptions::speculate`]). All zero unless speculation is on.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SpeculationStats {
+    /// Stragglers that got a speculative sibling launched.
+    pub tasks_speculated: u64,
+    /// Races where the speculative copy finished first.
+    pub speculative_wins: u64,
+    /// Races where the original copy finished first.
+    pub original_wins: u64,
+}
+
+/// Shared win/lose flag of one original/speculative pair: the first
+/// copy to finish — or to observe that its sibling's outputs already
+/// committed — decides the race, exactly once. Crate-visible so the
+/// simulated backend races with the same primitive.
+#[derive(Default)]
+pub(crate) struct SpecRace {
+    pub(crate) decided: AtomicBool,
+}
+
+/// A dispatched task as seen by the straggler scanner: everything needed
+/// to launch a speculative sibling, plus when and where the original is
+/// running. Kept only while speculation is enabled.
+struct RunningTask {
+    name: String,
+    job: JobId,
+    func: TaskFn,
+    args: Vec<ObjectRef>,
+    outputs: Vec<ObjectId>,
+    handle: TaskHandle,
+    num_returns: usize,
+    node: usize,
+    /// Runtime-clock seconds when the body started.
+    started: f64,
+    /// This entry *is* a speculative copy (never speculated again).
+    speculative: bool,
+    /// A sibling was already launched for this attempt.
+    speculated: bool,
+    /// Race accounting shared with the sibling, set when speculated.
+    race: Option<Arc<SpecRace>>,
+}
+
 struct QueuedTask {
     spec: TaskSpec,
     outputs: Vec<ObjectId>,
@@ -294,6 +349,11 @@ struct QueuedTask {
     /// True for lineage re-executions and dead-node reroutes (surfaced
     /// on [`TaskEvent::recovery`]).
     recovery: bool,
+    /// Opportunistic speculative copy: shares outputs and handle with
+    /// the original, never fails the job, never poisons outputs.
+    speculative: bool,
+    /// Win/lose accounting shared with the racing sibling.
+    race: Option<Arc<SpecRace>>,
 }
 
 struct SchedState {
@@ -580,6 +640,23 @@ struct Shared {
     objects_unrecoverable: AtomicU64,
     tasks_resubmitted: AtomicU64,
     tasks_rerouted: AtomicU64,
+    /// Speculation multiplier ([`RuntimeOptions::speculate`]); `None`
+    /// disables the straggler scanner (and its registry) entirely.
+    speculate: Option<f64>,
+    /// Per-node chaos slowdown factor as f64 bits (1.0 = full speed) —
+    /// [`Runtime::slow_node`] stretches every task duration on the node.
+    slow_factor: Vec<AtomicU64>,
+    /// Chaos: extra milliseconds added to every task on every node (the
+    /// degraded-S3 model — each task embeds S3 round-trips).
+    extra_latency_ms: AtomicU64,
+    /// Dispatched-and-executing tasks visible to the straggler scanner.
+    /// Empty unless speculation is enabled.
+    running_tasks: Mutex<HashMap<u64, RunningTask>>,
+    /// Completed task durations per family — the straggler baseline.
+    family_durations: Mutex<HashMap<String, Vec<f64>>>,
+    tasks_speculated: AtomicU64,
+    speculative_wins: AtomicU64,
+    original_wins: AtomicU64,
     stop: AtomicBool,
 }
 
@@ -665,6 +742,18 @@ impl Runtime {
             objects_unrecoverable: AtomicU64::new(0),
             tasks_resubmitted: AtomicU64::new(0),
             tasks_rerouted: AtomicU64::new(0),
+            speculate: opts
+                .speculate
+                .filter(|m| m.is_finite() && *m > 1.0),
+            slow_factor: (0..max_nodes)
+                .map(|_| AtomicU64::new(1.0f64.to_bits()))
+                .collect(),
+            extra_latency_ms: AtomicU64::new(0),
+            running_tasks: Mutex::new(HashMap::new()),
+            family_durations: Mutex::new(HashMap::new()),
+            tasks_speculated: AtomicU64::new(0),
+            speculative_wins: AtomicU64::new(0),
+            original_wins: AtomicU64::new(0),
             stop: AtomicBool::new(false),
         });
         let rt = Arc::new(Runtime {
@@ -896,6 +985,8 @@ impl Runtime {
             attempt: 0,
             unresolved,
             recovery: false,
+            speculative: false,
+            race: None,
         };
         st.outstanding += 1;
         if unresolved == 0 {
@@ -1028,6 +1119,9 @@ impl Runtime {
                 ))
             })?;
         let gen = sh.store.revive_node(node);
+        // a fresh incarnation starts at full speed — chaos slowdowns die
+        // with the process they afflicted
+        sh.slow_factor[node].store(1.0f64.to_bits(), Ordering::Relaxed);
         if node >= span {
             sh.provisioned.store(node + 1, Ordering::SeqCst);
         }
@@ -1587,6 +1681,8 @@ impl Runtime {
                     attempt: 0,
                     unresolved,
                     recovery: true,
+                    speculative: false,
+                    race: None,
                 };
                 st.outstanding += 1;
                 if unresolved == 0 {
@@ -1645,6 +1741,59 @@ impl Runtime {
             tasks_resubmitted: sh.tasks_resubmitted.load(Ordering::Relaxed),
             tasks_rerouted: sh.tasks_rerouted.load(Ordering::Relaxed),
         }
+    }
+
+    /// Cumulative speculative-execution counters.
+    pub fn speculation_stats(&self) -> SpeculationStats {
+        let sh = &self.shared;
+        SpeculationStats {
+            tasks_speculated: sh.tasks_speculated.load(Ordering::Relaxed),
+            speculative_wins: sh.speculative_wins.load(Ordering::Relaxed),
+            original_wins: sh.original_wins.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Chaos: stretch every task duration on `node` by `factor` (a
+    /// straggling node, §2.5). `factor` must be finite and ≥ 1.0;
+    /// `1.0` restores full speed. Errors on a dead or out-of-range
+    /// node. A kill or drain-retirement clears the slowdown — a fresh
+    /// incarnation via [`Runtime::add_node`] starts at full speed.
+    pub fn slow_node(&self, node: usize, factor: f64) -> Result<(), DfError> {
+        let sh = &self.shared;
+        if node >= sh.n_provisioned() || sh.store.is_dead(node) {
+            return Err(DfError::Recovery(format!(
+                "node {node} is not live"
+            )));
+        }
+        if !factor.is_finite() || factor < 1.0 {
+            return Err(DfError::Recovery(format!(
+                "slow factor must be finite and >= 1.0, got {factor}"
+            )));
+        }
+        sh.slow_factor[node].store(factor.to_bits(), Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// The node's current chaos slowdown factor (1.0 = full speed).
+    pub fn node_slow_factor(&self, node: usize) -> f64 {
+        self.shared
+            .slow_factor
+            .get(node)
+            .map(|f| f64::from_bits(f.load(Ordering::Relaxed)))
+            .unwrap_or(1.0)
+    }
+
+    /// Chaos: add `ms` milliseconds to every task on every node — the
+    /// degraded-S3 model (each task embeds S3 round-trips, so a slow
+    /// object store stretches all of them uniformly). `0` restores
+    /// normal latency.
+    pub fn set_extra_latency_ms(&self, ms: u64) {
+        self.shared.extra_latency_ms.store(ms, Ordering::Relaxed);
+    }
+
+    /// Current degraded-S3 extra latency in milliseconds.
+    pub fn extra_latency_ms(&self) -> u64 {
+        self.shared.extra_latency_ms.load(Ordering::Relaxed)
     }
 
     /// Total tasks executed (attempts) and retried.
@@ -2052,7 +2201,7 @@ fn worker_loop(sh: Arc<Shared>, node: usize, generation: u64) {
     loop {
         // --- pick a runnable task for this node (event-driven: tasks in
         // these queues already have every argument resolved) ---
-        let mut task = {
+        let (tid, mut task) = {
             let mut st = sh.state.lock().unwrap();
             loop {
                 if sh.stop.load(Ordering::SeqCst) {
@@ -2067,7 +2216,10 @@ fn worker_loop(sh: Arc<Shared>, node: usize, generation: u64) {
                 }
                 match pick_task(&sh, &mut st, node, &mut stalled, &mut job_stalled) {
                     Pick::Run(tid) => {
-                        break st.pending.remove(&tid).expect("queued task exists");
+                        break (
+                            tid,
+                            st.pending.remove(&tid).expect("queued task exists"),
+                        );
                     }
                     Pick::Retry(d) => {
                         let (g, _) = sh.work_ready.wait_timeout(st, d).unwrap();
@@ -2080,6 +2232,20 @@ fn worker_loop(sh: Arc<Shared>, node: usize, generation: u64) {
             }
         };
 
+        // Speculative dedup (first-commit-wins): a racing copy whose
+        // sibling already committed every declared output skips its
+        // body — the bytes are final, re-executing could only produce
+        // duplicate commits. The skipping copy lost the race.
+        if task.race.is_some()
+            && !task.outputs.is_empty()
+            && task.outputs.iter().all(|o| sh.store.is_ready(*o))
+        {
+            settle_race(&sh, task.race.as_ref(), !task.speculative);
+            task.handle.complete(Ok(()));
+            finish_task(&sh, node, task.spec.job, &task.outputs);
+            continue;
+        }
+
         // --- fetch resolved args (restores spilled data, accounts
         // cross-node transfers; never waits on production — and never
         // blocks on a lost object, so recovery cannot wedge the slot) ---
@@ -2090,6 +2256,28 @@ fn worker_loop(sh: Arc<Shared>, node: usize, generation: u64) {
         }
 
         let start = sh.epoch.elapsed().as_secs_f64();
+        // Register with the straggler scanner while the body runs (and
+        // through any chaos slowdown below — a slowed task is exactly
+        // what speculation must observe as still running).
+        if sh.speculate.is_some() {
+            sh.running_tasks.lock().unwrap().insert(
+                tid,
+                RunningTask {
+                    name: task.spec.name.clone(),
+                    job: task.spec.job,
+                    func: task.spec.func.clone(),
+                    args: task.spec.args.clone(),
+                    outputs: task.outputs.clone(),
+                    handle: task.handle.clone(),
+                    num_returns: task.spec.num_returns,
+                    node,
+                    started: start,
+                    speculative: task.speculative,
+                    speculated: task.race.is_some(),
+                    race: task.race.clone(),
+                },
+            );
+        }
         let result = match fetched {
             Fetch::Ready(args) => {
                 let ctx = TaskCtx {
@@ -2103,7 +2291,33 @@ fn worker_loop(sh: Arc<Shared>, node: usize, generation: u64) {
             Fetch::Failed(msg) => Err(msg),
             Fetch::Lost => unreachable!("handled above"),
         };
+
+        // Chaos slowdown (SlowNode / degraded-S3): stretch the task's
+        // apparent duration by the node's slow factor plus the
+        // runtime-wide extra latency. Bounded so a pathological factor
+        // cannot wedge the slot forever.
+        let factor =
+            f64::from_bits(sh.slow_factor[node].load(Ordering::Relaxed));
+        let extra_ms = sh.extra_latency_ms.load(Ordering::Relaxed);
+        let penalty = (sh.epoch.elapsed().as_secs_f64() - start)
+            * (factor - 1.0).max(0.0)
+            + extra_ms as f64 / 1000.0;
+        if penalty > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(penalty.min(5.0)));
+        }
         let end = sh.epoch.elapsed().as_secs_f64();
+
+        // The body is over: leave the scanner's registry. The entry also
+        // carries the race flag a scan may have attached mid-run.
+        let registered = if sh.speculate.is_some() {
+            sh.running_tasks.lock().unwrap().remove(&tid)
+        } else {
+            None
+        };
+        let race = registered
+            .as_ref()
+            .and_then(|r| r.race.clone())
+            .or_else(|| task.race.clone());
 
         // The node died (or was retired and re-added as a fresh
         // incarnation) while the task ran: its results die with the
@@ -2113,6 +2327,7 @@ fn worker_loop(sh: Arc<Shared>, node: usize, generation: u64) {
         {
             sh.tasks_rerouted.fetch_add(1, Ordering::Relaxed);
             task.recovery = true;
+            task.race = race; // keep the race alive across the re-park
             park_task(&sh, node, task);
             continue;
         }
@@ -2132,6 +2347,14 @@ fn worker_loop(sh: Arc<Shared>, node: usize, generation: u64) {
         match result {
             Ok(outs) => {
                 if outs.len() != task.spec.num_returns {
+                    if task.speculative {
+                        // opportunistic copy: never fail the shared
+                        // handle or poison the shared outputs — and do
+                        // not wake waiters, the outputs are still the
+                        // original's to commit
+                        abandon_task(&sh, node, task.spec.job);
+                        continue;
+                    }
                     task.handle.complete(Err(format!(
                         "task '{}' returned {} outputs, declared {}",
                         task.spec.name,
@@ -2161,16 +2384,43 @@ fn worker_loop(sh: Arc<Shared>, node: usize, generation: u64) {
                     if died_mid_commit {
                         sh.tasks_rerouted.fetch_add(1, Ordering::Relaxed);
                         task.recovery = true;
+                        task.race = race;
                         park_task(&sh, node, task);
                         continue;
                     }
+                    settle_race(&sh, race.as_ref(), task.speculative);
                     task.handle.complete(Ok(()));
                 }
                 finish_task(&sh, node, task.spec.job, &task.outputs);
+                if sh.speculate.is_some() {
+                    let family =
+                        family_of(&task.spec.name).to_string();
+                    {
+                        let mut durs =
+                            sh.family_durations.lock().unwrap();
+                        let v = durs.entry(family.clone()).or_default();
+                        v.push(end - start);
+                        // keep the window bounded: the scan sorts this
+                        // on every completion, and a *running* median
+                        // tracks drift better than an all-time one
+                        if v.len() > 1024 {
+                            v.drain(..512);
+                        }
+                    }
+                    speculate_scan(&sh, &family);
+                }
             }
             Err(msg) => {
+                if task.speculative {
+                    // opportunistic copy: swallow the failure, release
+                    // the slot, and let the original finish the job
+                    // (no waiter wake-up — the outputs are unresolved)
+                    abandon_task(&sh, node, task.spec.job);
+                    continue;
+                }
                 if task.attempt < task.spec.max_retries {
                     task.attempt += 1;
+                    task.race = race; // a racing retry still dedups
                     sh.tasks_retried.fetch_add(1, Ordering::Relaxed);
                     let tid = sh.next_task_id.fetch_add(1, Ordering::Relaxed);
                     let arg_ids: Vec<ObjectId> =
@@ -2197,6 +2447,149 @@ fn worker_loop(sh: Arc<Shared>, node: usize, generation: u64) {
                 finish_task(&sh, node, task.spec.job, &task.outputs);
             }
         }
+    }
+}
+
+/// Task-family key for straggler statistics: the task-name prefix
+/// before the first `-` ("map-17" → "map", "reduce-3" → "reduce"),
+/// matching how the pipeline names its tasks.
+pub(crate) fn family_of(name: &str) -> &str {
+    name.split('-').next().unwrap_or(name)
+}
+
+/// Decide an original/speculative race exactly once: the first copy to
+/// call this wins. `speculative_won` is from the caller's perspective —
+/// a finishing copy passes its own flavour, a body-skipping copy passes
+/// its sibling's (the sibling's bytes are the ones that landed).
+fn settle_race(
+    sh: &Shared,
+    race: Option<&Arc<SpecRace>>,
+    speculative_won: bool,
+) {
+    let Some(race) = race else { return };
+    if !race.decided.swap(true, Ordering::SeqCst) {
+        if speculative_won {
+            sh.speculative_wins.fetch_add(1, Ordering::Relaxed);
+        } else {
+            sh.original_wins.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Straggler scan (speculative re-execution, §2.5): after a task of
+/// `family` completes, compare every still-running task of the family
+/// against `multiplier ×` the running median of the family's completed
+/// durations (at least three samples, so early noise cannot trigger a
+/// speculation storm) and launch one speculative sibling per straggler
+/// on another available node. The sibling shares the original's output
+/// objects and completion handle: the store's first-commit-wins rule
+/// and the handle's first-completion-wins rule dedup whichever copy
+/// finishes second, so output bytes are identical either way.
+fn speculate_scan(sh: &Arc<Shared>, family: &str) {
+    let Some(multiplier) = sh.speculate else { return };
+    let median = {
+        let durs = sh.family_durations.lock().unwrap();
+        let Some(d) = durs.get(family) else { return };
+        if d.len() < 3 {
+            return;
+        }
+        let mut sorted = d.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted[sorted.len() / 2]
+    };
+    let threshold = (multiplier * median).max(1e-6);
+    let now = sh.epoch.elapsed().as_secs_f64();
+    let mut stragglers: Vec<(TaskSpec, Vec<ObjectId>, TaskHandle, Arc<SpecRace>)> =
+        Vec::new();
+    {
+        let mut running = sh.running_tasks.lock().unwrap();
+        for r in running.values_mut() {
+            if r.speculative
+                || r.speculated
+                || family_of(&r.name) != family
+                || now - r.started <= threshold
+            {
+                continue;
+            }
+            // the copy must run on *another* node — that is the point
+            let span = sh.n_provisioned();
+            let Some(target) = (1..span)
+                .map(|i| (r.node + i) % span)
+                .find(|&c| c != r.node && sh.store.is_available(c))
+            else {
+                continue;
+            };
+            r.speculated = true;
+            let race = Arc::new(SpecRace {
+                decided: AtomicBool::new(false),
+            });
+            r.race = Some(race.clone());
+            stragglers.push((
+                TaskSpec {
+                    name: r.name.clone(),
+                    job: r.job,
+                    placement: Placement::Prefer(target),
+                    func: r.func.clone(),
+                    args: r.args.clone(),
+                    num_returns: r.num_returns,
+                    max_retries: 0,
+                },
+                r.outputs.clone(),
+                r.handle.clone(),
+                race,
+            ));
+        }
+    }
+    for (spec, outputs, handle, race) in stragglers {
+        let tid = sh.next_task_id.fetch_add(1, Ordering::Relaxed);
+        let arg_ids: Vec<ObjectId> =
+            spec.args.iter().map(|a| a.id).collect();
+        let (job, placement) = (spec.job, spec.placement);
+        let mut st = sh.state.lock().unwrap();
+        if st.shutdown {
+            return;
+        }
+        // no lineage record: the original's outputs already carry one
+        let mut unresolved = 0usize;
+        for a in &arg_ids {
+            if !sh.store.is_resolved(*a) {
+                unresolved += 1;
+                st.waiting.entry(*a).or_default().push(tid);
+            }
+        }
+        let task = QueuedTask {
+            spec,
+            outputs,
+            handle,
+            attempt: 0,
+            unresolved,
+            recovery: false,
+            speculative: true,
+            race: Some(race),
+        };
+        st.outstanding += 1;
+        if unresolved == 0 {
+            st.route(sh, tid, job, placement, &arg_ids);
+        }
+        st.pending.insert(tid, task);
+        drop(st);
+        sh.tasks_speculated.fetch_add(1, Ordering::Relaxed);
+        sh.work_ready.notify_all();
+    }
+}
+
+/// A failed *speculative* copy leaves quietly: release the slot and the
+/// outstanding unit, but wake no waiters — the shared outputs are still
+/// pending and still the original's to commit.
+fn abandon_task(sh: &Arc<Shared>, node: usize, job: JobId) {
+    let mut st = sh.state.lock().unwrap();
+    st.dispatch_done(job, node);
+    st.outstanding = st.outstanding.saturating_sub(1);
+    let quiescent = st.outstanding == 0;
+    drop(st);
+    sh.work_ready.notify_all();
+    if quiescent {
+        sh.quiescent.notify_all();
     }
 }
 
@@ -3047,5 +3440,162 @@ mod tests {
         h2.wait().unwrap();
         drop(outs);
         assert_eq!(rt.store_stats().resident_bytes, 0);
+    }
+
+    // --- chaos slowdown + speculative re-execution -----------------
+
+    #[test]
+    fn slow_node_stretches_task_durations() {
+        let rt = small_rt(2, 1);
+        assert!(rt.slow_node(7, 2.0).is_err(), "out of range");
+        assert!(rt.slow_node(0, 0.5).is_err(), "factor below 1.0");
+        assert!(rt.slow_node(0, f64::NAN).is_err(), "non-finite factor");
+        rt.slow_node(0, 3.0).unwrap();
+        assert_eq!(rt.node_slow_factor(0), 3.0);
+        let (_, h) = rt.submit(sleeper("slowed", Placement::Node(0), 20));
+        h.wait().unwrap();
+        let ev = rt
+            .task_events()
+            .into_iter()
+            .find(|e| e.name == "slowed")
+            .unwrap();
+        assert!(
+            ev.end - ev.start >= 0.050,
+            "3x factor must stretch a 20ms task: got {:.3}s",
+            ev.end - ev.start
+        );
+        rt.slow_node(0, 1.0).unwrap();
+        assert_eq!(rt.node_slow_factor(0), 1.0);
+    }
+
+    #[test]
+    fn extra_latency_stretches_every_task() {
+        let rt = small_rt(1, 1);
+        rt.set_extra_latency_ms(40);
+        assert_eq!(rt.extra_latency_ms(), 40);
+        let (_, h) = rt.submit(noop("lagged", Placement::Any, vec![]));
+        h.wait().unwrap();
+        let ev = rt
+            .task_events()
+            .into_iter()
+            .find(|e| e.name == "lagged")
+            .unwrap();
+        assert!(
+            ev.end - ev.start >= 0.040,
+            "+40ms latency must show on the task: got {:.3}s",
+            ev.end - ev.start
+        );
+    }
+
+    #[test]
+    fn speculation_reexecutes_straggler_on_another_node() {
+        let rt = Runtime::new(RuntimeOptions {
+            n_nodes: 2,
+            slots_per_node: 2,
+            speculate: Some(2.0),
+            ..Default::default()
+        });
+        // family baseline: three fast "fam-*" completions (~10ms median)
+        for i in 0..3 {
+            let (_, h) =
+                rt.submit(sleeper(&format!("fam-base{i}"), Placement::Node(1), 10));
+            h.wait().unwrap();
+        }
+        // the straggler: a 30ms body pinned to node 0, which chaos has
+        // slowed 20x (~600ms apparent) — the task itself is fine
+        rt.slow_node(0, 20.0).unwrap();
+        let (outs, h) = rt.submit(TaskSpec {
+            job: JobId::ROOT,
+            name: "fam-victim".into(),
+            placement: Placement::Node(0),
+            func: task_fn(|_| {
+                std::thread::sleep(Duration::from_millis(30));
+                Ok(vec![vec![42u8; 16]])
+            }),
+            args: vec![],
+            num_returns: 1,
+            max_retries: 0,
+        });
+        // trigger a scan while the victim is visibly over threshold
+        std::thread::sleep(Duration::from_millis(150));
+        let (_, trig) =
+            rt.submit(sleeper("fam-trigger", Placement::Node(1), 10));
+        trig.wait().unwrap();
+        // the speculative copy on node 1 finishes long before the slowed
+        // original; the shared handle resolves on the first completion
+        h.wait().unwrap();
+        assert_eq!(*rt.get(&outs[0]).unwrap(), vec![42u8; 16]);
+        let stats = rt.speculation_stats();
+        assert_eq!(stats.tasks_speculated, 1, "{stats:?}");
+        assert_eq!(stats.speculative_wins, 1, "{stats:?}");
+        assert_eq!(stats.original_wins, 0, "{stats:?}");
+        // the copy ran on the other node
+        let nodes: Vec<usize> = rt
+            .task_events()
+            .iter()
+            .filter(|e| e.name == "fam-victim")
+            .map(|e| e.node)
+            .collect();
+        assert!(nodes.contains(&1), "speculative copy must run on node 1");
+    }
+
+    #[test]
+    fn speculative_copy_failure_never_fails_the_job() {
+        let rt = Runtime::new(RuntimeOptions {
+            n_nodes: 2,
+            slots_per_node: 2,
+            speculate: Some(2.0),
+            ..Default::default()
+        });
+        for i in 0..3 {
+            let (_, h) =
+                rt.submit(sleeper(&format!("fam-base{i}"), Placement::Node(1), 10));
+            h.wait().unwrap();
+        }
+        // the original (node 0) succeeds after a long sleep; any copy —
+        // which can only land on node 1 — fails instantly
+        let (outs, h) = rt.submit(TaskSpec {
+            job: JobId::ROOT,
+            name: "fam-victim".into(),
+            placement: Placement::Node(0),
+            func: task_fn(|ctx| {
+                if ctx.node == 1 {
+                    return Err("copy blew up".into());
+                }
+                std::thread::sleep(Duration::from_millis(250));
+                Ok(vec![vec![7u8; 8]])
+            }),
+            args: vec![],
+            num_returns: 1,
+            max_retries: 0,
+        });
+        std::thread::sleep(Duration::from_millis(120));
+        let (_, trig) =
+            rt.submit(sleeper("fam-trigger", Placement::Node(1), 10));
+        trig.wait().unwrap();
+        // the failed copy must neither resolve the handle to an error
+        // nor poison the outputs the original is about to commit
+        h.wait().unwrap();
+        assert_eq!(*rt.get(&outs[0]).unwrap(), vec![7u8; 8]);
+        let stats = rt.speculation_stats();
+        assert_eq!(stats.tasks_speculated, 1, "{stats:?}");
+        assert_eq!(stats.original_wins, 1, "{stats:?}");
+        assert_eq!(stats.speculative_wins, 0, "{stats:?}");
+    }
+
+    #[test]
+    fn speculation_disabled_launches_nothing() {
+        let rt = small_rt(2, 2);
+        for i in 0..4 {
+            let (_, h) =
+                rt.submit(sleeper(&format!("fam-{i}"), Placement::Any, 5));
+            h.wait().unwrap();
+        }
+        let (_, h) = rt.submit(sleeper("fam-slow", Placement::Node(0), 120));
+        std::thread::sleep(Duration::from_millis(60));
+        let (_, trig) = rt.submit(sleeper("fam-t", Placement::Node(1), 5));
+        trig.wait().unwrap();
+        h.wait().unwrap();
+        assert_eq!(rt.speculation_stats(), SpeculationStats::default());
     }
 }

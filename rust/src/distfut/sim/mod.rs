@@ -41,8 +41,9 @@ use crate::distfut::block::Block;
 use crate::distfut::clock::Clock;
 use crate::distfut::future::{Pump, TaskHandle};
 use crate::distfut::scheduler::{
-    DrainReport, JobParams, MembershipEvent, RecoveryReport, RecoveryStats,
-    RuntimeOptions, TaskCtx, TaskSpec,
+    family_of, DrainReport, JobParams, MembershipEvent, RecoveryReport,
+    RecoveryStats, RuntimeOptions, SpecRace, SpeculationStats, TaskCtx,
+    TaskSpec,
 };
 use crate::distfut::store::{
     ObjState, ObjectId, ObjectRef, Store, StoreStats,
@@ -94,6 +95,12 @@ struct SimTask {
     unresolved: usize,
     /// True for lineage re-executions and dead-node reroutes.
     recovery: bool,
+    /// This task *is* an opportunistic straggler copy (shares the
+    /// original's outputs and handle; never fails either, never
+    /// speculated again).
+    speculative: bool,
+    /// Race accounting shared with the sibling copy, when one exists.
+    race: Option<Arc<SpecRace>>,
 }
 
 /// A dispatched task occupying a node slot until its completion event.
@@ -224,6 +231,11 @@ struct Dispatched {
     outputs: Vec<ObjectId>,
     num_returns: usize,
     max_retries: u32,
+    /// Snapshot of [`SimTask::speculative`].
+    speculative: bool,
+    /// Snapshot of [`SimTask::race`] — taken at completion pop, so a
+    /// race attached while the task was "running" is visible here.
+    race: Option<Arc<SpecRace>>,
 }
 
 /// What executing one task body decided (applied under the state lock
@@ -239,6 +251,13 @@ enum StepOutcome {
     Finished(Result<(), String>),
     /// Failed with retries left.
     Retry,
+    /// A racing copy found every shared output already committed by its
+    /// sibling: complete and finish like a success, but record no
+    /// duration sample — the body never ran (first-commit-wins dedup).
+    Skipped,
+    /// A speculative copy failed: release its slot and outstanding unit
+    /// silently — the shared handle and outputs stay the original's.
+    SpecAbandon,
 }
 
 struct SimShared {
@@ -271,6 +290,20 @@ struct SimShared {
     objects_unrecoverable: AtomicU64,
     tasks_resubmitted: AtomicU64,
     tasks_rerouted: AtomicU64,
+    /// Straggler multiplier ([`RuntimeOptions::speculate`]); `None`
+    /// disables the scanner.
+    speculate: Option<f64>,
+    /// Per-node chaos slowdown (f64 bits; 1.0 = full speed). Stretches
+    /// the *virtual* duration of tasks dispatched while set.
+    slow_factor: Vec<AtomicU64>,
+    /// Degraded-S3 chaos: flat extra virtual milliseconds added to
+    /// every task dispatched while set.
+    extra_latency_ms: AtomicU64,
+    /// Completed-task durations per family — the straggler baseline.
+    family_durations: Mutex<HashMap<String, Vec<f64>>>,
+    tasks_speculated: AtomicU64,
+    speculative_wins: AtomicU64,
+    original_wins: AtomicU64,
 }
 
 /// The simulated runtime. Construct with [`SimRuntime::new`]; the same
@@ -348,6 +381,15 @@ impl SimRuntime {
             objects_unrecoverable: AtomicU64::new(0),
             tasks_resubmitted: AtomicU64::new(0),
             tasks_rerouted: AtomicU64::new(0),
+            speculate: opts.speculate.filter(|m| m.is_finite() && *m > 1.0),
+            slow_factor: (0..max_nodes)
+                .map(|_| AtomicU64::new(1.0f64.to_bits()))
+                .collect(),
+            extra_latency_ms: AtomicU64::new(0),
+            family_durations: Mutex::new(HashMap::new()),
+            tasks_speculated: AtomicU64::new(0),
+            speculative_wins: AtomicU64::new(0),
+            original_wins: AtomicU64::new(0),
         });
         Arc::new(SimRuntime { shared })
     }
@@ -431,6 +473,8 @@ impl SimRuntime {
             attempt: 0,
             unresolved,
             recovery: false,
+            speculative: false,
+            race: None,
         };
         st.outstanding += 1;
         st.job_entry(job).outstanding += 1;
@@ -1079,6 +1123,59 @@ impl SimRuntime {
         }
     }
 
+    /// Cumulative speculation counters (all zero unless
+    /// [`RuntimeOptions::speculate`] is set).
+    pub fn speculation_stats(&self) -> SpeculationStats {
+        let sh = &self.shared;
+        SpeculationStats {
+            tasks_speculated: sh.tasks_speculated.load(Ordering::Relaxed),
+            speculative_wins: sh.speculative_wins.load(Ordering::Relaxed),
+            original_wins: sh.original_wins.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Chaos: stretch the virtual duration of every task subsequently
+    /// dispatched on `node` by `factor`. Same validation as the
+    /// threaded [`crate::distfut::Runtime::slow_node`]; `1.0` restores
+    /// full speed, and a fresh incarnation via [`SimRuntime::add_node`]
+    /// always starts at full speed.
+    pub fn slow_node(
+        &self,
+        node: usize,
+        factor: f64,
+    ) -> Result<(), DfError> {
+        let sh = &self.shared;
+        if node >= sh.n_provisioned() || sh.store.is_dead(node) {
+            return Err(DfError::Recovery(format!(
+                "node {node} is not live"
+            )));
+        }
+        if !factor.is_finite() || factor < 1.0 {
+            return Err(DfError::Recovery(format!(
+                "slow factor must be finite and >= 1.0, got {factor}"
+            )));
+        }
+        sh.slow_factor[node].store(factor.to_bits(), Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// The node's current chaos slowdown factor (1.0 = full speed).
+    pub fn node_slow_factor(&self, node: usize) -> f64 {
+        self.shared.slow_factor_of(node)
+    }
+
+    /// Chaos: add `ms` virtual milliseconds to every subsequently
+    /// dispatched task on every node — the degraded-S3 model. `0`
+    /// restores normal latency.
+    pub fn set_extra_latency_ms(&self, ms: u64) {
+        self.shared.extra_latency_ms.store(ms, Ordering::Relaxed);
+    }
+
+    /// Current degraded-S3 extra latency in milliseconds.
+    pub fn extra_latency_ms(&self) -> u64 {
+        self.shared.extra_latency_ms.load(Ordering::Relaxed)
+    }
+
     /// Total tasks executed (attempts) and retried.
     pub fn task_counts(&self) -> (u64, u64) {
         (
@@ -1265,7 +1362,15 @@ impl SimShared {
                 st.next_dispatch_id += 1;
                 let seq = st.next_event_seq;
                 st.next_event_seq += 1;
-                let dur = self.duration_of(dispatch_id);
+                // Chaos stretches the virtual duration: a slowed node
+                // multiplies it, degraded S3 adds a flat per-task cost.
+                // Both are read at dispatch, so an event fired mid-run
+                // affects tasks dispatched after it — deterministic,
+                // since chaos fires from commit hooks inside the loop.
+                let dur = self.duration_of(dispatch_id)
+                    * self.slow_factor_of(node)
+                    + self.extra_latency_ms.load(Ordering::Relaxed) as f64
+                        / 1000.0;
                 st.heap.push(SimEvent {
                     at: st.now + dur,
                     seq,
@@ -1342,6 +1447,8 @@ impl SimShared {
                     outputs: r.task.outputs.clone(),
                     num_returns: r.task.spec.num_returns,
                     max_retries: r.task.spec.max_retries,
+                    speculative: r.task.speculative,
+                    race: r.task.race.clone(),
                 };
             }
         };
@@ -1375,6 +1482,7 @@ impl SimShared {
                         ok: matches!(
                             outcome,
                             StepOutcome::Finished(Ok(()))
+                                | StepOutcome::Skipped
                         ),
                         attempt: d.attempt,
                         recovery: d.recovery,
@@ -1398,8 +1506,25 @@ impl SimShared {
                         st.pending.insert(tid, task);
                     }
                     StepOutcome::Finished(result) => {
+                        let ok = result.is_ok();
                         task.handle.complete(result);
                         self.finish(&mut st, d.job, &task.outputs);
+                        if ok && self.speculate.is_some() {
+                            let elapsed = st.now - d.started;
+                            self.record_and_scan(&mut st, &d.name, elapsed);
+                        }
+                    }
+                    StepOutcome::Skipped => {
+                        // sibling's bytes landed; this copy just closes
+                        // its own accounting (handle completion is a
+                        // first-wins no-op)
+                        task.handle.complete(Ok(()));
+                        self.finish(&mut st, d.job, &task.outputs);
+                    }
+                    StepOutcome::SpecAbandon => {
+                        st.outstanding = st.outstanding.saturating_sub(1);
+                        let j = st.job_entry(d.job);
+                        j.outstanding = j.outstanding.saturating_sub(1);
                     }
                 }
                 self.check_drain(&mut st, d.node)
@@ -1415,11 +1540,26 @@ impl SimShared {
     /// Mirrors the threaded `worker_loop` body, including the exact
     /// failure strings.
     fn execute(&self, d: &Dispatched) -> StepOutcome {
+        // First-commit-wins dedup: a racing copy whose sibling already
+        // committed every shared output skips its body entirely. The
+        // body runs at virtual *completion* time, so the second racer's
+        // pop always observes the first's commits — the sim produces
+        // exactly zero duplicate commits, deterministically.
+        if let Some(race) = &d.race {
+            if !d.outputs.is_empty()
+                && d.outputs.iter().all(|o| self.store.is_ready(*o))
+            {
+                // the skipping copy lost; credit the sibling's flavour
+                self.settle(race, !d.speculative);
+                return StepOutcome::Skipped;
+            }
+        }
         let mut args: Vec<Block> = Vec::with_capacity(d.args.len());
         for a in &d.args {
             match self.store.get(a.id, d.node) {
                 Ok(buf) => args.push(buf),
                 Err(DfError::ObjectLost(_)) => return StepOutcome::ParkLost,
+                Err(_) if d.speculative => return StepOutcome::SpecAbandon,
                 Err(e) => return StepOutcome::Finished(Err(e.to_string())),
             }
         }
@@ -1432,6 +1572,11 @@ impl SimShared {
         match (d.func)(&ctx) {
             Ok(outs) => {
                 if outs.len() != d.num_returns {
+                    if d.speculative {
+                        // opportunistic copy: never poison the shared
+                        // outputs or fail the shared handle
+                        return StepOutcome::SpecAbandon;
+                    }
                     for o in &d.outputs {
                         self.store.fail(*o);
                     }
@@ -1449,9 +1594,15 @@ impl SimShared {
                         return StepOutcome::ParkRecovery;
                     }
                 }
+                if let Some(race) = &d.race {
+                    self.settle(race, d.speculative);
+                }
                 StepOutcome::Finished(Ok(()))
             }
             Err(msg) => {
+                if d.speculative {
+                    return StepOutcome::SpecAbandon;
+                }
                 if d.attempt < d.max_retries {
                     StepOutcome::Retry
                 } else {
@@ -1464,6 +1615,124 @@ impl SimShared {
                     )))
                 }
             }
+        }
+    }
+
+    /// Current chaos slowdown of `node` (1.0 = full speed).
+    fn slow_factor_of(&self, node: usize) -> f64 {
+        self.slow_factor
+            .get(node)
+            .map(|f| f64::from_bits(f.load(Ordering::Relaxed)))
+            .unwrap_or(1.0)
+    }
+
+    /// Decide an original/speculative race exactly once (the sim's copy
+    /// of the scheduler's `settle_race`).
+    fn settle(&self, race: &SpecRace, speculative_won: bool) {
+        if !race.decided.swap(true, Ordering::SeqCst) {
+            if speculative_won {
+                self.speculative_wins.fetch_add(1, Ordering::Relaxed);
+            } else {
+                self.original_wins.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Straggler scan, the sim's mirror of the scheduler's
+    /// `speculate_scan`: record a completed task's duration under its
+    /// family, then compare every still-running family member against
+    /// `multiplier ×` the family's running median (≥ 3 samples) and
+    /// launch one speculative sibling per straggler on another
+    /// available node. Runs under the state lock in phase C; virtual
+    /// elapsed time (`st.now - started`) plays the wall clock's role.
+    fn record_and_scan(&self, st: &mut SimState, name: &str, elapsed: f64) {
+        let Some(multiplier) = self.speculate else { return };
+        let family = family_of(name);
+        let median = {
+            let mut fam = self.family_durations.lock().unwrap();
+            let v = fam.entry(family.to_string()).or_default();
+            v.push(elapsed);
+            if v.len() > 1024 {
+                v.drain(..512);
+            }
+            if v.len() < 3 {
+                return;
+            }
+            let mut sorted = v.clone();
+            sorted.sort_by(f64::total_cmp);
+            sorted[sorted.len() / 2]
+        };
+        let threshold = (multiplier * median).max(1e-6);
+        let span = self.n_provisioned();
+        let mut tids: Vec<u64> = st.running.keys().copied().collect();
+        tids.sort_unstable(); // deterministic launch order
+        let mut launch: Vec<(
+            TaskSpec,
+            Vec<ObjectId>,
+            TaskHandle,
+            Arc<SpecRace>,
+        )> = Vec::new();
+        for tid in tids {
+            let now = st.now;
+            let r = st.running.get_mut(&tid).expect("keys just collected");
+            if r.task.speculative
+                || r.task.race.is_some()
+                || family_of(&r.task.spec.name) != family
+                || now - r.started <= threshold
+            {
+                continue;
+            }
+            // the copy must run on *another* node — that is the point
+            let Some(target) = (1..span)
+                .map(|i| (r.node + i) % span)
+                .find(|&c| c != r.node && self.store.is_available(c))
+            else {
+                continue;
+            };
+            let race = Arc::new(SpecRace::default());
+            r.task.race = Some(race.clone());
+            launch.push((
+                TaskSpec {
+                    name: r.task.spec.name.clone(),
+                    job: r.task.spec.job,
+                    placement: Placement::Prefer(target),
+                    func: r.task.spec.func.clone(),
+                    args: r.task.spec.args.clone(),
+                    num_returns: r.task.spec.num_returns,
+                    max_retries: 0,
+                },
+                r.task.outputs.clone(),
+                r.task.handle.clone(),
+                race,
+            ));
+        }
+        for (spec, outputs, handle, race) in launch {
+            let tid = self.next_task_id.fetch_add(1, Ordering::Relaxed);
+            let job = spec.job;
+            let mut unresolved = 0usize;
+            for a in &spec.args {
+                if !self.store.is_resolved(a.id) {
+                    unresolved += 1;
+                    st.waiting.entry(a.id).or_default().push(tid);
+                }
+            }
+            let task = SimTask {
+                spec,
+                outputs,
+                handle,
+                attempt: 0,
+                unresolved,
+                recovery: false,
+                speculative: true,
+                race: Some(race),
+            };
+            st.outstanding += 1;
+            st.job_entry(job).outstanding += 1;
+            if unresolved == 0 {
+                st.ready.insert(tid);
+            }
+            st.pending.insert(tid, task);
+            self.tasks_speculated.fetch_add(1, Ordering::Relaxed);
         }
     }
 
@@ -1531,6 +1800,9 @@ impl SimShared {
                 ))
             })?;
         self.store.revive_node(node);
+        // a fresh incarnation runs at full speed, as in the threaded
+        // runtime
+        self.slow_factor[node].store(1.0f64.to_bits(), Ordering::Relaxed);
         if node >= span {
             self.provisioned.store(node + 1, Ordering::SeqCst);
         }
@@ -1850,6 +2122,8 @@ impl SimShared {
                     attempt: 0,
                     unresolved,
                     recovery: true,
+                    speculative: false,
+                    race: None,
                 };
                 st.outstanding += 1;
                 st.job_entry(rec.job).outstanding += 1;
@@ -2184,6 +2458,130 @@ mod tests {
         rt.await_job_quiesced(job);
         rt.retire_job(job);
         assert_eq!(rt.store_live_entries(), 0);
+    }
+
+    fn sim_speculating(seed: u64) -> Arc<SimRuntime> {
+        SimRuntime::new(
+            RuntimeOptions {
+                n_nodes: 2,
+                slots_per_node: 1,
+                speculate: Some(2.0),
+                ..RuntimeOptions::default()
+            },
+            seed,
+        )
+    }
+
+    #[test]
+    fn slow_node_stretches_virtual_durations() {
+        // validation mirrors the threaded runtime
+        let rt = sim(2, 21);
+        assert!(rt.slow_node(7, 2.0).is_err(), "out of range");
+        assert!(rt.slow_node(0, 0.5).is_err(), "factor below 1.0");
+        assert!(rt.slow_node(0, f64::NAN).is_err(), "non-finite factor");
+
+        // same seed, same submission: the slowed run's first task takes
+        // exactly 4x the baseline's virtual duration
+        let dur_of_first = |slow: Option<f64>| -> f64 {
+            let rt = sim(1, 33);
+            if let Some(f) = slow {
+                rt.slow_node(0, f).unwrap();
+            }
+            let (_, h) = rt.submit(echo_spec("t", vec![1; 16]));
+            h.wait().unwrap();
+            let ev = &rt.task_events()[0];
+            ev.end - ev.start
+        };
+        let base = dur_of_first(None);
+        let slowed = dur_of_first(Some(4.0));
+        assert!(
+            (slowed - 4.0 * base).abs() < 1e-12,
+            "expected exactly 4x: base {base}, slowed {slowed}"
+        );
+    }
+
+    #[test]
+    fn extra_latency_stretches_virtual_durations() {
+        let dur_of_first = |extra_ms: u64| -> f64 {
+            let rt = sim(1, 33);
+            rt.set_extra_latency_ms(extra_ms);
+            assert_eq!(rt.extra_latency_ms(), extra_ms);
+            let (_, h) = rt.submit(echo_spec("t", vec![1; 16]));
+            h.wait().unwrap();
+            let ev = &rt.task_events()[0];
+            ev.end - ev.start
+        };
+        let base = dur_of_first(0);
+        let lagged = dur_of_first(50);
+        assert!(
+            (lagged - base - 0.050).abs() < 1e-12,
+            "expected +50ms flat: base {base}, lagged {lagged}"
+        );
+    }
+
+    #[test]
+    fn speculation_races_straggler_with_zero_duplicate_commits() {
+        let rt = sim_speculating(42);
+        rt.slow_node(0, 50.0).unwrap();
+        let mut outs = Vec::new();
+        let mut handles = Vec::new();
+        for i in 0..10u8 {
+            let (o, h) = rt.submit(echo_spec("t", vec![i; 32]));
+            outs.push(o);
+            handles.push(h);
+        }
+        for h in &handles {
+            h.wait().unwrap();
+        }
+        let stats = rt.speculation_stats();
+        assert!(
+            stats.tasks_speculated >= 1,
+            "the slowed node's task must get a sibling: {stats:?}"
+        );
+        assert!(
+            stats.speculative_wins >= 1,
+            "the sibling on the fast node must win: {stats:?}"
+        );
+        assert_eq!(
+            stats.speculative_wins + stats.original_wins,
+            stats.tasks_speculated,
+            "every race settles exactly once by quiescence: {stats:?}"
+        );
+        // first-commit-wins dedup: the losing copy body-skips, so the
+        // sim commits every output exactly once
+        assert_eq!(rt.store_stats().duplicate_commits, 0);
+        for (i, o) in outs.iter().enumerate() {
+            assert_eq!(
+                rt.get(&o[0]).unwrap().as_ref(),
+                &vec![i as u8; 32],
+                "output bytes survive the race"
+            );
+        }
+    }
+
+    #[test]
+    fn speculation_under_slow_node_is_deterministic() {
+        let run = |seed: u64| {
+            let rt = sim_speculating(seed);
+            rt.slow_node(0, 50.0).unwrap();
+            let mut handles = Vec::new();
+            for i in 0..10u8 {
+                let (_, h) = rt.submit(echo_spec("t", vec![i; 32]));
+                handles.push(h);
+            }
+            for h in &handles {
+                h.wait().unwrap();
+            }
+            let events: Vec<(String, usize, u64, u64)> = rt
+                .task_events()
+                .into_iter()
+                .map(|e| {
+                    (e.name, e.node, e.start.to_bits(), e.end.to_bits())
+                })
+                .collect();
+            (events, rt.speculation_stats())
+        };
+        assert_eq!(run(7), run(7), "same seed, same race outcomes");
     }
 
     #[test]

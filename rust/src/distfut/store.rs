@@ -180,6 +180,11 @@ pub struct StoreCounters {
     /// Objects migrated off draining nodes ([`Store::evacuate_node`]).
     pub drain_migrations: AtomicU64,
     pub drain_migrated_bytes: AtomicU64,
+    /// Commits that arrived for an already-committed object and were
+    /// discarded (first-commit-wins). Task retries and speculative
+    /// sibling attempts both land here; the skew/straggler tests assert
+    /// the dedup path, not just the output bytes.
+    pub duplicate_commits: AtomicU64,
 }
 
 /// Snapshot of store statistics.
@@ -206,6 +211,9 @@ pub struct StoreStats {
     /// decommissions — drained data is moved, never lost.
     pub drain_migrations: u64,
     pub drain_migrated_bytes: u64,
+    /// Commits discarded because the object was already committed
+    /// (first-commit-wins dedup of retries and speculative attempts).
+    pub duplicate_commits: u64,
 }
 
 /// The whole-cluster object store (shards are per-node byte budgets, but
@@ -427,8 +435,14 @@ impl Store {
             match entry.slot {
                 // first production, or a recovery recommit of a lost object
                 Slot::Pending | Slot::Lost => {}
-                // Retried task re-committing: keep the first copy.
-                Slot::Memory(_) | Slot::Spilled(..) => return true,
+                // Retried (or speculative sibling) task re-committing:
+                // keep the first copy — first-commit-wins.
+                Slot::Memory(_) | Slot::Spilled(..) => {
+                    self.counters
+                        .duplicate_commits
+                        .fetch_add(1, Ordering::Relaxed);
+                    return true;
+                }
                 Slot::Released | Slot::Unrecoverable(_) => return true,
             }
             entry.slot = Slot::Memory(data);
@@ -1041,6 +1055,10 @@ impl Store {
                 .counters
                 .drain_migrated_bytes
                 .load(Ordering::Relaxed),
+            duplicate_commits: self
+                .counters
+                .duplicate_commits
+                .load(Ordering::Relaxed),
         }
     }
 }
@@ -1168,8 +1186,10 @@ mod tests {
         let s = test_store(1, u64::MAX);
         let r = s.declare(0, JobId::ROOT);
         s.commit(r.id, 0, vec![1]);
+        assert_eq!(s.stats().duplicate_commits, 0);
         s.commit(r.id, 0, vec![2, 2]); // retry duplicate
         assert_eq!(*s.get(r.id, 0).unwrap(), vec![1]);
+        assert_eq!(s.stats().duplicate_commits, 1);
     }
 
     #[test]

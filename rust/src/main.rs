@@ -27,6 +27,7 @@ use exoshuffle::shuffle::{list_strategies, strategy_by_name, ShuffleJob};
 use exoshuffle::sim::{
     estimate_autoscale, estimate_multi_job, simulate, SimConfig, SimStrategy,
 };
+use exoshuffle::sortlib::Skew;
 use exoshuffle::util::rng::stream_at;
 use exoshuffle::util::{human_bytes, human_secs};
 
@@ -50,6 +51,7 @@ const BOOLEAN_FLAGS: &[&str] = &[
     "events",
     "autoscale",
     "resume",
+    "speculate",
 ];
 
 /// Parse `--key value` pairs after the subcommand. A flag listed in
@@ -113,15 +115,31 @@ COMMANDS:
   sort   run a scaled shuffle job end-to-end on the in-process cluster
            --size 256MiB       dataset size (default 64MiB)
            --workers 4         worker nodes (default 4)
+           --reducers R        output partitions (must be a multiple of
+                               --workers; default chosen by scaling)
            --strategy NAME     two-stage-merge | simple | streaming
            --list-strategies   print registered strategies and exit
            --backend xla|native (default: xla in pjrt builds, else native)
            --artifacts DIR     artifact dir (default ./artifacts)
            --config FILE       TOML config (overrides --size/--workers)
            --no-backpressure   disable merge backpressure (ablation)
+           --skew zipf:THETA   generate a Zipf-skewed key distribution
+                               (or `uniform`, the default / Indy input)
+           --sample-fraction F pre-map sampling: read F of the input
+                               shards and install sampled reducer cuts
+                               (0 disables; adaptive range partitioning)
+           --speculate [MULT]  re-execute stragglers slower than MULT x
+                               the running family median on another
+                               node (bare flag: MULT = 2.0)
            --chaos-kill N@C    kill node N after the C-th commit of the
                                sort (lineage recovery demo; repeatable
                                via comma: 1@10,2@40)
+           --chaos-slow N@C:F  slow node N to F x task duration after
+                               the C-th commit (straggler injection;
+                               comma-repeatable)
+           --chaos-s3-latency MS@C
+                               add MS ms to every task after the C-th
+                               commit (degraded S3; comma-repeatable)
            --scale-event N@C   scale the fleet to N available nodes
                                after the C-th commit (deterministic
                                elastic event; comma-repeatable)
@@ -160,7 +178,9 @@ COMMANDS:
            --seed-end 8        last seed (exclusive)
            --strategies all    comma list or `all`
                                (two-stage-merge,simple,streaming)
-           --chaos all         comma list or `all` (none,kill,drain)
+           --chaos all         comma list or `all`
+                               (none,kill,drain,slow — `slow` cells run
+                               with speculation enabled)
            --workers 3         fleet size per run (>= 2)
            --size 2MiB         dataset size per run
            --out FILE          append JSONL results here (else stdout)
@@ -217,6 +237,89 @@ fn parse_chaos_kills(value: &str) -> Result<ChaosPlan, String> {
     Ok(plan)
 }
 
+/// Parse `--chaos-slow` values onto `plan`: `NODE@COMMITS:FACTOR`,
+/// comma-separated (e.g. `1@10:8,2@40:4` — slow node 1 to 8x task
+/// duration after commit 10, node 2 to 4x after commit 40).
+fn parse_chaos_slow(
+    value: &str,
+    mut plan: ChaosPlan,
+) -> Result<ChaosPlan, String> {
+    for part in value.split(',') {
+        let (node, rest) = part.split_once('@').ok_or_else(|| {
+            format!("--chaos-slow wants NODE@COMMITS:FACTOR, got '{part}'")
+        })?;
+        let (commits, factor) = rest.split_once(':').ok_or_else(|| {
+            format!("--chaos-slow wants NODE@COMMITS:FACTOR, got '{part}'")
+        })?;
+        let node: usize = node
+            .trim()
+            .parse()
+            .map_err(|_| format!("bad node '{node}' in --chaos-slow"))?;
+        let commits: u64 = commits.trim().parse().map_err(|_| {
+            format!("bad commit count '{commits}' in --chaos-slow")
+        })?;
+        let factor: f64 = factor
+            .trim()
+            .parse()
+            .map_err(|_| format!("bad factor '{factor}' in --chaos-slow"))?;
+        if !factor.is_finite() || factor < 1.0 {
+            return Err(format!(
+                "--chaos-slow factor must be >= 1.0, got '{factor}'"
+            ));
+        }
+        plan = plan.slow_node(node, factor, commits);
+    }
+    Ok(plan)
+}
+
+/// Parse `--chaos-s3-latency` values onto `plan`: `MS@COMMITS`, comma-
+/// separated (e.g. `50@10` — +50ms on every task after commit 10).
+fn parse_chaos_s3_latency(
+    value: &str,
+    mut plan: ChaosPlan,
+) -> Result<ChaosPlan, String> {
+    for part in value.split(',') {
+        let (ms, commits) = part.split_once('@').ok_or_else(|| {
+            format!("--chaos-s3-latency wants MS@COMMITS, got '{part}'")
+        })?;
+        let ms: u64 = ms.trim().parse().map_err(|_| {
+            format!("bad latency '{ms}' in --chaos-s3-latency")
+        })?;
+        let commits: u64 = commits.trim().parse().map_err(|_| {
+            format!("bad commit count '{commits}' in --chaos-s3-latency")
+        })?;
+        plan = plan.s3_latency(ms, commits);
+    }
+    Ok(plan)
+}
+
+/// Parse `--skew` values: `uniform` or `zipf:THETA` (0 < theta).
+fn parse_skew(value: &str) -> Result<Skew, String> {
+    if value.trim() == "uniform" {
+        return Ok(Skew::Uniform);
+    }
+    let theta = value
+        .trim()
+        .strip_prefix("zipf:")
+        .ok_or_else(|| {
+            format!("--skew wants 'uniform' or 'zipf:THETA', got '{value}'")
+        })?
+        .parse::<f64>()
+        .map_err(|_| format!("bad theta in --skew '{value}'"))?;
+    Ok(Skew::Zipf(theta))
+}
+
+/// Parse `--speculate`: bare (`true`) means the default 2.0 multiplier,
+/// otherwise the value is the straggler multiplier itself.
+fn parse_speculate(value: &str) -> Result<f64, String> {
+    if value == "true" {
+        return Ok(2.0);
+    }
+    value
+        .parse::<f64>()
+        .map_err(|_| format!("bad multiplier in --speculate '{value}'"))
+}
+
 /// Parse `--scale-event` values onto `plan`: `NODES@COMMITS`, comma-
 /// separated (e.g. `6@100,2@400` — grow to 6 available nodes after
 /// commit 100, shrink to 2 after commit 400).
@@ -266,7 +369,7 @@ fn cmd_sort(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         print_strategies(false);
         return Ok(());
     }
-    let spec: JobSpec = if let Some(path) = flags.get("config") {
+    let mut spec: JobSpec = if let Some(path) = flags.get("config") {
         let text = std::fs::read_to_string(path)?;
         Config::parse(&text)
             .and_then(|c| c.to_job_spec())
@@ -284,11 +387,39 @@ fn cmd_sort(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             .transpose()?
             .unwrap_or(4);
         let mut s = JobSpec::scaled(size, workers);
+        if let Some(r) = flags.get("reducers") {
+            let r: usize = r
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad --reducers '{r}'"))?;
+            // validated here, not deep in worker_cuts()'s assert: an
+            // indivisible count used to panic mid-run
+            if r == 0 || r % workers != 0 {
+                return Err(anyhow::anyhow!(
+                    "--reducers ({r}) must be a positive multiple of \
+                     --workers ({workers})"
+                ));
+            }
+            s.n_output_partitions = r;
+        }
         if flags.get("no-backpressure").map(|v| v == "true") == Some(true) {
             s.backpressure = false;
         }
         s
     };
+    if let Some(v) = flags.get("skew") {
+        spec.skew = parse_skew(v).map_err(|e| anyhow::anyhow!(e))?;
+    }
+    if let Some(v) = flags.get("sample-fraction") {
+        spec.sample_fraction = v
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad --sample-fraction '{v}'"))?;
+    }
+    if let Some(v) = flags.get("speculate") {
+        spec.speculate =
+            Some(parse_speculate(v).map_err(|e| anyhow::anyhow!(e))?);
+    }
+    spec.check()
+        .map_err(|e| anyhow::anyhow!("invalid job spec: {e}"))?;
     let artifacts = flags
         .get("artifacts")
         .map(PathBuf::from)
@@ -329,6 +460,13 @@ fn cmd_sort(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         plan = parse_scale_events(scales, plan)
             .map_err(|e| anyhow::anyhow!(e))?;
     }
+    if let Some(slows) = flags.get("chaos-slow") {
+        plan = parse_chaos_slow(slows, plan).map_err(|e| anyhow::anyhow!(e))?;
+    }
+    if let Some(lat) = flags.get("chaos-s3-latency") {
+        plan = parse_chaos_s3_latency(lat, plan)
+            .map_err(|e| anyhow::anyhow!(e))?;
+    }
     let scale_ceiling = plan
         .triggers
         .iter()
@@ -355,6 +493,12 @@ fn cmd_sort(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         job.run()?
     };
     println!("generate:     {:>8.2}s", report.gen_secs);
+    if report.sampled_keys > 0 {
+        println!(
+            "sample:       {:>8.2}s  ({} keys -> sampled reducer cuts)",
+            report.sample_secs, report.sampled_keys
+        );
+    }
     for stage in &report.stages {
         println!("{:<13} {:>8.2}s", format!("{}:", stage.name), stage.secs);
     }
@@ -392,6 +536,16 @@ fn cmd_sort(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             report.recovery.objects_unrecoverable,
         );
     }
+    if report.speculation.tasks_speculated > 0 {
+        println!(
+            "speculation: {} straggler(s) raced | wins: {} speculative, \
+             {} original | {} duplicate commits discarded",
+            report.speculation.tasks_speculated,
+            report.speculation.speculative_wins,
+            report.speculation.original_wins,
+            report.store.duplicate_commits,
+        );
+    }
     if report.node_timeline.len() > 1 {
         let end = report
             .events
@@ -412,6 +566,19 @@ fn cmd_sort(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         report.validation.summary.records,
         report.validation.summary.checksum,
     );
+    let hist = &report.validation.partition_records;
+    if !hist.is_empty() {
+        let total: u64 = hist.iter().sum();
+        let max = hist.iter().copied().max().unwrap_or(0);
+        println!(
+            "partitions: {} ranges, skew factor {:.2} \
+             (max {} records, mean {:.0})",
+            hist.len(),
+            report.validation.skew_factor(),
+            max,
+            total as f64 / hist.len() as f64,
+        );
+    }
     if flags.get("events").map(|v| v == "true") == Some(true) {
         for family in ["gen", "map", "merge", "reduce", "validate"] {
             let durs: Vec<f64> = report
@@ -920,6 +1087,17 @@ fn vopr_chaos_plan(
             let after = 3 + stream_at(seed, 102) % 18;
             Some(ChaosPlan::new().drain_node(victim, after))
         }
+        // one seeded slow-node (straggler injection, raced by
+        // speculation) plus a degraded-S3 tax; streams 103/104 keep the
+        // draws disjoint from the kill and drain modes
+        "slow" => {
+            let victim = (stream_at(seed, 103) as usize) % workers;
+            let after = 3 + stream_at(seed, 104) % 18;
+            Some(ChaosPlan::new().slow_node(victim, 8.0, after).s3_latency(
+                5,
+                after + 2,
+            ))
+        }
         other => unreachable!("chaos mode '{other}' validated at parse"),
     }
 }
@@ -976,6 +1154,8 @@ struct VoprOutcome {
     tasks_executed: u64,
     tasks_retried: u64,
     tasks_resubmitted: u64,
+    /// Stragglers that got a speculative sibling (slow-mode cells).
+    tasks_speculated: u64,
 }
 
 /// Execute one (seed, strategy, chaos) cell on the simulation backend
@@ -990,6 +1170,14 @@ fn vopr_run_one(
     seed: u64,
     reference: Option<(u64, u64)>,
 ) -> VoprOutcome {
+    // `slow` cells run with speculation armed: straggler re-execution is
+    // the mechanism under test, and the unfaulted reference (mode
+    // "none", speculation off) must still match byte-for-byte.
+    let mut spec = spec.clone();
+    if mode == "slow" {
+        spec.speculate = Some(2.0);
+    }
+    let spec = &spec;
     let mut cfg = ServiceConfig::for_spec(spec);
     cfg.sim_seed = Some(seed);
     let service = JobService::new(cfg);
@@ -1003,6 +1191,8 @@ fn vopr_run_one(
     let result = service.submit(job).and_then(|h| h.wait());
     let rt = service.runtime();
     let recovery = rt.recovery_stats();
+    let speculation = rt.speculation_stats();
+    let duplicate_commits = rt.store_stats().duplicate_commits;
     let (tasks_executed, tasks_retried) = rt.task_counts();
     let leaked = rt.store_live_entries();
     let virtual_secs = rt.now();
@@ -1042,6 +1232,15 @@ fn vopr_run_one(
             "{leaked} store entries leaked after job retirement"
         ));
     }
+    // on the deterministic backend a speculative race must be bloodless:
+    // the losing copy observes the winner's commits and skips its body,
+    // so first-commit-wins dedup never actually fires
+    if mode == "slow" && duplicate_commits > 0 {
+        errors.push(format!(
+            "{duplicate_commits} duplicate output commits under \
+             speculation (sim races must resolve by body-skip)"
+        ));
+    }
     service.shutdown();
     VoprOutcome {
         errors,
@@ -1051,6 +1250,7 @@ fn vopr_run_one(
         tasks_executed,
         tasks_retried,
         tasks_resubmitted: recovery.tasks_resubmitted,
+        tasks_speculated: speculation.tasks_speculated,
     }
 }
 
@@ -1082,7 +1282,7 @@ fn cmd_vopr(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     if workers < 2 {
         return Err(anyhow::anyhow!(
             "--workers must be >= 2: kill/drain chaos needs a surviving \
-             node"
+             node and slow chaos a node to speculate on"
         ));
     }
     let size = flags
@@ -1106,14 +1306,17 @@ fn cmd_vopr(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     }
     let chaos_modes: Vec<String> = match flags.get("chaos").map(|s| s.as_str()).unwrap_or("all")
     {
-        "all" => vec!["none".to_string(), "kill".to_string(), "drain".to_string()],
+        "all" => ["none", "kill", "drain", "slow"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
         csv => csv.split(',').map(|s| s.trim().to_string()).collect(),
     };
     for mode in &chaos_modes {
-        if !["none", "kill", "drain"].contains(&mode.as_str()) {
+        if !["none", "kill", "drain", "slow"].contains(&mode.as_str()) {
             return Err(anyhow::anyhow!(
                 "unknown chaos mode '{mode}' in --chaos \
-                 (none, kill, drain, or all)"
+                 (none, kill, drain, slow, or all)"
             ));
         }
     }
@@ -1206,13 +1409,14 @@ fn cmd_vopr(flags: &HashMap<String, String>) -> anyhow::Result<()> {
                      \"ok\":{ok},\"checksum\":\"{:#x}\",\
                      \"records\":{},\"virtual_secs\":{:.6},\
                      \"tasks\":{},\"retries\":{},\"resubmitted\":{},\
-                     \"error\":{error_json}}}",
+                     \"speculated\":{},\"error\":{error_json}}}",
                     r.checksum,
                     r.records,
                     r.virtual_secs,
                     r.tasks_executed,
                     r.tasks_retried,
                     r.tasks_resubmitted,
+                    r.tasks_speculated,
                 );
                 match &mut out_file {
                     Some(f) => writeln!(f, "{line}")?,
@@ -1346,6 +1550,93 @@ mod tests {
         let d = vopr_chaos_plan("drain", 7, 3).unwrap();
         assert!(matches!(d.triggers[0].event, ChaosEvent::DrainNode(n) if n < 3));
         assert!(d.triggers[0].after_commits >= 3);
+        let s = vopr_chaos_plan("slow", 7, 3).unwrap();
+        let t = vopr_chaos_plan("slow", 7, 3).unwrap();
+        assert_eq!(s.triggers.len(), 2);
+        assert!(
+            matches!(s.triggers[0].event, ChaosEvent::SlowNode(n, f) if n < 3 && f >= 1.0)
+        );
+        assert!(s.triggers[0].after_commits >= 3);
+        assert!(matches!(s.triggers[1].event, ChaosEvent::S3Latency(_)));
+        assert_eq!(s.triggers[0].after_commits, t.triggers[0].after_commits);
+        assert_eq!(s.triggers[0].event, t.triggers[0].event);
+    }
+
+    #[test]
+    fn chaos_slow_parses_node_commits_factor() {
+        let plan = parse_chaos_slow("1@10:8", ChaosPlan::new()).unwrap();
+        assert_eq!(plan.triggers.len(), 1);
+        assert!(matches!(
+            plan.triggers[0],
+            ChaosTrigger {
+                after_commits: 10,
+                event: ChaosEvent::SlowNode(1, f),
+            } if f == 8.0
+        ));
+        let plan =
+            parse_chaos_slow("1@10:8, 2@40:1.5", ChaosPlan::new()).unwrap();
+        assert_eq!(plan.triggers.len(), 2);
+        assert!(matches!(
+            plan.triggers[1].event,
+            ChaosEvent::SlowNode(2, f) if f == 1.5
+        ));
+    }
+
+    #[test]
+    fn chaos_slow_rejects_malformed_input_with_clear_errors() {
+        for bad in
+            ["", "1", "1@10", "@10:8", "1@:8", "1@10:", "x@10:8", "1@x:8",
+             "1@10:x", "1@10:0.5", "1@10:nan", "1@10:8,,2@40:4"]
+        {
+            let err = parse_chaos_slow(bad, ChaosPlan::new()).unwrap_err();
+            assert!(
+                err.contains("--chaos-slow"),
+                "'{bad}' must name the flag in its error, got: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn chaos_s3_latency_parses_and_rejects() {
+        let plan =
+            parse_chaos_s3_latency("50@10, 20@40", ChaosPlan::new()).unwrap();
+        assert_eq!(plan.triggers.len(), 2);
+        assert!(matches!(
+            plan.triggers[0],
+            ChaosTrigger {
+                after_commits: 10,
+                event: ChaosEvent::S3Latency(50),
+            }
+        ));
+        for bad in ["", "50", "@10", "50@", "x@10", "50@x", "50@10@2"] {
+            let err =
+                parse_chaos_s3_latency(bad, ChaosPlan::new()).unwrap_err();
+            assert!(
+                err.contains("--chaos-s3-latency"),
+                "'{bad}' must name the flag in its error, got: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn skew_flag_parses_uniform_and_zipf() {
+        assert_eq!(parse_skew("uniform").unwrap(), Skew::Uniform);
+        assert!(matches!(parse_skew("zipf:1.2").unwrap(), Skew::Zipf(t) if t == 1.2));
+        for bad in ["", "zipf", "zipf:", "zipf:x", "gauss:1.0"] {
+            let err = parse_skew(bad).unwrap_err();
+            assert!(
+                err.contains("--skew"),
+                "'{bad}' must name the flag in its error, got: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn speculate_flag_defaults_bare_to_two() {
+        assert_eq!(parse_speculate("true").unwrap(), 2.0);
+        assert_eq!(parse_speculate("3.5").unwrap(), 3.5);
+        let err = parse_speculate("fast").unwrap_err();
+        assert!(err.contains("--speculate"), "{err}");
     }
 
     #[test]

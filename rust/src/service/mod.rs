@@ -88,6 +88,12 @@ pub struct ServiceConfig {
     /// (seed, config). This is what the `vopr` fuzzer drives. `None`
     /// (the default): the threaded wall-clock backend.
     pub sim_seed: Option<u64>,
+    /// Speculative re-execution: `Some(m)` re-runs any task whose
+    /// elapsed time exceeds `m ×` the running median of its family's
+    /// completed durations on another node, first-commit-wins (see
+    /// [`RuntimeOptions::speculate`]). `None` (the default) disables
+    /// the straggler scanner.
+    pub speculate: Option<f64>,
 }
 
 impl Default for ServiceConfig {
@@ -100,6 +106,7 @@ impl Default for ServiceConfig {
             admission_watermark: 1.0,
             spill_root: std::env::temp_dir(),
             sim_seed: None,
+            speculate: None,
         }
     }
 }
@@ -112,6 +119,7 @@ impl ServiceConfig {
             n_nodes: spec.n_workers(),
             slots_per_node: spec.cluster.task_parallelism().max(1),
             store_capacity_per_node: spec.store_capacity_per_node,
+            speculate: spec.speculate,
             ..ServiceConfig::default()
         }
     }
@@ -228,6 +236,7 @@ impl JobService {
             store_capacity_per_node: cfg.store_capacity_per_node,
             spill_root: cfg.spill_root,
             admission_watermark: cfg.admission_watermark,
+            speculate: cfg.speculate,
             ..RuntimeOptions::default()
         };
         let rt = match cfg.sim_seed {

@@ -347,26 +347,43 @@ impl ShuffleJob {
 /// count vs runtime nodes) happens once, at [`JobService::submit`] — the
 /// single entry point both paths funnel through.
 pub(crate) fn execute_on(
-    job: ShuffleJob,
+    mut job: ShuffleJob,
     rt: &RuntimeHandle,
     id: JobId,
 ) -> anyhow::Result<JobReport> {
-    let spec = &job.spec;
     let name = job
         .name
         .clone()
         .unwrap_or_else(|| id.to_string());
     let s3 = match &job.s3 {
         Some(s3) => s3.clone(),
-        None => S3::with_buckets(spec.s3_buckets),
+        None => S3::with_buckets(job.spec.s3_buckets),
     };
 
     // --- input generation (§3.2), not part of the timed sort ---
     let clock = rt.clock();
     let t0 = clock.now_secs();
     let (input_records, input_checksum) =
-        generate::generate_input(spec, &s3, rt, id)?;
+        generate::generate_input(&job.spec, &s3, rt, id)?;
     let gen_secs = clock.now_secs() - t0;
+
+    // --- key sampling (adaptive range partitioning), untimed like
+    // generation: choose reducer cuts from the sampled key CDF and
+    // install them on the spec before the strategies read their cuts.
+    // A spec that already carries sampled cuts is left alone.
+    let mut sample_secs = 0.0;
+    let mut sampled_keys = 0usize;
+    if job.spec.sample_fraction > 0.0
+        && job.spec.cuts == crate::coordinator::plan::Cuts::Uniform
+    {
+        let t0 = clock.now_secs();
+        let (cuts, n_keys) = generate::sample_cuts(&job.spec, &s3, rt, id)?;
+        job.spec.cuts =
+            crate::coordinator::plan::Cuts::Sampled(Arc::new(cuts));
+        sampled_keys = n_keys;
+        sample_secs = clock.now_secs() - t0;
+    }
+    let spec = &job.spec;
     s3.reset_counters(); // Table 2 counts requests of the sort itself
 
     job.strategy.warmup(spec, &job.backend)?;
@@ -427,6 +444,8 @@ pub(crate) fn execute_on(
         job: id,
         strategy: job.strategy.name().to_string(),
         gen_secs,
+        sample_secs,
+        sampled_keys,
         stages: outcome.stages,
         total_secs,
         validation,
@@ -442,6 +461,7 @@ pub(crate) fn execute_on(
         peak_unmerged_blocks: outcome.peak_unmerged_blocks,
         node_timeline: rt.node_count_timeline(),
         recovery: rt.recovery_stats(),
+        speculation: rt.speculation_stats(),
         chaos: harness.map(|h| h.log()).unwrap_or_default(),
     })
 }

@@ -8,7 +8,7 @@
 
 use crate::coordinator::plan::JobSpec;
 use crate::distfut::chaos::ChaosRecord;
-use crate::distfut::{JobId, RecoveryStats};
+use crate::distfut::{JobId, RecoveryStats, SpeculationStats};
 use crate::metrics::TaskEvent;
 use crate::s3sim::CounterSnapshot;
 use crate::sortlib::valsort::GlobalSummary;
@@ -37,6 +37,11 @@ pub struct JobReport {
     pub strategy: String,
     /// Input generation wall time (untimed in the benchmark, reported).
     pub gen_secs: f64,
+    /// Key-sampling wall time (adaptive range partitioning's pre-map
+    /// stage; untimed like generation, 0.0 when sampling is off).
+    pub sample_secs: f64,
+    /// Keys pooled by the sampling stage (0 when sampling is off).
+    pub sampled_keys: usize,
     /// Timed stages in execution order, named by the strategy.
     pub stages: Vec<StageTiming>,
     /// Total job completion time (Table 1, column 3): sum of the stages.
@@ -67,6 +72,10 @@ pub struct JobReport {
     /// Node-failure recovery counters (§2.5): kills, lost objects,
     /// lineage resubmissions. All zero on an undisturbed run.
     pub recovery: RecoveryStats,
+    /// Speculative re-execution counters: straggler attempts launched
+    /// and which copy won. All zero unless the job enabled speculation.
+    /// Runtime-wide on a shared service, like `recovery`.
+    pub speculation: SpeculationStats,
     /// Fired chaos events (empty unless the job armed a
     /// [`crate::distfut::chaos::ChaosPlan`]).
     pub chaos: Vec<ChaosRecord>,
@@ -83,6 +92,30 @@ pub struct ValidationReport {
     /// True iff sorted, globally ordered, record counts equal and
     /// checksums equal.
     pub valid: bool,
+    /// Records per output partition, in reducer order — the partition
+    /// size histogram behind the skew diagnostic. Under uniform cuts on
+    /// a skewed (or duplicate-prefix) input this degenerates: a few
+    /// partitions hold almost everything and the skew factor explodes.
+    pub partition_records: Vec<u64>,
+}
+
+impl ValidationReport {
+    /// Partition-size skew factor: max/mean over `partition_records`.
+    /// 1.0 is perfectly balanced; a run whose keys collapsed into one
+    /// range reports ≈ `n_output_partitions`. 0.0 when there are no
+    /// partitions or no records (degenerate, but not skewed).
+    pub fn skew_factor(&self) -> f64 {
+        let n = self.partition_records.len();
+        if n == 0 {
+            return 0.0;
+        }
+        let total: u64 = self.partition_records.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let max = *self.partition_records.iter().max().unwrap() as f64;
+        max / (total as f64 / n as f64)
+    }
 }
 
 impl JobReport {
@@ -169,6 +202,8 @@ mod tests {
             job: JobId::ROOT,
             strategy: "test".into(),
             gen_secs: 0.0,
+            sample_secs: 0.0,
+            sampled_keys: 0,
             stages: stages
                 .into_iter()
                 .map(|(name, secs)| StageTiming {
@@ -189,6 +224,7 @@ mod tests {
                 input_records: 0,
                 input_checksum: 0,
                 valid: false,
+                partition_records: vec![],
             },
             s3: CounterSnapshot::default(),
             store: crate::distfut::StoreStats::default(),
@@ -200,6 +236,7 @@ mod tests {
             peak_unmerged_blocks: 0,
             node_timeline: vec![],
             recovery: RecoveryStats::default(),
+            speculation: SpeculationStats::default(),
             chaos: vec![],
         }
     }
@@ -222,6 +259,19 @@ mod tests {
         ]);
         assert!((r.map_shuffle_secs() - 3.0).abs() < 1e-12);
         assert!((r.reduce_secs() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn skew_factor_from_partition_histogram() {
+        let mut r = report_with_stages(vec![("reduce", 1.0)]);
+        assert_eq!(r.validation.skew_factor(), 0.0, "no partitions");
+        r.validation.partition_records = vec![100, 100, 100, 100];
+        assert!((r.validation.skew_factor() - 1.0).abs() < 1e-12);
+        // all records in one of four ranges → factor = 4 (degenerate)
+        r.validation.partition_records = vec![400, 0, 0, 0];
+        assert!((r.validation.skew_factor() - 4.0).abs() < 1e-12);
+        r.validation.partition_records = vec![0, 0];
+        assert_eq!(r.validation.skew_factor(), 0.0, "empty output");
     }
 
     #[test]

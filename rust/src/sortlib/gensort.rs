@@ -21,14 +21,54 @@ pub struct GenSpec {
     pub records: u64,
 }
 
+/// Key distribution of the generated input. The benchmark's Indy
+/// category is uniform; `Zipf` applies a monotone power-law transform to
+/// the uniform key stream so low keys are heavily over-represented —
+/// the skewed workload adaptive partitioning (`--sample-fraction`) and
+/// the per-partition skew diagnostics exist for.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum Skew {
+    /// Uniform random keys (the exact byte stream of [`write_record`]:
+    /// no transform is applied, not even an identity `powf`).
+    #[default]
+    Uniform,
+    /// Zipf-like concentration with parameter `theta > 0`: a uniform
+    /// draw `u` becomes `(u/2^64)^(1+theta) * 2^64`. Larger `theta`
+    /// concentrates more key mass near zero; high values collapse many
+    /// records onto equal 8-byte prefixes, exercising full-key
+    /// tie-breaking and the skew-factor diagnostic.
+    Zipf(f64),
+}
+
+/// Apply a [`Skew`] transform to one uniform 64-bit key draw.
+/// `Skew::Uniform` is a bit-exact pass-through.
+#[inline]
+pub fn skew_key(u: u64, skew: Skew) -> u64 {
+    match skew {
+        Skew::Uniform => u,
+        Skew::Zipf(theta) => {
+            let x = u as f64 / u64::MAX as f64;
+            (x.powf(1.0 + theta) * u64::MAX as f64) as u64
+        }
+    }
+}
+
 /// Write the 100 bytes of global record `i` into `out`.
 ///
 /// Layout: 10 random key bytes; 8-byte big-endian record number;
 /// 82 bytes of printable filler derived from the record number (so
 /// payload corruption is detectable by checksum).
 pub fn write_record(seed: u64, i: u64, out: &mut [u8]) {
+    write_record_with(seed, i, Skew::Uniform, out);
+}
+
+/// [`write_record`] with a key-distribution transform: the 8-byte key
+/// prefix is `skew_key(r0, skew)` instead of the raw uniform draw. The
+/// payload (record number, filler) is unchanged, so checksums remain
+/// computed from the actual bytes and validation works identically.
+pub fn write_record_with(seed: u64, i: u64, skew: Skew, out: &mut [u8]) {
     debug_assert_eq!(out.len(), RECORD_SIZE);
-    let r0 = stream_at(seed, i.wrapping_mul(2));
+    let r0 = skew_key(stream_at(seed, i.wrapping_mul(2)), skew);
     let r1 = stream_at(seed, i.wrapping_mul(2) + 1);
     out[..8].copy_from_slice(&r0.to_be_bytes());
     out[8..10].copy_from_slice(&r1.to_be_bytes()[..2]);
@@ -46,9 +86,14 @@ pub fn write_record(seed: u64, i: u64, out: &mut [u8]) {
 
 /// Generate a whole partition as a contiguous record buffer.
 pub fn generate_partition(spec: &GenSpec) -> Vec<u8> {
+    generate_partition_with(spec, Skew::Uniform)
+}
+
+/// [`generate_partition`] under a key-distribution transform.
+pub fn generate_partition_with(spec: &GenSpec, skew: Skew) -> Vec<u8> {
     let mut buf = vec![0u8; spec.records as usize * RECORD_SIZE];
     for (j, rec) in buf.chunks_exact_mut(RECORD_SIZE).enumerate() {
-        write_record(spec.seed, spec.offset + j as u64, rec);
+        write_record_with(spec.seed, spec.offset + j as u64, skew, rec);
     }
     buf
 }
@@ -93,7 +138,15 @@ pub fn partition_checksum(buf: &[u8]) -> u64 {
 /// The u64 partition key record `i` will carry (without materializing it).
 #[inline]
 pub fn key_of_record(seed: u64, i: u64) -> u64 {
-    stream_at(seed, i.wrapping_mul(2))
+    key_of_record_with(seed, i, Skew::Uniform)
+}
+
+/// [`key_of_record`] under a key-distribution transform — always
+/// consistent with [`write_record_with`] (the sampling stage relies on
+/// this to sample keys without generating record bytes).
+#[inline]
+pub fn key_of_record_with(seed: u64, i: u64, skew: Skew) -> u64 {
+    skew_key(stream_at(seed, i.wrapping_mul(2)), skew)
 }
 
 #[cfg(test)]
@@ -153,6 +206,46 @@ mod tests {
         for j in 0..record_count(&buf) {
             assert_eq!(keys[j], key_of_record(6, 9 + j as u64));
         }
+    }
+
+    #[test]
+    fn uniform_skew_is_bit_exact_passthrough() {
+        let a = generate_partition(&GenSpec { seed: 9, offset: 0, records: 50 });
+        let b = generate_partition_with(
+            &GenSpec { seed: 9, offset: 0, records: 50 },
+            Skew::Uniform,
+        );
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn zipf_skew_concentrates_keys_and_keeps_payload() {
+        let spec = GenSpec { seed: 10, offset: 0, records: 4000 };
+        let buf = generate_partition_with(&spec, Skew::Zipf(2.0));
+        let keys = extract_partition_keys(&buf);
+        // P(x^3 < 1/2) = 0.5^(1/3) ≈ 0.794 — vs 0.5 for uniform keys
+        let below_half = keys.iter().filter(|&&k| k < u64::MAX / 2).count();
+        assert!(below_half > 3000, "only {below_half}/4000 in bottom half");
+        // key_of_record_with stays consistent with the written bytes
+        for j in [0usize, 17, 3999] {
+            assert_eq!(keys[j], key_of_record_with(10, j as u64, Skew::Zipf(2.0)));
+        }
+        // payloads unchanged: record number still embedded
+        let r = Record::new(&buf[RECORD_SIZE..2 * RECORD_SIZE]);
+        assert_eq!(&r.payload()[..8], &1u64.to_be_bytes());
+    }
+
+    #[test]
+    fn high_theta_creates_duplicate_prefixes() {
+        let spec = GenSpec { seed: 11, offset: 0, records: 2000 };
+        let buf = generate_partition_with(&spec, Skew::Zipf(8.0));
+        let keys = extract_partition_keys(&buf);
+        let distinct: std::collections::HashSet<u64> =
+            keys.iter().copied().collect();
+        assert!(
+            distinct.len() < keys.len(),
+            "expected prefix collisions at theta=8"
+        );
     }
 
     #[test]

@@ -44,6 +44,59 @@ pub fn range_of(key: u64, cuts: &[u64]) -> usize {
     cuts.partition_point(|&c| c <= key)
 }
 
+/// Interior cut points for `n_ranges` ranges chosen from a *sampled* key
+/// CDF instead of assuming uniform keys: cut `i` is the `i/n_ranges`
+/// quantile of the sorted samples, so each range receives an equal share
+/// of the sampled mass regardless of the key distribution.
+///
+/// Hot-key handling: a key hot enough to span several quantile positions
+/// produces duplicate cut candidates; each duplicate is bumped to one
+/// past its predecessor — the smallest split point that actually
+/// separates records — so the cut lands immediately *after* the hot key
+/// and the tail ranges are not collapsed to empty. (The hot key itself is
+/// atomic under u64-prefix partitioning; records sharing the full prefix
+/// cannot be split across ranges without breaking sorted-partition
+/// output.) Cuts saturating at `u64::MAX` may repeat, yielding empty
+/// trailing ranges, which the validator accepts.
+///
+/// With no samples at all this falls back to the uniform
+/// [`reducer_cuts`]. The returned cuts are non-decreasing and usable
+/// anywhere `reducer_cuts` output is (`range_of`, worker subsampling).
+pub fn cuts_from_samples(samples: &[u64], n_ranges: usize) -> Vec<u64> {
+    assert!(n_ranges >= 1, "need at least one range");
+    if n_ranges == 1 {
+        return Vec::new();
+    }
+    if samples.is_empty() {
+        return reducer_cuts(n_ranges);
+    }
+    let mut s = samples.to_vec();
+    s.sort_unstable();
+    let n = s.len();
+    let mut cuts: Vec<u64> = (1..n_ranges)
+        .map(|i| s[((i as u128 * n as u128) / n_ranges as u128) as usize])
+        .collect();
+    // hot-key splitting: monotonize duplicate quantiles to the first
+    // split point past the hot key
+    for j in 1..cuts.len() {
+        if cuts[j] <= cuts[j - 1] {
+            cuts[j] = cuts[j - 1].saturating_add(1);
+        }
+    }
+    cuts
+}
+
+/// Estimated per-range sample loads under `cuts` — the sampled-CDF view
+/// of how balanced a cut choice is. Used by the sampling stage to report
+/// the predicted skew factor before the shuffle runs.
+pub fn range_loads(samples: &[u64], cuts: &[u64]) -> Vec<u64> {
+    let mut loads = vec![0u64; cuts.len() + 1];
+    for &k in samples {
+        loads[range_of(k, cuts)] += 1;
+    }
+    loads
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -94,6 +147,67 @@ mod tests {
     fn single_range_has_no_cuts() {
         assert!(reducer_cuts(1).is_empty());
         assert_eq!(range_of(123, &[]), 0);
+    }
+
+    #[test]
+    fn cuts_from_samples_match_uniform_on_uniform_samples() {
+        use crate::util::rng::Xoshiro256;
+        let mut rng = Xoshiro256::new(7);
+        let samples: Vec<u64> = (0..64_000).map(|_| rng.next_u64()).collect();
+        let cuts = cuts_from_samples(&samples, 8);
+        let uniform = reducer_cuts(8);
+        assert_eq!(cuts.len(), uniform.len());
+        // sampled quantiles of a uniform stream land near the uniform cuts
+        for (c, u) in cuts.iter().zip(uniform.iter()) {
+            let err = c.abs_diff(*u) as f64 / (u64::MAX as f64 / 8.0);
+            assert!(err < 0.05, "cut off by {err:.3} of a range width");
+        }
+    }
+
+    #[test]
+    fn cuts_from_samples_balance_skewed_input() {
+        // quadratically skewed keys: uniform cuts overload range 0
+        use crate::util::rng::Xoshiro256;
+        let mut rng = Xoshiro256::new(11);
+        let samples: Vec<u64> = (0..32_000)
+            .map(|_| {
+                let x = rng.next_u64() as f64 / u64::MAX as f64;
+                ((x * x) * u64::MAX as f64) as u64
+            })
+            .collect();
+        let sampled = cuts_from_samples(&samples, 8);
+        assert!(sampled.windows(2).all(|w| w[0] <= w[1]));
+        let loads = range_loads(&samples, &sampled);
+        let mean = samples.len() as f64 / 8.0;
+        let max = *loads.iter().max().unwrap() as f64;
+        assert!(max / mean < 1.2, "sampled cuts still skewed: {loads:?}");
+        let uniform_loads = range_loads(&samples, &reducer_cuts(8));
+        let umax = *uniform_loads.iter().max().unwrap() as f64;
+        assert!(umax / mean > 2.0, "test input not skewed: {uniform_loads:?}");
+    }
+
+    #[test]
+    fn cuts_from_samples_split_after_hot_key() {
+        // 80% of the mass on one key: every quantile hits it, and the
+        // duplicates are bumped to strictly increasing split points
+        let mut samples = vec![42u64; 800];
+        samples.extend((0..200u64).map(|i| 1_000 + i * 7));
+        let cuts = cuts_from_samples(&samples, 4);
+        assert_eq!(cuts, vec![42, 43, 44]);
+        // the hot key lands in exactly one range, and the cold tail is
+        // not swallowed by it
+        let hot_range = range_of(42, &cuts);
+        assert_eq!(
+            samples.iter().filter(|&&k| range_of(k, &cuts) == hot_range).count(),
+            800
+        );
+        assert_ne!(range_of(1_000, &cuts), hot_range);
+    }
+
+    #[test]
+    fn cuts_from_samples_empty_falls_back_to_uniform() {
+        assert_eq!(cuts_from_samples(&[], 8), reducer_cuts(8));
+        assert!(cuts_from_samples(&[1, 2, 3], 1).is_empty());
     }
 
     #[test]
