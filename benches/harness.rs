@@ -22,6 +22,28 @@ pub struct BenchResult {
     pub allocs: u64,
     /// Mean heap bytes requested per iteration (same gating).
     pub alloc_bytes: u64,
+    /// Payload bytes processed per iteration (0 = not reported). Set by
+    /// the bench after [`bench`] returns; the perf gate derives GB/s as
+    /// `bytes / mean_secs` for its per-kernel throughput columns.
+    pub bytes: u64,
+}
+
+impl BenchResult {
+    /// Attach the per-iteration payload size so throughput (GB/s) can be
+    /// derived downstream.
+    pub fn with_bytes(mut self, bytes: u64) -> Self {
+        self.bytes = bytes;
+        self
+    }
+
+    /// Throughput in GB/s (0.0 when no payload size was attached).
+    pub fn gbps(&self) -> f64 {
+        if self.mean_secs > 0.0 {
+            self.bytes as f64 / self.mean_secs / 1e9
+        } else {
+            0.0
+        }
+    }
 }
 
 /// Time `f` `iters` times (after one untimed warmup) and print a
@@ -63,6 +85,7 @@ pub fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> BenchResult {
         max_secs: max,
         allocs: alloc_delta.allocations / iters.max(1) as u64,
         alloc_bytes: alloc_delta.bytes / iters.max(1) as u64,
+        bytes: 0,
     }
 }
 
@@ -104,6 +127,7 @@ pub fn single(name: &str, wall_secs: f64) -> BenchResult {
         max_secs: wall_secs,
         allocs: 0,
         alloc_bytes: 0,
+        bytes: 0,
     }
 }
 
@@ -118,7 +142,7 @@ pub fn emit_json(bench: &str, results: &[BenchResult]) {
         out.push_str(&format!(
             "  {{\"name\":{:?},\"iters\":{},\"mean_secs\":{:.9},\
              \"stddev_secs\":{:.9},\"min_secs\":{:.9},\"max_secs\":{:.9},\
-             \"allocs\":{},\"alloc_bytes\":{},\"smoke\":{}}}{}\n",
+             \"allocs\":{},\"alloc_bytes\":{},\"bytes\":{},\"smoke\":{}}}{}\n",
             r.name,
             r.iters,
             r.mean_secs,
@@ -127,6 +151,7 @@ pub fn emit_json(bench: &str, results: &[BenchResult]) {
             r.max_secs,
             r.allocs,
             r.alloc_bytes,
+            r.bytes,
             smoke(),
             if i + 1 < results.len() { "," } else { "" }
         ));

@@ -14,6 +14,19 @@
 //! Each pair emits a `[ref]` and an `[opt]` entry; the gate requires
 //! opt to beat ref by the ratios in ci/compare_bench.py.
 //!
+//! A second family pins the SIMD dispatch (`sortlib::simd`) instead of
+//! the algorithm: the same kernel runs with dispatch forced to the
+//! scalar tier (`[scalar]`) and to the best vector tier the host
+//! supports (`[simd]`), after asserting byte-identical output. The gate
+//! requires simd ≥ 1.3× scalar on the `sort` and `merge` families, and
+//! the emitted `bytes` field gives it per-kernel GB/s columns. Hosts
+//! whose best tier *is* scalar (no SSE2/AVX2/NEON) skip the family with
+//! a notice — the gate treats the missing pairs as unarmed, not failed.
+//!
+//! Smoke scale keeps a mid-scale tier next to the small one so the
+//! vector kernels' full-width main loops execute (not just their scalar
+//! tails) on every CI run.
+//!
 //!     cargo bench --bench kernels
 //!     BENCH_SMOKE=1 cargo bench --features alloc-stats --bench kernels
 
@@ -22,8 +35,12 @@ mod harness;
 
 use exoshuffle::distfut::BufferPool;
 use exoshuffle::sortlib::keyed::{self, KEYED_RECORD_SIZE};
-use exoshuffle::sortlib::{self, gensort, radix, reducer_cuts, reference};
+use exoshuffle::sortlib::{self, gensort, radix, reducer_cuts, reference, simd};
 use exoshuffle::util::rng::Xoshiro256;
+
+/// Payload bytes per record for the sort family: 8-byte key + 4-byte
+/// value moved through every radix pass.
+const SORT_PAIR_BYTES: u64 = 12;
 
 /// Build a sorted run as both plain 100-byte records (reference kernel
 /// input) and keyed 108-byte records (optimized kernel input).
@@ -64,7 +81,8 @@ fn main() {
     let mut results = Vec::new();
 
     harness::section("sort_pairs: SoA radix [opt] vs AoS reference [ref]");
-    let sizes: &[usize] = harness::pick(&[1 << 16, 1 << 18], &[1 << 16]);
+    // smoke keeps a mid-scale size so vector main loops run, not just tails
+    let sizes: &[usize] = harness::pick(&[1 << 16, 1 << 18], &[1 << 12, 1 << 16]);
     for &n in sizes {
         let mut rng = Xoshiro256::new(n as u64);
         let keys: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
@@ -76,18 +94,21 @@ fn main() {
         );
         let r = harness::bench(&format!("sort n={n} [ref]"), iters, || {
             std::hint::black_box(reference::sort_pairs(&keys, &vals));
-        });
+        })
+        .with_bytes(n as u64 * SORT_PAIR_BYTES);
         let o = harness::bench(&format!("sort n={n} [opt]"), iters, || {
             std::hint::black_box(radix::sort_pairs(&keys, &vals));
-        });
+        })
+        .with_bytes(n as u64 * SORT_PAIR_BYTES);
         report_pair("sort", n, &r, &o);
         results.push(r);
         results.push(o);
     }
 
     harness::section("merge: fused keyed walk [opt] vs merge-then-gather [ref]");
+    // smoke keeps a mid-scale shape so vector main loops run, not just tails
     let shapes: &[(usize, usize)] =
-        harness::pick(&[(8, 8192), (40, 4000)], &[(8, 4096)]);
+        harness::pick(&[(8, 8192), (40, 4000)], &[(4, 256), (8, 4096)]);
     for &(runs, len) in shapes {
         let built: Vec<(Vec<u8>, Vec<u8>)> = (0..runs)
             .map(|r| sorted_run(7, (r * len) as u64, len as u64))
@@ -108,12 +129,14 @@ fn main() {
 
         let r = harness::bench(&format!("merge r={runs} l={len} [ref]"), iters, || {
             std::hint::black_box(reference::merge_then_gather(&plain, &cuts));
-        });
+        })
+        .with_bytes((total * KEYED_RECORD_SIZE) as u64);
         let o = harness::bench(&format!("merge r={runs} l={len} [opt]"), iters, || {
             let mut out = pool.alloc(total * KEYED_RECORD_SIZE);
             let bb = keyed::merge_keyed_ranges(&keyed_runs, &cuts, &mut out);
             std::hint::black_box(out.into_blocks(&bb));
-        });
+        })
+        .with_bytes((total * KEYED_RECORD_SIZE) as u64);
         report_pair("merge", total, &r, &o);
         results.push(r);
         results.push(o);
@@ -154,11 +177,116 @@ fn main() {
         let bb = keyed::gather_keyed_ranges(&buf, &keys, &perm, &bounds, &mut out);
         std::hint::black_box(out.into_blocks(&bb));
     });
+    let r = r.with_bytes(n * sortlib::RECORD_SIZE as u64);
+    let o = o.with_bytes(n * sortlib::RECORD_SIZE as u64);
     report_pair("maplike", n as usize, &r, &o);
     results.push(r);
     results.push(o);
 
+    simd_vs_scalar(iters, &pool, &mut results);
+
     println!("\npool after run: {:?}", pool.stats());
     harness::emit_json("kernels", &results);
     println!("kernels bench: PASS");
+}
+
+/// The SIMD dispatch family: the *same* kernel with dispatch pinned to
+/// the scalar tier vs the best vector tier (see module docs). Output
+/// byte-identity is asserted before timing, so a gate pass can never
+/// come from a wrong-answer fast path.
+fn simd_vs_scalar(
+    iters: usize,
+    pool: &BufferPool,
+    results: &mut Vec<harness::BenchResult>,
+) {
+    let best = simd::best_available();
+    harness::section(&format!(
+        "simd dispatch: [scalar] tier vs [simd] best tier ({})",
+        best.name()
+    ));
+    if best == simd::SimdTier::Scalar {
+        println!(
+            "      no vector tier available on this host; skipping \
+             [scalar]/[simd] pairs (gate will report them unarmed)"
+        );
+        return;
+    }
+    let scalar = simd::SimdTier::Scalar;
+
+    let sizes: &[usize] = harness::pick(&[1 << 16, 1 << 18], &[1 << 12, 1 << 16]);
+    for &n in sizes {
+        let mut rng = Xoshiro256::new(n as u64 ^ 0x51D0);
+        let keys: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+        let vals: Vec<u32> = (0..n as u32).collect();
+        assert_eq!(
+            simd::with_forced_tier(scalar, || radix::sort_pairs(&keys, &vals)),
+            simd::with_forced_tier(best, || radix::sort_pairs(&keys, &vals)),
+            "simd sort diverged from scalar tier"
+        );
+        let s = harness::bench(&format!("sort n={n} [scalar]"), iters, || {
+            simd::with_forced_tier(scalar, || {
+                std::hint::black_box(radix::sort_pairs(&keys, &vals));
+            });
+        })
+        .with_bytes(n as u64 * SORT_PAIR_BYTES);
+        let v = harness::bench(&format!("sort n={n} [simd]"), iters, || {
+            simd::with_forced_tier(best, || {
+                std::hint::black_box(radix::sort_pairs(&keys, &vals));
+            });
+        })
+        .with_bytes(n as u64 * SORT_PAIR_BYTES);
+        println!(
+            "      -> sort: {:.2}x simd/scalar, {:.2} GB/s simd",
+            s.mean_secs / v.mean_secs,
+            v.gbps()
+        );
+        results.push(s);
+        results.push(v);
+    }
+
+    let shapes: &[(usize, usize)] =
+        harness::pick(&[(8, 8192), (40, 4000)], &[(4, 256), (8, 4096)]);
+    for &(runs, len) in shapes {
+        let built: Vec<(Vec<u8>, Vec<u8>)> = (0..runs)
+            .map(|r| sorted_run(11, (r * len) as u64, len as u64))
+            .collect();
+        let keyed_runs: Vec<&[u8]> = built.iter().map(|(_, k)| k.as_slice()).collect();
+        let cuts = reducer_cuts(8);
+        let total = runs * len;
+        let merge_on = |tier: simd::SimdTier| {
+            simd::with_forced_tier(tier, || {
+                let mut out = vec![0u8; total * KEYED_RECORD_SIZE];
+                let bb = keyed::merge_keyed_ranges(&keyed_runs, &cuts, &mut out);
+                (out, bb)
+            })
+        };
+        assert_eq!(
+            merge_on(scalar),
+            merge_on(best),
+            "simd merge diverged from scalar tier"
+        );
+        let s = harness::bench(&format!("merge r={runs} l={len} [scalar]"), iters, || {
+            simd::with_forced_tier(scalar, || {
+                let mut out = pool.alloc(total * KEYED_RECORD_SIZE);
+                let bb = keyed::merge_keyed_ranges(&keyed_runs, &cuts, &mut out);
+                std::hint::black_box(out.into_blocks(&bb));
+            });
+        })
+        .with_bytes((total * KEYED_RECORD_SIZE) as u64);
+        let v = harness::bench(&format!("merge r={runs} l={len} [simd]"), iters, || {
+            simd::with_forced_tier(best, || {
+                let mut out = pool.alloc(total * KEYED_RECORD_SIZE);
+                let bb = keyed::merge_keyed_ranges(&keyed_runs, &cuts, &mut out);
+                std::hint::black_box(out.into_blocks(&bb));
+            });
+        })
+        .with_bytes((total * KEYED_RECORD_SIZE) as u64);
+        println!(
+            "      -> merge: {:.2}x simd/scalar, {:.2} GB/s simd",
+            s.mean_secs / v.mean_secs,
+            v.gbps()
+        );
+        results.push(s);
+        results.push(v);
+    }
 }

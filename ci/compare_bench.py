@@ -1,7 +1,7 @@
 #!/usr/bin/env python3
 """CI perf gate over the BENCH_*.json files the bench binaries emit.
 
-Two kinds of checks:
+Three kinds of checks:
 
 1. Within-run ratio gates (hardware-independent, always enforced) on
    BENCH_kernels.json: every ``<family> ... [ref]`` / ``[opt]`` entry
@@ -15,7 +15,17 @@ Two kinds of checks:
        alloc-stats`` (otherwise allocs are all zero and the gate is
        skipped with a notice).
 
-2. Regression gate vs committed baselines (ci/baselines/BENCH_*.json):
+2. SIMD dispatch ratio gate (also within-run) on BENCH_kernels.json:
+   every ``[scalar]`` / ``[simd]`` pair pins the *same* kernel to the
+   scalar tier vs the best vector tier (sortlib::simd), so the ratio
+   isolates the vectorization win from the algorithm rewrite measured
+   by check 1. Required: simd >= 1.3x scalar on the ``sort`` and
+   ``merge`` families. A bench host whose best tier is scalar emits no
+   pairs; that is a loud warning normally and a failure under
+   ``--require-armed`` (CI's x86_64 runners always have at least SSE2,
+   so absent pairs there mean the dispatch is broken, not the host).
+
+3. Regression gate vs committed baselines (ci/baselines/BENCH_*.json):
    any entry whose name appears in a non-provisional baseline must not
    regress mean_secs by more than 20%. Baselines carry a ``provisional``
    flag: the repo ships provisional (empty) baselines because the
@@ -28,7 +38,15 @@ Two kinds of checks:
    (use this once baselines have been refreshed, so a regression to
    ``provisional: true`` cannot silently disarm the gate again).
 
-Refreshing baselines (run on the machine class CI uses):
+Per-kernel throughput: entries that carry a ``bytes`` field (payload
+bytes per iteration) get a derived GB/s column, both in the log table
+and in the $GITHUB_STEP_SUMMARY markdown this script appends when that
+variable is set.
+
+Refreshing baselines: the ``refresh-baselines`` workflow
+(.github/workflows/refresh-baselines.yml) runs the bench suite on the
+pinned CI runner class and commits the rewritten, ``provisional:
+false`` baselines. To refresh by hand on that same machine class:
 
     BENCH_SMOKE=1 BENCH_JSON_DIR=bench-current \
         cargo bench --features alloc-stats --bench kernels \
@@ -51,6 +69,10 @@ BENCHES = ["kernels", "sched_overhead", "fig1"]
 # entry name). maplike is reported but not speed-gated: it is the
 # allocation-hygiene pair.
 SPEEDUP_MIN = {"sort": 1.5, "merge": 1.5}
+
+# scalar/simd dispatch-ratio floors: the vector tier must beat the
+# scalar tier of the *same* kernel by this much.
+SIMD_RATIO_MIN = {"sort": 1.3, "merge": 1.3}
 
 # ref/opt heap-allocation floors (alloc-stats builds only).
 ALLOC_RATIO_MIN = {"merge": 5.0, "maplike": 5.0}
@@ -76,22 +98,34 @@ def family(name):
     return name.split(" ", 1)[0].split("=", 1)[0]
 
 
-def pair_up(results):
-    """Yield (base_name, family, ref_entry, opt_entry) for every
-    '[ref]'/'[opt]' pair in a kernels result list."""
+def pair_up(results, ref_suffix=" [ref]", opt_suffix=" [opt]"):
+    """Yield (base_name, family, ref_entry, opt_entry_or_None) for every
+    ``ref_suffix`` entry in a kernels result list, twinned with its
+    ``opt_suffix`` entry of the same base name."""
     by_name = {r["name"]: r for r in results}
     for name, ref in sorted(by_name.items()):
-        if not name.endswith(" [ref]"):
+        if not name.endswith(ref_suffix):
             continue
-        base = name[: -len(" [ref]")]
-        opt = by_name.get(base + " [opt]")
-        if opt is None:
-            yield base, family(base), ref, None
-        else:
-            yield base, family(base), ref, opt
+        base = name[: -len(ref_suffix)]
+        yield base, family(base), ref, by_name.get(base + opt_suffix)
 
 
-def check_ratios(results, failures):
+def gbps(entry):
+    """Derived throughput in GB/s, or None when the entry carries no
+    payload-size (``bytes``) field."""
+    b = entry.get("bytes", 0)
+    m = entry.get("mean_secs", 0.0)
+    if not b or m <= 0:
+        return None
+    return b / m / 1e9
+
+
+def fmt_gbps(entry):
+    g = gbps(entry)
+    return f"{g:.2f}" if g is not None else "-"
+
+
+def check_ratios(results, failures, rows):
     """Within-run speedup + allocation gates on kernels results."""
     counting = any(r.get("allocs", 0) > 0 for r in results)
     pairs = list(pair_up(results))
@@ -105,15 +139,25 @@ def check_ratios(results, failures):
         speedup = ref["mean_secs"] / max(opt["mean_secs"], 1e-12)
         floor = SPEEDUP_MIN.get(fam)
         gated = floor is not None
-        status = "    "
-        if gated and speedup < floor:
+        ok = not (gated and speedup < floor)
+        if not ok:
             failures.append(
                 f"kernels: {base}: speedup {speedup:.2f}x < required {floor}x"
             )
-            status = "FAIL"
         print(
-            f"  {status} {base}: {speedup:.2f}x speedup"
+            f"  {'    ' if ok else 'FAIL'} {base}: {speedup:.2f}x speedup, "
+            f"{fmt_gbps(opt)} GB/s opt"
             + (f" (floor {floor}x)" if gated else " (informational)")
+        )
+        rows.append(
+            {
+                "pair": base,
+                "kind": "opt/ref",
+                "ratio": speedup,
+                "floor": floor,
+                "gbps": fmt_gbps(opt),
+                "ok": ok,
+            }
         )
         afloor = ALLOC_RATIO_MIN.get(fam)
         if afloor is None:
@@ -140,14 +184,62 @@ def check_ratios(results, failures):
             )
 
 
+def check_simd_ratios(results, failures, require_armed, rows):
+    """Within-run [scalar]/[simd] dispatch-ratio gate on kernels results."""
+    pairs = list(pair_up(results, " [scalar]", " [simd]"))
+    if not pairs:
+        msg = (
+            "kernels: no [scalar]/[simd] pairs in the bench output — the "
+            "bench host's best dispatch tier is scalar (or the simd "
+            "family was dropped). On CI's x86_64 runners at least SSE2 "
+            "is always available, so this means broken dispatch there."
+        )
+        print(f"::warning title=simd dispatch gate unarmed::{msg}")
+        print(f"  {msg}")
+        if require_armed:
+            failures.append(
+                "kernels: --require-armed is set but no [scalar]/[simd] "
+                "pairs were emitted"
+            )
+        return
+    for base, fam, scalar, simd in pairs:
+        if simd is None:
+            failures.append(f"kernels: '{base} [scalar]' has no [simd] twin")
+            continue
+        ratio = scalar["mean_secs"] / max(simd["mean_secs"], 1e-12)
+        floor = SIMD_RATIO_MIN.get(fam)
+        gated = floor is not None
+        ok = not (gated and ratio < floor)
+        if not ok:
+            failures.append(
+                f"kernels: {base}: simd/scalar {ratio:.2f}x < required {floor}x"
+            )
+        print(
+            f"  {'    ' if ok else 'FAIL'} {base}: {ratio:.2f}x simd/scalar, "
+            f"{fmt_gbps(simd)} GB/s simd"
+            + (f" (floor {floor}x)" if gated else " (informational)")
+        )
+        rows.append(
+            {
+                "pair": base,
+                "kind": "simd/scalar",
+                "ratio": ratio,
+                "floor": floor,
+                "gbps": fmt_gbps(simd),
+                "ok": ok,
+            }
+        )
+
+
 def check_regressions(bench, current, baseline, failures, require_armed):
     """mean_secs regression gate vs a committed baseline."""
     if baseline["provisional"]:
         msg = (
             f"{bench}: baseline is provisional — 20% regression gate "
-            "skipped. Refresh ci/baselines/BENCH_*.json with "
-            "--update-baselines on a CI-class machine (see the module "
-            "docstring or the README's 'Perf gate' section)."
+            "skipped. Refresh ci/baselines/BENCH_*.json via the "
+            "refresh-baselines workflow (or --update-baselines on a "
+            "CI-class machine; see the module docstring or the README's "
+            "'Perf gate' section)."
         )
         # GitHub Actions annotation: surfaces on the run summary page so
         # a never-armed gate cannot hide in the log forever
@@ -176,6 +268,35 @@ def check_regressions(bench, current, baseline, failures, require_armed):
                 f"+{REGRESSION_TOLERANCE:.0%})"
             )
     print(f"  {bench}: {compared} entries compared against baseline")
+
+
+def write_step_summary(rows, failures):
+    """Append a per-kernel markdown table to $GITHUB_STEP_SUMMARY (a
+    no-op outside GitHub Actions)."""
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if not path or not rows:
+        return
+    lines = [
+        "### Perf gate: per-kernel ratios and throughput",
+        "",
+        "| kernel | ratio | floor | GB/s | status |",
+        "|---|---|---|---|---|",
+    ]
+    for r in rows:
+        floor = f"{r['floor']}x" if r["floor"] is not None else "info"
+        status = "✅" if r["ok"] else "❌"
+        lines.append(
+            f"| {r['pair']} ({r['kind']}) | {r['ratio']:.2f}x | {floor} "
+            f"| {r['gbps']} | {status} |"
+        )
+    lines.append("")
+    lines.append(
+        f"**{'FAILED' if failures else 'PASSED'}**"
+        + (f" — {len(failures)} failure(s)" if failures else "")
+    )
+    lines.append("")
+    with open(path, "a") as f:
+        f.write("\n".join(lines) + "\n")
 
 
 def update_baselines(current_dir, baseline_dir):
@@ -209,8 +330,9 @@ def main():
     ap.add_argument(
         "--require-armed",
         action="store_true",
-        help="fail (instead of warn) when a baseline is provisional — "
-        "set this once real baselines are committed",
+        help="fail (instead of warn) when a baseline is provisional or "
+        "the [scalar]/[simd] pairs are missing — set once real baselines "
+        "are committed and CI runs on vector-capable hosts",
     )
     args = ap.parse_args()
 
@@ -219,11 +341,15 @@ def main():
         return 0
 
     failures = []
+    rows = []
 
     kernels_path = os.path.join(args.current, "BENCH_kernels.json")
     print("ratio gates (within-run, hardware-independent):")
     if os.path.exists(kernels_path):
-        check_ratios(load_results(kernels_path)["results"], failures)
+        kernels = load_results(kernels_path)["results"]
+        check_ratios(kernels, failures, rows)
+        print("simd dispatch gates (within-run, [scalar] vs [simd] tier):")
+        check_simd_ratios(kernels, failures, args.require_armed, rows)
     else:
         failures.append(f"missing {kernels_path}")
 
@@ -244,6 +370,8 @@ def main():
             failures,
             args.require_armed,
         )
+
+    write_step_summary(rows, failures)
 
     if failures:
         print("\nperf gate FAILED:")

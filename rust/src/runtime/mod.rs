@@ -31,7 +31,7 @@ pub mod native;
 use std::sync::Arc;
 
 #[cfg(feature = "pjrt")]
-use crate::sortlib::radix;
+use crate::sortlib::{radix, reference};
 
 use crate::sortlib::keyed;
 
@@ -252,7 +252,8 @@ fn xla_sort_any(
         .iter()
         .map(|(k, v)| (k.as_slice(), v.as_slice()))
         .collect();
-    let (keys_out, perm) = radix::kway_merge(&run_refs);
+    // retired scalar merge, kept in `reference` as the oracle/fallback
+    let (keys_out, perm) = reference::kway_merge(&run_refs);
     let offs = radix::partition_offsets(&keys_out, cuts);
     Ok(SortResult {
         keys: keys_out,

@@ -3,7 +3,7 @@
 //! component, and a convenient oracle for cross-checking the XLA path.
 
 use crate::runtime::SortResult;
-use crate::sortlib::radix;
+use crate::sortlib::{radix, reference};
 
 /// Radix-sort a key block; `perm` indexes the input block.
 pub fn sort_and_partition(keys: &[u64], cuts: &[u64]) -> SortResult {
@@ -18,6 +18,12 @@ pub fn sort_and_partition(keys: &[u64], cuts: &[u64]) -> SortResult {
 }
 
 /// Heap-merge pre-sorted runs; `perm` indexes the concatenation of runs.
+///
+/// Not on the production task path: the native merge tasks run the fused
+/// [`crate::sortlib::keyed::merge_keyed_ranges`] walk instead. This
+/// index-pair composition (used by warmup, the ablation bench, and
+/// cross-check tests) reuses the retired loser-tree merge that lives in
+/// [`crate::sortlib::reference`] as the oracle.
 pub fn merge_and_partition(runs: &[&[u64]], cuts: &[u64]) -> SortResult {
     let mut starts = Vec::with_capacity(runs.len());
     let mut acc = 0u32;
@@ -35,7 +41,7 @@ pub fn merge_and_partition(runs: &[&[u64]], cuts: &[u64]) -> SortResult {
         .zip(&vals)
         .map(|(k, v)| (*k, v.as_slice()))
         .collect();
-    let (keys, perm) = radix::kway_merge(&pairs);
+    let (keys, perm) = reference::kway_merge(&pairs);
     let offs = radix::partition_offsets(&keys, cuts);
     SortResult { keys, perm, offs }
 }

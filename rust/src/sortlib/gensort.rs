@@ -67,9 +67,17 @@ pub fn write_record(seed: u64, i: u64, out: &mut [u8]) {
 /// payload (record number, filler) is unchanged, so checksums remain
 /// computed from the actual bytes and validation works identically.
 pub fn write_record_with(seed: u64, i: u64, skew: Skew, out: &mut [u8]) {
-    debug_assert_eq!(out.len(), RECORD_SIZE);
     let r0 = skew_key(stream_at(seed, i.wrapping_mul(2)), skew);
     let r1 = stream_at(seed, i.wrapping_mul(2) + 1);
+    write_record_parts(i, r0, r1, out);
+}
+
+/// Assemble record `i` from its two (already skew-transformed for `r0`)
+/// stream draws — the shared tail of [`write_record_with`] and the
+/// batched [`generate_partition_with`].
+#[inline]
+fn write_record_parts(i: u64, r0: u64, r1: u64, out: &mut [u8]) {
+    debug_assert_eq!(out.len(), RECORD_SIZE);
     out[..8].copy_from_slice(&r0.to_be_bytes());
     out[8..10].copy_from_slice(&r1.to_be_bytes()[..2]);
     out[10..18].copy_from_slice(&i.to_be_bytes());
@@ -90,10 +98,29 @@ pub fn generate_partition(spec: &GenSpec) -> Vec<u8> {
 }
 
 /// [`generate_partition`] under a key-distribution transform.
+///
+/// Record `i` consumes stream draws `2i` and `2i+1`, so a partition's
+/// draws form the contiguous stream range `[offset*2, (offset+records)*2)`
+/// — one batched [`crate::sortlib::simd::stream_block`] evaluation
+/// (vectorized SplitMix64 finalizer on x86_64) instead of two `stream_at`
+/// calls per record. The transient draw buffer costs 16 bytes/record
+/// against the 100-byte output. Byte-identical to the frozen per-record
+/// [`crate::sortlib::reference::generate_partition_with`] on every
+/// dispatch tier (property P13); the skew transform (`powf`) stays
+/// scalar per draw for bit-exactness.
 pub fn generate_partition_with(spec: &GenSpec, skew: Skew) -> Vec<u8> {
-    let mut buf = vec![0u8; spec.records as usize * RECORD_SIZE];
+    let n = spec.records as usize;
+    let mut buf = vec![0u8; n * RECORD_SIZE];
+    let mut draws = vec![0u64; n * 2];
+    crate::sortlib::simd::stream_block(
+        spec.seed,
+        spec.offset.wrapping_mul(2),
+        &mut draws,
+    );
     for (j, rec) in buf.chunks_exact_mut(RECORD_SIZE).enumerate() {
-        write_record_with(spec.seed, spec.offset + j as u64, skew, rec);
+        let i = spec.offset.wrapping_add(j as u64);
+        let r0 = skew_key(draws[2 * j], skew);
+        write_record_parts(i, r0, draws[2 * j + 1], rec);
     }
     buf
 }

@@ -31,7 +31,7 @@
 //! equals the seed merge's (key, global record index) order and the
 //! fused output is byte-identical to the reference two-pass path.
 
-use crate::sortlib::{partition_key, RECORD_SIZE};
+use crate::sortlib::{simd, RECORD_SIZE};
 
 /// Bytes of the embedded little-endian u64 partition key.
 pub const KEY_BYTES: usize = 8;
@@ -64,8 +64,10 @@ pub fn record_at(buf: &[u8], i: usize) -> &[u8] {
 
 /// All embedded keys of a keyed buffer (the XLA fallback path re-merges
 /// on key arrays; the fused native path never materializes this).
+/// Strided little-endian gather, vectorized on AVX2
+/// ([`simd::keys_le_strided`]).
 pub fn keys_of(buf: &[u8]) -> Vec<u64> {
-    (0..keyed_record_count(buf)).map(|i| key_at(buf, i)).collect()
+    simd::keys_le_strided(buf, KEYED_RECORD_SIZE, keyed_record_count(buf))
 }
 
 /// Encode plain records as keyed records in input order (extracting the
@@ -74,12 +76,18 @@ pub fn keys_of(buf: &[u8]) -> Vec<u64> {
 /// touches every byte.
 pub fn from_records(src: &[u8]) -> Vec<u8> {
     let n = crate::sortlib::record_count(src);
+    let keys = simd::keys_be_strided(src, RECORD_SIZE, n);
+    let tier = simd::active_tier();
     let mut out = vec![0u8; n * KEYED_RECORD_SIZE];
-    for i in 0..n {
-        let rec = &src[i * RECORD_SIZE..(i + 1) * RECORD_SIZE];
-        let o = i * KEYED_RECORD_SIZE;
-        out[o..o + KEY_BYTES].copy_from_slice(&partition_key(rec).to_le_bytes());
-        out[o + KEY_BYTES..o + KEYED_RECORD_SIZE].copy_from_slice(rec);
+    for (i, (chunk, &k)) in
+        out.chunks_exact_mut(KEYED_RECORD_SIZE).zip(&keys).enumerate()
+    {
+        chunk[..KEY_BYTES].copy_from_slice(&k.to_le_bytes());
+        simd::copy_record_100(
+            tier,
+            &src[i * RECORD_SIZE..(i + 1) * RECORD_SIZE],
+            &mut chunk[KEY_BYTES..],
+        );
     }
     out
 }
@@ -87,9 +95,10 @@ pub fn from_records(src: &[u8]) -> Vec<u8> {
 /// Strip the embedded keys: plain records in keyed-buffer order.
 pub fn to_records(buf: &[u8]) -> Vec<u8> {
     let n = keyed_record_count(buf);
+    let tier = simd::active_tier();
     let mut out = vec![0u8; n * RECORD_SIZE];
-    for i in 0..n {
-        out[i * RECORD_SIZE..(i + 1) * RECORD_SIZE].copy_from_slice(record_at(buf, i));
+    for (i, chunk) in out.chunks_exact_mut(RECORD_SIZE).enumerate() {
+        simd::copy_record_100(tier, record_at(buf, i), chunk);
     }
     out
 }
@@ -116,6 +125,7 @@ pub fn gather_keyed_ranges(
 ) -> Vec<usize> {
     let n = crate::sortlib::record_count(src);
     assert_eq!(src_keys.len(), n, "src_keys must cover src");
+    let tier = simd::active_tier();
     let mut byte_bounds = Vec::with_capacity(bounds.len());
     byte_bounds.push(0usize);
     let mut cursor = 0usize;
@@ -129,8 +139,11 @@ pub fn gather_keyed_ranges(
             }
             out[cursor..cursor + KEY_BYTES]
                 .copy_from_slice(&src_keys[p].to_le_bytes());
-            out[cursor + KEY_BYTES..cursor + KEYED_RECORD_SIZE]
-                .copy_from_slice(&src[p * RECORD_SIZE..(p + 1) * RECORD_SIZE]);
+            simd::copy_record_100(
+                tier,
+                &src[p * RECORD_SIZE..(p + 1) * RECORD_SIZE],
+                &mut out[cursor + KEY_BYTES..cursor + KEYED_RECORD_SIZE],
+            );
             cursor += KEYED_RECORD_SIZE;
         }
         byte_bounds.push(cursor);
@@ -155,6 +168,7 @@ pub fn gather_keyed_multi_ranges(
         acc += keyed_record_count(s);
     }
     starts.push(acc);
+    let tier = simd::active_tier();
     let mut byte_bounds = Vec::with_capacity(bounds.len());
     byte_bounds.push(0usize);
     let mut cursor = 0usize;
@@ -169,8 +183,11 @@ pub fn gather_keyed_multi_ranges(
             let b = starts.partition_point(|&s| s <= p) - 1;
             let local = p - starts[b];
             let off = local * KEYED_RECORD_SIZE;
-            out[cursor..cursor + KEYED_RECORD_SIZE]
-                .copy_from_slice(&srcs[b][off..off + KEYED_RECORD_SIZE]);
+            simd::copy_record_108(
+                tier,
+                &srcs[b][off..off + KEYED_RECORD_SIZE],
+                &mut out[cursor..cursor + KEYED_RECORD_SIZE],
+            );
             cursor += KEYED_RECORD_SIZE;
         }
         byte_bounds.push(cursor);
@@ -189,6 +206,7 @@ pub fn gather_records_multi(srcs: &[&[u8]], perm: &[u32], out: &mut [u8]) -> usi
         acc += keyed_record_count(s);
     }
     starts.push(acc);
+    let tier = simd::active_tier();
     let mut cursor = 0usize;
     for &p in perm {
         let p = p as usize;
@@ -197,7 +215,11 @@ pub fn gather_records_multi(srcs: &[&[u8]], perm: &[u32], out: &mut [u8]) -> usi
         }
         let b = starts.partition_point(|&s| s <= p) - 1;
         let local = p - starts[b];
-        out[cursor..cursor + RECORD_SIZE].copy_from_slice(record_at(srcs[b], local));
+        simd::copy_record_100(
+            tier,
+            record_at(srcs[b], local),
+            &mut out[cursor..cursor + RECORD_SIZE],
+        );
         cursor += RECORD_SIZE;
     }
     cursor
@@ -208,7 +230,8 @@ pub fn gather_records_multi(srcs: &[&[u8]], perm: &[u32], out: &mut [u8]) -> usi
 /// in (key, run index, position) order, calling `emit(key, run, pos)`
 /// once per record. Two-pointer fast paths for k <= 2; a loser tree —
 /// one root-to-leaf replay per record — above that (same structure as
-/// [`crate::sortlib::radix::kway_merge`], minus the index indirection).
+/// [`crate::sortlib::reference::kway_merge`], minus the index
+/// indirection).
 fn merge_walk(runs: &[&[u8]], counts: &[usize], mut emit: impl FnMut(u64, usize, usize)) {
     let n_runs = runs.len();
     match n_runs {
@@ -312,6 +335,7 @@ fn merge_walk(runs: &[&[u8]], counts: &[usize], mut emit: impl FnMut(u64, usize,
 pub fn merge_keyed_ranges(runs: &[&[u8]], cuts: &[u64], out: &mut [u8]) -> Vec<usize> {
     debug_assert!(cuts.windows(2).all(|w| w[0] <= w[1]));
     let counts: Vec<usize> = runs.iter().map(|r| keyed_record_count(r)).collect();
+    let tier = simd::active_tier();
     let mut byte_bounds = Vec::with_capacity(cuts.len() + 2);
     byte_bounds.push(0usize);
     let mut cut_idx = 0usize;
@@ -322,8 +346,11 @@ pub fn merge_keyed_ranges(runs: &[&[u8]], cuts: &[u64], out: &mut [u8]) -> Vec<u
             cut_idx += 1;
         }
         let off = p * KEYED_RECORD_SIZE;
-        out[cursor..cursor + KEYED_RECORD_SIZE]
-            .copy_from_slice(&runs[run][off..off + KEYED_RECORD_SIZE]);
+        simd::copy_record_108(
+            tier,
+            &runs[run][off..off + KEYED_RECORD_SIZE],
+            &mut out[cursor..cursor + KEYED_RECORD_SIZE],
+        );
         cursor += KEYED_RECORD_SIZE;
     });
     while byte_bounds.len() < cuts.len() + 1 {
@@ -339,9 +366,14 @@ pub fn merge_keyed_ranges(runs: &[&[u8]], cuts: &[u64], out: &mut [u8]) -> Vec<u
 /// written.
 pub fn merge_keyed_records(runs: &[&[u8]], out: &mut [u8]) -> usize {
     let counts: Vec<usize> = runs.iter().map(|r| keyed_record_count(r)).collect();
+    let tier = simd::active_tier();
     let mut cursor = 0usize;
     merge_walk(runs, &counts, |_key, run, p| {
-        out[cursor..cursor + RECORD_SIZE].copy_from_slice(record_at(runs[run], p));
+        simd::copy_record_100(
+            tier,
+            record_at(runs[run], p),
+            &mut out[cursor..cursor + RECORD_SIZE],
+        );
         cursor += RECORD_SIZE;
     });
     cursor

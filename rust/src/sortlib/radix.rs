@@ -1,13 +1,20 @@
-//! Native Rust sort/merge baseline — the analogue of the paper's 300-line
-//! C++ component ("sorting and partitioning records, and merging sorted
-//! record arrays"). Used (a) as the `Backend::Native` execution path,
-//! (b) as the comparator in the kernel-vs-native ablation bench (DESIGN.md
-//! experiment A2), and (c) as a cross-check oracle in integration tests.
+//! Native Rust sort baseline — the analogue of the paper's 300-line
+//! C++ component ("sorting and partitioning records"). Used (a) as the
+//! `Backend::Native` execution path, (b) as the comparator in the
+//! kernel-vs-native ablation bench (DESIGN.md experiment A2), and (c) as
+//! a cross-check oracle in integration tests.
 //!
 //! The hot path sorts `(u64 key, u32 index)` pairs — never the 100-byte
 //! records — exactly like the XLA kernels; payload movement is a separate
 //! gather. An LSD radix sort (4 passes × 16 bits) beats comparison sorting
-//! at our block sizes; `kway_merge` is a loser-tree-style heap merge.
+//! at our block sizes. Since ISSUE 9 the digit extraction inside the
+//! histogram and scatter passes, and the reducer-cut binary search, run
+//! through the runtime-dispatched [`crate::sortlib::simd`] kernels; the
+//! retired scalar index merge (`kway_merge`) lives on in
+//! [`crate::sortlib::reference`] as the oracle — the production merge is
+//! the fused [`crate::sortlib::keyed::merge_keyed_ranges`].
+
+use crate::sortlib::simd;
 
 /// Reused per-thread radix scratch: ping-pong key/val arrays (SoA) and
 /// the digit histograms. Steady-state, `sort_pairs` performs zero heap
@@ -41,11 +48,14 @@ thread_local! {
 ///
 /// SoA layout (separate key/val scatter arrays, not `(u64, u32)` pairs —
 /// no padding, 50% more records per cache line on the key stream), all
-/// four digit histograms built in one read pass, and passes whose digit
-/// is constant across the block skipped outright (counting sort is
-/// stable, so a single-bucket pass is the identity permutation). Scratch
-/// is thread-local and reused across calls. Bit-for-bit identical to
-/// [`crate::sortlib::reference::sort_pairs`], which property tests pin.
+/// four digit histograms built in one vectorized read pass
+/// ([`simd::histogram4`]), passes whose digit is constant across the
+/// block skipped outright (counting sort is stable, so a single-bucket
+/// pass is the identity permutation), and blockwise-vectorized digit
+/// extraction in the scatter ([`simd::scatter_pass`]). Scratch is
+/// thread-local and reused across calls. Bit-for-bit identical to
+/// [`crate::sortlib::reference::sort_pairs`] on every dispatch tier,
+/// which property tests pin.
 pub fn sort_pairs(keys: &[u64], vals: &[u32]) -> (Vec<u64>, Vec<u32>) {
     assert_eq!(keys.len(), vals.len());
     let n = keys.len();
@@ -64,12 +74,7 @@ pub fn sort_pairs(keys: &[u64], vals: &[u32]) -> (Vec<u64>, Vec<u32>) {
         s.counts.resize(4 << 16, 0);
 
         // one read pass builds all four histograms
-        for &k in keys {
-            for pass in 0..4 {
-                let d = ((k >> (pass * 16)) & 0xFFFF) as usize;
-                s.counts[(pass << 16) | d] += 1;
-            }
-        }
+        simd::histogram4(keys, &mut s.counts);
 
         // `flip` tracks which side currently holds the data
         let mut flip = false;
@@ -92,14 +97,7 @@ pub fn sort_pairs(keys: &[u64], vals: &[u32]) -> (Vec<u64>, Vec<u32>) {
             } else {
                 (&s.keys, &s.vals, &mut s.keys2, &mut s.vals2)
             };
-            let shift = pass * 16;
-            for (&k, &v) in src_k.iter().zip(src_v) {
-                let d = ((k >> shift) & 0xFFFF) as usize;
-                let pos = hist[d] as usize;
-                dst_k[pos] = k;
-                dst_v[pos] = v;
-                hist[d] += 1;
-            }
+            simd::scatter_pass(src_k, src_v, dst_k, dst_v, hist, (pass * 16) as u32);
             flip = !flip;
         }
         if flip {
@@ -110,116 +108,14 @@ pub fn sort_pairs(keys: &[u64], vals: &[u32]) -> (Vec<u64>, Vec<u32>) {
     })
 }
 
-/// Merge sorted runs of (key, val) pairs into one sorted pair of vectors.
-/// Runs must each be ascending by (key, val); `val == u32::MAX` is
-/// reserved as the exhausted-run sentinel (our vals are record indices,
-/// always < u32::MAX). O(n log k) via a loser tree — one root-to-leaf
-/// replay per record instead of a binary-heap pop+push (the heap showed
-/// at ~13% of end-to-end CPU; EXPERIMENTS.md §Perf L3 iteration 6), with
-/// a two-pointer fast path for k <= 2.
-pub fn kway_merge(runs: &[(&[u64], &[u32])]) -> (Vec<u64>, Vec<u32>) {
-    let total: usize = runs.iter().map(|(k, _)| k.len()).sum();
-    let mut out_keys = Vec::with_capacity(total);
-    let mut out_vals = Vec::with_capacity(total);
-    for (r, (k, v)) in runs.iter().enumerate() {
-        assert_eq!(k.len(), v.len(), "run {r} keys/vals length mismatch");
-    }
-    match runs.len() {
-        0 => return (out_keys, out_vals),
-        1 => {
-            out_keys.extend_from_slice(runs[0].0);
-            out_vals.extend_from_slice(runs[0].1);
-            return (out_keys, out_vals);
-        }
-        2 => {
-            let ((ka, va), (kb, vb)) = (runs[0], runs[1]);
-            let (mut i, mut j) = (0, 0);
-            while i < ka.len() && j < kb.len() {
-                if (ka[i], va[i]) <= (kb[j], vb[j]) {
-                    out_keys.push(ka[i]);
-                    out_vals.push(va[i]);
-                    i += 1;
-                } else {
-                    out_keys.push(kb[j]);
-                    out_vals.push(vb[j]);
-                    j += 1;
-                }
-            }
-            out_keys.extend_from_slice(&ka[i..]);
-            out_vals.extend_from_slice(&va[i..]);
-            out_keys.extend_from_slice(&kb[j..]);
-            out_vals.extend_from_slice(&vb[j..]);
-            return (out_keys, out_vals);
-        }
-        _ => {}
-    }
-
-    let n_runs = runs.len();
-    let k = n_runs.next_power_of_two();
-    let mut pos = vec![0usize; n_runs];
-    // current head of leaf r; (MAX, MAX) for padding/exhausted leaves
-    let key_of = |r: usize, pos: &[usize]| -> (u64, u32) {
-        if r < n_runs && pos[r] < runs[r].0.len() {
-            (runs[r].0[pos[r]], runs[r].1[pos[r]])
-        } else {
-            (u64::MAX, u32::MAX)
-        }
-    };
-
-    // Build: pairwise tournament, level by level. tree[1..k] store the
-    // loser of the match played at that internal node; tree[0] the winner.
-    let mut tree = vec![0usize; k];
-    let mut level: Vec<usize> = (0..k).collect();
-    let mut base = k / 2;
-    while level.len() > 1 {
-        let mut next = Vec::with_capacity(level.len() / 2);
-        for i in 0..level.len() / 2 {
-            let (a, b) = (level[2 * i], level[2 * i + 1]);
-            let (w, l) = if key_of(a, &pos) <= key_of(b, &pos) {
-                (a, b)
-            } else {
-                (b, a)
-            };
-            tree[base + i] = l;
-            next.push(w);
-        }
-        level = next;
-        base /= 2;
-    }
-    tree[0] = level[0];
-
-    loop {
-        let w = tree[0];
-        if w >= n_runs || pos[w] >= runs[w].0.len() {
-            break; // the global winner is a sentinel: all runs exhausted
-        }
-        let p = pos[w];
-        out_keys.push(runs[w].0[p]);
-        out_vals.push(runs[w].1[p]);
-        pos[w] = p + 1;
-        // replay the path from leaf w to the root
-        let mut winner = w;
-        let mut node = (k + w) >> 1;
-        while node >= 1 {
-            let contender = tree[node];
-            if key_of(contender, &pos) < key_of(winner, &pos) {
-                tree[node] = winner;
-                winner = contender;
-            }
-            node >>= 1;
-        }
-        tree[0] = winner;
-    }
-    (out_keys, out_vals)
-}
-
 /// Partition offsets of an ascending key slice against interior cuts:
 /// `offs[c] = #{keys < cuts[c]}` — same contract as the Pallas partition
-/// kernel (strict `<`, so a key equal to a cut belongs to the right range).
+/// kernel (strict `<`, so a key equal to a cut belongs to the right
+/// range). Dispatches to [`simd::partition_offsets`] (4-lane branchless
+/// lower bound on AVX2, `partition_point` elsewhere); pinned against
+/// [`crate::sortlib::reference::partition_offsets`].
 pub fn partition_offsets(sorted_keys: &[u64], cuts: &[u64]) -> Vec<u32> {
-    cuts.iter()
-        .map(|&c| sorted_keys.partition_point(|&k| k < c) as u32)
-        .collect()
+    simd::partition_offsets(sorted_keys, cuts)
 }
 
 #[cfg(test)]
@@ -260,45 +156,6 @@ mod tests {
     #[test]
     fn radix_empty() {
         let (k, v) = sort_pairs(&[], &[]);
-        assert!(k.is_empty() && v.is_empty());
-    }
-
-    #[test]
-    fn kway_merge_matches_full_sort() {
-        let mut rng = Xoshiro256::new(9);
-        // 7 runs of uneven lengths
-        let runs_data: Vec<(Vec<u64>, Vec<u32>)> = (0..7)
-            .map(|r| {
-                let n = 10 + (rng.next_below(100) as usize);
-                let mut keys: Vec<u64> =
-                    (0..n).map(|_| rng.next_u64()).collect();
-                keys.sort_unstable();
-                let vals: Vec<u32> =
-                    (0..n as u32).map(|i| i + r * 1000).collect();
-                (keys, vals)
-            })
-            .collect();
-        let runs: Vec<(&[u64], &[u32])> = runs_data
-            .iter()
-            .map(|(k, v)| (k.as_slice(), v.as_slice()))
-            .collect();
-        let (mk, mv) = kway_merge(&runs);
-        let mut flat: Vec<(u64, u32)> = runs_data
-            .iter()
-            .flat_map(|(k, v)| k.iter().copied().zip(v.iter().copied()))
-            .collect();
-        flat.sort();
-        let (ek, ev): (Vec<u64>, Vec<u32>) = flat.into_iter().unzip();
-        assert_eq!(mk, ek);
-        assert_eq!(mv, ev);
-    }
-
-    #[test]
-    fn kway_merge_empty_runs() {
-        let (k, v) = kway_merge(&[(&[], &[]), (&[1u64][..], &[0u32][..])]);
-        assert_eq!(k, vec![1]);
-        assert_eq!(v, vec![0]);
-        let (k, v) = kway_merge(&[]);
         assert!(k.is_empty() && v.is_empty());
     }
 

@@ -1,17 +1,24 @@
 //! Reference (pre-optimization) kernel implementations, kept verbatim
 //! as the correctness oracle and perf-gate baseline.
 //!
-//! The hot-path kernels in [`crate::sortlib::radix`] and
-//! [`crate::sortlib::fix_key_ties`] were rewritten for cache efficiency
-//! and allocation hygiene (SoA radix passes with reused scratch,
-//! in-place tie repair). These are the originals they replaced: simple,
-//! obviously-correct, and allocation-heavy. Property tests pin the
-//! rewrites bit-for-bit against them (`tests/properties.rs`), and
-//! `benches/kernels.rs` measures the speedup ratio the CI perf gate
-//! enforces — so this module is compiled into the library proper, not
-//! `#[cfg(test)]`.
+//! The hot-path kernels in [`crate::sortlib::radix`],
+//! [`crate::sortlib::keyed`], [`crate::sortlib::gensort`] and
+//! [`crate::sortlib::fix_key_ties`] were rewritten for cache efficiency,
+//! allocation hygiene and — since ISSUE 9 — runtime-dispatched SIMD
+//! ([`crate::sortlib::simd`]). These are the originals they replaced:
+//! simple, obviously-correct, scalar, and allocation-heavy. Property
+//! tests pin the rewrites bit-for-bit against them on **every** dispatch
+//! tier (`tests/properties.rs` P7–P13), and `benches/kernels.rs`
+//! measures the speedup ratios the CI perf gate enforces — so this
+//! module is compiled into the library proper, not `#[cfg(test)]`.
+//!
+//! Nothing in this module may call into `sortlib::simd`: every function
+//! here is the frozen scalar definition the vector paths are judged
+//! against.
 
+use crate::sortlib::gensort::{skew_key, GenSpec, Skew};
 use crate::sortlib::{partition_key, record_count, Key, Record, RECORD_SIZE};
+use crate::util::rng::stream_at;
 
 /// Pre-SoA [`crate::sortlib::radix::sort_pairs`]: LSD radix over AoS
 /// `(u64, u32)` pairs, 4 × 16-bit passes, no pass skipping.
@@ -80,16 +87,172 @@ pub fn fix_key_ties(buf: &mut [u8]) -> usize {
     moved
 }
 
+/// Merge sorted runs of (key, val) pairs into one sorted pair of vectors.
+/// Runs must each be ascending by (key, val); `val == u32::MAX` is
+/// reserved as the exhausted-run sentinel (our vals are record indices,
+/// always < u32::MAX). O(n log k) via a loser tree — one root-to-leaf
+/// replay per record instead of a binary-heap pop+push (the heap showed
+/// at ~13% of end-to-end CPU; EXPERIMENTS.md §Perf L3 iteration 6), with
+/// a two-pointer fast path for k <= 2.
+///
+/// Retired from the hot path in ISSUE 9: the production merge per
+/// backend is the fused [`crate::sortlib::keyed::merge_keyed_ranges`]
+/// walk (native) and the XLA merge kernel + keyed gather (pjrt). This
+/// index-pair merge remains the oracle the fused walks are pinned
+/// against, and the fallback the XLA planner path reuses.
+pub fn kway_merge(runs: &[(&[u64], &[u32])]) -> (Vec<u64>, Vec<u32>) {
+    let total: usize = runs.iter().map(|(k, _)| k.len()).sum();
+    let mut out_keys = Vec::with_capacity(total);
+    let mut out_vals = Vec::with_capacity(total);
+    for (r, (k, v)) in runs.iter().enumerate() {
+        assert_eq!(k.len(), v.len(), "run {r} keys/vals length mismatch");
+    }
+    match runs.len() {
+        0 => return (out_keys, out_vals),
+        1 => {
+            out_keys.extend_from_slice(runs[0].0);
+            out_vals.extend_from_slice(runs[0].1);
+            return (out_keys, out_vals);
+        }
+        2 => {
+            let ((ka, va), (kb, vb)) = (runs[0], runs[1]);
+            let (mut i, mut j) = (0, 0);
+            while i < ka.len() && j < kb.len() {
+                if (ka[i], va[i]) <= (kb[j], vb[j]) {
+                    out_keys.push(ka[i]);
+                    out_vals.push(va[i]);
+                    i += 1;
+                } else {
+                    out_keys.push(kb[j]);
+                    out_vals.push(vb[j]);
+                    j += 1;
+                }
+            }
+            out_keys.extend_from_slice(&ka[i..]);
+            out_vals.extend_from_slice(&va[i..]);
+            out_keys.extend_from_slice(&kb[j..]);
+            out_vals.extend_from_slice(&vb[j..]);
+            return (out_keys, out_vals);
+        }
+        _ => {}
+    }
+
+    let n_runs = runs.len();
+    let k = n_runs.next_power_of_two();
+    let mut pos = vec![0usize; n_runs];
+    // current head of leaf r; (MAX, MAX) for padding/exhausted leaves
+    let key_of = |r: usize, pos: &[usize]| -> (u64, u32) {
+        if r < n_runs && pos[r] < runs[r].0.len() {
+            (runs[r].0[pos[r]], runs[r].1[pos[r]])
+        } else {
+            (u64::MAX, u32::MAX)
+        }
+    };
+
+    // Build: pairwise tournament, level by level. tree[1..k] store the
+    // loser of the match played at that internal node; tree[0] the winner.
+    let mut tree = vec![0usize; k];
+    let mut level: Vec<usize> = (0..k).collect();
+    let mut base = k / 2;
+    while level.len() > 1 {
+        let mut next = Vec::with_capacity(level.len() / 2);
+        for i in 0..level.len() / 2 {
+            let (a, b) = (level[2 * i], level[2 * i + 1]);
+            let (w, l) = if key_of(a, &pos) <= key_of(b, &pos) {
+                (a, b)
+            } else {
+                (b, a)
+            };
+            tree[base + i] = l;
+            next.push(w);
+        }
+        level = next;
+        base /= 2;
+    }
+    tree[0] = level[0];
+
+    loop {
+        let w = tree[0];
+        if w >= n_runs || pos[w] >= runs[w].0.len() {
+            break; // the global winner is a sentinel: all runs exhausted
+        }
+        let p = pos[w];
+        out_keys.push(runs[w].0[p]);
+        out_vals.push(runs[w].1[p]);
+        pos[w] = p + 1;
+        // replay the path from leaf w to the root
+        let mut winner = w;
+        let mut node = (k + w) >> 1;
+        while node >= 1 {
+            let contender = tree[node];
+            if key_of(contender, &pos) < key_of(winner, &pos) {
+                tree[node] = winner;
+                winner = contender;
+            }
+            node >>= 1;
+        }
+        tree[0] = winner;
+    }
+    (out_keys, out_vals)
+}
+
+/// Frozen scalar [`crate::sortlib::radix::partition_offsets`]:
+/// `partition_point` per cut, the definition the AVX2 branchless lower
+/// bound must reproduce exactly.
+pub fn partition_offsets(sorted_keys: &[u64], cuts: &[u64]) -> Vec<u32> {
+    cuts.iter()
+        .map(|&c| sorted_keys.partition_point(|&k| k < c) as u32)
+        .collect()
+}
+
+/// Frozen scalar [`crate::sortlib::extract_partition_keys`]: one
+/// big-endian u64 load per plain record.
+pub fn extract_partition_keys(buf: &[u8]) -> Vec<u64> {
+    buf.chunks_exact(RECORD_SIZE).map(partition_key).collect()
+}
+
+/// Frozen scalar [`crate::sortlib::keyed::keys_of`]: one little-endian
+/// u64 load per keyed record.
+pub fn keys_of_keyed(buf: &[u8]) -> Vec<u64> {
+    use crate::sortlib::keyed::KEYED_RECORD_SIZE;
+    assert_eq!(buf.len() % KEYED_RECORD_SIZE, 0);
+    buf.chunks_exact(KEYED_RECORD_SIZE)
+        .map(|r| u64::from_le_bytes(r[..8].try_into().unwrap()))
+        .collect()
+}
+
+/// Frozen scalar [`crate::sortlib::gensort::generate_partition_with`]:
+/// per-record `stream_at` draws, no batching. The batched generator must
+/// reproduce these bytes exactly for any (seed, offset, records, skew).
+pub fn generate_partition_with(spec: &GenSpec, skew: Skew) -> Vec<u8> {
+    let mut buf = vec![0u8; spec.records as usize * RECORD_SIZE];
+    for (j, out) in buf.chunks_exact_mut(RECORD_SIZE).enumerate() {
+        let i = spec.offset + j as u64;
+        let r0 = skew_key(stream_at(spec.seed, i.wrapping_mul(2)), skew);
+        let r1 = stream_at(spec.seed, i.wrapping_mul(2) + 1);
+        out[..8].copy_from_slice(&r0.to_be_bytes());
+        out[8..10].copy_from_slice(&r1.to_be_bytes()[..2]);
+        out[10..18].copy_from_slice(&i.to_be_bytes());
+        let mut acc = r1 | 1;
+        for chunk in out[18..].chunks_mut(8) {
+            acc = acc.wrapping_mul(0x9E3779B97F4A7C15).rotate_left(17);
+            let bytes = acc.to_le_bytes();
+            for (dst, src) in chunk.iter_mut().zip(bytes.iter()) {
+                *dst = b'0' + (src & 31);
+            }
+        }
+    }
+    buf
+}
+
 /// The pre-fusion merge-task data path: index-merge the runs' keys, then
 /// gather payload bytes range-by-range with a per-record binary search
 /// ([`crate::sortlib::apply_permutation_multi_ranges`]). The fused
 /// [`crate::sortlib::keyed::merge_keyed_ranges`] must produce the same
 /// record bytes in the same ranges; this composition is its oracle.
 pub fn merge_then_gather(srcs: &[&[u8]], cuts: &[u64]) -> Vec<Vec<u8>> {
-    let key_runs: Vec<Vec<u64>> = srcs
-        .iter()
-        .map(|b| crate::sortlib::extract_partition_keys(b))
-        .collect();
+    let key_runs: Vec<Vec<u64>> =
+        srcs.iter().map(|b| extract_partition_keys(b)).collect();
     let mut starts = Vec::with_capacity(key_runs.len());
     let mut acc = 0u32;
     for k in &key_runs {
@@ -106,11 +269,56 @@ pub fn merge_then_gather(srcs: &[&[u8]], cuts: &[u64]) -> Vec<Vec<u8>> {
         .zip(&vals)
         .map(|(k, v)| (k.as_slice(), v.as_slice()))
         .collect();
-    let (keys, perm) = crate::sortlib::radix::kway_merge(&pairs);
-    let offs = crate::sortlib::radix::partition_offsets(&keys, cuts);
+    let (keys, perm) = kway_merge(&pairs);
+    let offs = partition_offsets(&keys, cuts);
     let mut bounds = Vec::with_capacity(cuts.len() + 2);
     bounds.push(0);
     bounds.extend_from_slice(&offs);
     bounds.push(acc);
     crate::sortlib::apply_permutation_multi_ranges(srcs, &perm, &bounds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn kway_merge_matches_full_sort() {
+        let mut rng = Xoshiro256::new(9);
+        // 7 runs of uneven lengths
+        let runs_data: Vec<(Vec<u64>, Vec<u32>)> = (0..7)
+            .map(|r| {
+                let n = 10 + (rng.next_below(100) as usize);
+                let mut keys: Vec<u64> =
+                    (0..n).map(|_| rng.next_u64()).collect();
+                keys.sort_unstable();
+                let vals: Vec<u32> =
+                    (0..n as u32).map(|i| i + r * 1000).collect();
+                (keys, vals)
+            })
+            .collect();
+        let runs: Vec<(&[u64], &[u32])> = runs_data
+            .iter()
+            .map(|(k, v)| (k.as_slice(), v.as_slice()))
+            .collect();
+        let (mk, mv) = kway_merge(&runs);
+        let mut flat: Vec<(u64, u32)> = runs_data
+            .iter()
+            .flat_map(|(k, v)| k.iter().copied().zip(v.iter().copied()))
+            .collect();
+        flat.sort();
+        let (ek, ev): (Vec<u64>, Vec<u32>) = flat.into_iter().unzip();
+        assert_eq!(mk, ek);
+        assert_eq!(mv, ev);
+    }
+
+    #[test]
+    fn kway_merge_empty_runs() {
+        let (k, v) = kway_merge(&[(&[], &[]), (&[1u64][..], &[0u32][..])]);
+        assert_eq!(k, vec![1]);
+        assert_eq!(v, vec![0]);
+        let (k, v) = kway_merge(&[]);
+        assert!(k.is_empty() && v.is_empty());
+    }
 }

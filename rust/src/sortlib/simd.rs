@@ -1,0 +1,999 @@
+//! Runtime-dispatched SIMD kernels for the data-plane inner loops
+//! (ISSUE 9 / ROADMAP item 1).
+//!
+//! Every hot byte-moving loop in `sortlib` — radix digit extraction and
+//! scatter ([`crate::sortlib::radix::sort_pairs`]), strided key gathers
+//! ([`crate::sortlib::keyed::keys_of`],
+//! [`crate::sortlib::extract_partition_keys`]), the 108/100-byte record
+//! copies inside the fused merge walk and the gather family, reducer-cut
+//! binary search ([`partition_offsets`]) and the gensort SplitMix64 draw
+//! stream ([`stream_block`]) — funnels through this module. A dispatch
+//! tier is detected **once** per process from CPU features (AVX2 → SSE2
+//! on x86_64, NEON on aarch64, scalar anywhere else) and every kernel
+//! falls back to the portable scalar code, which is definitionally
+//! bit-identical to the `sortlib::reference` oracles.
+//!
+//! # Tier × kernel matrix
+//!
+//! A tier accelerates only the kernels its ISA expresses profitably; the
+//! rest run the scalar loop *under that tier* and the output is
+//! byte-identical either way (pinned by properties P10–P13 and the
+//! forced-dispatch matrix test):
+//!
+//! | kernel               | SSE2 | AVX2 | NEON | notes                        |
+//! |----------------------|------|------|------|------------------------------|
+//! | `histogram4`         |  ✓   |  ✓   |  ✓   | vector digit extract         |
+//! | `scatter_pass`       |  ✓   |  ✓   |  ✓   | block digit precompute       |
+//! | `copy_record_108/100`|  ✓   |  ✓   |  ✓   | overlapping-tail stores      |
+//! | `keys_le/be_strided` |  —   |  ✓   |  —   | needs `vpgatherqq`           |
+//! | `partition_offsets`  |  —   |  ✓   |  —   | 4-lane branchless bsearch    |
+//! | `stream_block`       |  ✓   |  ✓   |  —   | NEON lacks 64-bit multiply   |
+//!
+//! # Dispatch control
+//!
+//! * `EXOSHUFFLE_SIMD=scalar|sse2|avx2|neon|auto` — env override read at
+//!   first use. Demanding a tier the CPU (or architecture) cannot run is
+//!   a loud panic, never a silent downgrade.
+//! * [`with_forced_tier`] — scoped programmatic override for tests and
+//!   benches; serialized by a global lock so concurrent forcings cannot
+//!   interleave, and restored even if the closure panics.
+//!
+//! # `unsafe` audit rules
+//!
+//! Every `unsafe` block in this module obeys, and is reviewed against,
+//! exactly three rules:
+//!
+//! 1. **Feature-gated entry**: a `#[target_feature]` function is only
+//!    reachable through a dispatch arm whose tier implies the feature
+//!    (detected via `is_x86_feature_detected!` / aarch64 equivalent, or
+//!    an explicit override that panics when unavailable).
+//! 2. **No out-of-bounds lane reads**: all vector loads/stores are the
+//!    unaligned variants (`loadu`/`storeu`/`vld1q`/`vst1q` — no
+//!    alignment assumptions anywhere), and every lane of every access
+//!    lies inside the source/destination slice. Record-copy tails use
+//!    *overlapping* stores that re-cover bytes already written rather
+//!    than reading or writing a single byte past the end.
+//! 3. **Scalar tails**: main loops advance in whole vectors via
+//!    `chunks_exact`; remainders always run the same scalar code as the
+//!    `Scalar` tier, so tail elements take a path that is trivially
+//!    identical to the fallback.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// A dispatch tier: which instruction set the kernels may assume.
+/// Ordering is not meaningful across architectures (`Neon` is neither
+/// above nor below `Avx2`; they can never both be available).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdTier {
+    /// Portable scalar fallback — available everywhere.
+    Scalar,
+    /// x86_64 SSE2 (baseline on every x86_64 CPU).
+    Sse2,
+    /// x86_64 AVX2.
+    Avx2,
+    /// aarch64 NEON (baseline on every aarch64 CPU).
+    Neon,
+}
+
+impl SimdTier {
+    /// Lowercase name, matching the `EXOSHUFFLE_SIMD` vocabulary.
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdTier::Scalar => "scalar",
+            SimdTier::Sse2 => "sse2",
+            SimdTier::Avx2 => "avx2",
+            SimdTier::Neon => "neon",
+        }
+    }
+
+    /// Parse an `EXOSHUFFLE_SIMD` value (`"auto"` → `None` = detect).
+    pub fn from_name(s: &str) -> Option<Option<SimdTier>> {
+        match s {
+            "auto" => Some(None),
+            "scalar" => Some(Some(SimdTier::Scalar)),
+            "sse2" => Some(Some(SimdTier::Sse2)),
+            "avx2" => Some(Some(SimdTier::Avx2)),
+            "neon" => Some(Some(SimdTier::Neon)),
+            _ => None,
+        }
+    }
+
+    fn to_u8(self) -> u8 {
+        match self {
+            SimdTier::Scalar => 1,
+            SimdTier::Sse2 => 2,
+            SimdTier::Avx2 => 3,
+            SimdTier::Neon => 4,
+        }
+    }
+
+    fn of_u8(v: u8) -> Option<SimdTier> {
+        match v {
+            1 => Some(SimdTier::Scalar),
+            2 => Some(SimdTier::Sse2),
+            3 => Some(SimdTier::Avx2),
+            4 => Some(SimdTier::Neon),
+            _ => None,
+        }
+    }
+}
+
+/// Can this process actually execute `tier`'s instructions?
+pub fn tier_available(tier: SimdTier) -> bool {
+    match tier {
+        SimdTier::Scalar => true,
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Sse2 => true, // architectural baseline on x86_64
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Avx2 => std::arch::is_x86_feature_detected!("avx2"),
+        #[cfg(target_arch = "aarch64")]
+        SimdTier::Neon => std::arch::is_aarch64_feature_detected!("neon"),
+        #[allow(unreachable_patterns)]
+        _ => false,
+    }
+}
+
+/// All tiers this process can execute, `Scalar` first. This is what the
+/// property suite and the forced-dispatch matrix test iterate over.
+pub fn available_tiers() -> Vec<SimdTier> {
+    [SimdTier::Scalar, SimdTier::Sse2, SimdTier::Avx2, SimdTier::Neon]
+        .into_iter()
+        .filter(|&t| tier_available(t))
+        .collect()
+}
+
+/// Best tier the CPU supports (the `auto` choice).
+pub fn best_available() -> SimdTier {
+    if tier_available(SimdTier::Avx2) {
+        SimdTier::Avx2
+    } else if tier_available(SimdTier::Neon) {
+        SimdTier::Neon
+    } else if tier_available(SimdTier::Sse2) {
+        SimdTier::Sse2
+    } else {
+        SimdTier::Scalar
+    }
+}
+
+/// Tier chosen at startup: `EXOSHUFFLE_SIMD` override or auto-detect.
+static DETECTED: OnceLock<SimdTier> = OnceLock::new();
+/// Scoped test/bench override (0 = none); see [`with_forced_tier`].
+static FORCED: AtomicU8 = AtomicU8::new(0);
+/// Serializes [`with_forced_tier`] scopes across threads.
+static FORCE_LOCK: Mutex<()> = Mutex::new(());
+
+fn detect() -> SimdTier {
+    match std::env::var("EXOSHUFFLE_SIMD") {
+        Ok(v) => match SimdTier::from_name(v.trim()) {
+            Some(None) => best_available(),
+            Some(Some(t)) => {
+                assert!(
+                    tier_available(t),
+                    "EXOSHUFFLE_SIMD={} demanded, but this CPU/arch cannot \
+                     run it (available: {:?})",
+                    t.name(),
+                    available_tiers()
+                );
+                t
+            }
+            None => panic!(
+                "invalid EXOSHUFFLE_SIMD={v:?} \
+                 (expected scalar|sse2|avx2|neon|auto)"
+            ),
+        },
+        Err(_) => best_available(),
+    }
+}
+
+/// The tier every kernel in this module dispatches on **right now**:
+/// a [`with_forced_tier`] scope if one is active, else the
+/// detected-once startup tier.
+#[inline]
+pub fn active_tier() -> SimdTier {
+    if let Some(t) = SimdTier::of_u8(FORCED.load(Ordering::Relaxed)) {
+        return t;
+    }
+    *DETECTED.get_or_init(detect)
+}
+
+/// The detected-once startup tier (`EXOSHUFFLE_SIMD` or auto), ignoring
+/// any [`with_forced_tier`] scope. Lets tests assert the env contract
+/// without racing concurrently-forced scopes in other tests.
+pub fn detected_tier() -> SimdTier {
+    *DETECTED.get_or_init(detect)
+}
+
+/// Run `f` with dispatch pinned to `tier` (must be available — loud
+/// panic otherwise). Scopes are serialized by a global lock, and the
+/// previous state is restored even if `f` panics, so concurrent tests
+/// can each pin a tier without corrupting one another permanently.
+pub fn with_forced_tier<R>(tier: SimdTier, f: impl FnOnce() -> R) -> R {
+    assert!(
+        tier_available(tier),
+        "cannot force unavailable SIMD tier {} (available: {:?})",
+        tier.name(),
+        available_tiers()
+    );
+    let _guard = FORCE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    struct Restore(u8);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            FORCED.store(self.0, Ordering::Relaxed);
+        }
+    }
+    let _restore = Restore(FORCED.swap(tier.to_u8(), Ordering::Relaxed));
+    f()
+}
+
+// ---------------------------------------------------------------------------
+// histogram4: all four 16-bit digit histograms of a key slice in one pass
+// ---------------------------------------------------------------------------
+
+/// Build all four 16-bit-digit histograms of `keys` in one read pass:
+/// `counts[(pass << 16) | digit] += 1` for `pass in 0..4`. `counts` must
+/// hold `4 << 16` entries (not required to be zeroed — counts add on).
+/// Vector tiers extract the four digits of 2–4 keys at a time; the
+/// increments stay scalar (x86/aarch64 have no usable scatter-add).
+pub fn histogram4(keys: &[u64], counts: &mut [u32]) {
+    assert!(counts.len() >= 4 << 16, "counts must hold 4 histograms");
+    match active_tier() {
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Avx2 => unsafe { histogram4_avx2(keys, counts) },
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Sse2 => unsafe { histogram4_sse2(keys, counts) },
+        #[cfg(target_arch = "aarch64")]
+        SimdTier::Neon => unsafe { histogram4_neon(keys, counts) },
+        _ => histogram4_scalar(keys, counts),
+    }
+}
+
+fn histogram4_scalar(keys: &[u64], counts: &mut [u32]) {
+    for &k in keys {
+        for pass in 0..4 {
+            let d = ((k >> (pass * 16)) & 0xFFFF) as usize;
+            counts[(pass << 16) | d] += 1;
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn histogram4_avx2(keys: &[u64], counts: &mut [u32]) {
+    use std::arch::x86_64::*;
+    let mask = _mm256_set1_epi64x(0xFFFF);
+    let mut d = [0u64; 4];
+    let mut chunks = keys.chunks_exact(4);
+    for ch in &mut chunks {
+        // Safety (rule 2): ch has exactly 4 u64s = 32 bytes; loadu has
+        // no alignment requirement.
+        let v = _mm256_loadu_si256(ch.as_ptr() as *const __m256i);
+        let d0 = _mm256_and_si256(v, mask);
+        _mm256_storeu_si256(d.as_mut_ptr() as *mut __m256i, d0);
+        for &x in &d {
+            counts[x as usize] += 1;
+        }
+        let d1 = _mm256_and_si256(_mm256_srli_epi64::<16>(v), mask);
+        _mm256_storeu_si256(d.as_mut_ptr() as *mut __m256i, d1);
+        for &x in &d {
+            counts[(1 << 16) | x as usize] += 1;
+        }
+        let d2 = _mm256_and_si256(_mm256_srli_epi64::<32>(v), mask);
+        _mm256_storeu_si256(d.as_mut_ptr() as *mut __m256i, d2);
+        for &x in &d {
+            counts[(2 << 16) | x as usize] += 1;
+        }
+        let d3 = _mm256_srli_epi64::<48>(v);
+        _mm256_storeu_si256(d.as_mut_ptr() as *mut __m256i, d3);
+        for &x in &d {
+            counts[(3 << 16) | x as usize] += 1;
+        }
+    }
+    histogram4_scalar(chunks.remainder(), counts); // rule 3: scalar tail
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse2")]
+unsafe fn histogram4_sse2(keys: &[u64], counts: &mut [u32]) {
+    use std::arch::x86_64::*;
+    let mask = _mm_set1_epi64x(0xFFFF);
+    let mut d = [0u64; 2];
+    let mut chunks = keys.chunks_exact(2);
+    for ch in &mut chunks {
+        // Safety (rule 2): ch has exactly 2 u64s = 16 bytes, unaligned ok.
+        let v = _mm_loadu_si128(ch.as_ptr() as *const __m128i);
+        let d0 = _mm_and_si128(v, mask);
+        _mm_storeu_si128(d.as_mut_ptr() as *mut __m128i, d0);
+        counts[d[0] as usize] += 1;
+        counts[d[1] as usize] += 1;
+        let d1 = _mm_and_si128(_mm_srli_epi64::<16>(v), mask);
+        _mm_storeu_si128(d.as_mut_ptr() as *mut __m128i, d1);
+        counts[(1 << 16) | d[0] as usize] += 1;
+        counts[(1 << 16) | d[1] as usize] += 1;
+        let d2 = _mm_and_si128(_mm_srli_epi64::<32>(v), mask);
+        _mm_storeu_si128(d.as_mut_ptr() as *mut __m128i, d2);
+        counts[(2 << 16) | d[0] as usize] += 1;
+        counts[(2 << 16) | d[1] as usize] += 1;
+        let d3 = _mm_srli_epi64::<48>(v);
+        _mm_storeu_si128(d.as_mut_ptr() as *mut __m128i, d3);
+        counts[(3 << 16) | d[0] as usize] += 1;
+        counts[(3 << 16) | d[1] as usize] += 1;
+    }
+    histogram4_scalar(chunks.remainder(), counts);
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn histogram4_neon(keys: &[u64], counts: &mut [u32]) {
+    use std::arch::aarch64::*;
+    let mask = vdupq_n_u64(0xFFFF);
+    let mut d = [0u64; 2];
+    let mut chunks = keys.chunks_exact(2);
+    for ch in &mut chunks {
+        // Safety (rule 2): ch has exactly 2 u64s; vld1q is unaligned-safe.
+        let v = vld1q_u64(ch.as_ptr());
+        for pass in 0..4usize {
+            // negative shift amount = logical right shift (USHL semantics)
+            let sh = vdupq_n_s64(-((pass as i64) * 16));
+            let dig = vandq_u64(vshlq_u64(v, sh), mask);
+            vst1q_u64(d.as_mut_ptr(), dig);
+            counts[(pass << 16) | d[0] as usize] += 1;
+            counts[(pass << 16) | d[1] as usize] += 1;
+        }
+    }
+    histogram4_scalar(chunks.remainder(), counts);
+}
+
+// ---------------------------------------------------------------------------
+// scatter_pass: one stable counting-sort scatter of (key, val) pairs
+// ---------------------------------------------------------------------------
+
+/// Digit block size for [`scatter_pass`]: the digits of this many keys
+/// are precomputed vector-wide into a stack buffer before the (inherently
+/// serial, because `hist` carries a running cursor) scatter writes.
+const DIGIT_BLOCK: usize = 256;
+
+/// One radix scatter pass: stable counting sort of `(src_k, src_v)` into
+/// `(dst_k, dst_v)` by digit `(k >> shift) & 0xFFFF`, advancing the
+/// running cursors in `hist` (prefix sums on entry, end offsets on
+/// exit). The digit extraction — the only data-parallel part — is
+/// vectorized blockwise; the scatter itself is a serial walk because
+/// each write position depends on all prior equal digits.
+pub fn scatter_pass(
+    src_k: &[u64],
+    src_v: &[u32],
+    dst_k: &mut [u64],
+    dst_v: &mut [u32],
+    hist: &mut [u32],
+    shift: u32,
+) {
+    debug_assert_eq!(src_k.len(), src_v.len());
+    debug_assert_eq!(src_k.len(), dst_k.len());
+    debug_assert_eq!(src_k.len(), dst_v.len());
+    let tier = active_tier();
+    let mut dbuf = [0u64; DIGIT_BLOCK];
+    let mut base = 0usize;
+    while base < src_k.len() {
+        let end = (base + DIGIT_BLOCK).min(src_k.len());
+        let block = &src_k[base..end];
+        digits_into(tier, block, shift, &mut dbuf[..block.len()]);
+        for ((&k, &v), &d) in
+            block.iter().zip(&src_v[base..end]).zip(&dbuf[..block.len()])
+        {
+            let d = d as usize;
+            let pos = hist[d] as usize;
+            dst_k[pos] = k;
+            dst_v[pos] = v;
+            hist[d] += 1;
+        }
+        base = end;
+    }
+}
+
+/// Write `(k >> shift) & 0xFFFF` for each key into `out` (equal length).
+fn digits_into(tier: SimdTier, keys: &[u64], shift: u32, out: &mut [u64]) {
+    debug_assert_eq!(keys.len(), out.len());
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Avx2 => unsafe { digits_avx2(keys, shift, out) },
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Sse2 => unsafe { digits_sse2(keys, shift, out) },
+        #[cfg(target_arch = "aarch64")]
+        SimdTier::Neon => unsafe { digits_neon(keys, shift, out) },
+        _ => digits_scalar(keys, shift, out),
+    }
+}
+
+fn digits_scalar(keys: &[u64], shift: u32, out: &mut [u64]) {
+    for (&k, o) in keys.iter().zip(out) {
+        *o = (k >> shift) & 0xFFFF;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn digits_avx2(keys: &[u64], shift: u32, out: &mut [u64]) {
+    use std::arch::x86_64::*;
+    let mask = _mm256_set1_epi64x(0xFFFF);
+    let count = _mm_cvtsi32_si128(shift as i32);
+    let mut kc = keys.chunks_exact(4);
+    let mut oc = out.chunks_exact_mut(4);
+    for (ch, o) in (&mut kc).zip(&mut oc) {
+        let v = _mm256_loadu_si256(ch.as_ptr() as *const __m256i);
+        let d = _mm256_and_si256(_mm256_srl_epi64(v, count), mask);
+        _mm256_storeu_si256(o.as_mut_ptr() as *mut __m256i, d);
+    }
+    digits_scalar(kc.remainder(), shift, oc.into_remainder());
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse2")]
+unsafe fn digits_sse2(keys: &[u64], shift: u32, out: &mut [u64]) {
+    use std::arch::x86_64::*;
+    let mask = _mm_set1_epi64x(0xFFFF);
+    let count = _mm_cvtsi32_si128(shift as i32);
+    let mut kc = keys.chunks_exact(2);
+    let mut oc = out.chunks_exact_mut(2);
+    for (ch, o) in (&mut kc).zip(&mut oc) {
+        let v = _mm_loadu_si128(ch.as_ptr() as *const __m128i);
+        let d = _mm_and_si128(_mm_srl_epi64(v, count), mask);
+        _mm_storeu_si128(o.as_mut_ptr() as *mut __m128i, d);
+    }
+    digits_scalar(kc.remainder(), shift, oc.into_remainder());
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn digits_neon(keys: &[u64], shift: u32, out: &mut [u64]) {
+    use std::arch::aarch64::*;
+    let mask = vdupq_n_u64(0xFFFF);
+    let sh = vdupq_n_s64(-(shift as i64));
+    let mut kc = keys.chunks_exact(2);
+    let mut oc = out.chunks_exact_mut(2);
+    for (ch, o) in (&mut kc).zip(&mut oc) {
+        let v = vld1q_u64(ch.as_ptr());
+        let d = vandq_u64(vshlq_u64(v, sh), mask);
+        vst1q_u64(o.as_mut_ptr(), d);
+    }
+    digits_scalar(kc.remainder(), shift, oc.into_remainder());
+}
+
+// ---------------------------------------------------------------------------
+// Strided key gathers (keyed LE keys, plain-record BE keys)
+// ---------------------------------------------------------------------------
+
+/// Gather `n` little-endian u64 keys at byte offsets `0, stride, 2*stride,
+/// …` of `buf` — the keyed-buffer embedded-key walk (`stride == 108`).
+/// AVX2 uses `vpgatherqq`; SSE2/NEON have no gather, so they run scalar.
+pub fn keys_le_strided(buf: &[u8], stride: usize, n: usize) -> Vec<u64> {
+    assert!(n == 0 || (n - 1) * stride + 8 <= buf.len(), "key gather OOB");
+    let mut out = Vec::with_capacity(n);
+    match active_tier() {
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Avx2 => unsafe {
+            keys_gather_avx2(buf, stride, n, false, &mut out)
+        },
+        _ => keys_le_scalar(buf, stride, 0, n, &mut out),
+    }
+    out
+}
+
+/// Gather `n` **big-endian** u64 keys at byte offsets `0, stride, …` —
+/// the plain-record partition-key walk (`stride == 100`, paper §2.2).
+pub fn keys_be_strided(buf: &[u8], stride: usize, n: usize) -> Vec<u64> {
+    assert!(n == 0 || (n - 1) * stride + 8 <= buf.len(), "key gather OOB");
+    let mut out = Vec::with_capacity(n);
+    match active_tier() {
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Avx2 => unsafe {
+            keys_gather_avx2(buf, stride, n, true, &mut out)
+        },
+        _ => keys_be_scalar(buf, stride, 0, n, &mut out),
+    }
+    out
+}
+
+fn keys_le_scalar(buf: &[u8], stride: usize, from: usize, n: usize, out: &mut Vec<u64>) {
+    for i in from..n {
+        let off = i * stride;
+        out.push(u64::from_le_bytes(buf[off..off + 8].try_into().unwrap()));
+    }
+}
+
+fn keys_be_scalar(buf: &[u8], stride: usize, from: usize, n: usize, out: &mut Vec<u64>) {
+    for i in from..n {
+        let off = i * stride;
+        out.push(u64::from_be_bytes(buf[off..off + 8].try_into().unwrap()));
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn keys_gather_avx2(
+    buf: &[u8],
+    stride: usize,
+    n: usize,
+    big_endian: bool,
+    out: &mut Vec<u64>,
+) {
+    use std::arch::x86_64::*;
+    // per-128-bit-lane byte reversal of each u64 (vpshufb indices)
+    let rev = _mm256_setr_epi8(
+        7, 6, 5, 4, 3, 2, 1, 0, 15, 14, 13, 12, 11, 10, 9, 8, //
+        7, 6, 5, 4, 3, 2, 1, 0, 15, 14, 13, 12, 11, 10, 9, 8,
+    );
+    let step = _mm256_set1_epi64x((4 * stride) as i64);
+    let mut offs = _mm256_setr_epi64x(
+        0,
+        stride as i64,
+        (2 * stride) as i64,
+        (3 * stride) as i64,
+    );
+    let base = buf.as_ptr() as *const i64;
+    let mut tmp = [0u64; 4];
+    let mut i = 0usize;
+    while i + 4 <= n {
+        // Safety (rule 2): byte offsets (i..i+4)*stride, each lane reads
+        // 8 bytes; the entry assert bounds (n-1)*stride + 8 <= buf.len().
+        // Scale 1: offsets are in bytes; gathers have no alignment needs.
+        let mut v = _mm256_i64gather_epi64::<1>(base, offs);
+        if big_endian {
+            v = _mm256_shuffle_epi8(v, rev);
+        }
+        _mm256_storeu_si256(tmp.as_mut_ptr() as *mut __m256i, v);
+        out.extend_from_slice(&tmp);
+        offs = _mm256_add_epi64(offs, step);
+        i += 4;
+    }
+    if big_endian {
+        keys_be_scalar(buf, stride, i, n, out); // rule 3: scalar tail
+    } else {
+        keys_le_scalar(buf, stride, i, n, out);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Whole-record copies (the merge walk / gather payload movement)
+// ---------------------------------------------------------------------------
+
+/// Copy one 108-byte keyed record. Takes the tier as a parameter so
+/// per-record loops hoist the dispatch load out of the walk. Tail bytes
+/// are covered by an *overlapping* final vector store (rule 2): the last
+/// store rewrites bytes the previous one already wrote — never a read or
+/// write past offset 108.
+#[inline]
+pub fn copy_record_108(tier: SimdTier, src: &[u8], dst: &mut [u8]) {
+    assert!(src.len() >= 108 && dst.len() >= 108);
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Avx2 => unsafe { copy108_avx2(src.as_ptr(), dst.as_mut_ptr()) },
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Sse2 => unsafe { copy108_sse2(src.as_ptr(), dst.as_mut_ptr()) },
+        #[cfg(target_arch = "aarch64")]
+        SimdTier::Neon => unsafe { copy108_neon(src.as_ptr(), dst.as_mut_ptr()) },
+        _ => dst[..108].copy_from_slice(&src[..108]),
+    }
+}
+
+/// Copy one plain 100-byte record; same contract as [`copy_record_108`].
+#[inline]
+pub fn copy_record_100(tier: SimdTier, src: &[u8], dst: &mut [u8]) {
+    assert!(src.len() >= 100 && dst.len() >= 100);
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Avx2 => unsafe { copy100_avx2(src.as_ptr(), dst.as_mut_ptr()) },
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Sse2 => unsafe { copy100_sse2(src.as_ptr(), dst.as_mut_ptr()) },
+        #[cfg(target_arch = "aarch64")]
+        SimdTier::Neon => unsafe { copy100_neon(src.as_ptr(), dst.as_mut_ptr()) },
+        _ => dst[..100].copy_from_slice(&src[..100]),
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn copy108_avx2(src: *const u8, dst: *mut u8) {
+    use std::arch::x86_64::*;
+    // Safety (rule 2): caller asserted >= 108 bytes on both sides. Loads
+    // at 0/32/64 cover [0,96); the load at 76 covers [76,108) — inside
+    // the record. Stores land in the same offsets; the 76-store overlaps
+    // [76,96) with bytes identical to what the 64-store wrote there.
+    let a = _mm256_loadu_si256(src as *const __m256i);
+    let b = _mm256_loadu_si256(src.add(32) as *const __m256i);
+    let c = _mm256_loadu_si256(src.add(64) as *const __m256i);
+    let t = _mm256_loadu_si256(src.add(76) as *const __m256i);
+    _mm256_storeu_si256(dst as *mut __m256i, a);
+    _mm256_storeu_si256(dst.add(32) as *mut __m256i, b);
+    _mm256_storeu_si256(dst.add(64) as *mut __m256i, c);
+    _mm256_storeu_si256(dst.add(76) as *mut __m256i, t);
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn copy100_avx2(src: *const u8, dst: *mut u8) {
+    use std::arch::x86_64::*;
+    // Safety (rule 2): loads at 0/32 cover [0,64); load at 68 covers
+    // [68,100). The 68-store overlaps [68,64+32=96)∩[64,96) consistently.
+    let a = _mm256_loadu_si256(src as *const __m256i);
+    let b = _mm256_loadu_si256(src.add(32) as *const __m256i);
+    let c = _mm256_loadu_si256(src.add(64) as *const __m256i);
+    let t = _mm256_loadu_si256(src.add(68) as *const __m256i);
+    _mm256_storeu_si256(dst as *mut __m256i, a);
+    _mm256_storeu_si256(dst.add(32) as *mut __m256i, b);
+    _mm256_storeu_si256(dst.add(64) as *mut __m256i, c);
+    _mm256_storeu_si256(dst.add(68) as *mut __m256i, t);
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse2")]
+unsafe fn copy108_sse2(src: *const u8, dst: *mut u8) {
+    use std::arch::x86_64::*;
+    // Safety (rule 2): six 16-byte blocks cover [0,96); the 92-offset
+    // block covers [92,108) with a [92,96) overlap.
+    for off in [0usize, 16, 32, 48, 64, 80, 92] {
+        let v = _mm_loadu_si128(src.add(off) as *const __m128i);
+        _mm_storeu_si128(dst.add(off) as *mut __m128i, v);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse2")]
+unsafe fn copy100_sse2(src: *const u8, dst: *mut u8) {
+    use std::arch::x86_64::*;
+    // Safety (rule 2): [0,96) in six blocks; 84-offset covers [84,100).
+    for off in [0usize, 16, 32, 48, 64, 80, 84] {
+        let v = _mm_loadu_si128(src.add(off) as *const __m128i);
+        _mm_storeu_si128(dst.add(off) as *mut __m128i, v);
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn copy108_neon(src: *const u8, dst: *mut u8) {
+    use std::arch::aarch64::*;
+    // Safety (rule 2): same offset scheme as the SSE2 variant.
+    for off in [0usize, 16, 32, 48, 64, 80, 92] {
+        vst1q_u8(dst.add(off), vld1q_u8(src.add(off)));
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn copy100_neon(src: *const u8, dst: *mut u8) {
+    use std::arch::aarch64::*;
+    // Safety (rule 2): same offset scheme as the SSE2 variant.
+    for off in [0usize, 16, 32, 48, 64, 80, 84] {
+        vst1q_u8(dst.add(off), vld1q_u8(src.add(off)));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// partition_offsets: lower_bound of every cut in a sorted key slice
+// ---------------------------------------------------------------------------
+
+/// Partition offsets of an ascending key slice against interior cuts:
+/// `offs[c] = #{keys < cuts[c]}` — strict `<`, a key equal to a cut
+/// belongs to the right range. Scalar tiers use `partition_point`; AVX2
+/// answers four cuts at once with a branchless lockstep lower bound
+/// (identical iteration count per lane, so lanes never diverge), which
+/// is provably equal to `partition_point(|&k| k < c)` for every input.
+pub fn partition_offsets(sorted_keys: &[u64], cuts: &[u64]) -> Vec<u32> {
+    match active_tier() {
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Avx2 => {
+            let mut out = Vec::with_capacity(cuts.len());
+            unsafe { partition_offsets_avx2(sorted_keys, cuts, &mut out) };
+            out
+        }
+        _ => partition_offsets_scalar(sorted_keys, cuts),
+    }
+}
+
+fn partition_offsets_scalar(sorted_keys: &[u64], cuts: &[u64]) -> Vec<u32> {
+    cuts.iter()
+        .map(|&c| sorted_keys.partition_point(|&k| k < c) as u32)
+        .collect()
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn partition_offsets_avx2(keys: &[u64], cuts: &[u64], out: &mut Vec<u32>) {
+    use std::arch::x86_64::*;
+    let n = keys.len();
+    if n == 0 {
+        out.resize(cuts.len(), 0);
+        return;
+    }
+    // unsigned compare via sign-bit bias: a <u b  ⟺  (a^MIN) <s (b^MIN)
+    let bias = _mm256_set1_epi64x(i64::MIN);
+    let one = _mm256_set1_epi64x(1);
+    let base = keys.as_ptr() as *const i64;
+    let mut tmp = [0u64; 4];
+    let mut c = 0usize;
+    while c + 4 <= cuts.len() {
+        let cut = _mm256_loadu_si256(cuts.as_ptr().add(c) as *const __m256i);
+        let cutb = _mm256_xor_si256(cut, bias);
+        let mut lo = _mm256_setzero_si256();
+        let mut len = n;
+        // branchless lower bound: every lane probes index lo + half - 1
+        // and conditionally advances; len shrinks identically in all
+        // lanes, so the loop trip count is data-independent.
+        while len > 1 {
+            let half = len / 2;
+            let idx = _mm256_add_epi64(lo, _mm256_set1_epi64x((half - 1) as i64));
+            // Safety (rule 2): lo + len <= n is a loop invariant, so
+            // idx = lo + half - 1 <= n - 1; every lane reads inside keys.
+            let k = _mm256_i64gather_epi64::<8>(base, idx);
+            let lt = _mm256_cmpgt_epi64(cutb, _mm256_xor_si256(k, bias));
+            lo = _mm256_add_epi64(lo, _mm256_and_si256(lt, _mm256_set1_epi64x(half as i64)));
+            len -= half;
+        }
+        // final step: answer = lo + (keys[lo] < cut)
+        let k = _mm256_i64gather_epi64::<8>(base, lo);
+        let lt = _mm256_cmpgt_epi64(cutb, _mm256_xor_si256(k, bias));
+        let res = _mm256_add_epi64(lo, _mm256_and_si256(lt, one));
+        _mm256_storeu_si256(tmp.as_mut_ptr() as *mut __m256i, res);
+        out.extend(tmp.iter().map(|&x| x as u32));
+        c += 4;
+    }
+    for &cut in &cuts[c..] {
+        out.push(keys.partition_point(|&k| k < cut) as u32); // scalar tail
+    }
+}
+
+// ---------------------------------------------------------------------------
+// stream_block: a contiguous block of the SplitMix64 random-access stream
+// ---------------------------------------------------------------------------
+
+/// Fill `out[j]` with `stream_at(seed, start + j)` (wrapping index
+/// arithmetic, same as [`crate::util::rng::stream_at`]) — the gensort
+/// draw stream, two draws per record. Vector tiers evaluate the
+/// SplitMix64 finalizer on 2–4 counters at once; the 64-bit multiplies
+/// are synthesized from 32×32 partial products on x86 (NEON has no
+/// 64-bit lane multiply, so aarch64 runs the scalar loop, where `madd`
+/// is already optimal).
+pub fn stream_block(seed: u64, start: u64, out: &mut [u64]) {
+    match active_tier() {
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Avx2 => unsafe { stream_block_avx2(seed, start, out) },
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Sse2 => unsafe { stream_block_sse2(seed, start, out) },
+        _ => stream_block_scalar(seed, start, 0, out),
+    }
+}
+
+fn stream_block_scalar(seed: u64, start: u64, from: usize, out: &mut [u64]) {
+    for (j, o) in out.iter_mut().enumerate().skip(from) {
+        *o = crate::util::rng::stream_at(seed, start.wrapping_add(j as u64));
+    }
+}
+
+/// SplitMix64 stream constants (must match [`crate::util::rng`]).
+const GAMMA: u64 = 0x9E3779B97F4A7C15;
+const MIX_M1: u64 = 0xBF58476D1CE4E5B9;
+const MIX_M2: u64 = 0x94D049BB133111EB;
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn stream_block_avx2(seed: u64, start: u64, out: &mut [u64]) {
+    use std::arch::x86_64::*;
+    // 64-bit lane multiply from 32x32 partials:
+    //   a*k = lo(a)*lo(k) + ((lo(a)*hi(k) + hi(a)*lo(k)) << 32)   (mod 2^64)
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn mul64(a: __m256i, k: __m256i, k_hi: __m256i) -> __m256i {
+        let lo_lo = _mm256_mul_epu32(a, k);
+        let a_hi = _mm256_srli_epi64::<32>(a);
+        let cross =
+            _mm256_add_epi64(_mm256_mul_epu32(a_hi, k), _mm256_mul_epu32(a, k_hi));
+        _mm256_add_epi64(lo_lo, _mm256_slli_epi64::<32>(cross))
+    }
+    let gamma = _mm256_set1_epi64x(GAMMA as i64);
+    let gamma_hi = _mm256_srli_epi64::<32>(gamma);
+    let m1 = _mm256_set1_epi64x(MIX_M1 as i64);
+    let m1_hi = _mm256_srli_epi64::<32>(m1);
+    let m2 = _mm256_set1_epi64x(MIX_M2 as i64);
+    let m2_hi = _mm256_srli_epi64::<32>(m2);
+    let seedv = _mm256_set1_epi64x(seed as i64);
+    let four = _mm256_set1_epi64x(4);
+    // w = stream index + 1 (wrapping), per lane
+    let w0 = start.wrapping_add(1);
+    let mut w = _mm256_add_epi64(
+        _mm256_set1_epi64x(w0 as i64),
+        _mm256_setr_epi64x(0, 1, 2, 3),
+    );
+    let mut chunks = out.chunks_exact_mut(4);
+    let mut done = 0usize;
+    for o in &mut chunks {
+        // z = seed + w * GAMMA;  then the SplitMix64 finalizer
+        let mut z = _mm256_add_epi64(seedv, mul64(w, gamma, gamma_hi));
+        z = _mm256_xor_si256(z, _mm256_srli_epi64::<30>(z));
+        z = mul64(z, m1, m1_hi);
+        z = _mm256_xor_si256(z, _mm256_srli_epi64::<27>(z));
+        z = mul64(z, m2, m2_hi);
+        z = _mm256_xor_si256(z, _mm256_srli_epi64::<31>(z));
+        _mm256_storeu_si256(o.as_mut_ptr() as *mut __m256i, z);
+        w = _mm256_add_epi64(w, four);
+        done += 4;
+    }
+    stream_block_scalar(seed, start, done, out); // rule 3: scalar tail
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse2")]
+unsafe fn stream_block_sse2(seed: u64, start: u64, out: &mut [u64]) {
+    use std::arch::x86_64::*;
+    #[inline]
+    #[target_feature(enable = "sse2")]
+    unsafe fn mul64(a: __m128i, k: __m128i, k_hi: __m128i) -> __m128i {
+        let lo_lo = _mm_mul_epu32(a, k);
+        let a_hi = _mm_srli_epi64::<32>(a);
+        let cross = _mm_add_epi64(_mm_mul_epu32(a_hi, k), _mm_mul_epu32(a, k_hi));
+        _mm_add_epi64(lo_lo, _mm_slli_epi64::<32>(cross))
+    }
+    let gamma = _mm_set1_epi64x(GAMMA as i64);
+    let gamma_hi = _mm_srli_epi64::<32>(gamma);
+    let m1 = _mm_set1_epi64x(MIX_M1 as i64);
+    let m1_hi = _mm_srli_epi64::<32>(m1);
+    let m2 = _mm_set1_epi64x(MIX_M2 as i64);
+    let m2_hi = _mm_srli_epi64::<32>(m2);
+    let seedv = _mm_set1_epi64x(seed as i64);
+    let two = _mm_set1_epi64x(2);
+    let w0 = start.wrapping_add(1);
+    let mut w = _mm_add_epi64(
+        _mm_set1_epi64x(w0 as i64),
+        _mm_set_epi64x(1, 0), // lane order: element 0 holds 0
+    );
+    let mut chunks = out.chunks_exact_mut(2);
+    let mut done = 0usize;
+    for o in &mut chunks {
+        let mut z = _mm_add_epi64(seedv, mul64(w, gamma, gamma_hi));
+        z = _mm_xor_si128(z, _mm_srli_epi64::<30>(z));
+        z = mul64(z, m1, m1_hi);
+        z = _mm_xor_si128(z, _mm_srli_epi64::<27>(z));
+        z = mul64(z, m2, m2_hi);
+        z = _mm_xor_si128(z, _mm_srli_epi64::<31>(z));
+        _mm_storeu_si128(o.as_mut_ptr() as *mut __m128i, z);
+        w = _mm_add_epi64(w, two);
+        done += 2;
+    }
+    stream_block_scalar(seed, start, done, out);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{stream_at, Xoshiro256};
+
+    /// Run `f` once per available tier, pinning dispatch to it.
+    fn each_tier(f: impl Fn(SimdTier)) {
+        for t in available_tiers() {
+            with_forced_tier(t, || f(t));
+        }
+    }
+
+    #[test]
+    fn tier_parsing_and_names() {
+        for t in [SimdTier::Scalar, SimdTier::Sse2, SimdTier::Avx2, SimdTier::Neon] {
+            assert_eq!(SimdTier::from_name(t.name()), Some(Some(t)));
+            assert_eq!(SimdTier::of_u8(t.to_u8()), Some(t));
+        }
+        assert_eq!(SimdTier::from_name("auto"), Some(None));
+        assert_eq!(SimdTier::from_name("avx512"), None);
+    }
+
+    #[test]
+    fn forced_tier_is_scoped_and_restored() {
+        let before = active_tier();
+        with_forced_tier(SimdTier::Scalar, || {
+            assert_eq!(active_tier(), SimdTier::Scalar);
+        });
+        assert_eq!(active_tier(), before);
+    }
+
+    #[test]
+    fn available_tiers_include_scalar_and_active() {
+        let tiers = available_tiers();
+        assert!(tiers.contains(&SimdTier::Scalar));
+        assert!(tiers.contains(&active_tier()));
+        #[cfg(target_arch = "x86_64")]
+        assert!(tiers.contains(&SimdTier::Sse2));
+    }
+
+    #[test]
+    fn histogram4_matches_scalar_on_all_tiers() {
+        let mut rng = Xoshiro256::new(101);
+        let keys: Vec<u64> = (0..1003).map(|_| rng.next_u64()).collect();
+        let mut expect = vec![0u32; 4 << 16];
+        histogram4_scalar(&keys, &mut expect);
+        each_tier(|t| {
+            let mut got = vec![0u32; 4 << 16];
+            histogram4(&keys, &mut got);
+            assert_eq!(got, expect, "tier {}", t.name());
+        });
+    }
+
+    #[test]
+    fn digits_match_scalar_on_all_tiers() {
+        let mut rng = Xoshiro256::new(102);
+        let keys: Vec<u64> = (0..517).map(|_| rng.next_u64()).collect();
+        for shift in [0u32, 16, 32, 48] {
+            let mut expect = vec![0u64; keys.len()];
+            digits_scalar(&keys, shift, &mut expect);
+            each_tier(|t| {
+                let mut got = vec![0u64; keys.len()];
+                digits_into(t, &keys, shift, &mut got);
+                assert_eq!(got, expect, "tier {} shift {shift}", t.name());
+            });
+        }
+    }
+
+    #[test]
+    fn key_gathers_match_scalar_on_all_tiers() {
+        let mut rng = Xoshiro256::new(103);
+        let mut buf = vec![0u8; 108 * 41];
+        rng.fill_bytes(&mut buf);
+        for (stride, n) in [(108usize, 41usize), (100, 33), (108, 0), (100, 3)] {
+            let mut le = Vec::new();
+            keys_le_scalar(&buf, stride, 0, n, &mut le);
+            let mut be = Vec::new();
+            keys_be_scalar(&buf, stride, 0, n, &mut be);
+            each_tier(|t| {
+                assert_eq!(keys_le_strided(&buf, stride, n), le, "{}", t.name());
+                assert_eq!(keys_be_strided(&buf, stride, n), be, "{}", t.name());
+            });
+        }
+    }
+
+    #[test]
+    fn record_copies_match_memcpy_on_all_tiers() {
+        let mut rng = Xoshiro256::new(104);
+        let mut src = vec![0u8; 108];
+        rng.fill_bytes(&mut src);
+        each_tier(|t| {
+            let mut d108 = vec![0xAAu8; 108];
+            copy_record_108(t, &src, &mut d108);
+            assert_eq!(d108, src, "copy_108 tier {}", t.name());
+            let mut d100 = vec![0xAAu8; 100];
+            copy_record_100(t, &src[..100], &mut d100);
+            assert_eq!(d100, &src[..100], "copy_100 tier {}", t.name());
+        });
+    }
+
+    #[test]
+    fn partition_offsets_match_partition_point_on_all_tiers() {
+        let mut rng = Xoshiro256::new(105);
+        let mut keys: Vec<u64> = (0..777).map(|_| rng.next_u64() & 0xFF).collect();
+        keys.sort_unstable();
+        // adversarial cuts: below, inside, equal-to-keys, above, extremes
+        let mut cuts: Vec<u64> = (0..23).map(|_| rng.next_u64() & 0x1FF).collect();
+        cuts.extend([0, 1, u64::MAX, keys[0], keys[776]]);
+        cuts.sort_unstable();
+        let expect = partition_offsets_scalar(&keys, &cuts);
+        each_tier(|t| {
+            assert_eq!(partition_offsets(&keys, &cuts), expect, "{}", t.name());
+        });
+        // empty keys / empty cuts
+        each_tier(|t| {
+            assert_eq!(partition_offsets(&[], &cuts).len(), cuts.len(), "{}", t.name());
+            assert!(partition_offsets(&[], &cuts).iter().all(|&o| o == 0));
+            assert!(partition_offsets(&keys, &[]).is_empty());
+        });
+    }
+
+    #[test]
+    fn stream_block_matches_stream_at_on_all_tiers() {
+        for (seed, start, len) in
+            [(7u64, 0u64, 61usize), (9, u64::MAX - 3, 11), (3, 1 << 40, 4), (5, 2, 0)]
+        {
+            let expect: Vec<u64> = (0..len)
+                .map(|j| stream_at(seed, start.wrapping_add(j as u64)))
+                .collect();
+            each_tier(|t| {
+                let mut got = vec![0u64; len];
+                stream_block(seed, start, &mut got);
+                assert_eq!(got, expect, "tier {} seed {seed}", t.name());
+            });
+        }
+    }
+}

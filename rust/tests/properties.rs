@@ -16,10 +16,21 @@
 //!       allocating reference
 //!   P9  the fused keyed merge+gather reproduces the two-pass reference
 //!       (merge indices, then gather) for arbitrary run sets and cuts
+//!   P10 SIMD radix sort_pairs is bit-for-bit the scalar reference on
+//!       every available dispatch tier (forced via sortlib::simd)
+//!   P11 SIMD partition_offsets and the strided key gathers (BE records,
+//!       LE keyed buffers) match their scalar reference on every tier
+//!   P12 the fused keyed merge+gather is byte-identical to the reference
+//!       two-pass path on every tier (vector record copies included)
+//!   P13 the batched gensort generator (vectorized SplitMix64 stream)
+//!       reproduces the frozen per-record reference on every tier, for
+//!       uniform and Zipf key distributions
 
 use exoshuffle::coordinator::{run_cloudsort, JobSpec};
 use exoshuffle::runtime::{native, Backend};
-use exoshuffle::sortlib::{self, gensort, keyed, radix, reference, valsort, RECORD_SIZE};
+use exoshuffle::sortlib::{
+    self, gensort, keyed, radix, reference, simd, valsort, RECORD_SIZE,
+};
 use exoshuffle::util::rng::Xoshiro256;
 
 const CASES: u64 = 50;
@@ -267,6 +278,221 @@ fn p9_fused_keyed_merge_matches_reference() {
             .collect();
         assert_eq!(want, got, "seed {seed}");
     }
+}
+
+/// Run `f` once per available SIMD tier with dispatch pinned to it.
+/// Includes Scalar always, so every property below self-checks the
+/// fallback path even on exotic architectures.
+fn for_each_tier(f: impl Fn(simd::SimdTier)) {
+    for tier in simd::available_tiers() {
+        simd::with_forced_tier(tier, || f(tier));
+    }
+}
+
+#[test]
+fn p10_simd_sort_pairs_matches_reference_on_all_tiers() {
+    for_each_tier(|tier| {
+        for seed in 0..CASES / 2 {
+            let mut rng = Xoshiro256::new(9000 + seed);
+            let n = rng.next_below(3000) as usize;
+            let mode = rng.next_below(4);
+            let keys: Vec<u64> = (0..n)
+                .map(|_| match mode {
+                    // heavy duplicates
+                    0 => rng.next_below(16),
+                    // constant (zero) high digits — exercises pass skipping
+                    1 => rng.next_u64() & 0xFFFF,
+                    // constant all-ones top digit
+                    2 => rng.next_u64() | 0xFFFF_0000_0000_0000,
+                    _ => rng.next_u64(),
+                })
+                .collect();
+            let vals: Vec<u32> = (0..n).map(|_| rng.next_u64() as u32).collect();
+            assert_eq!(
+                radix::sort_pairs(&keys, &vals),
+                reference::sort_pairs(&keys, &vals),
+                "tier {} seed {seed}",
+                tier.name()
+            );
+        }
+        // edges: empty input, extreme keys with duplicates
+        assert_eq!(radix::sort_pairs(&[], &[]), reference::sort_pairs(&[], &[]));
+        let ks = [u64::MAX, 0, u64::MAX, 1, 0];
+        let vs = [0, 1, 2, 3, 4];
+        assert_eq!(
+            radix::sort_pairs(&ks, &vs),
+            reference::sort_pairs(&ks, &vs),
+            "tier {}",
+            tier.name()
+        );
+    });
+}
+
+#[test]
+fn p11_simd_offsets_and_key_gathers_match_reference_on_all_tiers() {
+    for_each_tier(|tier| {
+        for seed in 0..CASES / 2 {
+            let mut rng = Xoshiro256::new(10_000 + seed);
+            // partition_offsets: duplicate-heavy sorted keys, adversarial
+            // cuts (equal to keys, extremes, past-the-end)
+            let n = rng.next_below(2000) as usize;
+            let mut keys: Vec<u64> = (0..n)
+                .map(|_| {
+                    if rng.next_below(2) == 0 {
+                        rng.next_below(64)
+                    } else {
+                        rng.next_u64()
+                    }
+                })
+                .collect();
+            keys.sort_unstable();
+            let c = rng.next_below(40) as usize;
+            let mut cuts: Vec<u64> = (0..c)
+                .map(|_| match rng.next_below(8) {
+                    0 => 0,
+                    1 => u64::MAX,
+                    2 => rng.next_below(64),
+                    3 if n > 0 => keys[rng.next_below(n as u64) as usize],
+                    _ => rng.next_u64(),
+                })
+                .collect();
+            cuts.sort_unstable();
+            assert_eq!(
+                radix::partition_offsets(&keys, &cuts),
+                reference::partition_offsets(&keys, &cuts),
+                "tier {} seed {seed}",
+                tier.name()
+            );
+
+            // strided key gathers over generated records
+            let records = rng.next_below(120);
+            let buf = gensort::generate_partition(&gensort::GenSpec {
+                seed: 77 + seed,
+                offset: 0,
+                records,
+            });
+            assert_eq!(
+                sortlib::extract_partition_keys(&buf),
+                reference::extract_partition_keys(&buf),
+                "tier {} seed {seed} (BE gather)",
+                tier.name()
+            );
+            let keyed_buf = keyed::from_records(&buf);
+            assert_eq!(
+                keyed::keys_of(&keyed_buf),
+                reference::keys_of_keyed(&keyed_buf),
+                "tier {} seed {seed} (LE gather)",
+                tier.name()
+            );
+        }
+    });
+}
+
+#[test]
+fn p12_fused_merge_matches_reference_on_all_tiers() {
+    for_each_tier(|tier| {
+        for seed in 0..CASES / 2 {
+            let mut rng = Xoshiro256::new(11_000 + seed);
+            let n_runs = rng.next_below(6) as usize; // includes the 0-run case
+            let built: Vec<(Vec<u8>, Vec<u8>)> = (0..n_runs)
+                .map(|_| {
+                    let l = rng.next_below(200) as usize; // includes empty runs
+                    let mut recs: Vec<Vec<u8>> = (0..l)
+                        .map(|_| {
+                            let mut r = vec![0u8; RECORD_SIZE];
+                            // low-cardinality keys force cross-run
+                            // duplicates, stressing the merge tie-break
+                            let k = if rng.next_below(2) == 0 {
+                                rng.next_below(32)
+                            } else {
+                                rng.next_u64()
+                            };
+                            r[..8].copy_from_slice(&k.to_be_bytes());
+                            for b in r[8..].iter_mut() {
+                                *b = rng.next_u64() as u8;
+                            }
+                            r
+                        })
+                        .collect();
+                    recs.sort_by_key(|r| sortlib::partition_key(r));
+                    let plain: Vec<u8> = recs.concat();
+                    let keyed_run = keyed::from_records(&plain);
+                    (plain, keyed_run)
+                })
+                .collect();
+            let plain: Vec<&[u8]> =
+                built.iter().map(|(p, _)| p.as_slice()).collect();
+            let keyed_runs: Vec<&[u8]> =
+                built.iter().map(|(_, k)| k.as_slice()).collect();
+            let c = rng.next_below(6) as usize;
+            let mut cuts: Vec<u64> = (0..c)
+                .map(|_| match rng.next_below(8) {
+                    0 => 0,
+                    1 => u64::MAX,
+                    2 => rng.next_below(32),
+                    _ => rng.next_u64(),
+                })
+                .collect();
+            cuts.sort_unstable();
+            let total: usize =
+                keyed_runs.iter().map(|r| keyed::keyed_record_count(r)).sum();
+            let want = reference::merge_then_gather(&plain, &cuts);
+            let mut fused = vec![0u8; total * keyed::KEYED_RECORD_SIZE];
+            let bb = keyed::merge_keyed_ranges(&keyed_runs, &cuts, &mut fused);
+            assert_eq!(bb.len(), cuts.len() + 2, "tier {} seed {seed}", tier.name());
+            let got: Vec<Vec<u8>> = bb
+                .windows(2)
+                .map(|w| keyed::to_records(&fused[w[0]..w[1]]))
+                .collect();
+            assert_eq!(want, got, "tier {} seed {seed}", tier.name());
+
+            // the record-emitting reduce-path variant too
+            let mut flat = vec![0u8; total * RECORD_SIZE];
+            let written = keyed::merge_keyed_records(&keyed_runs, &mut flat);
+            assert_eq!(written, flat.len(), "tier {} seed {seed}", tier.name());
+            assert_eq!(flat, want.concat(), "tier {} seed {seed}", tier.name());
+        }
+    });
+}
+
+#[test]
+fn p13_batched_gensort_matches_reference_on_all_tiers() {
+    use exoshuffle::util::rng::stream_at;
+    for_each_tier(|tier| {
+        for seed in 0..CASES / 2 {
+            let mut rng = Xoshiro256::new(12_000 + seed);
+            let spec = gensort::GenSpec {
+                seed: rng.next_u64(),
+                offset: rng.next_below(1 << 40),
+                records: rng.next_below(300),
+            };
+            for skew in [
+                sortlib::Skew::Uniform,
+                sortlib::Skew::Zipf(0.5),
+                sortlib::Skew::Zipf(4.0),
+            ] {
+                assert_eq!(
+                    gensort::generate_partition_with(&spec, skew),
+                    reference::generate_partition_with(&spec, skew),
+                    "tier {} seed {seed} {skew:?}",
+                    tier.name()
+                );
+            }
+            // the raw draw stream itself, including wrapping start indices
+            let start = if rng.next_below(4) == 0 {
+                u64::MAX - rng.next_below(8)
+            } else {
+                rng.next_u64()
+            };
+            let len = rng.next_below(70) as usize;
+            let mut got = vec![0u64; len];
+            simd::stream_block(spec.seed, start, &mut got);
+            let want: Vec<u64> = (0..len)
+                .map(|j| stream_at(spec.seed, start.wrapping_add(j as u64)))
+                .collect();
+            assert_eq!(got, want, "tier {} seed {seed}", tier.name());
+        }
+    });
 }
 
 #[test]

@@ -1,0 +1,230 @@
+//! Forced-dispatch matrix for the SIMD kernels (`sortlib::simd`).
+//!
+//! Every kernel output must be byte-identical no matter which dispatch
+//! tier executes it. The properties suite (P10–P13) checks this against
+//! the scalar *reference oracle* on random inputs; this suite pins the
+//! *dispatch mechanism itself* on a small fixed matrix of adversarial
+//! inputs — duplicate-heavy, constant-digit, extreme-key, and empty —
+//! capturing the scalar tier's output and replaying every other
+//! available tier against it.
+//!
+//! CI runs this binary twice: once under `EXOSHUFFLE_SIMD=scalar`
+//! (fallback leg) and once with auto-detection. `env_override_is_
+//! honored` asserts the env contract in whichever leg is active;
+//! `with_forced_tier` then walks every tier the host supports, so both
+//! legs still cover the full matrix.
+
+use exoshuffle::sortlib::{
+    self, gensort, keyed, radix, reference, simd, RECORD_SIZE,
+};
+
+/// The fixed adversarial key sets the matrix replays on every tier.
+/// Lengths straddle the vector widths (0, sub-lane, full blocks + tail).
+fn adversarial_key_sets() -> Vec<(&'static str, Vec<u64>)> {
+    // duplicate-heavy: 8 distinct values over 1000 slots
+    let dups: Vec<u64> = (0..1000u64).map(|i| (i * 7 + 3) % 8).collect();
+    // constant-digit: all high digits zero, low 16 bits vary
+    let low: Vec<u64> = (0..777u64).map(|i| i.wrapping_mul(0x9E37) & 0xFFFF).collect();
+    // constant-digit: all top digits saturated
+    let high: Vec<u64> = (0..777u64)
+        .map(|i| i.wrapping_mul(0x9E3779B97F4A7C15) | 0xFFFF_0000_0000_0000)
+        .collect();
+    // extreme keys with ties at both ends
+    let extreme = vec![u64::MAX, 0, u64::MAX, 1, 0, u64::MAX - 1, u64::MAX, 0];
+    // sub-vector-width tails
+    let tiny = vec![42u64, 42, 7];
+    vec![
+        ("empty", Vec::new()),
+        ("tiny", tiny),
+        ("duplicate-heavy", dups),
+        ("constant-low-digits", low),
+        ("constant-high-digits", high),
+        ("extreme", extreme),
+    ]
+}
+
+/// Capture `f`'s output with dispatch pinned to `tier`.
+fn on<R>(tier: simd::SimdTier, f: impl FnOnce() -> R) -> R {
+    simd::with_forced_tier(tier, f)
+}
+
+fn non_scalar_tiers() -> Vec<simd::SimdTier> {
+    simd::available_tiers()
+        .into_iter()
+        .filter(|&t| t != simd::SimdTier::Scalar)
+        .collect()
+}
+
+#[test]
+fn sort_pairs_is_tier_invariant() {
+    for (name, keys) in adversarial_key_sets() {
+        let vals: Vec<u32> = (0..keys.len() as u32).collect();
+        let scalar = on(simd::SimdTier::Scalar, || radix::sort_pairs(&keys, &vals));
+        for tier in non_scalar_tiers() {
+            let got = on(tier, || radix::sort_pairs(&keys, &vals));
+            assert_eq!(scalar, got, "sort_pairs[{name}] diverged on {}", tier.name());
+        }
+    }
+}
+
+#[test]
+fn partition_offsets_is_tier_invariant() {
+    // cuts hit every adversarial shape: below, equal, between, above
+    let cuts = [0u64, 1, 3, 7, 0xFFFF, 0xFFFF_0000_0000_0000, u64::MAX];
+    for (name, keys) in adversarial_key_sets() {
+        let mut sorted = keys.clone();
+        sorted.sort_unstable();
+        let scalar =
+            on(simd::SimdTier::Scalar, || radix::partition_offsets(&sorted, &cuts));
+        assert_eq!(scalar, reference::partition_offsets(&sorted, &cuts));
+        for tier in non_scalar_tiers() {
+            let got = on(tier, || radix::partition_offsets(&sorted, &cuts));
+            assert_eq!(
+                scalar,
+                got,
+                "partition_offsets[{name}] diverged on {}",
+                tier.name()
+            );
+        }
+    }
+}
+
+/// Records whose keys replay the adversarial sets, exercising the BE
+/// gather (`extract_partition_keys`), the LE gather + record copies
+/// (`from_records`/`keys_of`), and the fused merge walk.
+fn records_from_keys(keys: &[u64]) -> Vec<u8> {
+    let mut buf = vec![0u8; keys.len() * RECORD_SIZE];
+    for (i, (rec, &k)) in
+        buf.chunks_exact_mut(RECORD_SIZE).zip(keys).enumerate()
+    {
+        rec[..8].copy_from_slice(&k.to_be_bytes());
+        for (j, b) in rec[8..].iter_mut().enumerate() {
+            *b = (i as u8).wrapping_mul(31).wrapping_add(j as u8);
+        }
+    }
+    buf
+}
+
+#[test]
+fn key_gathers_and_keyed_view_are_tier_invariant() {
+    for (name, keys) in adversarial_key_sets() {
+        let buf = records_from_keys(&keys);
+        let scalar_be =
+            on(simd::SimdTier::Scalar, || sortlib::extract_partition_keys(&buf));
+        let scalar_keyed = on(simd::SimdTier::Scalar, || keyed::from_records(&buf));
+        let scalar_le =
+            on(simd::SimdTier::Scalar, || keyed::keys_of(&scalar_keyed));
+        assert_eq!(scalar_be, reference::extract_partition_keys(&buf));
+        assert_eq!(scalar_le, reference::keys_of_keyed(&scalar_keyed));
+        for tier in non_scalar_tiers() {
+            let be = on(tier, || sortlib::extract_partition_keys(&buf));
+            let kb = on(tier, || keyed::from_records(&buf));
+            let le = on(tier, || keyed::keys_of(&kb));
+            assert_eq!(scalar_be, be, "BE gather[{name}] diverged on {}", tier.name());
+            assert_eq!(scalar_keyed, kb, "from_records[{name}] diverged on {}", tier.name());
+            assert_eq!(scalar_le, le, "LE gather[{name}] diverged on {}", tier.name());
+        }
+    }
+}
+
+#[test]
+fn fused_merge_is_tier_invariant() {
+    // split each adversarial set into 3 sorted runs (some empty)
+    let cuts = [2u64, 0xFFFF, u64::MAX];
+    for (name, keys) in adversarial_key_sets() {
+        let runs: Vec<Vec<u8>> = (0..3)
+            .map(|r| {
+                let mut part: Vec<u64> =
+                    keys.iter().copied().skip(r).step_by(3).collect();
+                part.sort_unstable();
+                keyed::from_records(&records_from_keys(&part))
+            })
+            .collect();
+        let refs: Vec<&[u8]> = runs.iter().map(|r| r.as_slice()).collect();
+        let total: usize = refs.iter().map(|r| keyed::keyed_record_count(r)).sum();
+        let mut scalar_out = vec![0u8; total * keyed::KEYED_RECORD_SIZE];
+        let scalar_bb = on(simd::SimdTier::Scalar, || {
+            keyed::merge_keyed_ranges(&refs, &cuts, &mut scalar_out)
+        });
+        for tier in non_scalar_tiers() {
+            let mut out = vec![0u8; total * keyed::KEYED_RECORD_SIZE];
+            let bb = on(tier, || keyed::merge_keyed_ranges(&refs, &cuts, &mut out));
+            assert_eq!(scalar_bb, bb, "merge bb[{name}] diverged on {}", tier.name());
+            assert_eq!(scalar_out, out, "merge[{name}] diverged on {}", tier.name());
+        }
+    }
+}
+
+#[test]
+fn gensort_stream_is_tier_invariant() {
+    let specs = [
+        gensort::GenSpec { seed: 0, offset: 0, records: 0 }, // empty
+        gensort::GenSpec { seed: 1, offset: 0, records: 3 }, // sub-width
+        gensort::GenSpec { seed: 0xDEAD_BEEF, offset: 1 << 33, records: 257 },
+        gensort::GenSpec { seed: u64::MAX, offset: u64::MAX - 100, records: 64 },
+    ];
+    for spec in &specs {
+        for skew in [sortlib::Skew::Uniform, sortlib::Skew::Zipf(2.0)] {
+            let scalar = on(simd::SimdTier::Scalar, || {
+                gensort::generate_partition_with(spec, skew)
+            });
+            assert_eq!(scalar, reference::generate_partition_with(spec, skew));
+            for tier in non_scalar_tiers() {
+                let got = on(tier, || gensort::generate_partition_with(spec, skew));
+                assert_eq!(
+                    scalar,
+                    got,
+                    "gensort[{spec:?} {skew:?}] diverged on {}",
+                    tier.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn env_vocabulary_parses() {
+    assert_eq!(simd::SimdTier::from_name("auto"), Some(None));
+    for tier in [
+        simd::SimdTier::Scalar,
+        simd::SimdTier::Sse2,
+        simd::SimdTier::Avx2,
+        simd::SimdTier::Neon,
+    ] {
+        assert_eq!(simd::SimdTier::from_name(tier.name()), Some(Some(tier)));
+    }
+    assert_eq!(simd::SimdTier::from_name("AVX2"), None);
+    assert_eq!(simd::SimdTier::from_name(""), None);
+}
+
+#[test]
+fn env_override_is_honored() {
+    // In the CI fallback leg this binary runs under EXOSHUFFLE_SIMD=
+    // scalar; assert the detected tier obeys whatever the env says.
+    match std::env::var("EXOSHUFFLE_SIMD").ok().as_deref() {
+        None | Some("auto") => {
+            assert_eq!(simd::detected_tier(), simd::best_available());
+        }
+        Some(name) => {
+            let forced = simd::SimdTier::from_name(name)
+                .expect("EXOSHUFFLE_SIMD set to an unknown tier name")
+                .expect("\"auto\" handled above");
+            assert_eq!(simd::detected_tier(), forced);
+        }
+    }
+}
+
+#[test]
+fn available_tiers_are_coherent() {
+    let tiers = simd::available_tiers();
+    assert_eq!(tiers.first(), Some(&simd::SimdTier::Scalar));
+    assert!(tiers.contains(&simd::best_available()));
+    for &t in &tiers {
+        assert!(simd::tier_available(t), "{} listed but unavailable", t.name());
+    }
+    // NEON and the x86 tiers are mutually exclusive
+    assert!(
+        !(tiers.contains(&simd::SimdTier::Neon)
+            && tiers.contains(&simd::SimdTier::Sse2))
+    );
+}
