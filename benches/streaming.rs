@@ -1,0 +1,50 @@
+//! Streaming-service benchmark: sealed-output throughput and per-epoch
+//! latency of a continuous repartitioning job (`StreamJob`).
+//!
+//! Two JSON entries ride into the CI artifacts: `stream_epochs` carries
+//! `bytes` (sealed output per stream run) so GB/s is derivable
+//! downstream, and `stream_epoch_p99_latency` records the p99
+//! ingest→sealed epoch latency of the last run.
+//!
+//!     cargo bench --bench streaming
+
+#[path = "harness.rs"]
+mod harness;
+
+use exoshuffle::prelude::*;
+
+fn main() {
+    harness::section("streaming epochs (continuous repartitioning)");
+    let records = harness::pick(50_000u64, 10_000);
+    let epochs = harness::pick(6usize, 3);
+    let iters = harness::pick(3, 1);
+    // arrival rate 0: a pre-filled backlog, so the measured latency is
+    // pure shuffle time rather than a modeled ingest window constant
+    let mut last: Option<StreamReport> = None;
+    let r = harness::bench("stream_epochs", iters, || {
+        let report = StreamJob::new(IngestSource::new(42, 0.0, records), 2)
+            .epochs(epochs)
+            .name("bench-stream")
+            .run()
+            .expect("stream run");
+        assert!(report.all_valid(), "an epoch failed validation");
+        assert_eq!(report.watermark, epochs);
+        last = Some(report);
+    });
+    let report = last.expect("at least one run");
+    let r = r.with_bytes(report.total_bytes);
+    println!(
+        "  {epochs} epochs x {records} records: {:>8.1} MiB/s \
+         sealed-output, {:.2}s of epoch overlap",
+        report.total_bytes as f64 / r.mean_secs / (1 << 20) as f64,
+        report.pipeline_overlap_secs,
+    );
+    let lat = harness::single("stream_epoch_p99_latency", report.latency.p99_secs);
+    println!(
+        "  epoch latency: p50 {}  p95 {}  p99 {}",
+        harness::fmt_secs(report.latency.p50_secs),
+        harness::fmt_secs(report.latency.p95_secs),
+        harness::fmt_secs(report.latency.p99_secs),
+    );
+    harness::emit_json("streaming", &[r, lat]);
+}

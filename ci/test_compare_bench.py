@@ -1,0 +1,370 @@
+#!/usr/bin/env python3
+"""Self-tests for ci/compare_bench.py (the perf gate's brain).
+
+Run directly — no pytest dependency, CI invokes it as a plain script:
+
+    python3 ci/test_compare_bench.py
+
+Covers the four paths the perf gate can take:
+  - pass: ratio + regression gates all green end-to-end (exit 0);
+  - fail: speedup below floor / missing twin / regression over the 20%
+    tolerance / missing files (exit 1, with the right failure strings);
+  - update: --update-baselines rewrites ci/baselines with
+    ``provisional: false`` and round-trips through load_results;
+  - armed: --require-armed turns a provisional baseline or missing
+    [scalar]/[simd] pairs from a warning into a hard failure.
+"""
+
+import contextlib
+import io
+import json
+import os
+import sys
+import tempfile
+import unittest
+from unittest import mock
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import compare_bench as cb
+
+
+def entry(name, mean_secs, allocs=0, bytes_=0, smoke=True):
+    e = {"name": name, "mean_secs": mean_secs, "smoke": smoke}
+    if allocs:
+        e["allocs"] = allocs
+    if bytes_:
+        e["bytes"] = bytes_
+    return e
+
+
+def kernels_results(sort_speedup=3.0, simd_ratio=2.0):
+    """A healthy kernels run: ref/opt and scalar/simd pairs for the
+    gated families, with the requested within-run ratios."""
+    return [
+        entry("sort 1M [ref]", 0.3),
+        entry("sort 1M [opt]", 0.3 / sort_speedup, bytes_=100_000_000),
+        entry("merge 8-way [ref]", 0.4, allocs=1000),
+        entry("merge 8-way [opt]", 0.4 / sort_speedup, allocs=10),
+        entry("maplike pipeline [ref]", 0.2, allocs=5000),
+        entry("maplike pipeline [opt]", 0.15, allocs=100),
+        entry("sort 1M [scalar]", 0.2),
+        entry("sort 1M [simd]", 0.2 / simd_ratio),
+        entry("merge 8-way [scalar]", 0.2),
+        entry("merge 8-way [simd]", 0.2 / simd_ratio),
+    ]
+
+
+def write_bench(dirpath, bench, results, provisional=None):
+    os.makedirs(dirpath, exist_ok=True)
+    path = os.path.join(dirpath, f"BENCH_{bench}.json")
+    data = results if provisional is None else {
+        "provisional": provisional,
+        "results": results,
+    }
+    with open(path, "w") as f:
+        json.dump(data, f)
+    return path
+
+
+@contextlib.contextmanager
+def quiet():
+    """Swallow the gate's table output; yield it for assertions."""
+    buf = io.StringIO()
+    with contextlib.redirect_stdout(buf):
+        yield buf
+
+
+class LoadResultsTest(unittest.TestCase):
+    def test_bare_array_is_a_non_provisional_run(self):
+        with tempfile.TemporaryDirectory() as d:
+            p = write_bench(d, "kernels", [entry("sort [ref]", 0.1)])
+            loaded = cb.load_results(p)
+        self.assertFalse(loaded["provisional"])
+        self.assertEqual(len(loaded["results"]), 1)
+
+    def test_baseline_object_keeps_its_provisional_flag(self):
+        with tempfile.TemporaryDirectory() as d:
+            p = write_bench(d, "kernels", [], provisional=True)
+            loaded = cb.load_results(p)
+        self.assertTrue(loaded["provisional"])
+        self.assertEqual(loaded["results"], [])
+
+
+class HelpersTest(unittest.TestCase):
+    def test_family_is_the_first_word(self):
+        self.assertEqual(cb.family("sort 1M [ref]"), "sort")
+        self.assertEqual(cb.family("merge=8 way"), "merge")
+
+    def test_pair_up_twins_ref_with_opt(self):
+        results = kernels_results()
+        pairs = {base: (ref, opt) for base, _, ref, opt in cb.pair_up(results)}
+        self.assertIn("sort 1M", pairs)
+        self.assertIsNotNone(pairs["sort 1M"][1])
+        # scalar/simd pairing uses the alternate suffixes
+        simd = list(cb.pair_up(results, " [scalar]", " [simd]"))
+        self.assertEqual(len(simd), 2)
+
+    def test_pair_up_reports_missing_twin_as_none(self):
+        results = [entry("sort 1M [ref]", 0.1)]
+        [(_, _, _, opt)] = list(cb.pair_up(results))
+        self.assertIsNone(opt)
+
+    def test_gbps_needs_bytes_and_positive_time(self):
+        self.assertIsNone(cb.gbps(entry("x", 0.1)))
+        self.assertAlmostEqual(
+            cb.gbps(entry("x", 0.5, bytes_=1_000_000_000)), 2.0
+        )
+
+
+class RatioGateTest(unittest.TestCase):
+    def run_gate(self, results):
+        failures, rows = [], []
+        with quiet():
+            cb.check_ratios(results, failures, rows)
+        return failures, rows
+
+    def test_healthy_run_passes(self):
+        failures, rows = self.run_gate(kernels_results())
+        self.assertEqual(failures, [])
+        self.assertTrue(all(r["ok"] for r in rows))
+
+    def test_speedup_below_floor_fails(self):
+        failures, _ = self.run_gate(kernels_results(sort_speedup=1.2))
+        self.assertTrue(any("speedup 1.20x" in f for f in failures))
+
+    def test_missing_opt_twin_fails(self):
+        failures, _ = self.run_gate([entry("sort 1M [ref]", 0.1)])
+        self.assertTrue(any("no [opt] twin" in f for f in failures))
+
+    def test_no_pairs_at_all_fails(self):
+        failures, _ = self.run_gate([entry("loose entry", 0.1)])
+        self.assertTrue(any("no [ref]/[opt]" in f for f in failures))
+
+    def test_alloc_ratio_below_floor_fails_on_counting_builds(self):
+        results = kernels_results()
+        for e in results:
+            if e["name"] == "merge 8-way [opt]":
+                e["allocs"] = 900  # 1000/900 ≈ 1.1x < 5x floor
+        failures, _ = self.run_gate(results)
+        self.assertTrue(any("alloc ratio" in f for f in failures))
+
+    def test_alloc_gate_skipped_without_alloc_stats(self):
+        results = [
+            entry("merge 8-way [ref]", 0.4),
+            entry("merge 8-way [opt]", 0.1),
+        ]
+        failures, _ = self.run_gate(results)
+        self.assertEqual(failures, [])
+
+
+class SimdGateTest(unittest.TestCase):
+    def run_gate(self, results, require_armed=False):
+        failures, rows = [], []
+        with quiet():
+            cb.check_simd_ratios(results, failures, require_armed, rows)
+        return failures, rows
+
+    def test_healthy_run_passes(self):
+        failures, rows = self.run_gate(kernels_results())
+        self.assertEqual(failures, [])
+        self.assertEqual(len(rows), 2)
+
+    def test_ratio_below_floor_fails(self):
+        failures, _ = self.run_gate(kernels_results(simd_ratio=1.1))
+        self.assertTrue(any("simd/scalar 1.10x" in f for f in failures))
+
+    def test_missing_pairs_is_a_warning_when_unarmed(self):
+        failures, _ = self.run_gate([entry("sort 1M [ref]", 0.1)])
+        self.assertEqual(failures, [])
+
+    def test_missing_pairs_fails_when_armed(self):
+        failures, _ = self.run_gate(
+            [entry("sort 1M [ref]", 0.1)], require_armed=True
+        )
+        self.assertTrue(any("--require-armed" in f for f in failures))
+
+
+class RegressionGateTest(unittest.TestCase):
+    def run_gate(self, current, baseline, require_armed=False):
+        failures = []
+        with quiet():
+            cb.check_regressions(
+                "kernels", current, baseline, failures, require_armed
+            )
+        return failures
+
+    def wrap(self, results, provisional=False):
+        return {"provisional": provisional, "results": results}
+
+    def test_within_tolerance_passes(self):
+        base = self.wrap([entry("sort 1M [opt]", 0.100)])
+        cur = self.wrap([entry("sort 1M [opt]", 0.115)])  # +15% < 20%
+        self.assertEqual(self.run_gate(cur, base), [])
+
+    def test_regression_over_tolerance_fails(self):
+        base = self.wrap([entry("sort 1M [opt]", 0.100)])
+        cur = self.wrap([entry("sort 1M [opt]", 0.130)])  # +30% > 20%
+        failures = self.run_gate(cur, base)
+        self.assertTrue(any("baseline 0.100000s" in f for f in failures))
+
+    def test_different_smoke_scales_are_not_compared(self):
+        base = self.wrap([entry("sort 1M [opt]", 0.100, smoke=False)])
+        cur = self.wrap([entry("sort 1M [opt]", 9.999, smoke=True)])
+        self.assertEqual(self.run_gate(cur, base), [])
+
+    def test_provisional_baseline_warns_when_unarmed(self):
+        base = self.wrap([], provisional=True)
+        cur = self.wrap([entry("sort 1M [opt]", 9.999)])
+        self.assertEqual(self.run_gate(cur, base), [])
+
+    def test_provisional_baseline_fails_when_armed(self):
+        base = self.wrap([], provisional=True)
+        cur = self.wrap([entry("sort 1M [opt]", 0.1)])
+        failures = self.run_gate(cur, base, require_armed=True)
+        self.assertTrue(any("still provisional" in f for f in failures))
+
+
+class UpdateBaselinesTest(unittest.TestCase):
+    def test_update_writes_armed_baselines(self):
+        with tempfile.TemporaryDirectory() as d:
+            current = os.path.join(d, "current")
+            baselines = os.path.join(d, "baselines")
+            for bench in cb.BENCHES:
+                write_bench(current, bench, [entry(f"{bench} x", 0.1)])
+            with quiet():
+                cb.update_baselines(current, baselines)
+            for bench in cb.BENCHES:
+                loaded = cb.load_results(
+                    os.path.join(baselines, f"BENCH_{bench}.json")
+                )
+                self.assertFalse(loaded["provisional"])
+                self.assertEqual(len(loaded["results"]), 1)
+
+    def test_update_skips_missing_benches(self):
+        with tempfile.TemporaryDirectory() as d:
+            current = os.path.join(d, "current")
+            baselines = os.path.join(d, "baselines")
+            os.makedirs(current)
+            with quiet():
+                cb.update_baselines(current, baselines)
+            self.assertEqual(
+                [f for f in os.listdir(baselines) if f.endswith(".json")], []
+            )
+
+
+class MainEndToEndTest(unittest.TestCase):
+    """Full CLI paths through main(): pass, fail, update, armed."""
+
+    def populate(self, d, provisional=False):
+        current = os.path.join(d, "current")
+        baselines = os.path.join(d, "baselines")
+        write_bench(current, "kernels", kernels_results())
+        write_bench(current, "sched_overhead", [entry("submit_wave", 0.01)])
+        write_bench(current, "fig1", [entry("fig1 e2e", 0.5)])
+        for bench in cb.BENCHES:
+            src = cb.load_results(
+                os.path.join(current, f"BENCH_{bench}.json")
+            )["results"]
+            write_bench(baselines, bench, src, provisional=provisional)
+        return current, baselines
+
+    def run_main(self, argv):
+        with mock.patch.object(sys, "argv", ["compare_bench.py"] + argv):
+            with quiet() as buf:
+                code = cb.main()
+        return code, buf.getvalue()
+
+    def test_pass_path(self):
+        with tempfile.TemporaryDirectory() as d:
+            current, baselines = self.populate(d)
+            code, out = self.run_main(
+                ["--current", current, "--baselines", baselines]
+            )
+        self.assertEqual(code, 0)
+        self.assertIn("perf gate PASSED", out)
+
+    def test_armed_pass_path(self):
+        with tempfile.TemporaryDirectory() as d:
+            current, baselines = self.populate(d, provisional=False)
+            code, _ = self.run_main(
+                ["--current", current, "--baselines", baselines,
+                 "--require-armed"]
+            )
+        self.assertEqual(code, 0)
+
+    def test_provisional_warns_unarmed_but_fails_armed(self):
+        with tempfile.TemporaryDirectory() as d:
+            current, baselines = self.populate(d, provisional=True)
+            code, out = self.run_main(
+                ["--current", current, "--baselines", baselines]
+            )
+            self.assertEqual(code, 0)
+            self.assertIn("::warning", out)
+            code, out = self.run_main(
+                ["--current", current, "--baselines", baselines,
+                 "--require-armed"]
+            )
+        self.assertEqual(code, 1)
+        self.assertIn("still provisional", out)
+
+    def test_regression_fails(self):
+        with tempfile.TemporaryDirectory() as d:
+            current, baselines = self.populate(d)
+            slow = [entry("fig1 e2e", 0.9)]  # baseline 0.5 → +80%
+            write_bench(current, "fig1", slow)
+            code, out = self.run_main(
+                ["--current", current, "--baselines", baselines]
+            )
+        self.assertEqual(code, 1)
+        self.assertIn("perf gate FAILED", out)
+
+    def test_missing_current_file_fails(self):
+        with tempfile.TemporaryDirectory() as d:
+            current, baselines = self.populate(d)
+            os.remove(os.path.join(current, "BENCH_fig1.json"))
+            code, out = self.run_main(
+                ["--current", current, "--baselines", baselines]
+            )
+        self.assertEqual(code, 1)
+        self.assertIn("missing", out)
+
+    def test_update_path_rewrites_and_exits_zero(self):
+        with tempfile.TemporaryDirectory() as d:
+            current, _ = self.populate(d)
+            fresh = os.path.join(d, "fresh-baselines")
+            code, _ = self.run_main(
+                ["--current", current, "--baselines", fresh,
+                 "--update-baselines"]
+            )
+            self.assertEqual(code, 0)
+            loaded = cb.load_results(
+                os.path.join(fresh, "BENCH_kernels.json")
+            )
+            self.assertFalse(loaded["provisional"])
+            # the freshly written baselines must pass their own gate
+            code, _ = self.run_main(
+                ["--current", current, "--baselines", fresh,
+                 "--require-armed"]
+            )
+        self.assertEqual(code, 0)
+
+    def test_step_summary_is_written_when_env_set(self):
+        with tempfile.TemporaryDirectory() as d:
+            current, baselines = self.populate(d)
+            summary = os.path.join(d, "summary.md")
+            with mock.patch.dict(
+                os.environ, {"GITHUB_STEP_SUMMARY": summary}
+            ):
+                code, _ = self.run_main(
+                    ["--current", current, "--baselines", baselines]
+                )
+            self.assertEqual(code, 0)
+            with open(summary) as f:
+                text = f.read()
+        self.assertIn("Perf gate", text)
+        self.assertIn("PASSED", text)
+
+
+if __name__ == "__main__":
+    unittest.main(verbosity=1)

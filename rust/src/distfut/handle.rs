@@ -516,6 +516,17 @@ impl RuntimeHandle {
         }
     }
 
+    /// Store entries still owned by `job`. A retired job must count
+    /// zero — the streaming service probes this after each epoch seal
+    /// so a long-lived stream's footprint stays bounded by its open
+    /// epochs, not its history.
+    pub fn store_live_entries_for(&self, job: JobId) -> usize {
+        match self {
+            RuntimeHandle::Threaded(rt) => rt.store_live_entries_for(job),
+            RuntimeHandle::Sim(rt) => rt.store_live_entries_for(job),
+        }
+    }
+
     pub fn recovery_stats(&self) -> RecoveryStats {
         match self {
             RuntimeHandle::Threaded(rt) => rt.recovery_stats(),

@@ -1729,6 +1729,12 @@ impl Runtime {
         self.shared.store.live_entries()
     }
 
+    /// Store entries still owned by `job` (the streaming service's
+    /// per-epoch purge probe: zero once that epoch is retired).
+    pub fn store_live_entries_for(&self, job: JobId) -> usize {
+        self.shared.store.live_entries_of(job)
+    }
+
     /// Cumulative recovery counters (kills, losses, resubmissions).
     pub fn recovery_stats(&self) -> RecoveryStats {
         let sh = &self.shared;

@@ -1109,6 +1109,12 @@ impl SimRuntime {
         self.shared.store.live_entries()
     }
 
+    /// Store entries still owned by `job` (the streaming service's
+    /// per-epoch purge probe: zero once that epoch is retired).
+    pub fn store_live_entries_for(&self, job: JobId) -> usize {
+        self.shared.store.live_entries_of(job)
+    }
+
     /// Cumulative recovery counters.
     pub fn recovery_stats(&self) -> RecoveryStats {
         let sh = &self.shared;

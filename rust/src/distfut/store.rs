@@ -1022,6 +1022,21 @@ impl Store {
         self.table.lock().unwrap().entries.len()
     }
 
+    /// Entries still present that belong to `job` — the per-epoch
+    /// bounded-footprint probe of a long-lived streaming run: an epoch
+    /// that has been sealed and retired must count zero here while the
+    /// open epochs' working sets stay live, so a stream's store
+    /// footprint tracks its pipeline depth, not its history.
+    pub fn live_entries_of(&self, job: JobId) -> usize {
+        self.table
+            .lock()
+            .unwrap()
+            .entries
+            .values()
+            .filter(|e| e.job == job)
+            .count()
+    }
+
     pub fn stats(&self) -> StoreStats {
         let t = self.table.lock().unwrap();
         StoreStats {

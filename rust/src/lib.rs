@@ -92,9 +92,9 @@ pub mod prelude {
         ScaleEvent, ServiceConfig,
     };
     pub use crate::shuffle::{
-        JobReport, ShuffleJob, ShuffleStrategy, SimpleShuffle, StageTiming,
-        StreamingShuffle, TwoStageMerge,
+        IngestSource, JobReport, ShuffleJob, ShuffleStrategy, SimpleShuffle,
+        StageTiming, StreamJob, StreamReport, StreamingShuffle, TwoStageMerge,
     };
     pub use crate::sim::SimConfig;
-    pub use crate::sortlib::{Record, RECORD_SIZE};
+    pub use crate::sortlib::{Record, Skew, RECORD_SIZE};
 }

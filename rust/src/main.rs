@@ -23,9 +23,12 @@ use exoshuffle::runtime::Backend;
 use exoshuffle::service::{
     Autoscaler, AutoscalerConfig, JobService, ServiceConfig,
 };
-use exoshuffle::shuffle::{list_strategies, strategy_by_name, ShuffleJob};
+use exoshuffle::shuffle::{
+    list_strategies, strategy_by_name, IngestSource, ShuffleJob, StreamJob,
+};
 use exoshuffle::sim::{
-    estimate_autoscale, estimate_multi_job, simulate, SimConfig, SimStrategy,
+    estimate_autoscale, estimate_multi_job, estimate_stream, simulate,
+    SimConfig, SimStrategy,
 };
 use exoshuffle::sortlib::Skew;
 use exoshuffle::util::rng::stream_at;
@@ -52,6 +55,8 @@ const BOOLEAN_FLAGS: &[&str] = &[
     "autoscale",
     "resume",
     "speculate",
+    "stream",
+    "verify-batch",
 ];
 
 /// Parse `--key value` pairs after the subcommand. A flag listed in
@@ -92,6 +97,7 @@ fn run(args: Vec<String>) -> anyhow::Result<()> {
     match cmd {
         "sort" => cmd_sort(&flags),
         "serve" => cmd_serve(&flags),
+        "stream" => cmd_stream(&flags),
         "sim" => cmd_sim(&flags),
         "vopr" => cmd_vopr(&flags),
         "cost" => cmd_cost(&flags),
@@ -159,6 +165,35 @@ COMMANDS:
            --min-nodes 1       autoscaler floor
            --max-nodes W       autoscaler ceiling (default --workers)
            --backend xla|native
+  stream run a continuous repartitioning job: a seeded arrival stream
+         windowed into epochs, each epoch shuffled through the batch
+         machinery (epoch N+1 admits while epoch N drains), sealed in
+         order with ingest->sealed latency tracked against an SLO
+           --epochs 4          epochs to run before stopping
+           --epoch-records 20000  records per epoch window
+           --arrival-rate R    records/second of the ingest stream
+                               (default: one window per second;
+                               0 = pre-filled backlog)
+           --slo-ms MS         per-epoch latency objective (violations
+                               are counted, not fatal)
+           --workers 4         worker nodes of the shared runtime
+           --strategy NAME     two-stage-merge | simple | streaming
+           --backend xla|native
+           --skew zipf:THETA   key distribution of the arrivals
+           --burst-every N     every Nth epoch arrives at
+           --burst-factor F    F x the steady rate (shorter window)
+           --pipeline-depth 2  epochs allowed open at once (1 = serial)
+           --speculate [MULT]  straggler re-execution inside epochs
+           --chaos-kill N@C    kill node N after the C-th commit of the
+                               chaos epoch (comma-repeatable); also
+                               --chaos-slow, --chaos-s3-latency as in
+                               `sort`
+           --chaos-epoch E     epoch the chaos plan arms on (default:
+                               mid-stream)
+           --sim-seed S        run on the deterministic simulation
+                               backend (virtual time) instead of threads
+           --verify-batch      re-run every epoch as a one-shot batch
+                               sort and check byte-identity
   sim    simulate the full 100 TB benchmark (Table 1 / Figure 1)
            --runs 3            number of runs (Table 1 rows)
            --strategy NAME     topology to replay (default two-stage-merge)
@@ -169,6 +204,12 @@ COMMANDS:
            --min-nodes W/4     elastic ramp floor
            --provision-secs 60 node provisioning cadence of the ramp
            --fig1-csv FILE     write Figure 1 utilization CSV
+           --stream            also estimate the benchmark as one epoch
+                               of a continuous stream: per-epoch latency
+                               vs arrival rate and the backlog cliff
+           --arrival-rate R    records/second for --stream (default:
+                               the max sustainable rate x 0.8)
+           --epochs 8          epochs for the --stream estimate
   vopr   sweep seeds x strategies x chaos plans over the deterministic
          simulation runtime (distfut::sim); every run executes the real
          shuffle pipeline on a virtual clock and is byte-checked against
@@ -183,6 +224,11 @@ COMMANDS:
                                with speculation enabled)
            --workers 3         fleet size per run (>= 2)
            --size 2MiB         dataset size per run
+           --workload sort     `sort` (one-shot job per cell) or
+                               `stream` (3-epoch StreamJob per cell;
+                               chaos arms mid-stream, every epoch is
+                               byte-checked against the unfaulted
+                               stream's per-epoch digests)
            --out FILE          append JSONL results here (else stdout)
            --resume            skip (seed,strategy,chaos) cells already
                                recorded in --out (CI shard restarts)
@@ -924,6 +970,204 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// The continuous repartitioning driver: a seeded arrival stream
+/// windowed into epochs, each epoch shuffled through the batch
+/// machinery on a shared `JobService` (epoch N+1 admits while epoch N
+/// drains), sealed in watermark order with ingest→sealed latency
+/// tracked against an optional SLO.
+fn cmd_stream(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let epochs: usize = flags
+        .get("epochs")
+        .map(|v| v.parse())
+        .transpose()?
+        .unwrap_or(4);
+    let epoch_records: u64 = flags
+        .get("epoch-records")
+        .map(|v| v.parse())
+        .transpose()?
+        .unwrap_or(20_000);
+    if epoch_records == 0 {
+        return Err(anyhow::anyhow!("--epoch-records must be positive"));
+    }
+    // default: one window per second (pipelining has real slack to hide)
+    let arrival_rate: f64 = flags
+        .get("arrival-rate")
+        .map(|v| v.parse())
+        .transpose()?
+        .unwrap_or(epoch_records as f64);
+    if !arrival_rate.is_finite() || arrival_rate < 0.0 {
+        return Err(anyhow::anyhow!(
+            "--arrival-rate must be a non-negative rate, got {arrival_rate}"
+        ));
+    }
+    let workers: usize = flags
+        .get("workers")
+        .map(|v| v.parse())
+        .transpose()?
+        .unwrap_or(4);
+    let strategy_name = flags
+        .get("strategy")
+        .map(|s| s.as_str())
+        .unwrap_or("two-stage-merge");
+    let strategy = strategy_by_name(strategy_name).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown strategy '{strategy_name}' (try sort --list-strategies)"
+        )
+    })?;
+    let artifacts = flags
+        .get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"));
+    let backend = Backend::from_name(
+        flags
+            .get("backend")
+            .map(|s| s.as_str())
+            .unwrap_or(DEFAULT_BACKEND),
+        &artifacts,
+    )?;
+
+    let mut source = IngestSource::new(42, arrival_rate, epoch_records);
+    if let Some(v) = flags.get("skew") {
+        source.skew = parse_skew(v).map_err(|e| anyhow::anyhow!(e))?;
+    }
+    if let Some(v) = flags.get("burst-every") {
+        source.burst_every = v
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad --burst-every '{v}'"))?;
+    }
+    if let Some(v) = flags.get("burst-factor") {
+        let f: f64 = v
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad --burst-factor '{v}'"))?;
+        if !f.is_finite() || f < 1.0 {
+            return Err(anyhow::anyhow!(
+                "--burst-factor must be >= 1.0, got '{v}'"
+            ));
+        }
+        source.burst_factor = f;
+    }
+
+    let mut job = StreamJob::new(source, workers)
+        .epochs(epochs)
+        .strategy_arc(strategy)
+        .backend(backend);
+    if let Some(v) = flags.get("slo-ms") {
+        let ms: f64 = v
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad --slo-ms '{v}'"))?;
+        job = job.slo_ms(ms);
+    }
+    if let Some(v) = flags.get("sim-seed") {
+        let seed: u64 = v
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad --sim-seed '{v}'"))?;
+        job = job.sim_seed(seed);
+    }
+    if let Some(v) = flags.get("pipeline-depth") {
+        let depth: usize = v
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad --pipeline-depth '{v}'"))?;
+        job = job.pipeline_depth(depth);
+    }
+    if flags.get("verify-batch").map(|v| v == "true") == Some(true) {
+        job = job.verify_batch(true);
+    }
+    if let Some(v) = flags.get("speculate") {
+        job = job
+            .speculate(parse_speculate(v).map_err(|e| anyhow::anyhow!(e))?);
+    }
+    let mut plan = ChaosPlan::new();
+    if let Some(kills) = flags.get("chaos-kill") {
+        plan = parse_chaos_kills(kills).map_err(|e| anyhow::anyhow!(e))?;
+    }
+    if let Some(slows) = flags.get("chaos-slow") {
+        plan = parse_chaos_slow(slows, plan).map_err(|e| anyhow::anyhow!(e))?;
+    }
+    if let Some(lat) = flags.get("chaos-s3-latency") {
+        plan = parse_chaos_s3_latency(lat, plan)
+            .map_err(|e| anyhow::anyhow!(e))?;
+    }
+    if !plan.triggers.is_empty() {
+        job = job.chaos(plan);
+    }
+    if let Some(v) = flags.get("chaos-epoch") {
+        let e: usize = v
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad --chaos-epoch '{v}'"))?;
+        job = job.chaos_epoch(e);
+    }
+
+    println!(
+        "streaming {epochs} epochs of {} ({} records) at {arrival_rate:.0} \
+         records/s across {workers} workers (strategy={strategy_name})",
+        human_bytes(epoch_records * exoshuffle::sortlib::RECORD_SIZE as u64),
+        epoch_records,
+    );
+    let report = job.run()?;
+    for ep in &report.epochs {
+        println!(
+            "epoch #{:<2} window {:>6.2}s  sealed@{:>7.2}s  \
+             latency {:>7.2}s{}{}{}{}",
+            ep.epoch,
+            ep.window_secs,
+            ep.sealed_secs,
+            ep.latency_secs,
+            if ep.slo_violated { "  SLO-VIOLATION" } else { "" },
+            if ep.report.validation.valid { "" } else { "  INVALID" },
+            if ep.store_purged { "" } else { "  STORE-LEAK" },
+            match ep.batch_identical {
+                Some(true) => "  batch-identical",
+                Some(false) => "  BATCH-MISMATCH",
+                None => "",
+            },
+        );
+    }
+    println!(
+        "watermark: {} epochs ({} records, {}) sealed in {}  ({}/s)",
+        report.watermark,
+        report.total_records,
+        human_bytes(report.total_bytes),
+        human_secs(report.total_secs),
+        human_bytes(report.bytes_per_sec() as u64),
+    );
+    let l = &report.latency;
+    println!(
+        "latency: p50 {:.2}s  p95 {:.2}s  p99 {:.2}s  max {:.2}s",
+        l.p50_secs, l.p95_secs, l.p99_secs, l.max_secs,
+    );
+    if let Some(slo) = l.slo_secs {
+        println!(
+            "slo: {:.0}ms -> {} violation(s) in {} epoch(s) ({:.0}%)",
+            slo * 1000.0,
+            l.violations,
+            l.n,
+            l.violation_rate() * 100.0,
+        );
+    }
+    println!(
+        "pipeline: {:.2}s of epoch overlap, max {} epoch(s) open",
+        report.pipeline_overlap_secs, report.max_open_epochs,
+    );
+    if !report.all_valid() {
+        return Err(anyhow::anyhow!("an epoch failed output validation"));
+    }
+    if !report.all_purged() {
+        return Err(anyhow::anyhow!(
+            "store entries survived epoch retirement"
+        ));
+    }
+    if report
+        .epochs
+        .iter()
+        .any(|e| e.batch_identical == Some(false))
+    {
+        return Err(anyhow::anyhow!(
+            "an epoch's output diverged from its batch re-run"
+        ));
+    }
+    Ok(())
+}
+
 fn cmd_sim(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     if flags.contains_key("list-strategies") {
         print_strategies(true);
@@ -1053,6 +1297,54 @@ fn cmd_sim(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         );
     }
 
+    // Continuous-stream mode: the benchmark as one epoch of a stream
+    if flags.get("stream").map(|v| v == "true") == Some(true) {
+        let mut cfg = SimConfig::paper_100tb();
+        cfg.strategy = strategy;
+        let epochs: usize = flags
+            .get("epochs")
+            .map(|v| v.parse())
+            .transpose()?
+            .unwrap_or(8);
+        // default arrival: 80% of the sustainable rate (keeps up, with
+        // headroom); the probe run also prices the cliff itself
+        let probe = estimate_stream(&cfg, epochs, 0.0);
+        let rate: f64 = flags
+            .get("arrival-rate")
+            .map(|v| v.parse())
+            .transpose()?
+            .unwrap_or(probe.max_sustainable_rate * 0.8);
+        let e = estimate_stream(&cfg, epochs, rate);
+        println!(
+            "\ncontinuous stream ({epochs} epochs at {rate:.0} records/s):"
+        );
+        println!(
+            "  window {:.0}s  process {:.0}s  -> {}",
+            e.window_secs,
+            e.process_secs,
+            if e.backlogged {
+                "BACKLOGGED (arrivals outpace the shuffle)"
+            } else {
+                "keeping up"
+            },
+        );
+        println!(
+            "  epoch latency: first {:.0}s, epoch #{} {:.0}s",
+            e.steady_latency_secs,
+            epochs - 1,
+            e.final_latency_secs,
+        );
+        println!(
+            "  max sustainable rate: {:.0} records/s ({}/s sorted)",
+            e.max_sustainable_rate,
+            human_bytes(
+                (e.max_sustainable_rate
+                    * exoshuffle::sortlib::RECORD_SIZE as f64)
+                    as u64
+            ),
+        );
+    }
+
     // Table 2 from run #1
     let r = &rows[0];
     let model = CostModel::paper();
@@ -1122,9 +1414,11 @@ fn json_escape(s: &str) -> String {
     out
 }
 
-/// Extract the `(seed, strategy, chaos)` identity of a vopr JSONL line
-/// (resume support). `None` for lines that don't carry all three keys.
-fn vopr_line_key(line: &str) -> Option<(u64, String, String)> {
+/// Extract the `(seed, strategy, chaos, workload)` identity of a vopr
+/// JSONL line (resume support). `None` for lines that don't carry the
+/// seed/strategy/chaos keys; lines from before the stream workload
+/// carry no `workload` field and default to `"sort"`.
+fn vopr_line_key(line: &str) -> Option<(u64, String, String, String)> {
     let field = |key: &str| -> Option<&str> {
         let tag = format!("\"{key}\":");
         let rest = line[line.find(&tag)? + tag.len()..].trim_start();
@@ -1139,6 +1433,7 @@ fn vopr_line_key(line: &str) -> Option<(u64, String, String)> {
         field("seed")?.parse().ok()?,
         field("strategy")?.to_string(),
         field("chaos")?.to_string(),
+        field("workload").unwrap_or("sort").to_string(),
     ))
 }
 
@@ -1254,6 +1549,125 @@ fn vopr_run_one(
     }
 }
 
+/// Execute one (seed, strategy, chaos) cell as a 3-epoch stream on the
+/// simulation backend and check the streaming invariants: the stream
+/// terminates with every epoch sealed (liveness), every epoch
+/// validates, per-epoch output bytes match the unfaulted stream's
+/// digests (chaos arms mid-stream, at epoch 1), each epoch's store
+/// entries are swept at its seal (bounded footprint), and nothing leaks
+/// or goes unrecoverable runtime-wide. Returns the outcome plus the
+/// per-epoch `(checksum, records)` digests so the first run of a sweep
+/// can serve as the reference for the rest.
+fn vopr_run_stream(
+    spec: &JobSpec,
+    strategy: &str,
+    mode: &str,
+    seed: u64,
+    reference: Option<&[(u64, u64)]>,
+) -> (VoprOutcome, Vec<(u64, u64)>) {
+    const EPOCHS: usize = 3;
+    let workers = spec.n_workers();
+    // one cell-sized window per epoch, filling in one second
+    let records = spec.total_records();
+    let mut source = IngestSource::new(42, records as f64, records);
+    source.skew = spec.skew;
+    let mut cfg = ServiceConfig::for_spec(spec);
+    cfg.sim_seed = Some(seed);
+    let service = JobService::new(cfg);
+    let mut job = StreamJob::new(source, workers)
+        .epochs(EPOCHS)
+        .strategy_arc(strategy_by_name(strategy).expect("validated"))
+        .backend(Backend::Native)
+        .name(format!("vopr-stream-{seed}-{strategy}-{mode}"));
+    if mode == "slow" {
+        // as in the sort workload: straggler re-execution is the
+        // mechanism under test in slow cells
+        job = job.speculate(2.0);
+    }
+    if let Some(plan) = vopr_chaos_plan(mode, seed, workers) {
+        job = job.chaos(plan).chaos_epoch(1);
+    }
+    let result = job.run_on(&service);
+    let rt = service.runtime();
+    let recovery = rt.recovery_stats();
+    let speculation = rt.speculation_stats();
+    let duplicate_commits = rt.store_stats().duplicate_commits;
+    let (tasks_executed, tasks_retried) = rt.task_counts();
+    let leaked = rt.store_live_entries();
+    let virtual_secs = rt.now();
+
+    let mut errors = Vec::new();
+    let mut digests: Vec<(u64, u64)> = Vec::new();
+    let (mut checksum, mut records_out) = (0u64, 0u64);
+    match &result {
+        Ok(report) => {
+            for ep in &report.epochs {
+                digests.push((ep.checksum, ep.records));
+                checksum ^= ep.checksum.rotate_left(ep.epoch as u32);
+                if !ep.report.validation.valid {
+                    errors.push(format!(
+                        "epoch {} failed validation",
+                        ep.epoch
+                    ));
+                }
+                if !ep.store_purged {
+                    errors.push(format!(
+                        "epoch {} store entries not swept at seal",
+                        ep.epoch
+                    ));
+                }
+            }
+            records_out = report.total_records;
+            if report.watermark != EPOCHS {
+                errors.push(format!(
+                    "watermark stalled at {} of {EPOCHS} epochs",
+                    report.watermark
+                ));
+            }
+            if let Some(reference) = reference {
+                if digests != reference {
+                    errors.push(format!(
+                        "per-epoch output diverged from unfaulted \
+                         stream: {digests:x?} vs {reference:x?}"
+                    ));
+                }
+            }
+        }
+        Err(e) => errors.push(format!("stream failed: {e:#}")),
+    }
+    if recovery.objects_unrecoverable > 0 {
+        errors.push(format!(
+            "{} objects unrecoverable despite recorded lineage",
+            recovery.objects_unrecoverable
+        ));
+    }
+    if leaked > 0 {
+        errors.push(format!(
+            "{leaked} store entries leaked after the stream"
+        ));
+    }
+    if mode == "slow" && duplicate_commits > 0 {
+        errors.push(format!(
+            "{duplicate_commits} duplicate output commits under \
+             speculation (sim races must resolve by body-skip)"
+        ));
+    }
+    service.shutdown();
+    (
+        VoprOutcome {
+            errors,
+            checksum,
+            records: records_out,
+            virtual_secs,
+            tasks_executed,
+            tasks_retried,
+            tasks_resubmitted: recovery.tasks_resubmitted,
+            tasks_speculated: speculation.tasks_speculated,
+        },
+        digests,
+    )
+}
+
 /// The vopr seed-sweep fuzzer: every (seed, strategy, chaos) cell runs
 /// the real shuffle pipeline on the deterministic simulation runtime
 /// and is checked against the strategy's unfaulted reference output.
@@ -1320,6 +1734,12 @@ fn cmd_vopr(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             ));
         }
     }
+    let workload = flags.get("workload").map(|s| s.as_str()).unwrap_or("sort");
+    if !["sort", "stream"].contains(&workload) {
+        return Err(anyhow::anyhow!(
+            "unknown workload '{workload}' in --workload (sort or stream)"
+        ));
+    }
     let out_path = flags.get("out").map(PathBuf::from);
     let resume = flags.get("resume").map(|v| v == "true") == Some(true);
     if resume && out_path.is_none() {
@@ -1330,7 +1750,7 @@ fn cmd_vopr(flags: &HashMap<String, String>) -> anyhow::Result<()> {
 
     // checkpoint/resume: cells already recorded in --out are skipped, so
     // an interrupted CI shard re-launches from where it stopped
-    let mut done: HashSet<(u64, String, String)> = HashSet::new();
+    let mut done: HashSet<(u64, String, String, String)> = HashSet::new();
     if resume {
         if let Some(path) = &out_path {
             if let Ok(text) = std::fs::read_to_string(path) {
@@ -1355,8 +1775,8 @@ fn cmd_vopr(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         .unwrap_or_else(|| size.to_string());
     let total = (seed_end - seed_start) as usize * strategy_names.len() * chaos_modes.len();
     eprintln!(
-        "vopr: seeds [{seed_start}, {seed_end}) x {:?} x {:?} on \
-         {workers} workers, {} per run ({total} cells)",
+        "vopr: {workload} workload, seeds [{seed_start}, {seed_end}) x \
+         {:?} x {:?} on {workers} workers, {} per run ({total} cells)",
         strategy_names,
         chaos_modes,
         human_bytes(size),
@@ -1364,21 +1784,60 @@ fn cmd_vopr(flags: &HashMap<String, String>) -> anyhow::Result<()> {
 
     // per-strategy unfaulted reference digest, computed lazily on the
     // sweep's first seed: every cell must reproduce these exact bytes
+    // (per-epoch digests for the stream workload)
     let mut reference: HashMap<String, Option<(u64, u64)>> = HashMap::new();
+    let mut stream_reference: HashMap<String, Option<Vec<(u64, u64)>>> =
+        HashMap::new();
     let (mut passed, mut failed, mut skipped) = (0usize, 0usize, 0usize);
     for seed in seed_start..seed_end {
         for strategy in &strategy_names {
-            let reference = *reference.entry(strategy.clone()).or_insert_with(|| {
-                let r = vopr_run_one(&spec, strategy, "none", seed_start, None);
-                r.errors.is_empty().then_some((r.checksum, r.records))
-            });
+            let reference = if workload == "sort" {
+                *reference.entry(strategy.clone()).or_insert_with(|| {
+                    let r = vopr_run_one(&spec, strategy, "none", seed_start, None);
+                    r.errors.is_empty().then_some((r.checksum, r.records))
+                })
+            } else {
+                None
+            };
+            let stream_reference = if workload == "stream" {
+                stream_reference
+                    .entry(strategy.clone())
+                    .or_insert_with(|| {
+                        let (r, digests) = vopr_run_stream(
+                            &spec, strategy, "none", seed_start, None,
+                        );
+                        r.errors.is_empty().then_some(digests)
+                    })
+                    .clone()
+            } else {
+                None
+            };
             for mode in &chaos_modes {
-                let key = (seed, strategy.clone(), mode.clone());
+                let key = (
+                    seed,
+                    strategy.clone(),
+                    mode.clone(),
+                    workload.to_string(),
+                );
                 if done.contains(&key) {
                     skipped += 1;
                     continue;
                 }
-                let r = vopr_run_one(&spec, strategy, mode, seed, reference);
+                let r = match workload {
+                    "sort" => {
+                        vopr_run_one(&spec, strategy, mode, seed, reference)
+                    }
+                    _ => {
+                        vopr_run_stream(
+                            &spec,
+                            strategy,
+                            mode,
+                            seed,
+                            stream_reference.as_deref(),
+                        )
+                        .0
+                    }
+                };
                 let ok = r.errors.is_empty();
                 if ok {
                     passed += 1;
@@ -1391,10 +1850,10 @@ fn cmd_vopr(flags: &HashMap<String, String>) -> anyhow::Result<()> {
                         );
                     }
                     eprintln!(
-                        "repro: exoshuffle vopr --seed-start {seed} \
-                         --seed-end {} --strategies {strategy} \
-                         --chaos {mode} --workers {workers} \
-                         --size {size_arg}",
+                        "repro: exoshuffle vopr --workload {workload} \
+                         --seed-start {seed} --seed-end {} \
+                         --strategies {strategy} --chaos {mode} \
+                         --workers {workers} --size {size_arg}",
                         seed + 1
                     );
                 }
@@ -1405,7 +1864,8 @@ fn cmd_vopr(flags: &HashMap<String, String>) -> anyhow::Result<()> {
                 };
                 let line = format!(
                     "{{\"seed\":{seed},\"strategy\":\"{strategy}\",\
-                     \"chaos\":\"{mode}\",\"workers\":{workers},\
+                     \"chaos\":\"{mode}\",\"workload\":\"{workload}\",\
+                     \"workers\":{workers},\
                      \"ok\":{ok},\"checksum\":\"{:#x}\",\
                      \"records\":{},\"virtual_secs\":{:.6},\
                      \"tasks\":{},\"retries\":{},\"resubmitted\":{},\
@@ -1642,12 +2102,27 @@ mod tests {
     #[test]
     fn vopr_jsonl_round_trips_its_resume_key() {
         let line = "{\"seed\":42,\"strategy\":\"two-stage-merge\",\
-                    \"chaos\":\"kill\",\"workers\":3,\"ok\":true,\
+                    \"chaos\":\"kill\",\"workload\":\"stream\",\
+                    \"workers\":3,\"ok\":true,\
                     \"checksum\":\"0xabc\",\"records\":100,\
                     \"virtual_secs\":1.5,\"tasks\":10,\"retries\":0,\
                     \"resubmitted\":2,\"error\":null}";
         let key = vopr_line_key(line).unwrap();
-        assert_eq!(key, (42, "two-stage-merge".into(), "kill".into()));
+        assert_eq!(
+            key,
+            (
+                42,
+                "two-stage-merge".into(),
+                "kill".into(),
+                "stream".into()
+            )
+        );
+        // lines from before the stream workload carry no workload field
+        // and must keep resuming as sort cells
+        let legacy = "{\"seed\":7,\"strategy\":\"simple\",\
+                      \"chaos\":\"none\",\"workers\":3,\"ok\":true}";
+        let key = vopr_line_key(legacy).unwrap();
+        assert_eq!(key, (7, "simple".into(), "none".into(), "sort".into()));
         assert!(vopr_line_key("not json").is_none());
         assert!(vopr_line_key("{\"seed\":1}").is_none());
     }

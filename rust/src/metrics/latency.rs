@@ -1,0 +1,159 @@
+//! Epoch-latency accounting for continuous (streaming) jobs.
+//!
+//! A [`crate::shuffle::streaming_service::StreamJob`] seals one output
+//! epoch at a time; the service records each epoch's ingest→sealed
+//! latency — the modeled arrival window of the epoch's records plus the
+//! measured map→shuffle→reduce processing time on the runtime's clock —
+//! and summarizes the distribution here. p99 epoch latency is the
+//! first-class service metric ("heavy traffic from millions of users"
+//! is a tail-latency story, not a throughput story), so the summary
+//! carries the interpolated p50/p95/p99 plus an SLO violation count
+//! against an optional per-epoch latency objective.
+//!
+//! Times are seconds on the run's clock: wall clock on the threaded
+//! backend, virtual time under [`crate::distfut::sim`] — so simulated
+//! streams report deterministic latency distributions vopr can sweep.
+
+use crate::util::stats::percentile;
+
+/// Summary of a per-epoch latency distribution, surfaced on
+/// [`crate::shuffle::JobReport::latency`] and
+/// [`crate::shuffle::streaming_service::StreamReport`].
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct LatencyStats {
+    /// Epochs summarized.
+    pub n: usize,
+    pub mean_secs: f64,
+    /// Interpolated percentiles ([`crate::util::stats::percentile`]).
+    pub p50_secs: f64,
+    pub p95_secs: f64,
+    pub p99_secs: f64,
+    pub max_secs: f64,
+    /// The per-epoch objective these latencies were checked against
+    /// (`None`: no SLO armed, `violations` stays 0).
+    pub slo_secs: Option<f64>,
+    /// Epochs whose latency exceeded `slo_secs`.
+    pub violations: usize,
+}
+
+impl LatencyStats {
+    /// Summarize a set of per-epoch latencies against an optional SLO.
+    pub fn from_latencies(latencies: &[f64], slo_secs: Option<f64>) -> LatencyStats {
+        if latencies.is_empty() {
+            return LatencyStats {
+                slo_secs,
+                ..LatencyStats::default()
+            };
+        }
+        let violations = match slo_secs {
+            Some(slo) => latencies.iter().filter(|&&l| l > slo).count(),
+            None => 0,
+        };
+        LatencyStats {
+            n: latencies.len(),
+            mean_secs: crate::util::stats::mean(latencies),
+            p50_secs: percentile(latencies, 0.50),
+            p95_secs: percentile(latencies, 0.95),
+            p99_secs: percentile(latencies, 0.99),
+            max_secs: latencies.iter().copied().fold(0.0, f64::max),
+            slo_secs,
+            violations,
+        }
+    }
+
+    /// Fraction of epochs violating the SLO (0.0 with no SLO armed or
+    /// no epochs).
+    pub fn violation_rate(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.violations as f64 / self.n as f64
+        }
+    }
+}
+
+/// Accumulates per-epoch latencies as a stream seals them; a summary
+/// can be taken at any watermark (the streaming service stamps the
+/// stats-so-far onto every sealed epoch's report).
+#[derive(Clone, Debug, Default)]
+pub struct LatencyTracker {
+    samples: Vec<f64>,
+    slo_secs: Option<f64>,
+}
+
+impl LatencyTracker {
+    pub fn new(slo_secs: Option<f64>) -> LatencyTracker {
+        LatencyTracker {
+            samples: Vec::new(),
+            slo_secs,
+        }
+    }
+
+    /// Record one sealed epoch's ingest→sealed latency.
+    pub fn record(&mut self, latency_secs: f64) {
+        self.samples.push(latency_secs);
+    }
+
+    /// Whether `latency_secs` breaks the armed SLO.
+    pub fn violates(&self, latency_secs: f64) -> bool {
+        matches!(self.slo_secs, Some(slo) if latency_secs > slo)
+    }
+
+    /// Summary over everything recorded so far.
+    pub fn stats(&self) -> LatencyStats {
+        LatencyStats::from_latencies(&self.samples, self.slo_secs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_tracker_is_all_zero() {
+        let s = LatencyTracker::new(Some(1.0)).stats();
+        assert_eq!(s.n, 0);
+        assert_eq!(s.violations, 0);
+        assert_eq!(s.violation_rate(), 0.0);
+        assert_eq!(s.slo_secs, Some(1.0));
+    }
+
+    #[test]
+    fn percentiles_order_and_interpolate() {
+        let lat: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = LatencyStats::from_latencies(&lat, None);
+        assert_eq!(s.n, 100);
+        assert!(s.p50_secs <= s.p95_secs && s.p95_secs <= s.p99_secs);
+        assert!(s.p99_secs <= s.max_secs);
+        assert!((s.max_secs - 100.0).abs() < 1e-12);
+        assert!((s.mean_secs - 50.5).abs() < 1e-12);
+        // p50 of 1..=100 interpolates around the middle of the range
+        assert!(s.p50_secs > 49.0 && s.p50_secs < 52.0, "{}", s.p50_secs);
+        assert!(s.p99_secs > 98.0, "{}", s.p99_secs);
+    }
+
+    #[test]
+    fn slo_counts_strict_violations() {
+        let lat = [0.5, 1.0, 1.5, 2.0];
+        let s = LatencyStats::from_latencies(&lat, Some(1.0));
+        // 1.0 meets a 1.0s SLO; 1.5 and 2.0 break it
+        assert_eq!(s.violations, 2);
+        assert!((s.violation_rate() - 0.5).abs() < 1e-12);
+        let none = LatencyStats::from_latencies(&lat, None);
+        assert_eq!(none.violations, 0);
+    }
+
+    #[test]
+    fn tracker_accumulates_across_epochs() {
+        let mut t = LatencyTracker::new(Some(0.1));
+        assert!(!t.violates(0.05));
+        assert!(t.violates(0.2));
+        t.record(0.05);
+        t.record(0.2);
+        t.record(0.3);
+        let s = t.stats();
+        assert_eq!(s.n, 3);
+        assert_eq!(s.violations, 2);
+        assert!((s.max_secs - 0.3).abs() < 1e-12);
+    }
+}

@@ -5,11 +5,13 @@
 //! bands across worker nodes).
 
 pub mod fairness;
+pub mod latency;
 pub mod timeline;
 pub mod timeseries;
 pub mod utilization;
 
 pub use fairness::{fairness_summary, slot_share_series, FairnessSummary};
+pub use latency::{LatencyStats, LatencyTracker};
 pub use timeline::{overlap_secs, per_node_timelines, NodeTimeline};
 pub use timeseries::Timeseries;
 pub use utilization::{

@@ -31,6 +31,7 @@
 pub mod report;
 pub mod simple;
 pub mod streaming;
+pub mod streaming_service;
 pub mod two_stage;
 
 use std::sync::Arc;
@@ -40,6 +41,9 @@ use anyhow::anyhow;
 pub use report::{JobReport, StageTiming, ValidationReport};
 pub use simple::SimpleShuffle;
 pub use streaming::StreamingShuffle;
+pub use streaming_service::{
+    EpochReport, IngestSource, StreamJob, StreamReport,
+};
 pub use two_stage::TwoStageMerge;
 
 use crate::coordinator::plan::JobSpec;
@@ -463,6 +467,7 @@ pub(crate) fn execute_on(
         recovery: rt.recovery_stats(),
         speculation: rt.speculation_stats(),
         chaos: harness.map(|h| h.log()).unwrap_or_default(),
+        latency: None,
     })
 }
 

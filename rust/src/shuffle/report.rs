@@ -79,6 +79,11 @@ pub struct JobReport {
     /// Fired chaos events (empty unless the job armed a
     /// [`crate::distfut::chaos::ChaosPlan`]).
     pub chaos: Vec<ChaosRecord>,
+    /// Epoch-latency distribution (p50/p95/p99 + SLO violations) of the
+    /// stream this job belongs to, over the epochs sealed so far — set
+    /// by [`crate::shuffle::streaming_service::StreamJob`] on every
+    /// sealed epoch's report. `None` for one-shot batch jobs.
+    pub latency: Option<crate::metrics::LatencyStats>,
 }
 
 /// valsort-equivalent global validation, plus the input/output checksum
@@ -238,6 +243,7 @@ mod tests {
             recovery: RecoveryStats::default(),
             speculation: SpeculationStats::default(),
             chaos: vec![],
+            latency: None,
         }
     }
 

@@ -1,0 +1,545 @@
+//! Continuous repartitioning: long-lived streaming jobs over the batch
+//! shuffle machinery (the BlobShuffle direction — object-storage
+//! repartitioning for stream processing).
+//!
+//! A [`StreamJob`] consumes an unbounded sequence of input shards from a
+//! seeded [`IngestSource`] (configurable arrival rate, burst pattern,
+//! Zipf-skewable keys), groups arrivals into fixed windows (*epochs*),
+//! and runs each epoch's map→shuffle→reduce through the existing
+//! [`ShuffleStrategy`](crate::shuffle::ShuffleStrategy) /
+//! [`JobService`] machinery — so a stream inherits everything the batch
+//! path already has: pluggable stage topologies, the zero-copy `Block`
+//! data plane, per-job fair-share scheduling, lineage recovery, and
+//! both the threaded and the deterministic simulation backends (vopr
+//! sweeps streams the same way it sweeps sorts).
+//!
+//! **Epochs pipeline.** Up to [`StreamJob::pipeline_depth`] epochs are
+//! open at once: epoch N+1 is submitted (its ingest shards written, its
+//! maps admitted under fair-share) while epoch N's reduces drain. Each
+//! epoch is its own runtime job, so sealing an epoch retires it —
+//! lineage freed, task events drained, store entries swept
+//! ([`crate::distfut::RuntimeHandle::retire_job`]) — and the stream's
+//! store footprint stays bounded by its pipeline depth, not its history
+//! (probed per epoch via
+//! [`crate::distfut::RuntimeHandle::store_live_entries_for`]).
+//!
+//! **Watermark / epoch-seal semantics.** Epochs seal strictly in
+//! arrival order; the *watermark* is the count of contiguously sealed
+//! epochs. An epoch is sealed once its partitioned output is fully
+//! committed and validated — downstream consumers may read everything
+//! at or below the watermark.
+//!
+//! **Latency SLOs.** Each epoch's ingest→sealed latency is the modeled
+//! arrival window of its records (`records / arrival_rate` — the last
+//! record of a window arrives a full window after the first) plus the
+//! measured admit→seal time on the runtime's clock. The distribution
+//! (p50/p95/p99, SLO violations) is tracked by
+//! [`crate::metrics::LatencyTracker`] and stamped on every sealed
+//! epoch's [`JobReport::latency`].
+//!
+//! **Stream-vs-sort identity.** Every epoch's output is byte-identical
+//! to a one-shot batch sort of the same shards: the epoch spec (seed,
+//! skew, size) fully determines the input, and output bytes are a pure
+//! function of the input regardless of chaos, backend, or how many
+//! epochs were in flight. [`StreamJob::verify_batch`] re-runs each
+//! epoch as a batch job and checks the checksums; the streaming tests
+//! and vopr's `stream` workload assert it on both backends through
+//! mid-epoch kills.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use anyhow::anyhow;
+
+use crate::coordinator::plan::JobSpec;
+use crate::distfut::chaos::ChaosPlan;
+use crate::metrics::{LatencyStats, LatencyTracker};
+use crate::runtime::Backend;
+use crate::service::{JobHandle, JobService, ServiceConfig};
+use crate::shuffle::{JobReport, ShuffleJob, ShuffleStrategy, TwoStageMerge};
+use crate::sortlib::{Skew, RECORD_SIZE};
+use crate::util::rng::stream_at;
+
+/// RNG stream index for per-epoch input seeds, disjoint from the vopr
+/// chaos-plan streams (101–104) and the simulator's own draws.
+const EPOCH_SEED_STREAM: u64 = 300;
+
+/// Seeded arrival process: how many records each window (epoch)
+/// collects, how long the window takes to fill, and which seed
+/// generates its shards.
+#[derive(Clone, Debug)]
+pub struct IngestSource {
+    /// Root seed: every epoch's input shards (and therefore its output
+    /// bytes) derive deterministically from this.
+    pub seed: u64,
+    /// Steady-state arrival rate in records/second. `0.0` models an
+    /// already-full backlog (windows fill instantly; latency is pure
+    /// processing time).
+    pub arrival_rate: f64,
+    /// Records per window.
+    pub epoch_records: u64,
+    /// Every `burst_every`-th epoch arrives at `burst_factor ×` the
+    /// steady rate (its window fills faster, shrinking the ingest slack
+    /// the shuffle can hide behind). `0`: no bursts.
+    pub burst_every: usize,
+    pub burst_factor: f64,
+    /// Key distribution of the arriving records (Zipf-skewable, same
+    /// knob as the batch `--skew`).
+    pub skew: Skew,
+}
+
+impl IngestSource {
+    /// A steady uniform-key source (no bursts).
+    pub fn new(seed: u64, arrival_rate: f64, epoch_records: u64) -> IngestSource {
+        IngestSource {
+            seed,
+            arrival_rate,
+            epoch_records,
+            burst_every: 0,
+            burst_factor: 1.0,
+            skew: Skew::Uniform,
+        }
+    }
+
+    /// The deterministic input seed of one epoch's shards.
+    pub fn epoch_seed(&self, epoch: usize) -> u64 {
+        stream_at(self.seed, EPOCH_SEED_STREAM + epoch as u64)
+    }
+
+    /// The arrival of one window: record count, modeled fill time, and
+    /// the shard seed.
+    pub fn arrival(&self, epoch: usize) -> EpochArrival {
+        let mut rate = self.arrival_rate;
+        if self.burst_every > 0 && (epoch + 1) % self.burst_every == 0 {
+            rate *= self.burst_factor.max(1.0);
+        }
+        let window_secs = if rate > 0.0 {
+            self.epoch_records as f64 / rate
+        } else {
+            0.0
+        };
+        EpochArrival {
+            epoch,
+            records: self.epoch_records,
+            window_secs,
+            seed: self.epoch_seed(epoch),
+        }
+    }
+}
+
+/// One window's worth of arrivals, as modeled by an [`IngestSource`].
+#[derive(Clone, Debug)]
+pub struct EpochArrival {
+    pub epoch: usize,
+    pub records: u64,
+    /// Modeled time for this window's records to arrive at the source's
+    /// (possibly burst-scaled) rate.
+    pub window_secs: f64,
+    /// Seed the epoch's input shards are generated from.
+    pub seed: u64,
+}
+
+/// One sealed epoch of a stream.
+#[derive(Clone, Debug)]
+pub struct EpochReport {
+    pub epoch: usize,
+    /// The spec the epoch ran under (what a batch-identity check
+    /// re-runs).
+    pub spec: JobSpec,
+    pub records: u64,
+    pub checksum: u64,
+    /// Modeled ingest window of this epoch's records.
+    pub window_secs: f64,
+    /// Runtime-clock seconds (relative to stream start) the epoch was
+    /// admitted / sealed.
+    pub open_secs: f64,
+    pub sealed_secs: f64,
+    /// Ingest→sealed latency: `window_secs` + (sealed − open).
+    pub latency_secs: f64,
+    /// Whether this epoch broke the armed SLO.
+    pub slo_violated: bool,
+    /// Whether the epoch's store entries were fully swept at
+    /// retirement (the bounded-footprint invariant).
+    pub store_purged: bool,
+    /// `Some(true)` once a batch re-run of the same shards produced the
+    /// same bytes ([`StreamJob::verify_batch`]); `None` when the check
+    /// was not requested.
+    pub batch_identical: Option<bool>,
+    /// The epoch's full per-job report (stages, validation, recovery,
+    /// chaos log; `latency` carries the stream's stats-so-far).
+    pub report: JobReport,
+}
+
+/// Outcome of a [`StreamJob`] run.
+#[derive(Clone, Debug)]
+pub struct StreamReport {
+    pub name: String,
+    pub strategy: String,
+    /// Sealed epochs, in watermark order.
+    pub epochs: Vec<EpochReport>,
+    /// Final ingest→sealed latency distribution (p50/p95/p99 + SLO
+    /// violations) over all sealed epochs.
+    pub latency: LatencyStats,
+    /// Contiguously sealed epochs (epochs seal in order, so this equals
+    /// `epochs.len()`; named for the semantics, not the arithmetic).
+    pub watermark: usize,
+    /// Seconds during which two adjacent epochs were open at once —
+    /// summed `max(0, seal(N) − open(N+1))`. Zero means the stream
+    /// degenerated to serial batch jobs.
+    pub pipeline_overlap_secs: f64,
+    /// Most epochs simultaneously open (bounded by the pipeline depth).
+    pub max_open_epochs: usize,
+    /// Runtime-clock seconds from stream start to the last seal.
+    pub total_secs: f64,
+    pub total_records: u64,
+    pub total_bytes: u64,
+}
+
+impl StreamReport {
+    /// Whether every sealed epoch validated (sorted, checksummed).
+    pub fn all_valid(&self) -> bool {
+        self.epochs.iter().all(|e| e.report.validation.valid)
+    }
+
+    /// Whether every epoch's store entries were swept at retirement.
+    pub fn all_purged(&self) -> bool {
+        self.epochs.iter().all(|e| e.store_purged)
+    }
+
+    /// Sealed-output throughput over the whole stream.
+    pub fn bytes_per_sec(&self) -> f64 {
+        self.total_bytes as f64 / self.total_secs.max(1e-9)
+    }
+}
+
+/// An epoch submitted but not yet sealed.
+struct OpenEpoch {
+    arrival: EpochArrival,
+    spec: JobSpec,
+    handle: JobHandle,
+    open_secs: f64,
+}
+
+/// Builder for a continuous repartitioning job: an unbounded input
+/// stream windowed into epochs, each shuffled through the batch
+/// machinery, sealed in order, latency-tracked against an SLO. See the
+/// [module docs](self) for the semantics.
+pub struct StreamJob {
+    source: IngestSource,
+    workers: usize,
+    epochs: usize,
+    strategy: Arc<dyn ShuffleStrategy>,
+    backend: Backend,
+    /// `Some(seed)`: run on the deterministic simulation backend.
+    sim_seed: Option<u64>,
+    slo_secs: Option<f64>,
+    chaos: Option<ChaosPlan>,
+    /// Epoch the chaos plan arms on (default: mid-stream).
+    chaos_epoch: Option<usize>,
+    pipeline_depth: usize,
+    verify_batch: bool,
+    speculate: Option<f64>,
+    name: String,
+}
+
+impl StreamJob {
+    pub fn new(source: IngestSource, workers: usize) -> StreamJob {
+        StreamJob {
+            source,
+            workers: workers.max(1),
+            epochs: 4,
+            strategy: Arc::new(TwoStageMerge),
+            backend: Backend::Native,
+            sim_seed: None,
+            slo_secs: None,
+            chaos: None,
+            chaos_epoch: None,
+            pipeline_depth: 2,
+            verify_batch: false,
+            speculate: None,
+            name: "stream".to_string(),
+        }
+    }
+
+    /// Epochs to run before stopping (a production stream would run
+    /// forever; tests, benches and the CLI bound it).
+    pub fn epochs(mut self, n: usize) -> StreamJob {
+        self.epochs = n.max(1);
+        self
+    }
+
+    pub fn strategy<S: ShuffleStrategy + 'static>(mut self, s: S) -> StreamJob {
+        self.strategy = Arc::new(s);
+        self
+    }
+
+    pub fn strategy_arc(mut self, s: Arc<dyn ShuffleStrategy>) -> StreamJob {
+        self.strategy = s;
+        self
+    }
+
+    pub fn backend(mut self, b: Backend) -> StreamJob {
+        self.backend = b;
+        self
+    }
+
+    /// Run on the deterministic simulation backend seeded with `seed`
+    /// (virtual-time latencies, byte-identical replays — what vopr's
+    /// `stream` workload sweeps).
+    pub fn sim_seed(mut self, seed: u64) -> StreamJob {
+        self.sim_seed = Some(seed);
+        self
+    }
+
+    /// Arm a per-epoch ingest→sealed latency objective; epochs sealing
+    /// above it count as SLO violations on the report.
+    pub fn slo_ms(mut self, ms: f64) -> StreamJob {
+        self.slo_secs = Some(ms / 1000.0);
+        self
+    }
+
+    /// Arm a chaos plan against one mid-stream epoch (default: epoch
+    /// `epochs / 2`). The plan's commit triggers are scoped to that
+    /// epoch's own sort, and lineage recovery is likewise scoped — the
+    /// stream must keep sealing byte-identical epochs through it.
+    pub fn chaos(mut self, plan: ChaosPlan) -> StreamJob {
+        self.chaos = Some(plan);
+        self
+    }
+
+    /// Choose which epoch the chaos plan arms on.
+    pub fn chaos_epoch(mut self, epoch: usize) -> StreamJob {
+        self.chaos_epoch = Some(epoch);
+        self
+    }
+
+    /// Epochs allowed open at once (default 2: epoch N+1's maps admit
+    /// while epoch N's reduces drain). 1 degenerates to serial batch.
+    pub fn pipeline_depth(mut self, depth: usize) -> StreamJob {
+        self.pipeline_depth = depth.max(1);
+        self
+    }
+
+    /// After the stream finishes, re-run every epoch as a one-shot
+    /// batch sort of the same shards and record whether the bytes
+    /// match ([`EpochReport::batch_identical`]).
+    pub fn verify_batch(mut self, on: bool) -> StreamJob {
+        self.verify_batch = on;
+        self
+    }
+
+    /// Enable speculative re-execution of stragglers inside each epoch.
+    pub fn speculate(mut self, multiplier: f64) -> StreamJob {
+        self.speculate = Some(multiplier);
+        self
+    }
+
+    pub fn name(mut self, name: impl Into<String>) -> StreamJob {
+        self.name = name.into();
+        self
+    }
+
+    /// The spec one epoch runs under: sized from the window's records,
+    /// seeded from the source, carrying the source's key skew.
+    fn epoch_spec(&self, arrival: &EpochArrival) -> JobSpec {
+        let mut spec = JobSpec::scaled(arrival.records * RECORD_SIZE as u64, self.workers);
+        spec.seed = arrival.seed;
+        spec.skew = self.source.skew;
+        spec.speculate = self.speculate;
+        spec
+    }
+
+    /// Run the stream on a private service (sized for the epoch spec,
+    /// backed by the configured backend), shut down on every path.
+    pub fn run(self) -> anyhow::Result<StreamReport> {
+        let spec0 = self.epoch_spec(&self.source.arrival(0));
+        let mut cfg = ServiceConfig::for_spec(&spec0);
+        cfg.sim_seed = self.sim_seed;
+        let service = JobService::new(cfg);
+        let result = self.run_on(&service);
+        service.shutdown();
+        result
+    }
+
+    /// Run the stream on a shared, long-lived service (the epochs
+    /// contend with other tenants under fair-share scheduling). The
+    /// service's backend is whatever it was built with; `sim_seed` only
+    /// takes effect through [`StreamJob::run`].
+    pub fn run_on(self, service: &JobService) -> anyhow::Result<StreamReport> {
+        let rt = service.runtime();
+        let clock = rt.clock();
+        let t0 = clock.now_secs();
+        let chaos_epoch = self
+            .chaos_epoch
+            .unwrap_or(self.epochs / 2)
+            .min(self.epochs.saturating_sub(1));
+        let mut tracker = LatencyTracker::new(self.slo_secs);
+        let mut open: VecDeque<OpenEpoch> = VecDeque::new();
+        let mut sealed: Vec<EpochReport> = Vec::new();
+        let mut overlap_secs = 0.0;
+        let mut max_open = 0usize;
+
+        let seal_front = |open: &mut VecDeque<OpenEpoch>,
+                              sealed: &mut Vec<EpochReport>,
+                              tracker: &mut LatencyTracker,
+                              overlap_secs: &mut f64|
+         -> anyhow::Result<()> {
+            let oe = open.pop_front().expect("seal with no open epoch");
+            let mut report = oe.handle.wait().map_err(|e| {
+                anyhow!("epoch {} failed: {e:#}", oe.arrival.epoch)
+            })?;
+            let sealed_secs = clock.now_secs() - t0;
+            // ingest→sealed: the window's own fill time plus the
+            // measured admit→seal processing time
+            let latency_secs = oe.arrival.window_secs + (sealed_secs - oe.open_secs);
+            let slo_violated = tracker.violates(latency_secs);
+            tracker.record(latency_secs);
+            report.latency = Some(tracker.stats());
+            // the epoch retired when its driver finished (before wait()
+            // returned): its store entries must already be swept
+            let store_purged = rt.store_live_entries_for(oe.handle.id()) == 0;
+            // an adjacent epoch already open at this seal is pipelining
+            if let Some(next) = open.front() {
+                *overlap_secs += (sealed_secs - next.open_secs).max(0.0);
+            }
+            sealed.push(EpochReport {
+                epoch: oe.arrival.epoch,
+                records: report.validation.summary.records,
+                checksum: report.validation.summary.checksum,
+                window_secs: oe.arrival.window_secs,
+                open_secs: oe.open_secs,
+                sealed_secs,
+                latency_secs,
+                slo_violated,
+                store_purged,
+                batch_identical: None,
+                spec: oe.spec,
+                report,
+            });
+            Ok(())
+        };
+
+        for e in 0..self.epochs {
+            let arrival = self.source.arrival(e);
+            let spec = self.epoch_spec(&arrival);
+            let mut job = ShuffleJob::new(spec.clone())
+                .strategy_arc(self.strategy.clone())
+                .backend(self.backend.clone())
+                .name(format!("{}-epoch-{e}", self.name));
+            if e == chaos_epoch {
+                if let Some(plan) = &self.chaos {
+                    job = job.chaos(plan.clone());
+                }
+            }
+            let open_secs = clock.now_secs() - t0;
+            let handle = job.submit(service)?;
+            open.push_back(OpenEpoch {
+                arrival,
+                spec,
+                handle,
+                open_secs,
+            });
+            max_open = max_open.max(open.len());
+            while open.len() >= self.pipeline_depth {
+                seal_front(
+                    &mut open,
+                    &mut sealed,
+                    &mut tracker,
+                    &mut overlap_secs,
+                )?;
+            }
+        }
+        while !open.is_empty() {
+            seal_front(&mut open, &mut sealed, &mut tracker, &mut overlap_secs)?;
+        }
+        let total_secs = clock.now_secs() - t0;
+
+        if self.verify_batch {
+            for ep in &mut sealed {
+                let r = self.batch_reference(ep)?;
+                ep.batch_identical = Some(
+                    r.validation.valid
+                        && r.validation.summary.checksum == ep.checksum
+                        && r.validation.summary.records == ep.records,
+                );
+            }
+        }
+
+        Ok(StreamReport {
+            name: self.name,
+            strategy: self.strategy.name().to_string(),
+            watermark: sealed.len(),
+            latency: tracker.stats(),
+            pipeline_overlap_secs: overlap_secs,
+            max_open_epochs: max_open,
+            total_secs,
+            total_records: sealed.iter().map(|e| e.records).sum(),
+            total_bytes: sealed.iter().map(|e| e.spec.total_bytes).sum(),
+            epochs: sealed,
+        })
+    }
+
+    /// One-shot batch sort of an epoch's shards on a throwaway service
+    /// (same backend family; a *different* sim seed on purpose — output
+    /// bytes must not depend on event timing).
+    fn batch_reference(&self, ep: &EpochReport) -> anyhow::Result<JobReport> {
+        let mut cfg = ServiceConfig::for_spec(&ep.spec);
+        cfg.sim_seed = self.sim_seed.map(|s| s ^ 0xBA7C);
+        let service = JobService::new(cfg);
+        let result = ShuffleJob::new(ep.spec.clone())
+            .strategy_arc(self.strategy.clone())
+            .backend(self.backend.clone())
+            .name(format!("{}-batch-ref-{}", self.name, ep.epoch))
+            .submit(&service)
+            .and_then(|h| h.wait());
+        service.shutdown();
+        result
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ingest_source_is_seed_deterministic() {
+        let s = IngestSource::new(7, 1000.0, 500);
+        let a0 = s.arrival(0);
+        let a1 = s.arrival(1);
+        assert_eq!(a0.records, 500);
+        assert!((a0.window_secs - 0.5).abs() < 1e-12);
+        assert_ne!(a0.seed, a1.seed, "epochs draw distinct shard seeds");
+        assert_eq!(a0.seed, s.arrival(0).seed, "replays reproduce seeds");
+    }
+
+    #[test]
+    fn bursts_shrink_the_window_not_the_records() {
+        let mut s = IngestSource::new(7, 1000.0, 500);
+        s.burst_every = 3;
+        s.burst_factor = 4.0;
+        let steady = s.arrival(0);
+        let burst = s.arrival(2); // every 3rd epoch: indices 2, 5, 8…
+        assert_eq!(steady.records, burst.records);
+        assert!((burst.window_secs - steady.window_secs / 4.0).abs() < 1e-12);
+        assert!((s.arrival(3).window_secs - steady.window_secs).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_rate_models_a_full_backlog() {
+        let s = IngestSource::new(7, 0.0, 500);
+        assert_eq!(s.arrival(0).window_secs, 0.0);
+    }
+
+    #[test]
+    fn epoch_specs_differ_only_by_seed() {
+        let source = IngestSource::new(11, 1000.0, 20_000);
+        let job = StreamJob::new(source.clone(), 2);
+        let s0 = job.epoch_spec(&source.arrival(0));
+        let s1 = job.epoch_spec(&source.arrival(1));
+        assert_ne!(s0.seed, s1.seed);
+        assert_eq!(s0.total_bytes, s1.total_bytes);
+        assert_eq!(s0.n_input_partitions, s1.n_input_partitions);
+        assert_eq!(s0.n_output_partitions, s1.n_output_partitions);
+        s0.check().expect("epoch specs validate");
+    }
+}

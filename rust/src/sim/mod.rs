@@ -1038,6 +1038,75 @@ pub fn estimate_node_failure_recovery(
     }
 }
 
+// --------------------------------------------------------------------
+// continuous-repartitioning model (sim --stream)
+// --------------------------------------------------------------------
+
+/// Closed-form queueing estimate of a
+/// [`crate::shuffle::StreamJob`]-style epoch pipeline at benchmark
+/// scale: `cfg`'s job is one epoch's worth of records, arriving
+/// continuously at `arrival_rate` records/second.
+#[derive(Clone, Copy, Debug)]
+pub struct StreamEstimate {
+    pub epochs: usize,
+    /// Seconds one epoch's records take to arrive.
+    pub window_secs: f64,
+    /// Seconds one epoch takes to shuffle (the replayed run).
+    pub process_secs: f64,
+    /// True when `process_secs > window_secs`: epochs finish slower than
+    /// they fill, and the backlog (and latency) grows without bound.
+    pub backlogged: bool,
+    /// Ingest→sealed latency of the first epoch: its fill window plus
+    /// its processing time.
+    pub steady_latency_secs: f64,
+    /// Latency of the last of `epochs` epochs. Equals the steady value
+    /// when the stream keeps up; grows linearly with the epoch index
+    /// when backlogged.
+    pub final_latency_secs: f64,
+    /// Highest arrival rate (records/second) this epoch shape sustains
+    /// with bounded latency: `records / process_secs`.
+    pub max_sustainable_rate: f64,
+}
+
+/// Replay `cfg`'s job as one epoch of a continuous stream and answer
+/// the capacity-planning question the streaming service poses: at this
+/// arrival rate, does per-epoch latency stay bounded, and where is the
+/// cliff?
+///
+/// The model assumes full epoch pipelining (epoch N+1's window fills
+/// while epoch N shuffles), so an epoch only queues behind *processing*:
+/// epoch `e` seals at `window + max(window, process) × e + process`
+/// from stream start, giving latency `window + process` when the stream
+/// keeps up and `window + process + e × (process − window)` when it
+/// does not.
+pub fn estimate_stream(
+    cfg: &SimConfig,
+    epochs: usize,
+    arrival_rate: f64,
+) -> StreamEstimate {
+    let epochs = epochs.max(1);
+    let records = cfg.spec.total_records() as f64;
+    let process_secs = simulate(cfg).total_secs;
+    let window_secs = if arrival_rate > 0.0 {
+        records / arrival_rate
+    } else {
+        0.0
+    };
+    let backlogged = process_secs > window_secs;
+    let steady_latency_secs = window_secs + process_secs;
+    let backlog_growth = (process_secs - window_secs).max(0.0);
+    StreamEstimate {
+        epochs,
+        window_secs,
+        process_secs,
+        backlogged,
+        steady_latency_secs,
+        final_latency_secs: steady_latency_secs
+            + (epochs - 1) as f64 * backlog_growth,
+        max_sustainable_rate: records / process_secs.max(1e-9),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1071,6 +1140,30 @@ mod tests {
             .filter(|e| e.name.starts_with("reduce"))
             .count();
         assert_eq!(reduces, cfg.spec.n_output_partitions);
+    }
+
+    #[test]
+    fn stream_estimate_finds_the_backlog_cliff() {
+        let cfg = small_cfg();
+        let records = cfg.spec.total_records() as f64;
+        let process = simulate(&cfg).total_secs;
+        // arrivals slower than processing: latency is flat across epochs
+        let slow = estimate_stream(&cfg, 8, records / (2.0 * process));
+        assert!(!slow.backlogged);
+        assert!(
+            (slow.final_latency_secs - slow.steady_latency_secs).abs()
+                < 1e-9
+        );
+        // arrivals faster than processing: latency grows with the epoch
+        let fast = estimate_stream(&cfg, 8, records / (0.5 * process));
+        assert!(fast.backlogged);
+        assert!(fast.final_latency_secs > fast.steady_latency_secs);
+        // the cliff sits at records/process by construction
+        assert!(
+            (fast.max_sustainable_rate - records / process).abs()
+                / (records / process)
+                < 1e-9
+        );
     }
 
     #[test]
